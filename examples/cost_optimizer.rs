@@ -1,0 +1,83 @@
+//! Mode-3: money-limit search (paper §3.6 / Fig. 7).
+//!
+//! ```text
+//! cargo run --release --example cost_optimizer [-- --model llama2-7b --gpu h100 \
+//!     --max-gpus 256 --budget 4000 --train-tokens 1e9]
+//! ```
+//!
+//! Sweeps GPU counts (Eq. 3), prices every surviving strategy for a token
+//! budget, prints the Pareto-optimal pool (throughput vs USD — the paper's
+//! "optimal line"), and selects the fastest plan under the money ceiling.
+
+use astra::cli::Cli;
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::pareto::MoneyModel;
+use astra::report::Table;
+use astra::strategy::GpuPoolMode;
+
+fn main() -> astra::Result<()> {
+    let args = Cli::new("cost_optimizer", "mode-3 money-limited Astra search")
+        .opt("model", "model name", Some("llama2-7b"))
+        .opt("gpu", "GPU type", Some("h100"))
+        .opt("max-gpus", "maximum cluster size", Some("256"))
+        .opt("budget", "money ceiling in USD", Some("4000"))
+        .opt("train-tokens", "token budget being priced", Some("1e9"))
+        .parse();
+
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let model = registry.get(args.get("model").unwrap())?.clone();
+    let gpu = catalog.find(args.get("gpu").unwrap())?;
+    let max_count = args.get_usize("max-gpus")?;
+    let budget = args.get_f64("budget")?;
+    let train_tokens = args.get_f64("train-tokens")?;
+
+    println!(
+        "Pricing a {:.1e}-token training of {} on up to {max_count}×{} (${:.2}/h each), budget ${budget:.0}",
+        train_tokens,
+        model.name,
+        catalog.spec(gpu).name,
+        catalog.spec(gpu).price_per_hour
+    );
+
+    let engine = AstraEngine::new(
+        catalog.clone(),
+        EngineConfig { money: MoneyModel { train_tokens }, ..Default::default() },
+    );
+    let report = engine.search(&SearchRequest {
+        mode: GpuPoolMode::Cost { gpu, max_count, max_money: budget },
+        model: model.clone(),
+    })?;
+
+    println!(
+        "\nswept counts 2..{max_count}; {} candidates scored; frontier size {}",
+        report.scored,
+        report.pool.len()
+    );
+
+    // The Fig. 7 "optimal line": throughput vs money along the frontier.
+    let mut t = Table::new(&["tokens/s", "run cost USD", "within budget"]);
+    for e in report.pool.entries() {
+        t.row(&[
+            format!("{:.0}", e.throughput),
+            format!("{:.0}", e.cost),
+            if e.cost <= budget { "yes".into() } else { String::new() },
+        ]);
+    }
+    t.emit("Pareto-optimal pool (Fig. 7 'optimal line')", None);
+
+    match report.pool.best_within_budget(budget) {
+        Some(pick) => {
+            println!(
+                "\nselected: {:.0} tokens/s for ${:.0} (≤ ${budget:.0})",
+                pick.throughput, pick.cost
+            );
+            let wall = train_tokens / pick.throughput / 3600.0;
+            println!("estimated wall-clock: {wall:.1} h");
+        }
+        None => println!("\nno strategy fits the ${budget:.0} budget — raise it or shrink the run"),
+    }
+    Ok(())
+}

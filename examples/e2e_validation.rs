@@ -1,0 +1,147 @@
+//! END-TO-END validation driver — the repo's headline experiment.
+//!
+//! ```text
+//! cargo run --release --example e2e_validation [-- --fast]
+//! ```
+//!
+//! Exercises every layer on the paper's own workload grid and reports the
+//! paper's headline metrics (recorded in EXPERIMENTS.md):
+//!
+//! 1. **Search** — full mode-1 searches for the seven paper models,
+//!    through the real pipeline (generation → rule filter → memory filter
+//!    → cost simulation), with the HLO engine (Layer-1 Pallas kernels via
+//!    PJRT) when artifacts are present, native otherwise.
+//! 2. **Accuracy** — the winning and top-k strategies are replayed on the
+//!    discrete-event 1F1B simulator (the "cluster"); the paper claims >95%
+//!    cost-model accuracy.
+//! 3. **Expert comparison** — best-of-six-expert baselines vs Astra
+//!    (Fig. 5's shape) on the simulator.
+//! 4. **Headline timings** — search ≤ ~1.27 s, hetero e2e ≤ ~1.35 min.
+
+use astra::cli::Cli;
+use astra::coordinator::{AstraEngine, EngineConfig, ScoringEngine, SearchRequest};
+use astra::expert::ExpertPanel;
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::{fmt_secs, Table};
+use astra::simulator::{PipelineSimulator, SimConfig};
+use astra::strategy::GpuPoolMode;
+
+fn main() -> astra::Result<()> {
+    let args = Cli::new("e2e_validation", "end-to-end Astra validation run")
+        .flag("fast", "small grid (2 models, 1 GPU count)")
+        .opt("gpus", "homogeneous GPU count", Some("64"))
+        .opt("csv", "write summary CSV here", Some("e2e_summary.csv"))
+        .parse();
+
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let sim = PipelineSimulator::new(catalog.clone(), SimConfig::default());
+    let panel = ExpertPanel::default();
+    let count = args.get_usize("gpus")?;
+
+    let engine_kind = if astra::runtime::artifacts_present() {
+        println!("scoring engine: hlo (AOT Pallas scorer via PJRT)");
+        ScoringEngine::Hlo
+    } else {
+        println!("scoring engine: native (run `make artifacts` for the HLO path)");
+        ScoringEngine::Native
+    };
+    let engine = AstraEngine::new(
+        catalog.clone(),
+        EngineConfig { engine: engine_kind, ..Default::default() },
+    );
+    println!("hlo runtime active: {}", engine.hlo_active());
+
+    let models: Vec<&str> = if args.flag("fast") {
+        vec!["llama2-7b", "llama2-13b"]
+    } else {
+        vec!["llama2-7b", "llama2-13b", "llama2-70b", "llama3-8b", "llama3-70b", "glm-67b", "glm-130b"]
+    };
+
+    let mut t = Table::new(&[
+        "model",
+        "#strategies",
+        "search",
+        "simulation",
+        "e2e",
+        "best tokens/s",
+        "accuracy",
+        "vs expert",
+    ]);
+    let mut accs: Vec<f64> = Vec::new();
+    let mut wins = 0usize;
+    for name in &models {
+        let model = registry.get(name)?.clone();
+        let req = SearchRequest::homogeneous("a800", count, model.clone());
+        let report = engine.search(&req)?;
+        let best = report.best().expect("empty search");
+
+        // Accuracy on the top-5 (prediction vs discrete-event measurement).
+        let mut model_accs = Vec::new();
+        for s in report.top.iter().take(5) {
+            let r = sim.measure(&model, &s.strategy);
+            model_accs.push(1.0 - (s.cost.step_time - r.step_time).abs() / r.step_time);
+        }
+        let acc = model_accs.iter().sum::<f64>() / model_accs.len() as f64;
+        accs.push(acc);
+
+        // Best-of-six experts on the simulator (Fig. 5).
+        let astra_tput = sim.measure(&model, &best.strategy).tokens_per_s;
+        let expert_tput = panel
+            .proposals(&model, &catalog, catalog.find("a800")?, count)
+            .iter()
+            .map(|(_, s)| sim.measure(&model, s).tokens_per_s)
+            .fold(0.0f64, f64::max);
+        let ratio = if expert_tput > 0.0 { astra_tput / expert_tput } else { f64::NAN };
+        if ratio >= 1.0 {
+            wins += 1;
+        }
+
+        t.row(&[
+            name.to_string(),
+            report.generated.to_string(),
+            fmt_secs(report.search_secs),
+            fmt_secs(report.simulate_secs),
+            fmt_secs(report.e2e_secs()),
+            format!("{:.0}", best.cost.tokens_per_s),
+            format!("{:.1}%", acc * 100.0),
+            format!("{ratio:.2}×"),
+        ]);
+    }
+    let csv = args.get("csv").map(std::path::PathBuf::from);
+    t.emit(
+        &format!("E2E validation — {count}×A800, mode-1 (cf. Table 1 / Fig. 5)"),
+        csv.as_deref(),
+    );
+
+    // Heterogeneous headline (mode 2): one full search, timed.
+    let model = registry.get("llama2-13b")?.clone();
+    let caps = vec![(catalog.find("a800")?, count * 3 / 4), (catalog.find("h100")?, count * 3 / 4)];
+    let t0 = std::time::Instant::now();
+    let hrep = engine.search(&SearchRequest {
+        mode: GpuPoolMode::Heterogeneous { total: count, caps },
+        model: model.clone(),
+    })?;
+    let hetero_secs = t0.elapsed().as_secs_f64();
+    let hbest = hrep.best().expect("hetero search empty");
+    let hacc = {
+        let r = sim.measure(&model, &hbest.strategy);
+        1.0 - (hbest.cost.step_time - r.step_time).abs() / r.step_time
+    };
+
+    let mean_acc = accs.iter().sum::<f64>() / accs.len() as f64;
+    println!("\n=== headline metrics (paper §1 / abstract) ===");
+    println!("mean cost-model accuracy (top-5 × {} models): {:.2}% (paper: >95%)", models.len(), mean_acc * 100.0);
+    println!("Astra ≥ expert in {wins}/{} settings (paper: matches or exceeds)", models.len());
+    println!(
+        "hetero e2e: {} — {} candidates (paper: ≤1.35 min); accuracy {:.1}%",
+        fmt_secs(hetero_secs),
+        hrep.generated,
+        hacc * 100.0
+    );
+    assert!(mean_acc > 0.95, "accuracy headline violated: {:.3}", mean_acc);
+    assert!(hetero_secs < 120.0, "hetero search exceeded 2 minutes");
+    println!("\nE2E VALIDATION PASSED");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: mode-1 (homogeneous) strategy search.
+//!
+//! ```text
+//! cargo run --release --example quickstart [-- --model llama2-7b --gpu a800 --gpus 64]
+//! ```
+//!
+//! Searches the full Megatron parameter space for Llama-2-7B on 64×A800,
+//! prints the Table-1-style phase accounting and the five best strategies,
+//! then replays the winner on the discrete-event simulator to show the
+//! predicted-vs-measured agreement.
+
+use astra::cli::Cli;
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::{fmt_secs, Table};
+use astra::simulator::{PipelineSimulator, SimConfig};
+
+fn main() -> astra::Result<()> {
+    let args = Cli::new("quickstart", "homogeneous Astra search")
+        .opt("model", "model name", Some("llama2-7b"))
+        .opt("gpu", "GPU type", Some("a800"))
+        .opt("gpus", "GPU count", Some("64"))
+        .parse();
+
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let model = registry.get(args.get("model").unwrap())?.clone();
+    let count = args.get_usize("gpus")?;
+
+    println!(
+        "Searching strategies for {} on {}×{} (gbs={} seq={})",
+        model.name,
+        count,
+        args.get("gpu").unwrap(),
+        model.global_batch,
+        model.seq_len
+    );
+
+    let engine = AstraEngine::new(catalog.clone(), EngineConfig::default());
+    let req = SearchRequest::homogeneous(args.get("gpu").unwrap(), count, model.clone());
+    let report = engine.search(&req)?;
+
+    println!(
+        "\n|S| = {} generated → {} rule-filtered, {} memory-filtered, {} simulated",
+        report.generated, report.rule_filtered, report.mem_filtered, report.scored
+    );
+    println!(
+        "search {} + simulation {} = e2e {}",
+        fmt_secs(report.search_secs),
+        fmt_secs(report.simulate_secs),
+        fmt_secs(report.e2e_secs())
+    );
+
+    let mut t = Table::new(&["#", "strategy", "step", "tokens/s", "MFU"]);
+    for (i, s) in report.top.iter().take(5).enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            s.strategy.summary(),
+            fmt_secs(s.cost.step_time),
+            format!("{:.0}", s.cost.tokens_per_s),
+            format!("{:.3}", s.cost.mfu),
+        ]);
+    }
+    t.emit("top strategies", None);
+
+    // Replay the winner on the ground-truth simulator.
+    let best = report.best().expect("no strategy survived");
+    let sim = PipelineSimulator::new(catalog, SimConfig::default());
+    let measured = sim.measure(&model, &best.strategy);
+    let acc = 1.0 - (best.cost.step_time - measured.step_time).abs() / measured.step_time;
+    println!(
+        "\nwinner replayed on the discrete-event simulator:\n  predicted {}  measured {}  accuracy {:.1}%",
+        fmt_secs(best.cost.step_time),
+        fmt_secs(measured.step_time),
+        acc * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,141 @@
+"""AOT compile path: train the η forests, lower the scorer, emit artifacts.
+
+Run once via ``make artifacts`` (never on the search path):
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits:
+    forest.json       — both GBDT ensembles (rust native engine + records)
+    eff_samples.json  — noise-free hardware-truth samples (rust↔python
+                        lockstep test ``crosscheck_hw.rs``)
+    scorer.hlo.txt    — the Layer-2 scorer lowered to HLO *text*
+    scorer_meta.json  — batch geometry + training metrics
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import effdata, gbdt_train
+from .model import FG, FS, OUT, PMAX, build_scorer
+
+DEFAULT_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (gen_hlo.py recipe).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer elides
+    multi-element constants as ``{...}``, which the rust-side HLO text
+    parser silently materializes as zeros — the captured GBDT tables would
+    vanish and every η prediction would collapse to the clamped base value.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def train_forests(profiles, fast: bool = False):
+    """Fit the η_comp and η_comm ensembles on sampled hardware-truth data."""
+    n_comp = 800 if fast else 4000
+    n_comm = 600 if fast else 3000
+    cfg_comp = gbdt_train.TrainConfig(
+        n_trees=12 if fast else 48, depth=5, lr=0.3 if fast else 0.25
+    )
+    cfg_comm = gbdt_train.TrainConfig(
+        n_trees=8 if fast else 32, depth=4, lr=0.35 if fast else 0.3
+    )
+    xs, ys = effdata.sample_comp_dataset(profiles, n_per_gpu=n_comp)
+    comp = gbdt_train.train(xs, ys, cfg_comp)
+    comp_r2 = gbdt_train.r2_score(ys, comp.predict(xs))
+    xs2, ys2 = effdata.sample_comm_dataset(profiles, n_per_gpu=n_comm)
+    comm = gbdt_train.train(xs2, ys2, cfg_comm)
+    comm_r2 = gbdt_train.r2_score(ys2, comm.predict(xs2))
+    return comp, comm, comp_r2, comm_r2
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument(
+        "--fast", action="store_true", help="small forests/datasets (CI smoke)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    t0 = time.time()
+    profiles = effdata.load_profiles()
+    print(f"[aot] {len(profiles)} GPU profiles loaded")
+
+    comp, comm, comp_r2, comm_r2 = train_forests(profiles, fast=args.fast)
+    print(
+        f"[aot] forests trained in {time.time() - t0:.1f}s — "
+        f"η_comp R²={comp_r2:.4f} ({len(comp.trees)} trees), "
+        f"η_comm R²={comm_r2:.4f} ({len(comm.trees)} trees)"
+    )
+    assert comp_r2 > 0.95, f"η_comp fit too weak: R²={comp_r2:.4f}"
+    assert comm_r2 > 0.95, f"η_comm fit too weak: R²={comm_r2:.4f}"
+
+    with open(os.path.join(args.out_dir, "forest.json"), "w") as f:
+        json.dump({"comp": comp.to_json(), "comm": comm.to_json()}, f)
+    with open(os.path.join(args.out_dir, "eff_samples.json"), "w") as f:
+        json.dump(effdata.export_crosscheck_samples(profiles), f)
+
+    # --- lower the scorer ---
+    b = args.batch
+    scorer = build_scorer(comp, comm)
+    spec_sf = jax.ShapeDtypeStruct((b, PMAX, FS), jnp.float32)
+    spec_mask = jax.ShapeDtypeStruct((b, PMAX), jnp.float32)
+    spec_gf = jax.ShapeDtypeStruct((b, FG), jnp.float32)
+    t1 = time.time()
+    lowered = jax.jit(scorer).lower(spec_sf, spec_mask, spec_gf)
+    hlo = to_hlo_text(lowered)
+    print(f"[aot] scorer lowered in {time.time() - t1:.1f}s — {len(hlo)} chars of HLO")
+
+    with open(os.path.join(args.out_dir, "scorer.hlo.txt"), "w") as f:
+        f.write(hlo)
+    meta = {
+        "batch": b,
+        "pmax": PMAX,
+        "fs": FS,
+        "fg": FG,
+        "out": OUT,
+        "comp_r2": comp_r2,
+        "comm_r2": comm_r2,
+        "comp_trees": len(comp.trees),
+        "comm_trees": len(comm.trees),
+        "fast": bool(args.fast),
+    }
+    with open(os.path.join(args.out_dir, "scorer_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] artifacts written to {args.out_dir} in {time.time() - t0:.1f}s total")
+
+    # Smoke-execute the jitted scorer once so a broken lowering fails here,
+    # not in the rust runtime.
+    rng = np.random.default_rng(0)
+    sf = jnp.asarray(rng.uniform(0.0, 1.0, (b, PMAX, FS)), dtype=jnp.float32)
+    mask = jnp.zeros((b, PMAX), dtype=jnp.float32).at[:, :2].set(1.0)
+    gf = jnp.ones((b, FG), dtype=jnp.float32)
+    out = jax.jit(scorer)(sf, mask, gf)
+    assert out.shape == (b, OUT), out.shape
+    assert bool(jnp.isfinite(out).all()), "scorer produced non-finite output"
+    print("[aot] smoke execution OK")
+
+
+if __name__ == "__main__":
+    main()

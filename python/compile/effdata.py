@@ -1,0 +1,197 @@
+"""Hardware-truth efficiency curves and the synthetic profiling dataset.
+
+Python mirror of ``rust/src/hw/mod.rs`` — the formulas MUST stay in lockstep
+(the rust test ``crosscheck_hw.rs`` compares against samples exported to
+``artifacts/eff_samples.json`` by ``aot.py``).
+
+This module replaces the paper's offline cluster profiling runs: it samples
+the hardware-truth surfaces over the operating range of the cost model
+(GEMM sizes, collective sizes, all GPU types) with multiplicative
+measurement noise, producing the training set for the GBDT η predictors.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+COMP_FEATURES = 6
+COMM_FEATURES = 4
+
+_PROFILE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "data",
+    "hw_profile.json",
+)
+
+
+@dataclass
+class GpuProfile:
+    name: str
+    mem_gib: float
+    peak_tflops_bf16: float
+    hbm_gbs: float
+    nvlink_gbs: float
+    internode_gbs: float
+    pcie_gbs: float
+    price_per_hour: float
+    util_max: float
+    launch_overhead_s: float
+    skinny_dim: float
+    skinny_penalty: float
+    mem_bound_intensity: float
+    comm_latency_s: float
+    comm_eff_max: float
+
+    @property
+    def peak_flops(self) -> float:
+        return self.peak_tflops_bf16 * 1e12
+
+
+def load_profiles(path: str = _PROFILE_PATH) -> list[GpuProfile]:
+    """Load ``data/hw_profile.json`` (the rust side reads the same file)."""
+    with open(path) as f:
+        raw = json.load(f)
+    out = []
+    for g in raw["gpus"]:
+        e = g["eff"]
+        out.append(
+            GpuProfile(
+                name=g["name"],
+                mem_gib=g["mem_gib"],
+                peak_tflops_bf16=g["peak_tflops_bf16"],
+                hbm_gbs=g["hbm_gbs"],
+                nvlink_gbs=g["nvlink_gbs"],
+                internode_gbs=g["internode_gbs"],
+                pcie_gbs=g["pcie_gbs"],
+                price_per_hour=g["price_per_hour"],
+                util_max=e["util_max"],
+                launch_overhead_s=e["launch_overhead_s"],
+                skinny_dim=e["skinny_dim"],
+                skinny_penalty=e["skinny_penalty"],
+                mem_bound_intensity=e["mem_bound_intensity"],
+                comm_latency_s=e["comm_latency_s"],
+                comm_eff_max=e["comm_eff_max"],
+            )
+        )
+    return out
+
+
+def eta_comp(g: GpuProfile, flops: float, min_dim: float, intensity: float) -> float:
+    """Ground-truth computation efficiency (mirror of hw::eta_comp)."""
+    f_half = g.peak_flops * g.launch_overhead_s
+    sat = flops / (flops + f_half)
+    if min_dim >= g.skinny_dim:
+        skinny = 1.0
+    else:
+        skinny = g.skinny_penalty + (1.0 - g.skinny_penalty) * (min_dim / g.skinny_dim)
+    roof = min(intensity / g.mem_bound_intensity, 1.0)
+    return float(np.clip(g.util_max * sat * skinny * roof, 1e-4, 1.0))
+
+
+def eta_comm(g: GpuProfile, bytes_: float, bw_gbs: float, participants: float) -> float:
+    """Ground-truth communication efficiency (mirror of hw::eta_comm)."""
+    b_half = bw_gbs * 1e9 * g.comm_latency_s * max(participants, 1.0)
+    sat = bytes_ / (bytes_ + b_half)
+    return float(np.clip(g.comm_eff_max * sat, 1e-4, 1.0))
+
+
+def comp_features(g: GpuProfile, flops: float, min_dim: float, intensity: float) -> list[float]:
+    """Mirror of hw::comp_features — feature layout for the comp forest."""
+    return [
+        math.log10(max(flops, 1.0)),
+        math.log10(max(min_dim, 1.0)),
+        math.log10(max(intensity, 1e-3)),
+        g.peak_tflops_bf16 / 1000.0,
+        g.hbm_gbs / 1000.0,
+        g.util_max,
+    ]
+
+
+def comm_features(g: GpuProfile, bytes_: float, bw_gbs: float, participants: float) -> list[float]:
+    """Mirror of hw::comm_features."""
+    return [
+        math.log10(max(bytes_, 1.0)),
+        math.log10(max(bw_gbs, 1e-3)),
+        math.log10(max(participants, 1.0)),
+        g.comm_eff_max,
+    ]
+
+
+def sample_comp_dataset(
+    profiles: list[GpuProfile], n_per_gpu: int = 4000, noise: float = 0.01, seed: int = 7
+) -> tuple[np.ndarray, np.ndarray]:
+    """Noisy samples of the η_comp surface over the cost model's operating
+    range (the synthetic stand-in for the paper's profiling runs)."""
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for g in profiles:
+        log_flops = rng.uniform(6.0, 15.0, n_per_gpu)
+        log_dim = rng.uniform(0.0, 4.2, n_per_gpu)
+        log_int = rng.uniform(0.0, 3.8, n_per_gpu)
+        for lf, ld, li in zip(log_flops, log_dim, log_int):
+            flops, dim, inten = 10.0**lf, 10.0**ld, 10.0**li
+            y = eta_comp(g, flops, dim, inten) * float(np.exp(noise * rng.standard_normal()))
+            xs.append(comp_features(g, flops, dim, inten))
+            ys.append(min(y, 1.0))
+    return np.asarray(xs, dtype=np.float32), np.asarray(ys, dtype=np.float32)
+
+
+def sample_comm_dataset(
+    profiles: list[GpuProfile], n_per_gpu: int = 3000, noise: float = 0.01, seed: int = 8
+) -> tuple[np.ndarray, np.ndarray]:
+    """Noisy samples of the η_comm surface."""
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for g in profiles:
+        log_bytes = rng.uniform(3.0, 11.0, n_per_gpu)
+        bws = rng.choice(
+            [g.nvlink_gbs, g.internode_gbs, g.pcie_gbs], size=n_per_gpu
+        )
+        log_n = rng.uniform(np.log10(2.0), np.log10(512.0), n_per_gpu)
+        for lb, bw, ln in zip(log_bytes, bws, log_n):
+            byts, n = 10.0**lb, 10.0**ln
+            y = eta_comm(g, byts, bw, n) * float(np.exp(noise * rng.standard_normal()))
+            xs.append(comm_features(g, byts, bw, n))
+            ys.append(min(y, 1.0))
+    return np.asarray(xs, dtype=np.float32), np.asarray(ys, dtype=np.float32)
+
+
+def export_crosscheck_samples(profiles: list[GpuProfile], n: int = 64, seed: int = 13) -> dict:
+    """Deterministic (noise-free) samples for the rust↔python lockstep test
+    (written to artifacts/eff_samples.json by aot.py)."""
+    rng = np.random.default_rng(seed)
+    comp, comm = [], []
+    for g in profiles:
+        for _ in range(n):
+            flops = 10.0 ** rng.uniform(6.0, 15.0)
+            dim = 10.0 ** rng.uniform(0.0, 4.2)
+            inten = 10.0 ** rng.uniform(0.0, 3.8)
+            comp.append(
+                {
+                    "gpu": g.name,
+                    "flops": flops,
+                    "min_dim": dim,
+                    "intensity": inten,
+                    "eta": eta_comp(g, flops, dim, inten),
+                    "features": comp_features(g, flops, dim, inten),
+                }
+            )
+            byts = 10.0 ** rng.uniform(3.0, 11.0)
+            bw = float(rng.choice([g.nvlink_gbs, g.internode_gbs, g.pcie_gbs]))
+            parts = 10.0 ** rng.uniform(np.log10(2.0), np.log10(512.0))
+            comm.append(
+                {
+                    "gpu": g.name,
+                    "bytes": byts,
+                    "bw_gbs": bw,
+                    "participants": parts,
+                    "eta": eta_comm(g, byts, bw, parts),
+                    "features": comm_features(g, byts, bw, parts),
+                }
+            )
+    return {"comp": comp, "comm": comm}

@@ -1,0 +1,168 @@
+"""Gradient-boosted regression trees, trained with numpy (build-time only).
+
+The paper uses XGBoost to predict the η efficiency factors; xgboost is not
+available in this image, so we train our own ensemble with identical
+semantics: squared loss, shrinkage, *complete* binary trees of fixed depth in
+level order — the exact layout the rust inference (``gbdt/``) and the Pallas
+kernel (``kernels/forest.py``) consume:
+
+    internal nodes 0..2^d−1 : (feature, threshold)
+    leaves         0..2^d   : value
+    descent                 : idx ← 2·idx + 1 + (x[feat] ≥ thresh)
+
+Degenerate nodes (empty/pure) use threshold = +inf so every row goes left and
+both subtrees inherit the parent's fit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+INF = np.float32(np.inf)
+
+
+@dataclass
+class Tree:
+    depth: int
+    feat: np.ndarray  # (2^d − 1,) int32
+    thresh: np.ndarray  # (2^d − 1,) float32
+    leaf: np.ndarray  # (2^d,) float32
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized branch-free descent over rows of ``x`` (n, f)."""
+        idx = np.zeros(x.shape[0], dtype=np.int64)
+        for _ in range(self.depth):
+            f = self.feat[idx]
+            t = self.thresh[idx]
+            go_right = (x[np.arange(x.shape[0]), f] >= t).astype(np.int64)
+            idx = 2 * idx + 1 + go_right
+        return self.leaf[idx - (len(self.feat))]
+
+    def to_json(self) -> dict:
+        return {
+            "depth": self.depth,
+            "feat": [int(v) for v in self.feat],
+            "thresh": [float(v) if np.isfinite(v) else 3.0e38 for v in self.thresh],
+            "leaf": [float(v) for v in self.leaf],
+        }
+
+
+@dataclass
+class Forest:
+    trees: list[Tree]
+    base: float
+    lr: float
+    n_features: int
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        acc = np.zeros(x.shape[0], dtype=np.float64)
+        for t in self.trees:
+            acc += t.predict(x)
+        return self.base + self.lr * acc
+
+    def to_json(self) -> dict:
+        return {
+            "n_features": self.n_features,
+            "base": float(self.base),
+            "lr": float(self.lr),
+            "trees": [t.to_json() for t in self.trees],
+        }
+
+    # Packed arrays for the Pallas kernel: feat (T, I) int32,
+    # thresh (T, I) f32, leaf (T, L) f32 — all trees share one depth.
+    # Degenerate +inf thresholds are clamped to the same large finite value
+    # the JSON export uses, keeping kernel and rust inference bit-identical.
+    def packed(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        feat = np.stack([t.feat for t in self.trees]).astype(np.int32)
+        thresh = np.stack([t.thresh for t in self.trees]).astype(np.float32)
+        thresh = np.where(np.isfinite(thresh), thresh, np.float32(3.0e38))
+        leaf = np.stack([t.leaf for t in self.trees]).astype(np.float32)
+        return feat, thresh, leaf
+
+
+@dataclass
+class TrainConfig:
+    n_trees: int = 48
+    depth: int = 5
+    lr: float = 0.25
+    n_thresholds: int = 24
+    min_samples: int = 8
+    seed: int = 0
+    extra: dict = field(default_factory=dict)
+
+
+def _fit_tree(x: np.ndarray, resid: np.ndarray, cfg: TrainConfig) -> Tree:
+    """Greedy variance-reduction splits to a fixed depth (complete tree)."""
+    n_internal = (1 << cfg.depth) - 1
+    n_leaves = 1 << cfg.depth
+    feat = np.zeros(n_internal, dtype=np.int32)
+    thresh = np.full(n_internal, INF, dtype=np.float32)
+    leaf = np.zeros(n_leaves, dtype=np.float32)
+
+    # node id → row mask, breadth-first.
+    masks: dict[int, np.ndarray] = {0: np.ones(x.shape[0], dtype=bool)}
+    for node in range(n_internal):
+        mask = masks.get(node)
+        if mask is None or mask.sum() < cfg.min_samples:
+            # Degenerate: all rows left; children inherit.
+            masks[2 * node + 1] = mask if mask is not None else None
+            masks[2 * node + 2] = None
+            continue
+        xs = x[mask]
+        rs = resid[mask]
+        best = (0.0, 0, INF)  # (gain, feature, threshold)
+        total_sum = rs.sum()
+        total_cnt = len(rs)
+        base_sse_term = total_sum * total_sum / total_cnt
+        for f in range(x.shape[1]):
+            col = xs[:, f]
+            qs = np.unique(
+                np.quantile(col, np.linspace(0.05, 0.95, cfg.n_thresholds)).astype(np.float32)
+            )
+            for t in qs:
+                right = col >= t
+                nr = int(right.sum())
+                nl = total_cnt - nr
+                if nr == 0 or nl == 0:
+                    continue
+                sr = rs[right].sum()
+                sl = total_sum - sr
+                gain = sl * sl / nl + sr * sr / nr - base_sse_term
+                if gain > best[0]:
+                    best = (gain, f, t)
+        _, bf, bt = best
+        feat[node] = bf
+        thresh[node] = bt
+        go_right = x[:, bf] >= bt
+        masks[2 * node + 1] = mask & ~go_right
+        masks[2 * node + 2] = mask & go_right
+
+    for li in range(n_leaves):
+        mask = masks.get(n_internal + li)
+        if mask is not None and mask.any():
+            leaf[li] = resid[mask].mean()
+    return Tree(cfg.depth, feat, thresh, leaf)
+
+
+def train(x: np.ndarray, y: np.ndarray, cfg: TrainConfig | None = None) -> Forest:
+    """Gradient boosting for squared loss: residual fitting with shrinkage."""
+    cfg = cfg or TrainConfig()
+    x = np.asarray(x, dtype=np.float32)
+    y = np.asarray(y, dtype=np.float64)
+    base = float(y.mean())
+    pred = np.full_like(y, base)
+    trees: list[Tree] = []
+    for _ in range(cfg.n_trees):
+        resid = y - pred
+        tree = _fit_tree(x, resid, cfg)
+        trees.append(tree)
+        pred += cfg.lr * tree.predict(x)
+    return Forest(trees, base, cfg.lr, x.shape[1])
+
+
+def r2_score(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    ss_res = float(((y_true - y_pred) ** 2).sum())
+    ss_tot = float(((y_true - y_true.mean()) ** 2).sum())
+    return 1.0 - ss_res / max(ss_tot, 1e-12)

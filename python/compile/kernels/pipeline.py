@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: batched heterogeneous pipeline-time evaluation.
+
+Implements the paper's Eq. 22 — `Σᵢ(tᵢ+hᵢ) + (K−1)·maxᵢ(tᵢ+hᵢ)` — in the
+interleaving-corrected form `K·max + (Σ−max)/vpp`, masked over padded stage
+slots, for a whole batch of candidate strategies at once.
+
+TPU adaptation: one grid step per ``BLOCK_B`` strategies; the [block, PMAX]
+stage-time tile lives in VMEM and the reduction runs on the VPU lanes.
+``interpret=True`` (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 256
+
+
+def _pipeline_kernel(totals_ref, mask_ref, k_ref, vpp_ref, o_ref):
+    totals = totals_ref[...] * mask_ref[...]  # [block, P]
+    s = totals.sum(axis=1)
+    m = totals.max(axis=1)
+    o_ref[...] = k_ref[...] * m + (s - m) / vpp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def pipeline_eval(totals, mask, k, vpp, block_b: int = BLOCK_B):
+    """Eq. 22 over a batch: totals/mask f32[B, P], k/vpp f32[B] → f32[B]."""
+    import math
+
+    b, p = totals.shape
+    block = math.gcd(b, block_b)
+    grid = (b // block,)
+    return pl.pallas_call(
+        _pipeline_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, p), lambda i: (i, 0)),
+            pl.BlockSpec((block, p), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(totals, mask, k, vpp)

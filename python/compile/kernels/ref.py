@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness references: ``pytest`` compares every kernel output
+against these under hypothesis-driven shape/value sweeps
+(``python/tests/test_kernel.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def forest_ref(x, feat, thresh, leaf):
+    """Reference GBDT forest inference.
+
+    x      : f32[N, F]   feature rows
+    feat   : i32[T, I]   feature index per internal node (complete trees)
+    thresh : f32[T, I]   split thresholds
+    leaf   : f32[T, L]   leaf values, L = I + 1 = 2^depth
+    returns: f32[N]      sum over trees of the reached leaf value
+    """
+    n = x.shape[0]
+    t = feat.shape[0]
+    internal = feat.shape[1]
+    depth = (internal + 1).bit_length() - 1
+    idx = jnp.zeros((n, t), dtype=jnp.int32)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat[None, :, :].repeat(n, axis=0), idx[:, :, None], axis=2)[
+            :, :, 0
+        ]
+        th = jnp.take_along_axis(thresh[None, :, :].repeat(n, axis=0), idx[:, :, None], axis=2)[
+            :, :, 0
+        ]
+        xv = jnp.take_along_axis(x, f, axis=1)  # [N, T]
+        idx = 2 * idx + 1 + (xv >= th).astype(jnp.int32)
+    leaf_idx = idx - internal
+    vals = jnp.take_along_axis(leaf[None, :, :].repeat(n, axis=0), leaf_idx[:, :, None], axis=2)[
+        :, :, 0
+    ]
+    return vals.sum(axis=1)
+
+
+def pipeline_ref(totals, mask, k, vpp):
+    """Reference Eq. 22 pipeline-time evaluation with interleaving.
+
+    totals : f32[B, P]  per-stage time t_i + h_i (padded with zeros)
+    mask   : f32[B, P]  1.0 for live stages
+    k      : f32[B]     number of microbatches
+    vpp    : f32[B]     interleaving degree (≥ 1)
+    returns: f32[B]     K·max + (Σ − max)/vpp
+    """
+    masked = totals * mask
+    s = masked.sum(axis=1)
+    m = masked.max(axis=1)
+    return k * m + (s - m) / vpp

@@ -1,0 +1,340 @@
+"""Layer-2 JAX scorer graph — the batched cost model (paper §3.5).
+
+Mirrors ``rust/src/cost/`` exactly (the HLO↔native parity test in
+``rust/tests/integration_runtime.rs`` enforces agreement): per-stage operator
+census → η factors via the Layer-1 GBDT forest kernel → per-stage times →
+Eq. 22 pipeline composition via the Layer-1 pipeline kernel → step time.
+
+Inputs (packed by ``rust/src/cost/features.rs`` — index constants below are
+the same contract):
+
+    stage_feats f32[B, PMAX, FS]
+    stage_mask  f32[B, PMAX]
+    strat_feats f32[B, FG]
+
+Output: f32[B, 4] = [step_time, pipeline_time, dp_time, opt+offload_time].
+
+The GBDT forests are *captured as constants* in the jitted graph, so the AOT
+artifact is self-contained; retraining requires re-running ``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.forest import forest_apply
+from .kernels.pipeline import pipeline_eval
+
+# --- feature layout (mirror of rust/src/cost/features.rs) ---
+FS = 29
+FG = 8
+PMAX = 64
+OUT = 4
+
+SF_PEAK_TFLOPS = 0
+SF_HBM_GBS = 1
+SF_UTIL_MAX = 2
+SF_COMM_EFF_MAX = 3
+SF_TP_BW_GBS = 4
+SF_P2P_BW_GBS = 5
+SF_LAYERS = 6
+SF_IS_LAST = 7
+SF_TP = 8
+SF_MBS = 9
+SF_SEQ = 10
+SF_HIDDEN = 11
+SF_FFN = 12
+SF_KV_FRAC = 13
+SF_HEADS = 14
+SF_VOCAB = 15
+SF_GATED = 16
+SF_FLASH = 17
+SF_RC_GRAN = 18
+SF_RC_FRAC = 19
+SF_TP_OVERLAP = 20
+SF_P2P_OVERLAP = 21
+SF_PARAMS_M = 22
+SF_DP_BW_GBS = 23
+SF_PCIE_GBS = 24
+SF_N_EXPERTS = 25
+SF_MOE_TOPK = 26
+SF_EP = 27
+SF_EP_BW_GBS = 28
+
+GF_K = 0
+GF_VPP = 1
+GF_DP = 2
+GF_OVERLAP_GRAD = 3
+GF_OVERLAP_PARAM = 4
+GF_DIST_OPT = 5
+GF_OFFLOAD = 6
+GF_SEQ_PARALLEL = 7
+
+# --- composition constants (mirror of cost::CostConsts::default) ---
+P2P_HIDE = 0.7
+GRAD_REDUCE_HIDE = 0.8
+PARAM_GATHER_HIDE = 0.8
+TP_HIDE = 0.3
+ADAM_BYTES_PER_PARAM = 20.0
+HOST_DDR_GBS = 50.0
+OFFLOAD_HIDE = 0.6
+
+N_COMP_OPS = 6  # qkv, attn, out, up, down, head
+
+
+def _log10(x):
+    return jnp.log10(jnp.maximum(x, 1e-30))
+
+
+def _comp_features(flops, min_dim, intensity, peak_tflops, hbm, util_max):
+    """hw::comp_features over stacked op arrays (each [R])."""
+    return jnp.stack(
+        [
+            _log10(jnp.maximum(flops, 1.0)),
+            _log10(jnp.maximum(min_dim, 1.0)),
+            _log10(jnp.maximum(intensity, 1e-3)),
+            peak_tflops / 1000.0,
+            hbm / 1000.0,
+            util_max,
+        ],
+        axis=-1,
+    )
+
+
+def _comm_features(bytes_, bw_gbs, participants, comm_eff_max):
+    return jnp.stack(
+        [
+            _log10(jnp.maximum(bytes_, 1.0)),
+            _log10(jnp.maximum(bw_gbs, 1e-3)),
+            _log10(jnp.maximum(participants, 1.0)),
+            comm_eff_max,
+        ],
+        axis=-1,
+    )
+
+
+def build_scorer(comp_forest, comm_forest):
+    """Return ``scorer(stage_feats, stage_mask, strat_feats) → f32[B, OUT]``.
+
+    ``comp_forest``/``comm_forest`` are ``gbdt_train.Forest`` objects whose
+    packed arrays are captured as jit constants.
+    """
+    comp_feat, comp_thresh, comp_leaf = comp_forest.packed()
+    comm_feat, comm_thresh, comm_leaf = comm_forest.packed()
+    comp_base, comp_lr = float(comp_forest.base), float(comp_forest.lr)
+    comm_base, comm_lr = float(comm_forest.base), float(comm_forest.lr)
+
+    comp_feat = jnp.asarray(comp_feat)
+    comp_thresh = jnp.asarray(comp_thresh)
+    comp_leaf = jnp.asarray(comp_leaf)
+    comm_feat = jnp.asarray(comm_feat)
+    comm_thresh = jnp.asarray(comm_thresh)
+    comm_leaf = jnp.asarray(comm_leaf)
+
+    def eta_comp(features):  # [R, 6] → [R] in (1e-4, 1]
+        raw = comp_base + comp_lr * forest_apply(features, comp_feat, comp_thresh, comp_leaf)
+        return jnp.clip(raw, 1e-4, 1.0)
+
+    def eta_comm(features):  # [R, 4] → [R]
+        raw = comm_base + comm_lr * forest_apply(features, comm_feat, comm_thresh, comm_leaf)
+        return jnp.clip(raw, 1e-4, 1.0)
+
+    def scorer(stage_feats, stage_mask, strat_feats):
+        b, pmax, _ = stage_feats.shape
+        rows = stage_feats.reshape(b * pmax, FS)  # [R, FS]
+
+        peak_tf = rows[:, SF_PEAK_TFLOPS]
+        peak = peak_tf * 1e12
+        hbm = rows[:, SF_HBM_GBS]
+        util = rows[:, SF_UTIL_MAX]
+        ceff = rows[:, SF_COMM_EFF_MAX]
+        tp_bw = rows[:, SF_TP_BW_GBS]
+        p2p_bw = rows[:, SF_P2P_BW_GBS]
+        layers = rows[:, SF_LAYERS]
+        is_last = rows[:, SF_IS_LAST]
+        tp = rows[:, SF_TP]
+        mbs = rows[:, SF_MBS]
+        seq = rows[:, SF_SEQ]
+        h = rows[:, SF_HIDDEN]
+        ffn = rows[:, SF_FFN]
+        kvf = rows[:, SF_KV_FRAC]
+        heads = rows[:, SF_HEADS]
+        vocab = rows[:, SF_VOCAB]
+        gated = rows[:, SF_GATED]
+        flash = rows[:, SF_FLASH]
+        rc_gran = rows[:, SF_RC_GRAN]
+        rc_frac = rows[:, SF_RC_FRAC]
+        tp_ovl = rows[:, SF_TP_OVERLAP]
+        p2p_ovl = rows[:, SF_P2P_OVERLAP]
+        params = rows[:, SF_PARAMS_M] * 1e6
+        dp_bw = rows[:, SF_DP_BW_GBS]
+        pcie = rows[:, SF_PCIE_GBS]
+        n_experts = rows[:, SF_N_EXPERTS]
+        moe_topk = rows[:, SF_MOE_TOPK]
+        ep = rows[:, SF_EP]
+        ep_bw = rows[:, SF_EP_BW_GBS]
+
+        # Avoid 0/0 on padded rows (mask zeroes them out at the end).
+        safe_tp = jnp.maximum(tp, 1.0)
+        safe_heads = jnp.maximum(heads, 1.0)
+        head_dim = h / safe_heads
+        mb = mbs * seq
+        gate = jnp.where(gated > 0.5, 2.0, 1.0)
+
+        # --- operator census (mirror of cost::ops::stage_fwd_ops) ---
+        def gemm(m_, n_, k_):
+            flops = 2.0 * m_ * n_ * k_
+            min_dim = jnp.minimum(jnp.minimum(m_, n_), k_)
+            bytes_ = 2.0 * (m_ * k_ + k_ * n_ + m_ * n_)
+            return flops, min_dim, bytes_
+
+        one = jnp.ones_like(mb)
+        # 1. qkv
+        f1, d1, by1 = gemm(mb, (1.0 + 2.0 * kvf) * h / safe_tp, h)
+        c1 = layers
+        # 2. attention — flash (fused, count=layers) vs unfused (score and
+        #    context have IDENTICAL shapes, so one class with count=2·layers
+        #    — same total time, 1 fewer forest row per stage; §Perf L1-3).
+        attn_flops = 2.0 * mbs * seq * seq * h / safe_tp
+        fused_flops = 2.0 * attn_flops
+        fused_bytes = 2.0 * 4.0 * mb * h / safe_tp
+        unf_bytes = 2.0 * (mbs * safe_heads / safe_tp) * (
+            2.0 * seq * head_dim + seq * seq
+        )
+        attn_dim = jnp.minimum(head_dim, seq)
+        f2 = jnp.where(flash > 0.5, fused_flops, attn_flops)
+        by2 = jnp.where(flash > 0.5, fused_bytes, unf_bytes)
+        c2 = layers * jnp.where(flash > 0.5, 1.0, 2.0)
+        # 3. out proj
+        f4, d4, by4 = gemm(mb, h, h / safe_tp)
+        c4 = layers
+        # MoE: each token visits top-k experts (mirror of
+        # ModelSpec::active_mlp_factor).
+        mlp_passes = jnp.where(n_experts > 1.0, jnp.maximum(moe_topk, 1.0), 1.0)
+        # 4. mlp up
+        f5, d5, by5 = gemm(mb, gate * ffn / safe_tp, h)
+        c5 = layers * mlp_passes
+        # 5. mlp down
+        f6, d6, by6 = gemm(mb, h, ffn / safe_tp)
+        c6 = layers * mlp_passes
+        # 6. lm head (last stage only)
+        f7, d7, by7 = gemm(mb, vocab / safe_tp, h)
+        c7 = is_last
+
+        op_flops = jnp.stack([f1, f2, f4, f5, f6, f7], axis=0)  # [6, R]
+        op_dims = jnp.stack([d1, attn_dim, d4, d5, d6, d7], axis=0)
+        op_bytes = jnp.stack([by1, by2, by4, by5, by6, by7], axis=0)
+        op_counts = jnp.stack([c1, c2, c4, c5, c6, c7], axis=0)
+        op_intensity = op_flops / jnp.maximum(op_bytes, 1.0)
+
+        r = b * pmax
+        feats = _comp_features(
+            op_flops.reshape(N_COMP_OPS * r),
+            op_dims.reshape(N_COMP_OPS * r),
+            op_intensity.reshape(N_COMP_OPS * r),
+            jnp.tile(peak_tf, N_COMP_OPS),
+            jnp.tile(hbm, N_COMP_OPS),
+            jnp.tile(util, N_COMP_OPS),
+        )
+        etas = eta_comp(feats).reshape(N_COMP_OPS, r)
+        op_times = op_counts * op_flops / (jnp.maximum(peak, 1.0)[None, :] * etas)
+        fwd_comp = op_times.sum(axis=0)
+        attn_fwd = op_times[1]
+
+        # backward + recompute (mirror of cost::stage_time).
+        bwd_comp = 2.0 * fwd_comp
+        bwd_comp = bwd_comp + jnp.where(rc_gran == 2.0, rc_frac * fwd_comp, 0.0)
+        bwd_comp = bwd_comp + jnp.where(
+            (rc_gran == 1.0) & (flash < 0.5), attn_fwd, 0.0
+        )
+
+        # --- communication efficiencies (ONE fused forest launch) ---
+        # The tp-collective, p2p and dp-gradient η_comm queries are stacked
+        # into a single kernel call: pallas launch overhead dominates small
+        # batches in interpret mode (§Perf iteration L1-2).
+        dp = jnp.maximum(strat_feats[:, GF_DP], 1.0)
+        dp_r = jnp.repeat(dp, pmax)
+        act_bytes = 2.0 * mbs * seq * h
+        grad_bytes = params * 2.0
+        safe_ep = jnp.maximum(ep, 1.0)
+        a2a_msg = act_bytes * jnp.maximum(moe_topk, 1.0) / safe_ep
+        comm_feats = jnp.concatenate(
+            [
+                _comm_features(act_bytes, tp_bw, tp, ceff),
+                _comm_features(act_bytes, p2p_bw, 2.0 * one, ceff),
+                _comm_features(grad_bytes, dp_bw, dp_r, ceff),
+                _comm_features(a2a_msg, ep_bw, ep, ceff),
+            ],
+            axis=0,
+        )
+        comm_etas = eta_comm(comm_feats)
+        r_rows = act_bytes.shape[0]
+        tp_eta = comm_etas[:r_rows]
+        p2p_eta = comm_etas[r_rows : 2 * r_rows]
+        dp_eta = comm_etas[2 * r_rows : 3 * r_rows]
+        a2a_eta = comm_etas[3 * r_rows :]
+
+        # --- MoE all-to-all (mirror of cost::stage_time a2a term) ---
+        a2a_ring = layers * 2.0 * act_bytes * jnp.maximum(moe_topk, 1.0) * (safe_ep - 1.0) / safe_ep
+        a2a_time = jnp.where(
+            (n_experts > 1.0) & (ep > 1.0),
+            a2a_ring / (jnp.maximum(ep_bw, 1e-3) * 1e9 * a2a_eta),
+            0.0,
+        )
+
+        # --- TP collectives ---
+        ring_per = 2.0 * act_bytes * (safe_tp - 1.0) / safe_tp
+        n_tp_ops = 2.0 * layers + is_last
+        tp_time = jnp.where(
+            tp_bw > 0.0,
+            n_tp_ops * ring_per / (jnp.maximum(tp_bw, 1e-3) * 1e9 * tp_eta),
+            0.0,
+        )
+        tp_time = tp_time * jnp.where(tp_ovl > 0.5, 1.0 - TP_HIDE, 1.0)
+
+        # --- p2p ---
+        p2p_t = jnp.where(
+            p2p_bw > 0.0,
+            act_bytes / (jnp.maximum(p2p_bw, 1e-3) * 1e9 * p2p_eta),
+            0.0,
+        )
+        p2p_t = p2p_t * jnp.where(p2p_ovl > 0.5, 1.0 - P2P_HIDE, 1.0)
+
+        fwd_tot = (fwd_comp + tp_time + a2a_time + p2p_t).reshape(b, pmax)
+        bwd_tot = (bwd_comp + tp_time + a2a_time + p2p_t).reshape(b, pmax)
+
+        # --- pipeline composition (Layer-1 kernel, Eq. 22) ---
+        k = strat_feats[:, GF_K]
+        vpp = jnp.maximum(strat_feats[:, GF_VPP], 1.0)
+        pipe_f = pipeline_eval(fwd_tot, stage_mask, k, vpp)
+        pipe_b = pipeline_eval(bwd_tot, stage_mask, k, vpp)
+        pipeline_time = pipe_f + pipe_b
+
+        # --- DP communication (mirror of cost::dp_time) ---
+        ovl_g = jnp.repeat(strat_feats[:, GF_OVERLAP_GRAD], pmax)
+        ovl_p = jnp.repeat(strat_feats[:, GF_OVERLAP_PARAM], pmax)
+        dist_opt = jnp.repeat(strat_feats[:, GF_DIST_OPT], pmax)
+        ring = 2.0 * grad_bytes * (dp_r - 1.0) / dp_r
+        t_dp = ring / (jnp.maximum(dp_bw, 1e-3) * 1e9 * dp_eta)
+        t_dp = t_dp * jnp.where(ovl_g > 0.5, 1.0 - GRAD_REDUCE_HIDE, 1.0)
+        ag = grad_bytes * (dp_r - 1.0) / dp_r
+        t_ag = ag / (jnp.maximum(dp_bw, 1e-3) * 1e9 * dp_eta)
+        t_ag = t_ag * jnp.where(ovl_p > 0.5, 1.0 - PARAM_GATHER_HIDE, 1.0)
+        t_dp = t_dp + jnp.where(dist_opt > 0.5, t_ag, 0.0)
+        t_dp = jnp.where(dp_r > 1.0, t_dp, 0.0)
+        dp_time = (t_dp.reshape(b, pmax) * stage_mask).max(axis=1)
+
+        # --- optimizer / offload (mirror of cost::optimizer_time) ---
+        offload = jnp.repeat(strat_feats[:, GF_OFFLOAD], pmax)
+        shard = params / jnp.where(dist_opt > 0.5, dp_r, 1.0)
+        t_dev = shard * ADAM_BYTES_PER_PARAM / (jnp.maximum(hbm, 1e-3) * 1e9)
+        transfer = shard * 6.0 / (jnp.maximum(pcie, 1e-3) * 1e9)
+        host = shard * ADAM_BYTES_PER_PARAM / (HOST_DDR_GBS * 1e9)
+        t_off = (transfer + host) * (1.0 - OFFLOAD_HIDE)
+        t_opt = jnp.where(offload > 0.5, t_off, t_dev)
+        extra = (t_opt.reshape(b, pmax) * stage_mask).max(axis=1)
+
+        step = pipeline_time + dp_time + extra
+        return jnp.stack([step, pipeline_time, dp_time, extra], axis=1)
+
+    return scorer

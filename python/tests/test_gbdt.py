@@ -1,0 +1,98 @@
+"""GBDT training correctness and η-surface fit quality."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import effdata, gbdt_train
+
+
+class TestTrainer:
+    def test_fits_simple_function(self):
+        rng = np.random.default_rng(0)
+        x = rng.uniform(0, 1, (4000, 3)).astype(np.float32)
+        y = 2.0 * x[:, 0] + np.where(x[:, 1] > 0.5, 1.0, -1.0) + 0.1 * x[:, 2]
+        f = gbdt_train.train(x, y, gbdt_train.TrainConfig(n_trees=30, depth=4))
+        r2 = gbdt_train.r2_score(y, f.predict(x))
+        assert r2 > 0.97, f"R²={r2}"
+
+    def test_constant_target(self):
+        x = np.random.default_rng(1).uniform(0, 1, (200, 2)).astype(np.float32)
+        y = np.full(200, 3.5)
+        f = gbdt_train.train(x, y, gbdt_train.TrainConfig(n_trees=5, depth=3))
+        np.testing.assert_allclose(f.predict(x), 3.5, atol=1e-6)
+
+    def test_tree_shapes_complete(self):
+        x = np.random.default_rng(2).uniform(0, 1, (500, 4)).astype(np.float32)
+        y = x.sum(axis=1)
+        f = gbdt_train.train(x, y, gbdt_train.TrainConfig(n_trees=3, depth=5))
+        for t in f.trees:
+            assert len(t.feat) == 31
+            assert len(t.thresh) == 31
+            assert len(t.leaf) == 32
+            assert t.feat.max() < 4
+
+    def test_json_serializable_and_finite(self):
+        import json
+
+        x = np.random.default_rng(3).uniform(0, 1, (300, 2)).astype(np.float32)
+        y = x[:, 0] ** 2
+        f = gbdt_train.train(x, y, gbdt_train.TrainConfig(n_trees=4, depth=3))
+        s = json.dumps(f.to_json())
+        back = json.loads(s)
+        assert back["n_features"] == 2
+        assert len(back["trees"]) == 4
+        # inf thresholds encoded as a large finite float (rust JSON rejects inf)
+        for t in back["trees"]:
+            assert all(np.isfinite(v) for v in t["thresh"])
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_boosting_monotone_improvement(self, seed):
+        """More trees never hurt training R² (squared-loss boosting)."""
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(0, 1, (600, 3)).astype(np.float32)
+        y = np.sin(4 * x[:, 0]) + x[:, 1] * x[:, 2]
+        small = gbdt_train.train(x, y, gbdt_train.TrainConfig(n_trees=3, depth=3, seed=seed))
+        big = gbdt_train.train(x, y, gbdt_train.TrainConfig(n_trees=20, depth=3, seed=seed))
+        r2s = gbdt_train.r2_score(y, small.predict(x))
+        r2b = gbdt_train.r2_score(y, big.predict(x))
+        assert r2b >= r2s - 1e-9
+
+
+class TestEtaFit:
+    """The paper's >95% accuracy hinges on the η fit; verify it offline."""
+
+    @pytest.fixture(scope="class")
+    def profiles(self):
+        return effdata.load_profiles()
+
+    def test_comp_surface_fit(self, profiles):
+        xs, ys = effdata.sample_comp_dataset(profiles, n_per_gpu=800)
+        f = gbdt_train.train(xs, ys, gbdt_train.TrainConfig(n_trees=20, depth=5))
+        r2 = gbdt_train.r2_score(ys, f.predict(xs))
+        assert r2 > 0.95, f"η_comp R²={r2}"
+
+    def test_comm_surface_fit(self, profiles):
+        xs, ys = effdata.sample_comm_dataset(profiles, n_per_gpu=600)
+        f = gbdt_train.train(xs, ys, gbdt_train.TrainConfig(n_trees=16, depth=4))
+        r2 = gbdt_train.r2_score(ys, f.predict(xs))
+        assert r2 > 0.95, f"η_comm R²={r2}"
+
+    def test_eta_comp_properties(self, profiles):
+        g = profiles[0]
+        assert effdata.eta_comp(g, 1e12, 512, 200) > effdata.eta_comp(g, 1e6, 512, 200)
+        assert effdata.eta_comp(g, 1e11, 16, 200) < effdata.eta_comp(g, 1e11, 512, 200)
+        for f_ in (1e3, 1e9, 1e15):
+            e = effdata.eta_comp(g, f_, 100, 50)
+            assert 0.0 < e <= 1.0
+
+    def test_eta_comm_properties(self, profiles):
+        g = profiles[0]
+        assert effdata.eta_comm(g, 1e9, 400, 8) > effdata.eta_comm(g, 1e4, 400, 8)
+        assert effdata.eta_comm(g, 1e7, 400, 64) < effdata.eta_comm(g, 1e7, 400, 8)
+
+    def test_profile_names_cover_paper(self, profiles):
+        names = {g.name for g in profiles}
+        assert {"a800", "h100", "h800", "a100"} <= names

@@ -1,0 +1,151 @@
+"""Layer-1 kernel correctness: Pallas vs pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: the forest kernel
+and the pipeline kernel must agree with ``kernels/ref.py`` across
+hypothesis-driven shape/value sweeps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.forest import forest_apply, forest_predict
+from compile.kernels.pipeline import pipeline_eval
+from compile.kernels.ref import forest_ref, pipeline_ref
+
+
+def random_forest_arrays(rng, n_trees, depth, n_features):
+    internal = (1 << depth) - 1
+    leaves = 1 << depth
+    feat = rng.integers(0, n_features, (n_trees, internal)).astype(np.int32)
+    thresh = rng.uniform(-1.0, 1.0, (n_trees, internal)).astype(np.float32)
+    leaf = rng.uniform(-2.0, 2.0, (n_trees, leaves)).astype(np.float32)
+    return feat, thresh, leaf
+
+
+class TestForestKernel:
+    @pytest.mark.parametrize("depth", [1, 2, 4, 5])
+    @pytest.mark.parametrize("n_trees", [1, 7, 48])
+    def test_matches_ref(self, depth, n_trees):
+        rng = np.random.default_rng(depth * 100 + n_trees)
+        feat, thresh, leaf = random_forest_arrays(rng, n_trees, depth, 6)
+        x = rng.uniform(-1.5, 1.5, (512, 6)).astype(np.float32)
+        got = forest_apply(jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thresh), jnp.asarray(leaf))
+        want = forest_ref(jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thresh), jnp.asarray(leaf))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+    @given(
+        n_rows_blocks=st.integers(1, 4),
+        n_trees=st.integers(1, 16),
+        depth=st.integers(1, 5),
+        n_features=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_sweep(self, n_rows_blocks, n_trees, depth, n_features, seed):
+        rng = np.random.default_rng(seed)
+        feat, thresh, leaf = random_forest_arrays(rng, n_trees, depth, n_features)
+        n = 64 * n_rows_blocks
+        x = rng.uniform(-3.0, 3.0, (n, n_features)).astype(np.float32)
+        got = forest_apply(
+            jnp.asarray(x),
+            jnp.asarray(feat),
+            jnp.asarray(thresh),
+            jnp.asarray(leaf),
+            block_rows=64,
+        )
+        want = forest_ref(jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thresh), jnp.asarray(leaf))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_matches_numpy_trainer(self):
+        """Kernel agrees with the numpy Forest.predict used at train time."""
+        from compile import gbdt_train
+
+        rng = np.random.default_rng(3)
+        x = rng.uniform(0.0, 1.0, (1024, 4)).astype(np.float32)
+        y = (x[:, 0] * 2.0 + np.sin(3.0 * x[:, 1]) - x[:, 2] * x[:, 3]).astype(np.float32)
+        forest = gbdt_train.train(x, y, gbdt_train.TrainConfig(n_trees=10, depth=4))
+        feat, thresh, leaf = forest.packed()
+        got = forest_predict(
+            jnp.asarray(x),
+            jnp.asarray(feat),
+            jnp.asarray(thresh),
+            jnp.asarray(leaf),
+            forest.base,
+            forest.lr,
+        )
+        want = forest.predict(x)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+    def test_boundary_thresholds(self):
+        """x == threshold goes right (>= semantics, must match rust)."""
+        feat = np.zeros((1, 1), dtype=np.int32)
+        thresh = np.array([[0.5]], dtype=np.float32)
+        leaf = np.array([[10.0, 20.0]], dtype=np.float32)
+        x = np.array([[0.5], [0.4999]], dtype=np.float32)
+        got = np.asarray(
+            forest_apply(jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thresh), jnp.asarray(leaf))
+        )
+        assert got[0] == 20.0  # equal → right
+        assert got[1] == 10.0
+
+    def test_infinite_threshold_goes_left(self):
+        """Degenerate (pruned) nodes use +inf threshold → always left."""
+        feat = np.zeros((1, 3), dtype=np.int32)
+        thresh = np.array([[np.inf, np.inf, np.inf]], dtype=np.float32)
+        leaf = np.array([[7.0, 1.0, 2.0, 3.0]], dtype=np.float32)
+        x = np.array([[1e30]], dtype=np.float32)
+        got = np.asarray(
+            forest_apply(jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thresh), jnp.asarray(leaf))
+        )
+        assert got[0] == 7.0
+
+
+class TestPipelineKernel:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(1)
+        totals = rng.uniform(0.0, 1.0, (256, 64)).astype(np.float32)
+        mask = (rng.uniform(0, 1, (256, 64)) > 0.5).astype(np.float32)
+        mask[:, 0] = 1.0  # at least one live stage
+        k = rng.integers(1, 512, 256).astype(np.float32)
+        vpp = rng.choice([1.0, 2.0, 4.0], 256).astype(np.float32)
+        got = pipeline_eval(jnp.asarray(totals), jnp.asarray(mask), jnp.asarray(k), jnp.asarray(vpp))
+        want = pipeline_ref(jnp.asarray(totals), jnp.asarray(mask), jnp.asarray(k), jnp.asarray(vpp))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @given(
+        b_blocks=st.integers(1, 3),
+        p=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_sweep(self, b_blocks, p, seed):
+        rng = np.random.default_rng(seed)
+        b = 32 * b_blocks
+        totals = rng.uniform(0.0, 2.0, (b, p)).astype(np.float32)
+        mask = np.ones((b, p), dtype=np.float32)
+        k = rng.integers(1, 100, b).astype(np.float32)
+        vpp = rng.choice([1.0, 2.0, 4.0], b).astype(np.float32)
+        got = pipeline_eval(
+            jnp.asarray(totals), jnp.asarray(mask), jnp.asarray(k), jnp.asarray(vpp), block_b=32
+        )
+        want = pipeline_ref(jnp.asarray(totals), jnp.asarray(mask), jnp.asarray(k), jnp.asarray(vpp))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-7)
+
+    def test_eq22_closed_form(self):
+        """Homogeneous stages, vpp=1: Σ + (K−1)·max == K·t + (P−1)·t."""
+        p, k, t = 8, 32.0, 0.01
+        totals = np.full((1, p), t, dtype=np.float32)
+        mask = np.ones((1, p), dtype=np.float32)
+        got = float(
+            pipeline_eval(
+                jnp.asarray(totals),
+                jnp.asarray(mask),
+                jnp.asarray([k], dtype=np.float32),
+                jnp.asarray([1.0], dtype=np.float32),
+                block_b=1,
+            )[0]
+        )
+        assert abs(got - (k * t + (p - 1) * t)) < 1e-6

@@ -1,0 +1,177 @@
+"""Layer-2 scorer graph: shape, masking and physics sanity checks.
+
+Full numeric parity with the rust cost model is enforced end-to-end by
+``rust/tests/integration_runtime.rs`` (native vs HLO engines); here we check
+the graph in isolation with small hand-built feature rows.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import effdata, gbdt_train
+from compile import model as scorer_model
+from compile.model import (
+    FG,
+    FS,
+    GF_DP,
+    GF_DIST_OPT,
+    GF_K,
+    GF_OVERLAP_GRAD,
+    GF_OVERLAP_PARAM,
+    GF_VPP,
+    PMAX,
+    SF_COMM_EFF_MAX,
+    SF_DP_BW_GBS,
+    SF_FLASH,
+    SF_FFN,
+    SF_GATED,
+    SF_HBM_GBS,
+    SF_HEADS,
+    SF_HIDDEN,
+    SF_IS_LAST,
+    SF_KV_FRAC,
+    SF_LAYERS,
+    SF_MBS,
+    SF_P2P_BW_GBS,
+    SF_P2P_OVERLAP,
+    SF_PARAMS_M,
+    SF_PCIE_GBS,
+    SF_PEAK_TFLOPS,
+    SF_RC_FRAC,
+    SF_RC_GRAN,
+    SF_SEQ,
+    SF_TP,
+    SF_TP_BW_GBS,
+    SF_TP_OVERLAP,
+    SF_UTIL_MAX,
+    SF_VOCAB,
+    build_scorer,
+)
+
+
+@pytest.fixture(scope="module")
+def scorer():
+    profiles = effdata.load_profiles()
+    xs, ys = effdata.sample_comp_dataset(profiles, n_per_gpu=400)
+    comp = gbdt_train.train(xs, ys, gbdt_train.TrainConfig(n_trees=10, depth=4))
+    xs2, ys2 = effdata.sample_comm_dataset(profiles, n_per_gpu=300)
+    comm = gbdt_train.train(xs2, ys2, gbdt_train.TrainConfig(n_trees=8, depth=4))
+    return jax.jit(build_scorer(comp, comm))
+
+
+def mk_stage_row(pp=4, stage=0, tp=2, mbs=1, layers=8, flash=1.0, h100=False):
+    row = np.zeros(FS, dtype=np.float32)
+    row[SF_PEAK_TFLOPS] = 989.0 if h100 else 312.0
+    row[SF_HBM_GBS] = 3350.0 if h100 else 2039.0
+    row[SF_UTIL_MAX] = 0.58 if h100 else 0.62
+    row[SF_COMM_EFF_MAX] = 0.9 if h100 else 0.88
+    row[SF_TP_BW_GBS] = 400.0 if tp > 1 else 0.0
+    row[SF_P2P_BW_GBS] = 25.0 if stage < pp - 1 else 0.0
+    row[SF_LAYERS] = layers
+    row[SF_IS_LAST] = 1.0 if stage == pp - 1 else 0.0
+    row[SF_TP] = tp
+    row[SF_MBS] = mbs
+    row[SF_SEQ] = 4096.0
+    row[SF_HIDDEN] = 4096.0
+    row[SF_FFN] = 11008.0
+    row[SF_KV_FRAC] = 1.0
+    row[SF_HEADS] = 32.0
+    row[SF_VOCAB] = 32000.0
+    row[SF_GATED] = 1.0
+    row[SF_FLASH] = flash
+    row[SF_RC_GRAN] = 0.0
+    row[SF_RC_FRAC] = 0.0
+    row[SF_TP_OVERLAP] = 1.0
+    row[SF_P2P_OVERLAP] = 1.0
+    row[SF_PARAMS_M] = 1000.0
+    row[SF_DP_BW_GBS] = 25.0
+    row[SF_PCIE_GBS] = 32.0
+    return row
+
+
+def mk_batch(b=4, pp=4, **kw):
+    sf = np.zeros((b, PMAX, FS), dtype=np.float32)
+    mask = np.zeros((b, PMAX), dtype=np.float32)
+    gf = np.zeros((b, FG), dtype=np.float32)
+    for bi in range(b):
+        for st in range(pp):
+            sf[bi, st] = mk_stage_row(pp=pp, stage=st, **kw)
+            mask[bi, st] = 1.0
+        gf[bi, GF_K] = 64.0
+        gf[bi, GF_VPP] = 1.0
+        gf[bi, GF_DP] = 8.0
+        gf[bi, GF_OVERLAP_GRAD] = 1.0
+        gf[bi, GF_OVERLAP_PARAM] = 1.0
+        gf[bi, GF_DIST_OPT] = 1.0
+    return jnp.asarray(sf), jnp.asarray(mask), jnp.asarray(gf)
+
+
+class TestScorer:
+    def test_output_shape_and_finite(self, scorer):
+        sf, mask, gf = mk_batch()
+        out = np.asarray(scorer(sf, mask, gf))
+        assert out.shape == (4, 4)
+        assert np.isfinite(out).all()
+        assert (out[:, 0] > 0).all()
+        # step = pipeline + dp + extra
+        np.testing.assert_allclose(out[:, 0], out[:, 1:].sum(axis=1), rtol=1e-5)
+
+    def test_padded_rows_are_harmless(self, scorer):
+        """All-zero padded strategies must not produce NaN/Inf."""
+        sf = jnp.zeros((4, PMAX, FS), dtype=jnp.float32)
+        mask = jnp.zeros((4, PMAX), dtype=jnp.float32)
+        gf = jnp.zeros((4, FG), dtype=jnp.float32).at[:, GF_K].set(1.0)
+        gf = gf.at[:, GF_VPP].set(1.0).at[:, GF_DP].set(1.0)
+        out = np.asarray(scorer(sf, mask, gf))
+        assert np.isfinite(out).all()
+
+    def test_h100_faster_than_a800(self, scorer):
+        a = np.asarray(scorer(*mk_batch(h100=False)))[0, 0]
+        h = np.asarray(scorer(*mk_batch(h100=True)))[0, 0]
+        assert h < a
+
+    def test_more_microbatches_longer_step(self, scorer):
+        sf, mask, gf = mk_batch()
+        gf2 = gf.at[:, GF_K].set(128.0)
+        t1 = np.asarray(scorer(sf, mask, gf))[0, 0]
+        t2 = np.asarray(scorer(sf, mask, gf2))[0, 0]
+        assert t2 > 1.5 * t1
+
+    def test_full_recompute_slower(self, scorer):
+        sf, mask, gf = mk_batch()
+        sf_rc = np.asarray(sf).copy()
+        sf_rc[:, :, SF_RC_GRAN] = 2.0
+        sf_rc[:, :, SF_RC_FRAC] = 1.0
+        t0 = np.asarray(scorer(sf, mask, gf))[0, 0]
+        t1 = np.asarray(scorer(jnp.asarray(sf_rc), mask, gf))[0, 0]
+        assert t1 > t0
+
+    def test_vpp_reduces_pipeline(self, scorer):
+        sf, mask, gf = mk_batch(pp=8)
+        gf_small_k = gf.at[:, GF_K].set(8.0)
+        t1 = np.asarray(scorer(sf, mask, gf_small_k))[0, 1]
+        gf_vpp = gf_small_k.at[:, GF_VPP].set(4.0)
+        t2 = np.asarray(scorer(sf, mask, gf_vpp))[0, 1]
+        assert t2 < t1
+
+    def test_dp_time_zero_when_dp1(self, scorer):
+        sf, mask, gf = mk_batch()
+        gf1 = gf.at[:, GF_DP].set(1.0)
+        out = np.asarray(scorer(sf, mask, gf1))
+        assert np.allclose(out[:, 2], 0.0)
+
+    def test_lowers_to_hlo_text(self, scorer):
+        """The AOT path itself: lowering must produce parseable HLO text."""
+        from compile.aot import to_hlo_text
+
+        b = 8
+        lowered = jax.jit(scorer.__wrapped__ if hasattr(scorer, "__wrapped__") else scorer).lower(
+            jax.ShapeDtypeStruct((b, PMAX, FS), jnp.float32),
+            jax.ShapeDtypeStruct((b, PMAX), jnp.float32),
+            jax.ShapeDtypeStruct((b, FG), jnp.float32),
+        )
+        hlo = to_hlo_text(lowered)
+        assert "ENTRY" in hlo
+        assert f"f32[{b},{PMAX},{FS}]" in hlo.replace(" ", "")

@@ -1,0 +1,77 @@
+//! Ablation (ours) — native rust scorer vs the AOT HLO scorer (Layer-1
+//! Pallas kernels through PJRT), plus the analytic-η vs GBDT-η variants.
+//!
+//! Measures scoring throughput (strategies/s) and re-verifies numeric
+//! parity on the fly. The HLO path exists to prove the three-layer
+//! architecture end-to-end; the native path is the production fast path
+//! (see EXPERIMENTS.md §Perf).
+
+use astra::bench_util::{section, Bench};
+use astra::coordinator::{AstraEngine, EngineConfig, ScoringEngine, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::Table;
+
+fn main() {
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let model = registry.get("llama2-7b").unwrap().clone();
+    let req = SearchRequest::homogeneous("a800", 64, model.clone());
+
+    let mut variants: Vec<(&str, AstraEngine)> = vec![
+        (
+            "native+forest",
+            AstraEngine::new(catalog.clone(), EngineConfig::default()),
+        ),
+        (
+            "native+analytic",
+            AstraEngine::new(
+                catalog.clone(),
+                EngineConfig { use_forests: false, ..Default::default() },
+            ),
+        ),
+    ];
+    if astra::runtime::artifacts_present() {
+        variants.push((
+            "hlo(pallas)",
+            AstraEngine::new(
+                catalog.clone(),
+                EngineConfig { engine: ScoringEngine::Hlo, ..Default::default() },
+            ),
+        ));
+    } else {
+        println!("NOTE: artifacts missing; hlo variant skipped (run `make artifacts`)");
+    }
+
+    section("scoring engine ablation — llama2-7b @ 64×a800");
+    let mut bench = Bench::new();
+    let mut t = Table::new(&["engine", "scored", "sim time", "strategies/s", "best step"]);
+    let mut steps: Vec<(String, f64)> = Vec::new();
+    for (name, eng) in &variants {
+        let stats = bench.run(&format!("search:{name}"), || eng.search(&req).unwrap());
+        let rep = eng.search(&req).unwrap();
+        let best = rep.best().unwrap().cost.step_time;
+        steps.push((name.to_string(), best));
+        t.row(&[
+            name.to_string(),
+            rep.scored.to_string(),
+            format!("{:.4}s", rep.simulate_secs),
+            format!("{:.0}", rep.scored as f64 / rep.simulate_secs),
+            format!("{best:.4}s"),
+        ]);
+        let _ = stats;
+    }
+    std::fs::create_dir_all("bench_out").ok();
+    t.emit("engine comparison", Some(std::path::Path::new("bench_out/ablation_engine.csv")));
+
+    // Parity: native+forest and hlo must agree on the winner's step time.
+    if let (Some((_, a)), Some((_, b))) = (
+        steps.iter().find(|(n, _)| n == "native+forest"),
+        steps.iter().find(|(n, _)| n == "hlo(pallas)"),
+    ) {
+        let rel = (a - b).abs() / a;
+        println!("\nnative↔hlo winner parity: rel diff {rel:.2e}");
+        assert!(rel < 0.02, "engines diverged");
+    }
+    println!("{}", bench.csv());
+}

@@ -1,0 +1,58 @@
+//! Figure 10 (appendix B.4) — memory offloading enabled vs disabled.
+//!
+//! Paper shape: negligible for the small models, increasingly important for
+//! the big ones (offload frees optimizer memory, unlocking better-shaped
+//! strategies that outweigh the PCIe traffic).
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::Table;
+use astra::strategy::SpaceConfig;
+
+fn main() {
+    let fast = std::env::var("ASTRA_BENCH_FAST").as_deref() == Ok("1");
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let with_off = AstraEngine::new(catalog.clone(), EngineConfig::default());
+    let no_off = AstraEngine::new(
+        catalog.clone(),
+        EngineConfig { space: SpaceConfig::no_offload(), ..Default::default() },
+    );
+
+    let counts: &[usize] = if fast { &[64, 256] } else { &[64, 256, 1024] };
+    let models: Vec<&str> = if fast {
+        vec!["llama2-7b", "llama2-70b"]
+    } else {
+        vec!["llama2-7b", "llama2-13b", "llama2-70b", "glm-130b"]
+    };
+
+    let mut t = Table::new(&["Model", "#GPU", "no-offload tokens/s", "offload-allowed tokens/s", "gain"]);
+    for name in &models {
+        let model = registry.get(name).unwrap().clone();
+        for &count in counts {
+            let req = SearchRequest::homogeneous("a800", count, model.clone());
+            let off = with_off
+                .search(&req)
+                .ok()
+                .and_then(|r| r.best().map(|b| b.cost.tokens_per_s))
+                .unwrap_or(0.0);
+            let non = no_off
+                .search(&req)
+                .ok()
+                .and_then(|r| r.best().map(|b| b.cost.tokens_per_s));
+            t.row(&[
+                name.to_string(),
+                count.to_string(),
+                non.map(|v| format!("{v:.0}")).unwrap_or_else(|| "OOM".into()),
+                format!("{off:.0}"),
+                non.map(|v| format!("{:.3}×", off / v)).unwrap_or_else(|| "∞".into()),
+            ]);
+        }
+    }
+    std::fs::create_dir_all("bench_out").ok();
+    t.emit(
+        "Fig. 10 — offload allowed vs disallowed (paper: matters more as models grow)",
+        Some(std::path::Path::new("bench_out/fig10.csv")),
+    );
+}

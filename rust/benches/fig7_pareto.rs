@@ -1,0 +1,59 @@
+//! Figure 7 — the "optimal line": Pareto frontier of throughput vs money.
+//!
+//! Mode-3 sweep over GPU counts and types; prints the frontier (throughput
+//! strictly increasing with cost along the line — the monotone shape the
+//! paper plots) and sample budget selections.
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::pareto::MoneyModel;
+use astra::report::Table;
+use astra::strategy::GpuPoolMode;
+
+fn main() {
+    let fast = std::env::var("ASTRA_BENCH_FAST").as_deref() == Ok("1");
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let engine = AstraEngine::new(
+        catalog.clone(),
+        EngineConfig { money: MoneyModel { train_tokens: 1e9 }, ..Default::default() },
+    );
+
+    // Paper's search pools: H100, A800, H800.
+    let gpus: &[&str] = if fast { &["h100"] } else { &["h100", "a800", "h800"] };
+    let model = registry.get("llama2-7b").unwrap().clone();
+    let max_count = if fast { 128 } else { 1024 };
+
+    for gpu_name in gpus {
+        let gpu = catalog.find(gpu_name).unwrap();
+        let rep = engine
+            .search(&SearchRequest {
+                mode: GpuPoolMode::Cost { gpu, max_count, max_money: f64::INFINITY },
+                model: model.clone(),
+            })
+            .unwrap();
+        let mut t = Table::new(&["tokens/s", "run cost USD"]);
+        for e in rep.pool.entries() {
+            t.row(&[format!("{:.0}", e.throughput), format!("{:.2}", e.cost)]);
+        }
+        std::fs::create_dir_all("bench_out").ok();
+        t.emit(
+            &format!("Fig. 7 — optimal line, llama2-7b on {gpu_name} (≤{max_count} GPUs, 1e9 tokens)"),
+            Some(std::path::Path::new(&format!("bench_out/fig7_{gpu_name}.csv"))),
+        );
+        assert!(rep.pool.is_valid_frontier(), "frontier invariant violated");
+        // Budget sampling: the selection respects Eq. 33.
+        if let (Some(first), Some(last)) = (rep.pool.entries().first(), rep.pool.entries().last()) {
+            for frac in [0.25, 0.5, 1.0] {
+                let budget = last.cost + (first.cost - last.cost) * frac;
+                if let Some(pick) = rep.pool.best_within_budget(budget) {
+                    println!(
+                        "  budget ${budget:.0} → {:.0} tokens/s for ${:.0}",
+                        pick.throughput, pick.cost
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Figure 9 (appendix B.3) — system-scale impact on training efficiency.
+//!
+//! Per-GPU throughput of the searched optimum as the cluster grows with the
+//! model fixed. Paper shape: per-GPU throughput decays with scale, and the
+//! decay is steeper for the bigger models (communication + bubble overheads
+//! overtake compute).
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::Table;
+
+fn main() {
+    let fast = std::env::var("ASTRA_BENCH_FAST").as_deref() == Ok("1");
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let engine = AstraEngine::new(catalog.clone(), EngineConfig::default());
+
+    let counts: &[usize] = if fast { &[64, 256, 1024] } else { &[64, 128, 256, 512, 1024, 4096] };
+    let models: Vec<&str> = if fast {
+        vec!["llama2-7b", "llama2-70b"]
+    } else {
+        vec!["llama2-7b", "llama2-13b", "llama2-70b", "llama3-8b", "llama3-70b", "glm-67b", "glm-130b"]
+    };
+
+    let mut t = Table::new(&["Model", "#GPU", "tokens/s", "tokens/s/GPU", "scaling eff %"]);
+    for name in &models {
+        let model = registry.get(name).unwrap().clone();
+        let mut base_per_gpu: Option<f64> = None;
+        for &count in counts {
+            let Some(best) = engine
+                .search(&SearchRequest::homogeneous("a800", count, model.clone()))
+                .ok()
+                .and_then(|r| r.best().cloned())
+            else {
+                t.row(&[name.to_string(), count.to_string(), "-".into(), "-".into(), "-".into()]);
+                continue;
+            };
+            let per_gpu = best.cost.tokens_per_s / count as f64;
+            let eff = match base_per_gpu {
+                None => {
+                    base_per_gpu = Some(per_gpu);
+                    100.0
+                }
+                Some(b) => 100.0 * per_gpu / b,
+            };
+            t.row(&[
+                name.to_string(),
+                count.to_string(),
+                format!("{:.0}", best.cost.tokens_per_s),
+                format!("{per_gpu:.0}"),
+                format!("{eff:.1}"),
+            ]);
+        }
+    }
+    std::fs::create_dir_all("bench_out").ok();
+    t.emit(
+        "Fig. 9 — per-GPU throughput vs system scale (paper: decays with scale, faster for big models)",
+        Some(std::path::Path::new("bench_out/fig9.csv")),
+    );
+}

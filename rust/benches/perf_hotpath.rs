@@ -1,0 +1,110 @@
+//! Hot-path microbenchmarks — the EXPERIMENTS.md §Perf instrument.
+//!
+//! Measures each pipeline phase in isolation: enumeration, rule filtering,
+//! memory filtering, native cost evaluation, feature packing, forest
+//! inference, Eq. 22 composition, the discrete-event simulator, and the
+//! hetero partition enumerators.
+
+use astra::bench_util::{section, Bench};
+use astra::cost::features::pack_batch;
+use astra::cost::{pipeline_time, CostModel, EtaProvider};
+use astra::gbdt::EtaForests;
+use astra::gpu::GpuCatalog;
+use astra::hetero::HeteroSolver;
+use astra::memory::MemoryModel;
+use astra::model::ModelRegistry;
+use astra::rules::RuleSet;
+use astra::simulator::{PipelineSimulator, SimConfig};
+use astra::strategy::{SearchSpace, SpaceConfig};
+
+fn main() {
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let model = registry.get("llama2-7b").unwrap().clone();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let rules = RuleSet::paper_defaults();
+    let mem = MemoryModel::default();
+    let mut bench = Bench::new();
+
+    section("phase microbenchmarks — llama2-7b @ 64×a800");
+
+    // Enumeration.
+    let stats = bench.run("enumerate 64-gpu space", || {
+        space.homogeneous(&model, &catalog, 1, 64).len()
+    });
+    let strategies = space.homogeneous(&model, &catalog, 1, 64);
+    println!(
+        "  → {} strategies, {:.0} strategies/s",
+        strategies.len(),
+        strategies.len() as f64 / stats.mean_secs()
+    );
+
+    // Rule filtering.
+    let stats = bench.run("rule-filter all", || {
+        strategies.iter().filter(|s| !rules.filters_out(*s).unwrap()).count()
+    });
+    println!("  → {:.0} rule-evals/s", strategies.len() as f64 / stats.mean_secs());
+
+    // Memory filtering.
+    let stats = bench.run("memory-filter all", || {
+        strategies.iter().filter(|s| mem.fits(&model, s, &catalog)).count()
+    });
+    println!("  → {:.0} memory-evals/s", strategies.len() as f64 / stats.mean_secs());
+
+    let valid: Vec<_> = strategies
+        .iter()
+        .filter(|s| !rules.filters_out(*s).unwrap() && mem.fits(&model, s, &catalog))
+        .cloned()
+        .collect();
+    println!("  valid population: {}", valid.len());
+
+    // Native cost evaluation (analytic and forest η).
+    let cost_analytic = CostModel::new(catalog.clone(), EtaProvider::Analytic);
+    let sample: Vec<_> = valid.iter().take(512).collect();
+    let stats = bench.run("cost.evaluate ×512 (analytic η)", || {
+        sample.iter().map(|s| cost_analytic.evaluate(&model, s).step_time).sum::<f64>()
+    });
+    println!("  → {:.0} evals/s", 512.0 / stats.mean_secs());
+
+    if let Ok(f) = EtaForests::from_file(&astra::runtime::artifacts_dir().join("forest.json")) {
+        let cost_forest = CostModel::new(catalog.clone(), EtaProvider::Forests(f));
+        let stats = bench.run("cost.evaluate ×512 (forest η)", || {
+            sample.iter().map(|s| cost_forest.evaluate(&model, s).step_time).sum::<f64>()
+        });
+        println!("  → {:.0} evals/s", 512.0 / stats.mean_secs());
+    }
+
+    // Feature packing (the HLO-engine feed path).
+    let refs: Vec<&astra::strategy::ParallelStrategy> = valid.iter().take(256).collect();
+    bench.run("pack_batch ×256", || pack_batch(&model, &refs, &catalog, 256).batch);
+
+    // Eq. 22 composition alone.
+    let totals: Vec<f64> = (0..64).map(|i| 0.01 + 1e-4 * i as f64).collect();
+    bench.run("pipeline_time (64 stages) ×10k", || {
+        let mut acc = 0.0;
+        for _ in 0..10_000 {
+            acc += pipeline_time(&totals, 128, 1);
+        }
+        acc
+    });
+
+    // Discrete-event simulator.
+    let sim = PipelineSimulator::new(catalog.clone(), SimConfig::default());
+    let s = &valid[0];
+    bench.run("simulator.measure (1 strategy)", || sim.measure(&model, s).step_time);
+
+    // Hetero enumerators.
+    let budgets = HeteroSolver::budgets(
+        &catalog,
+        &[(catalog.find("a800").unwrap(), 96), (catalog.find("h100").unwrap(), 96)],
+        2,
+        4,
+    );
+    let solver = HeteroSolver::default();
+    bench.run("hetero exhaustive (N=32,P=8)", || solver.enumerate_exhaustive(32, 8, &budgets).len());
+    bench.run("hetero pruned (N=32,P=8)", || solver.enumerate_pruned(32, 8, &budgets).len());
+
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/perf_hotpath.csv", bench.csv()).ok();
+    println!("\n(csv: bench_out/perf_hotpath.csv)");
+}

@@ -1,0 +1,205 @@
+//! Benchmark harness substrate (criterion is not available offline).
+//!
+//! Provides warmup + timed iterations with robust statistics (mean, p50,
+//! p95, min) plus ASCII/CSV reporting used by every `rust/benches/*` target.
+//! Benches declare `harness = false` and drive this directly.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one timed measurement.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} iters={:<5} mean={:>12} p50={:>12} p95={:>12} min={:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+        )
+    }
+}
+
+/// Human duration: picks ns/µs/ms/s.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Wall-clock budget for warmup.
+    pub warmup: Duration,
+    /// Wall-clock budget for measurement.
+    pub measure: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    /// Minimum measured iterations (even if over budget).
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // ASTRA_BENCH_FAST=1 slashes budgets for smoke runs / CI.
+        if std::env::var("ASTRA_BENCH_FAST").as_deref() == Ok("1") {
+            BenchConfig {
+                warmup: Duration::from_millis(50),
+                measure: Duration::from_millis(200),
+                max_iters: 30,
+                min_iters: 3,
+            }
+        } else {
+            BenchConfig {
+                warmup: Duration::from_millis(300),
+                measure: Duration::from_secs(2),
+                max_iters: 1000,
+                min_iters: 5,
+            }
+        }
+    }
+}
+
+/// A collection of measurements, printable as a table.
+#[derive(Default)]
+pub struct Bench {
+    pub config: BenchConfig,
+    pub results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench { config: BenchConfig::default(), results: Vec::new() }
+    }
+
+    /// Time `f` (its return value is black-boxed). Returns the stats and
+    /// records them for the final table.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Stats {
+        // Warmup.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.config.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let mstart = Instant::now();
+        while (mstart.elapsed() < self.config.measure && samples.len() < self.config.max_iters)
+            || samples.len() < self.config.min_iters
+        {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean: total / n as u32,
+            p50: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+        };
+        println!("{stats}");
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Time a single invocation (for long end-to-end passes where iterating
+    /// is pointless); still recorded in the table.
+    pub fn run_once<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> (Stats, R) {
+        let t = Instant::now();
+        let out = black_box(f());
+        let d = t.elapsed();
+        let stats =
+            Stats { name: name.to_string(), iters: 1, mean: d, p50: d, p95: d, min: d };
+        println!("{stats}");
+        self.results.push(stats.clone());
+        (stats, out)
+    }
+
+    /// Dump results as CSV (for EXPERIMENTS.md extraction).
+    pub fn csv(&self) -> String {
+        let mut out = String::from("name,iters,mean_s,p50_s,p95_s,min_s\n");
+        for s in &self.results {
+            out.push_str(&format!(
+                "{},{},{:.9},{:.9},{:.9},{:.9}\n",
+                s.name,
+                s.iters,
+                s.mean.as_secs_f64(),
+                s.p50.as_secs_f64(),
+                s.p95.as_secs_f64(),
+                s.min.as_secs_f64()
+            ));
+        }
+        out
+    }
+}
+
+/// Print a bench section header (consistent look across all bench targets).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            config: BenchConfig {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(10),
+                max_iters: 50,
+                min_iters: 3,
+            },
+            results: Vec::new(),
+        };
+        let s = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert!(b.csv().lines().count() == 2);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

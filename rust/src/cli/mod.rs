@@ -1,0 +1,248 @@
+//! Declarative CLI-argument substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args,
+//! subcommands, typed getters with defaults, `--help` generation, and
+//! unknown-flag rejection. Used by the `astra` binary, the examples, and
+//! every bench target (they accept `--fast`, `--csv <path>`, etc.).
+
+use crate::{AstraError, Result};
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative parser builder.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positional: Vec<(String, String)>, // (name, help)
+}
+
+/// Parse result: resolved values.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Declare a boolean flag (`--name`).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Declare a valued option (`--name <v>`), with optional default.
+    pub fn opt(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: default.map(String::from),
+        });
+        self
+    }
+
+    /// Declare a positional argument (documentation only; all positionals
+    /// are collected in order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positional.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p:<18}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            s.push_str(&format!("  {left:<24} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                   print this help\n");
+        s
+    }
+
+    /// Parse from an explicit token list (tests) — `argv` excludes argv[0].
+    pub fn parse_from(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(AstraError::Config(format!("HELP\n{}", self.usage())));
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| AstraError::Config(format!("unknown option --{name}")))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| AstraError::Config(format!("--{name} needs a value")))?,
+                    };
+                    args.values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        return Err(AstraError::Config(format!("--{name} takes no value")));
+                    }
+                    args.flags.insert(name.to_string(), true);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment. On `--help`, prints usage and
+    /// exits 0; on error prints the message and exits 2.
+    pub fn parse(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(AstraError::Config(msg)) if msg.starts_with("HELP\n") => {
+                println!("{}", &msg[5..]);
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("{e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        match self.get(name) {
+            None => Err(AstraError::Config(format!("missing --{name}"))),
+            Some(v) => v
+                .parse()
+                .map_err(|_| AstraError::Config(format!("--{name}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        match self.get(name) {
+            None => Err(AstraError::Config(format!("missing --{name}"))),
+            Some(v) => v
+                .parse()
+                .map_err(|_| AstraError::Config(format!("--{name}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    fn demo() -> Cli {
+        Cli::new("demo", "test tool")
+            .flag("fast", "run fast")
+            .opt("gpus", "gpu count", Some("64"))
+            .opt("model", "model name", None)
+            .positional("cmd", "subcommand")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = demo().parse_from(&toks("search --model llama2-7b")).unwrap();
+        assert_eq!(a.get_usize("gpus").unwrap(), 64);
+        assert_eq!(a.get("model"), Some("llama2-7b"));
+        assert_eq!(a.positionals(), &["search".to_string()]);
+        assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = demo().parse_from(&toks("--gpus=128 --fast")).unwrap();
+        assert_eq!(a.get_usize("gpus").unwrap(), 128);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(demo().parse_from(&toks("--nope")).is_err());
+        assert!(demo().parse_from(&toks("--model")).is_err());
+        assert!(demo().parse_from(&toks("--fast=1")).is_err());
+    }
+
+    #[test]
+    fn help_is_error_variant() {
+        let err = demo().parse_from(&toks("--help")).unwrap_err();
+        match err {
+            AstraError::Config(m) => assert!(m.contains("USAGE")),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = demo().parse_from(&toks("--gpus abc")).unwrap();
+        assert!(a.get_usize("gpus").is_err());
+    }
+}

@@ -1,0 +1,516 @@
+//! The Astra engine — Layer-3 coordinator tying the whole pipeline together
+//! (paper Fig. 2): input preprocess → search-space generation → rule filter
+//! → memory filter → cost simulation → selection (throughput or money).
+//!
+//! Scoring runs on one of two engines with identical math:
+//!
+//! * `native` — the pure-rust [`CostModel`] (η from GBDT forests when
+//!   `artifacts/forest.json` exists, hardware-truth curves otherwise);
+//! * `hlo` — the AOT-compiled Layer-2 scorer executed through PJRT
+//!   ([`crate::runtime::ScorerRuntime`]), exercising the Pallas kernels.
+//!
+//! Search is fanned out over a scoped thread pool; the per-phase wall times
+//! reported in [`SearchReport`] correspond to Table 1's "Search Time" and
+//! "Simulation Time" columns.
+
+use crate::cost::features::{pack_batch, OUT};
+use crate::cost::{CostBreakdown, CostModel, EtaProvider};
+use crate::gbdt::EtaForests;
+use crate::gpu::GpuCatalog;
+use crate::hetero::HeteroSolver;
+use crate::memory::MemoryModel;
+use crate::model::ModelSpec;
+use crate::pareto::{MoneyModel, OptimalPool, PoolEntry};
+use crate::pool::{default_workers, par_for_indices, par_map_chunks};
+use crate::rules::RuleSet;
+use crate::runtime::ScorerRuntime;
+use crate::strategy::{GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};
+use crate::{AstraError, Result};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Which scorer executes the cost simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoringEngine {
+    Native,
+    Hlo,
+}
+
+/// Engine configuration.
+pub struct EngineConfig {
+    pub space: SpaceConfig,
+    pub rules: RuleSet,
+    pub engine: ScoringEngine,
+    /// Use GBDT forests for η when available (`artifacts/forest.json`).
+    pub use_forests: bool,
+    pub workers: usize,
+    pub money: MoneyModel,
+    /// Exhaustive Eq. 23 layer enumeration instead of the pruned solver.
+    pub hetero_exhaustive: bool,
+    /// Keep this many best strategies in the report.
+    pub top_k: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            space: SpaceConfig::default(),
+            rules: RuleSet::paper_defaults(),
+            engine: ScoringEngine::Native,
+            use_forests: true,
+            workers: default_workers(),
+            money: MoneyModel::default(),
+            hetero_exhaustive: false,
+            top_k: 16,
+        }
+    }
+}
+
+/// A search request: model + GPU-pool mode (§3.2 input integration, Eq. 7).
+#[derive(Debug, Clone)]
+pub struct SearchRequest {
+    pub mode: GpuPoolMode,
+    pub model: ModelSpec,
+}
+
+impl SearchRequest {
+    pub fn homogeneous(gpu_name: &str, count: usize, model: ModelSpec) -> SearchRequest {
+        let catalog = GpuCatalog::builtin();
+        let gpu = catalog.find(gpu_name).expect("unknown gpu");
+        SearchRequest { mode: GpuPoolMode::Homogeneous { gpu, count }, model }
+    }
+}
+
+/// One scored strategy.
+#[derive(Debug, Clone)]
+pub struct ScoredStrategy {
+    pub strategy: ParallelStrategy,
+    pub cost: CostBreakdown,
+    pub money_usd: f64,
+}
+
+impl ScoredStrategy {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} | step={:.4}s tput={:.0} tok/s mfu={:.3} ${:.0}",
+            self.strategy.summary(),
+            self.cost.step_time,
+            self.cost.tokens_per_s,
+            self.cost.mfu,
+            self.money_usd
+        )
+    }
+}
+
+/// Search outcome + phase accounting (Table 1 columns).
+pub struct SearchReport {
+    /// Raw search-space size |S| (Eq. 9).
+    pub generated: usize,
+    pub rule_filtered: usize,
+    pub mem_filtered: usize,
+    pub scored: usize,
+    /// Generation + filtering wall time ("Search Time").
+    pub search_secs: f64,
+    /// Scoring wall time ("Simulation Time").
+    pub simulate_secs: f64,
+    /// Best strategies, ascending step time.
+    pub top: Vec<ScoredStrategy>,
+    /// Pareto pool over (throughput, money) — all scored candidates.
+    pub pool: OptimalPool,
+}
+
+impl SearchReport {
+    pub fn best(&self) -> Option<&ScoredStrategy> {
+        self.top.first()
+    }
+
+    pub fn e2e_secs(&self) -> f64 {
+        self.search_secs + self.simulate_secs
+    }
+}
+
+/// The engine.
+pub struct AstraEngine {
+    pub catalog: GpuCatalog,
+    pub config: EngineConfig,
+    cost: CostModel,
+    runtime: Option<Mutex<ScorerRuntime>>,
+}
+
+impl AstraEngine {
+    /// Build an engine; loads `artifacts/forest.json` (η forests) and — for
+    /// the HLO engine — `artifacts/scorer.hlo.txt`.
+    pub fn new(catalog: GpuCatalog, config: EngineConfig) -> Self {
+        let dir = crate::runtime::artifacts_dir();
+        let eta = if config.use_forests {
+            match EtaForests::from_file(&dir.join("forest.json")) {
+                Ok(f) => {
+                    crate::log_info!("η source: GBDT forests ({} + {} trees)",
+                        f.comp.trees.len(), f.comm.trees.len());
+                    EtaProvider::Forests(f)
+                }
+                Err(e) => {
+                    crate::log_warn!("forest.json unavailable ({e}); falling back to analytic η");
+                    EtaProvider::Analytic
+                }
+            }
+        } else {
+            EtaProvider::Analytic
+        };
+        let runtime = if config.engine == ScoringEngine::Hlo {
+            match ScorerRuntime::load(&dir) {
+                Ok(rt) => Some(Mutex::new(rt)),
+                Err(e) => {
+                    crate::log_warn!("HLO scorer unavailable ({e}); using native engine");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let cost = CostModel::new(catalog.clone(), eta);
+        AstraEngine { catalog, config, cost, runtime }
+    }
+
+    /// Immutable access to the underlying cost model (tests/benches).
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// Whether the HLO engine is actually live.
+    pub fn hlo_active(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Run a search request (mode dispatch).
+    pub fn search(&self, req: &SearchRequest) -> Result<SearchReport> {
+        match &req.mode {
+            GpuPoolMode::Homogeneous { gpu, count } => {
+                self.search_homogeneous(&req.model, *gpu, *count)
+            }
+            GpuPoolMode::Heterogeneous { total, caps } => {
+                self.search_heterogeneous(&req.model, *total, caps)
+            }
+            GpuPoolMode::Cost { gpu, max_count, max_money } => {
+                self.search_cost(&req.model, *gpu, *max_count, *max_money)
+            }
+        }
+    }
+
+    /// Mode 1 (Eq. 1).
+    pub fn search_homogeneous(
+        &self,
+        model: &ModelSpec,
+        gpu: crate::gpu::GpuType,
+        count: usize,
+    ) -> Result<SearchReport> {
+        let t0 = Instant::now();
+        let space = SearchSpace::new(self.config.space.clone());
+        let generated = space.homogeneous(model, &self.catalog, gpu, count);
+        self.filter_and_score(model, generated, t0)
+    }
+
+    /// Mode 2 (Eq. 2): heterogeneous pipeline partition search (§3.4).
+    pub fn search_heterogeneous(
+        &self,
+        model: &ModelSpec,
+        total: usize,
+        caps: &[(crate::gpu::GpuType, usize)],
+    ) -> Result<SearchReport> {
+        let t0 = Instant::now();
+        if caps.iter().map(|&(_, l)| l).sum::<usize>() < total {
+            return Err(AstraError::Config(format!(
+                "type caps sum below cluster size {total}"
+            )));
+        }
+        let space = SearchSpace::new(SpaceConfig {
+            // Interleaving over heterogeneous segments is not supported by
+            // the Megatron runtime; fix vpp=1 (DESIGN.md §6).
+            vpp_candidates: vec![1],
+            ..self.config.space.clone()
+        });
+        let solver = HeteroSolver::default();
+        let mut generated: Vec<ParallelStrategy> = Vec::new();
+        for tp in space.valid_tps(model, &self.catalog) {
+            for pp in 2..=space.config.max_pp.min(model.layers).min(total / tp) {
+                if total % (tp * pp) != 0 {
+                    continue;
+                }
+                let dp = total / (tp * pp);
+                let budgets = HeteroSolver::budgets(&self.catalog, caps, tp, dp);
+                if budgets.iter().map(|b| b.max_stages).sum::<usize>() < pp {
+                    continue;
+                }
+                let assignments = if self.config.hetero_exhaustive {
+                    solver.enumerate_exhaustive(model.layers, pp, &budgets)
+                } else {
+                    solver.enumerate_pruned(model.layers, pp, &budgets)
+                };
+                for ca in assignments {
+                    space.expand_params(model, &ca, tp, dp, &mut generated);
+                }
+            }
+        }
+        self.filter_and_score(model, generated, t0)
+    }
+
+    /// Mode 3 (Eq. 3): sweep GPU counts, Pareto-pool everything, pick the
+    /// fastest plan under the money ceiling (§3.6).
+    pub fn search_cost(
+        &self,
+        model: &ModelSpec,
+        gpu: crate::gpu::GpuType,
+        max_count: usize,
+        max_money: f64,
+    ) -> Result<SearchReport> {
+        let t0 = Instant::now();
+        let space = SearchSpace::new(self.config.space.clone());
+        let mut generated: Vec<ParallelStrategy> = Vec::new();
+        for count in SearchSpace::count_sweep(max_count) {
+            generated.extend(space.homogeneous(model, &self.catalog, gpu, count));
+        }
+        let mut report = self.filter_and_score(model, generated, t0)?;
+        // Mode-3 selection: fastest within budget from the optimal pool.
+        if let Some(best) = report.pool.best_within_budget(max_money) {
+            let chosen = report
+                .top
+                .iter()
+                .position(|s| (s.money_usd - best.cost).abs() < 1e-9
+                    && (s.cost.tokens_per_s - best.throughput).abs() < 1e-6);
+            if let Some(pos) = chosen {
+                report.top.swap(0, pos);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Shared tail: rules → memory → scoring → ranking.
+    fn filter_and_score(
+        &self,
+        model: &ModelSpec,
+        generated: Vec<ParallelStrategy>,
+        t0: Instant,
+    ) -> Result<SearchReport> {
+        let n_generated = generated.len();
+        let workers = self.config.workers;
+
+        // --- rule filter (Eq. 10) ---
+        let rules = &self.config.rules;
+        let rule_keep: Vec<bool> = par_map_chunks(&generated, workers, |_, chunk| {
+            chunk.iter().map(|s| !rules.filters_out(s).unwrap_or(true)).collect()
+        });
+        let after_rules: Vec<ParallelStrategy> = generated
+            .into_iter()
+            .zip(&rule_keep)
+            .filter_map(|(s, &keep)| keep.then_some(s))
+            .collect();
+        let rule_filtered = n_generated - after_rules.len();
+
+        // --- memory filter (Eq. 20/21) ---
+        let mem = MemoryModel::default();
+        let catalog = &self.catalog;
+        let mem_keep: Vec<bool> = par_map_chunks(&after_rules, workers, |_, chunk| {
+            chunk.iter().map(|s| mem.fits(model, s, catalog)).collect()
+        });
+        let valid: Vec<ParallelStrategy> = after_rules
+            .into_iter()
+            .zip(&mem_keep)
+            .filter_map(|(s, &keep)| keep.then_some(s))
+            .collect();
+        let mem_filtered = n_generated - rule_filtered - valid.len();
+        let search_secs = t0.elapsed().as_secs_f64();
+
+        // --- cost simulation (§3.5) ---
+        let t1 = Instant::now();
+        let costs: Vec<CostBreakdown> = match (&self.runtime, self.config.engine) {
+            (Some(rt), ScoringEngine::Hlo) => self.score_hlo(model, &valid, rt)?,
+            _ => {
+                // Capture only the Sync cost model, not &self (the PJRT
+                // runtime handle is intentionally thread-confined). Each
+                // chunk scores through a memoized batch — strategies share
+                // stage profiles massively (§Perf).
+                let cost = &self.cost;
+                par_map_chunks(&valid, workers, |_, chunk| {
+                    let refs: Vec<&ParallelStrategy> = chunk.iter().collect();
+                    cost.evaluate_batch(model, &refs)
+                })
+            }
+        };
+        let simulate_secs = t1.elapsed().as_secs_f64();
+
+        // --- selection ---
+        let money = &self.config.money;
+        let mut scored: Vec<ScoredStrategy> = valid
+            .into_iter()
+            .zip(costs)
+            .map(|(strategy, cost)| {
+                let money_usd = money.cost_usd(model, &strategy, catalog, cost.step_time);
+                ScoredStrategy { strategy, cost, money_usd }
+            })
+            .collect();
+        let pool = OptimalPool::build(
+            scored
+                .iter()
+                .enumerate()
+                .map(|(idx, s)| PoolEntry {
+                    idx,
+                    throughput: s.cost.tokens_per_s,
+                    cost: s.money_usd,
+                })
+                .collect(),
+        );
+        let n_scored = scored.len();
+        scored.sort_by(|a, b| a.cost.step_time.partial_cmp(&b.cost.step_time).unwrap());
+        scored.truncate(self.config.top_k);
+
+        Ok(SearchReport {
+            generated: n_generated,
+            rule_filtered,
+            mem_filtered,
+            scored: n_scored,
+            search_secs,
+            simulate_secs,
+            top: scored,
+            pool,
+        })
+    }
+
+    /// Score through the PJRT executable, chunked to the artifact's batch.
+    fn score_hlo(
+        &self,
+        model: &ModelSpec,
+        valid: &[ParallelStrategy],
+        rt: &Mutex<ScorerRuntime>,
+    ) -> Result<Vec<CostBreakdown>> {
+        let batch = rt.lock().unwrap().batch;
+        let n_chunks = valid.len().div_ceil(batch.max(1));
+        let chunks: Vec<&[ParallelStrategy]> = valid.chunks(batch).collect();
+        // PJRT executables are not Sync-safe to share blindly; packing is
+        // parallel, execution serialized through the mutex.
+        let catalog = &self.catalog;
+        let packed = par_for_indices(n_chunks, self.config.workers, |i| {
+            let refs: Vec<&ParallelStrategy> = chunks[i].iter().collect();
+            pack_batch(model, &refs, catalog, batch)
+        });
+        let mut out = Vec::with_capacity(valid.len());
+        for (i, pb) in packed.iter().enumerate() {
+            let rows: Vec<[f32; OUT]> = rt
+                .lock()
+                .unwrap()
+                .execute(&pb.stage_feats, &pb.stage_mask, &pb.strat_feats)?;
+            for (j, s) in chunks[i].iter().enumerate() {
+                let r = rows[j];
+                let step_time = r[0] as f64;
+                let tokens = (s.global_batch * model.seq_len) as f64;
+                out.push(CostBreakdown {
+                    stage_times: Vec::new(),
+                    pipeline_fwd: 0.0,
+                    pipeline_bwd: r[1] as f64,
+                    dp_time: r[2] as f64,
+                    optimizer_time: r[3] as f64,
+                    offload_time: 0.0,
+                    step_time,
+                    tokens_per_s: tokens / step_time,
+                    mfu: 0.0,
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelRegistry;
+
+    fn engine() -> AstraEngine {
+        AstraEngine::new(
+            GpuCatalog::builtin(),
+            EngineConfig { use_forests: false, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn homogeneous_search_finds_valid_best() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let req = SearchRequest::homogeneous("a800", 64, model.clone());
+        let report = engine().search(&req).unwrap();
+        assert!(report.generated > 1000);
+        assert!(report.scored > 0);
+        assert_eq!(report.generated, report.rule_filtered + report.mem_filtered + report.scored);
+        let best = report.best().unwrap();
+        best.strategy.validate(&model).unwrap();
+        assert!(best.cost.tokens_per_s > 0.0);
+        // Best-first ordering.
+        for w in report.top.windows(2) {
+            assert!(w[0].cost.step_time <= w[1].cost.step_time);
+        }
+    }
+
+    #[test]
+    fn filters_actually_fire() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-70b").unwrap().clone();
+        let req = SearchRequest::homogeneous("a800", 64, model);
+        let report = engine().search(&req).unwrap();
+        assert!(report.rule_filtered > 0, "rule filter idle");
+        assert!(report.mem_filtered > 0, "memory filter idle (70B must OOM somewhere)");
+    }
+
+    #[test]
+    fn cost_mode_respects_budget() {
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let gpu = cat.find("h100").unwrap();
+        let eng = engine();
+        let rep = eng
+            .search(&SearchRequest {
+                mode: GpuPoolMode::Cost { gpu, max_count: 64, max_money: f64::INFINITY },
+                model: model.clone(),
+            })
+            .unwrap();
+        assert!(!rep.pool.is_empty());
+        assert!(rep.pool.is_valid_frontier());
+        // A tight budget must select a cheaper (≤) plan than an infinite one.
+        let cheap = rep.pool.entries().last().unwrap().cost * 1.01;
+        let pick = rep.pool.best_within_budget(cheap).unwrap();
+        assert!(pick.cost <= cheap);
+    }
+
+    #[test]
+    fn hetero_search_produces_mixed_assignments() {
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let caps = vec![(cat.find("a800").unwrap(), 48), (cat.find("h100").unwrap(), 48)];
+        let eng = engine();
+        let rep = eng
+            .search(&SearchRequest {
+                mode: GpuPoolMode::Heterogeneous { total: 64, caps },
+                model,
+            })
+            .unwrap();
+        assert!(rep.scored > 0, "no valid hetero strategies");
+        // The pool contains at least one genuinely mixed assignment.
+        assert!(rep.top.iter().any(|s| s.strategy.cluster.is_heterogeneous()));
+    }
+
+    #[test]
+    fn best_beats_median_noticeably() {
+        // Search must actually discriminate: best ≥ 1.5× median throughput.
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-13b").unwrap().clone();
+        let eng = AstraEngine::new(
+            GpuCatalog::builtin(),
+            EngineConfig { use_forests: false, top_k: usize::MAX, ..Default::default() },
+        );
+        let rep = eng.search(&SearchRequest::homogeneous("a800", 128, model)).unwrap();
+        let tputs: Vec<f64> = rep.top.iter().map(|s| s.cost.tokens_per_s).collect();
+        let best = tputs[0];
+        let median = tputs[tputs.len() / 2];
+        assert!(best > 1.1 * median, "best {best:.0} vs median {median:.0}");
+    }
+}

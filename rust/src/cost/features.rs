@@ -1,0 +1,257 @@
+//! Feature packing for the AOT scorer (the Layer-2/Layer-1 contract).
+//!
+//! The HLO scorer (`python/compile/model.py`, lowered to
+//! `artifacts/scorer.hlo.txt`) consumes three tensors per batch:
+//!
+//! * `stage_feats f32[B, PMAX, FS]` — per-(strategy, stage) rows,
+//! * `stage_mask  f32[B, PMAX]`     — 1.0 for real stages,
+//! * `strat_feats f32[B, FG]`       — per-strategy rows,
+//!
+//! and returns `f32[B, 4] = [step_time, pipeline_time, dp_time,
+//! opt+offload_time]`. The layout constants below are the single source of
+//! truth — `python/compile/model.py` mirrors the indices and
+//! `artifacts/scorer_meta.json` pins them at AOT time (checked on load).
+
+use crate::gpu::GpuCatalog;
+use crate::model::ModelSpec;
+use crate::strategy::{ParallelStrategy, Recompute};
+
+/// Per-stage feature width.
+pub const FS: usize = 29;
+/// Per-strategy feature width.
+pub const FG: usize = 8;
+/// Maximum pipeline depth the scorer supports.
+pub const PMAX: usize = 64;
+/// Scorer outputs per strategy.
+pub const OUT: usize = 4;
+
+// stage_feats indices
+pub const SF_PEAK_TFLOPS: usize = 0;
+pub const SF_HBM_GBS: usize = 1;
+pub const SF_UTIL_MAX: usize = 2;
+pub const SF_COMM_EFF_MAX: usize = 3;
+pub const SF_TP_BW_GBS: usize = 4;
+pub const SF_P2P_BW_GBS: usize = 5;
+pub const SF_LAYERS: usize = 6;
+pub const SF_IS_LAST: usize = 7;
+pub const SF_TP: usize = 8;
+pub const SF_MBS: usize = 9;
+pub const SF_SEQ: usize = 10;
+pub const SF_HIDDEN: usize = 11;
+pub const SF_FFN: usize = 12;
+pub const SF_KV_FRAC: usize = 13;
+pub const SF_HEADS: usize = 14;
+pub const SF_VOCAB: usize = 15;
+pub const SF_GATED: usize = 16;
+pub const SF_FLASH: usize = 17;
+pub const SF_RC_GRAN: usize = 18;
+pub const SF_RC_FRAC: usize = 19;
+pub const SF_TP_OVERLAP: usize = 20;
+pub const SF_P2P_OVERLAP: usize = 21;
+pub const SF_PARAMS_M: usize = 22;
+pub const SF_DP_BW_GBS: usize = 23;
+pub const SF_PCIE_GBS: usize = 24;
+pub const SF_N_EXPERTS: usize = 25;
+pub const SF_MOE_TOPK: usize = 26;
+pub const SF_EP: usize = 27;
+pub const SF_EP_BW_GBS: usize = 28;
+
+// strat_feats indices
+pub const GF_K: usize = 0;
+pub const GF_VPP: usize = 1;
+pub const GF_DP: usize = 2;
+pub const GF_OVERLAP_GRAD: usize = 3;
+pub const GF_OVERLAP_PARAM: usize = 4;
+pub const GF_DIST_OPT: usize = 5;
+pub const GF_OFFLOAD: usize = 6;
+pub const GF_SEQ_PARALLEL: usize = 7;
+
+/// Pack one stage row. Mirrors `python/compile/model.py::pack conventions`.
+pub fn pack_stage(
+    m: &ModelSpec,
+    s: &ParallelStrategy,
+    stage: usize,
+    catalog: &GpuCatalog,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), FS);
+    let gpu = s.cluster.gpu_of_stage(stage);
+    let spec = catalog.spec(gpu);
+    let is_last = stage == s.pp() - 1;
+
+    out[SF_PEAK_TFLOPS] = spec.peak_tflops_bf16 as f32;
+    out[SF_HBM_GBS] = spec.hbm_gbs as f32;
+    out[SF_UTIL_MAX] = spec.eff.util_max as f32;
+    out[SF_COMM_EFF_MAX] = spec.eff.comm_eff_max as f32;
+    out[SF_TP_BW_GBS] =
+        if s.tp > 1 { catalog.group_bandwidth_gbs(gpu, s.tp) as f32 } else { 0.0 };
+    out[SF_P2P_BW_GBS] = if is_last {
+        0.0
+    } else {
+        let next = catalog.spec(s.cluster.gpu_of_stage(stage + 1));
+        let span = s.tp * s.dp;
+        let bw = if span < catalog.gpus_per_node {
+            spec.nvlink_gbs.min(next.nvlink_gbs)
+        } else {
+            spec.internode_gbs.min(next.internode_gbs)
+        };
+        bw as f32
+    };
+    out[SF_LAYERS] = s.cluster.layers_of_stage(stage) as f32;
+    out[SF_IS_LAST] = is_last as u8 as f32;
+    out[SF_TP] = s.tp as f32;
+    out[SF_MBS] = s.micro_batch as f32;
+    out[SF_SEQ] = m.seq_len as f32;
+    out[SF_HIDDEN] = m.hidden as f32;
+    out[SF_FFN] = m.ffn as f32;
+    out[SF_KV_FRAC] = (m.kv_heads as f64 / m.heads as f64) as f32;
+    out[SF_HEADS] = m.heads as f32;
+    out[SF_VOCAB] = m.vocab as f32;
+    out[SF_GATED] = m.gated_mlp() as u8 as f32;
+    out[SF_FLASH] = s.use_flash_attn as u8 as f32;
+    out[SF_RC_GRAN] = match s.recompute {
+        Recompute::None => 0.0,
+        Recompute::Selective => 1.0,
+        Recompute::Full => 2.0,
+    };
+    out[SF_RC_FRAC] = if s.recompute == Recompute::Full {
+        let layers = s.cluster.layers_of_stage(stage) as f64;
+        ((s.recompute_num_layers as f64).min(layers) / layers.max(1.0)) as f32
+    } else {
+        0.0
+    };
+    out[SF_TP_OVERLAP] = s.tp_comm_overlap as u8 as f32;
+    out[SF_P2P_OVERLAP] = s.overlap_p2p as u8 as f32;
+    out[SF_PARAMS_M] =
+        (crate::memory::MemoryModel::default().stage_params(m, s, stage) / 1e6) as f32;
+    out[SF_DP_BW_GBS] = catalog.group_bandwidth_gbs(gpu, s.tp * s.dp) as f32;
+    out[SF_PCIE_GBS] = spec.pcie_gbs as f32;
+    out[SF_N_EXPERTS] = m.num_experts as f32;
+    out[SF_MOE_TOPK] = m.moe_topk as f32;
+    out[SF_EP] = s.ep as f32;
+    out[SF_EP_BW_GBS] = catalog.group_bandwidth_gbs(gpu, s.tp * s.ep) as f32;
+}
+
+/// Pack one strategy row.
+pub fn pack_strategy(s: &ParallelStrategy, out: &mut [f32]) {
+    assert_eq!(out.len(), FG);
+    out[GF_K] = s.num_microbatches() as f32;
+    out[GF_VPP] = s.vpp as f32;
+    out[GF_DP] = s.dp as f32;
+    out[GF_OVERLAP_GRAD] = s.overlap_grad_reduce as u8 as f32;
+    out[GF_OVERLAP_PARAM] = s.overlap_param_gather as u8 as f32;
+    out[GF_DIST_OPT] = s.use_distributed_optimizer as u8 as f32;
+    out[GF_OFFLOAD] = s.offload_optimizer as u8 as f32;
+    out[GF_SEQ_PARALLEL] = s.sequence_parallel as u8 as f32;
+}
+
+/// Pack a batch of strategies into the three scorer tensors, padding to
+/// (`batch`, [`PMAX`]). Strategies deeper than `PMAX` are a caller error
+/// (the generator caps `max_pp` at `PMAX`).
+pub struct PackedBatch {
+    pub stage_feats: Vec<f32>,
+    pub stage_mask: Vec<f32>,
+    pub strat_feats: Vec<f32>,
+    pub batch: usize,
+}
+
+pub fn pack_batch(
+    m: &ModelSpec,
+    strategies: &[&ParallelStrategy],
+    catalog: &GpuCatalog,
+    batch: usize,
+) -> PackedBatch {
+    assert!(strategies.len() <= batch);
+    let mut stage_feats = vec![0.0f32; batch * PMAX * FS];
+    let mut stage_mask = vec![0.0f32; batch * PMAX];
+    let mut strat_feats = vec![0.0f32; batch * FG];
+    for (bi, s) in strategies.iter().enumerate() {
+        let pp = s.pp();
+        assert!(pp <= PMAX, "pp {pp} exceeds scorer PMAX {PMAX}");
+        for stage in 0..pp {
+            let off = (bi * PMAX + stage) * FS;
+            pack_stage(m, s, stage, catalog, &mut stage_feats[off..off + FS]);
+            stage_mask[bi * PMAX + stage] = 1.0;
+        }
+        pack_strategy(s, &mut strat_feats[bi * FG..(bi + 1) * FG]);
+    }
+    // Padded rows keep K=1 etc. harmless defaults.
+    for bi in strategies.len()..batch {
+        strat_feats[bi * FG + GF_K] = 1.0;
+        strat_feats[bi * FG + GF_VPP] = 1.0;
+        strat_feats[bi * FG + GF_DP] = 1.0;
+    }
+    PackedBatch { stage_feats, stage_mask, strat_feats, batch }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelRegistry;
+    use crate::strategy::{ClusterAssignment, RecomputeMethod};
+
+    fn strat(m: &ModelSpec, tp: usize, pp: usize, dp: usize) -> ParallelStrategy {
+        ParallelStrategy {
+            cluster: ClusterAssignment::homogeneous(1, pp, m.layers / pp),
+            tp,
+            dp,
+            micro_batch: 2,
+            global_batch: m.global_batch,
+            vpp: 1,
+            sequence_parallel: tp > 1,
+            use_distributed_optimizer: true,
+            recompute: Recompute::None,
+            recompute_method: RecomputeMethod::Uniform,
+            recompute_num_layers: 0,
+            offload_optimizer: false,
+            overlap_grad_reduce: true,
+            overlap_param_gather: true,
+            overlap_p2p: true,
+            tp_comm_overlap: true,
+            use_flash_attn: true,
+            ep: 1,
+        }
+    }
+
+    #[test]
+    fn pack_shapes_and_mask() {
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let s1 = strat(m, 2, 4, 8);
+        let s2 = strat(m, 4, 2, 8);
+        let pb = pack_batch(m, &[&s1, &s2], &cat, 4);
+        assert_eq!(pb.stage_feats.len(), 4 * PMAX * FS);
+        assert_eq!(pb.stage_mask.len(), 4 * PMAX);
+        assert_eq!(pb.strat_feats.len(), 4 * FG);
+        // s1 has 4 live stages, s2 has 2, padding rows none.
+        let live: f32 = pb.stage_mask.iter().sum();
+        assert_eq!(live, 6.0);
+        // Padded strategies keep K/vpp/dp = 1.
+        assert_eq!(pb.strat_feats[3 * FG + GF_K], 1.0);
+    }
+
+    #[test]
+    fn last_stage_flagged_once() {
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let s = strat(m, 2, 4, 8);
+        let pb = pack_batch(m, &[&s], &cat, 1);
+        let lasts: f32 = (0..PMAX).map(|p| pb.stage_feats[p * FS + SF_IS_LAST]).sum();
+        assert_eq!(lasts, 1.0);
+        assert_eq!(pb.stage_feats[3 * FS + SF_IS_LAST], 1.0);
+        // Last stage has no p2p bandwidth.
+        assert_eq!(pb.stage_feats[3 * FS + SF_P2P_BW_GBS], 0.0);
+        assert!(pb.stage_feats[0 * FS + SF_P2P_BW_GBS] > 0.0);
+    }
+
+    #[test]
+    fn feature_widths_locked() {
+        // The python side hardcodes these; changing them must be deliberate.
+        assert_eq!(FS, 29);
+        assert_eq!(FG, 8);
+        assert_eq!(PMAX, 64);
+        assert_eq!(OUT, 4);
+    }
+}

@@ -1,0 +1,305 @@
+//! Operator census: the per-stage list of computation and communication
+//! operators a strategy executes, with their analytic workloads θ (Eq. 25/26
+//! numerators). This is the "analytical, not database-lookup" operator
+//! model the paper highlights — it adapts to any architecture parsed from
+//! [`crate::model::ModelSpec`].
+//!
+//! The same census (shape classes and counts) is re-implemented in the
+//! Layer-2 JAX graph (`python/compile/model.py`); the two are parity-tested
+//! through the HLO scorer.
+
+use crate::model::ModelSpec;
+use crate::strategy::ParallelStrategy;
+
+/// One computation operator's workload descriptor (per GPU, per microbatch).
+#[derive(Debug, Clone, Copy)]
+pub struct OpShape {
+    /// FLOPs of the op.
+    pub flops: f64,
+    /// Smallest GEMM dimension (drives tile efficiency).
+    pub min_dim: f64,
+    /// Bytes touched (drives the roofline clamp).
+    pub bytes: f64,
+}
+
+impl OpShape {
+    pub fn gemm(m: f64, n: f64, k: f64) -> OpShape {
+        OpShape {
+            flops: 2.0 * m * n * k,
+            min_dim: m.min(n).min(k),
+            bytes: 2.0 * (m * k + k * n + m * n),
+        }
+    }
+
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes.max(1.0)
+    }
+}
+
+/// A computation op plus how many times it runs in the stage's forward pass.
+#[derive(Debug, Clone, Copy)]
+pub struct CountedOp {
+    pub shape: OpShape,
+    pub count: f64,
+    /// Tag for debugging/reporting.
+    pub kind: OpKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    QkvProj,
+    AttnScore,
+    AttnContext,
+    AttnFused,
+    OutProj,
+    MlpUp,
+    MlpDown,
+    LmHead,
+}
+
+/// Forward computation census of one pipeline stage (per microbatch).
+/// Counts already include the stage's layer count.
+pub fn stage_fwd_ops(m: &ModelSpec, s: &ParallelStrategy, stage: usize) -> Vec<CountedOp> {
+    let layers = s.cluster.layers_of_stage(stage) as f64;
+    let b = s.micro_batch as f64;
+    let seq = m.seq_len as f64;
+    let h = m.hidden as f64;
+    let t = s.tp as f64;
+    let heads = m.heads as f64;
+    let head_dim = h / heads;
+    let kvf = m.kv_heads as f64 / heads;
+    let ffn = m.ffn as f64;
+    let gate = if m.gated_mlp() { 2.0 } else { 1.0 };
+    let mb = b * seq; // token rows in the microbatch
+    // MoE: each token visits top-k experts → k MLP GEMM passes per layer.
+    let mlp_passes = m.active_mlp_factor();
+
+    let mut ops = Vec::with_capacity(8);
+    // Fused QKV projection: [mb, h] × [h, (1+2·kvf)·h / t]
+    ops.push(CountedOp {
+        shape: OpShape::gemm(mb, (1.0 + 2.0 * kvf) * h / t, h),
+        count: layers,
+        kind: OpKind::QkvProj,
+    });
+    if s.use_flash_attn {
+        // Flash attention: scores+softmax+context fused; same FLOPs, but IO
+        // is only the QKV/output tiles (no s×s materialization).
+        let flops = 2.0 * 2.0 * b * seq * seq * h / t;
+        let bytes = 2.0 * 4.0 * mb * h / t; // q,k,v,o tiles
+        ops.push(CountedOp {
+            shape: OpShape { flops, min_dim: head_dim.min(seq), bytes },
+            count: layers,
+            kind: OpKind::AttnFused,
+        });
+    } else {
+        // Unfused: score GEMM then context GEMM, s×s materialized per head.
+        let score_bytes = 2.0 * (b * heads / t) * (2.0 * seq * head_dim + seq * seq);
+        ops.push(CountedOp {
+            shape: OpShape {
+                flops: 2.0 * b * seq * seq * h / t,
+                min_dim: head_dim.min(seq),
+                bytes: score_bytes,
+            },
+            count: layers,
+            kind: OpKind::AttnScore,
+        });
+        ops.push(CountedOp {
+            shape: OpShape {
+                flops: 2.0 * b * seq * seq * h / t,
+                min_dim: head_dim.min(seq),
+                bytes: score_bytes,
+            },
+            count: layers,
+            kind: OpKind::AttnContext,
+        });
+    }
+    // Output projection: [mb, h/t] × [h/t, h]
+    ops.push(CountedOp {
+        shape: OpShape::gemm(mb, h, h / t),
+        count: layers,
+        kind: OpKind::OutProj,
+    });
+    // MLP up (+gate): [mb, h] × [h, gate·ffn/t] — ×top-k for MoE.
+    ops.push(CountedOp {
+        shape: OpShape::gemm(mb, gate * ffn / t, h),
+        count: layers * mlp_passes,
+        kind: OpKind::MlpUp,
+    });
+    // MLP down: [mb, ffn/t] × [ffn/t, h] — ×top-k for MoE.
+    ops.push(CountedOp {
+        shape: OpShape::gemm(mb, h, ffn / t),
+        count: layers * mlp_passes,
+        kind: OpKind::MlpDown,
+    });
+    // LM head on the last stage: [mb, h] × [h, vocab/t]
+    if stage == s.pp() - 1 {
+        ops.push(CountedOp {
+            shape: OpShape::gemm(mb, m.vocab as f64 / t, h),
+            count: 1.0,
+            kind: OpKind::LmHead,
+        });
+    }
+    ops
+}
+
+/// Communication workloads of one stage (per microbatch, per direction).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageComm {
+    /// Per-rank ring volume of all TP collectives in the stage's forward
+    /// pass (bytes). Backward is symmetric.
+    pub tp_ring_bytes: f64,
+    /// Bytes of a single TP collective (for the latency/η model).
+    pub tp_msg_bytes: f64,
+    /// Number of TP collectives (fwd).
+    pub tp_ops: f64,
+    /// Pipeline p2p activation payload leaving this stage (bytes).
+    pub p2p_bytes: f64,
+    /// Per-rank ring volume of MoE all-to-all dispatch+combine (bytes, fwd).
+    pub a2a_ring_bytes: f64,
+    /// Message size of one all-to-all (for the η model).
+    pub a2a_msg_bytes: f64,
+}
+
+/// TP + p2p communication census for one stage (forward direction).
+pub fn stage_comm(m: &ModelSpec, s: &ParallelStrategy, stage: usize) -> StageComm {
+    let layers = s.cluster.layers_of_stage(stage) as f64;
+    let b = s.micro_batch as f64;
+    let seq = m.seq_len as f64;
+    let h = m.hidden as f64;
+    let t = s.tp as f64;
+    let act_bytes = 2.0 * b * seq * h; // bf16 activation tensor
+    let mut c = StageComm::default();
+    if s.tp > 1 {
+        // Two collectives per layer forward (all-reduce, or reduce-scatter +
+        // all-gather under sequence parallelism — same ring volume).
+        let per_collective_ring = 2.0 * act_bytes * (t - 1.0) / t;
+        let mut n_ops = 2.0 * layers;
+        if stage == s.pp() - 1 {
+            n_ops += 1.0; // LM-head input gather
+        }
+        c.tp_ops = n_ops;
+        c.tp_msg_bytes = act_bytes;
+        c.tp_ring_bytes = per_collective_ring * n_ops;
+    }
+    // MoE all-to-all: dispatch + combine per layer, top-k activations,
+    // spread over the EP group (no traffic when ep == 1 — experts local).
+    if m.is_moe() && s.ep > 1 {
+        let e = s.ep as f64;
+        let topk_bytes = act_bytes * m.moe_topk.max(1) as f64;
+        c.a2a_msg_bytes = topk_bytes / e;
+        c.a2a_ring_bytes = layers * 2.0 * topk_bytes * (e - 1.0) / e;
+    }
+    // Boundary activation to the next stage (none for the last stage).
+    if stage + 1 < s.pp() {
+        c.p2p_bytes = act_bytes;
+    }
+    c
+}
+
+/// Total dense FLOPs of one *model* forward pass over a full global batch
+/// (all layers + head), used for MFU accounting.
+pub fn model_fwd_flops(m: &ModelSpec, global_batch: usize) -> f64 {
+    m.layer_fwd_flops(global_batch, m.seq_len) * m.layers as f64
+        + m.head_fwd_flops(global_batch, m.seq_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelRegistry;
+    use crate::strategy::{ClusterAssignment, ParallelStrategy, Recompute, RecomputeMethod};
+
+    fn strat(m: &ModelSpec, tp: usize, pp: usize, dp: usize, flash: bool) -> ParallelStrategy {
+        ParallelStrategy {
+            cluster: ClusterAssignment::homogeneous(0, pp, m.layers / pp),
+            tp,
+            dp,
+            micro_batch: 1,
+            global_batch: m.global_batch,
+            vpp: 1,
+            sequence_parallel: tp > 1,
+            use_distributed_optimizer: true,
+            recompute: Recompute::None,
+            recompute_method: RecomputeMethod::Uniform,
+            recompute_num_layers: 0,
+            offload_optimizer: false,
+            overlap_grad_reduce: true,
+            overlap_param_gather: true,
+            overlap_p2p: true,
+            tp_comm_overlap: true,
+            use_flash_attn: flash,
+            ep: 1,
+        }
+    }
+
+    #[test]
+    fn census_flops_match_model_analytics() {
+        // Sum of census FLOPs across stages × tp must equal the model's
+        // layer_fwd_flops analytics (same formulas, different decomposition).
+        let reg = ModelRegistry::builtin();
+        for name in ["llama2-7b", "llama2-70b", "glm-130b"] {
+            let m = reg.get(name).unwrap();
+            let pp = if m.layers % 4 == 0 { 4 } else { 2 };
+            let s = strat(m, 2, pp, 4, true);
+            let total: f64 = (0..pp)
+                .flat_map(|st| stage_fwd_ops(m, &s, st))
+                .map(|o| o.shape.flops * o.count)
+                .sum();
+            let expect = (m.layer_fwd_flops(1, m.seq_len) * m.layers as f64
+                + m.head_fwd_flops(1, m.seq_len))
+                / s.tp as f64;
+            let rel = (total - expect).abs() / expect;
+            assert!(rel < 1e-9, "{name}: census {total:.4e} vs analytic {expect:.4e}");
+        }
+    }
+
+    #[test]
+    fn head_only_on_last_stage() {
+        let reg = ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let s = strat(m, 2, 4, 4, true);
+        assert!(!stage_fwd_ops(m, &s, 0).iter().any(|o| o.kind == OpKind::LmHead));
+        assert!(stage_fwd_ops(m, &s, 3).iter().any(|o| o.kind == OpKind::LmHead));
+    }
+
+    #[test]
+    fn flash_fuses_attention() {
+        let reg = ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let fused = stage_fwd_ops(m, &strat(m, 2, 1, 32, true), 0);
+        let unfused = stage_fwd_ops(m, &strat(m, 2, 1, 32, false), 0);
+        assert!(fused.iter().any(|o| o.kind == OpKind::AttnFused));
+        assert!(unfused.iter().any(|o| o.kind == OpKind::AttnScore));
+        // Same attention FLOPs either way.
+        let f: f64 = fused
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::AttnFused))
+            .map(|o| o.shape.flops * o.count)
+            .sum();
+        let u: f64 = unfused
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::AttnScore | OpKind::AttnContext))
+            .map(|o| o.shape.flops * o.count)
+            .sum();
+        assert!((f - u).abs() / u < 1e-12);
+        // Flash has far higher arithmetic intensity.
+        let fi = fused.iter().find(|o| o.kind == OpKind::AttnFused).unwrap().shape.intensity();
+        let ui = unfused.iter().find(|o| o.kind == OpKind::AttnScore).unwrap().shape.intensity();
+        assert!(fi > 3.0 * ui);
+    }
+
+    #[test]
+    fn tp_comm_only_when_tp() {
+        let reg = ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let c1 = stage_comm(m, &strat(m, 1, 2, 32, true), 0);
+        assert_eq!(c1.tp_ring_bytes, 0.0);
+        assert!(c1.p2p_bytes > 0.0);
+        let c2 = stage_comm(m, &strat(m, 4, 2, 8, true), 0);
+        assert!(c2.tp_ring_bytes > 0.0);
+        // Last stage has no outgoing p2p but one extra TP op (head gather).
+        let c_last = stage_comm(m, &strat(m, 4, 2, 8, true), 1);
+        assert_eq!(c_last.p2p_bytes, 0.0);
+        assert!(c_last.tp_ops > c2.tp_ops);
+    }
+}

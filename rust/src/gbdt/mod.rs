@@ -1,0 +1,236 @@
+//! Gradient-boosted-tree forest inference (the paper's "XGBoost model").
+//!
+//! Trees are *complete* binary trees of fixed depth in level order: internal
+//! nodes `0..2^d−1` carry `(feature, threshold)`, leaves `0..2^d` carry
+//! values. Descent is branch-free (`idx ← 2·idx + 1 + (x[f] ≥ t)`), which is
+//! exactly the layout the Layer-1 Pallas kernel (`kernels/forest.py`)
+//! vectorizes; this module is its scalar mirror, used by the `native`
+//! scoring engine and by the HLO↔native parity tests.
+//!
+//! Forests are trained at build time by `python/compile/gbdt_train.py` and
+//! interchanged via `artifacts/forest.json`.
+
+use crate::json::Value;
+use crate::{AstraError, Result};
+
+/// One complete regression tree.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub depth: usize,
+    /// Feature index per internal node (len `2^depth − 1`).
+    pub feat: Vec<u32>,
+    /// Split threshold per internal node (len `2^depth − 1`).
+    pub thresh: Vec<f32>,
+    /// Leaf values (len `2^depth`).
+    pub leaf: Vec<f32>,
+}
+
+impl Tree {
+    /// Branch-free descent; `x` must have at least `max(feat)+1` entries.
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        let mut idx = 0usize;
+        for _ in 0..self.depth {
+            let f = self.feat[idx] as usize;
+            let go_right = (x[f] >= self.thresh[idx]) as usize;
+            idx = 2 * idx + 1 + go_right;
+        }
+        self.leaf[idx - (self.feat.len())] // internal count = 2^d − 1
+    }
+
+    fn validate(&self) -> Result<()> {
+        let internal = (1usize << self.depth) - 1;
+        let leaves = 1usize << self.depth;
+        if self.feat.len() != internal || self.thresh.len() != internal || self.leaf.len() != leaves
+        {
+            return Err(AstraError::Json(format!(
+                "tree shape mismatch: depth {} wants {internal} internal / {leaves} leaves, got {}/{}/{}",
+                self.depth,
+                self.feat.len(),
+                self.thresh.len(),
+                self.leaf.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A boosted ensemble: `ŷ = base + lr · Σ_t tree_t(x)`.
+#[derive(Debug, Clone)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub base: f32,
+    pub lr: f32,
+    pub n_features: usize,
+}
+
+impl Forest {
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        debug_assert!(x.len() >= self.n_features);
+        let mut acc = 0.0f32;
+        for t in &self.trees {
+            acc += t.predict(x);
+        }
+        self.base + self.lr * acc
+    }
+
+    /// Batched prediction (row-major `xs`, `n_features` stride).
+    pub fn predict_batch(&self, xs: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        for row in xs.chunks_exact(self.n_features) {
+            out.push(self.predict(row));
+        }
+    }
+
+    /// A forest that always predicts `v` (tests and fallbacks).
+    pub fn constant(v: f32, n_features: usize) -> Forest {
+        Forest { trees: Vec::new(), base: v, lr: 1.0, n_features }
+    }
+
+    /// Parse the `artifacts/forest.json` interchange format:
+    ///
+    /// ```json
+    /// { "n_features": 6, "base": 0.5, "lr": 0.1,
+    ///   "trees": [ {"depth":4, "feat":[...], "thresh":[...], "leaf":[...]} ] }
+    /// ```
+    pub fn from_json(v: &Value) -> Result<Forest> {
+        let n_features = v
+            .get("n_features")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| AstraError::Json("forest: missing n_features".into()))?;
+        let base = v.req_f64("base")? as f32;
+        let lr = v.req_f64("lr")? as f32;
+        let mut trees = Vec::new();
+        for tv in v.req_arr("trees")? {
+            let depth = tv
+                .get("depth")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| AstraError::Json("tree: missing depth".into()))?;
+            let tree = Tree {
+                depth,
+                feat: tv.req_f64_arr("feat")?.iter().map(|&f| f as u32).collect(),
+                thresh: tv.req_f64_arr("thresh")?.iter().map(|&f| f as f32).collect(),
+                leaf: tv.req_f64_arr("leaf")?.iter().map(|&f| f as f32).collect(),
+            };
+            tree.validate()?;
+            if let Some(&f) = tree.feat.iter().max() {
+                if f as usize >= n_features {
+                    return Err(AstraError::Json(format!(
+                        "tree references feature {f} but n_features={n_features}"
+                    )));
+                }
+            }
+            trees.push(tree);
+        }
+        Ok(Forest { trees, base, lr, n_features })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Forest> {
+        Self::from_json(&crate::json::from_file(path)?)
+    }
+}
+
+/// The pair of forests used by the cost model (η_comp, η_comm), plus the
+/// clamp into the paper's (0, 1] range.
+#[derive(Debug, Clone)]
+pub struct EtaForests {
+    pub comp: Forest,
+    pub comm: Forest,
+}
+
+impl EtaForests {
+    /// Load `artifacts/forest.json` holding both ensembles.
+    pub fn from_file(path: &std::path::Path) -> Result<EtaForests> {
+        let v = crate::json::from_file(path)?;
+        let comp = Forest::from_json(
+            v.get("comp").ok_or_else(|| AstraError::Json("missing 'comp' forest".into()))?,
+        )?;
+        let comm = Forest::from_json(
+            v.get("comm").ok_or_else(|| AstraError::Json("missing 'comm' forest".into()))?,
+        )?;
+        Ok(EtaForests { comp, comm })
+    }
+
+    pub fn eta_comp(&self, features: &[f32]) -> f64 {
+        (self.comp.predict(features) as f64).clamp(1e-4, 1.0)
+    }
+
+    pub fn eta_comm(&self, features: &[f32]) -> f64 {
+        (self.comm.predict(features) as f64).clamp(1e-4, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    /// depth-2 tree splitting on x0 then x1, leaves = [0,1,2,3].
+    fn demo_tree() -> Tree {
+        Tree {
+            depth: 2,
+            feat: vec![0, 1, 1],
+            thresh: vec![0.5, 0.25, 0.75],
+            leaf: vec![0.0, 1.0, 2.0, 3.0],
+        }
+    }
+
+    #[test]
+    fn descent_reaches_all_leaves() {
+        let t = demo_tree();
+        assert_eq!(t.predict(&[0.0, 0.0]), 0.0); // L,L
+        assert_eq!(t.predict(&[0.0, 0.3]), 1.0); // L,R
+        assert_eq!(t.predict(&[0.9, 0.0]), 2.0); // R,L
+        assert_eq!(t.predict(&[0.9, 0.9]), 3.0); // R,R
+    }
+
+    #[test]
+    fn forest_combines_base_lr() {
+        let f = Forest { trees: vec![demo_tree(), demo_tree()], base: 10.0, lr: 0.5, n_features: 2 };
+        // two identical trees → base + 0.5 * 2 * leaf
+        assert_eq!(f.predict(&[0.9, 0.9]), 10.0 + 0.5 * 6.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let src = r#"{
+            "n_features": 2, "base": 0.1, "lr": 1.0,
+            "trees": [{"depth": 1, "feat": [0], "thresh": [0.5], "leaf": [2.0, 4.0]}]
+        }"#;
+        let f = Forest::from_json(&parse(src).unwrap()).unwrap();
+        assert!((f.predict(&[0.0, 0.0]) - 2.1).abs() < 1e-6);
+        assert!((f.predict(&[1.0, 0.0]) - 4.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let bad = r#"{
+            "n_features": 2, "base": 0, "lr": 1,
+            "trees": [{"depth": 2, "feat": [0], "thresh": [0.5], "leaf": [1, 2]}]
+        }"#;
+        assert!(Forest::from_json(&parse(bad).unwrap()).is_err());
+        let oob = r#"{
+            "n_features": 1, "base": 0, "lr": 1,
+            "trees": [{"depth": 1, "feat": [3], "thresh": [0.5], "leaf": [1, 2]}]
+        }"#;
+        assert!(Forest::from_json(&parse(oob).unwrap()).is_err());
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let f = Forest { trees: vec![demo_tree()], base: 0.0, lr: 1.0, n_features: 2 };
+        let xs = [0.0f32, 0.0, 0.0, 0.3, 0.9, 0.0, 0.9, 0.9];
+        let mut out = Vec::new();
+        f.predict_batch(&xs, &mut out);
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn eta_clamped() {
+        let ef = EtaForests {
+            comp: Forest::constant(7.0, 1),
+            comm: Forest::constant(-3.0, 1),
+        };
+        assert_eq!(ef.eta_comp(&[0.0]), 1.0);
+        assert_eq!(ef.eta_comm(&[0.0]), 1e-4);
+    }
+}

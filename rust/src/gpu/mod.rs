@@ -1,0 +1,270 @@
+//! GPU catalog, pricing and cluster topology.
+//!
+//! A [`GpuSpec`] carries the published peak rates plus the synthetic
+//! efficiency-curve constants of the hardware-truth model (see
+//! `data/hw_profile.json` and [`crate::hw`]). The same constants are read by
+//! the python compile path when it samples the GBDT training set, and a
+//! cross-language test pins the two implementations together.
+//!
+//! The paper's three GPU-pool modes (§3.2, Eq. 1–3) are represented by
+//! [`crate::strategy::GpuPoolMode`]; this module supplies the specs and the
+//! interconnect model: 8 GPUs per node over NVLink, nodes over PCIe/IB.
+
+use crate::json::Value;
+use crate::{AstraError, Result};
+
+/// Index into the catalog; strategies store this instead of strings.
+pub type GpuType = usize;
+
+/// Efficiency-curve constants of the hardware-truth model for one GPU type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EffCurve {
+    /// Peak achievable fraction of spec TFLOPs (MFU ceiling).
+    pub util_max: f64,
+    /// Per-kernel launch/setup overhead in seconds (drives the
+    /// small-op efficiency collapse).
+    pub launch_overhead_s: f64,
+    /// GEMM dimensions below this get the skinny penalty.
+    pub skinny_dim: f64,
+    /// Multiplicative penalty for skinny GEMMs.
+    pub skinny_penalty: f64,
+    /// Arithmetic intensity (flop/byte) below which the op is memory-bound.
+    pub mem_bound_intensity: f64,
+    /// Per-collective base latency in seconds.
+    pub comm_latency_s: f64,
+    /// Peak achievable fraction of link bandwidth.
+    pub comm_eff_max: f64,
+}
+
+/// One GPU type: published peaks + pricing + efficiency curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    pub mem_gib: f64,
+    pub peak_tflops_bf16: f64,
+    pub hbm_gbs: f64,
+    /// Intra-node (NVLink) per-GPU bandwidth, GB/s.
+    pub nvlink_gbs: f64,
+    /// Inter-node effective per-GPU bandwidth (IB/PCIe fabric), GB/s.
+    pub internode_gbs: f64,
+    /// Host↔device PCIe bandwidth (offload path), GB/s.
+    pub pcie_gbs: f64,
+    pub price_per_hour: f64,
+    pub eff: EffCurve,
+}
+
+impl GpuSpec {
+    /// Peak flop/s (not TFLOPs).
+    pub fn peak_flops(&self) -> f64 {
+        self.peak_tflops_bf16 * 1e12
+    }
+
+    /// Usable device memory in bytes (spec minus runtime/ctx reserve).
+    pub fn usable_mem_bytes(&self) -> f64 {
+        (self.mem_gib - 2.0).max(1.0) * 1024.0 * 1024.0 * 1024.0 * 0.94
+    }
+
+    pub fn price_per_second(&self) -> f64 {
+        self.price_per_hour / 3600.0
+    }
+}
+
+/// The catalog: all known GPU types plus cluster topology constants.
+#[derive(Debug, Clone)]
+pub struct GpuCatalog {
+    specs: Vec<GpuSpec>,
+    pub gpus_per_node: usize,
+}
+
+impl GpuCatalog {
+    /// Compiled-in catalog mirroring `data/hw_profile.json` (tests and
+    /// examples never depend on the working directory).
+    pub fn builtin() -> Self {
+        let mk = |name: &str,
+                  mem: f64,
+                  tflops: f64,
+                  hbm: f64,
+                  nvl: f64,
+                  inter: f64,
+                  pcie: f64,
+                  price: f64,
+                  eff: EffCurve| GpuSpec {
+            name: name.to_string(),
+            mem_gib: mem,
+            peak_tflops_bf16: tflops,
+            hbm_gbs: hbm,
+            nvlink_gbs: nvl,
+            internode_gbs: inter,
+            pcie_gbs: pcie,
+            price_per_hour: price,
+            eff,
+        };
+        let ampere = EffCurve {
+            util_max: 0.62,
+            launch_overhead_s: 9.0e-6,
+            skinny_dim: 128.0,
+            skinny_penalty: 0.72,
+            mem_bound_intensity: 80.0,
+            comm_latency_s: 18.0e-6,
+            comm_eff_max: 0.88,
+        };
+        let hopper = EffCurve {
+            util_max: 0.58,
+            launch_overhead_s: 7.0e-6,
+            skinny_dim: 256.0,
+            skinny_penalty: 0.66,
+            mem_bound_intensity: 140.0,
+            comm_latency_s: 15.0e-6,
+            comm_eff_max: 0.90,
+        };
+        let volta = EffCurve {
+            util_max: 0.55,
+            launch_overhead_s: 12.0e-6,
+            skinny_dim: 128.0,
+            skinny_penalty: 0.70,
+            mem_bound_intensity: 60.0,
+            comm_latency_s: 25.0e-6,
+            comm_eff_max: 0.85,
+        };
+        GpuCatalog {
+            specs: vec![
+                mk("a100", 80.0, 312.0, 2039.0, 600.0, 25.0, 32.0, 3.00, ampere.clone()),
+                mk("a800", 80.0, 312.0, 2039.0, 400.0, 25.0, 32.0, 2.60, ampere),
+                mk("h100", 80.0, 989.0, 3350.0, 900.0, 50.0, 64.0, 4.10, hopper.clone()),
+                mk("h800", 80.0, 989.0, 3350.0, 400.0, 50.0, 64.0, 3.40, hopper),
+                mk("v100", 32.0, 125.0, 900.0, 300.0, 12.0, 16.0, 1.50, volta),
+            ],
+            gpus_per_node: 8,
+        }
+    }
+
+    /// Load from `data/hw_profile.json` (keeps rust and python in lockstep).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut specs = Vec::new();
+        for g in v.req_arr("gpus")? {
+            let eff = g
+                .get("eff")
+                .ok_or_else(|| AstraError::Json("gpu missing eff".into()))?;
+            specs.push(GpuSpec {
+                name: g.req_str("name")?.to_string(),
+                mem_gib: g.req_f64("mem_gib")?,
+                peak_tflops_bf16: g.req_f64("peak_tflops_bf16")?,
+                hbm_gbs: g.req_f64("hbm_gbs")?,
+                nvlink_gbs: g.req_f64("nvlink_gbs")?,
+                internode_gbs: g.req_f64("internode_gbs")?,
+                pcie_gbs: g.req_f64("pcie_gbs")?,
+                price_per_hour: g.req_f64("price_per_hour")?,
+                eff: EffCurve {
+                    util_max: eff.req_f64("util_max")?,
+                    launch_overhead_s: eff.req_f64("launch_overhead_s")?,
+                    skinny_dim: eff.req_f64("skinny_dim")?,
+                    skinny_penalty: eff.req_f64("skinny_penalty")?,
+                    mem_bound_intensity: eff.req_f64("mem_bound_intensity")?,
+                    comm_latency_s: eff.req_f64("comm_latency_s")?,
+                    comm_eff_max: eff.req_f64("comm_eff_max")?,
+                },
+            });
+        }
+        Ok(GpuCatalog {
+            specs,
+            gpus_per_node: v.get("gpus_per_node").and_then(Value::as_usize).unwrap_or(8),
+        })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&crate::json::from_file(path)?)
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn spec(&self, t: GpuType) -> &GpuSpec {
+        &self.specs[t]
+    }
+
+    pub fn all(&self) -> &[GpuSpec] {
+        &self.specs
+    }
+
+    pub fn find(&self, name: &str) -> Result<GpuType> {
+        self.specs
+            .iter()
+            .position(|s| s.name.eq_ignore_ascii_case(name))
+            .ok_or_else(|| {
+                AstraError::Config(format!(
+                    "unknown GPU type '{name}' (known: {})",
+                    self.specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+                ))
+            })
+    }
+
+    /// Effective per-GPU bandwidth for a communication group that spans
+    /// `group` ranks laid out contiguously: NVLink when the whole group fits
+    /// in one node, inter-node fabric otherwise.
+    pub fn group_bandwidth_gbs(&self, t: GpuType, group: usize) -> f64 {
+        let s = self.spec(t);
+        if group <= self.gpus_per_node {
+            s.nvlink_gbs
+        } else {
+            s.internode_gbs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_has_paper_gpus() {
+        let c = GpuCatalog::builtin();
+        for name in ["a800", "h100", "h800", "a100"] {
+            assert!(c.find(name).is_ok(), "{name} present");
+        }
+        assert!(c.find("b200").is_err());
+    }
+
+    #[test]
+    fn h100_outclasses_a800() {
+        let c = GpuCatalog::builtin();
+        let h = c.spec(c.find("h100").unwrap());
+        let a = c.spec(c.find("a800").unwrap());
+        assert!(h.peak_flops() > 2.0 * a.peak_flops());
+        assert!(h.price_per_hour > a.price_per_hour);
+    }
+
+    #[test]
+    fn bandwidth_topology_switch() {
+        let c = GpuCatalog::builtin();
+        let t = c.find("a800").unwrap();
+        assert_eq!(c.group_bandwidth_gbs(t, 8), 400.0); // NVLink inside node
+        assert_eq!(c.group_bandwidth_gbs(t, 16), 25.0); // crosses nodes
+    }
+
+    #[test]
+    fn json_matches_builtin() {
+        // data/hw_profile.json must agree with the compiled-in catalog.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("data/hw_profile.json");
+        let from_file = GpuCatalog::from_file(&path).unwrap();
+        let builtin = GpuCatalog::builtin();
+        assert_eq!(from_file.gpus_per_node, builtin.gpus_per_node);
+        assert_eq!(from_file.len(), builtin.len());
+        for (a, b) in from_file.all().iter().zip(builtin.all()) {
+            assert_eq!(a, b, "spec mismatch for {}", a.name);
+        }
+    }
+
+    #[test]
+    fn usable_memory_below_spec() {
+        let c = GpuCatalog::builtin();
+        for s in c.all() {
+            assert!(s.usable_mem_bytes() < s.mem_gib * 1073741824.0);
+            assert!(s.usable_mem_bytes() > 0.5 * s.mem_gib * 1073741824.0);
+        }
+    }
+}

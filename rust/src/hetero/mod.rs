@@ -1,0 +1,402 @@
+//! Heterogeneous-GPU strategy search (paper §3.4, Eq. 22–23).
+//!
+//! Deploying `P` pipeline stages over `M` GPU types reduces (after the
+//! paper's rearrangement argument) to choosing an *ordered sequence of
+//! contiguous segments*: which types appear, in which pipeline order, how
+//! many stages `m_i` each gets (`Σ m_i = P`, `m_i·T·D ≤ l_i`), and how many
+//! layers `n_i` each of its stages holds (`Σ m_i·n_i = N`). That is
+//! `C(P−1, M−1)·(M−1)! ≈ O(P^{M−1})` segment shapes × `O(N^{M−1})` layer
+//! assignments (the paper's complexity analysis — implemented verbatim by
+//! [`HeteroSolver::enumerate_exhaustive`]).
+//!
+//! [`HeteroSolver::enumerate_pruned`] is our optimized variant (ablated in
+//! `benches/ablation_hetero_solver.rs`): for each segment shape it seeds
+//! the layer assignment proportional to per-layer GPU speed and explores a
+//! ±`radius` neighbourhood, which preserves the optimum in practice while
+//! cutting the `O(N^{M−1})` factor to a constant.
+
+use crate::gpu::{GpuCatalog, GpuType};
+use crate::strategy::{ClusterAssignment, Segment};
+
+/// Caps per GPU type, already divided down to "stages available":
+/// `max_stages_i = l_i / (T·D)`.
+#[derive(Debug, Clone)]
+pub struct TypeBudget {
+    pub gpu: GpuType,
+    pub max_stages: usize,
+    /// Relative per-layer speed (higher = faster), used by the pruned
+    /// solver to seed layer assignments.
+    pub speed: f64,
+}
+
+/// Enumeration/solver for heterogeneous cluster assignments.
+#[derive(Debug, Clone)]
+pub struct HeteroSolver {
+    /// Neighbourhood radius of the pruned layer-assignment search.
+    pub prune_radius: i64,
+    /// Hard cap on emitted assignments (guards pathological inputs).
+    pub max_assignments: usize,
+}
+
+impl Default for HeteroSolver {
+    fn default() -> Self {
+        HeteroSolver { prune_radius: 2, max_assignments: 2_000_000 }
+    }
+}
+
+impl HeteroSolver {
+    /// Build per-type budgets from raw GPU caps (`l_i`), tp and dp.
+    pub fn budgets(
+        catalog: &GpuCatalog,
+        caps: &[(GpuType, usize)],
+        tp: usize,
+        dp: usize,
+    ) -> Vec<TypeBudget> {
+        caps.iter()
+            .map(|&(g, l)| TypeBudget {
+                gpu: g,
+                max_stages: l / (tp * dp),
+                speed: catalog.spec(g).peak_flops() * catalog.spec(g).eff.util_max,
+            })
+            .collect()
+    }
+
+    /// All ordered sequences of distinct types (non-empty subsets ×
+    /// permutations) — the segment *orderings* of §3.4.
+    pub fn type_orderings(n_types: usize) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        let mut current = Vec::new();
+        let mut used = vec![false; n_types];
+        fn rec(
+            n: usize,
+            used: &mut [bool],
+            current: &mut Vec<usize>,
+            out: &mut Vec<Vec<usize>>,
+        ) {
+            if !current.is_empty() {
+                out.push(current.clone());
+            }
+            for i in 0..n {
+                if !used[i] {
+                    used[i] = true;
+                    current.push(i);
+                    rec(n, used, current, out);
+                    current.pop();
+                    used[i] = false;
+                }
+            }
+        }
+        rec(n_types, &mut used, &mut current, &mut out);
+        out
+    }
+
+    /// Positive compositions of `total` into exactly `parts` parts subject
+    /// to per-part caps.
+    pub fn compositions(total: usize, caps: &[usize]) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        let mut cur = vec![0usize; caps.len()];
+        fn rec(
+            idx: usize,
+            remaining: usize,
+            caps: &[usize],
+            cur: &mut Vec<usize>,
+            out: &mut Vec<Vec<usize>>,
+        ) {
+            if idx == caps.len() {
+                if remaining == 0 {
+                    out.push(cur.clone());
+                }
+                return;
+            }
+            let tail_min = caps.len() - idx - 1; // each later part ≥ 1
+            for m in 1..=caps[idx].min(remaining.saturating_sub(tail_min)) {
+                cur[idx] = m;
+                rec(idx + 1, remaining - m, caps, cur, out);
+            }
+            cur[idx] = 0;
+        }
+        if !caps.is_empty() && total >= caps.len() {
+            rec(0, total, caps, &mut cur, &mut out);
+        }
+        out
+    }
+
+    /// Exhaustive Eq. 23 enumeration: every ordering × composition × layer
+    /// assignment with `Σ m_i·n_i = N`, `n_i ≥ 1`.
+    pub fn enumerate_exhaustive(
+        &self,
+        layers: usize,
+        pp: usize,
+        budgets: &[TypeBudget],
+    ) -> Vec<ClusterAssignment> {
+        let mut out = Vec::new();
+        for ordering in Self::type_orderings(budgets.len()) {
+            let caps: Vec<usize> = ordering.iter().map(|&i| budgets[i].max_stages).collect();
+            for stages in Self::compositions(pp, &caps) {
+                self.layer_assignments_all(layers, &stages, &ordering, budgets, &mut out);
+                if out.len() >= self.max_assignments {
+                    crate::log_warn!("hetero enumeration truncated at {}", out.len());
+                    return out;
+                }
+            }
+        }
+        out
+    }
+
+    fn layer_assignments_all(
+        &self,
+        layers: usize,
+        stages: &[usize],
+        ordering: &[usize],
+        budgets: &[TypeBudget],
+        out: &mut Vec<ClusterAssignment>,
+    ) {
+        // Recursively pick n_i for each segment.
+        fn rec(
+            idx: usize,
+            remaining: usize,
+            stages: &[usize],
+            ns: &mut Vec<usize>,
+            emit: &mut dyn FnMut(&[usize]),
+        ) {
+            if idx == stages.len() {
+                if remaining == 0 {
+                    emit(ns);
+                }
+                return;
+            }
+            let m = stages[idx];
+            // Remaining segments need at least Σ m_j layers (n_j ≥ 1).
+            let tail_min: usize = stages[idx + 1..].iter().sum();
+            let max_n = (remaining.saturating_sub(tail_min)) / m;
+            for n in 1..=max_n {
+                if idx + 1 == stages.len() && m * n != remaining {
+                    continue;
+                }
+                ns.push(n);
+                rec(idx + 1, remaining - m * n, stages, ns, emit);
+                ns.pop();
+            }
+        }
+        let mut ns = Vec::new();
+        let mut emit = |ns: &[usize]| {
+            out.push(ClusterAssignment {
+                segments: ns
+                    .iter()
+                    .zip(stages)
+                    .zip(ordering)
+                    .map(|((&n, &m), &ty)| Segment {
+                        gpu: budgets[ty].gpu,
+                        stages: m,
+                        layers_per_stage: n,
+                    })
+                    .collect(),
+            });
+        };
+        rec(0, layers, stages, &mut ns, &mut emit);
+    }
+
+    /// Pruned enumeration: same orderings × compositions, but layer counts
+    /// are seeded ∝ segment speed and searched only in a ±radius box.
+    pub fn enumerate_pruned(
+        &self,
+        layers: usize,
+        pp: usize,
+        budgets: &[TypeBudget],
+    ) -> Vec<ClusterAssignment> {
+        let mut out = Vec::new();
+        for ordering in Self::type_orderings(budgets.len()) {
+            let caps: Vec<usize> = ordering.iter().map(|&i| budgets[i].max_stages).collect();
+            for stages in Self::compositions(pp, &caps) {
+                self.layer_assignments_pruned(layers, &stages, &ordering, budgets, &mut out);
+                if out.len() >= self.max_assignments {
+                    return out;
+                }
+            }
+        }
+        out
+    }
+
+    fn layer_assignments_pruned(
+        &self,
+        layers: usize,
+        stages: &[usize],
+        ordering: &[usize],
+        budgets: &[TypeBudget],
+        out: &mut Vec<ClusterAssignment>,
+    ) {
+        let k = stages.len();
+        // Seed: a stage on a GPU with speed c should take layers ∝ c so all
+        // stage times equalize (the Eq. 22 max term dominates).
+        let speeds: Vec<f64> = ordering.iter().map(|&i| budgets[i].speed).collect();
+        let denom: f64 = stages.iter().zip(&speeds).map(|(&m, &c)| m as f64 * c).sum();
+        let seed: Vec<i64> = speeds
+            .iter()
+            .map(|&c| ((layers as f64 * c / denom).round() as i64).max(1))
+            .collect();
+        // Explore the ±radius box around the seed for the first k−1
+        // segments; the last is determined by the layer-sum constraint.
+        let r = self.prune_radius;
+        let mut choice = vec![0i64; k];
+        fn rec(
+            idx: usize,
+            layers: i64,
+            stages: &[usize],
+            seed: &[i64],
+            r: i64,
+            choice: &mut Vec<i64>,
+            emit: &mut dyn FnMut(&[i64]),
+        ) {
+            let k = stages.len();
+            if idx == k - 1 {
+                let used: i64 = (0..k - 1).map(|i| choice[i] * stages[i] as i64).sum();
+                let rem = layers - used;
+                let m = stages[k - 1] as i64;
+                if rem > 0 && rem % m == 0 {
+                    choice[k - 1] = rem / m;
+                    emit(choice);
+                }
+                return;
+            }
+            for n in (seed[idx] - r).max(1)..=(seed[idx] + r) {
+                choice[idx] = n;
+                rec(idx + 1, layers, stages, seed, r, choice, emit);
+            }
+        }
+        let mut emit = |ns: &[i64]| {
+            out.push(ClusterAssignment {
+                segments: ns
+                    .iter()
+                    .zip(stages)
+                    .zip(ordering)
+                    .map(|((&n, &m), &ty)| Segment {
+                        gpu: budgets[ty].gpu,
+                        stages: m,
+                        layers_per_stage: n as usize,
+                    })
+                    .collect(),
+            });
+        };
+        rec(0, layers as i64, stages, &seed, r, &mut choice, &mut emit);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuCatalog;
+
+    fn budgets2() -> Vec<TypeBudget> {
+        let cat = GpuCatalog::builtin();
+        HeteroSolver::budgets(
+            &cat,
+            &[(cat.find("a800").unwrap(), 64), (cat.find("h100").unwrap(), 64)],
+            2,
+            2,
+        )
+    }
+
+    #[test]
+    fn orderings_count() {
+        // Non-empty subset permutations of M types: Σ_k C(M,k)·k!.
+        assert_eq!(HeteroSolver::type_orderings(1).len(), 1);
+        assert_eq!(HeteroSolver::type_orderings(2).len(), 4); // {0},{1},{0,1},{1,0}
+        assert_eq!(HeteroSolver::type_orderings(3).len(), 15);
+    }
+
+    #[test]
+    fn compositions_respect_caps_and_sum() {
+        let comps = HeteroSolver::compositions(8, &[4, 6]);
+        assert!(!comps.is_empty());
+        for c in &comps {
+            assert_eq!(c.iter().sum::<usize>(), 8);
+            assert!(c[0] >= 1 && c[0] <= 4);
+            assert!(c[1] >= 1 && c[1] <= 6);
+        }
+        // m1 in 2..=4 (m2 = 8-m1 ≤ 6) → 3 compositions.
+        assert_eq!(comps.len(), 3);
+    }
+
+    #[test]
+    fn exhaustive_covers_all_layer_splits() {
+        let solver = HeteroSolver::default();
+        let budgets = budgets2();
+        let all = solver.enumerate_exhaustive(16, 4, &budgets);
+        assert!(!all.is_empty());
+        for ca in &all {
+            assert_eq!(ca.pp(), 4);
+            assert_eq!(ca.layers(), 16);
+            for seg in &ca.segments {
+                assert!(seg.layers_per_stage >= 1);
+            }
+        }
+        // Single-type assignments appear too (ordering subsets).
+        assert!(all.iter().any(|ca| ca.segments.len() == 1));
+        assert!(all.iter().any(|ca| ca.segments.len() == 2));
+    }
+
+    #[test]
+    fn exhaustive_matches_closed_form_small() {
+        // P=2 stages, both types must appear in order (A,B): m=(1,1),
+        // n1+n2=N → N−1 assignments; ordering (B,A) doubles; single-type
+        // orderings: m=(2), 2·n=N → N/2 valid iff N even (1 each).
+        let solver = HeteroSolver::default();
+        let budgets = budgets2();
+        let n = 10usize;
+        let all = solver.enumerate_exhaustive(n, 2, &budgets);
+        let two_seg = all.iter().filter(|c| c.segments.len() == 2).count();
+        let one_seg = all.iter().filter(|c| c.segments.len() == 1).count();
+        assert_eq!(two_seg, 2 * (n - 1));
+        assert_eq!(one_seg, 2); // n=10 even → n1=5 for each type
+    }
+
+    #[test]
+    fn pruned_subset_of_exhaustive() {
+        let solver = HeteroSolver::default();
+        let budgets = budgets2();
+        let ex = solver.enumerate_exhaustive(32, 4, &budgets);
+        let pr = solver.enumerate_pruned(32, 4, &budgets);
+        assert!(!pr.is_empty());
+        assert!(pr.len() < ex.len());
+        let key = |c: &ClusterAssignment| format!("{:?}", c.segments);
+        let exset: std::collections::BTreeSet<String> = ex.iter().map(key).collect();
+        for c in &pr {
+            assert!(exset.contains(&key(c)), "pruned emitted non-valid assignment {c:?}");
+        }
+    }
+
+    #[test]
+    fn pruned_seeds_follow_speed() {
+        // H100 ~3× faster than A800: in a 2-segment split with equal stage
+        // counts, H100 segments should carry more layers in the pruned set.
+        let solver = HeteroSolver { prune_radius: 0, max_assignments: 10_000 };
+        let budgets = budgets2(); // [a800, h100]
+        let pr = solver.enumerate_pruned(64, 2, &budgets);
+        let mixed: Vec<_> = pr.iter().filter(|c| c.segments.len() == 2).collect();
+        assert!(!mixed.is_empty());
+        for ca in mixed {
+            let (a_layers, h_layers): (usize, usize) = {
+                let cat = GpuCatalog::builtin();
+                let h = cat.find("h100").unwrap();
+                let mut a_l = 0;
+                let mut h_l = 0;
+                for s in &ca.segments {
+                    if s.gpu == h {
+                        h_l = s.layers_per_stage;
+                    } else {
+                        a_l = s.layers_per_stage;
+                    }
+                }
+                (a_l, h_l)
+            };
+            assert!(h_layers > a_layers, "h100 {h_layers} vs a800 {a_layers}");
+        }
+    }
+
+    #[test]
+    fn budgets_divide_caps() {
+        let cat = GpuCatalog::builtin();
+        let b = HeteroSolver::budgets(&cat, &[(0, 100)], 4, 8);
+        assert_eq!(b[0].max_stages, 3); // 100 / 32
+    }
+}

@@ -1,0 +1,172 @@
+//! Hardware-truth efficiency model.
+//!
+//! The paper fits its η factors (Eq. 25/26) on *measured* cluster data. We
+//! have no cluster, so this module is the synthetic "physics" that plays the
+//! role of the real hardware (DESIGN.md §3): principled saturation curves —
+//! launch-overhead-limited small ops, skinny-GEMM penalty, roofline
+//! memory-bound clamp for compute; latency-vs-bandwidth saturation for
+//! collectives. The discrete-event simulator consumes these curves directly
+//! ("measurement"); the GBDT is trained on noisy samples of them
+//! (`python/compile/effdata.py` mirrors the formulas — kept in lockstep by
+//! `rust/tests/crosscheck_hw.rs` against `artifacts/eff_samples.json`).
+
+use crate::gpu::GpuSpec;
+
+/// Number of features fed to the computation-efficiency forest.
+pub const COMP_FEATURES: usize = 6;
+/// Number of features fed to the communication-efficiency forest.
+pub const COMM_FEATURES: usize = 4;
+
+/// A dense GEMM workload descriptor (per-GPU shard shapes).
+#[derive(Debug, Clone, Copy)]
+pub struct Gemm {
+    pub m: f64,
+    pub n: f64,
+    pub k: f64,
+}
+
+impl Gemm {
+    pub fn new(m: f64, n: f64, k: f64) -> Self {
+        Gemm { m, n, k }
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m * self.n * self.k
+    }
+
+    /// Bytes moved assuming bf16 operands/output, one pass.
+    pub fn bytes(&self) -> f64 {
+        2.0 * (self.m * self.k + self.k * self.n + self.m * self.n)
+    }
+
+    pub fn min_dim(&self) -> f64 {
+        self.m.min(self.n).min(self.k)
+    }
+
+    /// Arithmetic intensity (flop/byte).
+    pub fn intensity(&self) -> f64 {
+        self.flops() / self.bytes().max(1.0)
+    }
+}
+
+/// Ground-truth computation efficiency η_comp ∈ (0, 1] for an op of `flops`
+/// total work, smallest GEMM dimension `min_dim`, arithmetic intensity
+/// `intensity`, on GPU `spec`.
+pub fn eta_comp(spec: &GpuSpec, flops: f64, min_dim: f64, intensity: f64) -> f64 {
+    let e = &spec.eff;
+    // Launch-overhead saturation: an op must amortize the fixed kernel cost.
+    let f_half = spec.peak_flops() * e.launch_overhead_s;
+    let sat = flops / (flops + f_half);
+    // Skinny-GEMM penalty ramps linearly below the tile-friendly dimension.
+    let skinny = if min_dim >= e.skinny_dim {
+        1.0
+    } else {
+        e.skinny_penalty + (1.0 - e.skinny_penalty) * (min_dim / e.skinny_dim)
+    };
+    // Roofline clamp: memory-bound ops cannot reach peak FLOPs.
+    let roof = (intensity / e.mem_bound_intensity).min(1.0);
+    (e.util_max * sat * skinny * roof).clamp(1e-4, 1.0)
+}
+
+/// Ground-truth communication efficiency η_comm ∈ (0, 1] for a collective
+/// moving `bytes` per rank over links of `bw_gbs` with `participants` ranks.
+pub fn eta_comm(spec: &GpuSpec, bytes: f64, bw_gbs: f64, participants: f64) -> f64 {
+    let e = &spec.eff;
+    // Latency term grows with group size (ring has n-1 sequential steps).
+    let b_half = bw_gbs * 1e9 * e.comm_latency_s * participants.max(1.0);
+    let sat = bytes / (bytes + b_half);
+    (e.comm_eff_max * sat).clamp(1e-4, 1.0)
+}
+
+/// Feature vector for the computation forest. MUST stay in lockstep with
+/// `python/compile/effdata.py::comp_features`.
+pub fn comp_features(spec: &GpuSpec, flops: f64, min_dim: f64, intensity: f64) -> [f64; COMP_FEATURES] {
+    [
+        flops.max(1.0).log10(),
+        min_dim.max(1.0).log10(),
+        intensity.max(1e-3).log10(),
+        spec.peak_tflops_bf16 / 1000.0,
+        spec.hbm_gbs / 1000.0,
+        spec.eff.util_max,
+    ]
+}
+
+/// Feature vector for the communication forest. MUST stay in lockstep with
+/// `python/compile/effdata.py::comm_features`.
+pub fn comm_features(spec: &GpuSpec, bytes: f64, bw_gbs: f64, participants: f64) -> [f64; COMM_FEATURES] {
+    [
+        bytes.max(1.0).log10(),
+        bw_gbs.max(1e-3).log10(),
+        participants.max(1.0).log10(),
+        spec.eff.comm_eff_max,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuCatalog;
+
+    fn a800() -> GpuSpec {
+        let c = GpuCatalog::builtin();
+        c.spec(c.find("a800").unwrap()).clone()
+    }
+
+    #[test]
+    fn eta_comp_monotone_in_size() {
+        let g = a800();
+        let small = eta_comp(&g, 1e6, 512.0, 200.0);
+        let big = eta_comp(&g, 1e12, 512.0, 200.0);
+        assert!(big > small);
+        assert!(big <= g.eff.util_max + 1e-12);
+    }
+
+    #[test]
+    fn eta_comp_penalizes_skinny() {
+        let g = a800();
+        let fat = eta_comp(&g, 1e11, 512.0, 200.0);
+        let thin = eta_comp(&g, 1e11, 16.0, 200.0);
+        assert!(thin < fat);
+    }
+
+    #[test]
+    fn eta_comp_memory_bound_clamp() {
+        let g = a800();
+        let compute_bound = eta_comp(&g, 1e11, 512.0, 400.0);
+        let mem_bound = eta_comp(&g, 1e11, 512.0, 10.0);
+        assert!(mem_bound < compute_bound * 0.3);
+    }
+
+    #[test]
+    fn eta_comm_latency_saturation() {
+        let g = a800();
+        let tiny = eta_comm(&g, 1e4, 400.0, 8.0);
+        let huge = eta_comm(&g, 1e9, 400.0, 8.0);
+        assert!(huge > 5.0 * tiny);
+        assert!(huge <= g.eff.comm_eff_max);
+        // Larger groups are less efficient at fixed size.
+        assert!(eta_comm(&g, 1e7, 400.0, 64.0) < eta_comm(&g, 1e7, 400.0, 8.0));
+    }
+
+    #[test]
+    fn bounds_hold_everywhere() {
+        let g = a800();
+        for flops in [1.0, 1e6, 1e12, 1e15] {
+            for d in [1.0, 64.0, 4096.0] {
+                for i in [0.1, 10.0, 1000.0] {
+                    let e = eta_comp(&g, flops, d, i);
+                    assert!(e > 0.0 && e <= 1.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_descriptor() {
+        let g = Gemm::new(4096.0, 4096.0, 4096.0);
+        assert_eq!(g.flops(), 2.0 * 4096f64.powi(3));
+        assert_eq!(g.min_dim(), 4096.0);
+        // Large cube GEMM is strongly compute bound.
+        assert!(g.intensity() > 100.0);
+    }
+}

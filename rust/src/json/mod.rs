@@ -1,0 +1,272 @@
+//! Minimal JSON substrate (parser + writer + access helpers).
+//!
+//! The offline image carries no `serde`/`serde_json`, so Astra ships its own
+//! JSON layer. It is used for: the GPU catalog and hardware profile
+//! (`data/*.json`), the GBDT forest interchange with the python compile path
+//! (`artifacts/forest.json`), search-request config files, and machine-
+//! readable bench output.
+//!
+//! Supported: full RFC 8259 syntax (objects, arrays, strings with escapes and
+//! `\uXXXX` incl. surrogate pairs, numbers, booleans, null). Numbers are kept
+//! as `f64` (adequate for all Astra payloads; integers up to 2^53 round-trip).
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+
+/// A parsed JSON value. Object keys are kept sorted (BTreeMap) so output is
+/// deterministic — important for golden tests and artifact diffing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Build an empty object.
+    pub fn obj() -> Value {
+        Value::Obj(BTreeMap::new())
+    }
+
+    /// Fluent insertion for object construction.
+    pub fn set(mut self, key: &str, v: impl Into<Value>) -> Value {
+        if let Value::Obj(m) = &mut self {
+            m.insert(key.to_string(), v.into());
+        }
+        self
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Object field access; `None` for non-objects or missing keys.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_obj().and_then(|m| m.get(key))
+    }
+
+    /// Array index access.
+    pub fn at(&self, idx: usize) -> Option<&Value> {
+        self.as_arr().and_then(|a| a.get(idx))
+    }
+
+    /// `/a/b/0/c`-style pointer lookup (subset of RFC 6901: no escaping).
+    pub fn pointer(&self, ptr: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in ptr.split('/').filter(|p| !p.is_empty()) {
+            cur = match cur {
+                Value::Obj(m) => m.get(part)?,
+                Value::Arr(a) => a.get(part.parse::<usize>().ok()?)?,
+                _ => return None,
+            };
+        }
+        Some(cur)
+    }
+
+    /// Typed field access helpers with error messages, for config loading.
+    pub fn req_f64(&self, key: &str) -> crate::Result<f64> {
+        self.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| crate::AstraError::Json(format!("missing/invalid number field '{key}'")))
+    }
+
+    pub fn req_str(&self, key: &str) -> crate::Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| crate::AstraError::Json(format!("missing/invalid string field '{key}'")))
+    }
+
+    pub fn req_arr(&self, key: &str) -> crate::Result<&[Value]> {
+        self.get(key)
+            .and_then(Value::as_arr)
+            .ok_or_else(|| crate::AstraError::Json(format!("missing/invalid array field '{key}'")))
+    }
+
+    /// Extract a flat `Vec<f64>` from an array field.
+    pub fn req_f64_arr(&self, key: &str) -> crate::Result<Vec<f64>> {
+        self.req_arr(key)?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| crate::AstraError::Json(format!("non-number in array '{key}'")))
+            })
+            .collect()
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Value {
+        Value::Num(n)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Value {
+        Value::Num(n as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Value {
+        Value::Num(n as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(n: i64) -> Value {
+        Value::Num(n as f64)
+    }
+}
+impl From<u32> for Value {
+    fn from(n: u32) -> Value {
+        Value::Num(n as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Value {
+        Value::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Read and parse a JSON file.
+pub fn from_file(path: &std::path::Path) -> crate::Result<Value> {
+    let text = std::fs::read_to_string(path)?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for src in ["null", "true", "false", "0", "-1.5", "1e3", "\"hi\""] {
+            let v = parse(src).unwrap();
+            let back = parse(&to_string(&v)).unwrap();
+            assert_eq!(v, back, "roundtrip of {src}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a":[1,2,{"b":null,"c":[true,false]}],"d":"x\ny"}"#;
+        let v = parse(src).unwrap();
+        let back = parse(&to_string(&v)).unwrap();
+        assert_eq!(v, back);
+        assert_eq!(v.pointer("/a/2/c/0"), Some(&Value::Bool(true)));
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = parse(r#""Aé😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "Aé😀");
+        let back = parse(&to_string(&v)).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for src in ["", "{", "[1,]", "{\"a\":}", "tru", "1.2.3", "\"\\q\"", "[1 2]", "{\"a\" 1}"] {
+            assert!(parse(src).is_err(), "should reject {src:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        assert!(parse("1 2").is_err());
+        assert!(parse("{} []").is_err());
+    }
+
+    #[test]
+    fn deep_pointer_and_helpers() {
+        let v = parse(r#"{"gpus":[{"name":"a800","tflops":312.0}]}"#).unwrap();
+        let g = v.pointer("/gpus/0").unwrap();
+        assert_eq!(g.req_str("name").unwrap(), "a800");
+        assert_eq!(g.req_f64("tflops").unwrap(), 312.0);
+        assert!(g.req_str("missing").is_err());
+    }
+
+    #[test]
+    fn builder_api() {
+        let v = Value::obj().set("x", 1.0).set("y", "z").set("b", true);
+        assert_eq!(to_string(&v), r#"{"b":true,"x":1,"y":"z"}"#);
+    }
+
+    #[test]
+    fn integer_fidelity() {
+        // 2^53-safe integers must round-trip exactly.
+        let n = 9007199254740991u64;
+        let v = parse(&format!("{n}")).unwrap();
+        assert_eq!(v.as_u64(), Some(n));
+        assert_eq!(to_string(&v), format!("{n}"));
+    }
+
+    #[test]
+    fn pretty_is_reparsable() {
+        let src = r#"{"a":[1,{"b":[]}],"c":{}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
+    }
+}

@@ -1,0 +1,118 @@
+//! # Astra — automatic parallel-strategy search on heterogeneous GPUs
+//!
+//! Reproduction of *"Astra: Efficient and Money-saving Automatic Parallel
+//! Strategies Search on Heterogeneous GPUs"* (cs.DC 2025).
+//!
+//! Astra searches the cross-product of Megatron-LM parallelization
+//! parameters and GPU-pool configurations for the throughput-optimal (or
+//! money-optimal) hybrid parallel strategy, using an analytic cost model
+//! whose per-operator efficiency factors are predicted by a gradient-boosted
+//! tree ensemble, and a closed-form heterogeneous pipeline time model
+//! (Eq. 22/23 of the paper).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the coordinator: GPU pools, strategy
+//!   enumeration, rule/memory filters, heterogeneous partition solver,
+//!   Pareto/money selection, the discrete-event ground-truth simulator and
+//!   the benchmark harness.
+//! * **Layer 2 (python/compile/model.py)** — the batched JAX scorer graph,
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels: batched GBDT
+//!   forest inference and batched pipeline-time evaluation.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT so that no
+//! Python runs on the search path. The [`coordinator`] can score strategies
+//! either with the `native` pure-rust engine or the `hlo` engine; both
+//! implement identical math (parity-tested).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use astra::prelude::*;
+//!
+//! let catalog = GpuCatalog::builtin();
+//! let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+//! let req = SearchRequest::homogeneous("a800", 64, model);
+//! let engine = AstraEngine::new(catalog, EngineConfig::default());
+//! let report = engine.search(&req).unwrap();
+//! println!("best: {}", report.best().unwrap().summary());
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod cost;
+pub mod expert;
+pub mod gbdt;
+pub mod gpu;
+pub mod hetero;
+pub mod hw;
+pub mod json;
+pub mod logging;
+pub mod memory;
+pub mod model;
+pub mod pareto;
+pub mod pool;
+pub mod prng;
+pub mod report;
+pub mod rules;
+pub mod runtime;
+pub mod simulator;
+pub mod strategy;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coordinator::{AstraEngine, EngineConfig, ScoredStrategy, SearchReport, SearchRequest};
+    pub use crate::cost::{CostModel, CostBreakdown};
+    pub use crate::expert::ExpertPanel;
+    pub use crate::gpu::{GpuCatalog, GpuSpec, GpuType};
+    pub use crate::hetero::HeteroSolver;
+    pub use crate::memory::MemoryModel;
+    pub use crate::model::{ModelRegistry, ModelSpec};
+    pub use crate::pareto::{MoneyModel, OptimalPool};
+    pub use crate::rules::RuleSet;
+    pub use crate::simulator::{PipelineSimulator, SimConfig};
+    pub use crate::strategy::{GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};
+}
+
+/// Crate-wide error type. Hand-rolled (no `thiserror` in the offline image).
+#[derive(Debug)]
+pub enum AstraError {
+    /// JSON syntax or type error, with byte offset context.
+    Json(String),
+    /// Rule DSL parse/eval error.
+    Rule(String),
+    /// Invalid search request / configuration.
+    Config(String),
+    /// Strategy space or solver inconsistency.
+    Search(String),
+    /// PJRT / artifact loading failure.
+    Runtime(String),
+    /// Filesystem error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for AstraError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AstraError::Json(m) => write!(f, "json error: {m}"),
+            AstraError::Rule(m) => write!(f, "rule error: {m}"),
+            AstraError::Config(m) => write!(f, "config error: {m}"),
+            AstraError::Search(m) => write!(f, "search error: {m}"),
+            AstraError::Runtime(m) => write!(f, "runtime error: {m}"),
+            AstraError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AstraError {}
+
+impl From<std::io::Error> for AstraError {
+    fn from(e: std::io::Error) -> Self {
+        AstraError::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, AstraError>;

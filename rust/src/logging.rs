@@ -1,0 +1,105 @@
+//! Leveled logging substrate (the `log` facade is cached but a full env-logger
+//! is not; a 60-line logger keeps the dependency surface at zero).
+//!
+//! Level is process-global, settable via `ASTRA_LOG` (error|warn|info|debug|
+//! trace) or [`set_level`]. Output goes to stderr so bench tables on stdout
+//! stay machine-readable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // default Info
+static INIT: std::sync::Once = std::sync::Once::new();
+static mut START: Option<Instant> = None;
+
+fn start() -> Instant {
+    unsafe {
+        INIT.call_once(|| {
+            START = Some(Instant::now());
+            if let Ok(env) = std::env::var("ASTRA_LOG") {
+                if let Some(l) = parse_level(&env) {
+                    LEVEL.store(l as u8, Ordering::Relaxed);
+                }
+            }
+        });
+        #[allow(static_mut_refs)]
+        START.unwrap()
+    }
+}
+
+fn parse_level(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// Set the global level programmatically (CLI `-v` flags).
+pub fn set_level(l: Level) {
+    start();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Core log entry point; use the `info!`-style macros instead.
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    let t0 = start();
+    if !enabled(l) {
+        return;
+    }
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{:9.3}s {tag} {module}] {msg}", t0.elapsed().as_secs_f64());
+}
+
+#[macro_export]
+macro_rules! log_error { ($($a:tt)*) => { $crate::logging::log($crate::logging::Level::Error, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($a:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($a:tt)*) => { $crate::logging::log($crate::logging::Level::Info, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($a:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($a:tt)*) => { $crate::logging::log($crate::logging::Level::Trace, module_path!(), format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("DEBUG"), Some(Level::Debug));
+        assert_eq!(parse_level("nope"), None);
+    }
+}

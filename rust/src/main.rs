@@ -1,0 +1,193 @@
+//! `astra` CLI — the Layer-3 entry point.
+//!
+//! Subcommands:
+//!   search    run a strategy search (mode 1/2/3 per §3.2)
+//!   simulate  replay one strategy on the discrete-event simulator
+//!   validate  cost model vs simulator accuracy over top-k strategies
+//!   info      print the GPU catalog and model registry
+
+use astra::cli::Cli;
+use astra::coordinator::{AstraEngine, EngineConfig, ScoringEngine, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::pareto::MoneyModel;
+use astra::report::{fmt_secs, Table};
+use astra::rules::RuleSet;
+use astra::simulator::{PipelineSimulator, SimConfig};
+use astra::strategy::GpuPoolMode;
+
+fn main() {
+    let cli = Cli::new(
+        "astra",
+        "automatic parallel-strategy search on homogeneous and heterogeneous GPUs",
+    )
+    .positional("command", "search | simulate | validate | info")
+    .opt("model", "model name (see `astra info`)", Some("llama2-7b"))
+    .opt("gpu", "GPU type for homogeneous/cost modes", Some("a800"))
+    .opt("gpus", "cluster GPU count", Some("64"))
+    .opt("mode", "homogeneous | heterogeneous | cost", Some("homogeneous"))
+    .opt("hetero", "hetero caps, e.g. 'a800:2048,h100:7168'", None)
+    .opt("max-money", "money ceiling in USD (cost mode)", None)
+    .opt("train-tokens", "token budget used for pricing", Some("1e9"))
+    .opt("engine", "native | hlo", Some("native"))
+    .opt("rules", "path to a rule file (defaults to the paper's rules)", None)
+    .opt("top", "how many strategies to print", Some("5"))
+    .flag("exhaustive", "exhaustive Eq.23 layer enumeration (hetero)")
+    .flag("no-forest", "use analytic η instead of the trained GBDT")
+    .flag("verbose", "debug logging");
+    let args = cli.parse();
+
+    if args.flag("verbose") {
+        astra::logging::set_level(astra::logging::Level::Debug);
+    }
+
+    let command = args.positionals().first().cloned().unwrap_or_else(|| "search".into());
+    if let Err(e) = run(&command, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+
+    if command == "info" {
+        let mut t = Table::new(&["gpu", "mem GiB", "bf16 TFLOPs", "NVLink GB/s", "inter GB/s", "$/h"]);
+        for s in catalog.all() {
+            t.row(&[
+                s.name.clone(),
+                format!("{:.0}", s.mem_gib),
+                format!("{:.0}", s.peak_tflops_bf16),
+                format!("{:.0}", s.nvlink_gbs),
+                format!("{:.0}", s.internode_gbs),
+                format!("{:.2}", s.price_per_hour),
+            ]);
+        }
+        t.emit("GPU catalog", None);
+        let mut m = Table::new(&["model", "layers", "hidden", "heads", "ffn", "vocab", "params"]);
+        for spec in registry.all() {
+            m.row(&[
+                spec.name.clone(),
+                spec.layers.to_string(),
+                spec.hidden.to_string(),
+                spec.heads.to_string(),
+                spec.ffn.to_string(),
+                spec.vocab.to_string(),
+                format!("{:.1}B", spec.total_params() / 1e9),
+            ]);
+        }
+        m.emit("Model registry", None);
+        return Ok(());
+    }
+
+    let model = registry.get(args.get("model").unwrap())?.clone();
+    let count = args.get_usize("gpus")?;
+    let mode = match args.get("mode").unwrap() {
+        "homogeneous" => {
+            let gpu = catalog.find(args.get("gpu").unwrap())?;
+            GpuPoolMode::Homogeneous { gpu, count }
+        }
+        "heterogeneous" => {
+            let spec = args.get("hetero").ok_or_else(|| {
+                astra::AstraError::Config("--hetero 'type:cap,type:cap' required".into())
+            })?;
+            let mut caps = Vec::new();
+            for part in spec.split(',') {
+                let (name, cap) = part.split_once(':').ok_or_else(|| {
+                    astra::AstraError::Config(format!("bad hetero spec '{part}'"))
+                })?;
+                caps.push((
+                    catalog.find(name)?,
+                    cap.parse::<usize>().map_err(|_| {
+                        astra::AstraError::Config(format!("bad cap '{cap}'"))
+                    })?,
+                ));
+            }
+            GpuPoolMode::Heterogeneous { total: count, caps }
+        }
+        "cost" => {
+            let gpu = catalog.find(args.get("gpu").unwrap())?;
+            let max_money = args.get_f64("max-money").unwrap_or(f64::INFINITY);
+            GpuPoolMode::Cost { gpu, max_count: count, max_money }
+        }
+        other => {
+            return Err(astra::AstraError::Config(format!("unknown mode '{other}'")));
+        }
+    };
+
+    let rules = match args.get("rules") {
+        Some(path) => RuleSet::from_text(&std::fs::read_to_string(path)?)?,
+        None => RuleSet::paper_defaults(),
+    };
+    let engine_kind = match args.get("engine").unwrap() {
+        "hlo" => ScoringEngine::Hlo,
+        _ => ScoringEngine::Native,
+    };
+    let config = EngineConfig {
+        rules,
+        engine: engine_kind,
+        use_forests: !args.flag("no-forest"),
+        hetero_exhaustive: args.flag("exhaustive"),
+        money: MoneyModel { train_tokens: args.get_f64("train-tokens")? },
+        top_k: args.get_usize("top")?.max(5),
+        ..Default::default()
+    };
+    let engine = AstraEngine::new(catalog.clone(), config);
+    let req = SearchRequest { mode, model: model.clone() };
+
+    match command {
+        "search" => {
+            let report = engine.search(&req)?;
+            print_report(&model.name, &report, args.get_usize("top")?);
+        }
+        "simulate" | "validate" => {
+            let report = engine.search(&req)?;
+            let sim = PipelineSimulator::new(catalog, SimConfig::default());
+            let n = if command == "simulate" { 1 } else { args.get_usize("top")? };
+            let mut t = Table::new(&["strategy", "predicted", "simulated", "accuracy"]);
+            for s in report.top.iter().take(n) {
+                let r = sim.measure(&model, &s.strategy);
+                let acc = 1.0 - (s.cost.step_time - r.step_time).abs() / r.step_time;
+                t.row(&[
+                    s.strategy.summary(),
+                    fmt_secs(s.cost.step_time),
+                    fmt_secs(r.step_time),
+                    format!("{:.1}%", acc * 100.0),
+                ]);
+            }
+            t.emit("cost model vs discrete-event simulator", None);
+        }
+        other => {
+            return Err(astra::AstraError::Config(format!(
+                "unknown command '{other}' (search | simulate | validate | info)"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn print_report(model: &str, report: &astra::coordinator::SearchReport, top: usize) {
+    println!(
+        "\nmodel={model}  |S|={} generated, {} rule-filtered, {} memory-filtered, {} scored",
+        report.generated, report.rule_filtered, report.mem_filtered, report.scored
+    );
+    println!(
+        "search {}  simulation {}  e2e {}",
+        fmt_secs(report.search_secs),
+        fmt_secs(report.simulate_secs),
+        fmt_secs(report.e2e_secs())
+    );
+    let mut t = Table::new(&["#", "strategy", "step", "tokens/s", "MFU", "run cost"]);
+    for (i, s) in report.top.iter().take(top).enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            s.strategy.summary(),
+            fmt_secs(s.cost.step_time),
+            format!("{:.0}", s.cost.tokens_per_s),
+            format!("{:.3}", s.cost.mfu),
+            format!("${:.0}", s.money_usd),
+        ]);
+    }
+    t.emit("best strategies", None);
+}

@@ -1,0 +1,302 @@
+//! Memory-based filter (paper §3.3, Eq. 20–21).
+//!
+//! Estimates per-stage, per-GPU memory for a strategy and drops strategies
+//! whose peak exceeds the device capacity. The activation terms follow the
+//! published Megatron activation-memory analysis (Korthikanti et al., 2022):
+//!
+//! * baseline per layer per microbatch: `s·b·h·(10 + 24/t) + 5·a·s²·b/t`
+//!   bytes (bf16 activations, fp32 softmax stats folded into the constants);
+//! * flash attention or selective recompute drop the `5·a·s²·b/t` term;
+//! * sequence parallelism shards the residual `10·s·b·h` by `t`;
+//! * full recomputation stores only the `2·s·b·h` layer input for the
+//!   recomputed layers.
+//!
+//! 1F1B keeps `min(K, P−i)` microbatches in flight on stage `i`; interleaving
+//! adds a fractional extra chunk. Optimizer state is Adam (fp32 master +
+//! m + v = 12 B/param), sharded by `dp` under the distributed optimizer and
+//! moved to host entirely under optimizer offload.
+
+use crate::gpu::GpuCatalog;
+use crate::model::ModelSpec;
+use crate::strategy::{ParallelStrategy, Recompute};
+
+/// Byte-per-parameter constants (bf16 weights, fp32 grads, Adam fp32 states).
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub weight_bytes: f64,
+    pub grad_bytes: f64,
+    pub optimizer_bytes: f64,
+    /// Fraction of capacity usable after fragmentation/workspace slack.
+    pub headroom: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        MemoryModel { weight_bytes: 2.0, grad_bytes: 4.0, optimizer_bytes: 12.0, headroom: 0.97 }
+    }
+}
+
+/// Per-stage memory decomposition in bytes.
+#[derive(Debug, Clone, Default)]
+pub struct MemBreakdown {
+    pub weights: f64,
+    pub grads: f64,
+    pub optimizer: f64,
+    pub activations: f64,
+    pub logits: f64,
+    pub total: f64,
+}
+
+impl MemoryModel {
+    /// Parameters held by one GPU of pipeline stage `i` (tensor-sharded).
+    pub fn stage_params(&self, m: &ModelSpec, s: &ParallelStrategy, stage: usize) -> f64 {
+        let tp = s.tp as f64;
+        let layers = s.cluster.layers_of_stage(stage) as f64;
+        let mut p = if m.is_moe() {
+            // Expert weights are additionally sharded across the EP group;
+            // attention/router/norms replicate like a dense layer.
+            let h = m.hidden as f64;
+            let kvf = m.kv_heads as f64 / m.heads as f64;
+            let mats = if m.gated_mlp() { 3.0 } else { 2.0 };
+            let attn = h * h * (2.0 + 2.0 * kvf);
+            let router = h * m.num_experts as f64;
+            let experts = m.num_experts as f64 * mats * h * m.ffn as f64 / s.ep as f64;
+            layers * ((attn + router + 2.0 * h) / tp + experts / tp)
+        } else {
+            layers * m.layer_params() / tp
+        };
+        if stage == 0 {
+            p += m.embedding_params() / tp; // input embedding, vocab-sharded
+        }
+        if stage == s.pp() - 1 {
+            p += m.embedding_params() / tp; // untied LM head
+            p += m.hidden as f64; // final norm
+        }
+        p
+    }
+
+    /// Activation bytes per *layer* per microbatch on one GPU.
+    pub fn act_bytes_per_layer(&self, m: &ModelSpec, s: &ParallelStrategy) -> f64 {
+        let b = s.micro_batch as f64;
+        let seq = m.seq_len as f64;
+        let h = m.hidden as f64;
+        let a = m.heads as f64;
+        let t = s.tp as f64;
+        let sbh = seq * b * h;
+        // MoE: top-k routing multiplies the MLP activation share (the
+        // 24/t term is ~2/3 MLP); approximate with the active-expert factor.
+        let mlp_factor = m.active_mlp_factor();
+        let linear = if s.sequence_parallel {
+            sbh * (10.0 / t + 24.0 * mlp_factor / t)
+        } else {
+            sbh * (10.0 + 24.0 * mlp_factor / t)
+        };
+        let score = if s.use_flash_attn || s.recompute == Recompute::Selective {
+            0.0
+        } else {
+            5.0 * a * seq * seq * b / t
+        };
+        linear + score
+    }
+
+    /// Peak stored activation bytes on one GPU of stage `i`.
+    pub fn stage_activation_bytes(&self, m: &ModelSpec, s: &ParallelStrategy, stage: usize) -> f64 {
+        let pp = s.pp();
+        let k = s.num_microbatches() as f64;
+        let layers = s.cluster.layers_of_stage(stage) as f64;
+        // 1F1B warmup depth for this stage, plus a fractional extra chunk
+        // under interleaving (Megatron's interleaved schedule holds up to
+        // (vpp-1)/vpp of one more chunk's activations).
+        let in_flight = k.min((pp - stage) as f64) + (s.vpp as f64 - 1.0) / s.vpp as f64;
+        let per_layer = self.act_bytes_per_layer(m, s);
+        let input_only = 2.0 * m.seq_len as f64 * s.micro_batch as f64 * m.hidden as f64;
+        let act_one_mb = match s.recompute {
+            Recompute::Full => {
+                let rl = (s.recompute_num_layers as f64).min(layers);
+                rl * input_only + (layers - rl) * per_layer
+            }
+            _ => layers * per_layer,
+        };
+        act_one_mb * in_flight
+    }
+
+    /// Softmax logits buffer on the last stage (fp32, vocab-sharded by tp).
+    pub fn logits_bytes(&self, m: &ModelSpec, s: &ParallelStrategy, stage: usize) -> f64 {
+        if stage == s.pp() - 1 {
+            4.0 * m.seq_len as f64 * s.micro_batch as f64 * m.vocab as f64 / s.tp as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Full decomposition for one GPU of stage `i` (Eq. 20's `M_i(s_j)`).
+    pub fn stage_breakdown(&self, m: &ModelSpec, s: &ParallelStrategy, stage: usize) -> MemBreakdown {
+        let params = self.stage_params(m, s, stage);
+        let weights = params * self.weight_bytes;
+        let grads = params * self.grad_bytes;
+        let optimizer = if s.offload_optimizer {
+            0.0 // resident on host; PCIe traffic charged by the cost model
+        } else if s.use_distributed_optimizer {
+            params * self.optimizer_bytes / s.dp as f64
+        } else {
+            params * self.optimizer_bytes
+        };
+        let activations = self.stage_activation_bytes(m, s, stage);
+        let logits = self.logits_bytes(m, s, stage);
+        let total = weights + grads + optimizer + activations + logits;
+        MemBreakdown { weights, grads, optimizer, activations, logits, total }
+    }
+
+    /// Peak across stages, in bytes.
+    pub fn peak_bytes(&self, m: &ModelSpec, s: &ParallelStrategy) -> f64 {
+        (0..s.pp())
+            .map(|i| self.stage_breakdown(m, s, i).total)
+            .fold(0.0, f64::max)
+    }
+
+    /// Eq. 21: strategy survives iff every stage fits its GPU's memory.
+    pub fn fits(&self, m: &ModelSpec, s: &ParallelStrategy, catalog: &GpuCatalog) -> bool {
+        (0..s.pp()).all(|i| {
+            let cap = catalog.spec(s.cluster.gpu_of_stage(i)).usable_mem_bytes() * self.headroom;
+            self.stage_breakdown(m, s, i).total <= cap
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuCatalog;
+    use crate::model::ModelRegistry;
+    use crate::strategy::{ClusterAssignment, ParallelStrategy, RecomputeMethod};
+
+    fn strat(m: &ModelSpec, tp: usize, pp: usize, dp: usize, mbs: usize) -> ParallelStrategy {
+        ParallelStrategy {
+            cluster: ClusterAssignment::homogeneous(1, pp, m.layers / pp),
+            tp,
+            dp,
+            micro_batch: mbs,
+            global_batch: m.global_batch,
+            vpp: 1,
+            sequence_parallel: tp > 1,
+            use_distributed_optimizer: true,
+            recompute: Recompute::None,
+            recompute_method: RecomputeMethod::Uniform,
+            recompute_num_layers: 0,
+            offload_optimizer: false,
+            overlap_grad_reduce: true,
+            overlap_param_gather: true,
+            overlap_p2p: true,
+            tp_comm_overlap: true,
+            use_flash_attn: true,
+            ep: 1,
+        }
+    }
+
+    fn setup() -> (ModelRegistry, GpuCatalog, MemoryModel) {
+        (ModelRegistry::builtin(), GpuCatalog::builtin(), MemoryModel::default())
+    }
+
+    #[test]
+    fn seventyb_needs_model_parallelism() {
+        // Llama-2-70B cannot fit dp-only on 80 GiB GPUs: weights alone are
+        // ~140 GB. The memory filter must reject tp=1,pp=1.
+        let (reg, cat, mm) = setup();
+        let m = reg.get("llama2-70b").unwrap();
+        let s = strat(m, 1, 1, 64, 1);
+        assert!(!mm.fits(m, &s, &cat));
+        // With tp=8, pp=8 it comfortably fits.
+        let s = strat(m, 8, 8, 1, 1);
+        assert!(mm.fits(m, &s, &cat));
+    }
+
+    #[test]
+    fn sevenb_fits_modest_parallelism() {
+        let (reg, cat, mm) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let s = strat(m, 2, 1, 32, 1);
+        assert!(mm.fits(m, &s, &cat), "peak {:.1} GiB", mm.peak_bytes(m, &s) / 1073741824.0);
+    }
+
+    #[test]
+    fn tp_reduces_memory() {
+        let (reg, _, mm) = setup();
+        let m = reg.get("llama2-13b").unwrap();
+        let m1 = mm.peak_bytes(m, &strat(m, 1, 1, 64, 1));
+        let m4 = mm.peak_bytes(m, &strat(m, 4, 1, 16, 1));
+        assert!(m4 < m1 / 2.0, "tp=4 {m4:.3e} vs tp=1 {m1:.3e}");
+    }
+
+    #[test]
+    fn full_recompute_cuts_activations() {
+        let (reg, _, mm) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let base = strat(m, 2, 4, 8, 4);
+        let mut rc = base.clone();
+        rc.recompute = Recompute::Full;
+        rc.recompute_num_layers = m.layers / 4;
+        let a0 = mm.stage_activation_bytes(m, &base, 0);
+        let a1 = mm.stage_activation_bytes(m, &rc, 0);
+        assert!(a1 < a0 * 0.2, "full recompute {a1:.3e} vs none {a0:.3e}");
+    }
+
+    #[test]
+    fn flash_attn_drops_quadratic_term() {
+        let (reg, _, mm) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let mut s = strat(m, 2, 2, 16, 1);
+        s.use_flash_attn = true;
+        let with_flash = mm.act_bytes_per_layer(m, &s);
+        s.use_flash_attn = false;
+        let without = mm.act_bytes_per_layer(m, &s);
+        assert!(without > with_flash * 1.5);
+    }
+
+    #[test]
+    fn offload_frees_optimizer_memory() {
+        let (reg, _, mm) = setup();
+        let m = reg.get("llama2-13b").unwrap();
+        let mut s = strat(m, 4, 2, 8, 1);
+        s.use_distributed_optimizer = false;
+        let on_dev = mm.stage_breakdown(m, &s, 0);
+        s.offload_optimizer = true;
+        let off = mm.stage_breakdown(m, &s, 0);
+        assert_eq!(off.optimizer, 0.0);
+        assert!(off.total < on_dev.total);
+    }
+
+    #[test]
+    fn first_and_last_stage_heavier() {
+        let (reg, _, mm) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let s = strat(m, 2, 4, 8, 1);
+        let w_mid = mm.stage_params(m, &s, 1);
+        let w_first = mm.stage_params(m, &s, 0);
+        let w_last = mm.stage_params(m, &s, 3);
+        assert!(w_first > w_mid);
+        assert!(w_last > w_mid);
+    }
+
+    #[test]
+    fn stage0_holds_more_activations_than_last() {
+        let (reg, _, mm) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let s = strat(m, 2, 4, 8, 1); // K = 2048/8 = 256 >> pp
+        let a0 = mm.stage_activation_bytes(m, &s, 0);
+        let a3 = mm.stage_activation_bytes(m, &s, 3);
+        assert!(a0 > a3, "1F1B warmup depth: stage0 {a0:.3e} vs last {a3:.3e}");
+    }
+
+    #[test]
+    fn expert_parallel_shards_expert_weights() {
+        let (reg, _, mm) = setup();
+        let m = reg.get("mixtral-8x7b").unwrap();
+        let mut s = strat(m, 2, 2, 16, 1);
+        s.ep = 1;
+        let p1 = mm.stage_params(m, &s, 0);
+        s.ep = 8;
+        let p8 = mm.stage_params(m, &s, 0);
+        // 8 experts dominate the layer params → ep=8 cuts most of it.
+        assert!(p8 < p1 * 0.35, "ep=8 {p8:.3e} vs ep=1 {p1:.3e}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Money-limit search (paper §3.6, Eq. 29–33).
+//!
+//! Builds the throughput/cost *optimal pool* (the Pareto frontier: no other
+//! strategy is simultaneously faster and cheaper), prices strategies with
+//! `M_i = T_i · N_g · F_g` (Eq. 32, summed per GPU type for heterogeneous
+//! clusters), and selects the highest-throughput strategy under a money
+//! ceiling using the Eq. 33 sort order.
+
+use crate::gpu::GpuCatalog;
+use crate::model::ModelSpec;
+use crate::strategy::ParallelStrategy;
+
+/// Converts step time into a training bill.
+#[derive(Debug, Clone)]
+pub struct MoneyModel {
+    /// Token budget of the training run being priced (the paper prices a
+    /// full training; we default to a 1B-token fine-tune-scale run so the
+    /// numbers stay readable).
+    pub train_tokens: f64,
+}
+
+impl Default for MoneyModel {
+    fn default() -> Self {
+        MoneyModel { train_tokens: 1e9 }
+    }
+}
+
+impl MoneyModel {
+    /// Number of optimizer steps for the token budget.
+    pub fn steps(&self, m: &ModelSpec) -> f64 {
+        (self.train_tokens / (m.global_batch as f64 * m.seq_len as f64)).ceil()
+    }
+
+    /// Total wall-clock seconds for the run.
+    pub fn wall_seconds(&self, m: &ModelSpec, step_time: f64) -> f64 {
+        self.steps(m) * step_time
+    }
+
+    /// Eq. 32: money cost in USD (per-type Σ count·fee·time for hetero).
+    pub fn cost_usd(
+        &self,
+        m: &ModelSpec,
+        s: &ParallelStrategy,
+        catalog: &GpuCatalog,
+        step_time: f64,
+    ) -> f64 {
+        let t = self.wall_seconds(m, step_time);
+        s.cluster
+            .gpus_by_type(s.tp, s.dp)
+            .iter()
+            .map(|&(g, n)| t * n as f64 * catalog.spec(g).price_per_second())
+            .sum()
+    }
+}
+
+/// One pooled candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolEntry {
+    /// Index into the caller's strategy list.
+    pub idx: usize,
+    /// Throughput `P_i` (tokens/s).
+    pub throughput: f64,
+    /// Money cost `C_i` (USD).
+    pub cost: f64,
+}
+
+/// The optimal pool (Eq. 30–31): the Pareto frontier over (P, C), kept
+/// sorted by Eq. 33 (throughput desc, cost asc on ties).
+#[derive(Debug, Clone, Default)]
+pub struct OptimalPool {
+    entries: Vec<PoolEntry>,
+}
+
+impl OptimalPool {
+    /// Build the frontier in O(n log n): sort by cost ascending and keep
+    /// strictly-increasing throughput.
+    pub fn build(mut candidates: Vec<PoolEntry>) -> OptimalPool {
+        candidates.retain(|e| e.throughput.is_finite() && e.cost.is_finite());
+        candidates.sort_by(|a, b| {
+            a.cost
+                .partial_cmp(&b.cost)
+                .unwrap()
+                .then(b.throughput.partial_cmp(&a.throughput).unwrap())
+        });
+        let mut frontier: Vec<PoolEntry> = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        for e in candidates {
+            if e.throughput > best {
+                best = e.throughput;
+                frontier.push(e);
+            }
+        }
+        // Eq. 33 order: throughput descending (cost ascending follows).
+        frontier.reverse();
+        OptimalPool { entries: frontier }
+    }
+
+    /// Frontier entries in Eq. 33 order.
+    pub fn entries(&self) -> &[PoolEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Highest-throughput strategy with `cost ≤ max_money` (the mode-3
+    /// selection rule).
+    pub fn best_within_budget(&self, max_money: f64) -> Option<&PoolEntry> {
+        self.entries.iter().find(|e| e.cost <= max_money)
+    }
+
+    /// Frontier invariant check (used by property tests): no entry is
+    /// dominated by another (Eq. 29).
+    pub fn is_valid_frontier(&self) -> bool {
+        for a in &self.entries {
+            for b in &self.entries {
+                if b.throughput > a.throughput && b.cost < a.cost {
+                    return false;
+                }
+            }
+        }
+        // Eq. 33 order: throughput strictly descending, cost strictly
+        // descending as well (frontier ⇒ faster is pricier).
+        self.entries.windows(2).all(|w| {
+            w[0].throughput > w[1].throughput && w[0].cost > w[1].cost
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn e(idx: usize, p: f64, c: f64) -> PoolEntry {
+        PoolEntry { idx, throughput: p, cost: c }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let pool = OptimalPool::build(vec![
+            e(0, 100.0, 10.0),
+            e(1, 90.0, 12.0),  // dominated: slower AND pricier than 0
+            e(2, 120.0, 20.0),
+            e(3, 80.0, 5.0),
+        ]);
+        let idxs: Vec<usize> = pool.entries().iter().map(|x| x.idx).collect();
+        assert_eq!(idxs, vec![2, 0, 3]);
+        assert!(pool.is_valid_frontier());
+    }
+
+    #[test]
+    fn budget_selection() {
+        let pool = OptimalPool::build(vec![e(0, 100.0, 10.0), e(1, 200.0, 50.0), e(2, 50.0, 2.0)]);
+        assert_eq!(pool.best_within_budget(100.0).unwrap().idx, 1);
+        assert_eq!(pool.best_within_budget(20.0).unwrap().idx, 0);
+        assert_eq!(pool.best_within_budget(3.0).unwrap().idx, 2);
+        assert!(pool.best_within_budget(1.0).is_none());
+    }
+
+    #[test]
+    fn frontier_invariant_random() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200) as usize;
+            let cands: Vec<PoolEntry> = (0..n)
+                .map(|i| e(i, rng.range_f64(1.0, 1000.0), rng.range_f64(1.0, 1000.0)))
+                .collect();
+            let pool = OptimalPool::build(cands.clone());
+            assert!(pool.is_valid_frontier());
+            // Every candidate is dominated-or-equal by something on the frontier.
+            for c in &cands {
+                assert!(pool.entries().iter().any(|f| f.throughput >= c.throughput
+                    && f.cost <= c.cost
+                    || (f.idx == c.idx)));
+            }
+        }
+    }
+
+    #[test]
+    fn ties_kept_single() {
+        let pool = OptimalPool::build(vec![e(0, 100.0, 10.0), e(1, 100.0, 10.0)]);
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn money_model_steps() {
+        let reg = crate::model::ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap(); // gbs 2048 × seq 4096 = 8.4M tokens/step
+        let mm = MoneyModel { train_tokens: 1e9 };
+        assert_eq!(mm.steps(m), (1e9f64 / (2048.0 * 4096.0)).ceil());
+    }
+}

@@ -1,0 +1,157 @@
+//! Scoped worker-pool substrate (no `rayon` offline).
+//!
+//! Built on `std::thread::scope`, so workers may borrow from the caller's
+//! stack. Two primitives cover every parallel site in Astra:
+//!
+//! * [`par_map_chunks`] — split a slice into contiguous chunks, map each
+//!   chunk on a worker, concatenate results in order (used by the scorer).
+//! * [`par_for_indices`] — dynamic work-stealing over an index range via an
+//!   atomic cursor (used by per-GPU-configuration search fan-out where item
+//!   costs are wildly uneven).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use: `ASTRA_THREADS` env override, else available
+/// parallelism, else 4.
+pub fn default_workers() -> usize {
+    if let Ok(s) = std::env::var("ASTRA_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Map `f` over contiguous chunks of `items` in parallel, preserving order.
+/// `f` receives `(chunk_start_index, chunk)` and returns a Vec of per-item
+/// outputs (must be `chunk.len()` long).
+pub fn par_map_chunks<T: Sync, R: Send>(
+    items: &[T],
+    workers: usize,
+    f: impl Fn(usize, &[T]) -> Vec<R> + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return f(0, items);
+    }
+    let chunk = n.div_ceil(workers);
+    let mut slots: Vec<Option<Vec<R>>> = (0..workers).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::new();
+        for (w, slot) in slots.iter_mut().enumerate() {
+            let start = w * chunk;
+            if start >= n {
+                break;
+            }
+            let end = ((w + 1) * chunk).min(n);
+            let part = &items[start..end];
+            handles.push(s.spawn(move || {
+                let out = f(start, part);
+                assert_eq!(out.len(), part.len(), "par_map_chunks: f must be 1:1");
+                *slot = Some(out);
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for s in slots.into_iter().flatten() {
+        out.extend(s);
+    }
+    out
+}
+
+/// Dynamically schedule indices `0..n` over `workers` threads; each worker
+/// calls `f(i)` and pushes the result; results are returned sorted by index.
+pub fn par_for_indices<R: Send>(
+    n: usize,
+    workers: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        let f = &f;
+        let cursor = &cursor;
+        let results = &results;
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            handles.push(s.spawn(move || {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                results.lock().unwrap().extend(local);
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    let mut pairs = results.into_inner().unwrap();
+    pairs.sort_by_key(|(i, _)| *i);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_chunks_order_preserved() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let out = par_map_chunks(&xs, 7, |_, chunk| chunk.iter().map(|x| x * 2).collect());
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_chunks_start_index_correct() {
+        let xs = vec![(); 100];
+        let out = par_map_chunks(&xs, 3, |start, chunk| {
+            (0..chunk.len()).map(|i| start + i).collect()
+        });
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn indices_dynamic_all_covered() {
+        let out = par_for_indices(257, 5, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e: Vec<u32> = par_for_indices(0, 4, |_| 0u32);
+        assert!(e.is_empty());
+        let one = par_map_chunks(&[5u32], 8, |_, c| c.to_vec());
+        assert_eq!(one, vec![5]);
+    }
+
+    #[test]
+    fn workers_more_than_items() {
+        let xs: Vec<u32> = (0..3).collect();
+        let out = par_map_chunks(&xs, 64, |_, c| c.iter().map(|x| x + 1).collect());
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

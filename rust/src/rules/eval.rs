@@ -1,0 +1,207 @@
+//! Evaluator for compiled rule expressions.
+
+use super::parser::{BinOp, Expr};
+use super::FieldSource;
+use crate::{AstraError, Result};
+
+/// Runtime value of the rule DSL.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Val {
+    Int(i64),
+    Bool(bool),
+    /// Bare-identifier symbol (`selective`, `block`, ...).
+    Sym(String),
+    /// Megatron's unset/None.
+    None,
+}
+
+impl Val {
+    /// Truthiness: the top level of a rule must be a boolean-ish value.
+    pub fn truthy(&self) -> bool {
+        match self {
+            Val::Bool(b) => *b,
+            Val::Int(n) => *n != 0,
+            Val::Sym(_) => true,
+            Val::None => false,
+        }
+    }
+}
+
+fn err(msg: String) -> AstraError {
+    AstraError::Rule(msg)
+}
+
+pub fn eval(e: &Expr, src: &dyn FieldSource) -> Result<Val> {
+    match e {
+        Expr::Int(n) => Ok(Val::Int(*n)),
+        Expr::Sym(s) => Ok(match s.as_str() {
+            "true" => Val::Bool(true),
+            "false" => Val::Bool(false),
+            "None" | "none" | "null" => Val::None,
+            _ => Val::Sym(s.clone()),
+        }),
+        Expr::Var(name) => src
+            .field(name)
+            .ok_or_else(|| err(format!("unknown strategy field '${name}'"))),
+        Expr::Not(inner) => Ok(Val::Bool(!eval(inner, src)?.truthy())),
+        Expr::Bin(op, l, r) => {
+            match op {
+                // Short-circuit logical ops.
+                BinOp::And => {
+                    let lv = eval(l, src)?;
+                    if !lv.truthy() {
+                        return Ok(Val::Bool(false));
+                    }
+                    Ok(Val::Bool(eval(r, src)?.truthy()))
+                }
+                BinOp::Or => {
+                    let lv = eval(l, src)?;
+                    if lv.truthy() {
+                        return Ok(Val::Bool(true));
+                    }
+                    Ok(Val::Bool(eval(r, src)?.truthy()))
+                }
+                _ => {
+                    let lv = eval(l, src)?;
+                    let rv = eval(r, src)?;
+                    apply(*op, lv, rv)
+                }
+            }
+        }
+    }
+}
+
+fn apply(op: BinOp, l: Val, r: Val) -> Result<Val> {
+    use BinOp::*;
+    match op {
+        Eq => Ok(Val::Bool(val_eq(&l, &r))),
+        Ne => Ok(Val::Bool(!val_eq(&l, &r))),
+        Gt | Ge | Lt | Le => {
+            let (a, b) = (as_int(&l, op)?, as_int(&r, op)?);
+            Ok(Val::Bool(match op {
+                Gt => a > b,
+                Ge => a >= b,
+                Lt => a < b,
+                Le => a <= b,
+                _ => unreachable!(),
+            }))
+        }
+        Add | Sub | Mul | Div | Mod => {
+            let (a, b) = (as_int(&l, op)?, as_int(&r, op)?);
+            match op {
+                Add => Ok(Val::Int(a.wrapping_add(b))),
+                Sub => Ok(Val::Int(a.wrapping_sub(b))),
+                Mul => Ok(Val::Int(a.wrapping_mul(b))),
+                Div => {
+                    if b == 0 {
+                        Err(err("division by zero in rule".into()))
+                    } else {
+                        Ok(Val::Int(a / b))
+                    }
+                }
+                Mod => {
+                    if b == 0 {
+                        Err(err("modulo by zero in rule".into()))
+                    } else {
+                        Ok(Val::Int(a % b))
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        And | Or => unreachable!("handled in eval"),
+    }
+}
+
+/// Equality is polymorphic: Int==Int, Bool==Bool, Sym==Sym (case-insensitive),
+/// None==None; a Bool compared with None uses "set-ness" semantics (the
+/// paper's `$use_flash_attn != None` treats a set flag as non-None).
+fn val_eq(l: &Val, r: &Val) -> bool {
+    match (l, r) {
+        (Val::Int(a), Val::Int(b)) => a == b,
+        (Val::Bool(a), Val::Bool(b)) => a == b,
+        (Val::Sym(a), Val::Sym(b)) => a.eq_ignore_ascii_case(b),
+        (Val::None, Val::None) => true,
+        (Val::Bool(b), Val::None) | (Val::None, Val::Bool(b)) => !b,
+        (Val::Int(i), Val::Bool(b)) | (Val::Bool(b), Val::Int(i)) => (*i != 0) == *b,
+        _ => false,
+    }
+}
+
+fn as_int(v: &Val, op: BinOp) -> Result<i64> {
+    match v {
+        Val::Int(n) => Ok(*n),
+        Val::Bool(b) => Ok(*b as i64),
+        other => Err(err(format!("operator {op:?} needs integers, got {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::MapSource;
+    use super::super::Rule;
+    use super::*;
+
+    fn src() -> MapSource {
+        MapSource::default()
+            .with("tp", Val::Int(4))
+            .with("pp", Val::Int(8))
+            .with("gpus", Val::Int(64))
+            .with("flash", Val::Bool(true))
+            .with("gran", Val::Sym("Selective".into()))
+            .with("off", Val::None)
+    }
+
+    fn check(rule: &str, expect: bool) {
+        let r = Rule::compile(rule).unwrap();
+        assert_eq!(r.matches(&src()).unwrap(), expect, "rule: {rule}");
+    }
+
+    #[test]
+    fn arithmetic_and_modulo() {
+        check("$gpus % ($tp * $pp) != 0", false); // 64 % 32 == 0
+        check("$gpus % ($tp * $pp * 2) != 0", false); // 64 % 64 == 0
+        check("$gpus % 48 != 0", true);
+        check("$gpus / $tp == 16", true);
+        check("$gpus - $tp * $pp == 32", true); // precedence: 64 - 32
+    }
+
+    #[test]
+    fn none_semantics() {
+        check("$off == None", true);
+        check("$flash != None", true);
+        check("$off != None", false);
+    }
+
+    #[test]
+    fn symbol_case_insensitive() {
+        check("$gran == selective", true);
+        check("$gran == SELECTIVE", true);
+        check("$gran == full", false);
+    }
+
+    #[test]
+    fn short_circuit_avoids_errors() {
+        // Division by zero on the right of a false && must not evaluate.
+        check("$tp > 100 && $gpus / 0 == 1", false);
+        check("$tp == 4 || $gpus / 0 == 1", true);
+    }
+
+    #[test]
+    fn division_by_zero_error() {
+        let r = Rule::compile("$gpus % 0 == 0").unwrap();
+        assert!(r.matches(&src()).is_err());
+    }
+
+    #[test]
+    fn not_operator() {
+        check("!($tp == 4)", false);
+        check("!($tp == 5)", true);
+    }
+
+    #[test]
+    fn comparison_type_error() {
+        let r = Rule::compile("$gran > 3").unwrap();
+        assert!(r.matches(&src()).is_err());
+    }
+}

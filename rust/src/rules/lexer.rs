@@ -1,0 +1,199 @@
+//! Tokenizer for the rule DSL.
+
+use crate::{AstraError, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Int(i64),
+    /// `$field` reference.
+    Var(String),
+    /// Bare identifier (symbol like `selective`, or `true`/`false`/`None`).
+    Ident(String),
+    AndAnd,
+    OrOr,
+    Eq,
+    Ne,
+    Ge,
+    Le,
+    Gt,
+    Lt,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Bang,
+    LParen,
+    RParen,
+}
+
+pub fn lex(src: &str) -> Result<Vec<Tok>> {
+    let b = src.as_bytes();
+    let mut i = 0;
+    let mut out = Vec::new();
+    let err = |i: usize, m: &str| AstraError::Rule(format!("{m} at column {i} in rule: {src}"));
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' => i += 1,
+            b'(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            b'+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            b'-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            b'*' => {
+                out.push(Tok::Star);
+                i += 1;
+            }
+            b'/' => {
+                out.push(Tok::Slash);
+                i += 1;
+            }
+            b'%' => {
+                out.push(Tok::Percent);
+                i += 1;
+            }
+            b'&' => {
+                if b.get(i + 1) == Some(&b'&') {
+                    out.push(Tok::AndAnd);
+                    i += 2;
+                } else {
+                    return Err(err(i, "single '&' (use '&&')"));
+                }
+            }
+            b'|' => {
+                if b.get(i + 1) == Some(&b'|') {
+                    out.push(Tok::OrOr);
+                    i += 2;
+                } else {
+                    return Err(err(i, "single '|' (use '||')"));
+                }
+            }
+            b'=' => {
+                // `==` canonical; bare `=` accepted (paper's Eq. 11 style).
+                if b.get(i + 1) == Some(&b'=') {
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                out.push(Tok::Eq);
+            }
+            b'!' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Ne);
+                    i += 2;
+                } else {
+                    out.push(Tok::Bang);
+                    i += 1;
+                }
+            }
+            b'>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Ge);
+                    i += 2;
+                } else {
+                    out.push(Tok::Gt);
+                    i += 1;
+                }
+            }
+            b'<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Le);
+                    i += 2;
+                } else {
+                    out.push(Tok::Lt);
+                    i += 1;
+                }
+            }
+            b'$' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                if j == start {
+                    return Err(err(i, "'$' must be followed by a field name"));
+                }
+                out.push(Tok::Var(src[start..j].to_string()));
+                i = j;
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                let mut j = i;
+                while j < b.len() && b[j].is_ascii_digit() {
+                    j += 1;
+                }
+                let n: i64 = src[start..j]
+                    .parse()
+                    .map_err(|_| err(start, "integer literal out of range"))?;
+                out.push(Tok::Int(n));
+                i = j;
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                let mut j = i;
+                while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                out.push(Tok::Ident(src[start..j].to_string()));
+                i = j;
+            }
+            _ => return Err(err(i, "unexpected character")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lex_paper_rule() {
+        let toks = lex("$use_flash_attn != None && $recompute_granularity = selective").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Var("use_flash_attn".into()),
+                Tok::Ne,
+                Tok::Ident("None".into()),
+                Tok::AndAnd,
+                Tok::Var("recompute_granularity".into()),
+                Tok::Eq,
+                Tok::Ident("selective".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_arithmetic() {
+        let toks = lex("$num_gpus % ($a * $b) != 0").unwrap();
+        assert!(toks.contains(&Tok::Percent));
+        assert!(toks.contains(&Tok::LParen));
+    }
+
+    #[test]
+    fn lex_rejects() {
+        assert!(lex("$").is_err());
+        assert!(lex("a & b").is_err());
+        assert!(lex("a | b").is_err());
+        assert!(lex("a @ b").is_err());
+        assert!(lex("999999999999999999999999").is_err());
+    }
+
+    #[test]
+    fn single_equals_alias() {
+        assert_eq!(lex("= ==").unwrap(), vec![Tok::Eq, Tok::Eq]);
+    }
+}

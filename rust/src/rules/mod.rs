@@ -1,0 +1,203 @@
+//! Rule-based filter DSL (paper §3.3, Eq. 10–19).
+//!
+//! Users author rules as boolean expressions over `$`-prefixed strategy
+//! fields; **a strategy matching any rule is dropped** (Eq. 10). The format
+//! is `expression &&/|| expression ...` where `&&` binds tighter than `||`
+//! and expressions evaluate left-to-right (Eq. 19).
+//!
+//! Grammar (recursive descent, see [`parse`]):
+//!
+//! ```text
+//! or    := and ('||' and)*
+//! and   := cmp ('&&' cmp)*
+//! cmp   := sum (('=='|'!='|'>='|'<='|'>'|'<') sum)?
+//! sum   := prod (('+'|'-') prod)*
+//! prod  := unary (('*'|'/'|'%') unary)*
+//! unary := '!' unary | atom
+//! atom  := int | '$'ident | ident | 'None' | 'true' | 'false' | '(' or ')'
+//! ```
+//!
+//! `=` is accepted as an alias for `==` (the paper writes single `=`).
+//! Bare identifiers are symbols (e.g. `selective`); `$name` reads a strategy
+//! field through the [`FieldSource`] trait.
+
+mod eval;
+mod lexer;
+mod parser;
+
+pub use eval::Val;
+pub use parser::{parse, Expr};
+
+use crate::Result;
+
+/// Anything that can resolve `$field` references (implemented by
+/// [`crate::strategy::ParallelStrategy`] plus test fixtures).
+pub trait FieldSource {
+    /// `None` means "field unknown" → rule evaluation error.
+    fn field(&self, name: &str) -> Option<Val>;
+}
+
+/// A compiled rule: source + AST.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub source: String,
+    expr: Expr,
+}
+
+impl Rule {
+    pub fn compile(source: &str) -> Result<Rule> {
+        Ok(Rule { source: source.to_string(), expr: parse(source)? })
+    }
+
+    /// True ⇒ the strategy violates this rule and must be filtered out.
+    pub fn matches(&self, s: &dyn FieldSource) -> Result<bool> {
+        Ok(eval::eval(&self.expr, s)?.truthy())
+    }
+}
+
+/// An ordered collection of rules (a strategy survives iff no rule matches).
+#[derive(Debug, Clone, Default)]
+pub struct RuleSet {
+    pub rules: Vec<Rule>,
+}
+
+impl RuleSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, source: &str) -> Result<()> {
+        self.rules.push(Rule::compile(source)?);
+        Ok(())
+    }
+
+    /// Parse a rule file: one rule per line, `#` comments, blank lines ok.
+    pub fn from_text(text: &str) -> Result<RuleSet> {
+        let mut rs = RuleSet::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            rs.add(line)?;
+        }
+        Ok(rs)
+    }
+
+    /// The paper's three example rules (§3.3) plus Megatron validity rules
+    /// that any generated strategy must already satisfy (they act as a
+    /// safety net over the generator).
+    pub fn paper_defaults() -> RuleSet {
+        let mut rs = RuleSet::new();
+        // 1. Flash-attention rule: flash attention in use ⇒ selective
+        //    recompute is redundant (flash already avoids storing scores).
+        rs.add("$use_flash_attn != None && $recompute_granularity == selective").unwrap();
+        // 2. Layer-recomputation rule.
+        rs.add("$recompute_num_layers > $pipeline_model_parallel_size").unwrap();
+        // 3. GPU-division rule.
+        rs.add("$num_gpus % ($pipeline_model_parallel_size * $tensor_model_parallel_size) != 0")
+            .unwrap();
+        // Megatron validity: sequence parallel requires tensor parallel.
+        rs.add("$sequence_parallel == true && $tensor_model_parallel_size == 1").unwrap();
+        // Megatron validity: interleaving requires pp > 1.
+        rs.add("$virtual_pipeline_parallel_size > 1 && $pipeline_model_parallel_size == 1")
+            .unwrap();
+        rs
+    }
+
+    /// True ⇒ filtered out (some rule matched). Propagates eval errors
+    /// (unknown field / type mismatch) as [`crate::AstraError::Rule`].
+    pub fn filters_out(&self, s: &dyn FieldSource) -> Result<bool> {
+        for r in &self.rules {
+            if r.matches(s)? {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// Simple map-backed field source for unit tests.
+    #[derive(Default)]
+    pub struct MapSource(pub BTreeMap<String, Val>);
+
+    impl MapSource {
+        pub fn with(mut self, k: &str, v: Val) -> Self {
+            self.0.insert(k.to_string(), v);
+            self
+        }
+    }
+
+    impl FieldSource for MapSource {
+        fn field(&self, name: &str) -> Option<Val> {
+            self.0.get(name).cloned()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::MapSource;
+    use super::*;
+
+    #[test]
+    fn paper_rule_flash_attention() {
+        let rs = RuleSet::paper_defaults();
+        let bad = MapSource::default()
+            .with("use_flash_attn", Val::Bool(true))
+            .with("recompute_granularity", Val::Sym("selective".into()))
+            .with("recompute_num_layers", Val::Int(0))
+            .with("pipeline_model_parallel_size", Val::Int(4))
+            .with("tensor_model_parallel_size", Val::Int(2))
+            .with("num_gpus", Val::Int(64))
+            .with("sequence_parallel", Val::Bool(false))
+            .with("virtual_pipeline_parallel_size", Val::Int(1));
+        assert!(rs.filters_out(&bad).unwrap());
+    }
+
+    #[test]
+    fn paper_rule_gpu_division() {
+        let rs = RuleSet::paper_defaults();
+        let mk = |gpus: i64, pp: i64, tp: i64| {
+            MapSource::default()
+                .with("use_flash_attn", Val::None)
+                .with("recompute_granularity", Val::Sym("full".into()))
+                .with("recompute_num_layers", Val::Int(1))
+                .with("pipeline_model_parallel_size", Val::Int(pp))
+                .with("tensor_model_parallel_size", Val::Int(tp))
+                .with("num_gpus", Val::Int(gpus))
+                .with("sequence_parallel", Val::Bool(false))
+                .with("virtual_pipeline_parallel_size", Val::Int(1))
+        };
+        assert!(!rs.filters_out(&mk(64, 4, 2)).unwrap()); // 64 % 8 == 0 → keep
+        assert!(rs.filters_out(&mk(60, 4, 2)).unwrap()); // 60 % 8 != 0 → drop
+    }
+
+    #[test]
+    fn rule_file_parsing() {
+        let rs = RuleSet::from_text("# comment\n\n$a > 3\n$b == x && $a < 2\n").unwrap();
+        assert_eq!(rs.len(), 2);
+        let s = MapSource::default().with("a", Val::Int(5)).with("b", Val::Sym("x".into()));
+        assert!(rs.filters_out(&s).unwrap());
+    }
+
+    #[test]
+    fn unknown_field_is_error() {
+        let rs = RuleSet::from_text("$missing == 1").unwrap();
+        let s = MapSource::default();
+        assert!(rs.filters_out(&s).is_err());
+    }
+}

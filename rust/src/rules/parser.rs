@@ -1,0 +1,231 @@
+//! Recursive-descent parser for the rule DSL (grammar in `mod.rs`).
+
+use super::lexer::{lex, Tok};
+use crate::{AstraError, Result};
+
+/// Binary operators, in the AST.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Or,
+    And,
+    Eq,
+    Ne,
+    Gt,
+    Ge,
+    Lt,
+    Le,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+}
+
+/// Expression AST.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    /// `$field`
+    Var(String),
+    /// bare identifier (symbol); `true`/`false`/`None` are resolved at eval.
+    Sym(String),
+    Not(Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+pub fn parse(src: &str) -> Result<Expr> {
+    let toks = lex(src)?;
+    let mut p = P { toks: &toks, pos: 0, src };
+    let e = p.or_expr()?;
+    if p.pos != p.toks.len() {
+        return Err(p.err("trailing tokens"));
+    }
+    Ok(e)
+}
+
+struct P<'a> {
+    toks: &'a [Tok],
+    pos: usize,
+    src: &'a str,
+}
+
+impl<'a> P<'a> {
+    fn err(&self, msg: &str) -> AstraError {
+        AstraError::Rule(format!("{msg} (token {} in rule: {})", self.pos, self.src))
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == Some(t) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.eat(&Tok::OrOr) {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while self.eat(&Tok::AndAnd) {
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let lhs = self.sum_expr()?;
+        let op = match self.peek() {
+            Some(Tok::Eq) => BinOp::Eq,
+            Some(Tok::Ne) => BinOp::Ne,
+            Some(Tok::Gt) => BinOp::Gt,
+            Some(Tok::Ge) => BinOp::Ge,
+            Some(Tok::Lt) => BinOp::Lt,
+            Some(Tok::Le) => BinOp::Le,
+            _ => return Ok(lhs),
+        };
+        self.pos += 1;
+        let rhs = self.sum_expr()?;
+        Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn sum_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.prod_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Plus) => BinOp::Add,
+                Some(Tok::Minus) => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            self.pos += 1;
+            let rhs = self.prod_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+    }
+
+    fn prod_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Star) => BinOp::Mul,
+                Some(Tok::Slash) => BinOp::Div,
+                Some(Tok::Percent) => BinOp::Mod,
+                _ => return Ok(lhs),
+            };
+            self.pos += 1;
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        if self.eat(&Tok::Bang) {
+            return Ok(Expr::Not(Box::new(self.unary_expr()?)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.peek().cloned() {
+            Some(Tok::Int(n)) => {
+                self.pos += 1;
+                Ok(Expr::Int(n))
+            }
+            Some(Tok::Var(name)) => {
+                self.pos += 1;
+                Ok(Expr::Var(name))
+            }
+            Some(Tok::Ident(name)) => {
+                self.pos += 1;
+                Ok(Expr::Sym(name))
+            }
+            Some(Tok::Minus) => {
+                self.pos += 1;
+                match self.atom()? {
+                    Expr::Int(n) => Ok(Expr::Int(-n)),
+                    e => Ok(Expr::Bin(BinOp::Sub, Box::new(Expr::Int(0)), Box::new(e))),
+                }
+            }
+            Some(Tok::LParen) => {
+                self.pos += 1;
+                let e = self.or_expr()?;
+                if !self.eat(&Tok::RParen) {
+                    return Err(self.err("expected ')'"));
+                }
+                Ok(e)
+            }
+            _ => Err(self.err("expected expression")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn and_binds_tighter_than_or() {
+        // a || b && c  ⇒  a || (b && c)
+        let e = parse("$a || $b && $c").unwrap();
+        match e {
+            Expr::Bin(BinOp::Or, _, rhs) => match *rhs {
+                Expr::Bin(BinOp::And, _, _) => {}
+                other => panic!("rhs should be And, got {other:?}"),
+            },
+            other => panic!("top should be Or, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn left_assoc() {
+        // a - b - c ⇒ (a-b)-c
+        let e = parse("1 - 2 - 3").unwrap();
+        match e {
+            Expr::Bin(BinOp::Sub, lhs, _) => {
+                assert!(matches!(*lhs, Expr::Bin(BinOp::Sub, _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parens_override() {
+        let e = parse("($a || $b) && $c").unwrap();
+        assert!(matches!(e, Expr::Bin(BinOp::And, _, _)));
+    }
+
+    #[test]
+    fn arithmetic_precedence() {
+        // 2 + 3 * 4 ⇒ 2 + (3*4)
+        let e = parse("2 + 3 * 4").unwrap();
+        match e {
+            Expr::Bin(BinOp::Add, _, rhs) => assert!(matches!(*rhs, Expr::Bin(BinOp::Mul, _, _))),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_literal() {
+        assert_eq!(parse("-5").unwrap(), Expr::Int(-5));
+    }
+
+    #[test]
+    fn rejects_trailing_and_empty() {
+        assert!(parse("").is_err());
+        assert!(parse("$a $b").is_err());
+        assert!(parse("($a").is_err());
+        assert!(parse("$a &&").is_err());
+    }
+}

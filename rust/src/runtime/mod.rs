@@ -1,0 +1,130 @@
+//! PJRT runtime: load and execute the AOT-compiled scorer.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) to run
+//! `artifacts/scorer.hlo.txt` from the Layer-3 hot path. Python never runs
+//! here — the HLO text was produced once by `make artifacts`
+//! (`python/compile/aot.py`), which also wrote `scorer_meta.json` pinning
+//! the batch geometry; we validate it against the crate's compiled-in
+//! [`crate::cost::features`] layout at load time.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::cost::features::{FG, FS, OUT, PMAX};
+use crate::{AstraError, Result};
+use std::path::Path;
+
+/// A compiled scorer executable plus its batch geometry.
+pub struct ScorerRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    /// Strategies per execute call (HLO shapes are static).
+    pub batch: usize,
+}
+
+impl ScorerRuntime {
+    /// Load `scorer.hlo.txt` + `scorer_meta.json` from the artifacts dir.
+    pub fn load(dir: &Path) -> Result<ScorerRuntime> {
+        let meta = crate::json::from_file(&dir.join("scorer_meta.json"))?;
+        let batch = meta
+            .get("batch")
+            .and_then(crate::json::Value::as_usize)
+            .ok_or_else(|| AstraError::Runtime("scorer_meta.json: missing batch".into()))?;
+        for (key, expect) in [("pmax", PMAX), ("fs", FS), ("fg", FG), ("out", OUT)] {
+            let got = meta
+                .get(key)
+                .and_then(crate::json::Value::as_usize)
+                .ok_or_else(|| AstraError::Runtime(format!("scorer_meta.json: missing {key}")))?;
+            if got != expect {
+                return Err(AstraError::Runtime(format!(
+                    "scorer geometry mismatch: {key}={got} in artifacts but crate expects {expect} — re-run `make artifacts`"
+                )));
+            }
+        }
+        let hlo_path = dir.join("scorer.hlo.txt");
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| AstraError::Runtime(format!("PJRT cpu client: {e}")))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| AstraError::Runtime("non-utf8 artifacts path".into()))?,
+        )
+        .map_err(|e| AstraError::Runtime(format!("parse {hlo_path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| AstraError::Runtime(format!("compile scorer: {e}")))?;
+        crate::log_info!("scorer loaded: batch={batch} pmax={PMAX} fs={FS} fg={FG}");
+        Ok(ScorerRuntime { exe, batch })
+    }
+
+    /// Execute one padded batch. Inputs must be exactly
+    /// `batch·PMAX·FS`, `batch·PMAX` and `batch·FG` long; returns
+    /// `batch` rows of `[step_time, pipeline_time, dp_time, extra_time]`.
+    pub fn execute(
+        &self,
+        stage_feats: &[f32],
+        stage_mask: &[f32],
+        strat_feats: &[f32],
+    ) -> Result<Vec<[f32; OUT]>> {
+        let b = self.batch;
+        if stage_feats.len() != b * PMAX * FS
+            || stage_mask.len() != b * PMAX
+            || strat_feats.len() != b * FG
+        {
+            return Err(AstraError::Runtime(format!(
+                "scorer input shape mismatch: got {}/{}/{} want {}/{}/{}",
+                stage_feats.len(),
+                stage_mask.len(),
+                strat_feats.len(),
+                b * PMAX * FS,
+                b * PMAX,
+                b * FG
+            )));
+        }
+        let rt = |e: xla::Error| AstraError::Runtime(format!("scorer execute: {e}"));
+        let x_sf = xla::Literal::vec1(stage_feats)
+            .reshape(&[b as i64, PMAX as i64, FS as i64])
+            .map_err(rt)?;
+        let x_mask =
+            xla::Literal::vec1(stage_mask).reshape(&[b as i64, PMAX as i64]).map_err(rt)?;
+        let x_gf = xla::Literal::vec1(strat_feats).reshape(&[b as i64, FG as i64]).map_err(rt)?;
+        let result = self.exe.execute::<xla::Literal>(&[x_sf, x_mask, x_gf]).map_err(rt)?[0][0]
+            .to_literal_sync()
+            .map_err(rt)?;
+        // aot.py lowers with return_tuple=True → 1-tuple of f32[b, OUT].
+        let out = result.to_tuple1().map_err(rt)?;
+        let flat = out.to_vec::<f32>().map_err(rt)?;
+        if flat.len() != b * OUT {
+            return Err(AstraError::Runtime(format!(
+                "scorer output length {} != {}",
+                flat.len(),
+                b * OUT
+            )));
+        }
+        Ok(flat
+            .chunks_exact(OUT)
+            .map(|c| {
+                let mut row = [0.0f32; OUT];
+                row.copy_from_slice(c);
+                row
+            })
+            .collect())
+    }
+}
+
+/// Default artifacts directory: `$ASTRA_ARTIFACTS` or `<manifest>/artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("ASTRA_ARTIFACTS") {
+        return d.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the scorer artifacts exist (benches skip the HLO engine
+/// otherwise instead of failing).
+pub fn artifacts_present() -> bool {
+    let d = artifacts_dir();
+    d.join("scorer.hlo.txt").exists() && d.join("scorer_meta.json").exists()
+}

@@ -1,0 +1,423 @@
+//! Parallel strategies and the search-space generator (paper §3.2–3.3).
+//!
+//! A [`ParallelStrategy`] is one point of the Megatron-LM parameter space
+//! (Appendix Table 3) bound to a concrete cluster assignment — either a
+//! single GPU type (homogeneous / cost modes) or a pipeline-ordered list of
+//! GPU-type segments (heterogeneous mode, Eq. 23).
+//!
+//! The [`SearchSpace`] generator produces `S = f(P) × C_gpu` (Eq. 8–9); the
+//! rule filter ([`crate::rules`]) and memory filter ([`crate::memory`])
+//! subsequently narrow it to `S_valid` (Eq. 21).
+
+mod space;
+
+pub use space::{SearchSpace, SpaceConfig};
+
+use crate::gpu::GpuType;
+use crate::model::ModelSpec;
+use crate::rules::{FieldSource, Val};
+
+/// Activation recomputation granularity (Megatron `--recompute-granularity`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Recompute {
+    /// No recomputation.
+    None,
+    /// Selective: recompute attention scores only.
+    Selective,
+    /// Full: recompute whole layers (`method`, `num_layers` apply).
+    Full,
+}
+
+impl Recompute {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Recompute::None => "none",
+            Recompute::Selective => "selective",
+            Recompute::Full => "full",
+        }
+    }
+}
+
+/// Megatron `--recompute-method` (only meaningful with [`Recompute::Full`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RecomputeMethod {
+    Block,
+    Uniform,
+}
+
+impl RecomputeMethod {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RecomputeMethod::Block => "block",
+            RecomputeMethod::Uniform => "uniform",
+        }
+    }
+}
+
+/// One pipeline-contiguous run of stages on a single GPU type
+/// (heterogeneous partitions rearrange equal types contiguously — §3.4).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Segment {
+    pub gpu: GpuType,
+    /// Number of pipeline stages in this segment (`m_i`).
+    pub stages: usize,
+    /// Model layers per stage in this segment (`n_i`).
+    pub layers_per_stage: usize,
+}
+
+/// Cluster assignment of a strategy.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ClusterAssignment {
+    /// Pipeline-ordered GPU segments; homogeneous = a single segment.
+    pub segments: Vec<Segment>,
+}
+
+impl ClusterAssignment {
+    pub fn homogeneous(gpu: GpuType, pp: usize, layers_per_stage: usize) -> Self {
+        ClusterAssignment { segments: vec![Segment { gpu, stages: pp, layers_per_stage }] }
+    }
+
+    /// Total pipeline stages `P`.
+    pub fn pp(&self) -> usize {
+        self.segments.iter().map(|s| s.stages).sum()
+    }
+
+    /// Total model layers covered.
+    pub fn layers(&self) -> usize {
+        self.segments.iter().map(|s| s.stages * s.layers_per_stage).sum()
+    }
+
+    pub fn is_heterogeneous(&self) -> bool {
+        self.segments.len() > 1
+    }
+
+    /// GPU type of pipeline stage `i`.
+    pub fn gpu_of_stage(&self, i: usize) -> GpuType {
+        let mut idx = i;
+        for seg in &self.segments {
+            if idx < seg.stages {
+                return seg.gpu;
+            }
+            idx -= seg.stages;
+        }
+        panic!("stage {i} out of range (pp={})", self.pp());
+    }
+
+    /// Layers in pipeline stage `i`.
+    pub fn layers_of_stage(&self, i: usize) -> usize {
+        let mut idx = i;
+        for seg in &self.segments {
+            if idx < seg.stages {
+                return seg.layers_per_stage;
+            }
+            idx -= seg.stages;
+        }
+        panic!("stage {i} out of range (pp={})", self.pp());
+    }
+
+    /// GPUs of each type consumed given `tp`/`dp`: `m_i · tp · dp`.
+    pub fn gpus_by_type(&self, tp: usize, dp: usize) -> Vec<(GpuType, usize)> {
+        let mut acc: Vec<(GpuType, usize)> = Vec::new();
+        for seg in &self.segments {
+            let n = seg.stages * tp * dp;
+            match acc.iter_mut().find(|(g, _)| *g == seg.gpu) {
+                Some((_, c)) => *c += n,
+                None => acc.push((seg.gpu, n)),
+            }
+        }
+        acc
+    }
+}
+
+/// One hybrid parallel strategy: the Megatron parameter point (Table 3)
+/// plus its cluster assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelStrategy {
+    pub cluster: ClusterAssignment,
+    /// Tensor-model-parallel size.
+    pub tp: usize,
+    /// Data-parallel size.
+    pub dp: usize,
+    /// Micro-batch size (sequences).
+    pub micro_batch: usize,
+    /// Global batch (sequences) — workload parameter, copied from the model.
+    pub global_batch: usize,
+    /// Interleaving degree (virtual pipeline chunks per stage); 1 = off.
+    pub vpp: usize,
+    pub sequence_parallel: bool,
+    pub use_distributed_optimizer: bool,
+    pub recompute: Recompute,
+    pub recompute_method: RecomputeMethod,
+    /// Layers recomputed per stage under [`Recompute::Full`].
+    pub recompute_num_layers: usize,
+    pub offload_optimizer: bool,
+    /// Overlap strategies (paper Table 3 fixes these `true`; the Fig. 11
+    /// ablation toggles them).
+    pub overlap_grad_reduce: bool,
+    pub overlap_param_gather: bool,
+    pub overlap_p2p: bool,
+    pub tp_comm_overlap: bool,
+    pub use_flash_attn: bool,
+    /// Expert-model-parallel size (Table 3 MoE parameter); 1 for dense.
+    pub ep: usize,
+}
+
+impl ParallelStrategy {
+    /// Pipeline-parallel size `P`.
+    pub fn pp(&self) -> usize {
+        self.cluster.pp()
+    }
+
+    /// Total GPUs consumed: `pp · tp · dp`.
+    pub fn num_gpus(&self) -> usize {
+        self.pp() * self.tp * self.dp
+    }
+
+    /// Number of microbatches `K = gbs / (dp · mbs)`.
+    pub fn num_microbatches(&self) -> usize {
+        self.global_batch / (self.dp * self.micro_batch)
+    }
+
+    /// Structural validity (the generator only emits valid strategies;
+    /// this is re-checked by tests and on config-loaded strategies).
+    pub fn validate(&self, model: &ModelSpec) -> crate::Result<()> {
+        let fail = |m: String| Err(crate::AstraError::Config(m));
+        if self.tp == 0 || self.dp == 0 || self.pp() == 0 || self.micro_batch == 0 {
+            return fail("zero-sized parallel dim".into());
+        }
+        if model.heads % self.tp != 0 {
+            return fail(format!("heads {} not divisible by tp {}", model.heads, self.tp));
+        }
+        if self.cluster.layers() != model.layers {
+            return fail(format!(
+                "stage layers {} != model layers {}",
+                self.cluster.layers(),
+                model.layers
+            ));
+        }
+        if self.global_batch % (self.dp * self.micro_batch) != 0 {
+            return fail(format!(
+                "gbs {} not divisible by dp·mbs {}",
+                self.global_batch,
+                self.dp * self.micro_batch
+            ));
+        }
+        if self.sequence_parallel && self.tp == 1 {
+            return fail("sequence parallel requires tp > 1".into());
+        }
+        if self.vpp > 1 {
+            if self.pp() == 1 {
+                return fail("interleaving requires pp > 1".into());
+            }
+            // every stage's layer count must split into vpp chunks
+            for seg in &self.cluster.segments {
+                if seg.layers_per_stage % self.vpp != 0 {
+                    return fail(format!(
+                        "layers/stage {} not divisible by vpp {}",
+                        seg.layers_per_stage, self.vpp
+                    ));
+                }
+            }
+        }
+        if model.is_moe() {
+            if self.ep == 0 || model.num_experts % self.ep != 0 {
+                return fail(format!(
+                    "experts {} not divisible by ep {}",
+                    model.num_experts, self.ep
+                ));
+            }
+            // Megatron carves the expert-parallel group out of DP.
+            if self.dp % self.ep != 0 {
+                return fail(format!("dp {} not divisible by ep {}", self.dp, self.ep));
+            }
+        } else if self.ep != 1 {
+            return fail("ep > 1 on a dense model".into());
+        }
+        if self.recompute == Recompute::Full {
+            let max_lps =
+                self.cluster.segments.iter().map(|s| s.layers_per_stage).max().unwrap_or(0);
+            if self.recompute_num_layers == 0 || self.recompute_num_layers > max_lps {
+                return fail(format!(
+                    "recompute_num_layers {} outside 1..={max_lps}",
+                    self.recompute_num_layers
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let seg = if self.cluster.is_heterogeneous() {
+            let parts: Vec<String> = self
+                .cluster
+                .segments
+                .iter()
+                .map(|s| format!("g{}×{}({}L)", s.gpu, s.stages, s.layers_per_stage))
+                .collect();
+            format!(" segs=[{}]", parts.join(","))
+        } else {
+            String::new()
+        };
+        let ep = if self.ep > 1 { format!(" ep={}", self.ep) } else { String::new() };
+        format!(
+            "tp={} pp={} dp={} mbs={} vpp={} sp={} do={} rc={}/{}/{} off={} gpus={}{ep}{}",
+            self.tp,
+            self.pp(),
+            self.dp,
+            self.micro_batch,
+            self.vpp,
+            self.sequence_parallel as u8,
+            self.use_distributed_optimizer as u8,
+            self.recompute.as_str(),
+            self.recompute_method.as_str(),
+            self.recompute_num_layers,
+            self.offload_optimizer as u8,
+            self.num_gpus(),
+            seg
+        )
+    }
+}
+
+/// `$field` resolution for the rule DSL — names follow Megatron flags.
+impl FieldSource for ParallelStrategy {
+    fn field(&self, name: &str) -> Option<Val> {
+        Some(match name {
+            "tensor_model_parallel_size" | "tp" => Val::Int(self.tp as i64),
+            "pipeline_model_parallel_size" | "pp" => Val::Int(self.pp() as i64),
+            "data_model_parallel_size" | "data_parallel_size" | "dp" => Val::Int(self.dp as i64),
+            "micro_batch_size" | "mbs" => Val::Int(self.micro_batch as i64),
+            "global_batch_size" | "gbs" => Val::Int(self.global_batch as i64),
+            "num_microbatches" => Val::Int(self.num_microbatches() as i64),
+            "virtual_pipeline_parallel_size" | "vpp" => Val::Int(self.vpp as i64),
+            "num_gpus" => Val::Int(self.num_gpus() as i64),
+            "sequence_parallel" => Val::Bool(self.sequence_parallel),
+            "use_distributed_optimizer" => Val::Bool(self.use_distributed_optimizer),
+            "recompute_granularity" => match self.recompute {
+                Recompute::None => Val::None,
+                g => Val::Sym(g.as_str().to_string()),
+            },
+            "recompute_method" => Val::Sym(self.recompute_method.as_str().to_string()),
+            "recompute_num_layers" => Val::Int(self.recompute_num_layers as i64),
+            "offload_optimizer" => Val::Bool(self.offload_optimizer),
+            "no_overlap_offload_optimizer" => Val::Bool(!self.offload_optimizer),
+            "overlap_grad_reduce" => Val::Bool(self.overlap_grad_reduce),
+            "overlap_param_gather" => Val::Bool(self.overlap_param_gather),
+            "overlap_p2p_communication" => Val::Bool(self.overlap_p2p),
+            "tp_comm_overlap" => Val::Bool(self.tp_comm_overlap),
+            "expert_model_parallel_size" | "ep" => Val::Int(self.ep as i64),
+            "use_flash_attn" => {
+                if self.use_flash_attn {
+                    Val::Bool(true)
+                } else {
+                    Val::None
+                }
+            }
+            _ => return None,
+        })
+    }
+}
+
+/// The three GPU-pool input modes of §3.2 (Eq. 1–3).
+#[derive(Debug, Clone, PartialEq)]
+pub enum GpuPoolMode {
+    /// Mode 1: one GPU type, fixed count.
+    Homogeneous { gpu: GpuType, count: usize },
+    /// Mode 2: total cluster size + per-type maximum counts.
+    Heterogeneous { total: usize, caps: Vec<(GpuType, usize)> },
+    /// Mode 3: one GPU type, count swept up to `max_count`, with a money
+    /// ceiling applied at selection time.
+    Cost { gpu: GpuType, max_count: usize, max_money: f64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelRegistry;
+
+    pub(crate) fn base_strategy(model: &ModelSpec, gpu: GpuType, tp: usize, pp: usize, dp: usize) -> ParallelStrategy {
+        ParallelStrategy {
+            cluster: ClusterAssignment::homogeneous(gpu, pp, model.layers / pp),
+            tp,
+            dp,
+            micro_batch: 1,
+            global_batch: model.global_batch,
+            vpp: 1,
+            sequence_parallel: tp > 1,
+            use_distributed_optimizer: true,
+            recompute: Recompute::None,
+            recompute_method: RecomputeMethod::Uniform,
+            recompute_num_layers: 0,
+            offload_optimizer: false,
+            overlap_grad_reduce: true,
+            overlap_param_gather: true,
+            overlap_p2p: true,
+            tp_comm_overlap: true,
+            use_flash_attn: true,
+            ep: 1,
+        }
+    }
+
+    #[test]
+    fn gpu_accounting() {
+        let reg = ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let s = base_strategy(m, 0, 2, 4, 8);
+        assert_eq!(s.num_gpus(), 64);
+        assert_eq!(s.num_microbatches(), 2048 / 8);
+        assert!(s.validate(m).is_ok());
+    }
+
+    #[test]
+    fn hetero_stage_lookup() {
+        let ca = ClusterAssignment {
+            segments: vec![
+                Segment { gpu: 2, stages: 2, layers_per_stage: 10 },
+                Segment { gpu: 1, stages: 4, layers_per_stage: 15 },
+            ],
+        };
+        assert_eq!(ca.pp(), 6);
+        assert_eq!(ca.layers(), 80);
+        assert_eq!(ca.gpu_of_stage(0), 2);
+        assert_eq!(ca.gpu_of_stage(1), 2);
+        assert_eq!(ca.gpu_of_stage(2), 1);
+        assert_eq!(ca.layers_of_stage(5), 15);
+        assert_eq!(ca.gpus_by_type(2, 3), vec![(2, 12), (1, 24)]);
+    }
+
+    #[test]
+    fn validation_catches_bad_shapes() {
+        let reg = ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap(); // 32 layers, 32 heads
+        let mut s = base_strategy(m, 0, 2, 4, 8);
+        s.tp = 3; // heads % 3 != 0
+        assert!(s.validate(m).is_err());
+
+        let mut s = base_strategy(m, 0, 2, 4, 8);
+        s.cluster.segments[0].layers_per_stage = 7; // 4*7 != 32
+        assert!(s.validate(m).is_err());
+
+        let mut s = base_strategy(m, 0, 1, 4, 8);
+        s.sequence_parallel = true; // sp with tp=1
+        assert!(s.validate(m).is_err());
+
+        let mut s = base_strategy(m, 0, 2, 1, 8);
+        s.vpp = 2; // vpp with pp=1
+        assert!(s.validate(m).is_err());
+    }
+
+    #[test]
+    fn rule_field_bridge() {
+        use crate::rules::RuleSet;
+        let reg = ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let s = base_strategy(m, 0, 2, 4, 8);
+        let rs = RuleSet::paper_defaults();
+        assert!(!rs.filters_out(&s).unwrap());
+
+        // recompute selective + flash ⇒ filtered by paper rule 1
+        let mut bad = s.clone();
+        bad.recompute = Recompute::Selective;
+        assert!(rs.filters_out(&bad).unwrap());
+    }
+}

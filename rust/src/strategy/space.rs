@@ -1,0 +1,355 @@
+//! Search-space generator (paper §3.3, Eq. 8–9).
+//!
+//! Generates the raw cross-product `S = f(P) × C_gpu` of parameter options
+//! for a given model and GPU configuration. Filtering (rules + memory) is
+//! applied downstream by the coordinator, matching the paper's pipeline —
+//! so the `#Strategies` this module reports corresponds to Table 1's
+//! search-space column.
+
+use super::{ClusterAssignment, ParallelStrategy, Recompute, RecomputeMethod};
+use crate::gpu::{GpuCatalog, GpuType};
+use crate::model::ModelSpec;
+
+/// Which parameter values the generator may use (Appendix Table 3 ranges).
+/// Ablation benches narrow these (e.g. Fig. 8 forces DP-only).
+#[derive(Debug, Clone)]
+pub struct SpaceConfig {
+    /// Tensor-parallel sizes to try (additionally constrained to divide the
+    /// head count and to fit inside one node).
+    pub tp_candidates: Vec<usize>,
+    /// Upper bound on pipeline-parallel size.
+    pub max_pp: usize,
+    /// Micro-batch sizes to try.
+    pub mbs_candidates: Vec<usize>,
+    /// Interleaving degrees to try (1 = off).
+    pub vpp_candidates: Vec<usize>,
+    pub seq_parallel_options: Vec<bool>,
+    pub dist_opt_options: Vec<bool>,
+    pub offload_options: Vec<bool>,
+    /// Include `recompute-granularity = none / selective / full` variants.
+    pub recompute_none: bool,
+    pub recompute_selective: bool,
+    pub recompute_full: bool,
+    /// Overlap flags value (paper fixes them `true`; Fig. 11 flips to false).
+    pub overlap: bool,
+    /// `use-flash-attn` (Table 3 range is `[true]`).
+    pub use_flash_attn: bool,
+    /// Expert-model-parallel sizes to try on MoE models (Table 3).
+    pub ep_candidates: Vec<usize>,
+}
+
+impl Default for SpaceConfig {
+    fn default() -> Self {
+        SpaceConfig {
+            tp_candidates: vec![1, 2, 4, 8],
+            max_pp: 64,
+            mbs_candidates: vec![1, 2, 4, 8, 16],
+            vpp_candidates: vec![1, 2, 4],
+            seq_parallel_options: vec![false, true],
+            dist_opt_options: vec![false, true],
+            offload_options: vec![false, true],
+            recompute_none: true,
+            recompute_selective: true,
+            recompute_full: true,
+            overlap: true,
+            use_flash_attn: true,
+            ep_candidates: vec![1, 2, 4, 8],
+        }
+    }
+}
+
+impl SpaceConfig {
+    /// Fig. 8 ablation: data parallelism only.
+    pub fn dp_only() -> Self {
+        SpaceConfig { tp_candidates: vec![1], max_pp: 1, ..Default::default() }
+    }
+
+    /// Fig. 11 ablation: all communication overlap off.
+    pub fn no_overlap() -> Self {
+        SpaceConfig { overlap: false, ..Default::default() }
+    }
+
+    /// Fig. 10 ablation: offload disallowed.
+    pub fn no_offload() -> Self {
+        SpaceConfig { offload_options: vec![false], ..Default::default() }
+    }
+}
+
+/// The generator.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub config: SpaceConfig,
+}
+
+impl SearchSpace {
+    pub fn new(config: SpaceConfig) -> Self {
+        SearchSpace { config }
+    }
+
+    /// Enumerate the homogeneous search space for (`model`, `gpu` × `count`).
+    ///
+    /// Structural constraints applied here (they define the space, not the
+    /// filters): `heads % tp == 0`, `tp ≤ gpus/node`, `layers % pp == 0`,
+    /// `count % (tp·pp) == 0`, `gbs % (dp·mbs) == 0`, vpp divides
+    /// layers/stage. Everything else (paper rules, memory) filters later.
+    pub fn homogeneous(
+        &self,
+        model: &ModelSpec,
+        catalog: &GpuCatalog,
+        gpu: GpuType,
+        count: usize,
+    ) -> Vec<ParallelStrategy> {
+        let mut out = Vec::new();
+        for &tp in &self.valid_tps(model, catalog) {
+            if count % tp != 0 {
+                continue;
+            }
+            for pp in self.valid_pps(model, count, tp) {
+                let dp = count / (tp * pp);
+                let cluster = ClusterAssignment::homogeneous(gpu, pp, model.layers / pp);
+                self.expand_params(model, &cluster, tp, dp, &mut out);
+            }
+        }
+        out
+    }
+
+    /// TP sizes valid for this model/topology.
+    pub fn valid_tps(&self, model: &ModelSpec, catalog: &GpuCatalog) -> Vec<usize> {
+        self.config
+            .tp_candidates
+            .iter()
+            .copied()
+            .filter(|&tp| tp <= catalog.gpus_per_node && model.heads % tp == 0)
+            .collect()
+    }
+
+    /// PP sizes valid for this model and GPU count at a given TP.
+    pub fn valid_pps(&self, model: &ModelSpec, count: usize, tp: usize) -> Vec<usize> {
+        (1..=self.config.max_pp.min(model.layers).min(count / tp))
+            .filter(|&pp| model.layers % pp == 0 && count % (tp * pp) == 0)
+            .collect()
+    }
+
+    /// Cross-product of the per-strategy parameters for a fixed
+    /// (cluster, tp, dp). Shared by the homogeneous and heterogeneous paths.
+    pub fn expand_params(
+        &self,
+        model: &ModelSpec,
+        cluster: &ClusterAssignment,
+        tp: usize,
+        dp: usize,
+        out: &mut Vec<ParallelStrategy>,
+    ) {
+        let gbs = model.global_batch;
+        let pp = cluster.pp();
+        let min_lps = cluster.segments.iter().map(|s| s.layers_per_stage).min().unwrap_or(1);
+        let max_lps = cluster.segments.iter().map(|s| s.layers_per_stage).max().unwrap_or(1);
+        // Expert parallelism: only for MoE models; ep must divide both the
+        // expert count and the data-parallel size (Megatron carves the EP
+        // group out of DP).
+        let eps: Vec<usize> = if model.is_moe() {
+            self.config
+                .ep_candidates
+                .iter()
+                .copied()
+                .filter(|&e| model.num_experts % e == 0 && dp % e == 0)
+                .collect()
+        } else {
+            vec![1]
+        };
+        for &mbs in &self.config.mbs_candidates {
+            if gbs % (dp * mbs) != 0 {
+                continue;
+            }
+            for &vpp in &self.config.vpp_candidates {
+                if vpp > 1 && (pp == 1 || min_lps % vpp != 0 || max_lps % vpp != 0) {
+                    continue;
+                }
+                for &sp in &self.config.seq_parallel_options {
+                    if sp && tp == 1 {
+                        continue;
+                    }
+                    for &dopt in &self.config.dist_opt_options {
+                        for &off in &self.config.offload_options {
+                            for rc in self.recompute_variants(max_lps) {
+                              for &ep in &eps {
+                                out.push(ParallelStrategy {
+                                    cluster: cluster.clone(),
+                                    tp,
+                                    dp,
+                                    micro_batch: mbs,
+                                    global_batch: gbs,
+                                    vpp,
+                                    sequence_parallel: sp,
+                                    use_distributed_optimizer: dopt,
+                                    recompute: rc.0,
+                                    recompute_method: rc.1,
+                                    recompute_num_layers: rc.2,
+                                    offload_optimizer: off,
+                                    overlap_grad_reduce: self.config.overlap,
+                                    overlap_param_gather: self.config.overlap,
+                                    overlap_p2p: self.config.overlap,
+                                    tp_comm_overlap: self.config.overlap,
+                                    use_flash_attn: self.config.use_flash_attn,
+                                    ep,
+                                });
+                              }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Recompute variants: none, selective, and full × {block, uniform} ×
+    /// power-of-two layer counts (incl. the full per-stage layer count).
+    fn recompute_variants(&self, layers_per_stage: usize) -> Vec<(Recompute, RecomputeMethod, usize)> {
+        let mut v = Vec::new();
+        if self.config.recompute_none {
+            v.push((Recompute::None, RecomputeMethod::Uniform, 0));
+        }
+        if self.config.recompute_selective {
+            v.push((Recompute::Selective, RecomputeMethod::Uniform, 0));
+        }
+        if self.config.recompute_full {
+            let mut counts = Vec::new();
+            let mut c = 1;
+            while c < layers_per_stage {
+                counts.push(c);
+                c *= 2;
+            }
+            counts.push(layers_per_stage);
+            for m in [RecomputeMethod::Block, RecomputeMethod::Uniform] {
+                for &nl in &counts {
+                    v.push((Recompute::Full, m, nl));
+                }
+            }
+        }
+        v
+    }
+
+    /// Mode-3 GPU-count sweep: powers of two up to `max_count` (Eq. 3).
+    pub fn count_sweep(max_count: usize) -> Vec<usize> {
+        let mut v = Vec::new();
+        let mut c = 2;
+        while c <= max_count {
+            v.push(c);
+            c *= 2;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuCatalog;
+    use crate::model::ModelRegistry;
+
+    fn setup() -> (ModelRegistry, GpuCatalog) {
+        (ModelRegistry::builtin(), GpuCatalog::builtin())
+    }
+
+    #[test]
+    fn all_generated_strategies_validate() {
+        let (reg, cat) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let strategies = space.homogeneous(m, &cat, 1, 64);
+        assert!(!strategies.is_empty());
+        for s in &strategies {
+            s.validate(m).unwrap_or_else(|e| panic!("invalid strategy {}: {e}", s.summary()));
+            assert_eq!(s.num_gpus(), 64);
+        }
+    }
+
+    #[test]
+    fn space_size_matches_paper_magnitude() {
+        // Table 1 reports 23 348 strategies for Llama-2-7B@64 and 53 264 for
+        // Llama-2-70B@64; our generator must land in the same order of
+        // magnitude (10k–100k).
+        let (reg, cat) = setup();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let n7 = space.homogeneous(reg.get("llama2-7b").unwrap(), &cat, 1, 64).len();
+        let n70 = space.homogeneous(reg.get("llama2-70b").unwrap(), &cat, 1, 64).len();
+        assert!(n7 > 3_000 && n7 < 200_000, "llama2-7b@64 space = {n7}");
+        assert!(n70 > n7, "70B space ({n70}) should exceed 7B space ({n7})");
+    }
+
+    #[test]
+    fn space_shrinks_with_scale() {
+        // Table 1: strategy count decreases as GPU count grows (fewer valid
+        // dp/pp splittings of a fixed gbs).
+        let (reg, cat) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let n64 = space.homogeneous(m, &cat, 1, 64).len();
+        let n1024 = space.homogeneous(m, &cat, 1, 1024).len();
+        assert!(n1024 < n64, "64 GPUs: {n64}, 1024 GPUs: {n1024}");
+    }
+
+    #[test]
+    fn dp_only_config() {
+        let (reg, cat) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let space = SearchSpace::new(SpaceConfig::dp_only());
+        let strategies = space.homogeneous(m, &cat, 1, 64);
+        assert!(!strategies.is_empty());
+        for s in &strategies {
+            assert_eq!(s.tp, 1);
+            assert_eq!(s.pp(), 1);
+            assert_eq!(s.dp, 64);
+        }
+    }
+
+    #[test]
+    fn tp_respects_heads_divisibility() {
+        let (reg, cat) = setup();
+        // A 12-head model cannot use tp=8.
+        let mut m = reg.get("llama2-7b").unwrap().clone();
+        m.heads = 12;
+        m.kv_heads = 12;
+        let space = SearchSpace::new(SpaceConfig::default());
+        let tps = space.valid_tps(&m, &cat);
+        assert_eq!(tps, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn count_sweep_powers_of_two() {
+        assert_eq!(SearchSpace::count_sweep(64), vec![2, 4, 8, 16, 32, 64]);
+        assert_eq!(SearchSpace::count_sweep(100), vec![2, 4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn no_duplicate_strategies() {
+        let (reg, cat) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let strategies = space.homogeneous(m, &cat, 1, 256);
+        let mut keys: Vec<String> = strategies.iter().map(|s| s.summary()).collect();
+        keys.sort();
+        let before = keys.len();
+        keys.dedup();
+        assert_eq!(before, keys.len(), "duplicate strategies generated");
+    }
+
+    #[test]
+    fn moe_space_includes_expert_parallel_variants() {
+        let (reg, cat) = setup();
+        let m = reg.get("mixtral-8x7b").unwrap();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let strategies = space.homogeneous(m, &cat, 1, 64);
+        assert!(!strategies.is_empty());
+        let eps: std::collections::BTreeSet<usize> = strategies.iter().map(|s| s.ep).collect();
+        assert!(eps.contains(&1) && eps.contains(&2) && eps.contains(&8), "eps seen: {eps:?}");
+        for s in &strategies {
+            s.validate(m).unwrap();
+            assert_eq!(m.num_experts % s.ep, 0);
+            assert_eq!(s.dp % s.ep, 0);
+        }
+        // Dense models never get ep > 1.
+        let dense = space.homogeneous(reg.get("llama2-7b").unwrap(), &cat, 1, 64);
+        assert!(dense.iter().all(|s| s.ep == 1));
+    }
+}

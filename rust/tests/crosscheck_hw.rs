@@ -1,0 +1,68 @@
+//! rust ↔ python hardware-truth lockstep.
+//!
+//! `python/compile/effdata.py` re-implements `rust/src/hw/` for the GBDT
+//! training data; any drift between the two silently corrupts the η
+//! predictors. `aot.py` exports deterministic noise-free samples
+//! (`artifacts/eff_samples.json`); this test replays them through the rust
+//! implementation and requires bit-for-bit-grade agreement.
+
+use astra::gpu::GpuCatalog;
+use astra::hw;
+use astra::runtime::artifacts_dir;
+
+#[test]
+fn eff_samples_match_rust_hw() {
+    let path = artifacts_dir().join("eff_samples.json");
+    if !path.exists() {
+        eprintln!("SKIP: {path:?} missing — run `make artifacts` first");
+        return;
+    }
+    let v = astra::json::from_file(&path).unwrap();
+    let catalog = GpuCatalog::builtin();
+
+    let comp = v.req_arr("comp").unwrap();
+    assert!(comp.len() >= 100, "too few comp samples");
+    for s in comp {
+        let gpu = catalog.find(s.req_str("gpu").unwrap()).unwrap();
+        let spec = catalog.spec(gpu);
+        let flops = s.req_f64("flops").unwrap();
+        let dim = s.req_f64("min_dim").unwrap();
+        let inten = s.req_f64("intensity").unwrap();
+        let want = s.req_f64("eta").unwrap();
+        let got = hw::eta_comp(spec, flops, dim, inten);
+        assert!(
+            (got - want).abs() / want < 1e-9,
+            "eta_comp drift on {}: rust {got} vs python {want}",
+            spec.name
+        );
+        // Feature vectors must agree too (forest input contract).
+        let feats = hw::comp_features(spec, flops, dim, inten);
+        let pyfeats = s.req_f64_arr("features").unwrap();
+        assert_eq!(feats.len(), pyfeats.len());
+        for (a, b) in feats.iter().zip(&pyfeats) {
+            assert!((a - b).abs() < 1e-9, "comp feature drift {a} vs {b}");
+        }
+    }
+
+    let comm = v.req_arr("comm").unwrap();
+    assert!(comm.len() >= 100, "too few comm samples");
+    for s in comm {
+        let gpu = catalog.find(s.req_str("gpu").unwrap()).unwrap();
+        let spec = catalog.spec(gpu);
+        let bytes = s.req_f64("bytes").unwrap();
+        let bw = s.req_f64("bw_gbs").unwrap();
+        let parts = s.req_f64("participants").unwrap();
+        let want = s.req_f64("eta").unwrap();
+        let got = hw::eta_comm(spec, bytes, bw, parts);
+        assert!(
+            (got - want).abs() / want < 1e-9,
+            "eta_comm drift on {}: rust {got} vs python {want}",
+            spec.name
+        );
+        let feats = hw::comm_features(spec, bytes, bw, parts);
+        let pyfeats = s.req_f64_arr("features").unwrap();
+        for (a, b) in feats.iter().zip(&pyfeats) {
+            assert!((a - b).abs() < 1e-9, "comm feature drift {a} vs {b}");
+        }
+    }
+}

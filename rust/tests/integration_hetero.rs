@@ -1,0 +1,148 @@
+//! Mode-2 heterogeneous search end-to-end (paper §3.4 / §5.2 shapes).
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::expert::ExpertPanel;
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::simulator::{PipelineSimulator, SimConfig};
+use astra::strategy::GpuPoolMode;
+
+fn engine(exhaustive: bool) -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, hetero_exhaustive: exhaustive, ..Default::default() },
+    )
+}
+
+fn caps(cat: &GpuCatalog, a: usize, h: usize) -> Vec<(usize, usize)> {
+    vec![(cat.find("a800").unwrap(), a), (cat.find("h100").unwrap(), h)]
+}
+
+#[test]
+fn hetero_search_valid_and_uses_both_types() {
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-13b").unwrap().clone();
+    let rep = engine(false)
+        .search(&SearchRequest {
+            mode: GpuPoolMode::Heterogeneous { total: 64, caps: caps(&cat, 48, 48) },
+            model: model.clone(),
+        })
+        .unwrap();
+    assert!(rep.scored > 0);
+    for s in &rep.top {
+        s.strategy.validate(&model).unwrap();
+        assert_eq!(s.strategy.num_gpus(), 64);
+        // Per-type usage must respect the caps.
+        for (g, n) in s.strategy.cluster.gpus_by_type(s.strategy.tp, s.strategy.dp) {
+            let cap = caps(&cat, 48, 48).iter().find(|&&(t, _)| t == g).unwrap().1;
+            assert!(n <= cap, "type {g} uses {n} > cap {cap}");
+        }
+    }
+    assert!(rep.top.iter().any(|s| s.strategy.cluster.is_heterogeneous()));
+}
+
+#[test]
+fn pruned_close_to_exhaustive() {
+    // The pruned solver must find ≥99% of the exhaustive optimum's
+    // throughput (our ablation claim; also guards the solver's seeding).
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-7b").unwrap().clone();
+    let req = SearchRequest {
+        mode: GpuPoolMode::Heterogeneous { total: 32, caps: caps(&cat, 24, 24) },
+        model,
+    };
+    let fast = engine(false).search(&req).unwrap();
+    let full = engine(true).search(&req).unwrap();
+    let t_fast = fast.best().unwrap().cost.tokens_per_s;
+    let t_full = full.best().unwrap().cost.tokens_per_s;
+    assert!(fast.generated <= full.generated);
+    assert!(
+        t_fast >= 0.99 * t_full,
+        "pruned {t_fast:.0} vs exhaustive {t_full:.0} ({} vs {} candidates)",
+        fast.generated,
+        full.generated
+    );
+}
+
+#[test]
+fn astra_beats_experts_in_hetero() {
+    // Fig. 6's shape: heterogeneous is where manual layer-splitting breaks
+    // down, so Astra must clearly beat the panel on the simulator.
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-13b").unwrap();
+    let sim = PipelineSimulator::new(cat.clone(), SimConfig::default());
+    let total = 64;
+    let c = caps(&cat, 48, 48);
+
+    let rep = engine(false)
+        .search(&SearchRequest {
+            mode: GpuPoolMode::Heterogeneous { total, caps: c.clone() },
+            model: model.clone(),
+        })
+        .unwrap();
+    let astra_tput = sim.measure(model, &rep.best().unwrap().strategy).tokens_per_s;
+
+    let panel = ExpertPanel::default();
+    let expert_tput = panel
+        .proposals_hetero(model, &cat, &c, total)
+        .iter()
+        .map(|(_, s)| sim.measure(model, s).tokens_per_s)
+        .fold(0.0f64, f64::max);
+    assert!(expert_tput > 0.0, "no expert hetero baseline");
+    assert!(
+        astra_tput >= expert_tput,
+        "astra {astra_tput:.0} < expert {expert_tput:.0} in hetero mode"
+    );
+}
+
+#[test]
+fn hetero_between_pure_slow_and_pure_fast() {
+    // Table 2's shape: mixed A800+H100 throughput sits between pure-A800
+    // and pure-H100 at the same total GPU count.
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-7b").unwrap().clone();
+    let eng = engine(false);
+    let total = 64;
+
+    let pure = |gpu: &str| {
+        eng.search(&SearchRequest::homogeneous(gpu, total, model.clone()))
+            .unwrap()
+            .best()
+            .unwrap()
+            .cost
+            .tokens_per_s
+    };
+    let t_a800 = pure("a800");
+    let t_h100 = pure("h100");
+    let mixed = eng
+        .search(&SearchRequest {
+            mode: GpuPoolMode::Heterogeneous { total, caps: caps(&cat, total / 2, total / 2) },
+            model: model.clone(),
+        })
+        .unwrap()
+        .best()
+        .unwrap()
+        .cost
+        .tokens_per_s;
+    assert!(t_h100 > t_a800);
+    assert!(
+        mixed > t_a800 * 0.95 && mixed < t_h100 * 1.02,
+        "mixed {mixed:.0} outside [a800 {t_a800:.0}, h100 {t_h100:.0}]"
+    );
+}
+
+#[test]
+fn rejects_infeasible_caps() {
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-7b").unwrap().clone();
+    let err = engine(false).search(&SearchRequest {
+        mode: GpuPoolMode::Heterogeneous { total: 128, caps: caps(&cat, 32, 32) },
+        model,
+    });
+    assert!(err.is_err(), "caps sum 64 < total 128 must be rejected");
+}

@@ -1,0 +1,91 @@
+//! Mode-3 money-limit search end-to-end (paper §3.6 / §5.3 / Fig. 7 shapes).
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::pareto::MoneyModel;
+use astra::strategy::GpuPoolMode;
+
+fn engine() -> AstraEngine {
+    AstraEngine::new(GpuCatalog::builtin(), EngineConfig { use_forests: false, ..Default::default() })
+}
+
+fn cost_request(model: &str, gpu: &str, max_count: usize, max_money: f64) -> SearchRequest {
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    SearchRequest {
+        mode: GpuPoolMode::Cost { gpu: cat.find(gpu).unwrap(), max_count, max_money },
+        model: reg.get(model).unwrap().clone(),
+    }
+}
+
+#[test]
+fn pareto_pool_valid_and_monotone() {
+    let rep = engine().search(&cost_request("llama2-7b", "h100", 64, f64::INFINITY)).unwrap();
+    assert!(rep.pool.len() >= 3, "frontier too small: {}", rep.pool.len());
+    assert!(rep.pool.is_valid_frontier());
+    // Fig. 7's shape: along the frontier, paying more buys throughput.
+    let e = rep.pool.entries();
+    for w in e.windows(2) {
+        assert!(w[0].throughput > w[1].throughput);
+        assert!(w[0].cost > w[1].cost);
+    }
+}
+
+#[test]
+fn tighter_budget_means_slower_or_equal_plan() {
+    let eng = engine();
+    let rep = eng.search(&cost_request("llama2-13b", "a800", 64, f64::INFINITY)).unwrap();
+    let frontier = rep.pool.entries();
+    let rich = frontier.first().unwrap();
+    let mid_budget = (rich.cost + frontier.last().unwrap().cost) / 2.0;
+    let mid = rep.pool.best_within_budget(mid_budget).unwrap();
+    assert!(mid.throughput <= rich.throughput);
+    assert!(mid.cost <= mid_budget);
+}
+
+#[test]
+fn money_scales_with_gpu_price() {
+    // Same strategy priced on H100 must cost more per hour than on A800
+    // when it runs proportionally faster than the price ratio or not —
+    // here we check the raw Eq. 32 accounting.
+    let cat = GpuCatalog::builtin();
+    let reg = ModelRegistry::builtin();
+    let m = reg.get("llama2-7b").unwrap();
+    let mm = MoneyModel::default();
+    let eng = engine();
+    let rep = eng.search(&SearchRequest::homogeneous("a800", 64, m.clone())).unwrap();
+    let s = rep.best().unwrap();
+    let usd = mm.cost_usd(m, &s.strategy, &cat, s.cost.step_time);
+    // Recompute by hand: steps × step_time × 64 × fee.
+    let a800 = cat.spec(cat.find("a800").unwrap());
+    let expect = mm.steps(m) * s.cost.step_time * 64.0 * a800.price_per_second();
+    assert!((usd - expect).abs() / expect < 1e-9);
+}
+
+#[test]
+fn cheaper_gpu_can_win_under_tight_budget() {
+    // The economic crossover the paper's mode 3 exists for: under a tight
+    // budget the optimal pool should offer small/cheap configurations.
+    let eng = engine();
+    let rep = eng.search(&cost_request("llama2-7b", "h100", 128, f64::INFINITY)).unwrap();
+    let cheapest = rep.pool.entries().last().unwrap();
+    let fastest = rep.pool.entries().first().unwrap();
+    // Money is roughly N·step_time, so with near-linear scaling the *cost*
+    // spread is modest — but the throughput spread must be wide (that's the
+    // trade the Pareto pool exposes), and cheaper is strictly cheaper.
+    assert!(cheapest.cost < fastest.cost);
+    assert!(
+        fastest.throughput > 2.0 * cheapest.throughput,
+        "frontier throughput spread too small: {:.0} vs {:.0}",
+        fastest.throughput,
+        cheapest.throughput
+    );
+}
+
+#[test]
+fn impossible_budget_yields_no_selection() {
+    let eng = engine();
+    let rep = eng.search(&cost_request("llama2-7b", "h100", 32, f64::INFINITY)).unwrap();
+    assert!(rep.pool.best_within_budget(0.0).is_none());
+}

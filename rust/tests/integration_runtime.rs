@@ -1,0 +1,227 @@
+//! HLO ↔ native engine parity — the cross-layer correctness anchor.
+//!
+//! The AOT scorer (Layer-2 JAX graph + Layer-1 Pallas kernels, compiled via
+//! PJRT) and the pure-rust cost model implement the same math; this test
+//! drives both over a corpus of real strategies and requires tight
+//! agreement. Skipped (with a loud message) when `make artifacts` has not
+//! been run.
+
+use astra::cost::{CostModel, EtaProvider};
+use astra::gbdt::EtaForests;
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::runtime::{artifacts_dir, artifacts_present, ScorerRuntime};
+use astra::strategy::{SearchSpace, SpaceConfig};
+
+fn skip_if_no_artifacts() -> bool {
+    if !artifacts_present() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn scorer_loads_and_runs() {
+    if skip_if_no_artifacts() {
+        return;
+    }
+    let rt = ScorerRuntime::load(&artifacts_dir()).expect("load scorer");
+    let b = rt.batch;
+    use astra::cost::features::{FG, FS, PMAX};
+    // All-padding batch: must run and return finite numbers.
+    let stage_feats = vec![0.0f32; b * PMAX * FS];
+    let stage_mask = vec![0.0f32; b * PMAX];
+    let mut strat_feats = vec![0.0f32; b * FG];
+    for i in 0..b {
+        strat_feats[i * FG] = 1.0; // K
+        strat_feats[i * FG + 1] = 1.0; // vpp
+        strat_feats[i * FG + 2] = 1.0; // dp
+    }
+    let rows = rt.execute(&stage_feats, &stage_mask, &strat_feats).expect("execute");
+    assert_eq!(rows.len(), b);
+    for r in &rows {
+        assert!(r.iter().all(|v| v.is_finite()), "non-finite scorer output {r:?}");
+    }
+}
+
+#[test]
+fn hlo_matches_native_cost_model() {
+    if skip_if_no_artifacts() {
+        return;
+    }
+    let catalog = GpuCatalog::builtin();
+    let reg = ModelRegistry::builtin();
+    let forests = EtaForests::from_file(&artifacts_dir().join("forest.json")).expect("forest");
+    let cost = CostModel::new(catalog.clone(), EtaProvider::Forests(forests));
+    let rt = ScorerRuntime::load(&artifacts_dir()).expect("load scorer");
+
+    let mem = astra::memory::MemoryModel::default();
+    let mut checked = 0usize;
+    let mut worst: f64 = 0.0;
+    for (model_name, gpu_name, count) in
+        [("llama2-7b", "a800", 64usize), ("llama2-70b", "h100", 256), ("glm-67b", "a800", 128)]
+    {
+        let model = reg.get(model_name).unwrap();
+        let gpu = catalog.find(gpu_name).unwrap();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let all = space.homogeneous(model, &catalog, gpu, count);
+        // Deterministic thinning: every Nth valid strategy up to one batch.
+        let valid: Vec<_> = all
+            .into_iter()
+            .filter(|s| mem.fits(model, s, &catalog))
+            .step_by(37)
+            .take(rt.batch)
+            .collect();
+        assert!(!valid.is_empty(), "{model_name}: no valid strategies");
+        let refs: Vec<&astra::strategy::ParallelStrategy> = valid.iter().collect();
+        let pb = astra::cost::features::pack_batch(model, &refs, &catalog, rt.batch);
+        let rows = rt.execute(&pb.stage_feats, &pb.stage_mask, &pb.strat_feats).unwrap();
+        for (i, s) in valid.iter().enumerate() {
+            let native = cost.evaluate(model, s);
+            let hlo_step = rows[i][0] as f64;
+            let rel = (native.step_time - hlo_step).abs() / native.step_time;
+            assert!(
+                rel < 0.02,
+                "{model_name} strategy {}: native {:.6}s vs hlo {:.6}s (rel {:.4})",
+                s.summary(),
+                native.step_time,
+                hlo_step,
+                rel
+            );
+            worst = worst.max(rel);
+            checked += 1;
+        }
+    }
+    eprintln!("parity checked on {checked} strategies, worst rel diff {worst:.3e}");
+    assert!(checked > 100, "parity corpus too small: {checked}");
+}
+
+#[test]
+fn forest_json_loads_with_sane_etas() {
+    if skip_if_no_artifacts() {
+        return;
+    }
+    let forests = EtaForests::from_file(&artifacts_dir().join("forest.json")).expect("forest");
+    // Predictions over the feature range stay in (0, 1].
+    let catalog = GpuCatalog::builtin();
+    let spec = catalog.spec(catalog.find("a800").unwrap());
+    for flops in [1e7f64, 1e10, 1e13] {
+        for dim in [32.0f64, 1024.0] {
+            for inten in [5.0f64, 500.0] {
+                let f = astra::hw::comp_features(spec, flops, dim, inten);
+                let x: Vec<f32> = f.iter().map(|&v| v as f32).collect();
+                let eta = forests.eta_comp(&x);
+                assert!(eta > 0.0 && eta <= 1.0, "eta_comp {eta}");
+                // Within 15% of the hardware truth on in-range points; near
+                // the 1e-4 clamp floor only absolute agreement matters.
+                let truth = astra::hw::eta_comp(spec, flops, dim, inten);
+                let rel = (eta - truth).abs() / truth;
+                assert!(
+                    rel < 0.15 || (eta - truth).abs() < 5e-3,
+                    "forest {eta:.4} vs truth {truth:.4} (rel {rel:.3})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hlo_matches_native_on_heterogeneous_strategies() {
+    if skip_if_no_artifacts() {
+        return;
+    }
+    use astra::hetero::HeteroSolver;
+    use astra::strategy::SpaceConfig;
+    let catalog = GpuCatalog::builtin();
+    let reg = ModelRegistry::builtin();
+    let forests = EtaForests::from_file(&artifacts_dir().join("forest.json")).expect("forest");
+    let cost = CostModel::new(catalog.clone(), EtaProvider::Forests(forests));
+    let rt = ScorerRuntime::load(&artifacts_dir()).expect("load scorer");
+
+    let model = reg.get("llama2-13b").unwrap();
+    let caps = [(catalog.find("a800").unwrap(), 48usize), (catalog.find("h100").unwrap(), 48)];
+    let solver = HeteroSolver::default();
+    let space = SearchSpace::new(SpaceConfig { vpp_candidates: vec![1], ..Default::default() });
+    let mut strategies = Vec::new();
+    for tp in [2usize, 4] {
+        for pp in [4usize, 8] {
+            let total = 64;
+            if total % (tp * pp) != 0 {
+                continue;
+            }
+            let dp = total / (tp * pp);
+            let budgets = HeteroSolver::budgets(&catalog, &caps, tp, dp);
+            if budgets.iter().map(|b| b.max_stages).sum::<usize>() < pp {
+                continue;
+            }
+            for ca in solver.enumerate_pruned(model.layers, pp, &budgets).into_iter().take(8) {
+                space.expand_params(model, &ca, tp, dp, &mut strategies);
+            }
+        }
+    }
+    let mem = astra::memory::MemoryModel::default();
+    let valid: Vec<_> = strategies
+        .into_iter()
+        .filter(|s| s.validate(model).is_ok() && mem.fits(model, s, &catalog))
+        .step_by(7)
+        .take(rt.batch)
+        .collect();
+    assert!(valid.len() > 20, "hetero parity corpus too small: {}", valid.len());
+    let refs: Vec<&astra::strategy::ParallelStrategy> = valid.iter().collect();
+    let pb = astra::cost::features::pack_batch(model, &refs, &catalog, rt.batch);
+    let rows = rt.execute(&pb.stage_feats, &pb.stage_mask, &pb.strat_feats).unwrap();
+    for (i, s) in valid.iter().enumerate() {
+        let native = cost.evaluate(model, s);
+        let rel = (native.step_time - rows[i][0] as f64).abs() / native.step_time;
+        assert!(
+            rel < 0.02,
+            "hetero parity broke on {}: native {} vs hlo {} (rel {rel:.4})",
+            s.summary(),
+            native.step_time,
+            rows[i][0]
+        );
+    }
+    eprintln!("hetero parity checked on {} strategies", valid.len());
+}
+
+#[test]
+fn hlo_matches_native_on_moe_strategies() {
+    if skip_if_no_artifacts() {
+        return;
+    }
+    let catalog = GpuCatalog::builtin();
+    let reg = ModelRegistry::builtin();
+    let forests = EtaForests::from_file(&artifacts_dir().join("forest.json")).expect("forest");
+    let cost = CostModel::new(catalog.clone(), EtaProvider::Forests(forests));
+    let rt = ScorerRuntime::load(&artifacts_dir()).expect("load scorer");
+
+    let model = reg.get("mixtral-8x7b").unwrap();
+    let gpu = catalog.find("h100").unwrap();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let mem = astra::memory::MemoryModel::default();
+    let valid: Vec<_> = space
+        .homogeneous(model, &catalog, gpu, 64)
+        .into_iter()
+        .filter(|s| mem.fits(model, s, &catalog))
+        .step_by(53)
+        .take(rt.batch)
+        .collect();
+    assert!(valid.len() > 30, "MoE corpus too small: {}", valid.len());
+    assert!(valid.iter().any(|s| s.ep > 1), "no expert-parallel strategies in corpus");
+    let refs: Vec<&astra::strategy::ParallelStrategy> = valid.iter().collect();
+    let pb = astra::cost::features::pack_batch(model, &refs, &catalog, rt.batch);
+    let rows = rt.execute(&pb.stage_feats, &pb.stage_mask, &pb.strat_feats).unwrap();
+    for (i, s) in valid.iter().enumerate() {
+        let native = cost.evaluate(model, s);
+        let rel = (native.step_time - rows[i][0] as f64).abs() / native.step_time;
+        assert!(
+            rel < 0.02,
+            "MoE parity broke on {}: native {} vs hlo {} (rel {rel:.4})",
+            s.summary(),
+            native.step_time,
+            rows[i][0]
+        );
+    }
+    eprintln!("MoE parity checked on {} strategies", valid.len());
+}

@@ -1,0 +1,114 @@
+//! Cost model vs discrete-event simulator — the paper's >95% accuracy claim
+//! (abstract / §1), evaluated over the full valid strategy population of a
+//! real setting, not just the winner.
+
+use astra::cost::{CostModel, EtaProvider};
+use astra::gpu::GpuCatalog;
+use astra::memory::MemoryModel;
+use astra::model::ModelRegistry;
+use astra::simulator::{PipelineSimulator, SimConfig};
+use astra::strategy::{SearchSpace, SpaceConfig};
+
+#[test]
+fn cost_model_accuracy_over_population() {
+    let catalog = GpuCatalog::builtin();
+    let reg = ModelRegistry::builtin();
+    let cost = CostModel::new(catalog.clone(), EtaProvider::Analytic);
+    let sim = PipelineSimulator::new(catalog.clone(), SimConfig::default());
+    let mem = MemoryModel::default();
+
+    let mut accs: Vec<f64> = Vec::new();
+    for (model_name, count) in [("llama2-7b", 64usize), ("llama2-13b", 128)] {
+        let model = reg.get(model_name).unwrap();
+        let gpu = catalog.find("a800").unwrap();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let valid: Vec<_> = space
+            .homogeneous(model, &catalog, gpu, count)
+            .into_iter()
+            .filter(|s| mem.fits(model, s, &catalog))
+            .step_by(97)
+            .take(60)
+            .collect();
+        assert!(valid.len() >= 30);
+        for s in &valid {
+            let predicted = cost.evaluate(model, s).step_time;
+            let measured = sim.measure(model, s).step_time;
+            accs.push(1.0 - (predicted - measured).abs() / measured);
+        }
+    }
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    let min = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+    eprintln!("accuracy over {} strategies: mean {:.4}, min {:.4}", accs.len(), mean, min);
+    assert!(mean > 0.95, "paper claims >95% accuracy; got mean {mean:.4}");
+    assert!(min > 0.85, "worst-case accuracy collapsed: {min:.4}");
+}
+
+#[test]
+fn ranking_agreement_top_candidate() {
+    // Prediction quality that matters for search: the cost model's chosen
+    // winner must be within 2% of the simulator's true best among a sample.
+    let catalog = GpuCatalog::builtin();
+    let reg = ModelRegistry::builtin();
+    let model = reg.get("llama2-7b").unwrap();
+    let cost = CostModel::new(catalog.clone(), EtaProvider::Analytic);
+    let sim = PipelineSimulator::new(catalog.clone(), SimConfig::default());
+    let mem = MemoryModel::default();
+    let gpu = catalog.find("a800").unwrap();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let valid: Vec<_> = space
+        .homogeneous(model, &catalog, gpu, 64)
+        .into_iter()
+        .filter(|s| mem.fits(model, s, &catalog))
+        .step_by(41)
+        .take(80)
+        .collect();
+
+    let predicted_best = valid
+        .iter()
+        .min_by(|a, b| {
+            cost.evaluate(model, a)
+                .step_time
+                .partial_cmp(&cost.evaluate(model, b).step_time)
+                .unwrap()
+        })
+        .unwrap();
+    let sim_times: Vec<f64> = valid.iter().map(|s| sim.measure(model, s).step_time).collect();
+    let true_best = sim_times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let chosen = sim.measure(model, predicted_best).step_time;
+    assert!(
+        chosen <= true_best * 1.02,
+        "model-chosen winner {chosen:.4}s vs simulator best {true_best:.4}s"
+    );
+}
+
+#[test]
+fn noise_does_not_flip_clear_orderings() {
+    // Failure-injection style check: with 2% measurement noise, a 2×
+    // throughput gap must never invert across seeds.
+    let catalog = GpuCatalog::builtin();
+    let reg = ModelRegistry::builtin();
+    let model = reg.get("llama2-7b").unwrap();
+    let mem = MemoryModel::default();
+    let gpu = catalog.find("a800").unwrap();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let cost = CostModel::new(catalog.clone(), EtaProvider::Analytic);
+    let valid: Vec<_> = space
+        .homogeneous(model, &catalog, gpu, 64)
+        .into_iter()
+        .filter(|s| mem.fits(model, s, &catalog))
+        .collect();
+    let mut scored: Vec<(f64, &_)> =
+        valid.iter().map(|s| (cost.evaluate(model, s).step_time, s)).collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let fast = scored.first().unwrap().1;
+    let slow = scored.iter().find(|(t, _)| *t > 2.0 * scored[0].0).map(|(_, s)| *s);
+    let Some(slow) = slow else {
+        return; // population too uniform — nothing to test
+    };
+    for seed in 0..10u64 {
+        let sim = PipelineSimulator::new(catalog.clone(), SimConfig { seed, noise_sigma: 0.02 });
+        let tf = sim.measure(model, fast).step_time;
+        let ts = sim.measure(model, slow).step_time;
+        assert!(tf < ts, "seed {seed}: ordering flipped ({tf} vs {ts})");
+    }
+}

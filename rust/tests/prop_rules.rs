@@ -1,0 +1,139 @@
+//! Property tests of the rule DSL: parser totality, evaluator soundness,
+//! and the paper's Eq. 10 semantics ("any rule matches ⇒ dropped").
+
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::prng::Rng;
+use astra::rules::{Rule, RuleSet};
+use astra::strategy::{SearchSpace, SpaceConfig};
+
+/// Random well-formed expressions parse and evaluate without panicking.
+#[test]
+fn prop_random_expressions_total() {
+    let mut rng = Rng::new(42);
+    let fields = [
+        "tensor_model_parallel_size",
+        "pipeline_model_parallel_size",
+        "num_gpus",
+        "micro_batch_size",
+        "recompute_num_layers",
+    ];
+    let ops = ["==", "!=", ">", ">=", "<", "<=", "+", "-", "*", "%"];
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-7b").unwrap();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let strategies = space.homogeneous(model, &cat, 0, 64);
+
+    for case in 0..300 {
+        // Build a random comparison chain: atom op atom [&&/|| ...]
+        let mut src = String::new();
+        let clauses = 1 + rng.below(3);
+        for ci in 0..clauses {
+            if ci > 0 {
+                src.push_str(if rng.bool() { " && " } else { " || " });
+            }
+            let lhs = format!("${}", rng.choose(&fields));
+            let rhs: String = if rng.bool() {
+                format!("{}", 1 + rng.below(64))
+            } else {
+                format!("${}", rng.choose(&fields))
+            };
+            let op = rng.choose(&ops);
+            // Arithmetic ops need a comparison to be a valid rule clause.
+            if ["+", "-", "*", "%"].contains(op) {
+                src.push_str(&format!("{lhs} {op} {rhs} != 0"));
+            } else {
+                src.push_str(&format!("{lhs} {op} {rhs}"));
+            }
+        }
+        let rule = Rule::compile(&src).unwrap_or_else(|e| panic!("case {case} '{src}': {e}"));
+        let s = &strategies[rng.below(strategies.len() as u64) as usize];
+        // Must evaluate to a clean bool (no panic; Err only for div-by-zero
+        // which our construction can hit via `% $field` when field is 0 —
+        // never the case for these fields).
+        rule.matches(s).unwrap_or_else(|e| panic!("case {case} '{src}': {e}"));
+    }
+}
+
+/// Eq. 10: a strategy passes iff NO rule matches; adding a tautology rule
+/// must filter everything, adding a contradiction must change nothing.
+#[test]
+fn prop_ruleset_semantics() {
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-13b").unwrap();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let strategies = space.homogeneous(model, &cat, 0, 128);
+
+    let base = RuleSet::paper_defaults();
+    let kept: Vec<bool> =
+        strategies.iter().map(|s| !base.filters_out(s).unwrap()).collect();
+    assert!(kept.iter().any(|&k| k), "paper rules filtered everything");
+    assert!(kept.iter().any(|&k| !k), "paper rules filtered nothing");
+
+    let mut with_taut = base.clone();
+    with_taut.add("1 == 1").unwrap();
+    assert!(strategies.iter().all(|s| with_taut.filters_out(s).unwrap()));
+
+    let mut with_contra = base.clone();
+    with_contra.add("1 == 2").unwrap();
+    for (s, &k) in strategies.iter().zip(&kept) {
+        assert_eq!(!with_contra.filters_out(s).unwrap(), k);
+    }
+}
+
+/// The three paper rules do exactly what §3.3 says, checked against the
+/// generator's population (not hand-built fixtures).
+#[test]
+fn prop_paper_rules_semantics_on_population() {
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let model = reg.get("llama2-7b").unwrap();
+    let space = SearchSpace::new(SpaceConfig::default());
+    let strategies = space.homogeneous(model, &cat, 0, 64);
+    let rules = RuleSet::paper_defaults();
+
+    for s in &strategies {
+        let dropped = rules.filters_out(s).unwrap();
+        let flash_selective = s.use_flash_attn
+            && s.recompute == astra::strategy::Recompute::Selective;
+        let rc_too_deep = s.recompute_num_layers > s.pp();
+        let bad_division = s.num_gpus() % (s.pp() * s.tp) != 0;
+        let sp_no_tp = s.sequence_parallel && s.tp == 1;
+        let vpp_no_pp = s.vpp > 1 && s.pp() == 1;
+        let expect = flash_selective || rc_too_deep || bad_division || sp_no_tp || vpp_no_pp;
+        assert_eq!(dropped, expect, "rule semantics diverged on {}", s.summary());
+    }
+}
+
+/// Operator precedence: `a || b && c` groups as `a || (b && c)` and
+/// arithmetic binds tighter than comparison.
+#[test]
+fn prop_precedence_reference_cases() {
+    use astra::rules::{FieldSource, Val};
+    struct S;
+    impl FieldSource for S {
+        fn field(&self, name: &str) -> Option<Val> {
+            Some(match name {
+                "a" => Val::Int(0),
+                "b" => Val::Int(1),
+                "c" => Val::Int(1),
+                "x" => Val::Int(10),
+                _ => return None,
+            })
+        }
+    }
+    let cases = [
+        ("$a || $b && $c", true),        // 0 || (1 && 1)
+        ("$a && $b || $c", true),        // (0 && 1) || 1
+        ("$x + 2 * 3 == 16", true),      // 10 + 6
+        ("($x + 2) * 3 == 36", true),
+        ("$x % 4 + 1 == 3", true),       // (10 % 4) + 1
+        ("!($b == $c)", false),
+    ];
+    for (src, want) in cases {
+        let r = Rule::compile(src).unwrap();
+        assert_eq!(r.matches(&S).unwrap(), want, "{src}");
+    }
+}
