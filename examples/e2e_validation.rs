@@ -73,7 +73,7 @@ fn main() -> astra::Result<()> {
     let mut wins = 0usize;
     for name in &models {
         let model = registry.get(name)?.clone();
-        let req = SearchRequest::homogeneous("a800", count, model.clone());
+        let req = SearchRequest::homogeneous("a800", count, model.clone()).expect("request");
         let report = engine.search(&req)?;
         let best = report.best().expect("empty search");
 

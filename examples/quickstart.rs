@@ -38,7 +38,7 @@ fn main() -> astra::Result<()> {
     );
 
     let engine = AstraEngine::new(catalog.clone(), EngineConfig::default());
-    let req = SearchRequest::homogeneous(args.get("gpu").unwrap(), count, model.clone());
+    let req = SearchRequest::homogeneous(args.get("gpu").unwrap(), count, model.clone())?;
     let report = engine.search(&req)?;
 
     println!(

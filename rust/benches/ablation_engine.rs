@@ -16,7 +16,7 @@ fn main() {
     let catalog = GpuCatalog::builtin();
     let registry = ModelRegistry::builtin();
     let model = registry.get("llama2-7b").unwrap().clone();
-    let req = SearchRequest::homogeneous("a800", 64, model.clone());
+    let req = SearchRequest::homogeneous("a800", 64, model.clone()).expect("request");
 
     let mut variants: Vec<(&str, AstraEngine)> = vec![
         (

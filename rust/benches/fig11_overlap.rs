@@ -32,7 +32,7 @@ fn main() {
     for name in &models {
         let model = registry.get(name).unwrap().clone();
         for &count in counts {
-            let req = SearchRequest::homogeneous("a800", count, model.clone());
+            let req = SearchRequest::homogeneous("a800", count, model.clone()).expect("request");
             let on = overlap
                 .search(&req)
                 .ok()

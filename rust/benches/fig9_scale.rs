@@ -29,7 +29,7 @@ fn main() {
         let mut base_per_gpu: Option<f64> = None;
         for &count in counts {
             let Some(best) = engine
-                .search(&SearchRequest::homogeneous("a800", count, model.clone()))
+                .search(&SearchRequest::homogeneous("a800", count, model.clone()).expect("request"))
                 .ok()
                 .and_then(|r| r.best().cloned())
             else {

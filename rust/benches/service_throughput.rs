@@ -1,0 +1,117 @@
+//! Service-layer throughput: cold vs cached request latency, single-flight
+//! coalescing, and batch-mode requests/sec through the admission queue.
+//!
+//! The shape to reproduce: a cold request costs a full search (Table 1's
+//! E2E column); a cached repeat costs microseconds (≥100× faster — the
+//! service acceptance bar); a mixed batch of distinct requests scales with
+//! the worker pool.
+
+use astra::bench_util::{section, Bench};
+use astra::coordinator::{EngineConfig, ScoringCore, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::Table;
+use astra::service::{SearchService, ServiceConfig};
+use std::time::Instant;
+
+fn service() -> SearchService {
+    SearchService::new(
+        ScoringCore::new(
+            GpuCatalog::builtin(),
+            EngineConfig { use_forests: false, ..Default::default() },
+        ),
+        ServiceConfig::default(),
+    )
+}
+
+fn req(model: &str, count: usize) -> SearchRequest {
+    let m = ModelRegistry::builtin().get(model).unwrap().clone();
+    SearchRequest::homogeneous("a800", count, m).expect("request")
+}
+
+fn main() {
+    let fast = std::env::var("ASTRA_BENCH_FAST").as_deref() == Ok("1");
+    let mut bench = Bench::new();
+
+    section("cold vs cached request latency");
+    let svc = service();
+    let cold_model = if fast { "llama2-7b" } else { "llama2-13b" };
+    let r = req(cold_model, 64);
+    let (cold, _) = bench.run_once(&format!("cold search {cold_model}@64"), || {
+        svc.handle(&r).unwrap()
+    });
+    let cached = bench.run("cached repeat (same fingerprint)", || svc.handle(&r).unwrap());
+    let speedup = cold.mean_secs() / cached.mean_secs().max(1e-12);
+    println!("cache speedup: {speedup:.0}× (acceptance bar: ≥100×)");
+
+    section("batch mode: distinct requests through the admission queue");
+    let grid: Vec<(&str, usize)> = if fast {
+        vec![("llama2-7b", 8), ("llama2-7b", 16), ("llama2-7b", 32), ("llama2-7b", 64)]
+    } else {
+        vec![
+            ("llama2-7b", 8),
+            ("llama2-7b", 16),
+            ("llama2-7b", 32),
+            ("llama2-7b", 64),
+            ("llama2-13b", 16),
+            ("llama2-13b", 32),
+            ("llama3-8b", 16),
+            ("llama3-8b", 32),
+        ]
+    };
+    let reqs: Vec<SearchRequest> = grid.iter().map(|&(m, n)| req(m, n)).collect();
+
+    let mut t = Table::new(&["phase", "requests", "secs", "req/s", "searches", "cache hits"]);
+    // Cold fan-out: every request is a distinct fresh search.
+    let cold_svc = service();
+    let t0 = Instant::now();
+    let out = cold_svc.handle_batch(&reqs);
+    let cold_secs = t0.elapsed().as_secs_f64();
+    assert!(out.iter().all(|r| r.is_ok()));
+    t.row(&[
+        "batch cold".into(),
+        reqs.len().to_string(),
+        format!("{cold_secs:.3}"),
+        format!("{:.1}", reqs.len() as f64 / cold_secs),
+        cold_svc.core().searches_run().to_string(),
+        cold_svc.cache_stats().hits.to_string(),
+    ]);
+    // Warm fan-out: the same batch again is pure cache traffic.
+    let t1 = Instant::now();
+    let out = cold_svc.handle_batch(&reqs);
+    let warm_secs = t1.elapsed().as_secs_f64();
+    assert!(out.iter().all(|r| r.is_ok()));
+    t.row(&[
+        "batch warm".into(),
+        reqs.len().to_string(),
+        format!("{warm_secs:.6}"),
+        format!("{:.0}", reqs.len() as f64 / warm_secs.max(1e-9)),
+        cold_svc.core().searches_run().to_string(),
+        cold_svc.cache_stats().hits.to_string(),
+    ]);
+    // Duplicate-heavy batch: single-flight dedup keeps searches at 1.
+    let dup_svc = service();
+    let dups: Vec<SearchRequest> = (0..reqs.len()).map(|_| req("llama2-7b", 64)).collect();
+    let t2 = Instant::now();
+    let out = dup_svc.handle_batch(&dups);
+    let dup_secs = t2.elapsed().as_secs_f64();
+    assert!(out.iter().all(|r| r.is_ok()));
+    t.row(&[
+        "batch all-duplicates".into(),
+        dups.len().to_string(),
+        format!("{dup_secs:.3}"),
+        format!("{:.1}", dups.len() as f64 / dup_secs),
+        dup_svc.core().searches_run().to_string(),
+        dup_svc.cache_stats().hits.to_string(),
+    ]);
+    std::fs::create_dir_all("bench_out").ok();
+    t.emit(
+        "service throughput — admission queue + result cache",
+        Some(std::path::Path::new("bench_out/service_throughput.csv")),
+    );
+
+    println!("\n{}", bench.csv());
+    println!("shape notes:");
+    println!("  cold batch amortizes across workers; warm batch is lock+probe only;");
+    println!("  all-duplicate batch must show searches=1 (single-flight).");
+}

@@ -35,7 +35,7 @@ fn main() {
         let model = registry.get(name).unwrap().clone();
         for &count in counts {
             let rep = engine
-                .search(&SearchRequest::homogeneous("a800", count, model.clone()))
+                .search(&SearchRequest::homogeneous("a800", count, model.clone()).expect("request"))
                 .unwrap();
             t.row(&[
                 name.to_string(),

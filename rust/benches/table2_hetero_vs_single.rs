@@ -32,7 +32,7 @@ fn main() {
         let model = registry.get(name).unwrap().clone();
         let pure = |gpu: &str| -> f64 {
             engine
-                .search(&SearchRequest::homogeneous(gpu, count, model.clone()))
+                .search(&SearchRequest::homogeneous(gpu, count, model.clone()).expect("request"))
                 .ok()
                 .and_then(|r| r.best().map(|b| b.cost.tokens_per_s))
                 .unwrap_or(0.0)

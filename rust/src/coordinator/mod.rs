@@ -12,6 +12,17 @@
 //! Search is fanned out over a scoped thread pool; the per-phase wall times
 //! reported in [`SearchReport`] correspond to Table 1's "Search Time" and
 //! "Simulation Time" columns.
+//!
+//! ## Engine anatomy: [`ScoringCore`] vs [`AstraEngine`]
+//!
+//! The PJRT executable handle is thread-confined (the `xla` wrappers are
+//! neither `Send` nor `Sync`), which would make the whole engine unshareable
+//! across threads. The state the native pipeline actually needs — catalog,
+//! config, cost model — is plain data, so it lives in [`ScoringCore`], a
+//! `Sync` scoring entry point that one process can share across many
+//! concurrent requests (this is what [`crate::service`] fans out over).
+//! [`AstraEngine`] is `ScoringCore` plus the optional HLO runtime; it keeps
+//! the historical single-owner API and is what the CLI constructs.
 
 use crate::cost::features::{pack_batch, OUT};
 use crate::cost::{CostBreakdown, CostModel, EtaProvider};
@@ -26,6 +37,7 @@ use crate::rules::RuleSet;
 use crate::runtime::ScorerRuntime;
 use crate::strategy::{GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};
 use crate::{AstraError, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -74,10 +86,42 @@ pub struct SearchRequest {
 }
 
 impl SearchRequest {
-    pub fn homogeneous(gpu_name: &str, count: usize, model: ModelSpec) -> SearchRequest {
+    /// Mode 1 (Eq. 1): one GPU type, fixed count. Unknown GPU names are a
+    /// recoverable [`AstraError::Config`] (service requests must not abort
+    /// the process).
+    pub fn homogeneous(gpu_name: &str, count: usize, model: ModelSpec) -> Result<SearchRequest> {
         let catalog = GpuCatalog::builtin();
-        let gpu = catalog.find(gpu_name).expect("unknown gpu");
-        SearchRequest { mode: GpuPoolMode::Homogeneous { gpu, count }, model }
+        let gpu = catalog.find(gpu_name)?;
+        Ok(SearchRequest { mode: GpuPoolMode::Homogeneous { gpu, count }, model })
+    }
+
+    /// Mode 2 (Eq. 2): total cluster size + per-type caps, named by GPU.
+    /// Caps are a per-type *map*: duplicate entries of the same type merge
+    /// by summation (matching the JSON wire form, which is an object).
+    pub fn heterogeneous(
+        caps: &[(&str, usize)],
+        total: usize,
+        model: ModelSpec,
+    ) -> Result<SearchRequest> {
+        let catalog = GpuCatalog::builtin();
+        let mut resolved: Vec<(crate::gpu::GpuType, usize)> = Vec::with_capacity(caps.len());
+        for &(name, cap) in caps {
+            resolved.push((catalog.find(name)?, cap));
+        }
+        let resolved = crate::strategy::merge_caps(resolved);
+        Ok(SearchRequest { mode: GpuPoolMode::Heterogeneous { total, caps: resolved }, model })
+    }
+
+    /// Mode 3 (Eq. 3): count sweep under a money ceiling.
+    pub fn cost(
+        gpu_name: &str,
+        max_count: usize,
+        max_money: f64,
+        model: ModelSpec,
+    ) -> Result<SearchRequest> {
+        let catalog = GpuCatalog::builtin();
+        let gpu = catalog.find(gpu_name)?;
+        Ok(SearchRequest { mode: GpuPoolMode::Cost { gpu, max_count, max_money }, model })
     }
 }
 
@@ -103,6 +147,7 @@ impl ScoredStrategy {
 }
 
 /// Search outcome + phase accounting (Table 1 columns).
+#[derive(Debug, Clone)]
 pub struct SearchReport {
     /// Raw search-space size |S| (Eq. 9).
     pub generated: usize,
@@ -129,17 +174,22 @@ impl SearchReport {
     }
 }
 
-/// The engine.
-pub struct AstraEngine {
+/// The `Sync` heart of the engine: catalog + config + cost model, no
+/// thread-confined runtime handles. One instance can serve concurrent
+/// searches from many threads (each search additionally fans its own
+/// scoring out over the scoped worker pool).
+pub struct ScoringCore {
     pub catalog: GpuCatalog,
     pub config: EngineConfig,
     cost: CostModel,
-    runtime: Option<Mutex<ScorerRuntime>>,
+    /// Lifetime count of searches that entered the filter/score pipeline —
+    /// the cache-effectiveness anchor for [`crate::service`] tests.
+    searches: AtomicU64,
 }
 
-impl AstraEngine {
-    /// Build an engine; loads `artifacts/forest.json` (η forests) and — for
-    /// the HLO engine — `artifacts/scorer.hlo.txt`.
+impl ScoringCore {
+    /// Build a core; loads `artifacts/forest.json` (η forests) when
+    /// `config.use_forests` is set.
     pub fn new(catalog: GpuCatalog, config: EngineConfig) -> Self {
         let dir = crate::runtime::artifacts_dir();
         let eta = if config.use_forests {
@@ -157,19 +207,8 @@ impl AstraEngine {
         } else {
             EtaProvider::Analytic
         };
-        let runtime = if config.engine == ScoringEngine::Hlo {
-            match ScorerRuntime::load(&dir) {
-                Ok(rt) => Some(Mutex::new(rt)),
-                Err(e) => {
-                    crate::log_warn!("HLO scorer unavailable ({e}); using native engine");
-                    None
-                }
-            }
-        } else {
-            None
-        };
         let cost = CostModel::new(catalog.clone(), eta);
-        AstraEngine { catalog, config, cost, runtime }
+        ScoringCore { catalog, config, cost, searches: AtomicU64::new(0) }
     }
 
     /// Immutable access to the underlying cost model (tests/benches).
@@ -177,22 +216,31 @@ impl AstraEngine {
         &self.cost
     }
 
-    /// Whether the HLO engine is actually live.
-    pub fn hlo_active(&self) -> bool {
-        self.runtime.is_some()
+    /// How many searches have entered the filter/score pipeline (cache hits
+    /// in the service layer do NOT increment this).
+    pub fn searches_run(&self) -> u64 {
+        self.searches.load(Ordering::Relaxed)
     }
 
-    /// Run a search request (mode dispatch).
+    /// Run a search request with native scoring (mode dispatch).
     pub fn search(&self, req: &SearchRequest) -> Result<SearchReport> {
+        self.search_with(req, None)
+    }
+
+    fn search_with(
+        &self,
+        req: &SearchRequest,
+        rt: Option<&Mutex<ScorerRuntime>>,
+    ) -> Result<SearchReport> {
         match &req.mode {
             GpuPoolMode::Homogeneous { gpu, count } => {
-                self.search_homogeneous(&req.model, *gpu, *count)
+                self.search_homogeneous_with(&req.model, *gpu, *count, rt)
             }
             GpuPoolMode::Heterogeneous { total, caps } => {
-                self.search_heterogeneous(&req.model, *total, caps)
+                self.search_heterogeneous_with(&req.model, *total, caps, rt)
             }
             GpuPoolMode::Cost { gpu, max_count, max_money } => {
-                self.search_cost(&req.model, *gpu, *max_count, *max_money)
+                self.search_cost_with(&req.model, *gpu, *max_count, *max_money, rt)
             }
         }
     }
@@ -204,10 +252,20 @@ impl AstraEngine {
         gpu: crate::gpu::GpuType,
         count: usize,
     ) -> Result<SearchReport> {
+        self.search_homogeneous_with(model, gpu, count, None)
+    }
+
+    fn search_homogeneous_with(
+        &self,
+        model: &ModelSpec,
+        gpu: crate::gpu::GpuType,
+        count: usize,
+        rt: Option<&Mutex<ScorerRuntime>>,
+    ) -> Result<SearchReport> {
         let t0 = Instant::now();
         let space = SearchSpace::new(self.config.space.clone());
         let generated = space.homogeneous(model, &self.catalog, gpu, count);
-        self.filter_and_score(model, generated, t0)
+        self.filter_and_score(model, generated, t0, rt)
     }
 
     /// Mode 2 (Eq. 2): heterogeneous pipeline partition search (§3.4).
@@ -216,6 +274,16 @@ impl AstraEngine {
         model: &ModelSpec,
         total: usize,
         caps: &[(crate::gpu::GpuType, usize)],
+    ) -> Result<SearchReport> {
+        self.search_heterogeneous_with(model, total, caps, None)
+    }
+
+    fn search_heterogeneous_with(
+        &self,
+        model: &ModelSpec,
+        total: usize,
+        caps: &[(crate::gpu::GpuType, usize)],
+        rt: Option<&Mutex<ScorerRuntime>>,
     ) -> Result<SearchReport> {
         let t0 = Instant::now();
         if caps.iter().map(|&(_, l)| l).sum::<usize>() < total {
@@ -251,7 +319,7 @@ impl AstraEngine {
                 }
             }
         }
-        self.filter_and_score(model, generated, t0)
+        self.filter_and_score(model, generated, t0, rt)
     }
 
     /// Mode 3 (Eq. 3): sweep GPU counts, Pareto-pool everything, pick the
@@ -263,13 +331,24 @@ impl AstraEngine {
         max_count: usize,
         max_money: f64,
     ) -> Result<SearchReport> {
+        self.search_cost_with(model, gpu, max_count, max_money, None)
+    }
+
+    fn search_cost_with(
+        &self,
+        model: &ModelSpec,
+        gpu: crate::gpu::GpuType,
+        max_count: usize,
+        max_money: f64,
+        rt: Option<&Mutex<ScorerRuntime>>,
+    ) -> Result<SearchReport> {
         let t0 = Instant::now();
         let space = SearchSpace::new(self.config.space.clone());
         let mut generated: Vec<ParallelStrategy> = Vec::new();
         for count in SearchSpace::count_sweep(max_count) {
             generated.extend(space.homogeneous(model, &self.catalog, gpu, count));
         }
-        let mut report = self.filter_and_score(model, generated, t0)?;
+        let mut report = self.filter_and_score(model, generated, t0, rt)?;
         // Mode-3 selection: fastest within budget from the optimal pool.
         if let Some(best) = report.pool.best_within_budget(max_money) {
             let chosen = report
@@ -290,7 +369,9 @@ impl AstraEngine {
         model: &ModelSpec,
         generated: Vec<ParallelStrategy>,
         t0: Instant,
+        rt: Option<&Mutex<ScorerRuntime>>,
     ) -> Result<SearchReport> {
+        self.searches.fetch_add(1, Ordering::Relaxed);
         let n_generated = generated.len();
         let workers = self.config.workers;
 
@@ -322,8 +403,10 @@ impl AstraEngine {
 
         // --- cost simulation (§3.5) ---
         let t1 = Instant::now();
-        let costs: Vec<CostBreakdown> = match (&self.runtime, self.config.engine) {
-            (Some(rt), ScoringEngine::Hlo) => self.score_hlo(model, &valid, rt)?,
+        let costs: Vec<CostBreakdown> = match rt {
+            Some(rt) if self.config.engine == ScoringEngine::Hlo => {
+                self.score_hlo(model, &valid, rt)?
+            }
             _ => {
                 // Capture only the Sync cost model, not &self (the PJRT
                 // runtime handle is intentionally thread-confined). Each
@@ -419,6 +502,99 @@ impl AstraEngine {
     }
 }
 
+/// The engine: a [`ScoringCore`] plus the optional thread-confined HLO
+/// runtime. Use this from single-owner contexts (CLI, benches); use
+/// [`ScoringCore`] (or [`crate::service::SearchService`]) when the engine
+/// must be shared across threads.
+pub struct AstraEngine {
+    core: ScoringCore,
+    runtime: Option<Mutex<ScorerRuntime>>,
+}
+
+impl AstraEngine {
+    /// Build an engine; loads `artifacts/forest.json` (η forests) and — for
+    /// the HLO engine — `artifacts/scorer.hlo.txt`.
+    pub fn new(catalog: GpuCatalog, config: EngineConfig) -> Self {
+        let runtime = if config.engine == ScoringEngine::Hlo {
+            match ScorerRuntime::load(&crate::runtime::artifacts_dir()) {
+                Ok(rt) => Some(Mutex::new(rt)),
+                Err(e) => {
+                    crate::log_warn!("HLO scorer unavailable ({e}); using native engine");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        AstraEngine { core: ScoringCore::new(catalog, config), runtime }
+    }
+
+    /// The shared, `Sync` part of the engine.
+    pub fn core(&self) -> &ScoringCore {
+        &self.core
+    }
+
+    /// Take the core out (drops the HLO runtime); used to hand the engine
+    /// to the multi-threaded service layer.
+    pub fn into_core(self) -> ScoringCore {
+        self.core
+    }
+
+    /// Immutable access to the underlying cost model (tests/benches).
+    pub fn cost_model(&self) -> &CostModel {
+        self.core.cost_model()
+    }
+
+    /// Whether the HLO engine is actually live.
+    pub fn hlo_active(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Run a search request (mode dispatch).
+    pub fn search(&self, req: &SearchRequest) -> Result<SearchReport> {
+        self.core.search_with(req, self.runtime.as_ref())
+    }
+
+    /// Mode 1 (Eq. 1).
+    pub fn search_homogeneous(
+        &self,
+        model: &ModelSpec,
+        gpu: crate::gpu::GpuType,
+        count: usize,
+    ) -> Result<SearchReport> {
+        self.core.search_homogeneous_with(model, gpu, count, self.runtime.as_ref())
+    }
+
+    /// Mode 2 (Eq. 2): heterogeneous pipeline partition search (§3.4).
+    pub fn search_heterogeneous(
+        &self,
+        model: &ModelSpec,
+        total: usize,
+        caps: &[(crate::gpu::GpuType, usize)],
+    ) -> Result<SearchReport> {
+        self.core.search_heterogeneous_with(model, total, caps, self.runtime.as_ref())
+    }
+
+    /// Mode 3 (Eq. 3).
+    pub fn search_cost(
+        &self,
+        model: &ModelSpec,
+        gpu: crate::gpu::GpuType,
+        max_count: usize,
+        max_money: f64,
+    ) -> Result<SearchReport> {
+        self.core.search_cost_with(model, gpu, max_count, max_money, self.runtime.as_ref())
+    }
+}
+
+impl std::ops::Deref for AstraEngine {
+    type Target = ScoringCore;
+
+    fn deref(&self) -> &ScoringCore {
+        &self.core
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,7 +611,7 @@ mod tests {
     fn homogeneous_search_finds_valid_best() {
         let reg = ModelRegistry::builtin();
         let model = reg.get("llama2-7b").unwrap().clone();
-        let req = SearchRequest::homogeneous("a800", 64, model.clone());
+        let req = SearchRequest::homogeneous("a800", 64, model.clone()).unwrap();
         let report = engine().search(&req).unwrap();
         assert!(report.generated > 1000);
         assert!(report.scored > 0);
@@ -453,10 +629,35 @@ mod tests {
     fn filters_actually_fire() {
         let reg = ModelRegistry::builtin();
         let model = reg.get("llama2-70b").unwrap().clone();
-        let req = SearchRequest::homogeneous("a800", 64, model);
+        let req = SearchRequest::homogeneous("a800", 64, model).unwrap();
         let report = engine().search(&req).unwrap();
         assert!(report.rule_filtered > 0, "rule filter idle");
         assert!(report.mem_filtered > 0, "memory filter idle (70B must OOM somewhere)");
+    }
+
+    #[test]
+    fn bad_gpu_names_are_recoverable_errors() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        assert!(SearchRequest::homogeneous("b200", 64, model.clone()).is_err());
+        assert!(SearchRequest::heterogeneous(&[("a800", 32), ("nope", 32)], 64, model.clone())
+            .is_err());
+        assert!(SearchRequest::cost("gtx1080", 64, 1e9, model).is_err());
+    }
+
+    #[test]
+    fn hetero_constructor_resolves_names() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let req =
+            SearchRequest::heterogeneous(&[("a800", 48), ("h100", 48)], 64, model).unwrap();
+        match &req.mode {
+            GpuPoolMode::Heterogeneous { total, caps } => {
+                assert_eq!(*total, 64);
+                assert_eq!(caps.len(), 2);
+            }
+            other => panic!("wrong mode {other:?}"),
+        }
     }
 
     #[test]
@@ -507,10 +708,24 @@ mod tests {
             GpuCatalog::builtin(),
             EngineConfig { use_forests: false, top_k: usize::MAX, ..Default::default() },
         );
-        let rep = eng.search(&SearchRequest::homogeneous("a800", 128, model)).unwrap();
+        let rep = eng
+            .search(&SearchRequest::homogeneous("a800", 128, model).unwrap())
+            .unwrap();
         let tputs: Vec<f64> = rep.top.iter().map(|s| s.cost.tokens_per_s).collect();
         let best = tputs[0];
         let median = tputs[tputs.len() / 2];
         assert!(best > 1.1 * median, "best {best:.0} vs median {median:.0}");
+    }
+
+    #[test]
+    fn search_counter_tracks_pipeline_entries() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let eng = engine();
+        assert_eq!(eng.core().searches_run(), 0);
+        let req = SearchRequest::homogeneous("a800", 64, model).unwrap();
+        eng.search(&req).unwrap();
+        eng.search(&req).unwrap();
+        assert_eq!(eng.core().searches_run(), 2);
     }
 }

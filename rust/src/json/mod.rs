@@ -132,6 +132,32 @@ impl Value {
             .ok_or_else(|| crate::AstraError::Json(format!("missing/invalid array field '{key}'")))
     }
 
+    /// Required non-negative integer field (service wire protocol).
+    pub fn req_usize(&self, key: &str) -> crate::Result<usize> {
+        self.get(key)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| {
+                crate::AstraError::Json(format!(
+                    "missing/invalid non-negative integer field '{key}'"
+                ))
+            })
+    }
+
+    /// Optional number field; `None` when missing or non-numeric.
+    pub fn opt_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    /// Optional non-negative integer field.
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(Value::as_usize)
+    }
+
+    /// Optional string field.
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
     /// Extract a flat `Vec<f64>` from an array field.
     pub fn req_f64_arr(&self, key: &str) -> crate::Result<Vec<f64>> {
         self.req_arr(key)?
@@ -246,6 +272,19 @@ mod tests {
         assert_eq!(g.req_str("name").unwrap(), "a800");
         assert_eq!(g.req_f64("tflops").unwrap(), 312.0);
         assert!(g.req_str("missing").is_err());
+    }
+
+    #[test]
+    fn optional_and_integer_helpers() {
+        let v = parse(r#"{"gpus":64,"money":1.5,"name":"x","frac":0.5}"#).unwrap();
+        assert_eq!(v.req_usize("gpus").unwrap(), 64);
+        assert!(v.req_usize("frac").is_err(), "fractional number is not a usize");
+        assert!(v.req_usize("missing").is_err());
+        assert_eq!(v.opt_f64("money"), Some(1.5));
+        assert_eq!(v.opt_f64("missing"), None);
+        assert_eq!(v.opt_usize("gpus"), Some(64));
+        assert_eq!(v.opt_str("name"), Some("x"));
+        assert_eq!(v.opt_str("gpus"), None);
     }
 
     #[test]

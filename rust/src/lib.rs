@@ -33,10 +33,44 @@
 //!
 //! let catalog = GpuCatalog::builtin();
 //! let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
-//! let req = SearchRequest::homogeneous("a800", 64, model);
+//! let req = SearchRequest::homogeneous("a800", 64, model).unwrap();
 //! let engine = AstraEngine::new(catalog, EngineConfig::default());
 //! let report = engine.search(&req).unwrap();
 //! println!("best: {}", report.best().unwrap().summary());
+//! ```
+//!
+//! ## The service layer
+//!
+//! The [`service`] module turns the one-shot engine into a long-running,
+//! multi-tenant search service: requests are canonicalized into stable
+//! [`service::Fingerprint`]s (order-insensitive, config-aware), repeats are
+//! served from a sharded LRU result cache in microseconds, concurrent
+//! identical requests coalesce onto a single search (single-flight), and a
+//! batched admission queue fans distinct requests out over the scoped
+//! worker pool. The engine side is [`coordinator::ScoringCore`] — the
+//! `Sync` scoring entry point one process shares across request threads.
+//!
+//! ```no_run
+//! use astra::prelude::*;
+//!
+//! let core = ScoringCore::new(GpuCatalog::builtin(), EngineConfig::default());
+//! let service = SearchService::new(core, ServiceConfig::default());
+//! let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+//! let req = SearchRequest::homogeneous("a800", 64, model).unwrap();
+//! let cold = service.handle(&req).unwrap();   // runs the engine
+//! let warm = service.handle(&req).unwrap();   // served from the cache
+//! assert_eq!(cold.fingerprint, warm.fingerprint);
+//! ```
+//!
+//! On the command line, `astra serve` reads one JSON request per line from
+//! stdin (or a TCP socket via `--listen host:port`) and emits one JSON
+//! report per line; `astra batch <file>` scores a file of requests
+//! concurrently through the same admission queue. The wire format is
+//! documented in [`service::server`]:
+//!
+//! ```text
+//! $ echo '{"model":"llama2-7b","gpu":"a800","gpus":64}' | astra serve
+//! {"best":{…},"engine":{…},"fingerprint":"…","ok":true,"source":"search",…}
 //! ```
 
 pub mod bench_util;
@@ -58,12 +92,18 @@ pub mod prng;
 pub mod report;
 pub mod rules;
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod strategy;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::coordinator::{AstraEngine, EngineConfig, ScoredStrategy, SearchReport, SearchRequest};
+    pub use crate::coordinator::{
+        AstraEngine, EngineConfig, ScoredStrategy, ScoringCore, SearchReport, SearchRequest,
+    };
+    pub use crate::service::{
+        CacheConfig, Fingerprint, SearchService, ServiceConfig, ServiceResponse,
+    };
     pub use crate::cost::{CostModel, CostBreakdown};
     pub use crate::expert::ExpertPanel;
     pub use crate::gpu::{GpuCatalog, GpuSpec, GpuType};

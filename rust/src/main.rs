@@ -4,24 +4,30 @@
 //!   search    run a strategy search (mode 1/2/3 per §3.2)
 //!   simulate  replay one strategy on the discrete-event simulator
 //!   validate  cost model vs simulator accuracy over top-k strategies
+//!   serve     long-running search service (stdin or TCP, JSON lines)
+//!   batch     score a file of JSON requests through the admission queue
 //!   info      print the GPU catalog and model registry
 
 use astra::cli::Cli;
-use astra::coordinator::{AstraEngine, EngineConfig, ScoringEngine, SearchRequest};
+use astra::coordinator::{AstraEngine, EngineConfig, ScoringCore, ScoringEngine, SearchRequest};
 use astra::gpu::GpuCatalog;
 use astra::model::ModelRegistry;
 use astra::pareto::MoneyModel;
 use astra::report::{fmt_secs, Table};
 use astra::rules::RuleSet;
+use astra::service::server::{run_batch_lines, run_serve_loop, serve_tcp, ServeOpts};
+use astra::service::{CacheConfig, SearchService, ServiceConfig};
 use astra::simulator::{PipelineSimulator, SimConfig};
 use astra::strategy::GpuPoolMode;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let cli = Cli::new(
         "astra",
         "automatic parallel-strategy search on homogeneous and heterogeneous GPUs",
     )
-    .positional("command", "search | simulate | validate | info")
+    .positional("command", "search | simulate | validate | serve | batch | info")
     .opt("model", "model name (see `astra info`)", Some("llama2-7b"))
     .opt("gpu", "GPU type for homogeneous/cost modes", Some("a800"))
     .opt("gpus", "cluster GPU count", Some("64"))
@@ -32,6 +38,11 @@ fn main() {
     .opt("engine", "native | hlo", Some("native"))
     .opt("rules", "path to a rule file (defaults to the paper's rules)", None)
     .opt("top", "how many strategies to print", Some("5"))
+    .opt("listen", "serve over TCP on host:port instead of stdin", None)
+    .opt("max-batch", "requests admitted per service batch", Some("32"))
+    .opt("cache-entries", "service cache capacity (reports)", Some("1024"))
+    .opt("cache-mb", "service cache byte budget (MiB)", Some("256"))
+    .opt("cache-ttl-secs", "service cache TTL in seconds (0 = none)", Some("0"))
     .flag("exhaustive", "exhaustive Eq.23 layer enumeration (hetero)")
     .flag("no-forest", "use analytic η instead of the trained GBDT")
     .flag("verbose", "debug logging");
@@ -46,6 +57,50 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// Engine config shared by the one-shot and service paths.
+fn build_config(args: &astra::cli::Args) -> astra::Result<EngineConfig> {
+    let rules = match args.get("rules") {
+        Some(path) => RuleSet::from_text(&std::fs::read_to_string(path)?)?,
+        None => RuleSet::paper_defaults(),
+    };
+    let engine_kind = match args.get("engine").unwrap() {
+        "hlo" => ScoringEngine::Hlo,
+        _ => ScoringEngine::Native,
+    };
+    Ok(EngineConfig {
+        rules,
+        engine: engine_kind,
+        use_forests: !args.flag("no-forest"),
+        hetero_exhaustive: args.flag("exhaustive"),
+        money: MoneyModel { train_tokens: args.get_f64("train-tokens")? },
+        top_k: args.get_usize("top")?.max(5),
+        ..Default::default()
+    })
+}
+
+fn build_service(args: &astra::cli::Args, catalog: GpuCatalog) -> astra::Result<SearchService> {
+    let mut config = build_config(args)?;
+    if config.engine == ScoringEngine::Hlo {
+        // The PJRT handle is thread-confined; the multi-threaded service
+        // always scores through the Sync native core.
+        astra::log_warn!("service mode scores natively; ignoring --engine hlo");
+        config.engine = ScoringEngine::Native;
+    }
+    let ttl = args.get_usize("cache-ttl-secs")?;
+    let cache = CacheConfig {
+        max_entries: args.get_usize("cache-entries")?.max(1),
+        max_bytes: args.get_usize("cache-mb")?.max(1) << 20,
+        ttl: (ttl > 0).then(|| Duration::from_secs(ttl as u64)),
+        ..Default::default()
+    };
+    let service_cfg = ServiceConfig {
+        cache,
+        max_batch: args.get_usize("max-batch")?.max(1),
+        ..Default::default()
+    };
+    Ok(SearchService::new(ScoringCore::new(catalog, config), service_cfg))
 }
 
 fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
@@ -78,6 +133,59 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
             ]);
         }
         m.emit("Model registry", None);
+        return Ok(());
+    }
+
+    if command == "serve" {
+        let service = build_service(args, catalog)?;
+        let opts = ServeOpts {
+            max_batch: service.config().max_batch,
+            top: args.get_usize("top")?,
+        };
+        return match args.get("listen") {
+            Some(addr) => serve_tcp(Arc::new(service), addr, &opts),
+            None => {
+                // BufReader<Stdin> (not StdinLock: the reader thread needs
+                // a Send handle).
+                let stdin = std::io::BufReader::new(std::io::stdin());
+                let mut stdout = std::io::stdout().lock();
+                let stats = run_serve_loop(&service, stdin, &mut stdout, &opts)?;
+                eprintln!(
+                    "served {} lines ({} ok, {} errors); engine searches: {}",
+                    stats.lines,
+                    stats.ok,
+                    stats.errors,
+                    service.core().searches_run()
+                );
+                Ok(())
+            }
+        };
+    }
+
+    if command == "batch" {
+        let path = args.positionals().get(1).ok_or_else(|| {
+            astra::AstraError::Config("usage: astra batch <requests.jsonl>".into())
+        })?;
+        let text = std::fs::read_to_string(path)?;
+        let service = build_service(args, catalog)?;
+        let opts = ServeOpts {
+            max_batch: service.config().max_batch,
+            top: args.get_usize("top")?,
+        };
+        let t0 = std::time::Instant::now();
+        let mut stdout = std::io::stdout().lock();
+        let stats = run_batch_lines(&service, &text, &mut stdout, &opts)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let cache = service.cache_stats();
+        eprintln!(
+            "batch: {} requests in {:.2}s ({:.1} req/s) — {} searches, {} cache hits, {} errors",
+            stats.lines,
+            secs,
+            stats.lines as f64 / secs.max(1e-9),
+            service.core().searches_run(),
+            cache.hits,
+            stats.errors
+        );
         return Ok(());
     }
 
@@ -116,23 +224,7 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         }
     };
 
-    let rules = match args.get("rules") {
-        Some(path) => RuleSet::from_text(&std::fs::read_to_string(path)?)?,
-        None => RuleSet::paper_defaults(),
-    };
-    let engine_kind = match args.get("engine").unwrap() {
-        "hlo" => ScoringEngine::Hlo,
-        _ => ScoringEngine::Native,
-    };
-    let config = EngineConfig {
-        rules,
-        engine: engine_kind,
-        use_forests: !args.flag("no-forest"),
-        hetero_exhaustive: args.flag("exhaustive"),
-        money: MoneyModel { train_tokens: args.get_f64("train-tokens")? },
-        top_k: args.get_usize("top")?.max(5),
-        ..Default::default()
-    };
+    let config = build_config(args)?;
     let engine = AstraEngine::new(catalog.clone(), config);
     let req = SearchRequest { mode, model: model.clone() };
 
@@ -160,7 +252,7 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         }
         other => {
             return Err(astra::AstraError::Config(format!(
-                "unknown command '{other}' (search | simulate | validate | info)"
+                "unknown command '{other}' (search | simulate | validate | serve | batch | info)"
             )));
         }
     }

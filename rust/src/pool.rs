@@ -154,4 +154,43 @@ mod tests {
         let out = par_map_chunks(&xs, 64, |_, c| c.iter().map(|x| x + 1).collect());
         assert_eq!(out, vec![1, 2, 3]);
     }
+
+    // The service admission queue leans on these primitives for fan-out;
+    // pin the degenerate shapes it feeds them.
+
+    #[test]
+    fn map_chunks_empty_input() {
+        let xs: Vec<u32> = Vec::new();
+        let out = par_map_chunks(&xs, 8, |_, c| c.to_vec());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn indices_fewer_items_than_workers() {
+        let out = par_for_indices(3, 64, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+        let one = par_for_indices(1, 16, |i| i);
+        assert_eq!(one, vec![0]);
+    }
+
+    #[test]
+    fn single_worker_is_sequential_and_complete() {
+        let xs: Vec<u64> = (0..100).collect();
+        let mapped = par_map_chunks(&xs, 1, |start, c| {
+            assert_eq!(start, 0, "one worker sees the whole slice");
+            c.iter().map(|x| x * 3).collect()
+        });
+        assert_eq!(mapped, (0..100).map(|x| x * 3).collect::<Vec<_>>());
+        let idx = par_for_indices(100, 1, |i| i * 3);
+        assert_eq!(idx, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_workers_clamped_to_one() {
+        let xs: Vec<u32> = (0..10).collect();
+        let out = par_map_chunks(&xs, 0, |_, c| c.to_vec());
+        assert_eq!(out, xs);
+        let idx = par_for_indices(10, 0, |i| i);
+        assert_eq!(idx, (0..10).collect::<Vec<_>>());
+    }
 }

@@ -89,6 +89,50 @@ impl Table {
     }
 }
 
+/// Machine-readable form of one scored strategy — the payload of the
+/// service wire protocol's `best` / `top` fields and of bench CSV siblings.
+/// GPUs are identified by catalog *name* (like every other wire field), not
+/// by internal index, so responses stay meaningful across catalog reorders.
+pub fn scored_strategy_json(
+    s: &crate::coordinator::ScoredStrategy,
+    catalog: &crate::gpu::GpuCatalog,
+) -> crate::json::Value {
+    use crate::json::Value;
+    let segments: Vec<Value> = s
+        .strategy
+        .cluster
+        .segments
+        .iter()
+        .map(|seg| {
+            Value::obj()
+                .set("gpu", catalog.spec(seg.gpu).name.as_str())
+                .set("stages", seg.stages)
+                .set("layers_per_stage", seg.layers_per_stage)
+        })
+        .collect();
+    Value::obj()
+        .set("tp", s.strategy.tp)
+        .set("pp", s.strategy.pp())
+        .set("dp", s.strategy.dp)
+        .set("mbs", s.strategy.micro_batch)
+        .set("gbs", s.strategy.global_batch)
+        .set("vpp", s.strategy.vpp)
+        .set("ep", s.strategy.ep)
+        .set("sequence_parallel", s.strategy.sequence_parallel)
+        .set("distributed_optimizer", s.strategy.use_distributed_optimizer)
+        .set("recompute", s.strategy.recompute.as_str())
+        .set("recompute_method", s.strategy.recompute_method.as_str())
+        .set("recompute_num_layers", s.strategy.recompute_num_layers)
+        .set("offload_optimizer", s.strategy.offload_optimizer)
+        .set("num_gpus", s.strategy.num_gpus())
+        .set("segments", Value::Arr(segments))
+        .set("step_time_s", s.cost.step_time)
+        .set("tokens_per_s", s.cost.tokens_per_s)
+        .set("mfu", s.cost.mfu)
+        .set("money_usd", s.money_usd)
+        .set("summary", s.strategy.summary())
+}
+
 /// Human formatting helpers shared by benches.
 pub fn fmt_tput(tokens_per_s: f64) -> String {
     format!("{tokens_per_s:.0}")

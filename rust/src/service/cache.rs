@@ -1,0 +1,401 @@
+//! Sharded result cache: fingerprint → [`SearchReport`], LRU with TTL and
+//! byte-budget eviction.
+//!
+//! The cache is split into independently locked shards so concurrent
+//! requests on different keys never contend; a hit costs one shard lock,
+//! one `HashMap` probe and an `Arc` clone (microseconds against the
+//! multi-second cold search it replaces). Eviction is least-recently-used
+//! within the shard holding the insertion, driven by both an entry budget
+//! and an approximate byte budget; entries older than the TTL are dropped
+//! lazily at lookup time.
+
+use crate::coordinator::SearchReport;
+use crate::pareto::PoolEntry;
+use crate::strategy::Segment;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::fingerprint::Fingerprint;
+
+/// Cache tuning knobs. Budgets are totals; each shard gets an equal slice.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Number of independently locked shards (≥ 1).
+    pub shards: usize,
+    /// Maximum cached reports across all shards.
+    pub max_entries: usize,
+    /// Approximate maximum resident bytes across all shards.
+    pub max_bytes: usize,
+    /// Entries older than this are expired at lookup; `None` = no TTL.
+    pub ttl: Option<Duration>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            shards: 8,
+            max_entries: 1024,
+            max_bytes: 256 << 20,
+            ttl: None,
+        }
+    }
+}
+
+/// Monotonic counters exposed for the CLI `stats` line and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub expirations: u64,
+    /// Inserts refused because one report exceeded the per-shard byte
+    /// budget (caching it would flush the shard and then evict itself).
+    pub oversize_rejects: u64,
+    /// Current resident entries / approximate bytes (gauges, not counters).
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+struct Entry {
+    report: Arc<SearchReport>,
+    bytes: usize,
+    inserted: Instant,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u64, Entry>,
+    bytes: usize,
+}
+
+impl Shard {
+    /// Evict least-recently-used entries until within the given budgets.
+    /// Returns how many entries were evicted.
+    fn evict_to(&mut self, max_entries: usize, max_bytes: usize) -> u64 {
+        let mut evicted = 0;
+        while self.map.len() > max_entries || self.bytes > max_bytes {
+            let Some((&victim, _)) =
+                self.map.iter().min_by_key(|(_, e)| e.last_used)
+            else {
+                break;
+            };
+            if let Some(e) = self.map.remove(&victim) {
+                self.bytes -= e.bytes;
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+}
+
+/// The sharded LRU+TTL result cache.
+pub struct ShardedCache {
+    shards: Vec<Mutex<Shard>>,
+    config: CacheConfig,
+    /// Global logical clock for LRU ordering (cheaper than Instant reads
+    /// and immune to clock adjustments).
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    expirations: AtomicU64,
+    oversize_rejects: AtomicU64,
+}
+
+impl ShardedCache {
+    pub fn new(config: CacheConfig) -> ShardedCache {
+        let n = config.shards.max(1);
+        ShardedCache {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            config,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            expirations: AtomicU64::new(0),
+            oversize_rejects: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, fp: Fingerprint) -> &Mutex<Shard> {
+        // FNV output is well mixed; fold high bits in anyway so shard
+        // count never correlates with low-bit structure.
+        let k = fp.0 ^ (fp.0 >> 32);
+        &self.shards[(k as usize) % self.shards.len()]
+    }
+
+    fn per_shard_entries(&self) -> usize {
+        (self.config.max_entries.max(1)).div_ceil(self.shards.len())
+    }
+
+    fn per_shard_bytes(&self) -> usize {
+        (self.config.max_bytes.max(1)).div_ceil(self.shards.len())
+    }
+
+    /// Look a fingerprint up; bumps LRU recency on hit, expires on TTL.
+    pub fn get(&self, fp: Fingerprint) -> Option<Arc<SearchReport>> {
+        self.lookup(fp, true)
+    }
+
+    /// Like [`ShardedCache::get`] (including LRU bump and TTL expiry) but
+    /// without touching the hit/miss counters — for internal double-checks
+    /// that would otherwise double-count one logical lookup.
+    pub fn peek(&self, fp: Fingerprint) -> Option<Arc<SearchReport>> {
+        self.lookup(fp, false)
+    }
+
+    fn lookup(&self, fp: Fingerprint, count: bool) -> Option<Arc<SearchReport>> {
+        let now = Instant::now();
+        let mut shard = self.shard(fp).lock().unwrap();
+        match shard.map.get_mut(&fp.0) {
+            Some(e) => {
+                if let Some(ttl) = self.config.ttl {
+                    if now.duration_since(e.inserted) >= ttl {
+                        let bytes = e.bytes;
+                        shard.map.remove(&fp.0);
+                        shard.bytes -= bytes;
+                        self.expirations.fetch_add(1, Ordering::Relaxed);
+                        if count {
+                            self.misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return None;
+                    }
+                }
+                e.last_used = self.tick.fetch_add(1, Ordering::Relaxed);
+                if count {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(e.report.clone())
+            }
+            None => {
+                if count {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                }
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a report under its fingerprint, then evict the
+    /// shard back under budget, least-recently-used first.
+    pub fn insert(&self, fp: Fingerprint, report: Arc<SearchReport>) {
+        let bytes = report_bytes(&report);
+        if bytes > self.per_shard_bytes() {
+            // Refuse oversized entries outright: admitting one would evict
+            // every co-resident entry in the shard and then be evicted
+            // itself, leaving the shard empty and the report uncached.
+            self.oversize_rejects.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let last_used = self.tick.fetch_add(1, Ordering::Relaxed);
+        let mut shard = self.shard(fp).lock().unwrap();
+        if let Some(old) = shard.map.insert(
+            fp.0,
+            Entry { report, bytes, inserted: Instant::now(), last_used },
+        ) {
+            shard.bytes -= old.bytes;
+        }
+        shard.bytes += bytes;
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        let evicted = shard.evict_to(self.per_shard_entries(), self.per_shard_bytes());
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// Drop every entry (tests / `astra serve` SIGHUP-style reset).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut s = s.lock().unwrap();
+            s.map.clear();
+            s.bytes = 0;
+        }
+    }
+
+    /// Current resident entry count.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let (mut entries, mut bytes) = (0, 0);
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            entries += s.map.len();
+            bytes += s.bytes;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            expirations: self.expirations.load(Ordering::Relaxed),
+            oversize_rejects: self.oversize_rejects.load(Ordering::Relaxed),
+            entries,
+            bytes,
+        }
+    }
+}
+
+/// Approximate resident size of a report: the struct plus its heap blocks
+/// (top strategies with their segment/stage vectors, and the Pareto pool).
+/// Used only for the byte budget — exactness is not required.
+pub fn report_bytes(r: &SearchReport) -> usize {
+    let mut b = std::mem::size_of::<SearchReport>();
+    for s in &r.top {
+        b += std::mem::size_of_val(s);
+        b += s.strategy.cluster.segments.len() * std::mem::size_of::<Segment>();
+        b += s.cost.stage_times.len() * std::mem::size_of::<f64>();
+    }
+    b += r.pool.len() * std::mem::size_of::<PoolEntry>();
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pareto::OptimalPool;
+
+    fn report(tag: usize) -> Arc<SearchReport> {
+        Arc::new(SearchReport {
+            generated: tag,
+            rule_filtered: 0,
+            mem_filtered: 0,
+            scored: 0,
+            search_secs: 0.0,
+            simulate_secs: 0.0,
+            top: Vec::new(),
+            pool: OptimalPool::default(),
+        })
+    }
+
+    fn fp(n: u64) -> Fingerprint {
+        Fingerprint(n)
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let c = ShardedCache::new(CacheConfig::default());
+        assert!(c.get(fp(1)).is_none());
+        c.insert(fp(1), report(1));
+        assert_eq!(c.get(fp(1)).unwrap().generated, 1);
+        assert!(c.get(fp(2)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 2, 1));
+        assert_eq!(s.entries, 1);
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let c = ShardedCache::new(CacheConfig {
+            ttl: Some(Duration::from_millis(25)),
+            ..Default::default()
+        });
+        c.insert(fp(7), report(7));
+        assert!(c.get(fp(7)).is_some());
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(c.get(fp(7)).is_none(), "entry outlived its TTL");
+        let s = c.stats();
+        assert_eq!(s.expirations, 1);
+        assert_eq!(s.entries, 0);
+    }
+
+    #[test]
+    fn lru_eviction_order_by_entry_budget() {
+        // One shard → deterministic eviction.
+        let c = ShardedCache::new(CacheConfig {
+            shards: 1,
+            max_entries: 2,
+            ..Default::default()
+        });
+        c.insert(fp(1), report(1));
+        c.insert(fp(2), report(2));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(c.get(fp(1)).is_some());
+        c.insert(fp(3), report(3));
+        assert!(c.get(fp(2)).is_none(), "LRU entry should have been evicted");
+        assert!(c.get(fp(1)).is_some());
+        assert!(c.get(fp(3)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn byte_budget_evicts() {
+        let one = report_bytes(&report(0));
+        let c = ShardedCache::new(CacheConfig {
+            shards: 1,
+            max_entries: usize::MAX,
+            // Room for two empty reports but not three.
+            max_bytes: one * 2 + one / 2,
+            ttl: None,
+        });
+        for i in 0..3 {
+            c.insert(fp(i), report(i as usize));
+        }
+        assert!(c.stats().evictions >= 1, "byte budget never fired");
+        assert!(c.stats().bytes <= one * 2 + one / 2);
+        assert!(c.get(fp(2)).is_some(), "most recent entry must survive");
+    }
+
+    #[test]
+    fn oversized_entry_rejected_without_flushing_shard() {
+        let one = report_bytes(&report(0));
+        // An entry exactly at the shard budget is still cacheable…
+        let c = ShardedCache::new(CacheConfig {
+            shards: 1,
+            max_entries: usize::MAX,
+            max_bytes: one,
+            ttl: None,
+        });
+        c.insert(fp(1), report(1));
+        assert_eq!(c.len(), 1, "exactly-at-budget entry is cacheable");
+
+        // …while anything over it is refused without touching residents.
+        let tight = ShardedCache::new(CacheConfig {
+            shards: 1,
+            max_entries: usize::MAX,
+            max_bytes: one - 1,
+            ttl: None,
+        });
+        tight.insert(fp(1), report(1));
+        tight.insert(fp(2), report(2));
+        assert_eq!(tight.len(), 0, "oversized entries must not be admitted");
+        let s = tight.stats();
+        assert_eq!(s.oversize_rejects, 2);
+        assert_eq!(s.insertions, 0);
+        assert_eq!(s.evictions, 0, "rejection must not evict residents");
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leaking_bytes() {
+        let c = ShardedCache::new(CacheConfig { shards: 1, ..Default::default() });
+        c.insert(fp(1), report(1));
+        let b1 = c.stats().bytes;
+        c.insert(fp(1), report(2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().bytes, b1, "replacing an entry must not grow bytes");
+        assert_eq!(c.get(fp(1)).unwrap().generated, 2);
+    }
+
+    #[test]
+    fn clear_empties_everything() {
+        let c = ShardedCache::new(CacheConfig::default());
+        for i in 0..10 {
+            c.insert(fp(i), report(i as usize));
+        }
+        assert_eq!(c.len(), 10);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().bytes, 0);
+    }
+}

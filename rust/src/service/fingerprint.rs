@@ -1,0 +1,353 @@
+//! Canonical request fingerprinting.
+//!
+//! A [`Fingerprint`] is a stable 64-bit FNV-1a hash over everything that
+//! determines a search's *result*: the model architecture, the GPU-pool
+//! mode, and the result-relevant [`EngineConfig`] knobs (space, rules, η
+//! source, money model, objective). Semantically identical requests must
+//! collide, so the encoding is canonicalized before hashing:
+//!
+//! * heterogeneous capacity lists canonicalize as per-type *maps*:
+//!   duplicate entries merge by summation and entries sort by GPU name —
+//!   neither the wire order nor the split of `caps` matters;
+//! * candidate lists in [`SpaceConfig`] are sorted and deduplicated;
+//! * rule sets hash as the sorted, deduplicated set of rule sources (rule
+//!   order cannot change which strategies survive — any match drops);
+//! * GPUs hash by catalog *name*, not index, so a reordered catalog does
+//!   not shuffle keys;
+//! * `workers` is excluded — thread count never changes the result.
+//!
+//! JSON field order is canonicalized upstream for free: the wire parser
+//! ([`crate::service::server`]) materializes objects as sorted maps.
+
+use crate::coordinator::{EngineConfig, ScoringEngine, SearchRequest};
+use crate::gpu::GpuCatalog;
+use crate::model::ModelSpec;
+use crate::strategy::{merge_caps, GpuPoolMode, SpaceConfig};
+
+/// A canonical request key. Displayed as 16 lowercase hex digits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64);
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+impl Fingerprint {
+    /// Parse the 16-hex-digit wire form back into a fingerprint.
+    pub fn parse(s: &str) -> Option<Fingerprint> {
+        if s.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(Fingerprint)
+    }
+}
+
+/// Incremental FNV-1a (64-bit). Deterministic across platforms and runs —
+/// unlike `DefaultHasher`, which is randomly seeded per process.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64(FNV_OFFSET)
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64::default()
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Tagged field: the label keeps adjacent fields from aliasing.
+    pub fn field_u64(&mut self, tag: &str, v: u64) -> &mut Self {
+        self.write_bytes(tag.as_bytes()).write_bytes(&v.to_le_bytes())
+    }
+
+    pub fn field_usize(&mut self, tag: &str, v: usize) -> &mut Self {
+        self.field_u64(tag, v as u64)
+    }
+
+    pub fn field_bool(&mut self, tag: &str, v: bool) -> &mut Self {
+        self.field_u64(tag, v as u64)
+    }
+
+    /// f64 hashed by bit pattern (exact, including -0.0 vs 0.0 and inf).
+    pub fn field_f64(&mut self, tag: &str, v: f64) -> &mut Self {
+        self.field_u64(tag, v.to_bits())
+    }
+
+    pub fn field_str(&mut self, tag: &str, v: &str) -> &mut Self {
+        self.write_bytes(tag.as_bytes())
+            .field_usize("len", v.len())
+            .write_bytes(v.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Canonical sorted+deduped copy of a candidate list.
+fn canon(xs: &[usize]) -> Vec<usize> {
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn canon_bools(xs: &[bool]) -> Vec<bool> {
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn hash_model(h: &mut Fnv64, m: &ModelSpec) {
+    h.field_str("model.name", &m.name)
+        .field_usize("model.layers", m.layers)
+        .field_usize("model.hidden", m.hidden)
+        .field_usize("model.heads", m.heads)
+        .field_usize("model.kv_heads", m.kv_heads)
+        .field_usize("model.ffn", m.ffn)
+        .field_usize("model.vocab", m.vocab)
+        .field_usize("model.seq_len", m.seq_len)
+        .field_usize("model.global_batch", m.global_batch)
+        .field_usize("model.num_experts", m.num_experts)
+        .field_usize("model.moe_topk", m.moe_topk);
+}
+
+fn hash_mode(h: &mut Fnv64, mode: &GpuPoolMode, catalog: &GpuCatalog) {
+    match mode {
+        GpuPoolMode::Homogeneous { gpu, count } => {
+            h.field_str("mode", "homogeneous")
+                .field_str("gpu", &catalog.spec(*gpu).name)
+                .field_usize("count", *count);
+        }
+        GpuPoolMode::Heterogeneous { total, caps } => {
+            h.field_str("mode", "heterogeneous").field_usize("total", *total);
+            // Caps are canonically a per-type map ([`merge_caps`]): merge
+            // duplicate entries by summation (the JSON wire form is an
+            // object and cannot even express duplicates), then sort by
+            // name so entry order never matters.
+            let mut named = merge_caps(
+                caps.iter().map(|&(g, c)| (catalog.spec(g).name.as_str(), c)),
+            );
+            named.sort_unstable();
+            h.field_usize("caps.len", named.len());
+            for (name, cap) in named {
+                h.field_str("cap.gpu", name).field_usize("cap.n", cap);
+            }
+        }
+        GpuPoolMode::Cost { gpu, max_count, max_money } => {
+            h.field_str("mode", "cost")
+                .field_str("gpu", &catalog.spec(*gpu).name)
+                .field_usize("max_count", *max_count)
+                .field_f64("max_money", *max_money);
+        }
+    }
+}
+
+fn hash_space(h: &mut Fnv64, s: &SpaceConfig) {
+    for (tag, xs) in [
+        ("space.tp", &s.tp_candidates),
+        ("space.mbs", &s.mbs_candidates),
+        ("space.vpp", &s.vpp_candidates),
+        ("space.ep", &s.ep_candidates),
+    ] {
+        let c = canon(xs);
+        h.field_usize(tag, c.len());
+        for v in c {
+            h.field_usize(tag, v);
+        }
+    }
+    h.field_usize("space.max_pp", s.max_pp);
+    for (tag, xs) in [
+        ("space.sp", &s.seq_parallel_options),
+        ("space.do", &s.dist_opt_options),
+        ("space.off", &s.offload_options),
+    ] {
+        let c = canon_bools(xs);
+        h.field_usize(tag, c.len());
+        for v in c {
+            h.field_bool(tag, v);
+        }
+    }
+    h.field_bool("space.rc_none", s.recompute_none)
+        .field_bool("space.rc_sel", s.recompute_selective)
+        .field_bool("space.rc_full", s.recompute_full)
+        .field_bool("space.overlap", s.overlap)
+        .field_bool("space.flash", s.use_flash_attn);
+}
+
+fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
+    hash_space(h, &cfg.space);
+    // Rule order is irrelevant (any match filters); sort + dedup sources.
+    let mut sources: Vec<&str> = cfg.rules.rules.iter().map(|r| r.source.as_str()).collect();
+    sources.sort_unstable();
+    sources.dedup();
+    h.field_usize("rules.len", sources.len());
+    for s in sources {
+        h.field_str("rule", s);
+    }
+    h.field_str(
+        "engine",
+        match cfg.engine {
+            ScoringEngine::Native => "native",
+            ScoringEngine::Hlo => "hlo",
+        },
+    )
+    .field_bool("use_forests", cfg.use_forests)
+    .field_f64("money.train_tokens", cfg.money.train_tokens)
+    .field_bool("hetero_exhaustive", cfg.hetero_exhaustive)
+    .field_usize("top_k", cfg.top_k);
+    // `workers` deliberately excluded: parallelism never changes results.
+}
+
+/// Fingerprint of (request, config): the service cache key.
+pub fn fingerprint(req: &SearchRequest, catalog: &GpuCatalog, cfg: &EngineConfig) -> Fingerprint {
+    let mut h = Fnv64::new();
+    h.field_str("astra.fingerprint", "v1");
+    hash_model(&mut h, &req.model);
+    hash_mode(&mut h, &req.mode, catalog);
+    hash_config(&mut h, cfg);
+    Fingerprint(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelRegistry;
+
+    fn model() -> ModelSpec {
+        ModelRegistry::builtin().get("llama2-7b").unwrap().clone()
+    }
+
+    fn fp(req: &SearchRequest, cfg: &EngineConfig) -> Fingerprint {
+        fingerprint(req, &GpuCatalog::builtin(), cfg)
+    }
+
+    #[test]
+    fn identical_requests_collide() {
+        let cfg = EngineConfig::default();
+        let a = SearchRequest::homogeneous("a800", 64, model()).unwrap();
+        let b = SearchRequest::homogeneous("a800", 64, model()).unwrap();
+        assert_eq!(fp(&a, &cfg), fp(&b, &cfg));
+    }
+
+    #[test]
+    fn capacity_order_is_canonical() {
+        let cfg = EngineConfig::default();
+        let a = SearchRequest::heterogeneous(&[("a800", 48), ("h100", 48)], 64, model()).unwrap();
+        let b = SearchRequest::heterogeneous(&[("h100", 48), ("a800", 48)], 64, model()).unwrap();
+        assert_eq!(fp(&a, &cfg), fp(&b, &cfg));
+    }
+
+    #[test]
+    fn duplicate_cap_entries_merge_as_a_map() {
+        // Caps are a per-type map: a hand-built mode with split duplicate
+        // entries keys the same as the merged form.
+        use crate::strategy::GpuPoolMode;
+        let cfg = EngineConfig::default();
+        let cat = GpuCatalog::builtin();
+        let gpu = cat.find("a800").unwrap();
+        let split = SearchRequest {
+            mode: GpuPoolMode::Heterogeneous { total: 32, caps: vec![(gpu, 16), (gpu, 16)] },
+            model: model(),
+        };
+        let merged = SearchRequest {
+            mode: GpuPoolMode::Heterogeneous { total: 32, caps: vec![(gpu, 32)] },
+            model: model(),
+        };
+        assert_eq!(fp(&split, &cfg), fp(&merged, &cfg));
+        // The named constructor canonicalizes up front.
+        let built =
+            SearchRequest::heterogeneous(&[("a800", 16), ("a800", 16)], 32, model()).unwrap();
+        match &built.mode {
+            GpuPoolMode::Heterogeneous { caps, .. } => assert_eq!(caps, &vec![(gpu, 32)]),
+            other => panic!("wrong mode {other:?}"),
+        }
+    }
+
+    #[test]
+    fn distinct_requests_diverge() {
+        let cfg = EngineConfig::default();
+        let base = SearchRequest::homogeneous("a800", 64, model()).unwrap();
+        let other_count = SearchRequest::homogeneous("a800", 128, model()).unwrap();
+        let other_gpu = SearchRequest::homogeneous("h100", 64, model()).unwrap();
+        let other_model = SearchRequest::homogeneous(
+            "a800",
+            64,
+            ModelRegistry::builtin().get("llama2-13b").unwrap().clone(),
+        )
+        .unwrap();
+        let f = fp(&base, &cfg);
+        assert_ne!(f, fp(&other_count, &cfg));
+        assert_ne!(f, fp(&other_gpu, &cfg));
+        assert_ne!(f, fp(&other_model, &cfg));
+    }
+
+    #[test]
+    fn config_knobs_are_part_of_the_key() {
+        let req = SearchRequest::homogeneous("a800", 64, model()).unwrap();
+        let base = EngineConfig::default();
+        let mut tokens = EngineConfig::default();
+        tokens.money.train_tokens = 2e9;
+        let mut topk = EngineConfig::default();
+        topk.top_k = 3;
+        let f = fp(&req, &base);
+        assert_ne!(f, fp(&req, &tokens));
+        assert_ne!(f, fp(&req, &topk));
+    }
+
+    #[test]
+    fn workers_do_not_change_the_key() {
+        let req = SearchRequest::homogeneous("a800", 64, model()).unwrap();
+        let mut a = EngineConfig::default();
+        a.workers = 1;
+        let mut b = EngineConfig::default();
+        b.workers = 32;
+        assert_eq!(fp(&req, &a), fp(&req, &b));
+    }
+
+    #[test]
+    fn candidate_and_rule_order_canonicalized() {
+        let req = SearchRequest::homogeneous("a800", 64, model()).unwrap();
+        let mut a = EngineConfig::default();
+        a.space.tp_candidates = vec![8, 1, 4, 2, 2];
+        let b = EngineConfig::default(); // [1, 2, 4, 8]
+        assert_eq!(fp(&req, &a), fp(&req, &b));
+
+        let mut ra = crate::rules::RuleSet::new();
+        ra.add("$tp > 8").unwrap();
+        ra.add("$dp > 512").unwrap();
+        let mut rb = crate::rules::RuleSet::new();
+        rb.add("$dp > 512").unwrap();
+        rb.add("$tp > 8").unwrap();
+        let mut ca = EngineConfig::default();
+        ca.rules = ra;
+        let mut cb = EngineConfig::default();
+        cb.rules = rb;
+        assert_eq!(fp(&req, &ca), fp(&req, &cb));
+    }
+
+    #[test]
+    fn display_and_parse_roundtrip() {
+        let f = Fingerprint(0x0123_4567_89ab_cdef);
+        assert_eq!(f.to_string(), "0123456789abcdef");
+        assert_eq!(Fingerprint::parse(&f.to_string()), Some(f));
+        assert_eq!(Fingerprint::parse("xyz"), None);
+    }
+}

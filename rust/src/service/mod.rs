@@ -1,0 +1,410 @@
+//! `astra::service` — the multi-tenant search service layer.
+//!
+//! The paper's headline is that search is fast enough (≈1.27 s single-GPU)
+//! to run on demand; this module turns the one-shot engine into a
+//! long-running service that amortizes the enumerate→filter→score pipeline
+//! across many tenants:
+//!
+//! * **[`fingerprint`]** — canonical, order-insensitive request keys, so
+//!   semantically identical `(model, pool, config)` requests collide;
+//! * **[`cache`]** — a sharded LRU result cache with TTL and byte budget,
+//!   serving repeats in microseconds instead of re-searching;
+//! * **[`SearchService`]** — single-flight admission (concurrent identical
+//!   requests coalesce onto one search) plus a batched admission queue that
+//!   fans *distinct* requests out over the scoped worker pool
+//!   ([`crate::pool`]) so a mixed batch saturates every core;
+//! * **[`server`]** — the line-delimited JSON wire protocol behind the
+//!   `astra serve` and `astra batch` subcommands.
+//!
+//! The engine side of this is [`ScoringCore`]: the `Sync` scoring entry
+//! point extracted from [`crate::coordinator::AstraEngine`] so one engine
+//! instance can be shared across request threads (the HLO runtime handle is
+//! thread-confined and stays out of the service path — the service always
+//! scores native).
+
+pub mod cache;
+pub mod fingerprint;
+pub mod server;
+
+pub use cache::{CacheConfig, CacheStats, ShardedCache};
+pub use fingerprint::{fingerprint, Fingerprint};
+
+use crate::coordinator::{ScoringCore, SearchReport, SearchRequest};
+use crate::pool::par_for_indices;
+use crate::{AstraError, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub cache: CacheConfig,
+    /// Max requests admitted into one fan-out batch; larger batches are
+    /// processed in chunks of this size.
+    pub max_batch: usize,
+    /// Worker threads for batch fan-out (0 ⇒ auto). Each search already
+    /// fans its scoring out over the engine's full worker pool, so the
+    /// outer queue only needs enough concurrency to overlap requests of
+    /// uneven length — auto caps it at 4 to avoid workers² thread
+    /// oversubscription on cold batches.
+    pub batch_workers: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { cache: CacheConfig::default(), max_batch: 32, batch_workers: 0 }
+    }
+}
+
+/// Where a response came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResponseSource {
+    /// A fresh engine search ran for this request.
+    Search,
+    /// Served from the result cache.
+    Cache,
+    /// Coalesced onto an identical in-flight request (single-flight) or an
+    /// identical earlier request in the same admitted batch.
+    Coalesced,
+}
+
+impl ResponseSource {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ResponseSource::Search => "search",
+            ResponseSource::Cache => "cache",
+            ResponseSource::Coalesced => "coalesced",
+        }
+    }
+}
+
+/// One serviced request.
+#[derive(Clone)]
+pub struct ServiceResponse {
+    pub fingerprint: Fingerprint,
+    pub source: ResponseSource,
+    /// Wall time spent inside the service for this request (seconds).
+    pub service_secs: f64,
+    pub report: Arc<SearchReport>,
+}
+
+/// Single-flight slot: the leader publishes into `done` and notifies.
+/// Errors are carried as strings (the engine error is not `Clone`).
+struct FlightSlot {
+    done: Mutex<Option<std::result::Result<Arc<SearchReport>, String>>>,
+    cv: Condvar,
+}
+
+impl FlightSlot {
+    fn new() -> FlightSlot {
+        FlightSlot { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn wait(&self) -> std::result::Result<Arc<SearchReport>, String> {
+        let mut g = self.done.lock().unwrap();
+        while g.is_none() {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.as_ref().unwrap().clone()
+    }
+
+    fn publish(&self, r: std::result::Result<Arc<SearchReport>, String>) {
+        *self.done.lock().unwrap() = Some(r);
+        self.cv.notify_all();
+    }
+}
+
+/// Leader-side unwind guard: publishes an error and clears the in-flight
+/// marker if the search panics. Disarmed on the normal path.
+struct FlightGuard<'a> {
+    inflight: &'a Mutex<HashMap<u64, Arc<FlightSlot>>>,
+    slot: &'a FlightSlot,
+    key: u64,
+    armed: bool,
+}
+
+impl FlightGuard<'_> {
+    fn disarm(&mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        self.slot.publish(Err("search leader panicked".to_string()));
+        // `lock()` may be poisoned during unwind; best-effort removal.
+        if let Ok(mut m) = self.inflight.lock() {
+            m.remove(&self.key);
+        }
+    }
+}
+
+/// The multi-tenant search service: one shared [`ScoringCore`], a sharded
+/// result cache, and single-flight admission.
+pub struct SearchService {
+    core: Arc<ScoringCore>,
+    cache: ShardedCache,
+    inflight: Mutex<HashMap<u64, Arc<FlightSlot>>>,
+    config: ServiceConfig,
+}
+
+impl SearchService {
+    pub fn new(core: ScoringCore, config: ServiceConfig) -> SearchService {
+        SearchService {
+            core: Arc::new(core),
+            cache: ShardedCache::new(config.cache.clone()),
+            inflight: Mutex::new(HashMap::new()),
+            config,
+        }
+    }
+
+    /// The shared engine core.
+    pub fn core(&self) -> &ScoringCore {
+        &self.core
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Drop all cached results.
+    pub fn clear_cache(&self) {
+        self.cache.clear();
+    }
+
+    /// Canonical key of a request under this service's engine config.
+    pub fn fingerprint_of(&self, req: &SearchRequest) -> Fingerprint {
+        fingerprint(req, &self.core.catalog, &self.core.config)
+    }
+
+    /// Serve one request: cache → single-flight coalescing → engine search.
+    pub fn handle(&self, req: &SearchRequest) -> Result<ServiceResponse> {
+        let t0 = Instant::now();
+        let fp = self.fingerprint_of(req);
+        if let Some(report) = self.cache.get(fp) {
+            return Ok(ServiceResponse {
+                fingerprint: fp,
+                source: ResponseSource::Cache,
+                service_secs: t0.elapsed().as_secs_f64(),
+                report,
+            });
+        }
+        // Single-flight: exactly one thread (the leader) runs the search;
+        // everyone else arriving with the same fingerprint waits on it.
+        let (slot, leader) = {
+            let mut map = self.inflight.lock().unwrap();
+            // Re-check the cache under the in-flight lock: a finishing
+            // leader publishes to the cache *before* clearing its marker,
+            // so a miss here is authoritative and we cannot double-search.
+            if let Some(report) = self.cache.peek(fp) {
+                return Ok(ServiceResponse {
+                    fingerprint: fp,
+                    source: ResponseSource::Cache,
+                    service_secs: t0.elapsed().as_secs_f64(),
+                    report,
+                });
+            }
+            match map.get(&fp.0) {
+                Some(s) => (s.clone(), false),
+                None => {
+                    let s = Arc::new(FlightSlot::new());
+                    map.insert(fp.0, s.clone());
+                    (s, true)
+                }
+            }
+        };
+        if leader {
+            // Unwind safety: if the engine panics, the guard still
+            // publishes a failure and clears the marker — otherwise every
+            // waiter (condvar, no timeout) and all future requests with
+            // this fingerprint would wedge for the server's lifetime.
+            let mut guard = FlightGuard {
+                inflight: &self.inflight,
+                slot: slot.as_ref(),
+                key: fp.0,
+                armed: true,
+            };
+            let result = self.core.search(req).map(Arc::new);
+            // Publish to the cache *before* waking waiters and clearing the
+            // in-flight marker, so a racing request either joins the flight
+            // or hits the cache — never re-searches.
+            if let Ok(report) = &result {
+                self.cache.insert(fp, report.clone());
+            }
+            slot.publish(match &result {
+                Ok(r) => Ok(r.clone()),
+                Err(e) => Err(e.to_string()),
+            });
+            self.inflight.lock().unwrap().remove(&fp.0);
+            guard.disarm();
+            result.map(|report| ServiceResponse {
+                fingerprint: fp,
+                source: ResponseSource::Search,
+                service_secs: t0.elapsed().as_secs_f64(),
+                report,
+            })
+        } else {
+            match slot.wait() {
+                Ok(report) => Ok(ServiceResponse {
+                    fingerprint: fp,
+                    source: ResponseSource::Coalesced,
+                    service_secs: t0.elapsed().as_secs_f64(),
+                    report,
+                }),
+                Err(msg) => Err(AstraError::Search(format!("coalesced request failed: {msg}"))),
+            }
+        }
+    }
+
+    /// Batched admission: deduplicate fingerprints inside the batch, fan
+    /// the distinct requests out over scoped workers, and return responses
+    /// in input order. Duplicates of an earlier batch entry are reported as
+    /// [`ResponseSource::Coalesced`] and share the leader's report.
+    pub fn handle_batch(&self, reqs: &[SearchRequest]) -> Vec<Result<ServiceResponse>> {
+        let fps: Vec<Fingerprint> = reqs.iter().map(|r| self.fingerprint_of(r)).collect();
+        // First occurrence of each fingerprint runs; later ones coalesce.
+        let mut first_of: HashMap<u64, usize> = HashMap::new();
+        let mut distinct: Vec<usize> = Vec::new();
+        for (i, fp) in fps.iter().enumerate() {
+            first_of.entry(fp.0).or_insert_with(|| {
+                distinct.push(i);
+                i
+            });
+        }
+        // Each search already saturates the engine's worker pool; the outer
+        // fan-out only needs to overlap requests of uneven length. Cap it
+        // (auto: ≤4) so a cold batch does not spawn ~workers² threads.
+        let workers = if self.config.batch_workers > 0 {
+            self.config.batch_workers
+        } else {
+            self.core.config.workers.min(4)
+        };
+        // Admit at most `max_batch` distinct requests per fan-out round.
+        let mut leader_results: Vec<Result<ServiceResponse>> =
+            Vec::with_capacity(distinct.len());
+        for chunk in distinct.chunks(self.config.max_batch.max(1)) {
+            let mut part =
+                par_for_indices(chunk.len(), workers, |i| self.handle(&reqs[chunk[i]]));
+            leader_results.append(&mut part);
+        }
+        // Map distinct-index → result, then assemble per-input responses.
+        let mut by_leader: HashMap<usize, &Result<ServiceResponse>> = HashMap::new();
+        for (k, &input_idx) in distinct.iter().enumerate() {
+            by_leader.insert(input_idx, &leader_results[k]);
+        }
+        fps.iter()
+            .enumerate()
+            .map(|(i, fp)| {
+                let leader_idx = first_of[&fp.0];
+                let leader = by_leader[&leader_idx];
+                match leader {
+                    Ok(resp) => {
+                        let mut resp = resp.clone();
+                        if i != leader_idx {
+                            resp.source = ResponseSource::Coalesced;
+                        }
+                        Ok(resp)
+                    }
+                    Err(e) => Err(AstraError::Search(e.to_string())),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineConfig;
+    use crate::gpu::GpuCatalog;
+    use crate::model::ModelRegistry;
+    use crate::strategy::SpaceConfig;
+
+    /// A deliberately small space so unit tests stay fast.
+    pub(crate) fn small_core() -> ScoringCore {
+        let space = SpaceConfig {
+            tp_candidates: vec![1, 2],
+            max_pp: 4,
+            mbs_candidates: vec![1, 2],
+            vpp_candidates: vec![1],
+            seq_parallel_options: vec![true],
+            dist_opt_options: vec![true],
+            offload_options: vec![false],
+            recompute_none: true,
+            recompute_selective: false,
+            recompute_full: false,
+            ..SpaceConfig::default()
+        };
+        ScoringCore::new(
+            GpuCatalog::builtin(),
+            EngineConfig { use_forests: false, space, ..Default::default() },
+        )
+    }
+
+    fn req(count: usize) -> SearchRequest {
+        let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+        SearchRequest::homogeneous("a800", count, model).unwrap()
+    }
+
+    #[test]
+    fn repeat_request_hits_cache_not_engine() {
+        let svc = SearchService::new(small_core(), ServiceConfig::default());
+        let a = svc.handle(&req(16)).unwrap();
+        assert_eq!(a.source, ResponseSource::Search);
+        let b = svc.handle(&req(16)).unwrap();
+        assert_eq!(b.source, ResponseSource::Cache);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(svc.core().searches_run(), 1, "cache hit must not re-search");
+        assert!(Arc::ptr_eq(&a.report, &b.report), "hit must share the cached report");
+    }
+
+    #[test]
+    fn bad_requests_fail_without_caching() {
+        let svc = SearchService::new(small_core(), ServiceConfig::default());
+        // Heterogeneous caps below total is a config error from the engine.
+        let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+        let bad = SearchRequest::heterogeneous(&[("a800", 8)], 64, model).unwrap();
+        assert!(svc.handle(&bad).is_err());
+        assert_eq!(svc.cache_stats().insertions, 0, "errors must not be cached");
+        // And the error is not sticky: nothing is left in-flight.
+        assert!(svc.handle(&bad).is_err());
+    }
+
+    #[test]
+    fn concurrent_identical_requests_single_flight() {
+        let svc = SearchService::new(small_core(), ServiceConfig::default());
+        let sources: Vec<ResponseSource> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| s.spawn(|| svc.handle(&req(32)).unwrap().source))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(svc.core().searches_run(), 1, "identical requests must coalesce");
+        assert_eq!(
+            sources.iter().filter(|&&s| s == ResponseSource::Search).count(),
+            1,
+            "exactly one leader: {sources:?}"
+        );
+    }
+
+    #[test]
+    fn batch_dedupes_and_preserves_order() {
+        let svc = SearchService::new(small_core(), ServiceConfig::default());
+        let reqs = vec![req(8), req(16), req(8), req(32)];
+        let out = svc.handle_batch(&reqs);
+        assert_eq!(out.len(), 4);
+        let resp: Vec<&ServiceResponse> = out.iter().map(|r| r.as_ref().unwrap()).collect();
+        assert_eq!(resp[0].fingerprint, resp[2].fingerprint);
+        assert_ne!(resp[0].fingerprint, resp[1].fingerprint);
+        assert_eq!(resp[2].source, ResponseSource::Coalesced);
+        assert_eq!(svc.core().searches_run(), 3, "3 distinct requests in the batch");
+    }
+}

@@ -1,0 +1,493 @@
+//! Line-delimited JSON wire protocol + the `serve`/`batch` front ends.
+//!
+//! ## Request lines
+//!
+//! One JSON object per line (field order free; unknown fields rejected by
+//! omission — they are simply ignored):
+//!
+//! ```text
+//! {"id":"r1","model":"llama2-7b","mode":"homogeneous","gpu":"a800","gpus":64}
+//! {"model":"llama2-13b","mode":"heterogeneous","gpus":64,"caps":{"a800":48,"h100":48}}
+//! {"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":50000}
+//! {"cmd":"stats"}
+//! ```
+//!
+//! * `model` — required, a [`crate::model::ModelRegistry`] name.
+//! * `mode` — `homogeneous` (default) | `heterogeneous` | `cost`.
+//! * `gpu` / `gpus` — GPU type and count (for `cost`: the count ceiling).
+//! * `caps` — heterogeneous per-type caps, `{gpu_name: max_count}`.
+//! * `max_money` — optional money ceiling in USD (`cost` mode).
+//! * `id` — optional opaque tag echoed back in the response.
+//!
+//! ## Response lines
+//!
+//! One JSON object per request line, in input order:
+//!
+//! ```text
+//! {"id":"r1","ok":true,"fingerprint":"91c4…","source":"search|cache|coalesced",
+//!  "service_ms":…, "engine":{"generated":…,"scored":…,…}, "best":{…}, "top":[…]}
+//! {"id":"r2","ok":false,"error":"unknown model 'gpt-5' (…)"}
+//! ```
+//!
+//! Identical requests always carry the same `fingerprint`, making responses
+//! join-able across batches and tenants.
+
+use crate::coordinator::{SearchReport, SearchRequest};
+use crate::gpu::GpuCatalog;
+use crate::json::{self, Value};
+use crate::model::ModelRegistry;
+use crate::report::scored_strategy_json;
+use crate::strategy::GpuPoolMode;
+use crate::{AstraError, Result};
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::{SearchService, ServiceResponse};
+
+/// A parsed request line.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    /// Opaque client tag, echoed back verbatim.
+    pub id: Option<String>,
+    pub request: SearchRequest,
+}
+
+/// Serve-loop options.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Max request lines admitted into one fan-out batch.
+    pub max_batch: usize,
+    /// Strategies included in each response's `top` array.
+    pub top: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { max_batch: 32, top: 3 }
+    }
+}
+
+/// Counters returned by the serve/batch loops.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub lines: usize,
+    pub ok: usize,
+    pub errors: usize,
+}
+
+/// Parse one request object (already JSON-decoded).
+/// The `id` echo: strings verbatim, anything else as its JSON text (so
+/// numeric ids survive both the success and error paths).
+fn wire_id(v: &Value) -> Option<String> {
+    v.get("id").map(|x| match x {
+        Value::Str(s) => s.clone(),
+        other => json::to_string(other),
+    })
+}
+
+pub fn parse_request(
+    v: &Value,
+    catalog: &GpuCatalog,
+    registry: &ModelRegistry,
+) -> Result<WireRequest> {
+    let id = wire_id(v);
+    let model = registry.get(v.req_str("model")?)?.clone();
+    let mode = v.get("mode").and_then(Value::as_str).unwrap_or("homogeneous");
+    let request = match mode {
+        "homogeneous" => {
+            let gpu = catalog.find(v.req_str("gpu")?)?;
+            let count = v.req_usize("gpus")?;
+            SearchRequest { mode: GpuPoolMode::Homogeneous { gpu, count }, model }
+        }
+        "heterogeneous" => {
+            let total = v.req_usize("gpus")?;
+            let caps_obj = v
+                .get("caps")
+                .and_then(Value::as_obj)
+                .ok_or_else(|| AstraError::Json("missing/invalid object field 'caps'".into()))?;
+            let mut caps = Vec::with_capacity(caps_obj.len());
+            for (name, cap) in caps_obj {
+                let cap = cap.as_usize().ok_or_else(|| {
+                    AstraError::Json(format!("caps['{name}'] is not a non-negative integer"))
+                })?;
+                caps.push((catalog.find(name)?, cap));
+            }
+            SearchRequest { mode: GpuPoolMode::Heterogeneous { total, caps }, model }
+        }
+        "cost" => {
+            let gpu = catalog.find(v.req_str("gpu")?)?;
+            let max_count = v.req_usize("gpus")?;
+            let max_money = v.opt_f64("max_money").unwrap_or(f64::INFINITY);
+            SearchRequest { mode: GpuPoolMode::Cost { gpu, max_count, max_money }, model }
+        }
+        other => {
+            return Err(AstraError::Config(format!(
+                "unknown mode '{other}' (homogeneous | heterogeneous | cost)"
+            )));
+        }
+    };
+    Ok(WireRequest { id, request })
+}
+
+/// Serialize a request back to its wire form (round-trip tested: the wire
+/// form re-parses to the same fingerprint).
+pub fn request_to_json(req: &SearchRequest, catalog: &GpuCatalog) -> Value {
+    let base = Value::obj().set("model", req.model.name.as_str());
+    match &req.mode {
+        GpuPoolMode::Homogeneous { gpu, count } => base
+            .set("mode", "homogeneous")
+            .set("gpu", catalog.spec(*gpu).name.as_str())
+            .set("gpus", *count),
+        GpuPoolMode::Heterogeneous { total, caps } => {
+            // Caps are a per-type map on the wire: [`merge_caps`] matches
+            // the fingerprint canonicalization, so the round-trip
+            // preserves the key even for split duplicate inputs.
+            let merged = crate::strategy::merge_caps(
+                caps.iter().map(|&(g, c)| (catalog.spec(g).name.as_str(), c)),
+            );
+            let mut obj = Value::obj();
+            for (name, c) in merged {
+                obj = obj.set(name, c);
+            }
+            base.set("mode", "heterogeneous").set("gpus", *total).set("caps", obj)
+        }
+        GpuPoolMode::Cost { gpu, max_count, max_money } => {
+            let v = base
+                .set("mode", "cost")
+                .set("gpu", catalog.spec(*gpu).name.as_str())
+                .set("gpus", *max_count);
+            if max_money.is_finite() {
+                v.set("max_money", *max_money)
+            } else {
+                v
+            }
+        }
+    }
+}
+
+fn report_counts_json(r: &SearchReport) -> Value {
+    Value::obj()
+        .set("generated", r.generated)
+        .set("rule_filtered", r.rule_filtered)
+        .set("mem_filtered", r.mem_filtered)
+        .set("scored", r.scored)
+        .set("search_secs", r.search_secs)
+        .set("simulate_secs", r.simulate_secs)
+}
+
+/// Success response line.
+pub fn response_json(
+    id: &Option<String>,
+    resp: &ServiceResponse,
+    top: usize,
+    catalog: &GpuCatalog,
+) -> Value {
+    let mut v = Value::obj()
+        .set("ok", true)
+        .set("fingerprint", resp.fingerprint.to_string())
+        .set("source", resp.source.as_str())
+        .set("service_ms", resp.service_secs * 1e3)
+        .set("engine", report_counts_json(&resp.report));
+    if let Some(id) = id {
+        v = v.set("id", id.as_str());
+    }
+    if let Some(best) = resp.report.best() {
+        v = v.set("best", scored_strategy_json(best, catalog));
+    }
+    let tops: Vec<Value> = resp
+        .report
+        .top
+        .iter()
+        .take(top)
+        .map(|s| scored_strategy_json(s, catalog))
+        .collect();
+    v.set("top", Value::Arr(tops))
+}
+
+/// Error response line.
+pub fn error_json(id: &Option<String>, msg: &str) -> Value {
+    let mut v = Value::obj().set("ok", false).set("error", msg);
+    if let Some(id) = id {
+        v = v.set("id", id.as_str());
+    }
+    v
+}
+
+/// Cache/engine statistics line (the `{"cmd":"stats"}` control request).
+pub fn stats_json(service: &SearchService) -> Value {
+    let s = service.cache_stats();
+    Value::obj()
+        .set("ok", true)
+        .set("stats", Value::obj()
+            .set("searches_run", service.core().searches_run())
+            .set("cache_hits", s.hits)
+            .set("cache_misses", s.misses)
+            .set("cache_insertions", s.insertions)
+            .set("cache_evictions", s.evictions)
+            .set("cache_expirations", s.expirations)
+            .set("cache_entries", s.entries)
+            .set("cache_bytes", s.bytes))
+}
+
+/// What one admitted line turned into.
+enum Admitted {
+    /// Index into the batch's request vector.
+    Request { id: Option<String>, slot: usize },
+    /// Immediate error response (parse/validation failure).
+    Immediate(Value),
+    /// `{"cmd":"stats"}` — rendered at emission time, after the batch's
+    /// requests have run, so the counters reflect them. Carries the echo id.
+    Stats(Option<String>),
+}
+
+/// Process one admitted batch of raw lines: parse, fan out the valid
+/// requests through the admission queue, and write one response per line in
+/// input order.
+fn process_batch<W: Write>(
+    service: &SearchService,
+    lines: &[String],
+    out: &mut W,
+    opts: &ServeOpts,
+    stats: &mut ServeStats,
+) -> Result<()> {
+    let catalog = &service.core().catalog;
+    let registry = ModelRegistry::builtin();
+    let mut admitted: Vec<Admitted> = Vec::with_capacity(lines.len());
+    let mut requests: Vec<SearchRequest> = Vec::new();
+    for line in lines {
+        match json::parse(line) {
+            Ok(v) => {
+                if v.get("cmd").and_then(Value::as_str) == Some("stats") {
+                    admitted.push(Admitted::Stats(wire_id(&v)));
+                    continue;
+                }
+                match parse_request(&v, catalog, &registry) {
+                    Ok(w) => {
+                        admitted.push(Admitted::Request { id: w.id, slot: requests.len() });
+                        requests.push(w.request);
+                    }
+                    Err(e) => {
+                        admitted.push(Admitted::Immediate(error_json(&wire_id(&v), &e.to_string())));
+                    }
+                }
+            }
+            Err(e) => {
+                admitted.push(Admitted::Immediate(error_json(&None, &e.to_string())));
+            }
+        }
+    }
+    let responses = service.handle_batch(&requests);
+    for a in &admitted {
+        let line = match a {
+            Admitted::Immediate(v) => {
+                stats.errors += 1;
+                json::to_string(v)
+            }
+            Admitted::Stats(id) => {
+                stats.ok += 1;
+                let mut v = stats_json(service);
+                if let Some(id) = id {
+                    v = v.set("id", id.as_str());
+                }
+                json::to_string(&v)
+            }
+            Admitted::Request { id, slot } => match &responses[*slot] {
+                Ok(resp) => {
+                    stats.ok += 1;
+                    json::to_string(&response_json(id, resp, opts.top, catalog))
+                }
+                Err(e) => {
+                    stats.errors += 1;
+                    json::to_string(&error_json(id, &e.to_string()))
+                }
+            },
+        };
+        out.write_all(line.as_bytes())?;
+        out.write_all(b"\n")?;
+    }
+    out.flush()?;
+    stats.lines += lines.len();
+    Ok(())
+}
+
+/// The serve loop: a reader thread feeds an admission channel; the main
+/// loop blocks for the first pending line, then greedily drains up to
+/// `max_batch` already-buffered lines so bursts are admitted as one batch
+/// and fanned out together, while interactive use still gets per-line
+/// latency. Blank lines are ignored; EOF ends the loop.
+pub fn run_serve_loop<R, W>(
+    service: &SearchService,
+    input: R,
+    out: &mut W,
+    opts: &ServeOpts,
+) -> Result<ServeStats>
+where
+    R: BufRead + Send + 'static,
+    W: Write,
+{
+    let mut stats = ServeStats::default();
+    let (tx, rx) = mpsc::sync_channel::<String>(4096);
+    // The reader is a *detached* thread, not a scoped one: on a write
+    // error the loop must return immediately, but a reader parked inside a
+    // blocking read syscall cannot be joined until more input (or EOF)
+    // arrives. Detached, it notices the dropped `rx` at its next send and
+    // exits on its own; on the normal path it has already finished at EOF.
+    std::thread::spawn(move || {
+        for line in input.lines() {
+            match line {
+                Ok(l) => {
+                    if l.trim().is_empty() {
+                        continue;
+                    }
+                    if tx.send(l).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        // tx drops here → recv() below unblocks with Err → loop ends.
+    });
+    loop {
+        let first = match rx.recv() {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let mut batch = vec![first];
+        while batch.len() < opts.max_batch.max(1) {
+            match rx.try_recv() {
+                Ok(l) => batch.push(l),
+                Err(_) => break,
+            }
+        }
+        process_batch(service, &batch, out, opts, &mut stats)?;
+    }
+    Ok(stats)
+}
+
+/// `astra batch <file>`: admit the whole file through the same machinery,
+/// `max_batch` lines at a time, writing responses in input order.
+pub fn run_batch_lines<W: Write>(
+    service: &SearchService,
+    text: &str,
+    out: &mut W,
+    opts: &ServeOpts,
+) -> Result<ServeStats> {
+    let mut stats = ServeStats::default();
+    let lines: Vec<String> =
+        text.lines().filter(|l| !l.trim().is_empty()).map(String::from).collect();
+    for chunk in lines.chunks(opts.max_batch.max(1)) {
+        process_batch(service, chunk, out, opts, &mut stats)?;
+    }
+    Ok(stats)
+}
+
+/// TCP front end: one thread per connection, each running the serve loop
+/// against the shared service. Never returns except on bind error.
+pub fn serve_tcp(service: Arc<SearchService>, addr: &str, opts: &ServeOpts) -> Result<()> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    crate::log_info!("astra serve listening on {addr}");
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                crate::log_warn!("accept failed: {e}");
+                continue;
+            }
+        };
+        let service = service.clone();
+        let opts = opts.clone();
+        std::thread::spawn(move || {
+            let reader = match stream.try_clone() {
+                Ok(s) => std::io::BufReader::new(s),
+                Err(e) => {
+                    crate::log_warn!("clone stream: {e}");
+                    return;
+                }
+            };
+            let mut writer = std::io::BufWriter::new(stream);
+            if let Err(e) = run_serve_loop(&service, reader, &mut writer, &opts) {
+                crate::log_warn!("connection ended with error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::fingerprint::fingerprint;
+
+    fn catalog() -> GpuCatalog {
+        GpuCatalog::builtin()
+    }
+
+    #[test]
+    fn parse_minimal_homogeneous() {
+        let v = json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64}"#).unwrap();
+        let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
+        assert!(w.id.is_none());
+        match &w.request.mode {
+            GpuPoolMode::Homogeneous { count, .. } => assert_eq!(*count, 64),
+            other => panic!("wrong mode {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_errors_are_recoverable() {
+        let reg = ModelRegistry::builtin();
+        for bad in [
+            r#"{"gpu":"a800","gpus":64}"#,                         // no model
+            r#"{"model":"gpt-5","gpu":"a800","gpus":64}"#,         // unknown model
+            r#"{"model":"llama2-7b","gpu":"b200","gpus":64}"#,     // unknown gpu
+            r#"{"model":"llama2-7b","mode":"quantum","gpus":64}"#, // unknown mode
+            r#"{"model":"llama2-7b","mode":"heterogeneous","gpus":64}"#, // no caps
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(parse_request(&v, &catalog(), &reg).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_fingerprint() {
+        let cat = catalog();
+        let reg = ModelRegistry::builtin();
+        let cfg = crate::coordinator::EngineConfig::default();
+        for src in [
+            r#"{"model":"llama2-7b","gpu":"a800","gpus":64}"#,
+            r#"{"model":"llama2-13b","mode":"heterogeneous","gpus":64,"caps":{"a800":48,"h100":48}}"#,
+            r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":50000}"#,
+        ] {
+            let w = parse_request(&json::parse(src).unwrap(), &cat, &reg).unwrap();
+            let wire = request_to_json(&w.request, &cat);
+            let back = parse_request(&wire, &cat, &reg).unwrap();
+            assert_eq!(
+                fingerprint(&w.request, &cat, &cfg),
+                fingerprint(&back.request, &cat, &cfg),
+                "round-trip changed the fingerprint for {src}"
+            );
+        }
+    }
+
+    #[test]
+    fn json_field_order_does_not_change_fingerprint() {
+        let cat = catalog();
+        let reg = ModelRegistry::builtin();
+        let cfg = crate::coordinator::EngineConfig::default();
+        let a = parse_request(
+            &json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64}"#).unwrap(),
+            &cat,
+            &reg,
+        )
+        .unwrap();
+        let b = parse_request(
+            &json::parse(r#"{"gpus":64,"gpu":"a800","model":"llama2-7b"}"#).unwrap(),
+            &cat,
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(fingerprint(&a.request, &cat, &cfg), fingerprint(&b.request, &cat, &cfg));
+    }
+}

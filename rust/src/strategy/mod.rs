@@ -330,6 +330,21 @@ pub enum GpuPoolMode {
     Cost { gpu: GpuType, max_count: usize, max_money: f64 },
 }
 
+/// Canonicalize per-type capacity entries as a *map*: duplicate keys merge
+/// by summation, first-seen order preserved. The single definition behind
+/// the request constructor, the service fingerprint, and the wire
+/// serialization — these must agree exactly or cache keys drift.
+pub fn merge_caps<K: PartialEq>(entries: impl IntoIterator<Item = (K, usize)>) -> Vec<(K, usize)> {
+    let mut out: Vec<(K, usize)> = Vec::new();
+    for (k, c) in entries {
+        match out.iter_mut().find(|(g, _)| *g == k) {
+            Some((_, acc)) => *acc += c,
+            None => out.push((k, c)),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +419,15 @@ mod tests {
         let mut s = base_strategy(m, 0, 2, 1, 8);
         s.vpp = 2; // vpp with pp=1
         assert!(s.validate(m).is_err());
+    }
+
+    #[test]
+    fn merge_caps_sums_duplicates_in_order() {
+        assert_eq!(
+            merge_caps(vec![("a", 16), ("b", 8), ("a", 16)]),
+            vec![("a", 32), ("b", 8)]
+        );
+        assert_eq!(merge_caps(Vec::<(usize, usize)>::new()), vec![]);
     }
 
     #[test]

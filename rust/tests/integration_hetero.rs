@@ -109,7 +109,7 @@ fn hetero_between_pure_slow_and_pure_fast() {
     let total = 64;
 
     let pure = |gpu: &str| {
-        eng.search(&SearchRequest::homogeneous(gpu, total, model.clone()))
+        eng.search(&SearchRequest::homogeneous(gpu, total, model.clone()).expect("request"))
             .unwrap()
             .best()
             .unwrap()

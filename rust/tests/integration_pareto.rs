@@ -54,7 +54,7 @@ fn money_scales_with_gpu_price() {
     let m = reg.get("llama2-7b").unwrap();
     let mm = MoneyModel::default();
     let eng = engine();
-    let rep = eng.search(&SearchRequest::homogeneous("a800", 64, m.clone())).unwrap();
+    let rep = eng.search(&SearchRequest::homogeneous("a800", 64, m.clone()).unwrap()).unwrap();
     let s = rep.best().unwrap();
     let usd = mm.cost_usd(m, &s.strategy, &cat, s.cost.step_time);
     // Recompute by hand: steps × step_time × 64 × fee.

@@ -18,7 +18,7 @@ fn search_succeeds_for_all_paper_models_at_64() {
     let reg = ModelRegistry::builtin();
     let eng = engine();
     for model in reg.paper_seven() {
-        let req = SearchRequest::homogeneous("a800", 64, model.clone());
+        let req = SearchRequest::homogeneous("a800", 64, model.clone()).unwrap();
         let rep = eng.search(&req).unwrap_or_else(|e| panic!("{}: {e}", model.name));
         assert!(rep.scored > 0, "{}: nothing survived filtering", model.name);
         let best = rep.best().unwrap();
@@ -47,7 +47,7 @@ fn astra_beats_or_matches_expert_panel() {
     for (model_name, count) in [("llama2-7b", 32usize), ("llama2-13b", 128), ("llama3-8b", 64)] {
         let model = reg.get(model_name).unwrap();
         let rep = eng
-            .search(&SearchRequest::homogeneous("a800", count, model.clone()))
+            .search(&SearchRequest::homogeneous("a800", count, model.clone()).unwrap())
             .unwrap();
         let astra_tput = sim.measure(model, &rep.best().unwrap().strategy).tokens_per_s;
         let expert_tput = panel
@@ -73,7 +73,7 @@ fn dp_only_space_is_strictly_worse_at_scale() {
         GpuCatalog::builtin(),
         EngineConfig { use_forests: false, space: SpaceConfig::dp_only(), ..Default::default() },
     );
-    let req = SearchRequest::homogeneous("a800", 256, model);
+    let req = SearchRequest::homogeneous("a800", 256, model).unwrap();
     let full_rep = full.search(&req).unwrap();
     let dp_rep = dp_only.search(&req).unwrap();
     let full_best = full_rep.best().unwrap().cost.tokens_per_s;
@@ -94,7 +94,7 @@ fn search_time_headline_claim() {
     let reg = ModelRegistry::builtin();
     let model = reg.get("llama2-7b").unwrap().clone();
     let eng = engine();
-    let rep = eng.search(&SearchRequest::homogeneous("a800", 256, model)).unwrap();
+    let rep = eng.search(&SearchRequest::homogeneous("a800", 256, model).unwrap()).unwrap();
     assert!(
         rep.search_secs < 5.0,
         "search phase took {:.2}s (paper: ~1.27s)",
@@ -107,7 +107,7 @@ fn deterministic_given_same_request() {
     let reg = ModelRegistry::builtin();
     let model = reg.get("llama2-7b").unwrap().clone();
     let eng = engine();
-    let req = SearchRequest::homogeneous("a800", 64, model);
+    let req = SearchRequest::homogeneous("a800", 64, model).unwrap();
     let a = eng.search(&req).unwrap();
     let b = eng.search(&req).unwrap();
     assert_eq!(a.scored, b.scored);

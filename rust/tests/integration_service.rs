@@ -1,0 +1,265 @@
+//! End-to-end tests of the `astra::service` layer: fingerprint stability,
+//! cache reuse, single-flight coalescing, the serve loop, and the batched
+//! admission queue.
+
+use astra::coordinator::{EngineConfig, ScoringCore, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::json;
+use astra::model::ModelRegistry;
+use astra::service::server::{run_batch_lines, run_serve_loop, ServeOpts};
+use astra::service::{
+    fingerprint, CacheConfig, Fingerprint, ResponseSource, SearchService, ServiceConfig,
+};
+use astra::strategy::SpaceConfig;
+use std::io::Cursor;
+use std::time::Instant;
+
+/// A narrowed space so each cold search takes milliseconds, not seconds.
+fn small_config() -> EngineConfig {
+    let space = SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 4,
+        mbs_candidates: vec![1, 2],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    };
+    EngineConfig { use_forests: false, space, ..Default::default() }
+}
+
+fn small_service() -> SearchService {
+    SearchService::new(
+        ScoringCore::new(GpuCatalog::builtin(), small_config()),
+        ServiceConfig::default(),
+    )
+}
+
+fn req(model: &str, count: usize) -> SearchRequest {
+    let m = ModelRegistry::builtin().get(model).unwrap().clone();
+    SearchRequest::homogeneous("a800", count, m).unwrap()
+}
+
+#[test]
+fn fingerprints_stable_and_distinct() {
+    let cat = GpuCatalog::builtin();
+    let cfg = EngineConfig::default();
+    // Stability across construction paths.
+    assert_eq!(
+        fingerprint(&req("llama2-7b", 64), &cat, &cfg),
+        fingerprint(&req("llama2-7b", 64), &cat, &cfg)
+    );
+    // Capacity-order insensitivity.
+    let m = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let a = SearchRequest::heterogeneous(&[("a800", 48), ("h100", 48)], 64, m.clone()).unwrap();
+    let b = SearchRequest::heterogeneous(&[("h100", 48), ("a800", 48)], 64, m).unwrap();
+    assert_eq!(fingerprint(&a, &cat, &cfg), fingerprint(&b, &cat, &cfg));
+    // Distinct requests key apart.
+    let mut fps: Vec<Fingerprint> = vec![
+        fingerprint(&req("llama2-7b", 64), &cat, &cfg),
+        fingerprint(&req("llama2-7b", 128), &cat, &cfg),
+        fingerprint(&req("llama2-13b", 64), &cat, &cfg),
+        fingerprint(&a, &cat, &cfg),
+    ];
+    fps.sort();
+    fps.dedup();
+    assert_eq!(fps.len(), 4, "fingerprint collision among distinct requests");
+}
+
+#[test]
+fn repeat_request_skips_engine_and_is_100x_faster() {
+    // The acceptance anchor: an identical repeat must not re-enter
+    // `search` and must be at least 100× faster than the cold run. Uses the
+    // full default space so the cold search is a realistic multi-ms run.
+    let svc = SearchService::new(
+        ScoringCore::new(
+            GpuCatalog::builtin(),
+            EngineConfig { use_forests: false, ..Default::default() },
+        ),
+        ServiceConfig::default(),
+    );
+    let r = req("llama2-7b", 64);
+
+    let t0 = Instant::now();
+    let cold = svc.handle(&r).unwrap();
+    let cold_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(cold.source, ResponseSource::Search);
+    assert_eq!(svc.core().searches_run(), 1);
+
+    let t1 = Instant::now();
+    let warm = svc.handle(&r).unwrap();
+    let warm_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(warm.source, ResponseSource::Cache);
+    assert_eq!(svc.core().searches_run(), 1, "cache hit re-entered the engine");
+    assert_eq!(cold.fingerprint, warm.fingerprint);
+    assert!(
+        warm_secs * 100.0 < cold_secs,
+        "cache hit not ≥100× faster: cold {cold_secs:.6}s vs warm {warm_secs:.6}s"
+    );
+}
+
+#[test]
+fn serve_loop_three_requests_two_identical() {
+    // The end-to-end loop of the issue: 3 requests (2 identical) through
+    // the wire protocol → exactly 2 engine searches, 1 cache hit.
+    let svc = small_service();
+    let input = "\
+{\"id\":\"a\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":64}\n\
+{\"id\":\"b\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":64}\n\
+{\"id\":\"c\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":32}\n";
+    let mut out: Vec<u8> = Vec::new();
+    // max_batch = 1 ⇒ strictly sequential admission ⇒ the repeat is a
+    // deterministic cache hit (not an in-batch coalesce).
+    let opts = ServeOpts { max_batch: 1, top: 1 };
+    let stats =
+        run_serve_loop(&svc, Cursor::new(input.as_bytes().to_vec()), &mut out, &opts).unwrap();
+    assert_eq!((stats.lines, stats.ok, stats.errors), (3, 3, 0));
+    assert_eq!(svc.core().searches_run(), 2, "two distinct requests → two searches");
+    assert_eq!(svc.cache_stats().hits, 1, "the repeat must hit the cache");
+
+    let lines: Vec<json::Value> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines.len(), 3);
+    for (v, id) in lines.iter().zip(["a", "b", "c"]) {
+        assert_eq!(v.get("ok").and_then(json::Value::as_bool), Some(true));
+        assert_eq!(v.opt_str("id"), Some(id), "responses must keep input order");
+    }
+    assert_eq!(lines[0].opt_str("source"), Some("search"));
+    assert_eq!(lines[1].opt_str("source"), Some("cache"));
+    assert_eq!(lines[2].opt_str("source"), Some("search"));
+    assert_eq!(lines[0].opt_str("fingerprint"), lines[1].opt_str("fingerprint"));
+    assert_ne!(lines[0].opt_str("fingerprint"), lines[2].opt_str("fingerprint"));
+    // Identical requests ⇒ identical result payloads.
+    assert_eq!(lines[0].get("best"), lines[1].get("best"));
+}
+
+#[test]
+fn serve_loop_reports_errors_inline() {
+    let svc = small_service();
+    let input = "\
+not json at all\n\
+{\"id\":\"x\",\"model\":\"gpt-5\",\"gpu\":\"a800\",\"gpus\":64}\n\
+{\"id\":\"y\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":16}\n\
+{\"cmd\":\"stats\"}\n";
+    let mut out: Vec<u8> = Vec::new();
+    let opts = ServeOpts { max_batch: 1, top: 1 };
+    let stats =
+        run_serve_loop(&svc, Cursor::new(input.as_bytes().to_vec()), &mut out, &opts).unwrap();
+    assert_eq!(stats.lines, 4);
+    assert_eq!(stats.errors, 2, "bad JSON + unknown model");
+    let lines: Vec<json::Value> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines[0].get("ok").and_then(json::Value::as_bool), Some(false));
+    assert_eq!(lines[1].get("ok").and_then(json::Value::as_bool), Some(false));
+    assert_eq!(lines[1].opt_str("id"), Some("x"), "errors echo the request id");
+    assert_eq!(lines[2].get("ok").and_then(json::Value::as_bool), Some(true));
+    // The control line exposes service counters.
+    let stats_obj = lines[3].get("stats").expect("stats payload");
+    assert_eq!(stats_obj.opt_usize("searches_run"), Some(1));
+}
+
+#[test]
+fn batch_of_eight_distinct_requests_is_deterministic() {
+    // Acceptance: ≥8 distinct requests complete concurrently through the
+    // admission queue with deterministic, fingerprint-keyed output.
+    let mk_lines = || -> String {
+        let mut s = String::new();
+        for (model, gpus) in [
+            ("llama2-7b", 8usize),
+            ("llama2-7b", 16),
+            ("llama2-7b", 32),
+            ("llama2-7b", 64),
+            ("llama2-13b", 16),
+            ("llama2-13b", 32),
+            ("llama3-8b", 16),
+            ("llama3-8b", 32),
+        ] {
+            s.push_str(&format!(
+                "{{\"model\":\"{model}\",\"gpu\":\"a800\",\"gpus\":{gpus}}}\n"
+            ));
+        }
+        s
+    };
+
+    let run = || -> Vec<(String, String, String)> {
+        let svc = small_service();
+        let mut out: Vec<u8> = Vec::new();
+        let opts = ServeOpts { max_batch: 32, top: 1 };
+        let stats = run_batch_lines(&svc, &mk_lines(), &mut out, &opts).unwrap();
+        assert_eq!((stats.lines, stats.ok, stats.errors), (8, 8, 0));
+        assert_eq!(svc.core().searches_run(), 8, "all eight are distinct");
+        String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| {
+                let v = json::parse(l).unwrap();
+                assert_eq!(v.get("ok").and_then(json::Value::as_bool), Some(true));
+                (
+                    v.opt_str("fingerprint").unwrap().to_string(),
+                    v.get("best").map(json::to_string).unwrap_or_default(),
+                    v.opt_str("source").unwrap().to_string(),
+                )
+            })
+            .collect()
+    };
+
+    let a = run();
+    let b = run();
+    assert_eq!(a.len(), 8);
+    let mut fps: Vec<&String> = a.iter().map(|(fp, _, _)| fp).collect();
+    fps.sort();
+    fps.dedup();
+    assert_eq!(fps.len(), 8, "eight distinct fingerprints");
+    for (i, ((fa, ba, _), (fb, bb, _))) in a.iter().zip(&b).enumerate() {
+        assert_eq!(fa, fb, "request {i}: fingerprint not deterministic");
+        assert_eq!(ba, bb, "request {i}: best strategy not deterministic");
+    }
+}
+
+#[test]
+fn batch_mixes_modes_and_coalesces_duplicates() {
+    let svc = small_service();
+    let lines = "\
+{\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":16}\n\
+{\"model\":\"llama2-7b\",\"mode\":\"heterogeneous\",\"gpus\":16,\"caps\":{\"a800\":8,\"h100\":8}}\n\
+{\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":16}\n";
+    let mut out: Vec<u8> = Vec::new();
+    let opts = ServeOpts { max_batch: 8, top: 1 };
+    let stats = run_batch_lines(&svc, lines, &mut out, &opts).unwrap();
+    assert_eq!((stats.ok, stats.errors), (3, 0));
+    assert_eq!(svc.core().searches_run(), 2, "duplicate inside the batch must coalesce");
+    let lines: Vec<json::Value> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines[0].opt_str("fingerprint"), lines[2].opt_str("fingerprint"));
+    assert_eq!(lines[2].opt_str("source"), Some("coalesced"));
+}
+
+#[test]
+fn ttl_zero_cache_still_single_flights() {
+    // A TTL so short every entry is stale on re-lookup: repeats re-search,
+    // proving TTL actually expires (control experiment for the cache test).
+    let cfg = ServiceConfig {
+        cache: CacheConfig { ttl: Some(std::time::Duration::ZERO), ..Default::default() },
+        ..Default::default()
+    };
+    let svc = SearchService::new(ScoringCore::new(GpuCatalog::builtin(), small_config()), cfg);
+    let r = req("llama2-7b", 16);
+    svc.handle(&r).unwrap();
+    let second = svc.handle(&r).unwrap();
+    assert_eq!(second.source, ResponseSource::Search, "expired entry must re-search");
+    assert_eq!(svc.core().searches_run(), 2);
+    assert_eq!(svc.cache_stats().expirations, 1);
+}
