@@ -1,60 +1,90 @@
-//! Mode-3: money-limit search (paper §3.6 / Fig. 7).
+//! Mode-3: money-limit search (paper §3.6 / Fig. 7), homogeneous or mixed.
 //!
 //! ```text
 //! cargo run --release --example cost_optimizer [-- --model llama2-7b --gpu h100 \
 //!     --max-gpus 256 --budget 4000 --train-tokens 1e9]
+//! cargo run --release --example cost_optimizer -- --hetero a800:32,h100:16 \
+//!     --budget 4000 --spot
 //! ```
 //!
-//! Sweeps GPU counts (Eq. 3), prices every surviving strategy for a token
-//! budget, prints the Pareto-optimal pool (throughput vs USD — the paper's
-//! "optimal line"), and selects the fastest plan under the money ceiling.
+//! Without `--hetero`: sweeps GPU counts of one type (Eq. 3). With
+//! `--hetero 'type:cap,…'`: the heterogeneous money search — mixed-type
+//! pool sizes are swept under the per-type caps, every candidate is priced
+//! per type per hour through the price book (`--spot` bills spot rates),
+//! and a branch-and-bound pruner drops pools that cannot fit the budget.
+//! Either way the Pareto-optimal pool (throughput vs USD — the paper's
+//! "optimal line") is printed and the fastest plan under the money ceiling
+//! selected.
 
 use astra::cli::Cli;
 use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
 use astra::gpu::GpuCatalog;
 use astra::model::ModelRegistry;
 use astra::pareto::MoneyModel;
+use astra::pricing::PriceBook;
 use astra::report::Table;
 use astra::strategy::GpuPoolMode;
 
 fn main() -> astra::Result<()> {
     let args = Cli::new("cost_optimizer", "mode-3 money-limited Astra search")
         .opt("model", "model name", Some("llama2-7b"))
-        .opt("gpu", "GPU type", Some("h100"))
+        .opt("gpu", "GPU type (homogeneous sweep)", Some("h100"))
         .opt("max-gpus", "maximum cluster size", Some("256"))
         .opt("budget", "money ceiling in USD", Some("4000"))
         .opt("train-tokens", "token budget being priced", Some("1e9"))
+        .opt("hetero", "mixed-pool caps 'type:cap,type:cap' (hetero-cost mode)", None)
+        .flag("spot", "bill at spot rates instead of on-demand")
         .parse();
 
     let catalog = GpuCatalog::builtin();
     let registry = ModelRegistry::builtin();
     let model = registry.get(args.get("model").unwrap())?.clone();
-    let gpu = catalog.find(args.get("gpu").unwrap())?;
-    let max_count = args.get_usize("max-gpus")?;
     let budget = args.get_f64("budget")?;
     let train_tokens = args.get_f64("train-tokens")?;
 
-    println!(
-        "Pricing a {:.1e}-token training of {} on up to {max_count}×{} (${:.2}/h each), budget ${budget:.0}",
-        train_tokens,
-        model.name,
-        catalog.spec(gpu).name,
-        catalog.spec(gpu).price_per_hour
-    );
-
+    let mut book = PriceBook::builtin();
+    book.use_spot = args.flag("spot");
     let engine = AstraEngine::new(
         catalog.clone(),
-        EngineConfig { money: MoneyModel { train_tokens }, ..Default::default() },
+        EngineConfig { money: MoneyModel { train_tokens, book }, ..Default::default() },
     );
-    let report = engine.search(&SearchRequest {
-        mode: GpuPoolMode::Cost { gpu, max_count, max_money: budget },
-        model: model.clone(),
-    })?;
+
+    let mode = match args.get("hetero") {
+        Some(spec) => {
+            let caps = catalog.parse_caps(spec)?;
+            println!(
+                "Pricing a {:.1e}-token training of {} on mixed pools (caps {spec}, {}), budget ${budget:.0}",
+                train_tokens,
+                model.name,
+                if args.flag("spot") { "spot rates" } else { "on-demand rates" },
+            );
+            GpuPoolMode::HeteroCost { caps, max_money: budget }
+        }
+        None => {
+            let gpu = catalog.find(args.get("gpu").unwrap())?;
+            println!(
+                "Pricing a {:.1e}-token training of {} on up to {}×{} (${:.2}/h each), budget ${budget:.0}",
+                train_tokens,
+                model.name,
+                args.get_usize("max-gpus")?,
+                catalog.spec(gpu).name,
+                catalog.spec(gpu).price_per_hour
+            );
+            GpuPoolMode::Cost {
+                gpu,
+                max_count: args.get_usize("max-gpus")?,
+                max_money: budget,
+            }
+        }
+    };
+
+    let report = engine.search(&SearchRequest { mode, model: model.clone() })?;
 
     println!(
-        "\nswept counts 2..{max_count}; {} candidates scored; frontier size {}",
+        "\n{} candidates scored; frontier size {}; {} pools pruned",
         report.scored,
-        report.pool.len()
+        report.pool.len(),
+        report.pruned_pools
     );
 
     // The Fig. 7 "optimal line": throughput vs money along the frontier.

@@ -31,13 +31,7 @@ fn main() -> astra::Result<()> {
     let registry = ModelRegistry::builtin();
     let model = registry.get(args.get("model").unwrap())?.clone();
     let total = args.get_usize("gpus")?;
-    let mut caps = Vec::new();
-    for part in args.get("hetero").unwrap().split(',') {
-        let (name, cap) = part
-            .split_once(':')
-            .ok_or_else(|| astra::AstraError::Config(format!("bad spec '{part}'")))?;
-        caps.push((catalog.find(name)?, cap.parse::<usize>().unwrap()));
-    }
+    let caps = catalog.parse_caps(args.get("hetero").unwrap())?;
 
     println!(
         "Heterogeneous search: {} on {total} GPUs, caps {:?} (Eq. 2)",

@@ -1,0 +1,107 @@
+"""Price-book loader — python mirror of ``rust/src/pricing/mod.rs``.
+
+Reads the same ``data/price_book.json`` rate card the rust search engine
+uses for the money-saving modes, so offline tooling (GBDT training-set
+cost labels, notebook analyses) prices pools identically to the serving
+path. The semantics MUST stay in lockstep with the rust side:
+
+* entries key by GPU *name*, sorted, duplicates replaced on upsert;
+* effective rate = (spot if ``use_spot`` else on-demand) × the
+  time-of-day multiplier of ``hour`` (flat ``1.0`` when unset);
+* missing ``spot_per_hour`` defaults to the on-demand rate; missing
+  ``tod_multipliers`` default to 24×1.0.
+
+``python/tests/test_pricing.py`` pins the file against ``hw_profile.json``
+(every GPU priced, on-demand matching the catalog's ``price_per_hour``).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass, field
+
+_BOOK_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "data",
+    "price_book.json",
+)
+
+
+@dataclass
+class PriceEntry:
+    gpu: str
+    on_demand_per_hour: float
+    spot_per_hour: float
+
+
+@dataclass
+class PriceBook:
+    entries: list[PriceEntry] = field(default_factory=list)
+    tod_multipliers: list[float] = field(default_factory=lambda: [1.0] * 24)
+    use_spot: bool = False
+    hour: int | None = None
+
+    def get(self, gpu_name: str) -> PriceEntry | None:
+        for e in self.entries:
+            if e.gpu == gpu_name:
+                return e
+        return None
+
+    def tod_multiplier(self) -> float:
+        # Rust does `get(h).unwrap_or(1.0)`: out-of-range hours price flat
+        # (no python negative-index wraparound, no IndexError).
+        if self.hour is None or not 0 <= self.hour < len(self.tod_multipliers):
+            return 1.0
+        return self.tod_multipliers[self.hour]
+
+    def rate_per_hour(self, gpu_name: str) -> float | None:
+        e = self.get(gpu_name)
+        if e is None:
+            return None
+        base = e.spot_per_hour if self.use_spot else e.on_demand_per_hour
+        return base * self.tod_multiplier()
+
+    def rate_per_second(self, gpu_name: str) -> float | None:
+        r = self.rate_per_hour(gpu_name)
+        return None if r is None else r / 3600.0
+
+    def validate(self) -> None:
+        # Mirrors the rust `PriceBook::validate`: rates must be finite and
+        # positive (json.load happily parses `Infinity`/`NaN`), spot ≤
+        # on-demand, exactly 24 positive finite multipliers, hour in range.
+        for e in self.entries:
+            if not (math.isfinite(e.on_demand_per_hour) and e.on_demand_per_hour > 0.0):
+                raise ValueError(f"{e.gpu}: bad on-demand rate {e.on_demand_per_hour}")
+            if not (math.isfinite(e.spot_per_hour) and e.spot_per_hour > 0.0):
+                raise ValueError(f"{e.gpu}: bad spot rate {e.spot_per_hour}")
+            if e.spot_per_hour > e.on_demand_per_hour:
+                raise ValueError(f"{e.gpu}: spot rate exceeds on-demand")
+        if len(self.tod_multipliers) != 24:
+            raise ValueError(f"{len(self.tod_multipliers)} tod multipliers (need 24)")
+        if any(not (math.isfinite(m) and m > 0.0) for m in self.tod_multipliers):
+            raise ValueError("non-positive tod multiplier")
+        if self.hour is not None and not 0 <= self.hour < 24:
+            raise ValueError(f"hour {self.hour} out of range")
+
+
+def load_price_book(path: str = _BOOK_PATH) -> PriceBook:
+    """Load ``data/price_book.json`` (the rust side reads the same file)."""
+    with open(path) as f:
+        raw = json.load(f)
+    book = PriceBook()
+    for g in raw["gpus"]:
+        on_demand = float(g["on_demand_per_hour"])
+        book.entries.append(
+            PriceEntry(
+                gpu=g["name"],
+                on_demand_per_hour=on_demand,
+                spot_per_hour=float(g.get("spot_per_hour", on_demand)),
+            )
+        )
+    book.entries.sort(key=lambda e: e.gpu)
+    if "tod_multipliers" in raw:
+        book.tod_multipliers = [float(m) for m in raw["tod_multipliers"]]
+    book.validate()
+    return book

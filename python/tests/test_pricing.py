@@ -1,0 +1,71 @@
+"""Rust/python lockstep checks for the price book (``data/price_book.json``).
+
+The rust side pins the same file against ``PriceBook::builtin()`` in
+``rust/src/pricing/mod.rs::tests::json_matches_builtin``; here we pin the
+python loader's semantics and the cross-file contract with the hardware
+profile: every cataloged GPU is priced, and the on-demand rate equals the
+catalog's ``price_per_hour`` (so flat on-demand pricing reproduces the
+pre-book cost numbers bit-for-bit).
+"""
+
+import pytest
+
+from compile import effdata, pricing
+
+
+def test_book_loads_and_validates():
+    book = pricing.load_price_book()
+    assert len(book.entries) > 0
+    book.validate()
+    names = [e.gpu for e in book.entries]
+    assert names == sorted(names), "entries must be name-sorted"
+
+
+def test_every_catalog_gpu_priced_at_catalog_rate():
+    book = pricing.load_price_book()
+    profiles = effdata.load_profiles()
+    assert len(book.entries) == len(profiles)
+    for p in profiles:
+        e = book.get(p.name)
+        assert e is not None, f"{p.name} missing from the price book"
+        assert e.on_demand_per_hour == pytest.approx(p.price_per_hour, abs=0.0), (
+            f"{p.name}: book on-demand {e.on_demand_per_hour} != "
+            f"hw_profile price_per_hour {p.price_per_hour}"
+        )
+        assert e.spot_per_hour < e.on_demand_per_hour
+
+
+def test_rate_semantics_match_rust():
+    book = pricing.load_price_book()
+    # Flat on-demand.
+    assert book.rate_per_hour("a800") == pytest.approx(2.6)
+    assert book.rate_per_second("a800") == pytest.approx(2.6 / 3600.0)
+    # Spot billing.
+    book.use_spot = True
+    assert book.rate_per_hour("a800") == pytest.approx(1.04)
+    book.use_spot = False
+    # Time-of-day multiplier only applies when an hour is set.
+    book.tod_multipliers[3] = 0.5
+    assert book.rate_per_hour("a800") == pytest.approx(2.6)
+    book.hour = 3
+    assert book.rate_per_hour("a800") == pytest.approx(1.3)
+    # Unknown GPUs miss (rust falls back to the catalog there).
+    book.hour = None
+    assert book.rate_per_hour("b200") is None
+
+
+def test_validate_rejects_bad_books():
+    book = pricing.load_price_book()
+    book.tod_multipliers = book.tod_multipliers[:-1]
+    with pytest.raises(ValueError):
+        book.validate()
+
+    book = pricing.load_price_book()
+    book.hour = 24
+    with pytest.raises(ValueError):
+        book.validate()
+
+    book = pricing.load_price_book()
+    book.entries[0].spot_per_hour = book.entries[0].on_demand_per_hour * 2
+    with pytest.raises(ValueError):
+        book.validate()

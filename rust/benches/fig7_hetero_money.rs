@@ -1,0 +1,113 @@
+//! Fig. 7 extension — the heterogeneous "optimal line": Pareto frontier of
+//! throughput vs money over *mixed* GPU pools, and the branch-and-bound
+//! ablation (pruned vs unpruned search time, identical selections).
+//!
+//! The money-saving crossover the search exists for: h100s are the cheapest
+//! per effective FLOP here, a800s the cheapest per hour — under a tight
+//! budget the winning pool mixes them.
+
+use astra::bench_util::{section, Bench};
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::pareto::MoneyModel;
+use astra::pricing::PriceBook;
+use astra::report::Table;
+use astra::strategy::GpuPoolMode;
+
+fn engine(prune: bool, spot: bool) -> AstraEngine {
+    let mut book = PriceBook::builtin();
+    book.use_spot = spot;
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig {
+            money: MoneyModel { train_tokens: 1e9, book },
+            money_prune: prune,
+            ..Default::default()
+        },
+    )
+}
+
+fn main() {
+    let fast = std::env::var("ASTRA_BENCH_FAST").as_deref() == Ok("1");
+    let catalog = GpuCatalog::builtin();
+    let registry = ModelRegistry::builtin();
+    let model = registry.get("llama2-7b").unwrap().clone();
+    let cap = if fast { 16 } else { 64 };
+    let caps = vec![
+        (catalog.find("a800").unwrap(), cap),
+        (catalog.find("h100").unwrap(), cap),
+    ];
+
+    // Learn the cost scale from a free run, then pick a tight budget.
+    let free = engine(true, false)
+        .search(&SearchRequest {
+            mode: GpuPoolMode::HeteroCost { caps: caps.clone(), max_money: f64::INFINITY },
+            model: model.clone(),
+        })
+        .unwrap();
+    assert!(free.pool.is_valid_frontier(), "frontier invariant violated");
+    let cheap = free.pool.entries().last().unwrap().cost;
+    let budget = cheap * 1.2;
+
+    section("hetero money frontier (free budget)");
+    let mut t = Table::new(&["tokens/s", "run cost USD"]);
+    for e in free.pool.entries() {
+        t.row(&[format!("{:.0}", e.throughput), format!("{:.2}", e.cost)]);
+    }
+    std::fs::create_dir_all("bench_out").ok();
+    t.emit(
+        &format!("Fig. 7 hetero — optimal line, llama2-7b on ≤{cap}×a800 + ≤{cap}×h100, 1e9 tokens"),
+        Some(std::path::Path::new("bench_out/fig7_hetero_money.csv")),
+    );
+
+    section(&format!("branch-and-bound ablation (budget ${budget:.0})"));
+    let mut b = Bench::new();
+    let req = |max_money: f64| SearchRequest {
+        mode: GpuPoolMode::HeteroCost { caps: caps.clone(), max_money },
+        model: model.clone(),
+    };
+    let pruned_eng = engine(true, false);
+    let unpruned_eng = engine(false, false);
+    let pruned = b.run("hetero-cost pruned", || pruned_eng.search(&req(budget)).unwrap());
+    let unpruned = b.run("hetero-cost unpruned", || unpruned_eng.search(&req(budget)).unwrap());
+
+    let rep_p = pruned_eng.search(&req(budget)).unwrap();
+    let rep_u = unpruned_eng.search(&req(budget)).unwrap();
+    println!(
+        "pruned: {} generated, {} pools skipped | unpruned: {} generated, {} skipped",
+        rep_p.generated, rep_p.pruned_pools, rep_u.generated, rep_u.pruned_pools
+    );
+    // Soundness: the budget-optimal pick is identical either way.
+    let pick = |r: &astra::coordinator::SearchReport| {
+        r.pool.best_within_budget(budget).map(|e| (e.throughput, e.cost))
+    };
+    let (pp, pu) = (pick(&rep_p), pick(&rep_u));
+    match (pp, pu) {
+        (Some((tp, cp)), Some((tu, cu))) => {
+            assert!(
+                (tp - tu).abs() < 1e-6 && (cp - cu).abs() < 1e-6,
+                "pruned pick ({tp:.1}, ${cp:.2}) != unpruned ({tu:.1}, ${cu:.2})"
+            );
+        }
+        (None, None) => {}
+        other => panic!("pruned/unpruned disagree on feasibility: {other:?}"),
+    }
+    println!(
+        "speedup from pruning: {:.2}× (mean {:.3}s → {:.3}s)",
+        unpruned.mean_secs() / pruned.mean_secs().max(1e-12),
+        unpruned.mean_secs(),
+        pruned.mean_secs()
+    );
+
+    section("spot vs on-demand selection");
+    let spot_rep = engine(true, true).search(&req(budget)).unwrap();
+    match (free.pool.best_within_budget(budget), spot_rep.pool.best_within_budget(budget)) {
+        (Some(od), Some(sp)) => println!(
+            "on-demand pick: {:.0} tok/s ${:.0} | spot pick: {:.0} tok/s ${:.0}",
+            od.throughput, od.cost, sp.throughput, sp.cost
+        ),
+        _ => println!("budget infeasible under one of the rate cards"),
+    }
+    std::fs::write("bench_out/fig7_hetero_money_bench.csv", b.csv()).ok();
+}

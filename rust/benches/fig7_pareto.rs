@@ -17,7 +17,7 @@ fn main() {
     let registry = ModelRegistry::builtin();
     let engine = AstraEngine::new(
         catalog.clone(),
-        EngineConfig { money: MoneyModel { train_tokens: 1e9 }, ..Default::default() },
+        EngineConfig { money: MoneyModel { train_tokens: 1e9, ..Default::default() }, ..Default::default() },
     );
 
     // Paper's search pools: H100, A800, H800.

@@ -31,11 +31,11 @@ use crate::gpu::GpuCatalog;
 use crate::hetero::HeteroSolver;
 use crate::memory::MemoryModel;
 use crate::model::ModelSpec;
-use crate::pareto::{MoneyModel, OptimalPool, PoolEntry};
+use crate::pareto::{DominancePruner, MoneyModel, OptimalPool, PoolEntry};
 use crate::pool::{default_workers, par_for_indices, par_map_chunks};
 use crate::rules::RuleSet;
 use crate::runtime::ScorerRuntime;
-use crate::strategy::{GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};
+use crate::strategy::{ClusterAssignment, GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};
 use crate::{AstraError, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -59,6 +59,10 @@ pub struct EngineConfig {
     pub money: MoneyModel,
     /// Exhaustive Eq. 23 layer enumeration instead of the pruned solver.
     pub hetero_exhaustive: bool,
+    /// Branch-and-bound pool pruning in the hetero-cost search (turn off
+    /// for the exhaustive differential reference; results are identical,
+    /// only the search time changes).
+    pub money_prune: bool,
     /// Keep this many best strategies in the report.
     pub top_k: usize,
 }
@@ -73,6 +77,7 @@ impl Default for EngineConfig {
             workers: default_workers(),
             money: MoneyModel::default(),
             hetero_exhaustive: false,
+            money_prune: true,
             top_k: 16,
         }
     }
@@ -112,7 +117,9 @@ impl SearchRequest {
         Ok(SearchRequest { mode: GpuPoolMode::Heterogeneous { total, caps: resolved }, model })
     }
 
-    /// Mode 3 (Eq. 3): count sweep under a money ceiling.
+    /// Mode 3 (Eq. 3): count sweep under a money ceiling. NaN and
+    /// non-positive budgets are recoverable [`AstraError::Config`]s, like
+    /// the unknown-GPU paths (`+inf` means "no ceiling" and is fine).
     pub fn cost(
         gpu_name: &str,
         max_count: usize,
@@ -121,9 +128,43 @@ impl SearchRequest {
     ) -> Result<SearchRequest> {
         let catalog = GpuCatalog::builtin();
         let gpu = catalog.find(gpu_name)?;
+        validate_budget(max_money)?;
         Ok(SearchRequest { mode: GpuPoolMode::Cost { gpu, max_count, max_money }, model })
     }
+
+    /// Heterogeneous money search: per-type caps (a map — duplicate names
+    /// merge by summation) swept under a money ceiling.
+    pub fn hetero_cost(
+        caps: &[(&str, usize)],
+        max_money: f64,
+        model: ModelSpec,
+    ) -> Result<SearchRequest> {
+        let catalog = GpuCatalog::builtin();
+        validate_budget(max_money)?;
+        let mut resolved: Vec<(crate::gpu::GpuType, usize)> = Vec::with_capacity(caps.len());
+        for &(name, cap) in caps {
+            resolved.push((catalog.find(name)?, cap));
+        }
+        let resolved = crate::strategy::merge_caps(resolved);
+        if resolved.iter().map(|&(_, c)| c).sum::<usize>() < 2 {
+            return Err(AstraError::Config("hetero-cost caps admit fewer than 2 GPUs".into()));
+        }
+        Ok(SearchRequest { mode: GpuPoolMode::HeteroCost { caps: resolved, max_money }, model })
+    }
 }
+
+/// Money ceilings must be positive and not NaN (`+inf` = unlimited). Shared
+/// by the request constructors, the wire parser and the engine dispatch so
+/// hand-built modes cannot smuggle a bad budget past validation.
+pub fn validate_budget(max_money: f64) -> Result<()> {
+    if max_money.is_nan() || max_money <= 0.0 {
+        return Err(AstraError::Config(format!(
+            "max_money must be a positive number of USD (got {max_money})"
+        )));
+    }
+    Ok(())
+}
+
 
 /// One scored strategy.
 #[derive(Debug, Clone)]
@@ -149,11 +190,15 @@ impl ScoredStrategy {
 /// Search outcome + phase accounting (Table 1 columns).
 #[derive(Debug, Clone)]
 pub struct SearchReport {
-    /// Raw search-space size |S| (Eq. 9).
+    /// Raw search-space size |S| (Eq. 9). Pools skipped by the hetero-cost
+    /// pruner never reach generation, so they are not counted here.
     pub generated: usize,
     pub rule_filtered: usize,
     pub mem_filtered: usize,
     pub scored: usize,
+    /// Candidate pools rejected by the hetero-cost branch-and-bound pruner
+    /// before strategy expansion (0 for the other modes).
+    pub pruned_pools: usize,
     /// Generation + filtering wall time ("Search Time").
     pub search_secs: f64,
     /// Scoring wall time ("Simulation Time").
@@ -242,6 +287,9 @@ impl ScoringCore {
             GpuPoolMode::Cost { gpu, max_count, max_money } => {
                 self.search_cost_with(&req.model, *gpu, *max_count, *max_money, rt)
             }
+            GpuPoolMode::HeteroCost { caps, max_money } => {
+                self.search_hetero_cost_with(&req.model, caps, *max_money, rt)
+            }
         }
     }
 
@@ -265,7 +313,7 @@ impl ScoringCore {
         let t0 = Instant::now();
         let space = SearchSpace::new(self.config.space.clone());
         let generated = space.homogeneous(model, &self.catalog, gpu, count);
-        self.filter_and_score(model, generated, t0, rt)
+        self.filter_and_score(model, generated, t0, None, rt)
     }
 
     /// Mode 2 (Eq. 2): heterogeneous pipeline partition search (§3.4).
@@ -286,19 +334,45 @@ impl ScoringCore {
         rt: Option<&Mutex<ScorerRuntime>>,
     ) -> Result<SearchReport> {
         let t0 = Instant::now();
+        // Canonicalize caps as a per-type map here, not just in the named
+        // constructor: hand-built modes with split duplicate entries must
+        // see the same budgets the fingerprint hashes, or the result cache
+        // would conflate genuinely different searches.
+        let caps = crate::strategy::merge_caps(caps.iter().copied());
         if caps.iter().map(|&(_, l)| l).sum::<usize>() < total {
             return Err(AstraError::Config(format!(
                 "type caps sum below cluster size {total}"
             )));
         }
-        let space = SearchSpace::new(SpaceConfig {
-            // Interleaving over heterogeneous segments is not supported by
-            // the Megatron runtime; fix vpp=1 (DESIGN.md §6).
-            vpp_candidates: vec![1],
-            ..self.config.space.clone()
-        });
+        let space = self.hetero_space();
         let solver = HeteroSolver::default();
         let mut generated: Vec<ParallelStrategy> = Vec::new();
+        self.generate_hetero_pools(model, total, &caps, &space, &solver, |_, _, _| true, &mut generated);
+        self.filter_and_score(model, generated, t0, None, rt)
+    }
+
+    /// Search space used by the heterogeneous paths: interleaving over
+    /// heterogeneous segments is not supported by the Megatron runtime, so
+    /// vpp is fixed to 1 (DESIGN.md §6).
+    fn hetero_space(&self) -> SearchSpace {
+        SearchSpace::new(SpaceConfig { vpp_candidates: vec![1], ..self.config.space.clone() })
+    }
+
+    /// Mode-2-style enumeration for one fixed cluster size: tp × pp × dp
+    /// splits × segment/layer assignments from the [`HeteroSolver`].
+    /// `admit` sees each candidate pool `(assignment, tp, dp)` before
+    /// parameter expansion — the hetero-cost pruner hooks in there; mode 2
+    /// admits everything.
+    fn generate_hetero_pools(
+        &self,
+        model: &ModelSpec,
+        total: usize,
+        caps: &[(crate::gpu::GpuType, usize)],
+        space: &SearchSpace,
+        solver: &HeteroSolver,
+        mut admit: impl FnMut(&ClusterAssignment, usize, usize) -> bool,
+        out: &mut Vec<ParallelStrategy>,
+    ) {
         for tp in space.valid_tps(model, &self.catalog) {
             for pp in 2..=space.config.max_pp.min(model.layers).min(total / tp) {
                 if total % (tp * pp) != 0 {
@@ -309,17 +383,16 @@ impl ScoringCore {
                 if budgets.iter().map(|b| b.max_stages).sum::<usize>() < pp {
                     continue;
                 }
-                let assignments = if self.config.hetero_exhaustive {
-                    solver.enumerate_exhaustive(model.layers, pp, &budgets)
-                } else {
-                    solver.enumerate_pruned(model.layers, pp, &budgets)
-                };
+                let assignments =
+                    solver.enumerate(model.layers, pp, &budgets, self.config.hetero_exhaustive);
                 for ca in assignments {
-                    space.expand_params(model, &ca, tp, dp, &mut generated);
+                    if !admit(&ca, tp, dp) {
+                        continue;
+                    }
+                    space.expand_params(model, &ca, tp, dp, out);
                 }
             }
         }
-        self.filter_and_score(model, generated, t0, rt)
     }
 
     /// Mode 3 (Eq. 3): sweep GPU counts, Pareto-pool everything, pick the
@@ -343,37 +416,151 @@ impl ScoringCore {
         rt: Option<&Mutex<ScorerRuntime>>,
     ) -> Result<SearchReport> {
         let t0 = Instant::now();
+        validate_budget(max_money)?;
         let space = SearchSpace::new(self.config.space.clone());
         let mut generated: Vec<ParallelStrategy> = Vec::new();
         for count in SearchSpace::count_sweep(max_count) {
             generated.extend(space.homogeneous(model, &self.catalog, gpu, count));
         }
-        let mut report = self.filter_and_score(model, generated, t0, rt)?;
-        // Mode-3 selection: fastest within budget from the optimal pool.
-        if let Some(best) = report.pool.best_within_budget(max_money) {
-            let chosen = report
-                .top
-                .iter()
-                .position(|s| (s.money_usd - best.cost).abs() < 1e-9
-                    && (s.cost.tokens_per_s - best.throughput).abs() < 1e-6);
-            if let Some(pos) = chosen {
-                report.top.swap(0, pos);
-            }
-        }
-        Ok(report)
+        self.filter_and_score(model, generated, t0, Some(max_money), rt)
     }
 
-    /// Shared tail: rules → memory → scoring → ranking.
+    /// Heterogeneous money search (§3.6 fused with §3.4): sweep mixed-type
+    /// cluster sizes under per-type caps, price every candidate per type
+    /// per hour through the [`crate::pricing::PriceBook`], and select the
+    /// fastest plan under the money ceiling. A branch-and-bound pruner
+    /// ([`DominancePruner`]) skips whole pools whose bounds prove them
+    /// over-budget or dominated before any strategy is expanded.
+    pub fn search_hetero_cost(
+        &self,
+        model: &ModelSpec,
+        caps: &[(crate::gpu::GpuType, usize)],
+        max_money: f64,
+    ) -> Result<SearchReport> {
+        self.search_hetero_cost_with(model, caps, max_money, None)
+    }
+
+    fn search_hetero_cost_with(
+        &self,
+        model: &ModelSpec,
+        caps: &[(crate::gpu::GpuType, usize)],
+        max_money: f64,
+        rt: Option<&Mutex<ScorerRuntime>>,
+    ) -> Result<SearchReport> {
+        validate_budget(max_money)?;
+        // Same per-type-map canonicalization as the fingerprint (see the
+        // mode-2 path above) — duplicate entries merge by summation.
+        let caps = crate::strategy::merge_caps(caps.iter().copied());
+        let cap_sum: usize = caps.iter().map(|&(_, c)| c).sum();
+        if caps.is_empty() || cap_sum < 2 {
+            return Err(AstraError::Config("hetero-cost caps admit fewer than 2 GPUs".into()));
+        }
+        self.searches.fetch_add(1, Ordering::Relaxed);
+        let space = self.hetero_space();
+        let solver = HeteroSolver::default();
+        let money = &self.config.money;
+        let prune = self.config.money_prune;
+        let mut pruner = DominancePruner::new(max_money);
+        // Power-of-two sweep plus the full pool when it is not a power of
+        // two (callers stating exact caps expect the whole pool tried).
+        let mut totals = SearchSpace::count_sweep(cap_sum);
+        if totals.last() != Some(&cap_sum) {
+            totals.push(cap_sum);
+        }
+        let mut n_generated = 0usize;
+        let mut rule_filtered = 0usize;
+        let mut mem_filtered = 0usize;
+        let mut search_secs = 0.0f64;
+        let mut simulate_secs = 0.0f64;
+        let mut scored_all: Vec<ScoredStrategy> = Vec::new();
+        // One sweep round per cluster size: earlier rounds' scored points
+        // feed the pruner's dominance frontier for later rounds.
+        for total in totals {
+            let tgen = Instant::now();
+            let mut generated: Vec<ParallelStrategy> = Vec::new();
+            self.generate_hetero_pools(
+                model,
+                total,
+                &caps,
+                &space,
+                &solver,
+                |ca, tp, dp| {
+                    if !prune {
+                        return true;
+                    }
+                    let (ub_tput, lb_usd) =
+                        money.pool_bounds(model, &ca.gpus_by_type(tp, dp), &self.catalog);
+                    pruner.admit(ub_tput, lb_usd)
+                },
+                &mut generated,
+            );
+            let gen_secs = tgen.elapsed().as_secs_f64();
+            n_generated += generated.len();
+            let (rf, mf, scored, filter_secs, score_secs) =
+                self.score_candidates(model, generated, rt)?;
+            rule_filtered += rf;
+            mem_filtered += mf;
+            search_secs += gen_secs + filter_secs;
+            simulate_secs += score_secs;
+            for s in &scored {
+                pruner.observe(s.cost.tokens_per_s, s.money_usd);
+            }
+            scored_all.extend(scored);
+        }
+        Ok(self.assemble_report(
+            n_generated,
+            rule_filtered,
+            mem_filtered,
+            pruner.pruned(),
+            search_secs,
+            simulate_secs,
+            Some(max_money),
+            scored_all,
+        ))
+    }
+
+    /// Shared tail: rules → memory → scoring → ranking (bumps the search
+    /// counter and assembles the report; `t0` anchors "Search Time";
+    /// `budget` triggers the mode-3 within-budget promotion).
     fn filter_and_score(
         &self,
         model: &ModelSpec,
         generated: Vec<ParallelStrategy>,
         t0: Instant,
+        budget: Option<f64>,
         rt: Option<&Mutex<ScorerRuntime>>,
     ) -> Result<SearchReport> {
         self.searches.fetch_add(1, Ordering::Relaxed);
         let n_generated = generated.len();
+        let t_call = Instant::now();
+        let (rule_filtered, mem_filtered, scored, filter_secs, simulate_secs) =
+            self.score_candidates(model, generated, rt)?;
+        let search_secs = t_call.duration_since(t0).as_secs_f64() + filter_secs;
+        Ok(self.assemble_report(
+            n_generated,
+            rule_filtered,
+            mem_filtered,
+            0,
+            search_secs,
+            simulate_secs,
+            budget,
+            scored,
+        ))
+    }
+
+    /// Filter + score one candidate batch without touching counters or
+    /// assembling a report (the hetero-cost sweep calls this once per
+    /// round). Returns `(rule_filtered, mem_filtered, scored strategies,
+    /// filter wall secs, scoring wall secs)`.
+    fn score_candidates(
+        &self,
+        model: &ModelSpec,
+        generated: Vec<ParallelStrategy>,
+        rt: Option<&Mutex<ScorerRuntime>>,
+    ) -> Result<(usize, usize, Vec<ScoredStrategy>, f64, f64)> {
+        let n_generated = generated.len();
         let workers = self.config.workers;
+        let t0 = Instant::now();
 
         // --- rule filter (Eq. 10) ---
         let rules = &self.config.rules;
@@ -399,7 +586,7 @@ impl ScoringCore {
             .filter_map(|(s, &keep)| keep.then_some(s))
             .collect();
         let mem_filtered = n_generated - rule_filtered - valid.len();
-        let search_secs = t0.elapsed().as_secs_f64();
+        let filter_secs = t0.elapsed().as_secs_f64();
 
         // --- cost simulation (§3.5) ---
         let t1 = Instant::now();
@@ -421,9 +608,9 @@ impl ScoringCore {
         };
         let simulate_secs = t1.elapsed().as_secs_f64();
 
-        // --- selection ---
+        // --- pricing (Eq. 32) ---
         let money = &self.config.money;
-        let mut scored: Vec<ScoredStrategy> = valid
+        let scored: Vec<ScoredStrategy> = valid
             .into_iter()
             .zip(costs)
             .map(|(strategy, cost)| {
@@ -431,6 +618,25 @@ impl ScoringCore {
                 ScoredStrategy { strategy, cost, money_usd }
             })
             .collect();
+        Ok((rule_filtered, mem_filtered, scored, filter_secs, simulate_secs))
+    }
+
+    /// Pool construction + ranking tail shared by every mode. With a
+    /// `budget`, the fastest within-budget plan is promoted to `top[0]`
+    /// (Eq. 33 selection) *before* truncation, so the pick survives even
+    /// when `top_k` faster-but-over-budget plans exist.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble_report(
+        &self,
+        generated: usize,
+        rule_filtered: usize,
+        mem_filtered: usize,
+        pruned_pools: usize,
+        search_secs: f64,
+        simulate_secs: f64,
+        budget: Option<f64>,
+        mut scored: Vec<ScoredStrategy>,
+    ) -> SearchReport {
         let pool = OptimalPool::build(
             scored
                 .iter()
@@ -444,18 +650,29 @@ impl ScoringCore {
         );
         let n_scored = scored.len();
         scored.sort_by(|a, b| a.cost.step_time.partial_cmp(&b.cost.step_time).unwrap());
+        if let Some(b) = budget {
+            // Step-time ascending is throughput descending (tokens/step is
+            // fixed per model), so the first within-budget entry is the
+            // fastest affordable plan.
+            if let Some(pos) = scored.iter().position(|s| s.money_usd <= b) {
+                if pos > 0 {
+                    let pick = scored.remove(pos);
+                    scored.insert(0, pick);
+                }
+            }
+        }
         scored.truncate(self.config.top_k);
-
-        Ok(SearchReport {
-            generated: n_generated,
+        SearchReport {
+            generated,
             rule_filtered,
             mem_filtered,
             scored: n_scored,
+            pruned_pools,
             search_secs,
             simulate_secs,
             top: scored,
             pool,
-        })
+        }
     }
 
     /// Score through the PJRT executable, chunked to the artifact's batch.
@@ -584,6 +801,16 @@ impl AstraEngine {
         max_money: f64,
     ) -> Result<SearchReport> {
         self.core.search_cost_with(model, gpu, max_count, max_money, self.runtime.as_ref())
+    }
+
+    /// Heterogeneous money search (mode 3 over mixed pools).
+    pub fn search_hetero_cost(
+        &self,
+        model: &ModelSpec,
+        caps: &[(crate::gpu::GpuType, usize)],
+        max_money: f64,
+    ) -> Result<SearchReport> {
+        self.core.search_hetero_cost_with(model, caps, max_money, self.runtime.as_ref())
     }
 }
 
@@ -715,6 +942,145 @@ mod tests {
         let best = tputs[0];
         let median = tputs[tputs.len() / 2];
         assert!(best > 1.1 * median, "best {best:.0} vs median {median:.0}");
+    }
+
+    #[test]
+    fn bad_budgets_are_recoverable_errors() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        for bad in [f64::NAN, 0.0, -1.0, f64::NEG_INFINITY] {
+            assert!(
+                SearchRequest::cost("a800", 64, bad, model.clone()).is_err(),
+                "cost accepted budget {bad}"
+            );
+            assert!(
+                SearchRequest::hetero_cost(&[("a800", 16)], bad, model.clone()).is_err(),
+                "hetero_cost accepted budget {bad}"
+            );
+        }
+        // +inf means "no ceiling" and must keep working.
+        assert!(SearchRequest::cost("a800", 64, f64::INFINITY, model.clone()).is_ok());
+        // Hand-built modes cannot smuggle a bad budget past the engine.
+        let eng = engine();
+        let gpu = GpuCatalog::builtin().find("a800").unwrap();
+        let hand = SearchRequest {
+            mode: GpuPoolMode::Cost { gpu, max_count: 16, max_money: f64::NAN },
+            model,
+        };
+        assert!(eng.search(&hand).is_err());
+    }
+
+    /// Narrowed space so the hetero-cost tests stay fast in debug profile.
+    fn small_engine() -> AstraEngine {
+        let space = crate::strategy::SpaceConfig {
+            tp_candidates: vec![1, 2],
+            max_pp: 4,
+            mbs_candidates: vec![1, 2],
+            vpp_candidates: vec![1],
+            seq_parallel_options: vec![true],
+            dist_opt_options: vec![true],
+            offload_options: vec![false],
+            recompute_none: true,
+            recompute_selective: false,
+            recompute_full: false,
+            ..crate::strategy::SpaceConfig::default()
+        };
+        AstraEngine::new(
+            GpuCatalog::builtin(),
+            EngineConfig { use_forests: false, space, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn hetero_cost_search_prices_mixed_pools() {
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let caps = [("a800", 16usize), ("h100", 16usize)];
+        let req =
+            SearchRequest::hetero_cost(&caps, f64::INFINITY, model.clone()).unwrap();
+        let rep = small_engine().search(&req).unwrap();
+        assert!(rep.scored > 0, "no valid hetero-cost strategies");
+        assert!(!rep.pool.is_empty());
+        assert!(rep.pool.is_valid_frontier());
+        // Mixed assignments survive into the ranking, and every plan's
+        // per-type usage respects the caps.
+        assert!(rep.top.iter().any(|s| s.strategy.cluster.is_heterogeneous()));
+        let by_name: Vec<(crate::gpu::GpuType, usize)> =
+            caps.iter().map(|&(n, c)| (cat.find(n).unwrap(), c)).collect();
+        for s in &rep.top {
+            s.strategy.validate(&model).unwrap();
+            for (g, n) in s.strategy.cluster.gpus_by_type(s.strategy.tp, s.strategy.dp) {
+                let cap = by_name
+                    .iter()
+                    .find(|&&(t, _)| t == g)
+                    .unwrap_or_else(|| panic!("unexpected type {g}"))
+                    .1;
+                assert!(n <= cap, "type {g} uses {n} > cap {cap}");
+            }
+            assert!(s.money_usd.is_finite() && s.money_usd > 0.0);
+        }
+    }
+
+    #[test]
+    fn hand_built_duplicate_caps_merge_in_engine() {
+        // Split duplicate cap entries must see the same budgets the
+        // fingerprint hashes — otherwise the service cache would conflate
+        // genuinely different searches.
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let cat = GpuCatalog::builtin();
+        let a800 = cat.find("a800").unwrap();
+        let h100 = cat.find("h100").unwrap();
+        let eng = small_engine();
+        let search = |caps: Vec<(crate::gpu::GpuType, usize)>| {
+            eng.search(&SearchRequest {
+                mode: GpuPoolMode::HeteroCost { caps, max_money: f64::INFINITY },
+                model: model.clone(),
+            })
+            .unwrap()
+        };
+        let split = search(vec![(a800, 4), (h100, 8), (a800, 4)]);
+        let merged = search(vec![(a800, 8), (h100, 8)]);
+        assert_eq!(split.generated, merged.generated);
+        assert_eq!(split.pool.len(), merged.pool.len());
+        for (x, y) in split.pool.entries().iter().zip(merged.pool.entries()) {
+            assert!(
+                (x.throughput - y.throughput).abs() < 1e-9 && (x.cost - y.cost).abs() < 1e-9,
+                "split/merged caps diverged: {x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_cost_budget_prunes_and_still_selects_within_budget() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let eng = small_engine();
+        // v100s are ~3× pricier per effective FLOP than h100s here, so a
+        // budget near the frontier's cheap end provably strands the
+        // v100-heavy pools above their lower bound.
+        let caps = [("a800", 8usize), ("h100", 8usize), ("v100", 8usize)];
+        // First pass without a ceiling to learn the cost scale.
+        let free = eng
+            .search(&SearchRequest::hetero_cost(&caps, f64::INFINITY, model.clone()).unwrap())
+            .unwrap();
+        assert!(!free.pool.is_empty());
+        let cheap = free.pool.entries().last().unwrap().cost;
+        let budget = cheap * 1.05;
+        let tight = eng
+            .search(&SearchRequest::hetero_cost(&caps, budget, model).unwrap())
+            .unwrap();
+        // The ceiling must actually cut the space…
+        assert!(tight.pruned_pools > 0, "tight budget pruned nothing");
+        assert!(tight.generated < free.generated, "pruning generated no savings");
+        // …and the selected plan must respect it.
+        let pick = tight.best().expect("no plan under budget");
+        assert!(
+            pick.money_usd <= budget * (1.0 + 1e-9),
+            "pick ${} > budget ${budget}",
+            pick.money_usd
+        );
     }
 
     #[test]

@@ -203,6 +203,26 @@ impl GpuCatalog {
             })
     }
 
+    /// Parse a `'type:cap,type:cap'` capacity spec (the CLI/example
+    /// `--hetero` format) into resolved per-type caps. Duplicate names
+    /// merge by summation, matching the engine/fingerprint
+    /// canonicalization ([`crate::strategy::merge_caps`]).
+    pub fn parse_caps(&self, spec: &str) -> Result<Vec<(GpuType, usize)>> {
+        let mut caps = Vec::new();
+        for part in spec.split(',') {
+            let (name, cap) = part
+                .split_once(':')
+                .ok_or_else(|| AstraError::Config(format!("bad hetero spec '{part}'")))?;
+            caps.push((
+                self.find(name.trim())?,
+                cap.trim()
+                    .parse::<usize>()
+                    .map_err(|_| AstraError::Config(format!("bad cap '{cap}'")))?,
+            ));
+        }
+        Ok(crate::strategy::merge_caps(caps))
+    }
+
     /// Effective per-GPU bandwidth for a communication group that spans
     /// `group` ranks laid out contiguously: NVLink when the whole group fits
     /// in one node, inter-node fabric otherwise.
@@ -271,6 +291,22 @@ mod tests {
         for (a, b) in from_file.all().iter().zip(builtin.all()) {
             assert_eq!(a, b, "spec mismatch for {}", a.name);
         }
+    }
+
+    #[test]
+    fn caps_spec_parsing() {
+        let c = GpuCatalog::builtin();
+        let a800 = c.find("a800").unwrap();
+        let h100 = c.find("h100").unwrap();
+        assert_eq!(
+            c.parse_caps("a800:48, h100:16").unwrap(),
+            vec![(a800, 48), (h100, 16)]
+        );
+        // Duplicate names merge like the engine/fingerprint canonical form.
+        assert_eq!(c.parse_caps("a800:8,a800:8").unwrap(), vec![(a800, 16)]);
+        assert!(c.parse_caps("a800").is_err(), "missing colon");
+        assert!(c.parse_caps("a800:lots").is_err(), "non-numeric cap");
+        assert!(c.parse_caps("b200:8").is_err(), "unknown GPU");
     }
 
     #[test]

@@ -121,6 +121,22 @@ impl HeteroSolver {
         out
     }
 
+    /// Dispatch between the exhaustive Eq. 23 enumeration and the pruned
+    /// variant (the coordinator's `hetero_exhaustive` knob).
+    pub fn enumerate(
+        &self,
+        layers: usize,
+        pp: usize,
+        budgets: &[TypeBudget],
+        exhaustive: bool,
+    ) -> Vec<ClusterAssignment> {
+        if exhaustive {
+            self.enumerate_exhaustive(layers, pp, budgets)
+        } else {
+            self.enumerate_pruned(layers, pp, budgets)
+        }
+    }
+
     /// Exhaustive Eq. 23 enumeration: every ordering × composition × layer
     /// assignment with `Σ m_i·n_i = N`, `n_i ≥ 1`.
     pub fn enumerate_exhaustive(

@@ -88,6 +88,7 @@ pub mod memory;
 pub mod model;
 pub mod pareto;
 pub mod pool;
+pub mod pricing;
 pub mod prng;
 pub mod report;
 pub mod rules;
@@ -110,7 +111,8 @@ pub mod prelude {
     pub use crate::hetero::HeteroSolver;
     pub use crate::memory::MemoryModel;
     pub use crate::model::{ModelRegistry, ModelSpec};
-    pub use crate::pareto::{MoneyModel, OptimalPool};
+    pub use crate::pareto::{DominancePruner, MoneyModel, OptimalPool};
+    pub use crate::pricing::{PriceBook, PriceEntry};
     pub use crate::rules::RuleSet;
     pub use crate::simulator::{PipelineSimulator, SimConfig};
     pub use crate::strategy::{GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};

@@ -1,12 +1,15 @@
 //! `astra` CLI — the Layer-3 entry point.
 //!
 //! Subcommands:
-//!   search    run a strategy search (mode 1/2/3 per §3.2)
-//!   simulate  replay one strategy on the discrete-event simulator
-//!   validate  cost model vs simulator accuracy over top-k strategies
-//!   serve     long-running search service (stdin or TCP, JSON lines)
-//!   batch     score a file of JSON requests through the admission queue
-//!   info      print the GPU catalog and model registry
+//!   search       run a strategy search (mode 1/2/3 per §3.2)
+//!   hetero-cost  heterogeneous money search: sweep mixed pools under
+//!                per-type caps and a budget, print the (tokens/s, USD)
+//!                Pareto frontier and the within-budget pick
+//!   simulate     replay one strategy on the discrete-event simulator
+//!   validate     cost model vs simulator accuracy over top-k strategies
+//!   serve        long-running search service (stdin or TCP, JSON lines)
+//!   batch        score a file of JSON requests through the admission queue
+//!   info         print the GPU catalog and model registry
 
 use astra::cli::Cli;
 use astra::coordinator::{AstraEngine, EngineConfig, ScoringCore, ScoringEngine, SearchRequest};
@@ -27,13 +30,14 @@ fn main() {
         "astra",
         "automatic parallel-strategy search on homogeneous and heterogeneous GPUs",
     )
-    .positional("command", "search | simulate | validate | serve | batch | info")
+    .positional("command", "search | hetero-cost | simulate | validate | serve | batch | info")
     .opt("model", "model name (see `astra info`)", Some("llama2-7b"))
     .opt("gpu", "GPU type for homogeneous/cost modes", Some("a800"))
     .opt("gpus", "cluster GPU count", Some("64"))
-    .opt("mode", "homogeneous | heterogeneous | cost", Some("homogeneous"))
+    .opt("mode", "homogeneous | heterogeneous | cost | hetero-cost", Some("homogeneous"))
     .opt("hetero", "hetero caps, e.g. 'a800:2048,h100:7168'", None)
-    .opt("max-money", "money ceiling in USD (cost mode)", None)
+    .opt("max-money", "money ceiling in USD (cost modes)", None)
+    .opt("price-book", "rate card JSON (default: builtin data/price_book.json card)", None)
     .opt("train-tokens", "token budget used for pricing", Some("1e9"))
     .opt("engine", "native | hlo", Some("native"))
     .opt("rules", "path to a rule file (defaults to the paper's rules)", None)
@@ -44,6 +48,8 @@ fn main() {
     .opt("cache-mb", "service cache byte budget (MiB)", Some("256"))
     .opt("cache-ttl-secs", "service cache TTL in seconds (0 = none)", Some("0"))
     .flag("exhaustive", "exhaustive Eq.23 layer enumeration (hetero)")
+    .flag("spot", "bill at spot rates instead of on-demand")
+    .flag("no-prune", "disable branch-and-bound pool pruning (hetero-cost)")
     .flag("no-forest", "use analytic η instead of the trained GBDT")
     .flag("verbose", "debug logging");
     let args = cli.parse();
@@ -69,12 +75,18 @@ fn build_config(args: &astra::cli::Args) -> astra::Result<EngineConfig> {
         "hlo" => ScoringEngine::Hlo,
         _ => ScoringEngine::Native,
     };
+    let mut book = match args.get("price-book") {
+        Some(path) => astra::pricing::PriceBook::from_file(std::path::Path::new(path))?,
+        None => astra::pricing::PriceBook::builtin(),
+    };
+    book.use_spot = args.flag("spot");
     Ok(EngineConfig {
         rules,
         engine: engine_kind,
         use_forests: !args.flag("no-forest"),
         hetero_exhaustive: args.flag("exhaustive"),
-        money: MoneyModel { train_tokens: args.get_f64("train-tokens")? },
+        money_prune: !args.flag("no-prune"),
+        money: MoneyModel { train_tokens: args.get_f64("train-tokens")?, book },
         top_k: args.get_usize("top")?.max(5),
         ..Default::default()
     })
@@ -191,36 +203,38 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
 
     let model = registry.get(args.get("model").unwrap())?.clone();
     let count = args.get_usize("gpus")?;
-    let mode = match args.get("mode").unwrap() {
-        "homogeneous" => {
-            let gpu = catalog.find(args.get("gpu").unwrap())?;
-            GpuPoolMode::Homogeneous { gpu, count }
-        }
-        "heterogeneous" => {
-            let spec = args.get("hetero").ok_or_else(|| {
-                astra::AstraError::Config("--hetero 'type:cap,type:cap' required".into())
-            })?;
-            let mut caps = Vec::new();
-            for part in spec.split(',') {
-                let (name, cap) = part.split_once(':').ok_or_else(|| {
-                    astra::AstraError::Config(format!("bad hetero spec '{part}'"))
-                })?;
-                caps.push((
-                    catalog.find(name)?,
-                    cap.parse::<usize>().map_err(|_| {
-                        astra::AstraError::Config(format!("bad cap '{cap}'"))
-                    })?,
-                ));
+    let hetero_cost_mode = |args: &astra::cli::Args| -> astra::Result<GpuPoolMode> {
+        let spec = args.get("hetero").ok_or_else(|| {
+            astra::AstraError::Config("--hetero 'type:cap,type:cap' required".into())
+        })?;
+        let caps = catalog.parse_caps(spec)?;
+        let max_money = args.get_f64("max-money").unwrap_or(f64::INFINITY);
+        Ok(GpuPoolMode::HeteroCost { caps, max_money })
+    };
+    let mode = if command == "hetero-cost" {
+        hetero_cost_mode(args)?
+    } else {
+        match args.get("mode").unwrap() {
+            "homogeneous" => {
+                let gpu = catalog.find(args.get("gpu").unwrap())?;
+                GpuPoolMode::Homogeneous { gpu, count }
             }
-            GpuPoolMode::Heterogeneous { total: count, caps }
-        }
-        "cost" => {
-            let gpu = catalog.find(args.get("gpu").unwrap())?;
-            let max_money = args.get_f64("max-money").unwrap_or(f64::INFINITY);
-            GpuPoolMode::Cost { gpu, max_count: count, max_money }
-        }
-        other => {
-            return Err(astra::AstraError::Config(format!("unknown mode '{other}'")));
+            "heterogeneous" => {
+                let spec = args.get("hetero").ok_or_else(|| {
+                    astra::AstraError::Config("--hetero 'type:cap,type:cap' required".into())
+                })?;
+                let caps = catalog.parse_caps(spec)?;
+                GpuPoolMode::Heterogeneous { total: count, caps }
+            }
+            "cost" => {
+                let gpu = catalog.find(args.get("gpu").unwrap())?;
+                let max_money = args.get_f64("max-money").unwrap_or(f64::INFINITY);
+                GpuPoolMode::Cost { gpu, max_count: count, max_money }
+            }
+            "hetero-cost" => hetero_cost_mode(args)?,
+            other => {
+                return Err(astra::AstraError::Config(format!("unknown mode '{other}'")));
+            }
         }
     };
 
@@ -232,6 +246,60 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         "search" => {
             let report = engine.search(&req)?;
             print_report(&model.name, &report, args.get_usize("top")?);
+        }
+        "hetero-cost" => {
+            let report = engine.search(&req)?;
+            print_report(&model.name, &report, args.get_usize("top")?);
+            let max_money = match &req.mode {
+                GpuPoolMode::HeteroCost { max_money, .. } => *max_money,
+                _ => f64::INFINITY,
+            };
+            println!(
+                "pruned pools: {} (branch-and-bound{})",
+                report.pruned_pools,
+                if max_money.is_finite() { "" } else { ", no money ceiling" }
+            );
+            let mut t = Table::new(&["tokens/s", "run cost USD", "gpus", "within budget"]);
+            for e in report.pool.entries() {
+                // Frontier entries index the pre-ranking scored list; the
+                // per-entry GPU mix is recovered from the matching top
+                // strategy when it survived ranking.
+                let gpus = report
+                    .top
+                    .iter()
+                    .find(|s| {
+                        (s.money_usd - e.cost).abs() < 1e-9
+                            && (s.cost.tokens_per_s - e.throughput).abs() < 1e-6
+                    })
+                    .map(|s| {
+                        s.strategy
+                            .cluster
+                            .gpus_by_type(s.strategy.tp, s.strategy.dp)
+                            .iter()
+                            .map(|&(g, n)| format!("{}×{}", n, catalog.spec(g).name))
+                            .collect::<Vec<_>>()
+                            .join("+")
+                    })
+                    // Entries ranked out of `top` (beyond --top strategies)
+                    // have no recoverable mix; mark rather than blank.
+                    .unwrap_or_else(|| "(beyond top-k)".to_string());
+                t.row(&[
+                    format!("{:.0}", e.throughput),
+                    format!("{:.0}", e.cost),
+                    gpus,
+                    if e.cost <= max_money { "yes".into() } else { String::new() },
+                ]);
+            }
+            t.emit("Pareto frontier over mixed pools (tokens/s vs USD)", None);
+            match report.best() {
+                Some(best) if best.money_usd <= max_money => println!(
+                    "\nselected: {:.0} tokens/s for ${:.0} — {}",
+                    best.cost.tokens_per_s,
+                    best.money_usd,
+                    best.strategy.summary()
+                ),
+                _ => println!("\nno strategy fits the budget — raise it or relax the caps"),
+            }
         }
         "simulate" | "validate" => {
             let report = engine.search(&req)?;
@@ -252,7 +320,7 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         }
         other => {
             return Err(astra::AstraError::Config(format!(
-                "unknown command '{other}' (search | simulate | validate | serve | batch | info)"
+                "unknown command '{other}' (search | hetero-cost | simulate | validate | serve | batch | info)"
             )));
         }
     }

@@ -6,9 +6,19 @@
 //! clusters), and selects the highest-throughput strategy under a money
 //! ceiling using the Eq. 33 sort order.
 
-use crate::gpu::GpuCatalog;
+use crate::gpu::{GpuCatalog, GpuType};
 use crate::model::ModelSpec;
+use crate::pricing::PriceBook;
 use crate::strategy::ParallelStrategy;
+
+/// Safety margin on the branch-and-bound step-time lower bound. The census
+/// FLOPs are pinned to the closed-form model analytics (see
+/// `cost::ops::tests::census_flops_match_model_analytics`), so the ideal
+/// time `flops / Σ(count·peak·util_max)` is already a true lower bound
+/// under the cost model; the slack only absorbs f64 rounding and future
+/// census drift — pruning decisions stay sound even if the census gains a
+/// few percent of unaccounted work.
+pub const BOUND_SLACK: f64 = 0.97;
 
 /// Converts step time into a training bill.
 #[derive(Debug, Clone)]
@@ -17,11 +27,15 @@ pub struct MoneyModel {
     /// full training; we default to a 1B-token fine-tune-scale run so the
     /// numbers stay readable).
     pub train_tokens: f64,
+    /// Per-type rate card. GPU types the book does not list fall back to
+    /// the catalog's `price_per_hour`, which keeps hand-built catalogs and
+    /// the pre-book behavior working unchanged.
+    pub book: PriceBook,
 }
 
 impl Default for MoneyModel {
     fn default() -> Self {
-        MoneyModel { train_tokens: 1e9 }
+        MoneyModel { train_tokens: 1e9, book: PriceBook::builtin() }
     }
 }
 
@@ -36,6 +50,13 @@ impl MoneyModel {
         self.steps(m) * step_time
     }
 
+    /// Effective USD per GPU-second for a type: the book's rate when
+    /// listed, the catalog's otherwise.
+    pub fn rate_per_second(&self, gpu: GpuType, catalog: &GpuCatalog) -> f64 {
+        let spec = catalog.spec(gpu);
+        self.book.rate_per_second(&spec.name).unwrap_or_else(|| spec.price_per_second())
+    }
+
     /// Eq. 32: money cost in USD (per-type Σ count·fee·time for hetero).
     pub fn cost_usd(
         &self,
@@ -48,8 +69,102 @@ impl MoneyModel {
         s.cluster
             .gpus_by_type(s.tp, s.dp)
             .iter()
-            .map(|&(g, n)| t * n as f64 * catalog.spec(g).price_per_second())
+            .map(|&(g, n)| t * n as f64 * self.rate_per_second(g, catalog))
             .sum()
+    }
+
+    /// Branch-and-bound bounds for a candidate pool (per-type GPU counts):
+    /// `(upper-bound tokens/s, lower-bound USD)` over *every* strategy the
+    /// pool could run. The step-time lower bound is the ideal compute time
+    /// `model FLOPs / Σ(count·peak·util_max)` — no strategy under the cost
+    /// model can beat the pool's aggregate effective peak (comm, pipeline
+    /// bubble, recompute and optimizer work only add time).
+    pub fn pool_bounds(
+        &self,
+        m: &ModelSpec,
+        gpus: &[(GpuType, usize)],
+        catalog: &GpuCatalog,
+    ) -> (f64, f64) {
+        let eff_peak: f64 = gpus
+            .iter()
+            .map(|&(g, n)| {
+                let spec = catalog.spec(g);
+                n as f64 * spec.peak_flops() * spec.eff.util_max
+            })
+            .sum();
+        if eff_peak <= 0.0 {
+            return (0.0, f64::INFINITY);
+        }
+        let model_flops = 3.0 * crate::cost::ops::model_fwd_flops(m, m.global_batch);
+        let t_lb = BOUND_SLACK * model_flops / eff_peak;
+        let tokens = (m.global_batch * m.seq_len) as f64;
+        let rate: f64 =
+            gpus.iter().map(|&(g, n)| n as f64 * self.rate_per_second(g, catalog)).sum();
+        (tokens / t_lb, self.steps(m) * t_lb * rate)
+    }
+}
+
+/// Branch-and-bound dominance pruner for the heterogeneous money search
+/// (`GpuPoolMode::HeteroCost`). Candidate pools are admitted through their
+/// [`MoneyModel::pool_bounds`]: a pool whose *lower-bound* bill already
+/// exceeds the budget cannot contain a feasible plan, and a pool whose
+/// *upper-bound* throughput is dominated by an already-scored strategy
+/// (faster-or-equal AND cheaper-or-equal) cannot improve the frontier or
+/// the budget pick — both are skipped before strategy expansion, which is
+/// what keeps the enlarged mixed-type space within Table-1-class search
+/// times. Soundness: bounds are true bounds, so pruning never changes the
+/// budget-optimal `(throughput, cost)` (differential-tested against the
+/// unpruned reference).
+#[derive(Debug, Clone)]
+pub struct DominancePruner {
+    budget: f64,
+    /// Non-dominated `(throughput, cost)` points scored so far.
+    frontier: Vec<(f64, f64)>,
+    /// Pools rejected because their lower-bound bill exceeds the budget.
+    pub pruned_budget: usize,
+    /// Pools rejected as dominated by an already-scored strategy.
+    pub pruned_dominated: usize,
+}
+
+impl DominancePruner {
+    pub fn new(budget: f64) -> DominancePruner {
+        DominancePruner {
+            budget,
+            frontier: Vec::new(),
+            pruned_budget: 0,
+            pruned_dominated: 0,
+        }
+    }
+
+    /// Whether a pool with these bounds may still matter. Counts the
+    /// rejection reason when it does not.
+    pub fn admit(&mut self, ub_throughput: f64, lb_cost: f64) -> bool {
+        if lb_cost > self.budget {
+            self.pruned_budget += 1;
+            return false;
+        }
+        if self.frontier.iter().any(|&(p, c)| p >= ub_throughput && c <= lb_cost) {
+            self.pruned_dominated += 1;
+            return false;
+        }
+        true
+    }
+
+    /// Record a scored strategy (keeps the internal frontier minimal).
+    pub fn observe(&mut self, throughput: f64, cost: f64) {
+        if !(throughput.is_finite() && cost.is_finite()) {
+            return;
+        }
+        if self.frontier.iter().any(|&(p, c)| p >= throughput && c <= cost) {
+            return;
+        }
+        self.frontier.retain(|&(p, c)| !(throughput >= p && cost <= c));
+        self.frontier.push((throughput, cost));
+    }
+
+    /// Total pools rejected.
+    pub fn pruned(&self) -> usize {
+        self.pruned_budget + self.pruned_dominated
     }
 }
 
@@ -192,7 +307,69 @@ mod tests {
     fn money_model_steps() {
         let reg = crate::model::ModelRegistry::builtin();
         let m = reg.get("llama2-7b").unwrap(); // gbs 2048 × seq 4096 = 8.4M tokens/step
-        let mm = MoneyModel { train_tokens: 1e9 };
+        let mm = MoneyModel { train_tokens: 1e9, ..Default::default() };
         assert_eq!(mm.steps(m), (1e9f64 / (2048.0 * 4096.0)).ceil());
+    }
+
+    #[test]
+    fn book_rates_replace_catalog_scalar() {
+        use crate::gpu::GpuCatalog;
+        let cat = GpuCatalog::builtin();
+        let a800 = cat.find("a800").unwrap();
+        let mut mm = MoneyModel::default();
+        // Default book mirrors the catalog exactly.
+        assert!((mm.rate_per_second(a800, &cat) - cat.spec(a800).price_per_second()).abs() < 1e-15);
+        // Spot billing cuts the rate to the book's spot price.
+        mm.book.use_spot = true;
+        assert!((mm.rate_per_second(a800, &cat) - 1.04 / 3600.0).abs() < 1e-15);
+        // Types missing from the book fall back to the catalog.
+        mm.book = crate::pricing::PriceBook::empty();
+        assert_eq!(mm.rate_per_second(a800, &cat), cat.spec(a800).price_per_second());
+    }
+
+    #[test]
+    fn pool_bounds_scale_sanely() {
+        use crate::gpu::GpuCatalog;
+        let cat = GpuCatalog::builtin();
+        let reg = crate::model::ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let mm = MoneyModel::default();
+        let a800 = cat.find("a800").unwrap();
+        let h100 = cat.find("h100").unwrap();
+        let (ub_small, lb_small) = mm.pool_bounds(m, &[(a800, 8)], &cat);
+        let (ub_big, _lb_big) = mm.pool_bounds(m, &[(a800, 8), (h100, 8)], &cat);
+        assert!(ub_small > 0.0 && lb_small > 0.0);
+        assert!(ub_big > ub_small, "more silicon raises the throughput bound");
+        // Empty pools are never admissible bargains.
+        let (ub0, lb0) = mm.pool_bounds(m, &[], &cat);
+        assert_eq!(ub0, 0.0);
+        assert!(lb0.is_infinite());
+    }
+
+    #[test]
+    fn pruner_budget_and_dominance() {
+        let mut pr = DominancePruner::new(100.0);
+        assert!(pr.admit(1000.0, 50.0), "within budget, empty frontier");
+        assert!(!pr.admit(1000.0, 100.1), "lower bound above budget");
+        assert_eq!(pr.pruned_budget, 1);
+        pr.observe(500.0, 20.0);
+        assert!(!pr.admit(400.0, 30.0), "dominated: slower and pricier than scored");
+        assert_eq!(pr.pruned_dominated, 1);
+        assert!(pr.admit(600.0, 30.0), "faster upper bound survives");
+        assert!(pr.admit(400.0, 10.0), "cheaper lower bound survives");
+        assert_eq!(pr.pruned(), 2);
+        // Infinite budget never rejects on money.
+        let mut inf = DominancePruner::new(f64::INFINITY);
+        assert!(inf.admit(1.0, 1e30));
+    }
+
+    #[test]
+    fn pruner_frontier_stays_minimal() {
+        let mut pr = DominancePruner::new(f64::INFINITY);
+        pr.observe(100.0, 10.0);
+        pr.observe(90.0, 20.0); // dominated, dropped
+        pr.observe(200.0, 5.0); // dominates the first, replaces it
+        assert!(!pr.admit(150.0, 7.0), "dominated by (200, 5)");
+        assert!(pr.admit(250.0, 7.0));
     }
 }

@@ -1,0 +1,317 @@
+//! Price books: per-GPU-type cloud rates for the money-saving search.
+//!
+//! The paper's mode 3 (§3.6) prices a training run at a single fixed hourly
+//! fee per GPU. Real clusters are billed from a *rate card*: every GPU type
+//! has an on-demand rate and a (much cheaper, preemptible) spot rate, and
+//! some providers scale prices by time of day. [`PriceBook`] models that
+//! card and replaces the scalar `price_per_hour` lookup inside
+//! [`crate::pareto::MoneyModel`], which is what makes the heterogeneous
+//! money search ([`crate::strategy::GpuPoolMode::HeteroCost`]) meaningful:
+//! mixing cheap older GPUs with a few fast ones only pays off when each
+//! type is billed at its own rate.
+//!
+//! Like the hardware profile (`data/hw_profile.json` ↔
+//! [`crate::gpu::GpuCatalog`]), the book is loadable from
+//! `data/price_book.json` with a compiled-in default that must mirror the
+//! file value-for-value; `python/compile/pricing.py` reads the same file so
+//! the two languages stay in lockstep.
+
+use crate::json::Value;
+use crate::{AstraError, Result};
+
+/// Rates for one GPU type, USD per GPU-hour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriceEntry {
+    /// GPU name as in the catalog (`a800`, `h100`, …) — books key by name,
+    /// not index, so a reordered catalog cannot shuffle rates.
+    pub gpu: String,
+    pub on_demand_per_hour: f64,
+    /// Preemptible/spot rate; providers typically quote ~40% of on-demand.
+    pub spot_per_hour: f64,
+}
+
+/// A rate card: per-type on-demand + spot rates with optional time-of-day
+/// multipliers. Entries are kept sorted by GPU name so serialization,
+/// fingerprinting and iteration are canonical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriceBook {
+    entries: Vec<PriceEntry>,
+    /// 24 hourly multipliers on the base rate (flat pricing = all 1.0).
+    pub tod_multipliers: Vec<f64>,
+    /// Bill at spot rates instead of on-demand.
+    pub use_spot: bool,
+    /// Hour of day `0..24` the run is priced at; `None` = flat (×1.0).
+    pub hour: Option<usize>,
+}
+
+impl Default for PriceBook {
+    fn default() -> Self {
+        PriceBook::builtin()
+    }
+}
+
+impl PriceBook {
+    /// Empty book (all lookups miss; callers fall back to catalog rates).
+    pub fn empty() -> PriceBook {
+        PriceBook {
+            entries: Vec::new(),
+            tod_multipliers: vec![1.0; 24],
+            use_spot: false,
+            hour: None,
+        }
+    }
+
+    /// Compiled-in card mirroring `data/price_book.json`. On-demand rates
+    /// equal the catalog's `price_per_hour` (so flat on-demand pricing
+    /// reproduces the pre-book behavior bit-for-bit); spot is 40% of
+    /// on-demand across the board.
+    pub fn builtin() -> PriceBook {
+        let mut book = PriceBook::empty();
+        for (gpu, on_demand, spot) in [
+            ("a100", 3.00, 1.20),
+            ("a800", 2.60, 1.04),
+            ("h100", 4.10, 1.64),
+            ("h800", 3.40, 1.36),
+            ("v100", 1.50, 0.60),
+        ] {
+            book.upsert(PriceEntry {
+                gpu: gpu.to_string(),
+                on_demand_per_hour: on_demand,
+                spot_per_hour: spot,
+            });
+        }
+        book
+    }
+
+    /// Load from the `data/price_book.json` shape:
+    ///
+    /// ```text
+    /// {"gpus": [{"name": "a800", "on_demand_per_hour": 2.6,
+    ///            "spot_per_hour": 1.04}, …],
+    ///  "tod_multipliers": [1.0, …24…]}   // optional
+    /// ```
+    pub fn from_json(v: &Value) -> Result<PriceBook> {
+        let mut book = PriceBook::empty();
+        for g in v.req_arr("gpus")? {
+            let on_demand = g.req_f64("on_demand_per_hour")?;
+            let spot = g.opt_f64("spot_per_hour").unwrap_or(on_demand);
+            book.upsert(PriceEntry {
+                gpu: g.req_str("name")?.to_string(),
+                on_demand_per_hour: on_demand,
+                spot_per_hour: spot,
+            });
+        }
+        if v.get("tod_multipliers").is_some() {
+            book.tod_multipliers = v.req_f64_arr("tod_multipliers")?;
+        }
+        book.validate()?;
+        Ok(book)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<PriceBook> {
+        Self::from_json(&crate::json::from_file(path)?)
+    }
+
+    /// Insert or replace an entry, keeping the book sorted by GPU name.
+    pub fn upsert(&mut self, entry: PriceEntry) {
+        match self.entries.binary_search_by(|e| e.gpu.as_str().cmp(entry.gpu.as_str())) {
+            Ok(i) => self.entries[i] = entry,
+            Err(i) => self.entries.insert(i, entry),
+        }
+    }
+
+    /// Entries, sorted by GPU name.
+    pub fn entries(&self) -> &[PriceEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, gpu_name: &str) -> Option<&PriceEntry> {
+        self.entries
+            .binary_search_by(|e| e.gpu.as_str().cmp(gpu_name))
+            .ok()
+            .map(|i| &self.entries[i])
+    }
+
+    /// Time-of-day multiplier in effect (`1.0` when `hour` is unset).
+    pub fn tod_multiplier(&self) -> f64 {
+        match self.hour {
+            Some(h) => self.tod_multipliers.get(h).copied().unwrap_or(1.0),
+            None => 1.0,
+        }
+    }
+
+    /// Effective USD per GPU-hour for a type: spot or on-demand rate times
+    /// the time-of-day multiplier. `None` for types the book does not list.
+    pub fn rate_per_hour(&self, gpu_name: &str) -> Option<f64> {
+        self.get(gpu_name).map(|e| {
+            let base = if self.use_spot { e.spot_per_hour } else { e.on_demand_per_hour };
+            base * self.tod_multiplier()
+        })
+    }
+
+    pub fn rate_per_second(&self, gpu_name: &str) -> Option<f64> {
+        self.rate_per_hour(gpu_name).map(|r| r / 3600.0)
+    }
+
+    /// Structural sanity: positive finite rates, spot ≤ on-demand, 24
+    /// positive multipliers, hour in range.
+    pub fn validate(&self) -> Result<()> {
+        let fail = |m: String| Err(AstraError::Config(m));
+        for e in &self.entries {
+            if !(e.on_demand_per_hour.is_finite() && e.on_demand_per_hour > 0.0) {
+                return fail(format!("'{}': bad on-demand rate {}", e.gpu, e.on_demand_per_hour));
+            }
+            if !(e.spot_per_hour.is_finite() && e.spot_per_hour > 0.0) {
+                return fail(format!("'{}': bad spot rate {}", e.gpu, e.spot_per_hour));
+            }
+            if e.spot_per_hour > e.on_demand_per_hour {
+                return fail(format!("'{}': spot rate exceeds on-demand", e.gpu));
+            }
+        }
+        if self.tod_multipliers.len() != 24 {
+            return fail(format!("{} tod multipliers (need 24)", self.tod_multipliers.len()));
+        }
+        if self.tod_multipliers.iter().any(|m| !(m.is_finite() && *m > 0.0)) {
+            return fail("non-positive tod multiplier".into());
+        }
+        if let Some(h) = self.hour {
+            if h >= 24 {
+                return fail(format!("hour {h} out of range 0..24"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuCatalog;
+
+    #[test]
+    fn builtin_covers_catalog_at_catalog_rates() {
+        let book = PriceBook::builtin();
+        let cat = GpuCatalog::builtin();
+        assert_eq!(book.len(), cat.len());
+        for spec in cat.all() {
+            let e = book.get(&spec.name).unwrap_or_else(|| panic!("{} unlisted", spec.name));
+            // On-demand mirrors the catalog so flat pricing is unchanged.
+            assert_eq!(e.on_demand_per_hour, spec.price_per_hour, "{}", spec.name);
+            assert!(e.spot_per_hour < e.on_demand_per_hour);
+        }
+        book.validate().unwrap();
+    }
+
+    #[test]
+    fn spot_and_tod_change_rates() {
+        let mut book = PriceBook::builtin();
+        let flat = book.rate_per_hour("a800").unwrap();
+        assert_eq!(flat, 2.60);
+        book.use_spot = true;
+        assert_eq!(book.rate_per_hour("a800").unwrap(), 1.04);
+        book.use_spot = false;
+        book.tod_multipliers[3] = 0.5;
+        book.hour = Some(3);
+        assert_eq!(book.rate_per_hour("a800").unwrap(), 1.30);
+        book.hour = None;
+        assert_eq!(book.rate_per_hour("a800").unwrap(), 2.60);
+        assert_eq!(book.rate_per_second("a800").unwrap(), 2.60 / 3600.0);
+        assert!(book.rate_per_hour("b200").is_none());
+    }
+
+    #[test]
+    fn upsert_keeps_sorted_and_replaces() {
+        let mut book = PriceBook::empty();
+        for name in ["h100", "a800", "v100"] {
+            book.upsert(PriceEntry {
+                gpu: name.to_string(),
+                on_demand_per_hour: 1.0,
+                spot_per_hour: 0.5,
+            });
+        }
+        let names: Vec<&str> = book.entries().iter().map(|e| e.gpu.as_str()).collect();
+        assert_eq!(names, vec!["a800", "h100", "v100"]);
+        book.upsert(PriceEntry {
+            gpu: "h100".to_string(),
+            on_demand_per_hour: 9.0,
+            spot_per_hour: 3.0,
+        });
+        assert_eq!(book.len(), 3);
+        assert_eq!(book.get("h100").unwrap().on_demand_per_hour, 9.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_books() {
+        let mut bad = PriceBook::builtin();
+        bad.tod_multipliers.pop();
+        assert!(bad.validate().is_err(), "23 multipliers");
+
+        let mut bad = PriceBook::builtin();
+        bad.tod_multipliers[0] = 0.0;
+        assert!(bad.validate().is_err(), "zero multiplier");
+
+        let mut bad = PriceBook::builtin();
+        bad.hour = Some(24);
+        assert!(bad.validate().is_err(), "hour out of range");
+
+        let mut bad = PriceBook::empty();
+        bad.upsert(PriceEntry {
+            gpu: "x".into(),
+            on_demand_per_hour: 1.0,
+            spot_per_hour: 2.0,
+        });
+        assert!(bad.validate().is_err(), "spot above on-demand");
+
+        let mut bad = PriceBook::empty();
+        bad.upsert(PriceEntry {
+            gpu: "x".into(),
+            on_demand_per_hour: f64::NAN,
+            spot_per_hour: 0.5,
+        });
+        assert!(bad.validate().is_err(), "NaN rate");
+    }
+
+    #[test]
+    fn json_roundtrip_and_defaults() {
+        let v = crate::json::parse(
+            r#"{"gpus":[{"name":"a800","on_demand_per_hour":2.6},
+                        {"name":"h100","on_demand_per_hour":4.1,"spot_per_hour":1.64}]}"#,
+        )
+        .unwrap();
+        let book = PriceBook::from_json(&v).unwrap();
+        // Missing spot defaults to on-demand; missing multipliers to flat.
+        assert_eq!(book.get("a800").unwrap().spot_per_hour, 2.6);
+        assert_eq!(book.tod_multipliers, vec![1.0; 24]);
+        assert_eq!(book.rate_per_hour("h100").unwrap(), 4.1);
+    }
+
+    #[test]
+    fn json_matches_builtin() {
+        // data/price_book.json must agree with the compiled-in card. The
+        // manifest may sit at the repo root or inside rust/; probe both
+        // (plus $ASTRA_DATA) and skip loudly if the file is absent.
+        let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let mut candidates = vec![
+            manifest.join("data/price_book.json"),
+            manifest.join("../data/price_book.json"),
+            manifest.join("rust/data/price_book.json"),
+        ];
+        if let Ok(d) = std::env::var("ASTRA_DATA") {
+            candidates.insert(0, std::path::Path::new(&d).join("price_book.json"));
+        }
+        let Some(path) = candidates.into_iter().find(|p| p.exists()) else {
+            eprintln!("SKIP: data/price_book.json not found near {manifest:?}");
+            return;
+        };
+        let from_file = PriceBook::from_file(&path).unwrap();
+        assert_eq!(from_file, PriceBook::builtin());
+    }
+}

@@ -270,6 +270,7 @@ mod tests {
             rule_filtered: 0,
             mem_filtered: 0,
             scored: 0,
+            pruned_pools: 0,
             search_secs: 0.0,
             simulate_secs: 0.0,
             top: Vec::new(),

@@ -157,6 +157,39 @@ fn hash_mode(h: &mut Fnv64, mode: &GpuPoolMode, catalog: &GpuCatalog) {
                 .field_usize("max_count", *max_count)
                 .field_f64("max_money", *max_money);
         }
+        GpuPoolMode::HeteroCost { caps, max_money } => {
+            h.field_str("mode", "hetero-cost").field_f64("max_money", *max_money);
+            // Same per-type-map canonicalization as mode 2.
+            let mut named = merge_caps(
+                caps.iter().map(|&(g, c)| (catalog.spec(g).name.as_str(), c)),
+            );
+            named.sort_unstable();
+            h.field_usize("caps.len", named.len());
+            for (name, cap) in named {
+                h.field_str("cap.gpu", name).field_usize("cap.n", cap);
+            }
+        }
+    }
+}
+
+/// The price book is part of every result (it prices each scored
+/// strategy), so the whole card enters the key: entries are already
+/// canonically sorted by GPU name inside [`PriceBook`].
+fn hash_book(h: &mut Fnv64, book: &crate::pricing::PriceBook) {
+    h.field_usize("book.len", book.entries().len());
+    for e in book.entries() {
+        h.field_str("book.gpu", &e.gpu)
+            .field_f64("book.od", e.on_demand_per_hour)
+            .field_f64("book.spot", e.spot_per_hour);
+    }
+    h.field_bool("book.use_spot", book.use_spot);
+    match book.hour {
+        Some(hr) => h.field_usize("book.hour", hr),
+        None => h.field_str("book.hour", "none"),
+    };
+    h.field_usize("book.tod.len", book.tod_multipliers.len());
+    for &m in &book.tod_multipliers {
+        h.field_f64("book.tod", m);
     }
 }
 
@@ -212,7 +245,9 @@ fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
     .field_bool("use_forests", cfg.use_forests)
     .field_f64("money.train_tokens", cfg.money.train_tokens)
     .field_bool("hetero_exhaustive", cfg.hetero_exhaustive)
+    .field_bool("money_prune", cfg.money_prune)
     .field_usize("top_k", cfg.top_k);
+    hash_book(h, &cfg.money.book);
     // `workers` deliberately excluded: parallelism never changes results.
 }
 
@@ -310,6 +345,49 @@ mod tests {
         let f = fp(&req, &base);
         assert_ne!(f, fp(&req, &tokens));
         assert_ne!(f, fp(&req, &topk));
+    }
+
+    #[test]
+    fn price_book_is_part_of_the_key() {
+        let req = SearchRequest::homogeneous("a800", 64, model()).unwrap();
+        let base = EngineConfig::default();
+        let f = fp(&req, &base);
+
+        let mut spot = EngineConfig::default();
+        spot.money.book.use_spot = true;
+        assert_ne!(f, fp(&req, &spot), "spot billing must change the key");
+
+        let mut repriced = EngineConfig::default();
+        repriced.money.book.upsert(crate::pricing::PriceEntry {
+            gpu: "a800".to_string(),
+            on_demand_per_hour: 9.99,
+            spot_per_hour: 1.0,
+        });
+        assert_ne!(f, fp(&req, &repriced), "a rate change must change the key");
+
+        let mut tod = EngineConfig::default();
+        tod.money.book.tod_multipliers[3] = 0.5;
+        tod.money.book.hour = Some(3);
+        assert_ne!(f, fp(&req, &tod), "time-of-day pricing must change the key");
+    }
+
+    #[test]
+    fn hetero_cost_caps_canonicalize_like_mode_2() {
+        let cfg = EngineConfig::default();
+        let a = SearchRequest::hetero_cost(&[("a800", 48), ("h100", 16)], 5e4, model()).unwrap();
+        let b = SearchRequest::hetero_cost(&[("h100", 16), ("a800", 48)], 5e4, model()).unwrap();
+        let c = SearchRequest::hetero_cost(&[("h100", 16), ("a800", 24), ("a800", 24)], 5e4, model())
+            .unwrap();
+        assert_eq!(fp(&a, &cfg), fp(&b, &cfg));
+        assert_eq!(fp(&a, &cfg), fp(&c, &cfg), "split duplicate caps must merge");
+        // Distinct from the mode-2 shape with the same caps, and sensitive
+        // to the budget.
+        let mode2 =
+            SearchRequest::heterogeneous(&[("a800", 48), ("h100", 16)], 64, model()).unwrap();
+        assert_ne!(fp(&a, &cfg), fp(&mode2, &cfg));
+        let other_budget =
+            SearchRequest::hetero_cost(&[("a800", 48), ("h100", 16)], 6e4, model()).unwrap();
+        assert_ne!(fp(&a, &cfg), fp(&other_budget, &cfg));
     }
 
     #[test]

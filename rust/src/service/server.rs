@@ -9,14 +9,19 @@
 //! {"id":"r1","model":"llama2-7b","mode":"homogeneous","gpu":"a800","gpus":64}
 //! {"model":"llama2-13b","mode":"heterogeneous","gpus":64,"caps":{"a800":48,"h100":48}}
 //! {"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":50000}
+//! {"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":16,"h100":16},"max_money":50000}
 //! {"cmd":"stats"}
 //! ```
 //!
 //! * `model` — required, a [`crate::model::ModelRegistry`] name.
-//! * `mode` — `homogeneous` (default) | `heterogeneous` | `cost`.
-//! * `gpu` / `gpus` — GPU type and count (for `cost`: the count ceiling).
-//! * `caps` — heterogeneous per-type caps, `{gpu_name: max_count}`.
-//! * `max_money` — optional money ceiling in USD (`cost` mode).
+//! * `mode` — `homogeneous` (default) | `heterogeneous` | `cost` |
+//!   `hetero-cost`.
+//! * `gpu` / `gpus` — GPU type and count (for `cost`: the count ceiling;
+//!   `hetero-cost` needs neither — pool sizes are swept from the caps).
+//! * `caps` — per-type caps, `{gpu_name: max_count}` (`heterogeneous` and
+//!   `hetero-cost`).
+//! * `max_money` — optional money ceiling in USD (`cost` / `hetero-cost`);
+//!   must be positive when present.
 //! * `id` — optional opaque tag echoed back in the response.
 //!
 //! ## Response lines
@@ -102,32 +107,61 @@ pub fn parse_request(
         }
         "heterogeneous" => {
             let total = v.req_usize("gpus")?;
-            let caps_obj = v
-                .get("caps")
-                .and_then(Value::as_obj)
-                .ok_or_else(|| AstraError::Json("missing/invalid object field 'caps'".into()))?;
-            let mut caps = Vec::with_capacity(caps_obj.len());
-            for (name, cap) in caps_obj {
-                let cap = cap.as_usize().ok_or_else(|| {
-                    AstraError::Json(format!("caps['{name}'] is not a non-negative integer"))
-                })?;
-                caps.push((catalog.find(name)?, cap));
-            }
+            let caps = parse_caps(v, catalog)?;
             SearchRequest { mode: GpuPoolMode::Heterogeneous { total, caps }, model }
         }
         "cost" => {
             let gpu = catalog.find(v.req_str("gpu")?)?;
             let max_count = v.req_usize("gpus")?;
-            let max_money = v.opt_f64("max_money").unwrap_or(f64::INFINITY);
+            let max_money = parse_budget(v)?;
             SearchRequest { mode: GpuPoolMode::Cost { gpu, max_count, max_money }, model }
+        }
+        "hetero-cost" => {
+            let caps = parse_caps(v, catalog)?;
+            let max_money = parse_budget(v)?;
+            SearchRequest { mode: GpuPoolMode::HeteroCost { caps, max_money }, model }
         }
         other => {
             return Err(AstraError::Config(format!(
-                "unknown mode '{other}' (homogeneous | heterogeneous | cost)"
+                "unknown mode '{other}' (homogeneous | heterogeneous | cost | hetero-cost)"
             )));
         }
     };
     Ok(WireRequest { id, request })
+}
+
+/// The `caps` object, `{gpu_name: max_count}`.
+fn parse_caps(
+    v: &Value,
+    catalog: &GpuCatalog,
+) -> Result<Vec<(crate::gpu::GpuType, usize)>> {
+    let caps_obj = v
+        .get("caps")
+        .and_then(Value::as_obj)
+        .ok_or_else(|| AstraError::Json("missing/invalid object field 'caps'".into()))?;
+    let mut caps = Vec::with_capacity(caps_obj.len());
+    for (name, cap) in caps_obj {
+        let cap = cap.as_usize().ok_or_else(|| {
+            AstraError::Json(format!("caps['{name}'] is not a non-negative integer"))
+        })?;
+        caps.push((catalog.find(name)?, cap));
+    }
+    Ok(caps)
+}
+
+/// Optional `max_money` (absent = unlimited); validated like the request
+/// constructors so the wire cannot smuggle NaN or non-positive budgets.
+fn parse_budget(v: &Value) -> Result<f64> {
+    match v.get("max_money") {
+        None => Ok(f64::INFINITY),
+        Some(m) => {
+            let money = m
+                .as_f64()
+                .ok_or_else(|| AstraError::Json("'max_money' is not a number".into()))?;
+            crate::coordinator::validate_budget(money)?;
+            Ok(money)
+        }
+    }
 }
 
 /// Serialize a request back to its wire form (round-trip tested: the wire
@@ -163,6 +197,21 @@ pub fn request_to_json(req: &SearchRequest, catalog: &GpuCatalog) -> Value {
                 v
             }
         }
+        GpuPoolMode::HeteroCost { caps, max_money } => {
+            let merged = crate::strategy::merge_caps(
+                caps.iter().map(|&(g, c)| (catalog.spec(g).name.as_str(), c)),
+            );
+            let mut obj = Value::obj();
+            for (name, c) in merged {
+                obj = obj.set(name, c);
+            }
+            let v = base.set("mode", "hetero-cost").set("caps", obj);
+            if max_money.is_finite() {
+                v.set("max_money", *max_money)
+            } else {
+                v
+            }
+        }
     }
 }
 
@@ -172,6 +221,7 @@ fn report_counts_json(r: &SearchReport) -> Value {
         .set("rule_filtered", r.rule_filtered)
         .set("mem_filtered", r.mem_filtered)
         .set("scored", r.scored)
+        .set("pruned_pools", r.pruned_pools)
         .set("search_secs", r.search_secs)
         .set("simulate_secs", r.simulate_secs)
 }
@@ -203,6 +253,34 @@ pub fn response_json(
         .map(|s| scored_strategy_json(s, catalog))
         .collect();
     v.set("top", Value::Arr(tops))
+}
+
+/// Strip wall-clock fields from one response line so transcripts are
+/// byte-stable across machines and runs (the golden wire test pins
+/// everything else). Timing fields are zeroed rather than removed, so
+/// their *presence* in the shape stays pinned too.
+pub fn normalize_response_line(line: &str) -> Result<String> {
+    let mut v = json::parse(line)?;
+    if let Value::Obj(m) = &mut v {
+        if m.contains_key("service_ms") {
+            m.insert("service_ms".to_string(), Value::Num(0.0));
+        }
+        if let Some(Value::Obj(engine)) = m.get_mut("engine") {
+            for k in ["search_secs", "simulate_secs"] {
+                if engine.contains_key(k) {
+                    engine.insert(k.to_string(), Value::Num(0.0));
+                }
+            }
+        }
+        // Cache byte accounting is an estimate that may drift with struct
+        // layout; the entry/hit counters stay pinned.
+        if let Some(Value::Obj(stats)) = m.get_mut("stats") {
+            if stats.contains_key("cache_bytes") {
+                stats.insert("cache_bytes".to_string(), Value::Num(0.0));
+            }
+        }
+    }
+    Ok(json::to_string(&v))
 }
 
 /// Error response line.
@@ -436,6 +514,49 @@ mod tests {
     }
 
     #[test]
+    fn parse_hetero_cost() {
+        let v = json::parse(
+            r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":16,"h100":8},"max_money":1234.5}"#,
+        )
+        .unwrap();
+        let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
+        match &w.request.mode {
+            GpuPoolMode::HeteroCost { caps, max_money } => {
+                assert_eq!(caps.len(), 2);
+                assert_eq!(*max_money, 1234.5);
+                let cat = catalog();
+                let total: usize = caps.iter().map(|&(_, c)| c).sum();
+                assert_eq!(total, 24);
+                assert!(caps.iter().any(|&(g, c)| cat.spec(g).name == "a800" && c == 16));
+            }
+            other => panic!("wrong mode {other:?}"),
+        }
+        // Budget omitted = unlimited.
+        let v = json::parse(r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":8}}"#)
+            .unwrap();
+        let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
+        match &w.request.mode {
+            GpuPoolMode::HeteroCost { max_money, .. } => assert!(max_money.is_infinite()),
+            other => panic!("wrong mode {other:?}"),
+        }
+    }
+
+    #[test]
+    fn normalization_zeroes_only_wall_clock_fields() {
+        let line = r#"{"engine":{"generated":10,"search_secs":0.123,"simulate_secs":4.5},"fingerprint":"00000000000000ff","ok":true,"service_ms":9.87,"source":"search"}"#;
+        let norm = normalize_response_line(line).unwrap();
+        let v = json::parse(&norm).unwrap();
+        assert_eq!(v.opt_f64("service_ms"), Some(0.0));
+        assert_eq!(v.pointer("/engine/search_secs").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(v.pointer("/engine/simulate_secs").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(v.pointer("/engine/generated").and_then(Value::as_usize), Some(10));
+        assert_eq!(v.opt_str("fingerprint"), Some("00000000000000ff"));
+        // Error lines (no timing fields) pass through unchanged.
+        let err = r#"{"error":"nope","ok":false}"#;
+        assert_eq!(normalize_response_line(err).unwrap(), err);
+    }
+
+    #[test]
     fn parse_errors_are_recoverable() {
         let reg = ModelRegistry::builtin();
         for bad in [
@@ -444,6 +565,11 @@ mod tests {
             r#"{"model":"llama2-7b","gpu":"b200","gpus":64}"#,     // unknown gpu
             r#"{"model":"llama2-7b","mode":"quantum","gpus":64}"#, // unknown mode
             r#"{"model":"llama2-7b","mode":"heterogeneous","gpus":64}"#, // no caps
+            r#"{"model":"llama2-7b","mode":"hetero-cost","max_money":100}"#, // no caps
+            r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":0}"#,
+            r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":-5}"#,
+            r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":8},"max_money":-1}"#,
+            r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":"lots"}"#,
         ] {
             let v = json::parse(bad).unwrap();
             assert!(parse_request(&v, &catalog(), &reg).is_err(), "accepted: {bad}");
@@ -459,6 +585,8 @@ mod tests {
             r#"{"model":"llama2-7b","gpu":"a800","gpus":64}"#,
             r#"{"model":"llama2-13b","mode":"heterogeneous","gpus":64,"caps":{"a800":48,"h100":48}}"#,
             r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":50000}"#,
+            r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":16,"h100":16},"max_money":50000}"#,
+            r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":16,"v100":8}}"#,
         ] {
             let w = parse_request(&json::parse(src).unwrap(), &cat, &reg).unwrap();
             let wire = request_to_json(&w.request, &cat);

@@ -318,7 +318,8 @@ impl FieldSource for ParallelStrategy {
     }
 }
 
-/// The three GPU-pool input modes of §3.2 (Eq. 1–3).
+/// The GPU-pool input modes of §3.2 (Eq. 1–3), plus the heterogeneous
+/// money-saving extension.
 #[derive(Debug, Clone, PartialEq)]
 pub enum GpuPoolMode {
     /// Mode 1: one GPU type, fixed count.
@@ -328,6 +329,11 @@ pub enum GpuPoolMode {
     /// Mode 3: one GPU type, count swept up to `max_count`, with a money
     /// ceiling applied at selection time.
     Cost { gpu: GpuType, max_count: usize, max_money: f64 },
+    /// Mode 3 over mixed pools: total cluster sizes are swept under
+    /// per-type caps (as in mode 2), each candidate is priced per type per
+    /// hour through the [`crate::pricing::PriceBook`], and a money ceiling
+    /// prunes and selects (§3.6 fused with §3.4).
+    HeteroCost { caps: Vec<(GpuType, usize)>, max_money: f64 },
 }
 
 /// Canonicalize per-type capacity entries as a *map*: duplicate keys merge

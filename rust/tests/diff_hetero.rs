@@ -1,0 +1,212 @@
+//! Differential tests: the pruned layer-assignment solver vs the exhaustive
+//! Eq. 23 reference on small instances (N≤12 layers, M≤3 types), and the
+//! branch-and-bound hetero-cost search vs its unpruned reference — both
+//! must agree on the optimum under the real cost model.
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::cost::{CostModel, EtaProvider};
+use astra::gpu::GpuCatalog;
+use astra::hetero::{HeteroSolver, TypeBudget};
+use astra::model::ModelRegistry;
+use astra::strategy::{
+    ClusterAssignment, ParallelStrategy, Recompute, RecomputeMethod, SpaceConfig,
+};
+
+fn budgets(cat: &GpuCatalog, names: &[&str], cap: usize, tp: usize, dp: usize) -> Vec<TypeBudget> {
+    let caps: Vec<(usize, usize)> = names.iter().map(|n| (cat.find(n).unwrap(), cap)).collect();
+    HeteroSolver::budgets(cat, &caps, tp, dp)
+}
+
+/// Bind an assignment to a concrete small-model strategy so the *real*
+/// cost model can rank it.
+fn strategy_for(m: &astra::model::ModelSpec, ca: &ClusterAssignment) -> ParallelStrategy {
+    ParallelStrategy {
+        cluster: ca.clone(),
+        tp: 2,
+        dp: 2,
+        micro_batch: 1,
+        global_batch: m.global_batch,
+        vpp: 1,
+        sequence_parallel: true,
+        use_distributed_optimizer: true,
+        recompute: Recompute::None,
+        recompute_method: RecomputeMethod::Uniform,
+        recompute_num_layers: 0,
+        offload_optimizer: false,
+        overlap_grad_reduce: true,
+        overlap_param_gather: true,
+        overlap_p2p: true,
+        tp_comm_overlap: true,
+        use_flash_attn: true,
+        ep: 1,
+    }
+}
+
+/// A small model whose layer count we can vary per instance.
+fn small_model(layers: usize) -> astra::model::ModelSpec {
+    let mut m = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    m.layers = layers;
+    m
+}
+
+/// Both enumerations respect `Σ m_i·n_i = N` and the per-type stage caps
+/// for every emitted assignment, across the whole small-instance grid.
+#[test]
+fn diff_both_enumerations_respect_invariants() {
+    let cat = GpuCatalog::builtin();
+    let solver = HeteroSolver::default();
+    for names in [vec!["a800", "h100"], vec!["a800", "h100", "v100"]] {
+        for layers in [6usize, 8, 9, 11, 12] {
+            for pp in 2..=4usize {
+                if pp > layers {
+                    continue;
+                }
+                let b = budgets(&cat, &names, 16, 2, 2);
+                for (tag, set) in [
+                    ("exhaustive", solver.enumerate_exhaustive(layers, pp, &b)),
+                    ("pruned", solver.enumerate_pruned(layers, pp, &b)),
+                ] {
+                    for ca in &set {
+                        assert_eq!(ca.pp(), pp, "{tag} N={layers} P={pp}");
+                        assert_eq!(ca.layers(), layers, "{tag} N={layers} P={pp}: Σ m·n ≠ N");
+                        for seg in &ca.segments {
+                            let budget = b.iter().find(|tb| tb.gpu == seg.gpu).unwrap();
+                            assert!(
+                                seg.stages <= budget.max_stages,
+                                "{tag} N={layers} P={pp}: cap violated"
+                            );
+                            assert!(seg.layers_per_stage >= 1);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// With a radius covering the whole layer range, the pruned enumeration
+/// *is* the exhaustive one — an exact set-equality differential.
+#[test]
+fn diff_full_radius_pruned_equals_exhaustive() {
+    let cat = GpuCatalog::builtin();
+    let wide = HeteroSolver { prune_radius: 12, max_assignments: 2_000_000 };
+    for names in [vec!["a800", "h100"], vec!["a800", "h100", "v100"]] {
+        for layers in [6usize, 8, 10, 12] {
+            for pp in 2..=3usize {
+                let b = budgets(&cat, &names, 16, 2, 2);
+                let key = |c: &ClusterAssignment| format!("{:?}", c.segments);
+                let ex: std::collections::BTreeSet<String> =
+                    wide.enumerate_exhaustive(layers, pp, &b).iter().map(key).collect();
+                let pr: std::collections::BTreeSet<String> =
+                    wide.enumerate_pruned(layers, pp, &b).iter().map(key).collect();
+                assert_eq!(
+                    ex, pr,
+                    "N={layers} P={pp} types={names:?}: full-radius pruned ≠ exhaustive"
+                );
+            }
+        }
+    }
+}
+
+/// On small instances the default-config pruned solver finds the same
+/// optimal assignment as the exhaustive reference under the real cost
+/// model (the seed-∝-speed heuristic preserves the optimum; radius 6
+/// covers every non-pathological split at N≤12).
+#[test]
+fn diff_pruned_finds_exhaustive_optimum_small() {
+    let cat = GpuCatalog::builtin();
+    let cost = CostModel::new(cat.clone(), EtaProvider::Analytic);
+    let solver = HeteroSolver { prune_radius: 6, max_assignments: 2_000_000 };
+    for names in [vec!["a800", "h100"], vec!["a800", "h100", "v100"]] {
+        for layers in [8usize, 10, 12] {
+            for pp in 2..=3usize {
+                let m = small_model(layers);
+                let b = budgets(&cat, &names, 16, 2, 2);
+                let best_of = |set: &[ClusterAssignment]| -> f64 {
+                    set.iter()
+                        .map(|ca| cost.evaluate(&m, &strategy_for(&m, ca)).step_time)
+                        .fold(f64::INFINITY, f64::min)
+                };
+                let ex = solver.enumerate_exhaustive(layers, pp, &b);
+                let pr = solver.enumerate_pruned(layers, pp, &b);
+                assert!(!ex.is_empty() && !pr.is_empty(), "N={layers} P={pp}");
+                let (t_ex, t_pr) = (best_of(&ex), best_of(&pr));
+                // pruned ⊆ exhaustive, so t_pr ≥ t_ex; equality means the
+                // optimum survived pruning.
+                assert!(
+                    t_pr <= t_ex * (1.0 + 1e-9),
+                    "N={layers} P={pp} types={names:?}: pruned optimum {t_pr:.6}s \
+                     vs exhaustive {t_ex:.6}s"
+                );
+            }
+        }
+    }
+}
+
+/// The hetero-cost acceptance differential: on small configs the pruned
+/// search returns the same budget-optimal `(tokens/s, USD)` as the
+/// unpruned exhaustive-reference search, across several budgets.
+#[test]
+fn diff_hetero_cost_prune_preserves_budget_optimum() {
+    let space = SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 4,
+        mbs_candidates: vec![1, 2],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    };
+    let engine = |prune: bool| {
+        AstraEngine::new(
+            GpuCatalog::builtin(),
+            EngineConfig {
+                use_forests: false,
+                money_prune: prune,
+                space: space.clone(),
+                ..Default::default()
+            },
+        )
+    };
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let caps = [("a800", 8usize), ("h100", 8usize)];
+    let pruned_eng = engine(true);
+    let reference_eng = engine(false);
+
+    // Learn the cost scale once from the unpruned reference.
+    let free = reference_eng
+        .search(&SearchRequest::hetero_cost(&caps, f64::INFINITY, model.clone()).unwrap())
+        .unwrap();
+    assert!(!free.pool.is_empty());
+    assert_eq!(free.pruned_pools, 0, "reference must not prune");
+    let lo = free.pool.entries().last().unwrap().cost;
+
+    for frac in [0.5, 1.02, 1.3, 2.0, f64::INFINITY] {
+        let budget = if frac.is_finite() { lo * frac } else { f64::INFINITY };
+        let req = SearchRequest::hetero_cost(&caps, budget, model.clone()).unwrap();
+        let a = pruned_eng.search(&req).unwrap();
+        let b = reference_eng.search(&req).unwrap();
+        let pick = |r: &astra::coordinator::SearchReport| {
+            r.pool.best_within_budget(budget).map(|e| (e.throughput, e.cost))
+        };
+        match (pick(&a), pick(&b)) {
+            (Some((ta, ca)), Some((tb, cb))) => {
+                assert!(
+                    (ta - tb).abs() <= 1e-6 * tb.max(1.0) && (ca - cb).abs() <= 1e-6 * cb.max(1.0),
+                    "budget ${budget}: pruned ({ta:.2}, ${ca:.2}) != reference ({tb:.2}, ${cb:.2})"
+                );
+                // The promoted top-of-report pick agrees too.
+                let best = a.best().expect("pruned search selected nothing");
+                assert!(best.money_usd <= budget * (1.0 + 1e-9));
+            }
+            (None, None) => {}
+            other => panic!("budget ${budget}: feasibility disagreement {other:?}"),
+        }
+        // Pruning must never *add* candidates.
+        assert!(a.generated <= b.generated, "budget ${budget}");
+    }
+}

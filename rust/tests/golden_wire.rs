@@ -1,0 +1,163 @@
+//! Golden-snapshot test of the line-delimited JSON wire protocol: a fixed
+//! request script through the `astra serve`/`batch` machinery must
+//! byte-match the checked-in transcript, including the hetero-cost request
+//! shape, success/error/stats lines and field order.
+//!
+//! Wall-clock fields are zeroed through
+//! [`astra::service::server::normalize_response_line`] before comparison —
+//! everything else (fingerprints, counts, scored payloads, error strings)
+//! is pinned byte-for-byte.
+//!
+//! ## Regeneration
+//!
+//! After an *intentional* wire change:
+//!
+//! ```text
+//! ASTRA_REGEN_GOLDEN=1 cargo test --test golden_wire
+//! git diff rust/tests/golden/serve_transcript.jsonl   # review, then commit
+//! ```
+//!
+//! If the transcript is missing entirely (fresh checkout state), the test
+//! bootstraps it in place and passes with a notice — commit the generated
+//! file to arm the byte-match for every later run.
+
+use astra::coordinator::EngineConfig;
+use astra::gpu::GpuCatalog;
+use astra::service::server::{normalize_response_line, run_batch_lines, ServeOpts};
+use astra::service::{SearchService, ServiceConfig};
+use astra::strategy::SpaceConfig;
+use std::path::PathBuf;
+
+/// The fixed request script: every mode, a cache repeat, three error
+/// shapes and a stats line. One request per admitted batch (max_batch 1)
+/// keeps sources deterministic (`search`/`cache`, never `coalesced`).
+const SCRIPT: &str = "\
+{\"id\":\"homog\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"repeat\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"hetero\",\"model\":\"llama2-7b\",\"mode\":\"heterogeneous\",\"gpus\":8,\"caps\":{\"a800\":8,\"h100\":8}}\n\
+{\"id\":\"cost\",\"model\":\"llama2-7b\",\"mode\":\"cost\",\"gpu\":\"a800\",\"gpus\":8,\"max_money\":100000}\n\
+{\"id\":\"hc\",\"model\":\"llama2-7b\",\"mode\":\"hetero-cost\",\"caps\":{\"a800\":4,\"h100\":4},\"max_money\":100000}\n\
+not json at all\n\
+{\"id\":\"badmodel\",\"model\":\"gpt-5\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"badbudget\",\"model\":\"llama2-7b\",\"mode\":\"cost\",\"gpu\":\"a800\",\"gpus\":8,\"max_money\":-1}\n\
+{\"cmd\":\"stats\",\"id\":\"stats\"}\n";
+
+/// Deterministic engine: analytic η (no forest dependence), fixed narrow
+/// space so the transcript stays small and debug-profile CI fast.
+fn service() -> SearchService {
+    let space = SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 2,
+        mbs_candidates: vec![1],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    };
+    SearchService::new(
+        astra::coordinator::ScoringCore::new(
+            GpuCatalog::builtin(),
+            EngineConfig { use_forests: false, space, ..Default::default() },
+        ),
+        ServiceConfig::default(),
+    )
+}
+
+fn golden_path() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for rel in ["tests/golden", "rust/tests/golden"] {
+        let dir = manifest.join(rel);
+        if dir.is_dir() {
+            return dir.join("serve_transcript.jsonl");
+        }
+    }
+    manifest.join("tests/golden/serve_transcript.jsonl")
+}
+
+fn run_script() -> String {
+    let svc = service();
+    let mut out: Vec<u8> = Vec::new();
+    let opts = ServeOpts { max_batch: 1, top: 1 };
+    let stats = run_batch_lines(&svc, SCRIPT, &mut out, &opts).unwrap();
+    assert_eq!(stats.lines, 9, "script drifted");
+    assert_eq!(stats.errors, 3, "exactly the three error lines fail");
+    let text = String::from_utf8(out).unwrap();
+    let mut normalized = String::new();
+    for line in text.lines() {
+        normalized.push_str(&normalize_response_line(line).unwrap());
+        normalized.push('\n');
+    }
+    normalized
+}
+
+#[test]
+fn wire_protocol_matches_golden_transcript() {
+    let got = run_script();
+
+    // Shape assertions that hold regardless of the snapshot state — the
+    // hetero-cost line must be a well-formed success with a priced plan.
+    let lines: Vec<astra::json::Value> =
+        got.lines().map(|l| astra::json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 9);
+    assert_eq!(lines[1].opt_str("source"), Some("cache"), "repeat must hit the cache");
+    let hc = &lines[4];
+    assert_eq!(hc.opt_str("id"), Some("hc"));
+    assert_eq!(hc.get("ok").and_then(astra::json::Value::as_bool), Some(true));
+    assert!(hc.pointer("/best/money_usd").and_then(astra::json::Value::as_f64).unwrap() > 0.0);
+    assert!(hc.pointer("/engine/pruned_pools").is_some());
+    for (i, id) in [(6usize, "badmodel"), (7usize, "badbudget")] {
+        assert_eq!(lines[i].get("ok").and_then(astra::json::Value::as_bool), Some(false));
+        assert_eq!(lines[i].opt_str("id"), Some(id));
+    }
+
+    let path = golden_path();
+    let regen = std::env::var("ASTRA_REGEN_GOLDEN").as_deref() == Ok("1");
+    if regen || !path.exists() {
+        // Bootstrap (or regenerate) in place; a read-only checkout cannot
+        // arm the byte-match, but the determinism test below still runs.
+        let write = std::fs::create_dir_all(path.parent().unwrap())
+            .and_then(|_| std::fs::write(&path, &got));
+        match write {
+            Ok(()) => eprintln!(
+                "golden_wire: {} transcript at {} — commit it to arm the byte-match",
+                if regen { "regenerated" } else { "bootstrapped" },
+                path.display()
+            ),
+            Err(e) => eprintln!(
+                "golden_wire: SKIP byte-match (cannot write {}: {e})",
+                path.display()
+            ),
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    if got != want {
+        // Byte-level diff with a per-line first-divergence pointer.
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            assert_eq!(
+                g, w,
+                "wire transcript line {i} diverged from {} — if the change is \
+                 intentional, regenerate with ASTRA_REGEN_GOLDEN=1 (see module docs)",
+                path.display()
+            );
+        }
+        panic!(
+            "wire transcript length changed ({} vs {} lines) — regenerate with \
+             ASTRA_REGEN_GOLDEN=1 if intentional",
+            got.lines().count(),
+            want.lines().count()
+        );
+    }
+}
+
+/// The transcript itself must be replay-stable: running the script twice
+/// in two fresh services yields identical bytes (pins nondeterminism bugs
+/// even while the snapshot is in its bootstrapped first-run state).
+#[test]
+fn wire_transcript_is_deterministic_across_services() {
+    assert_eq!(run_script(), run_script());
+}

@@ -1,0 +1,240 @@
+//! Property-test harness for the money-search substrate (seeded with the
+//! in-tree PRNG — no proptest offline; failures print the seed/case):
+//! `OptimalPool::build` invariants on random candidate clouds,
+//! `best_within_budget` monotonicity, price-book algebra, and soundness of
+//! the branch-and-bound pool bounds against the real cost model.
+
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::pareto::{DominancePruner, MoneyModel, OptimalPool, PoolEntry};
+use astra::pricing::{PriceBook, PriceEntry};
+use astra::prng::Rng;
+use astra::strategy::{SearchSpace, SpaceConfig};
+
+fn random_cloud(rng: &mut Rng, n: usize, rounded: bool) -> Vec<PoolEntry> {
+    (0..n)
+        .map(|i| {
+            let (p, c) = (rng.range_f64(1.0, 500.0), rng.range_f64(1.0, 500.0));
+            PoolEntry {
+                idx: i,
+                throughput: if rounded { p.round() } else { p },
+                cost: if rounded { c.round() } else { c },
+            }
+        })
+        .collect()
+}
+
+/// Frontier validity + dominance over every dropped candidate, including
+/// heavy-tie clouds (rounded coordinates force duplicates).
+#[test]
+fn prop_frontier_valid_and_dominates_dropped() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..120 {
+        let n = 1 + rng.below(250) as usize;
+        let cands = random_cloud(&mut rng, n, case % 2 == 0);
+        let pool = OptimalPool::build(cands.clone());
+        assert!(pool.is_valid_frontier(), "case {case}");
+        assert!(!pool.is_empty(), "case {case}: frontier empty for nonempty cloud");
+        let kept: std::collections::BTreeSet<usize> =
+            pool.entries().iter().map(|e| e.idx).collect();
+        for c in &cands {
+            if kept.contains(&c.idx) {
+                continue;
+            }
+            // Every dropped candidate is dominated-or-equal by a frontier
+            // entry (Eq. 29/30: the pool loses nothing anyone would pick).
+            assert!(
+                pool.entries()
+                    .iter()
+                    .any(|f| f.throughput >= c.throughput && f.cost <= c.cost),
+                "case {case}: dropped {c:?} not dominated by the frontier"
+            );
+        }
+    }
+}
+
+/// Non-finite candidates never reach the frontier.
+#[test]
+fn prop_frontier_filters_non_finite() {
+    let mut rng = Rng::new(77);
+    for case in 0..30 {
+        let mut cands = random_cloud(&mut rng, 40, false);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let i = rng.below(cands.len() as u64) as usize;
+            cands[i].cost = bad;
+            let j = rng.below(cands.len() as u64) as usize;
+            cands[j].throughput = bad;
+        }
+        let pool = OptimalPool::build(cands);
+        assert!(pool.is_valid_frontier(), "case {case}");
+        for e in pool.entries() {
+            assert!(e.throughput.is_finite() && e.cost.is_finite(), "case {case}: {e:?}");
+        }
+    }
+}
+
+/// `best_within_budget` is monotone in the budget: paying more never buys
+/// a slower plan, and the pick always respects the ceiling.
+#[test]
+fn prop_best_within_budget_monotone() {
+    let mut rng = Rng::new(0xB1D6E7);
+    for case in 0..80 {
+        let pool = OptimalPool::build(random_cloud(&mut rng, 1 + rng.below(200) as usize, false));
+        let mut budgets: Vec<f64> = (0..20).map(|_| rng.range_f64(0.0, 600.0)).collect();
+        budgets.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut last: Option<f64> = None;
+        for &b in &budgets {
+            match pool.best_within_budget(b) {
+                Some(e) => {
+                    assert!(e.cost <= b, "case {case}: pick over budget");
+                    if let Some(prev) = last {
+                        assert!(
+                            e.throughput >= prev,
+                            "case {case}: budget {b} bought {} < {} tokens/s",
+                            e.throughput,
+                            prev
+                        );
+                    }
+                    last = Some(e.throughput);
+                }
+                None => {
+                    assert!(last.is_none(), "case {case}: raising the budget lost the pick");
+                }
+            }
+        }
+        // An unlimited budget returns the fastest frontier entry.
+        if let Some(first) = pool.entries().first() {
+            let pick = pool.best_within_budget(f64::INFINITY).unwrap();
+            assert_eq!(pick.throughput, first.throughput, "case {case}");
+        }
+    }
+}
+
+/// Random rate cards: the effective rate is always spot/on-demand × the
+/// active multiplier, and lookups never cross GPU names.
+#[test]
+fn prop_price_book_rate_algebra() {
+    let mut rng = Rng::new(0xCA4D);
+    for case in 0..60 {
+        let mut book = PriceBook::empty();
+        let names = ["a", "bb", "ccc", "dddd", "e5"];
+        let n = 1 + rng.below(names.len() as u64) as usize;
+        let mut expected: Vec<(String, f64, f64)> = Vec::new();
+        for name in names.iter().take(n) {
+            let od = rng.range_f64(0.5, 10.0);
+            let spot = od * rng.range_f64(0.1, 1.0);
+            book.upsert(PriceEntry {
+                gpu: name.to_string(),
+                on_demand_per_hour: od,
+                spot_per_hour: spot,
+            });
+            expected.push((name.to_string(), od, spot));
+        }
+        for m in book.tod_multipliers.iter_mut() {
+            *m = rng.range_f64(0.25, 2.0);
+        }
+        book.use_spot = rng.bool();
+        let hour = rng.below(24) as usize;
+        book.hour = if rng.bool() { Some(hour) } else { None };
+        book.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        for (name, od, spot) in &expected {
+            let base = if book.use_spot { *spot } else { *od };
+            let mult = match book.hour {
+                Some(h) => book.tod_multipliers[h],
+                None => 1.0,
+            };
+            let got = book.rate_per_hour(name).unwrap();
+            assert!(
+                (got - base * mult).abs() < 1e-12 * base.max(1.0),
+                "case {case}: {name} rate {got} != {base}·{mult}"
+            );
+        }
+        assert!(book.rate_per_hour("zz-not-listed").is_none());
+    }
+}
+
+/// Soundness of the branch-and-bound bounds: for random pools of real
+/// strategies, every scored plan's money is ≥ the pool's lower bound and
+/// its throughput ≤ the pool's upper bound — the pruner can never discard
+/// a plan the exhaustive search would have selected.
+#[test]
+fn prop_pool_bounds_sound_against_cost_model() {
+    use astra::cost::{CostModel, EtaProvider};
+    let reg = ModelRegistry::builtin();
+    let cat = GpuCatalog::builtin();
+    let cost = CostModel::new(cat.clone(), EtaProvider::Analytic);
+    let space = SearchSpace::new(SpaceConfig::default());
+    let mut rng = Rng::new(0x50_u64);
+    let mut mm = MoneyModel::default();
+    let mut checked = 0usize;
+    for case in 0..12 {
+        mm.book.use_spot = rng.bool();
+        let model = *rng.choose(&reg.paper_seven());
+        let count = *rng.choose(&[16usize, 32, 64, 128]);
+        let gpu = rng.below(cat.len() as u64) as usize;
+        let strategies = space.homogeneous(model, &cat, gpu, count);
+        if strategies.is_empty() {
+            continue;
+        }
+        for s in strategies.iter().step_by(1 + rng.below(80) as usize).take(40) {
+            let gpus = s.cluster.gpus_by_type(s.tp, s.dp);
+            let (ub_tput, lb_usd) = mm.pool_bounds(model, &gpus, &cat);
+            let bd = cost.evaluate(model, s);
+            let usd = mm.cost_usd(model, s, &cat, bd.step_time);
+            assert!(
+                bd.tokens_per_s <= ub_tput * (1.0 + 1e-9),
+                "case {case}: {} tput {} above bound {} ({})",
+                model.name,
+                bd.tokens_per_s,
+                ub_tput,
+                s.summary()
+            );
+            assert!(
+                usd >= lb_usd * (1.0 - 1e-9),
+                "case {case}: {} ${usd} below bound ${lb_usd} ({})",
+                model.name,
+                s.summary()
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 100, "too few strategies checked: {checked}");
+}
+
+/// The pruner itself: random admit/observe streams never reject a point
+/// that genuinely improves on everything scored so far.
+#[test]
+fn prop_pruner_never_rejects_improvements() {
+    let mut rng = Rng::new(4096);
+    for case in 0..50 {
+        let budget = rng.range_f64(50.0, 500.0);
+        let mut pr = DominancePruner::new(budget);
+        let mut scored: Vec<(f64, f64)> = Vec::new();
+        for _ in 0..200 {
+            let tput = rng.range_f64(1.0, 1000.0);
+            let cost = rng.range_f64(1.0, 1000.0);
+            // A candidate pool whose bounds bracket this point.
+            let ub = tput * rng.range_f64(1.0, 1.5);
+            let lb = cost * rng.range_f64(0.5, 1.0);
+            let improves = cost <= budget
+                && !scored.iter().any(|&(p, c)| p >= tput && c <= cost);
+            let admitted = pr.admit(ub, lb);
+            if improves {
+                assert!(
+                    admitted,
+                    "case {case}: rejected pool holding improvement ({tput}, {cost}) \
+                     with bounds ({ub}, {lb})"
+                );
+            }
+            if admitted {
+                pr.observe(tput, cost);
+                scored.push((tput, cost));
+            }
+        }
+        assert_eq!(
+            pr.pruned(),
+            pr.pruned_budget + pr.pruned_dominated,
+            "case {case}: prune counters inconsistent"
+        );
+    }
+}
