@@ -10,11 +10,20 @@
 #                       both FAIL the run. Opt-in so the tier-1 contract is
 #                       unchanged; run it before large refactors land.
 #
+#   bench (BENCH=1)   — perf smoke lane on top of tier-1: runs the
+#                       rust/benches/perf_search.rs hetero-cost workload in
+#                       fast mode, writes BENCH_search.json at the repo
+#                       root, and FAILS if the memo-warm hit-rate on the
+#                       reference workload drops below the pinned floor
+#                       (override with ASTRA_BENCH_MIN_HIT_RATE).
+#
 #   ./ci.sh            # tier-1 gate
 #   FAST=1 ./ci.sh     # tier-1 minus the release build (debug tests only)
 #   TIER2=1 ./ci.sh    # tier-1 + strict fmt/clippy lane
+#   BENCH=1 ./ci.sh    # tier-1 + perf smoke bench with hit-rate floor
 set -euo pipefail
 cd "$(dirname "$0")"
+ROOT="$(pwd)"
 
 # The crate manifest may live at the repo root or under rust/ depending on
 # how the workspace was materialized; prefer whichever exists.
@@ -50,7 +59,21 @@ if [ "${TIER2:-0}" = "1" ]; then
     echo "ci.sh: TIER2 requested but clippy unavailable" >&2
     exit 1
   fi
-else
+fi
+
+if [ "${BENCH:-0}" = "1" ]; then
+  # --- bench lane: perf smoke + memo hit-rate floor ---
+  # The floor is deliberately conservative: the warm pass on the reference
+  # workload re-scores an already-resident profile set, so its hit-rate
+  # sits near 1.0 when the memo is healthy; 0.50 is the issue's pinned
+  # minimum and catches scope/key regressions with wide margin.
+  run env ASTRA_BENCH_FAST=1 \
+      ASTRA_BENCH_OUT="$ROOT/BENCH_search.json" \
+      ASTRA_BENCH_MIN_HIT_RATE="${ASTRA_BENCH_MIN_HIT_RATE:-0.50}" \
+      cargo bench --bench perf_search
+fi
+
+if [ "${TIER2:-0}" != "1" ]; then
   # Formatting is advisory in tier-1: parts of the seed predate rustfmt
   # adoption, so a diff here warns but does not fail the gate.
   if cargo fmt --version >/dev/null 2>&1; then

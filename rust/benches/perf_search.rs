@@ -1,0 +1,160 @@
+//! Search-path perf instrument: the fig7 hetero-cost workload, cold
+//! (fresh `SharedCostMemo`) vs memo-warm (same engine, repeated), plus the
+//! pre-refactor non-streaming reference for context. Writes the
+//! machine-readable `BENCH_search.json` perf-trajectory artifact —
+//! strategies/sec, memo hit-rate, wall seconds per leg (see the
+//! `astra::cost` module docs for how to read it).
+//!
+//! Env knobs:
+//! * `ASTRA_BENCH_FAST=1`       — smaller caps for smoke/CI runs;
+//! * `ASTRA_BENCH_OUT=<path>`   — where to write `BENCH_search.json`
+//!                                (default: `BENCH_search.json` in cwd);
+//! * `ASTRA_BENCH_MIN_HIT_RATE=<0..1>` — exit nonzero if the *warm* memo
+//!   hit-rate drops below this floor (the `BENCH=1 ./ci.sh` gate).
+
+use astra::bench_util::section;
+use astra::coordinator::{AstraEngine, EngineConfig, SearchReport, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::json::Value;
+use astra::model::ModelRegistry;
+use std::time::Instant;
+
+fn engine(streaming: bool) -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, streaming, ..Default::default() },
+    )
+}
+
+fn hit_rate(r: &SearchReport) -> f64 {
+    let total = r.memo_hits + r.memo_misses;
+    if total == 0 {
+        0.0
+    } else {
+        r.memo_hits as f64 / total as f64
+    }
+}
+
+fn leg_json(r: &SearchReport, secs: f64) -> Value {
+    Value::obj()
+        .set("wall_secs", secs)
+        .set("generated", r.generated)
+        .set("scored", r.scored)
+        .set("pruned_pools", r.pruned_pools)
+        .set("strategies_per_sec", r.generated as f64 / secs.max(1e-12))
+        .set("memo_hits", r.memo_hits)
+        .set("memo_misses", r.memo_misses)
+        .set("memo_hit_rate", hit_rate(r))
+}
+
+fn main() {
+    let fast = std::env::var("ASTRA_BENCH_FAST").as_deref() == Ok("1");
+    let registry = ModelRegistry::builtin();
+    let model = registry.get("llama2-7b").unwrap().clone();
+    let cap = if fast { 12 } else { 48 };
+    let caps = vec![("a800", cap), ("h100", cap)];
+    let req = SearchRequest::hetero_cost(&caps, f64::INFINITY, model.clone()).unwrap();
+
+    section(&format!(
+        "perf_search — fig7 hetero-cost workload, llama2-7b on ≤{cap}×a800 + ≤{cap}×h100"
+    ));
+
+    // Cold: fresh engine, empty memo. This is the first-request latency a
+    // service tenant sees for a new model scope.
+    let eng = engine(true);
+    let t = Instant::now();
+    let cold_rep = eng.search(&req).unwrap();
+    let cold_secs = t.elapsed().as_secs_f64();
+    println!(
+        "cold : {cold_secs:.3}s  {} generated, {} scored, memo {}/{} ({:.1}% hit)",
+        cold_rep.generated,
+        cold_rep.scored,
+        cold_rep.memo_hits,
+        cold_rep.memo_misses,
+        100.0 * hit_rate(&cold_rep)
+    );
+
+    // Warm: same engine — every stage/sync profile is already resident.
+    // Best of two runs so a scheduler hiccup cannot poison the headline.
+    let mut warm_secs = f64::INFINITY;
+    let mut warm_rep = None;
+    for _ in 0..2 {
+        let t = Instant::now();
+        let r = eng.search(&req).unwrap();
+        let secs = t.elapsed().as_secs_f64();
+        if secs < warm_secs {
+            warm_secs = secs;
+            warm_rep = Some(r);
+        }
+    }
+    let warm_rep = warm_rep.unwrap();
+    println!(
+        "warm : {warm_secs:.3}s  memo {}/{} ({:.1}% hit)",
+        warm_rep.memo_hits,
+        warm_rep.memo_misses,
+        100.0 * hit_rate(&warm_rep)
+    );
+
+    // Reference: the pre-refactor collect-then-filter pipeline with
+    // per-chunk memos (context for the trajectory, not a gated number).
+    let t = Instant::now();
+    let ref_rep = engine(false).search(&req).unwrap();
+    let ref_secs = t.elapsed().as_secs_f64();
+    println!("ref  : {ref_secs:.3}s  (non-streaming reference path)");
+
+    let speedup = cold_secs / warm_secs.max(1e-12);
+    println!(
+        "memo-warm speedup: {speedup:.2}×  ({cold_secs:.3}s → {warm_secs:.3}s); \
+         streaming vs reference cold: {:.2}×",
+        ref_secs / cold_secs.max(1e-12)
+    );
+
+    // Sanity: warmth must not change what is selected.
+    let best = |r: &SearchReport| {
+        r.best().map(|s| (s.cost.tokens_per_s.to_bits(), s.money_usd.to_bits()))
+    };
+    assert_eq!(best(&cold_rep), best(&warm_rep), "memo warmth changed the selection");
+    assert_eq!(best(&cold_rep), best(&ref_rep), "streaming diverged from the reference");
+
+    let out = Value::obj()
+        .set(
+            "workload",
+            Value::obj()
+                .set("mode", "hetero-cost")
+                .set("model", model.name.as_str())
+                .set("caps", {
+                    let mut o = Value::obj();
+                    for &(name, c) in &caps {
+                        o = o.set(name, c);
+                    }
+                    o
+                })
+                .set("max_money", "inf")
+                .set("fast", fast)
+                .set("workers", eng.core().config.workers),
+        )
+        .set("cold", leg_json(&cold_rep, cold_secs))
+        .set("warm", leg_json(&warm_rep, warm_secs))
+        .set("reference_nonstreaming", leg_json(&ref_rep, ref_secs))
+        .set("speedup_warm_vs_cold", speedup);
+
+    let path = std::env::var("ASTRA_BENCH_OUT").unwrap_or_else(|_| "BENCH_search.json".into());
+    match std::fs::write(&path, astra::json::to_string_pretty(&out) + "\n") {
+        Ok(()) => println!("(json: {path})"),
+        Err(e) => eprintln!("perf_search: could not write {path}: {e}"),
+    }
+
+    // CI floor: the warm hit-rate is the memo's health signal — it decays
+    // if keys start carrying incidental state or the registry mis-scopes.
+    if let Ok(floor) = std::env::var("ASTRA_BENCH_MIN_HIT_RATE") {
+        let floor: f64 = floor.parse().expect("ASTRA_BENCH_MIN_HIT_RATE must be a number");
+        let got = hit_rate(&warm_rep);
+        if got < floor {
+            eprintln!(
+                "perf_search: FAIL — warm memo hit-rate {got:.3} below pinned floor {floor:.3}"
+            );
+            std::process::exit(1);
+        }
+        println!("warm memo hit-rate {got:.3} ≥ floor {floor:.3} — ok");
+    }
+}

@@ -13,6 +13,22 @@
 //! reported in [`SearchReport`] correspond to Table 1's "Search Time" and
 //! "Simulation Time" columns.
 //!
+//! ## Streaming scoring engine
+//!
+//! With `EngineConfig::streaming` (the default), the native pipeline never
+//! materializes a round's full candidate vector: the unit of parallel work
+//! is a `(cluster, tp, dp)` *pool*, and each worker fuses parameter
+//! expansion → rule filter → memory filter → cost scoring into one pass
+//! per pool, scoring through the core's [`SharedCostMemo`] (shared across
+//! chunks, sweep rounds and requests — see the [`crate::cost`] module docs
+//! for the memo architecture). The hetero-cost sweep additionally runs its
+//! pool totals in speculative waves ([`ScoringCore::hetero_cost_streaming`])
+//! whose deterministic replay keeps reports byte-identical to the serial
+//! sweep. `streaming: false` keeps the pre-refactor collect-then-filter
+//! pipeline as the reference half of the differential harness
+//! (`rust/tests/diff_streaming.rs`); the HLO engine always takes the
+//! reference path because its PJRT handle is batch-oriented.
+//!
 //! ## Engine anatomy: [`ScoringCore`] vs [`AstraEngine`]
 //!
 //! The PJRT executable handle is thread-confined (the `xla` wrappers are
@@ -25,7 +41,7 @@
 //! the historical single-owner API and is what the CLI constructs.
 
 use crate::cost::features::{pack_batch, OUT};
-use crate::cost::{CostBreakdown, CostModel, EtaProvider};
+use crate::cost::{CostBreakdown, CostModel, EtaProvider, MemoRegistry, MemoStats, SharedCostMemo};
 use crate::gbdt::EtaForests;
 use crate::gpu::GpuCatalog;
 use crate::hetero::HeteroSolver;
@@ -63,6 +79,21 @@ pub struct EngineConfig {
     /// for the exhaustive differential reference; results are identical,
     /// only the search time changes).
     pub money_prune: bool,
+    /// Stream generation → rule filter → memory filter → scoring in fused
+    /// per-worker passes over `(cluster, tp, dp)` pools, scoring through
+    /// the core's [`SharedCostMemo`] (the fast path; native engine only).
+    /// Off = the pre-refactor reference pipeline that materializes the full
+    /// candidate vector per round and memoizes per worker chunk — kept for
+    /// the differential harness, which proves the two paths select
+    /// identically.
+    pub streaming: bool,
+    /// Pool totals per speculative wave of the parallel hetero-cost sweep.
+    /// 1 = fully serial (each round's pruner sees every earlier round's
+    /// frontier, zero speculation waste); larger waves score consecutive
+    /// totals concurrently against a frontier *snapshot* and then replay
+    /// the admission decisions serially, so reports — including pruning
+    /// counts — stay byte-identical to the serial sweep at any wave size.
+    pub sweep_wave: usize,
     /// Keep this many best strategies in the report.
     pub top_k: usize,
 }
@@ -78,6 +109,8 @@ impl Default for EngineConfig {
             money: MoneyModel::default(),
             hetero_exhaustive: false,
             money_prune: true,
+            streaming: true,
+            sweep_wave: 2,
             top_k: 16,
         }
     }
@@ -203,6 +236,15 @@ pub struct SearchReport {
     pub search_secs: f64,
     /// Scoring wall time ("Simulation Time").
     pub simulate_secs: f64,
+    /// Shared-cost-memo hits accumulated by this search's scoring passes
+    /// (0 on the non-streaming reference path and the HLO engine). Like
+    /// the wall times these are observability, not results: a memo warmed
+    /// by earlier traffic raises hits, and concurrent workers may both
+    /// miss a key one of them is about to insert — so golden transcripts
+    /// and determinism diffs normalize them out.
+    pub memo_hits: u64,
+    /// Shared-cost-memo misses (see `memo_hits`).
+    pub memo_misses: u64,
     /// Best strategies, ascending step time.
     pub top: Vec<ScoredStrategy>,
     /// Pareto pool over (throughput, money) — all scored candidates.
@@ -227,9 +269,88 @@ pub struct ScoringCore {
     pub catalog: GpuCatalog,
     pub config: EngineConfig,
     cost: CostModel,
+    /// Shared cost memos, one per model scope ([`crate::cost::model_scope_key`]):
+    /// reused across worker chunks, sweep rounds and service requests. The
+    /// catalog/η/consts dimension of memo validity is pinned by `cost`
+    /// being immutable for the core's lifetime.
+    memos: MemoRegistry,
     /// Lifetime count of searches that entered the filter/score pipeline —
     /// the cache-effectiveness anchor for [`crate::service`] tests.
     searches: AtomicU64,
+}
+
+/// One unit of streaming scoring work: a fixed `(cluster, tp, dp)` pool
+/// whose parameter cross-product is expanded, filtered and scored in a
+/// single per-worker pass.
+struct PoolTask {
+    cluster: ClusterAssignment,
+    tp: usize,
+    dp: usize,
+}
+
+/// Outcome of streaming one pool. Counts and scored strategies are
+/// deterministic (pure functions of the pool); the wall-second fields are
+/// per-worker accumulations used only to apportion the report's search vs
+/// simulation times.
+#[derive(Default)]
+struct PoolOutcome {
+    generated: usize,
+    rule_filtered: usize,
+    mem_filtered: usize,
+    scored: Vec<ScoredStrategy>,
+    memo: MemoStats,
+    filter_secs: f64,
+    score_secs: f64,
+}
+
+/// Aggregation of a streaming pass over many pools.
+struct StreamedBatch {
+    generated: usize,
+    rule_filtered: usize,
+    mem_filtered: usize,
+    scored: Vec<ScoredStrategy>,
+    memo: MemoStats,
+    /// Wall-clock share attributed to generation + filtering.
+    search_secs: f64,
+    /// Wall-clock share attributed to cost scoring.
+    simulate_secs: f64,
+}
+
+impl StreamedBatch {
+    /// Fold per-pool outcomes (in pool order) and split the pass's wall
+    /// time between the filter and scoring phases in proportion to the
+    /// workers' accumulated busy time in each — the fused pass has no
+    /// phase barrier to time directly, but `search + simulate` still sums
+    /// to the true wall clock.
+    fn collect(outcomes: Vec<PoolOutcome>, wall_secs: f64) -> StreamedBatch {
+        let mut b = StreamedBatch {
+            generated: 0,
+            rule_filtered: 0,
+            mem_filtered: 0,
+            scored: Vec::new(),
+            memo: MemoStats::default(),
+            search_secs: 0.0,
+            simulate_secs: 0.0,
+        };
+        let (mut filter_busy, mut score_busy) = (0.0f64, 0.0f64);
+        for mut oc in outcomes {
+            b.generated += oc.generated;
+            b.rule_filtered += oc.rule_filtered;
+            b.mem_filtered += oc.mem_filtered;
+            b.memo.merge(oc.memo);
+            b.scored.append(&mut oc.scored);
+            filter_busy += oc.filter_secs;
+            score_busy += oc.score_secs;
+        }
+        let busy = filter_busy + score_busy;
+        if busy > 0.0 {
+            b.search_secs = wall_secs * filter_busy / busy;
+            b.simulate_secs = wall_secs * score_busy / busy;
+        } else {
+            b.search_secs = wall_secs;
+        }
+        b
+    }
 }
 
 impl ScoringCore {
@@ -253,12 +374,37 @@ impl ScoringCore {
             EtaProvider::Analytic
         };
         let cost = CostModel::new(catalog.clone(), eta);
-        ScoringCore { catalog, config, cost, searches: AtomicU64::new(0) }
+        ScoringCore {
+            catalog,
+            config,
+            cost,
+            memos: MemoRegistry::new(16),
+            searches: AtomicU64::new(0),
+        }
     }
 
     /// Immutable access to the underlying cost model (tests/benches).
     pub fn cost_model(&self) -> &CostModel {
         &self.cost
+    }
+
+    /// The shared memo for a model's scope (tests/benches; searches fetch
+    /// their own through the same registry).
+    pub fn memo_for(&self, model: &ModelSpec) -> std::sync::Arc<SharedCostMemo> {
+        self.memos.for_model(model)
+    }
+
+    /// `(scopes, lifetime hits, lifetime misses)` across every live memo —
+    /// the service stats-line payload.
+    pub fn memo_counters(&self) -> (usize, u64, u64) {
+        let (h, m) = self.memos.counters();
+        (self.memos.scopes(), h, m)
+    }
+
+    /// Whether this search runs the fused streaming pipeline: configured
+    /// on, and not diverted to the thread-confined HLO scorer.
+    fn streaming_native(&self, rt: Option<&Mutex<ScorerRuntime>>) -> bool {
+        self.config.streaming && !(self.config.engine == ScoringEngine::Hlo && rt.is_some())
     }
 
     /// How many searches have entered the filter/score pipeline (cache hits
@@ -312,6 +458,14 @@ impl ScoringCore {
     ) -> Result<SearchReport> {
         let t0 = Instant::now();
         let space = SearchSpace::new(self.config.space.clone());
+        if self.streaming_native(rt) {
+            let tasks: Vec<PoolTask> = space
+                .homogeneous_pools(model, &self.catalog, gpu, count)
+                .into_iter()
+                .map(|(cluster, tp, dp)| PoolTask { cluster, tp, dp })
+                .collect();
+            return self.stream_and_report(model, &space, tasks, t0, None);
+        }
         let generated = space.homogeneous(model, &self.catalog, gpu, count);
         self.filter_and_score(model, generated, t0, None, rt)
     }
@@ -346,6 +500,11 @@ impl ScoringCore {
         }
         let space = self.hetero_space();
         let solver = HeteroSolver::default();
+        if self.streaming_native(rt) {
+            let mut tasks: Vec<PoolTask> = Vec::new();
+            self.hetero_pool_tasks(model, total, &caps, &space, &solver, |_, _, _| true, &mut tasks);
+            return self.stream_and_report(model, &space, tasks, t0, None);
+        }
         let mut generated: Vec<ParallelStrategy> = Vec::new();
         self.generate_hetero_pools(model, total, &caps, &space, &solver, |_, _, _| true, &mut generated);
         self.filter_and_score(model, generated, t0, None, rt)
@@ -358,12 +517,14 @@ impl ScoringCore {
         SearchSpace::new(SpaceConfig { vpp_candidates: vec![1], ..self.config.space.clone() })
     }
 
-    /// Mode-2-style enumeration for one fixed cluster size: tp × pp × dp
-    /// splits × segment/layer assignments from the [`HeteroSolver`].
-    /// `admit` sees each candidate pool `(assignment, tp, dp)` before
-    /// parameter expansion — the hetero-cost pruner hooks in there; mode 2
-    /// admits everything.
-    fn generate_hetero_pools(
+    /// Mode-2-style pool enumeration for one fixed cluster size: tp × pp ×
+    /// dp splits × segment/layer assignments from the [`HeteroSolver`].
+    /// `admit` sees each candidate pool `(assignment, tp, dp)` before it is
+    /// emitted — the hetero-cost pruner hooks in there; mode 2 admits
+    /// everything. Both the streaming fan-out and the reference generator
+    /// ([`Self::generate_hetero_pools`]) consume this one enumeration, so
+    /// their pool order cannot drift.
+    fn hetero_pool_tasks(
         &self,
         model: &ModelSpec,
         total: usize,
@@ -371,7 +532,7 @@ impl ScoringCore {
         space: &SearchSpace,
         solver: &HeteroSolver,
         mut admit: impl FnMut(&ClusterAssignment, usize, usize) -> bool,
-        out: &mut Vec<ParallelStrategy>,
+        out: &mut Vec<PoolTask>,
     ) {
         for tp in space.valid_tps(model, &self.catalog) {
             for pp in 2..=space.config.max_pp.min(model.layers).min(total / tp) {
@@ -389,9 +550,29 @@ impl ScoringCore {
                     if !admit(&ca, tp, dp) {
                         continue;
                     }
-                    space.expand_params(model, &ca, tp, dp, out);
+                    out.push(PoolTask { cluster: ca, tp, dp });
                 }
             }
+        }
+    }
+
+    /// Collected form of [`Self::hetero_pool_tasks`] for the non-streaming
+    /// reference pipeline: expand every admitted pool into one flat
+    /// candidate vector.
+    fn generate_hetero_pools(
+        &self,
+        model: &ModelSpec,
+        total: usize,
+        caps: &[(crate::gpu::GpuType, usize)],
+        space: &SearchSpace,
+        solver: &HeteroSolver,
+        admit: impl FnMut(&ClusterAssignment, usize, usize) -> bool,
+        out: &mut Vec<ParallelStrategy>,
+    ) {
+        let mut tasks: Vec<PoolTask> = Vec::new();
+        self.hetero_pool_tasks(model, total, caps, space, solver, admit, &mut tasks);
+        for t in &tasks {
+            space.expand_params(model, &t.cluster, t.tp, t.dp, out);
         }
     }
 
@@ -418,6 +599,21 @@ impl ScoringCore {
         let t0 = Instant::now();
         validate_budget(max_money)?;
         let space = SearchSpace::new(self.config.space.clone());
+        if self.streaming_native(rt) {
+            // Every count's pools stream through one fan-out: the shared
+            // memo carries stage profiles across the whole sweep instead
+            // of rebuilding them per round.
+            let mut tasks: Vec<PoolTask> = Vec::new();
+            for count in SearchSpace::count_sweep(max_count) {
+                tasks.extend(
+                    space
+                        .homogeneous_pools(model, &self.catalog, gpu, count)
+                        .into_iter()
+                        .map(|(cluster, tp, dp)| PoolTask { cluster, tp, dp }),
+                );
+            }
+            return self.stream_and_report(model, &space, tasks, t0, Some(max_money));
+        }
         let mut generated: Vec<ParallelStrategy> = Vec::new();
         for count in SearchSpace::count_sweep(max_count) {
             generated.extend(space.homogeneous(model, &self.catalog, gpu, count));
@@ -467,6 +663,14 @@ impl ScoringCore {
         if totals.last() != Some(&cap_sum) {
             totals.push(cap_sum);
         }
+        if self.streaming_native(rt) {
+            return Ok(self.hetero_cost_streaming(
+                model, &caps, max_money, &space, &solver, prune, pruner, &totals,
+            ));
+        }
+        // Pre-refactor reference sweep: strictly serial rounds, full
+        // candidate vector per round, per-chunk memoization. Kept as the
+        // slow half of the differential harness.
         let mut n_generated = 0usize;
         let mut rule_filtered = 0usize;
         let mut mem_filtered = 0usize;
@@ -515,7 +719,216 @@ impl ScoringCore {
             search_secs,
             simulate_secs,
             Some(max_money),
+            MemoStats::default(),
             scored_all,
+        ))
+    }
+
+    /// The parallel hetero-cost sweep: pool totals are processed in
+    /// *speculative waves* of `config.sweep_wave` consecutive rounds.
+    ///
+    /// Phase 1 (serial, cheap) enumerates each round's candidate pools
+    /// with their branch-and-bound bounds and admits them *speculatively*
+    /// against a snapshot of the dominance frontier taken at the wave
+    /// start. Phase 2 (parallel) streams every speculatively admitted pool
+    /// of the wave — across totals — through the fused expand/filter/score
+    /// pass. Phase 3 (serial) replays the admissions in round order
+    /// against the true running frontier, observing each round's accepted
+    /// strategies before the next round's decisions, and discards the
+    /// outcomes of pools the true frontier rejects (bounded speculation
+    /// waste, the price of cross-total parallelism).
+    ///
+    /// Because snapshot coverage is a subset of every later frontier's
+    /// coverage, speculation only ever *over*-admits — so the replay has an
+    /// outcome for every pool it accepts, and the reported counts, pruning
+    /// statistics, frontier and picks are byte-identical to the serial
+    /// sweep (`sweep_wave = 1`) at any wave size or worker count.
+    #[allow(clippy::too_many_arguments)]
+    fn hetero_cost_streaming(
+        &self,
+        model: &ModelSpec,
+        caps: &[(crate::gpu::GpuType, usize)],
+        max_money: f64,
+        space: &SearchSpace,
+        solver: &HeteroSolver,
+        prune: bool,
+        mut pruner: DominancePruner,
+        totals: &[usize],
+    ) -> SearchReport {
+        let memo = self.memos.for_model(model);
+        let money = &self.config.money;
+        let wave = self.config.sweep_wave.max(1);
+        let mut n_generated = 0usize;
+        let mut rule_filtered = 0usize;
+        let mut mem_filtered = 0usize;
+        let mut search_secs = 0.0f64;
+        let mut simulate_secs = 0.0f64;
+        let mut memo_stats = MemoStats::default();
+        let mut scored_all: Vec<ScoredStrategy> = Vec::new();
+        for wave_totals in totals.chunks(wave) {
+            let t_gen = Instant::now();
+            let snapshot = pruner.clone();
+            // Phase 1: per round, every pool's (ub tput, lb USD, admitted
+            // vs snapshot); speculatively admitted pools append to one
+            // flat task list in (round, pool) order.
+            let mut rounds: Vec<Vec<(f64, f64, bool)>> = Vec::with_capacity(wave_totals.len());
+            let mut tasks: Vec<PoolTask> = Vec::new();
+            for &total in wave_totals {
+                let mut meta: Vec<(f64, f64, bool)> = Vec::new();
+                self.hetero_pool_tasks(
+                    model,
+                    total,
+                    caps,
+                    space,
+                    solver,
+                    |ca, tp, dp| {
+                        let (ub, lb) = if prune {
+                            money.pool_bounds(model, &ca.gpus_by_type(tp, dp), &self.catalog)
+                        } else {
+                            (f64::INFINITY, 0.0)
+                        };
+                        let spec = !prune || snapshot.would_admit(ub, lb);
+                        meta.push((ub, lb, spec));
+                        spec
+                    },
+                    &mut tasks,
+                );
+                rounds.push(meta);
+            }
+            let gen_secs = t_gen.elapsed().as_secs_f64();
+
+            // Phase 2: one parallel streaming pass over the whole wave.
+            let t_run = Instant::now();
+            let mut outcomes = self.stream_pools(model, space, &tasks, &memo);
+            let wall = t_run.elapsed().as_secs_f64();
+
+            // Phase 3: deterministic serial replay of the admissions.
+            let (mut filter_busy, mut score_busy) = (0.0f64, 0.0f64);
+            let mut oc_idx = 0usize;
+            for meta in &rounds {
+                let mut round_scored: Vec<ScoredStrategy> = Vec::new();
+                for &(ub, lb, spec) in meta {
+                    let admit = !prune || pruner.admit(ub, lb);
+                    if !spec {
+                        debug_assert!(!admit, "snapshot admitted what the frontier rejects");
+                        continue;
+                    }
+                    let oc = &mut outcomes[oc_idx];
+                    oc_idx += 1;
+                    filter_busy += oc.filter_secs;
+                    score_busy += oc.score_secs;
+                    if !admit {
+                        // Speculation waste: scored in phase 2, pruned by
+                        // the true frontier — dropped so the report matches
+                        // the serial sweep exactly.
+                        continue;
+                    }
+                    n_generated += oc.generated;
+                    rule_filtered += oc.rule_filtered;
+                    mem_filtered += oc.mem_filtered;
+                    memo_stats.merge(oc.memo);
+                    round_scored.append(&mut oc.scored);
+                }
+                // Observe only after the round completes, exactly like the
+                // serial sweep: admissions within a round never see the
+                // round's own strategies.
+                for s in &round_scored {
+                    pruner.observe(s.cost.tokens_per_s, s.money_usd);
+                }
+                scored_all.extend(round_scored);
+            }
+            let busy = filter_busy + score_busy;
+            if busy > 0.0 {
+                search_secs += gen_secs + wall * filter_busy / busy;
+                simulate_secs += wall * score_busy / busy;
+            } else {
+                search_secs += gen_secs + wall;
+            }
+        }
+        self.assemble_report(
+            n_generated,
+            rule_filtered,
+            mem_filtered,
+            pruner.pruned(),
+            search_secs,
+            simulate_secs,
+            Some(max_money),
+            memo_stats,
+            scored_all,
+        )
+    }
+
+    /// The fused streaming pass: expand → rule filter → memory filter →
+    /// score, one pool per work item on the scoped worker pool, scoring
+    /// through the shared memo. No candidate vector is ever materialized —
+    /// each strategy goes from the generator's visitor straight through the
+    /// filters into (at most) one `ScoredStrategy`. `par_for_indices`
+    /// returns outcomes in task order whatever the worker count, so
+    /// downstream ranking is deterministic.
+    fn stream_pools(
+        &self,
+        model: &ModelSpec,
+        space: &SearchSpace,
+        tasks: &[PoolTask],
+        memo: &SharedCostMemo,
+    ) -> Vec<PoolOutcome> {
+        let rules = &self.config.rules;
+        let catalog = &self.catalog;
+        let cost = &self.cost;
+        let money = &self.config.money;
+        let mem = MemoryModel::default();
+        par_for_indices(tasks.len(), self.config.workers, |i| {
+            let task = &tasks[i];
+            let mut oc = PoolOutcome::default();
+            let t_pool = Instant::now();
+            space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
+                oc.generated += 1;
+                if rules.filters_out(&s).unwrap_or(true) {
+                    oc.rule_filtered += 1;
+                    return;
+                }
+                if !mem.fits(model, &s, catalog) {
+                    oc.mem_filtered += 1;
+                    return;
+                }
+                let t_score = Instant::now();
+                let breakdown = cost.evaluate_shared(model, &s, memo, &mut oc.memo);
+                let money_usd = money.cost_usd(model, &s, catalog, breakdown.step_time);
+                oc.score_secs += t_score.elapsed().as_secs_f64();
+                oc.scored.push(ScoredStrategy { strategy: s, cost: breakdown, money_usd });
+            });
+            oc.filter_secs = (t_pool.elapsed().as_secs_f64() - oc.score_secs).max(0.0);
+            oc
+        })
+    }
+
+    /// Streaming-path tail for the single-sweep modes (1, 2 and 3): fan the
+    /// pool tasks out, aggregate, assemble. `t0` anchors the task
+    /// enumeration share of "Search Time".
+    fn stream_and_report(
+        &self,
+        model: &ModelSpec,
+        space: &SearchSpace,
+        tasks: Vec<PoolTask>,
+        t0: Instant,
+        budget: Option<f64>,
+    ) -> Result<SearchReport> {
+        self.searches.fetch_add(1, Ordering::Relaxed);
+        let memo = self.memos.for_model(model);
+        let setup_secs = t0.elapsed().as_secs_f64();
+        let t_run = Instant::now();
+        let outcomes = self.stream_pools(model, space, &tasks, &memo);
+        let batch = StreamedBatch::collect(outcomes, t_run.elapsed().as_secs_f64());
+        Ok(self.assemble_report(
+            batch.generated,
+            batch.rule_filtered,
+            batch.mem_filtered,
+            0,
+            setup_secs + batch.search_secs,
+            batch.simulate_secs,
+            budget,
+            batch.memo,
+            batch.scored,
         ))
     }
 
@@ -544,6 +957,7 @@ impl ScoringCore {
             search_secs,
             simulate_secs,
             budget,
+            MemoStats::default(),
             scored,
         ))
     }
@@ -635,6 +1049,7 @@ impl ScoringCore {
         search_secs: f64,
         simulate_secs: f64,
         budget: Option<f64>,
+        memo: MemoStats,
         mut scored: Vec<ScoredStrategy>,
     ) -> SearchReport {
         let pool = OptimalPool::build(
@@ -670,6 +1085,8 @@ impl ScoringCore {
             pruned_pools,
             search_secs,
             simulate_secs,
+            memo_hits: memo.hits,
+            memo_misses: memo.misses,
             top: scored,
             pool,
         }
@@ -1081,6 +1498,73 @@ mod tests {
             "pick ${} > budget ${budget}",
             pick.money_usd
         );
+    }
+
+    #[test]
+    fn streaming_reports_memo_counters_and_warms_up() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let eng = engine(); // streaming is the default
+        let req = SearchRequest::homogeneous("a800", 16, model.clone()).unwrap();
+        let cold = eng.search(&req).unwrap();
+        assert!(cold.memo_hits + cold.memo_misses > 0, "streaming path must count memo traffic");
+        assert!(cold.memo_misses > 0, "a fresh memo must miss");
+        let warm = eng.search(&req).unwrap();
+        assert_eq!(warm.memo_misses, 0, "second identical search must be fully memo-warm");
+        assert!(warm.memo_hits > 0);
+        // Warmth is observability only — results are unchanged.
+        assert_eq!(cold.generated, warm.generated);
+        assert_eq!(cold.scored, warm.scored);
+        assert_eq!(
+            cold.best().unwrap().cost.step_time.to_bits(),
+            warm.best().unwrap().cost.step_time.to_bits()
+        );
+        // Per-report deltas reconcile with the scope's lifetime counters
+        // (both searches hit the same registry scope for this model).
+        let scope = eng.core().memo_for(&model);
+        assert_eq!(scope.hits(), cold.memo_hits + warm.memo_hits);
+        assert_eq!(scope.misses(), cold.memo_misses + warm.memo_misses);
+        let (scopes, hits, misses) = eng.core().memo_counters();
+        assert_eq!(scopes, 1);
+        assert_eq!((hits, misses), (scope.hits(), scope.misses()));
+    }
+
+    #[test]
+    fn reference_path_reports_zero_memo_counters() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let eng = AstraEngine::new(
+            GpuCatalog::builtin(),
+            EngineConfig { use_forests: false, streaming: false, ..Default::default() },
+        );
+        let rep = eng.search(&SearchRequest::homogeneous("a800", 16, model).unwrap()).unwrap();
+        assert_eq!((rep.memo_hits, rep.memo_misses), (0, 0));
+        assert!(rep.scored > 0);
+    }
+
+    #[test]
+    fn streaming_matches_reference_counts_and_best() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let mk = |streaming: bool| {
+            AstraEngine::new(
+                GpuCatalog::builtin(),
+                EngineConfig { use_forests: false, streaming, ..Default::default() },
+            )
+        };
+        let req = SearchRequest::homogeneous("a800", 32, model).unwrap();
+        let fast = mk(true).search(&req).unwrap();
+        let slow = mk(false).search(&req).unwrap();
+        assert_eq!(fast.generated, slow.generated);
+        assert_eq!(fast.rule_filtered, slow.rule_filtered);
+        assert_eq!(fast.mem_filtered, slow.mem_filtered);
+        assert_eq!(fast.scored, slow.scored);
+        assert_eq!(fast.top.len(), slow.top.len());
+        for (a, b) in fast.top.iter().zip(&slow.top) {
+            assert_eq!(a.strategy, b.strategy, "streaming selected different strategies");
+            assert_eq!(a.cost.step_time.to_bits(), b.cost.step_time.to_bits());
+            assert_eq!(a.money_usd.to_bits(), b.money_usd.to_bits());
+        }
     }
 
     #[test]

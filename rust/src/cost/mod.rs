@@ -11,6 +11,46 @@
 //! forward and backward separately, plus data-parallel gradient
 //! synchronization, optimizer step and offload traffic — each hidden
 //! partially when the corresponding overlap flag is on.
+//!
+//! ## Memo architecture
+//!
+//! Within one search every strategy shares the model, so a stage's time is
+//! fully determined by its [`StageKey`] (GPU types, layer count, tp/dp/mbs,
+//! recompute and overlap flags) and the DP-sync/optimizer terms by a
+//! [`SyncKey`] — tens of thousands of strategies collapse onto a few hundred
+//! distinct profiles. Two memo layers exploit that:
+//!
+//! * [`CostMemo`] — the historical single-owner memo, still used by
+//!   [`CostModel::evaluate_batch`] (the non-streaming reference pipeline)
+//!   and by [`CostModel::evaluate`], which routes through the same
+//!   [`CostModel::evaluate_memo`] path with a throwaway memo.
+//! * [`SharedCostMemo`] — a sharded, lock-striped concurrent memo owned by
+//!   the coordinator's `ScoringCore` through a [`MemoRegistry`]. One memo
+//!   is shared across worker chunks, across every round of the mode-2/3 and
+//!   hetero-cost sweeps, and across service requests that hash to the same
+//!   model scope — this is what makes repeat traffic sublinear in the
+//!   candidates actually touched.
+//!
+//! **Invalidation rules.** Everything strategy- or stage-shaped enters the
+//! *key* (so it can never go stale); everything else is part of the memo's
+//! *scope* and therefore decides which memo may be consulted at all:
+//!
+//! * key: GPU type per stage, layers/stage, tp, dp, mbs, ep, recompute
+//!   variant, overlap flags, flash-attn (see [`StageKey`]/[`SyncKey`]);
+//! * scope: the full `ModelSpec` (hashed by [`model_scope_key`]) — each
+//!   distinct model gets its own [`SharedCostMemo`];
+//! * fixed per `CostModel` lifetime: the GPU catalog, the η provider and
+//!   [`CostConsts`]. These are immutable once a `ScoringCore` is built, so
+//!   a registry owned by the core never needs to invalidate them; building
+//!   a new core (new catalog / η source / consts) starts from empty memos.
+//!
+//! Hit/miss counters are surfaced per search in `SearchReport.memo_hits` /
+//! `memo_misses` and benchmarked by `rust/benches/perf_search.rs`, which
+//! writes `BENCH_search.json`: `cold` is a fresh-memo search, `warm` repeats
+//! it against the populated memo; `memo_hit_rate` is hits/(hits+misses) and
+//! `strategies_per_sec` is generated candidates over wall seconds. The
+//! `BENCH=1 ./ci.sh` lane fails if the warm hit-rate drops below its pinned
+//! floor.
 
 pub mod features;
 pub mod ops;
@@ -22,6 +62,10 @@ use crate::memory::MemoryModel;
 use crate::model::ModelSpec;
 use crate::strategy::{ParallelStrategy, Recompute};
 use ops::{stage_comm, stage_fwd_ops};
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Source of the η factors.
 #[derive(Debug, Clone)]
@@ -196,13 +240,274 @@ struct SyncKey {
     param_ovl: bool,
 }
 
+impl SyncKey {
+    fn new(s: &ParallelStrategy, stage: usize) -> SyncKey {
+        SyncKey {
+            gpu: s.cluster.gpu_of_stage(stage) as u16,
+            layers: s.cluster.layers_of_stage(stage) as u16,
+            is_first: stage == 0,
+            is_last: stage == s.pp() - 1,
+            tp: s.tp as u16,
+            dp: s.dp as u32,
+            dist_opt: s.use_distributed_optimizer,
+            offload: s.offload_optimizer,
+            grad_ovl: s.overlap_grad_reduce,
+            param_ovl: s.overlap_param_gather,
+        }
+    }
+}
+
 /// Per-batch memo for [`CostModel::evaluate_batch`].
 #[derive(Default)]
 pub struct CostMemo {
-    stages: std::collections::HashMap<StageKey, StageTime>,
-    syncs: std::collections::HashMap<SyncKey, (f64, f64, f64)>, // (dp, opt, off)
+    stages: HashMap<StageKey, StageTime>,
+    syncs: HashMap<SyncKey, (f64, f64, f64)>, // (dp, opt, off)
     pub hits: usize,
     pub misses: usize,
+}
+
+/// Deterministic FNV-1a [`Hasher`] for shard selection (the std
+/// `DefaultHasher` is randomly seeded per process; shard choice never
+/// affects results, but deterministic striping keeps perf reproducible).
+struct FnvHasher(u64);
+
+impl Hasher for FnvHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+}
+
+fn shard_of<K: Hash>(key: &K, shards: usize) -> usize {
+    let mut h = FnvHasher(0xcbf29ce484222325);
+    key.hash(&mut h);
+    (h.finish() % shards as u64) as usize
+}
+
+/// Per-pass memo hit/miss accounting. Each worker accumulates its own
+/// `MemoStats` locally (no atomics on the per-candidate path) and the
+/// coordinator merges them; the [`SharedCostMemo`] additionally keeps
+/// lifetime totals for cross-request observability.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemoStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl MemoStats {
+    pub fn merge(&mut self, other: MemoStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+
+    /// hits / (hits + misses); 0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Sharded, lock-striped concurrent memo for [`CostModel::evaluate_shared`].
+///
+/// Unlike the per-batch [`CostMemo`], one `SharedCostMemo` outlives a single
+/// worker chunk: the coordinator reuses it across chunks, across all rounds
+/// of a count sweep, and across service requests that share a model scope
+/// (see the module docs for the key-vs-scope invalidation rules). Lookups
+/// lock only the key's shard; misses compute *outside* the lock, so two
+/// workers racing on the same key may both compute it — the values are pure
+/// functions of the key within a scope, so the duplicate insert is
+/// idempotent and results stay deterministic.
+pub struct SharedCostMemo {
+    stages: Vec<Mutex<HashMap<StageKey, StageTime>>>,
+    syncs: Vec<Mutex<HashMap<SyncKey, (f64, f64, f64)>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for SharedCostMemo {
+    fn default() -> Self {
+        SharedCostMemo::new()
+    }
+}
+
+impl SharedCostMemo {
+    /// Default striping: enough shards that a full worker pool rarely
+    /// collides (profiles cluster on a few hundred distinct keys).
+    pub fn new() -> SharedCostMemo {
+        SharedCostMemo::with_shards(64)
+    }
+
+    pub fn with_shards(shards: usize) -> SharedCostMemo {
+        let shards = shards.max(1);
+        SharedCostMemo {
+            stages: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            syncs: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn get_stage(&self, key: &StageKey) -> Option<StageTime> {
+        self.stages[shard_of(key, self.stages.len())].lock().unwrap().get(key).copied()
+    }
+
+    fn put_stage(&self, key: StageKey, val: StageTime) {
+        self.stages[shard_of(&key, self.stages.len())].lock().unwrap().insert(key, val);
+    }
+
+    fn get_sync(&self, key: &SyncKey) -> Option<(f64, f64, f64)> {
+        self.syncs[shard_of(key, self.syncs.len())].lock().unwrap().get(key).copied()
+    }
+
+    fn put_sync(&self, key: SyncKey, val: (f64, f64, f64)) {
+        self.syncs[shard_of(&key, self.syncs.len())].lock().unwrap().insert(key, val);
+    }
+
+    /// Fold one pass's local counters into the lifetime totals.
+    fn record(&self, stats: MemoStats) {
+        if stats.hits > 0 {
+            self.hits.fetch_add(stats.hits, Ordering::Relaxed);
+        }
+        if stats.misses > 0 {
+            self.misses.fetch_add(stats.misses, Ordering::Relaxed);
+        }
+    }
+
+    /// Lifetime hit count across every pass that used this memo.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime miss count.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct stage profiles resident.
+    pub fn stage_entries(&self) -> usize {
+        self.stages.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Distinct sync profiles resident.
+    pub fn sync_entries(&self) -> usize {
+        self.syncs.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Drop every entry (counters are kept — they are lifetime totals).
+    pub fn clear(&self) {
+        for s in &self.stages {
+            s.lock().unwrap().clear();
+        }
+        for s in &self.syncs {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+/// Scope key of a [`SharedCostMemo`]: the full model spec. Catalog, η and
+/// cost constants are fixed per `CostModel` lifetime, so two searches may
+/// share a memo exactly when their models hash equal under this key.
+pub fn model_scope_key(m: &ModelSpec) -> u64 {
+    let mut h = FnvHasher(0xcbf29ce484222325);
+    h.write(m.name.as_bytes());
+    for v in [
+        m.layers,
+        m.hidden,
+        m.heads,
+        m.kv_heads,
+        m.ffn,
+        m.vocab,
+        m.seq_len,
+        m.global_batch,
+        m.num_experts,
+        m.moe_topk,
+    ] {
+        h.write(&(v as u64).to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Bounded registry of [`SharedCostMemo`]s keyed by [`model_scope_key`].
+/// Owned by the coordinator's `ScoringCore`; service requests that share a
+/// model scope get the same memo back and therefore score mostly warm.
+/// Eviction is least-recently-used beyond `cap` (a logical clock, not wall
+/// time, so behavior is deterministic for a fixed request sequence).
+pub struct MemoRegistry {
+    cap: usize,
+    clock: AtomicU64,
+    scopes: Mutex<Vec<(u64, u64, Arc<SharedCostMemo>)>>, // (key, last_use, memo)
+    /// Hit/miss totals of scopes the LRU has evicted, folded in at
+    /// eviction time so [`Self::counters`] is a true lifetime figure that
+    /// never decreases between stats polls.
+    evicted_hits: AtomicU64,
+    evicted_misses: AtomicU64,
+}
+
+impl MemoRegistry {
+    pub fn new(cap: usize) -> MemoRegistry {
+        MemoRegistry {
+            cap: cap.max(1),
+            clock: AtomicU64::new(0),
+            scopes: Mutex::new(Vec::new()),
+            evicted_hits: AtomicU64::new(0),
+            evicted_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The memo for this model's scope, creating (and possibly evicting the
+    /// least-recently-used scope) on first sight.
+    pub fn for_model(&self, m: &ModelSpec) -> Arc<SharedCostMemo> {
+        let key = model_scope_key(m);
+        let now = self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut scopes = self.scopes.lock().unwrap();
+        if let Some(entry) = scopes.iter_mut().find(|(k, _, _)| *k == key) {
+            entry.1 = now;
+            return entry.2.clone();
+        }
+        if scopes.len() >= self.cap {
+            let mut oldest = 0usize;
+            for (i, entry) in scopes.iter().enumerate() {
+                if entry.1 < scopes[oldest].1 {
+                    oldest = i;
+                }
+            }
+            let (_, _, evicted) = scopes.swap_remove(oldest);
+            self.evicted_hits.fetch_add(evicted.hits(), Ordering::Relaxed);
+            self.evicted_misses.fetch_add(evicted.misses(), Ordering::Relaxed);
+        }
+        let memo = Arc::new(SharedCostMemo::new());
+        scopes.push((key, now, memo.clone()));
+        memo
+    }
+
+    /// Number of live scopes.
+    pub fn scopes(&self) -> usize {
+        self.scopes.lock().unwrap().len()
+    }
+
+    /// Summed lifetime (hits, misses) over every scope ever registered —
+    /// live scopes plus the folded-in totals of evicted ones, so the
+    /// figure is monotone across stats polls.
+    pub fn counters(&self) -> (u64, u64) {
+        let scopes = self.scopes.lock().unwrap();
+        scopes.iter().fold(
+            (
+                self.evicted_hits.load(Ordering::Relaxed),
+                self.evicted_misses.load(Ordering::Relaxed),
+            ),
+            |(h, m), (_, _, memo)| (h + memo.hits(), m + memo.misses()),
+        )
+    }
 }
 
 impl CostModel {
@@ -400,18 +705,7 @@ impl CostModel {
             };
             stage_times.push(st);
 
-            let ykey = SyncKey {
-                gpu: s.cluster.gpu_of_stage(i) as u16,
-                layers: s.cluster.layers_of_stage(i) as u16,
-                is_first: i == 0,
-                is_last: i == pp - 1,
-                tp: s.tp as u16,
-                dp: s.dp as u32,
-                dist_opt: s.use_distributed_optimizer,
-                offload: s.offload_optimizer,
-                grad_ovl: s.overlap_grad_reduce,
-                param_ovl: s.overlap_param_gather,
-            };
+            let ykey = SyncKey::new(s, i);
             let (dp_t, opt_t, off_t) = match memo.syncs.get(&ykey) {
                 Some(v) => {
                     memo.hits += 1;
@@ -429,6 +723,69 @@ impl CostModel {
             opt_worst = opt_worst.max(opt_t);
             off_worst = off_worst.max(off_t);
         }
+        self.compose(m, s, k, stage_times, dp_worst, opt_worst, off_worst)
+    }
+
+    /// Single evaluation against a concurrent [`SharedCostMemo`], the
+    /// coordinator's streaming scoring path. Hit/miss deltas land in the
+    /// caller's local `stats` (merged into the search report) and in the
+    /// memo's lifetime counters. Results are bit-identical to
+    /// [`Self::evaluate`] / [`Self::evaluate_memo`]: the memo only caches
+    /// values those paths would recompute.
+    pub fn evaluate_shared(
+        &self,
+        m: &ModelSpec,
+        s: &ParallelStrategy,
+        memo: &SharedCostMemo,
+        stats: &mut MemoStats,
+    ) -> CostBreakdown {
+        let mem = MemoryModel::default();
+        let pp = s.pp();
+        let k = s.num_microbatches();
+        let mut local = MemoStats::default();
+
+        let mut stage_times = Vec::with_capacity(pp);
+        let mut dp_worst = 0.0f64;
+        let mut opt_worst = 0.0f64;
+        let mut off_worst = 0.0f64;
+        for i in 0..pp {
+            let skey = StageKey::new(s, i);
+            let st = match memo.get_stage(&skey) {
+                Some(st) => {
+                    local.hits += 1;
+                    st
+                }
+                None => {
+                    local.misses += 1;
+                    // Compute outside the shard lock; a racing duplicate
+                    // insert writes the same value.
+                    let st = self.stage_time(m, s, i);
+                    memo.put_stage(skey, st);
+                    st
+                }
+            };
+            stage_times.push(st);
+
+            let ykey = SyncKey::new(s, i);
+            let (dp_t, opt_t, off_t) = match memo.get_sync(&ykey) {
+                Some(v) => {
+                    local.hits += 1;
+                    v
+                }
+                None => {
+                    local.misses += 1;
+                    let dp_t = self.dp_stage_term(m, s, i, &mem);
+                    let (opt_t, off_t) = self.opt_stage_term(m, s, i, &mem);
+                    memo.put_sync(ykey, (dp_t, opt_t, off_t));
+                    (dp_t, opt_t, off_t)
+                }
+            };
+            dp_worst = dp_worst.max(dp_t);
+            opt_worst = opt_worst.max(opt_t);
+            off_worst = off_worst.max(off_t);
+        }
+        memo.record(local);
+        stats.merge(local);
         self.compose(m, s, k, stage_times, dp_worst, opt_worst, off_worst)
     }
 
@@ -471,17 +828,11 @@ impl CostModel {
     }
 
     /// Evaluate the full step cost of a strategy (Eq. 27/28 + Eq. 22).
+    /// Routed through [`Self::evaluate_memo`] with a throwaway memo so the
+    /// single-strategy and batch paths share one compose implementation
+    /// (they used to diverge in how stage/sync terms were gathered).
     pub fn evaluate(&self, m: &ModelSpec, s: &ParallelStrategy) -> CostBreakdown {
-        let mem = MemoryModel::default();
-        let pp = s.pp();
-        let k = s.num_microbatches();
-
-        let stage_times: Vec<StageTime> =
-            (0..pp).map(|i| self.stage_time(m, s, i)).collect();
-        let dp_time = self.dp_time(m, s, &mem);
-        let (optimizer_time, offload_time) = self.optimizer_time(m, s, &mem);
-        let _ = pp;
-        self.compose(m, s, k, stage_times, dp_time, optimizer_time, offload_time)
+        self.evaluate_memo(m, s, &mut CostMemo::default())
     }
 }
 
@@ -688,6 +1039,141 @@ mod tests {
             memo.hits,
             memo.misses
         );
+    }
+
+    #[test]
+    fn shared_memo_matches_direct_exactly() {
+        use crate::strategy::{SearchSpace, SpaceConfig};
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let m = reg.get("llama2-13b").unwrap();
+        let c = cm();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let strategies: Vec<_> = space
+            .homogeneous(m, &cat, 1, 128)
+            .into_iter()
+            .step_by(31)
+            .take(150)
+            .collect();
+        let memo = SharedCostMemo::new();
+        let mut stats = MemoStats::default();
+        for s in &strategies {
+            let shared = c.evaluate_shared(m, s, &memo, &mut stats);
+            let direct = c.evaluate(m, s);
+            // Bit-identical, not approximately equal: the memo only caches
+            // values the direct path computes with the same code.
+            assert_eq!(
+                direct.step_time.to_bits(),
+                shared.step_time.to_bits(),
+                "shared memo diverged on {}",
+                s.summary()
+            );
+            assert_eq!(direct.tokens_per_s.to_bits(), shared.tokens_per_s.to_bits());
+            assert_eq!(direct.mfu.to_bits(), shared.mfu.to_bits());
+        }
+        assert_eq!(stats.hits, memo.hits());
+        assert_eq!(stats.misses, memo.misses());
+        assert!(stats.hits > stats.misses, "shared memo ineffective: {stats:?}");
+        assert!(memo.stage_entries() > 0 && memo.sync_entries() > 0);
+    }
+
+    #[test]
+    fn shared_memo_warm_reuse_is_all_hits() {
+        use crate::strategy::{SearchSpace, SpaceConfig};
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let c = cm();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let strategies: Vec<_> =
+            space.homogeneous(m, &cat, 1, 64).into_iter().take(300).collect();
+        let memo = SharedCostMemo::new();
+        let mut cold = MemoStats::default();
+        for s in &strategies {
+            c.evaluate_shared(m, s, &memo, &mut cold);
+        }
+        let mut warm = MemoStats::default();
+        for s in &strategies {
+            c.evaluate_shared(m, s, &memo, &mut warm);
+        }
+        assert_eq!(warm.misses, 0, "second pass must be fully warm");
+        assert!((warm.hit_rate() - 1.0).abs() < 1e-12);
+        assert!(cold.hit_rate() < 1.0);
+        // clear() drops entries but keeps the lifetime counters.
+        let (h, mi) = (memo.hits(), memo.misses());
+        memo.clear();
+        assert_eq!(memo.stage_entries() + memo.sync_entries(), 0);
+        assert_eq!((memo.hits(), memo.misses()), (h, mi));
+        let mut cleared = MemoStats::default();
+        c.evaluate_shared(m, &strategies[0], &memo, &mut cleared);
+        assert!(cleared.misses > 0, "cleared memo must miss again");
+    }
+
+    #[test]
+    fn shared_memo_concurrent_access_is_consistent() {
+        use crate::strategy::{SearchSpace, SpaceConfig};
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let c = cm();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let strategies: Vec<_> =
+            space.homogeneous(m, &cat, 1, 64).into_iter().take(400).collect();
+        let expect: Vec<u64> =
+            strategies.iter().map(|s| c.evaluate(m, s).step_time.to_bits()).collect();
+        let memo = SharedCostMemo::with_shards(8);
+        std::thread::scope(|scope| {
+            for chunk in strategies.chunks(100) {
+                let memo = &memo;
+                let c = &c;
+                scope.spawn(move || {
+                    let mut stats = MemoStats::default();
+                    for s in chunk {
+                        c.evaluate_shared(m, s, memo, &mut stats);
+                    }
+                });
+            }
+        });
+        // Post-race, every lookup is a hit and every value is unchanged.
+        let mut stats = MemoStats::default();
+        for (s, bits) in strategies.iter().zip(&expect) {
+            let b = c.evaluate_shared(m, s, &memo, &mut stats);
+            assert_eq!(b.step_time.to_bits(), *bits);
+        }
+        assert_eq!(stats.misses, 0);
+    }
+
+    #[test]
+    fn memo_registry_scopes_by_model_and_evicts_lru() {
+        let reg = ModelRegistry::builtin();
+        let m7 = reg.get("llama2-7b").unwrap();
+        let m13 = reg.get("llama2-13b").unwrap();
+        let registry = MemoRegistry::new(2);
+        let a = registry.for_model(m7);
+        let b = registry.for_model(m7);
+        assert!(Arc::ptr_eq(&a, &b), "same scope must share one memo");
+        let c = registry.for_model(m13);
+        assert!(!Arc::ptr_eq(&a, &c), "distinct models get distinct memos");
+        assert_eq!(registry.scopes(), 2);
+        // A model that differs only in global batch is a different scope.
+        let mut m7b = m7.clone();
+        m7b.global_batch *= 2;
+        assert_ne!(model_scope_key(m7), model_scope_key(&m7b));
+        // Put traffic on the m13 scope so its counters are nonzero, touch
+        // m7, and let m7b evict m13: the registry's lifetime counters must
+        // keep the evicted scope's totals (monotone across stats polls).
+        let cost = cm();
+        let mut stats = MemoStats::default();
+        let s13 = strat(m13, 2, 4, 8, 2);
+        cost.evaluate_shared(m13, &s13, &c, &mut stats);
+        assert!(stats.misses > 0);
+        registry.for_model(m7);
+        let before = registry.counters();
+        let _ = registry.for_model(&m7b);
+        assert_eq!(registry.scopes(), 2);
+        assert_eq!(registry.counters(), before, "eviction must not lose lifetime counters");
+        let a2 = registry.for_model(m7);
+        assert!(Arc::ptr_eq(&a, &a2), "recently-used scope must survive eviction");
     }
 
     #[test]

@@ -105,7 +105,7 @@ pub mod prelude {
     pub use crate::service::{
         CacheConfig, Fingerprint, SearchService, ServiceConfig, ServiceResponse,
     };
-    pub use crate::cost::{CostModel, CostBreakdown};
+    pub use crate::cost::{CostBreakdown, CostModel, MemoStats, SharedCostMemo};
     pub use crate::expert::ExpertPanel;
     pub use crate::gpu::{GpuCatalog, GpuSpec, GpuType};
     pub use crate::hetero::HeteroSolver;

@@ -50,6 +50,7 @@ fn main() {
     .flag("exhaustive", "exhaustive Eq.23 layer enumeration (hetero)")
     .flag("spot", "bill at spot rates instead of on-demand")
     .flag("no-prune", "disable branch-and-bound pool pruning (hetero-cost)")
+    .flag("no-streaming", "score through the reference collect-then-filter pipeline")
     .flag("no-forest", "use analytic η instead of the trained GBDT")
     .flag("verbose", "debug logging");
     let args = cli.parse();
@@ -86,6 +87,7 @@ fn build_config(args: &astra::cli::Args) -> astra::Result<EngineConfig> {
         use_forests: !args.flag("no-forest"),
         hetero_exhaustive: args.flag("exhaustive"),
         money_prune: !args.flag("no-prune"),
+        streaming: !args.flag("no-streaming"),
         money: MoneyModel { train_tokens: args.get_f64("train-tokens")?, book },
         top_k: args.get_usize("top")?.max(5),
         ..Default::default()

@@ -143,11 +143,26 @@ impl DominancePruner {
             self.pruned_budget += 1;
             return false;
         }
-        if self.frontier.iter().any(|&(p, c)| p >= ub_throughput && c <= lb_cost) {
+        if self.dominates(ub_throughput, lb_cost) {
             self.pruned_dominated += 1;
             return false;
         }
         true
+    }
+
+    /// Read-only form of [`Self::admit`]: same predicate, no counter
+    /// mutation. The parallel hetero-cost sweep speculates against a
+    /// frontier *snapshot* with this, then replays the counting `admit`
+    /// serially so pruning statistics stay byte-identical to the serial
+    /// sweep. Sound to speculate with because dominance coverage only
+    /// grows under [`Self::observe`]: whatever a snapshot rejects, every
+    /// later frontier rejects too.
+    pub fn would_admit(&self, ub_throughput: f64, lb_cost: f64) -> bool {
+        lb_cost <= self.budget && !self.dominates(ub_throughput, lb_cost)
+    }
+
+    fn dominates(&self, ub_throughput: f64, lb_cost: f64) -> bool {
+        self.frontier.iter().any(|&(p, c)| p >= ub_throughput && c <= lb_cost)
     }
 
     /// Record a scored strategy (keeps the internal frontier minimal).
@@ -361,6 +376,33 @@ mod tests {
         // Infinite budget never rejects on money.
         let mut inf = DominancePruner::new(f64::INFINITY);
         assert!(inf.admit(1.0, 1e30));
+    }
+
+    #[test]
+    fn would_admit_matches_admit_without_counting() {
+        let mut pr = DominancePruner::new(100.0);
+        pr.observe(500.0, 20.0);
+        for &(ub, lb) in
+            &[(1000.0, 50.0), (1000.0, 100.1), (400.0, 30.0), (600.0, 30.0), (400.0, 10.0)]
+        {
+            let speculative = pr.would_admit(ub, lb);
+            let counted = pr.clone().admit(ub, lb);
+            assert_eq!(speculative, counted, "predicates diverged on ({ub}, {lb})");
+        }
+        assert_eq!(pr.pruned(), 0, "would_admit must not count");
+        // Coverage monotonicity under observe: a snapshot rejection is
+        // permanent — the speculative wave machinery relies on this.
+        let snapshot = pr.clone();
+        pr.observe(800.0, 15.0);
+        pr.observe(450.0, 8.0);
+        for ub in [100, 300, 450, 500, 650, 900] {
+            for lb in [5, 9, 15, 21, 50, 101] {
+                let (ub, lb) = (ub as f64, lb as f64);
+                if !snapshot.would_admit(ub, lb) {
+                    assert!(!pr.would_admit(ub, lb), "coverage shrank at ({ub}, {lb})");
+                }
+            }
+        }
     }
 
     #[test]

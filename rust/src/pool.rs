@@ -193,4 +193,33 @@ mod tests {
         let idx = par_for_indices(10, 0, |i| i);
         assert_eq!(idx, (0..10).collect::<Vec<_>>());
     }
+
+    #[test]
+    fn empty_input_with_zero_workers() {
+        // The degenerate corner of both degenerate cases at once: the
+        // streaming coordinator can legitimately produce an empty task
+        // list (every pool pruned) under a clamped worker count.
+        let xs: Vec<u32> = Vec::new();
+        let out = par_map_chunks(&xs, 0, |_, c| c.to_vec());
+        assert!(out.is_empty());
+        let idx: Vec<usize> = par_for_indices(0, 0, |i| i);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn results_identical_across_worker_counts() {
+        // The determinism contract the streaming scorer leans on: output
+        // order is input order for every worker count, including
+        // non-divisible splits.
+        let xs: Vec<u64> = (0..137).collect();
+        let expect: Vec<u64> = xs.iter().map(|x| x * 7 + 1).collect();
+        for workers in [0, 1, 2, 3, 5, 16, 200] {
+            let mapped = par_map_chunks(&xs, workers, |_, c| {
+                c.iter().map(|x| x * 7 + 1).collect()
+            });
+            assert_eq!(mapped, expect, "par_map_chunks drifted at workers={workers}");
+            let idx = par_for_indices(137, workers, |i| xs[i] * 7 + 1);
+            assert_eq!(idx, expect, "par_for_indices drifted at workers={workers}");
+        }
+    }
 }

@@ -133,6 +133,41 @@ pub fn scored_strategy_json(
         .set("summary", s.strategy.summary())
 }
 
+/// Canonical *result* view of a whole [`crate::coordinator::SearchReport`]:
+/// every deterministic field — counts, pruning statistics, the ranked `top`
+/// list and the full Pareto pool — and none of the observability fields
+/// (wall times, memo hit/miss counters), which legitimately vary run to
+/// run. Two searches that select identically serialize byte-identically
+/// here; the determinism and differential test suites compare exactly this
+/// string across worker counts, sweep-wave sizes and the
+/// streaming-vs-reference pipelines.
+pub fn report_json(
+    r: &crate::coordinator::SearchReport,
+    catalog: &crate::gpu::GpuCatalog,
+) -> crate::json::Value {
+    use crate::json::Value;
+    let top: Vec<Value> = r.top.iter().map(|s| scored_strategy_json(s, catalog)).collect();
+    let pool: Vec<Value> = r
+        .pool
+        .entries()
+        .iter()
+        .map(|e| {
+            Value::obj()
+                .set("idx", e.idx)
+                .set("throughput", e.throughput)
+                .set("cost", e.cost)
+        })
+        .collect();
+    Value::obj()
+        .set("generated", r.generated)
+        .set("rule_filtered", r.rule_filtered)
+        .set("mem_filtered", r.mem_filtered)
+        .set("scored", r.scored)
+        .set("pruned_pools", r.pruned_pools)
+        .set("top", Value::Arr(top))
+        .set("pool", Value::Arr(pool))
+}
+
 /// Human formatting helpers shared by benches.
 pub fn fmt_tput(tokens_per_s: f64) -> String {
     format!("{tokens_per_s:.0}")

@@ -273,6 +273,8 @@ mod tests {
             pruned_pools: 0,
             search_secs: 0.0,
             simulate_secs: 0.0,
+            memo_hits: 0,
+            memo_misses: 0,
             top: Vec::new(),
             pool: OptimalPool::default(),
         })

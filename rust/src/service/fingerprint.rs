@@ -246,9 +246,15 @@ fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
     .field_f64("money.train_tokens", cfg.money.train_tokens)
     .field_bool("hetero_exhaustive", cfg.hetero_exhaustive)
     .field_bool("money_prune", cfg.money_prune)
+    // `streaming` selects picks-identical pipelines, but the report's memo
+    // counters differ (the reference path reports zeros) — like
+    // `money_prune`'s pruning counts, that makes it part of the key.
+    .field_bool("streaming", cfg.streaming)
     .field_usize("top_k", cfg.top_k);
     hash_book(h, &cfg.money.book);
-    // `workers` deliberately excluded: parallelism never changes results.
+    // `workers` and `sweep_wave` deliberately excluded: worker count never
+    // changes results, and the hetero-cost wave replay is byte-identical
+    // to the serial sweep at any wave size (differential-tested).
 }
 
 /// Fingerprint of (request, config): the service cache key.

@@ -20,7 +20,11 @@
 //! point extracted from [`crate::coordinator::AstraEngine`] so one engine
 //! instance can be shared across request threads (the HLO runtime handle is
 //! thread-confined and stays out of the service path — the service always
-//! scores native).
+//! scores native). Below the result cache sits a second amortization
+//! layer: the core's shared cost memo (`cost::SharedCostMemo`, scoped per
+//! model), so even *distinct* requests over the same model — different
+//! pool sizes, budgets or modes — score mostly warm; the `{"cmd":"stats"}`
+//! line reports the memo scope/hit/miss counters next to the cache's.
 
 pub mod cache;
 pub mod fingerprint;

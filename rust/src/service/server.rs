@@ -224,6 +224,8 @@ fn report_counts_json(r: &SearchReport) -> Value {
         .set("pruned_pools", r.pruned_pools)
         .set("search_secs", r.search_secs)
         .set("simulate_secs", r.simulate_secs)
+        .set("memo_hits", r.memo_hits)
+        .set("memo_misses", r.memo_misses)
 }
 
 /// Success response line.
@@ -255,10 +257,13 @@ pub fn response_json(
     v.set("top", Value::Arr(tops))
 }
 
-/// Strip wall-clock fields from one response line so transcripts are
-/// byte-stable across machines and runs (the golden wire test pins
-/// everything else). Timing fields are zeroed rather than removed, so
-/// their *presence* in the shape stays pinned too.
+/// Strip wall-clock and load-dependent fields from one response line so
+/// transcripts are byte-stable across machines and runs (the golden wire
+/// test pins everything else). Fields are zeroed rather than removed, so
+/// their *presence* in the shape stays pinned too. Memo hit/miss counters
+/// are normalized like the wall times: they depend on memo warmth (earlier
+/// traffic) and on worker interleaving (two workers may both miss a key),
+/// never on the selected strategies.
 pub fn normalize_response_line(line: &str) -> Result<String> {
     let mut v = json::parse(line)?;
     if let Value::Obj(m) = &mut v {
@@ -266,17 +271,20 @@ pub fn normalize_response_line(line: &str) -> Result<String> {
             m.insert("service_ms".to_string(), Value::Num(0.0));
         }
         if let Some(Value::Obj(engine)) = m.get_mut("engine") {
-            for k in ["search_secs", "simulate_secs"] {
+            for k in ["search_secs", "simulate_secs", "memo_hits", "memo_misses"] {
                 if engine.contains_key(k) {
                     engine.insert(k.to_string(), Value::Num(0.0));
                 }
             }
         }
         // Cache byte accounting is an estimate that may drift with struct
-        // layout; the entry/hit counters stay pinned.
+        // layout; the entry/hit counters stay pinned. Memo counters are
+        // load-dependent (see above).
         if let Some(Value::Obj(stats)) = m.get_mut("stats") {
-            if stats.contains_key("cache_bytes") {
-                stats.insert("cache_bytes".to_string(), Value::Num(0.0));
+            for k in ["cache_bytes", "memo_hits", "memo_misses"] {
+                if stats.contains_key(k) {
+                    stats.insert(k.to_string(), Value::Num(0.0));
+                }
             }
         }
     }
@@ -295,6 +303,7 @@ pub fn error_json(id: &Option<String>, msg: &str) -> Value {
 /// Cache/engine statistics line (the `{"cmd":"stats"}` control request).
 pub fn stats_json(service: &SearchService) -> Value {
     let s = service.cache_stats();
+    let (memo_scopes, memo_hits, memo_misses) = service.core().memo_counters();
     Value::obj()
         .set("ok", true)
         .set("stats", Value::obj()
@@ -305,7 +314,10 @@ pub fn stats_json(service: &SearchService) -> Value {
             .set("cache_evictions", s.evictions)
             .set("cache_expirations", s.expirations)
             .set("cache_entries", s.entries)
-            .set("cache_bytes", s.bytes))
+            .set("cache_bytes", s.bytes)
+            .set("memo_scopes", memo_scopes)
+            .set("memo_hits", memo_hits)
+            .set("memo_misses", memo_misses))
 }
 
 /// What one admitted line turned into.

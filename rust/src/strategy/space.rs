@@ -100,6 +100,26 @@ impl SearchSpace {
         count: usize,
     ) -> Vec<ParallelStrategy> {
         let mut out = Vec::new();
+        for (cluster, tp, dp) in self.homogeneous_pools(model, catalog, gpu, count) {
+            self.expand_params(model, &cluster, tp, dp, &mut out);
+        }
+        out
+    }
+
+    /// The `(cluster, tp, dp)` pools of the homogeneous space, in the same
+    /// order [`Self::homogeneous`] generates them. This is the unit of the
+    /// coordinator's streaming fan-out: a pool's parameter cross-product is
+    /// expanded, filtered and scored in one per-worker pass, so the full
+    /// candidate vector is never materialized. The two views share this one
+    /// enumeration so they cannot drift.
+    pub fn homogeneous_pools(
+        &self,
+        model: &ModelSpec,
+        catalog: &GpuCatalog,
+        gpu: GpuType,
+        count: usize,
+    ) -> Vec<(ClusterAssignment, usize, usize)> {
+        let mut pools = Vec::new();
         for &tp in &self.valid_tps(model, catalog) {
             if count % tp != 0 {
                 continue;
@@ -107,10 +127,10 @@ impl SearchSpace {
             for pp in self.valid_pps(model, count, tp) {
                 let dp = count / (tp * pp);
                 let cluster = ClusterAssignment::homogeneous(gpu, pp, model.layers / pp);
-                self.expand_params(model, &cluster, tp, dp, &mut out);
+                pools.push((cluster, tp, dp));
             }
         }
-        out
+        pools
     }
 
     /// TP sizes valid for this model/topology.
@@ -139,6 +159,23 @@ impl SearchSpace {
         tp: usize,
         dp: usize,
         out: &mut Vec<ParallelStrategy>,
+    ) {
+        self.expand_params_each(model, cluster, tp, dp, &mut |s| out.push(s));
+    }
+
+    /// Visitor form of [`Self::expand_params`]: hand each strategy to `f`
+    /// as it is produced instead of collecting a vector. The coordinator's
+    /// streaming pipeline fuses generation → rule filter → memory filter →
+    /// scoring inside the visitor, which is what keeps the hot path free of
+    /// per-round candidate-vector allocation. Emission order is identical
+    /// to the collected form (the two are literally the same loop).
+    pub fn expand_params_each(
+        &self,
+        model: &ModelSpec,
+        cluster: &ClusterAssignment,
+        tp: usize,
+        dp: usize,
+        f: &mut impl FnMut(ParallelStrategy),
     ) {
         let gbs = model.global_batch;
         let pp = cluster.pp();
@@ -173,7 +210,7 @@ impl SearchSpace {
                         for &off in &self.config.offload_options {
                             for rc in self.recompute_variants(max_lps) {
                               for &ep in &eps {
-                                out.push(ParallelStrategy {
+                                f(ParallelStrategy {
                                     cluster: cluster.clone(),
                                     tp,
                                     dp,
@@ -332,6 +369,24 @@ mod tests {
         let before = keys.len();
         keys.dedup();
         assert_eq!(before, keys.len(), "duplicate strategies generated");
+    }
+
+    #[test]
+    fn streamed_expansion_matches_collected_form() {
+        // homogeneous() == homogeneous_pools() × expand_params_each(), in
+        // order — the coordinator's streaming fan-out depends on this.
+        let (reg, cat) = setup();
+        let m = reg.get("llama2-7b").unwrap();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let collected = space.homogeneous(m, &cat, 1, 64);
+        let mut streamed = Vec::new();
+        for (cluster, tp, dp) in space.homogeneous_pools(m, &cat, 1, 64) {
+            space.expand_params_each(m, &cluster, tp, dp, &mut |s| streamed.push(s));
+        }
+        assert_eq!(collected.len(), streamed.len());
+        for (a, b) in collected.iter().zip(&streamed) {
+            assert_eq!(a, b, "stream/collect order diverged");
+        }
     }
 
     #[test]

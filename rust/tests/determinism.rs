@@ -1,0 +1,113 @@
+//! Determinism pins for the parallel search pipeline: the canonical report
+//! JSON ([`astra::report::report_json`] — counts, pruning statistics,
+//! ranked `top`, full Pareto pool; observability fields excluded) must be
+//! byte-identical across worker counts, across repeated runs, and across
+//! hetero-cost sweep schedules. The streaming scorer's fan-out
+//! (`par_for_indices`) returns pool outcomes in task order and the wave
+//! sweep replays its pruning decisions serially, so *nothing* about thread
+//! timing may reach the result.
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::report_json;
+use astra::strategy::SpaceConfig;
+
+fn small_space() -> SpaceConfig {
+    SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 4,
+        mbs_candidates: vec![1, 2],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    }
+}
+
+fn canon(eng: &AstraEngine, req: &SearchRequest) -> String {
+    let report = eng.search(req).unwrap();
+    astra::json::to_string(&report_json(&report, &GpuCatalog::builtin()))
+}
+
+fn engine(streaming: bool, workers: usize, sweep_wave: usize) -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig {
+            use_forests: false,
+            streaming,
+            workers,
+            sweep_wave,
+            space: small_space(),
+            ..Default::default()
+        },
+    )
+}
+
+fn requests() -> Vec<(&'static str, SearchRequest)> {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    vec![
+        ("homogeneous", SearchRequest::homogeneous("a800", 32, model.clone()).unwrap()),
+        (
+            "heterogeneous",
+            SearchRequest::heterogeneous(&[("a800", 8), ("h100", 8)], 8, model.clone())
+                .unwrap(),
+        ),
+        ("cost", SearchRequest::cost("a800", 16, f64::INFINITY, model.clone()).unwrap()),
+        (
+            "hetero-cost",
+            SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8)], 2e5, model).unwrap(),
+        ),
+    ]
+}
+
+/// workers=1 vs workers=N: byte-identical canonical reports on every mode,
+/// for both the streaming and the reference pipelines. Fresh engines per
+/// run so memo state cannot differ either.
+#[test]
+fn workers_do_not_change_report_json() {
+    for streaming in [true, false] {
+        for (name, req) in requests() {
+            let serial = canon(&engine(streaming, 1, 2), &req);
+            for workers in [2, 4, 8] {
+                let parallel = canon(&engine(streaming, workers, 2), &req);
+                assert_eq!(
+                    serial, parallel,
+                    "mode {name} (streaming={streaming}): workers={workers} drifted"
+                );
+            }
+        }
+    }
+}
+
+/// Serial vs parallel hetero-cost sweep (wave 1 vs wider), crossed with
+/// worker counts — the full schedule matrix collapses to one report.
+#[test]
+fn sweep_schedule_does_not_change_report_json() {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let req =
+        SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8), ("v100", 8)], 1e5, model).unwrap();
+    let baseline = canon(&engine(true, 1, 1), &req);
+    for workers in [1, 4] {
+        for wave in [1, 2, 4, 64] {
+            let got = canon(&engine(true, workers, wave), &req);
+            assert_eq!(got, baseline, "workers={workers} wave={wave} drifted from serial");
+        }
+    }
+}
+
+/// Same engine, same request, back to back: the second (memo-warm) run is
+/// byte-identical — warmth is speed, never results.
+#[test]
+fn repeat_runs_on_one_engine_are_byte_identical() {
+    let eng = engine(true, 4, 2);
+    for (name, req) in requests() {
+        let first = canon(&eng, &req);
+        let second = canon(&eng, &req);
+        assert_eq!(first, second, "mode {name}: repeat run drifted");
+    }
+}

@@ -1,0 +1,164 @@
+//! Differential harness for the shared-memo streaming scorer: the fast
+//! path (`streaming: true`, fused per-pool passes over a `SharedCostMemo`,
+//! speculative-wave hetero-cost sweep) must select **exactly** what the
+//! pre-refactor reference path (`streaming: false`, collect → filter →
+//! score with per-chunk memos) selects, on every search mode.
+//!
+//! Comparison is on [`astra::report::report_json`] — the canonical result
+//! view (counts, pruning statistics, ranked `top`, full Pareto pool) with
+//! the observability fields (wall times, memo counters) excluded — and is
+//! *byte*-equality of the serialized JSON, so float drift of any kind
+//! fails loudly.
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchReport, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::report_json;
+use astra::strategy::SpaceConfig;
+
+/// Narrow space so the whole matrix stays debug-profile fast.
+fn small_space() -> SpaceConfig {
+    SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 4,
+        mbs_candidates: vec![1, 2],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    }
+}
+
+fn engine_with(streaming: bool, workers: usize, sweep_wave: usize) -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig {
+            use_forests: false,
+            streaming,
+            workers,
+            sweep_wave,
+            space: small_space(),
+            ..Default::default()
+        },
+    )
+}
+
+fn canon(report: &SearchReport) -> String {
+    astra::json::to_string(&report_json(report, &GpuCatalog::builtin()))
+}
+
+fn requests() -> Vec<(&'static str, SearchRequest)> {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    vec![
+        ("homogeneous", SearchRequest::homogeneous("a800", 16, model.clone()).unwrap()),
+        (
+            "heterogeneous",
+            SearchRequest::heterogeneous(&[("a800", 8), ("h100", 8)], 8, model.clone())
+                .unwrap(),
+        ),
+        ("cost", SearchRequest::cost("a800", 16, 1e7, model.clone()).unwrap()),
+        (
+            "hetero-cost",
+            SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8)], f64::INFINITY, model.clone())
+                .unwrap(),
+        ),
+        (
+            "hetero-cost-budgeted",
+            SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8), ("v100", 8)], 5e4, model)
+                .unwrap(),
+        ),
+    ]
+}
+
+/// The acceptance differential: fast path == slow path, every mode,
+/// byte-for-byte over counts, `top` and the Pareto pool (which covers the
+/// `budget_pick` promotion — it reorders `top[0]`).
+#[test]
+fn streaming_selects_exactly_what_reference_selects() {
+    let fast = engine_with(true, 4, 2);
+    let slow = engine_with(false, 4, 2);
+    for (name, req) in requests() {
+        let a = fast.search(&req).unwrap();
+        let b = slow.search(&req).unwrap();
+        assert_eq!(canon(&a), canon(&b), "mode {name}: fast path diverged from reference");
+    }
+}
+
+/// Memo warmth must never leak into results: repeating every request on
+/// the *same* engine (memo fully warm the second time) reproduces the
+/// exact same report, and the warm pass is measurably warmer.
+#[test]
+fn warm_memo_changes_speed_not_results() {
+    let eng = engine_with(true, 4, 2);
+    for (name, req) in requests() {
+        let cold = eng.search(&req).unwrap();
+        let warm = eng.search(&req).unwrap();
+        assert_eq!(canon(&cold), canon(&warm), "mode {name}: memo warmth changed results");
+        assert!(
+            warm.memo_misses == 0,
+            "mode {name}: warm pass still missed {} profiles",
+            warm.memo_misses
+        );
+        if cold.scored > 0 {
+            assert!(cold.memo_misses > 0, "mode {name}: cold pass must populate the memo");
+        }
+    }
+}
+
+/// The speculative-wave sweep is byte-identical to the serial sweep —
+/// including `pruned_pools` — at every wave size, with pruning on and a
+/// budget tight enough to actually prune.
+#[test]
+fn hetero_cost_wave_sizes_are_byte_identical() {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let caps = [("a800", 8usize), ("h100", 8usize), ("v100", 8usize)];
+    // Learn the cost scale, then pick a budget near the cheap end so the
+    // dominance/budget pruner has real work.
+    let free = engine_with(true, 4, 1)
+        .search(&SearchRequest::hetero_cost(&caps, f64::INFINITY, model.clone()).unwrap())
+        .unwrap();
+    let cheap = free.pool.entries().last().expect("empty frontier").cost;
+    for budget in [cheap * 1.05, cheap * 2.0, f64::INFINITY] {
+        let req = SearchRequest::hetero_cost(&caps, budget, model.clone()).unwrap();
+        let serial = engine_with(true, 4, 1).search(&req).unwrap();
+        if budget.is_finite() {
+            assert!(serial.pruned_pools > 0, "budget ${budget} pruned nothing — weak test");
+        }
+        for wave in [2, 3, 64] {
+            let waved = engine_with(true, 4, wave).search(&req).unwrap();
+            assert_eq!(
+                waved.pruned_pools, serial.pruned_pools,
+                "wave {wave}, budget ${budget}: pruning counts drifted"
+            );
+            assert_eq!(
+                canon(&waved),
+                canon(&serial),
+                "wave {wave}, budget ${budget}: wave sweep diverged from serial"
+            );
+        }
+        // And the whole family agrees with the unpruned streaming and the
+        // non-streaming references on the canonical result.
+        let unpruned = AstraEngine::new(
+            GpuCatalog::builtin(),
+            EngineConfig {
+                use_forests: false,
+                streaming: true,
+                money_prune: false,
+                space: small_space(),
+                ..Default::default()
+            },
+        )
+        .search(&req)
+        .unwrap();
+        let pick = |r: &SearchReport| {
+            r.pool.best_within_budget(budget).map(|e| (e.throughput.to_bits(), e.cost.to_bits()))
+        };
+        assert_eq!(pick(&serial), pick(&unpruned), "budget ${budget}: pruning changed the pick");
+        let reference = engine_with(false, 4, 1).search(&req).unwrap();
+        assert_eq!(canon(&serial), canon(&reference), "budget ${budget}: fast != reference");
+    }
+}
