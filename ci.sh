@@ -15,7 +15,14 @@
 #                       fast mode, writes BENCH_search.json at the repo
 #                       root, and FAILS if the memo-warm hit-rate on the
 #                       reference workload drops below the pinned floor
-#                       (override with ASTRA_BENCH_MIN_HIT_RATE).
+#                       (override with ASTRA_BENCH_MIN_HIT_RATE), or if the
+#                       warm_restore leg's restored hit-rate drops below
+#                       its floor (ASTRA_BENCH_MIN_RESTORE_HIT_RATE).
+#
+# Tier-1 also runs a persistence roundtrip through the release binary
+# (astra warm save → search --warm-load → diff of the canonical --json
+# reports against a cold search); skipped under FAST=1 since it needs the
+# release build.
 #
 #   ./ci.sh            # tier-1 gate
 #   FAST=1 ./ci.sh     # tier-1 minus the release build (debug tests only)
@@ -45,6 +52,30 @@ if [ "${FAST:-0}" != "1" ]; then
 fi
 run cargo test -q
 
+if [ "${FAST:-0}" != "1" ]; then
+  # --- tier-1 persistence roundtrip: save → load → diff reports ---
+  # A search restored from a spilled warm snapshot must print the exact
+  # canonical report a cold search prints (the --json view excludes wall
+  # times, so the diff is byte-meaningful).
+  BIN=target/release/astra
+  WARMTMP="$(mktemp -d)"
+  run "$BIN" warm save "$WARMTMP/warm.jsonl" --model llama2-7b --gpu a800 --gpus 8
+  run "$BIN" warm inspect "$WARMTMP/warm.jsonl"
+  "$BIN" search --model llama2-7b --gpu a800 --gpus 8 --json > "$WARMTMP/cold.json"
+  "$BIN" search --model llama2-7b --gpu a800 --gpus 8 \
+      --warm-load "$WARMTMP/warm.jsonl" --json \
+      > "$WARMTMP/restored.json" 2> "$WARMTMP/restored.err"
+  cat "$WARMTMP/restored.err" >&2
+  # The diff alone cannot catch a silent no-restore (a cold start prints
+  # the same canonical report by design) — also require that the scope
+  # actually imported, with nothing rejected.
+  run grep -q "restored 1 scope" "$WARMTMP/restored.err"
+  run grep -q "rejected 0" "$WARMTMP/restored.err"
+  run diff "$WARMTMP/cold.json" "$WARMTMP/restored.json"
+  rm -rf "$WARMTMP"
+  echo "ci.sh: persistence roundtrip ok (cold == restored, 1 scope imported)" >&2
+fi
+
 if [ "${TIER2:-0}" = "1" ]; then
   # --- tier-2 lane: strict formatting + lint ---
   if cargo fmt --version >/dev/null 2>&1; then
@@ -67,9 +98,13 @@ if [ "${BENCH:-0}" = "1" ]; then
   # workload re-scores an already-resident profile set, so its hit-rate
   # sits near 1.0 when the memo is healthy; 0.50 is the issue's pinned
   # minimum and catches scope/key regressions with wide margin.
+  # The restore floor mirrors the warm floor: a healthy snapshot replays
+  # the exact profile set, so its hit-rate sits near 1.0; 0.50 catches
+  # format/digest regressions with wide margin.
   run env ASTRA_BENCH_FAST=1 \
       ASTRA_BENCH_OUT="$ROOT/BENCH_search.json" \
       ASTRA_BENCH_MIN_HIT_RATE="${ASTRA_BENCH_MIN_HIT_RATE:-0.50}" \
+      ASTRA_BENCH_MIN_RESTORE_HIT_RATE="${ASTRA_BENCH_MIN_RESTORE_HIT_RATE:-0.50}" \
       cargo bench --bench perf_search
 fi
 

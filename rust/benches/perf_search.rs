@@ -1,16 +1,20 @@
 //! Search-path perf instrument: the fig7 hetero-cost workload, cold
-//! (fresh `SharedCostMemo`) vs memo-warm (same engine, repeated), plus the
-//! pre-refactor non-streaming reference for context. Writes the
-//! machine-readable `BENCH_search.json` perf-trajectory artifact —
-//! strategies/sec, memo hit-rate, wall seconds per leg (see the
-//! `astra::cost` module docs for how to read it).
+//! (fresh `SharedCostMemo`) vs memo-warm (same engine, repeated) vs
+//! warm-restore (fresh engine fed from a spilled `astra::persist`
+//! snapshot — the restarted-service story), plus the pre-refactor
+//! non-streaming reference for context. Writes the machine-readable
+//! `BENCH_search.json` perf-trajectory artifact — strategies/sec, memo
+//! hit-rate, wall seconds per leg (see the `astra::cost` module docs for
+//! how to read it).
 //!
 //! Env knobs:
 //! * `ASTRA_BENCH_FAST=1`       — smaller caps for smoke/CI runs;
 //! * `ASTRA_BENCH_OUT=<path>`   — where to write `BENCH_search.json`
 //!                                (default: `BENCH_search.json` in cwd);
 //! * `ASTRA_BENCH_MIN_HIT_RATE=<0..1>` — exit nonzero if the *warm* memo
-//!   hit-rate drops below this floor (the `BENCH=1 ./ci.sh` gate).
+//!   hit-rate drops below this floor (the `BENCH=1 ./ci.sh` gate);
+//! * `ASTRA_BENCH_MIN_RESTORE_HIT_RATE=<0..1>` — same floor for the
+//!   *warm_restore* leg (restore must actually skip the cold pass).
 
 use astra::bench_util::section;
 use astra::coordinator::{AstraEngine, EngineConfig, SearchReport, SearchRequest};
@@ -95,6 +99,28 @@ fn main() {
         100.0 * hit_rate(&warm_rep)
     );
 
+    // Restore: spill the warm engine's scopes, load them into a *fresh*
+    // engine — simulating a restarted process — and search. The restored
+    // pass must hit like the warm pass (it has the same profiles resident)
+    // while having paid only a file parse instead of the cold compute.
+    let warm_file =
+        std::env::temp_dir().join(format!("astra_warm_bench_{}.jsonl", std::process::id()));
+    let spill = eng.core().save_warm(&warm_file).unwrap();
+    let eng_restored = engine(true);
+    let restore = eng_restored.core().load_warm(&warm_file).unwrap();
+    let t = Instant::now();
+    let restore_rep = eng_restored.search(&req).unwrap();
+    let restore_secs = t.elapsed().as_secs_f64();
+    let _ = std::fs::remove_file(&warm_file);
+    println!(
+        "rest : {restore_secs:.3}s  {} scope(s) restored ({} rejected), memo {}/{} ({:.1}% hit)",
+        restore.scopes_restored,
+        restore.scopes_rejected,
+        restore_rep.memo_hits,
+        restore_rep.memo_misses,
+        100.0 * hit_rate(&restore_rep)
+    );
+
     // Reference: the pre-refactor collect-then-filter pipeline with
     // per-chunk memos (context for the trajectory, not a gated number).
     let t = Instant::now();
@@ -115,6 +141,7 @@ fn main() {
     };
     assert_eq!(best(&cold_rep), best(&warm_rep), "memo warmth changed the selection");
     assert_eq!(best(&cold_rep), best(&ref_rep), "streaming diverged from the reference");
+    assert_eq!(best(&cold_rep), best(&restore_rep), "restored memo changed the selection");
 
     let out = Value::obj()
         .set(
@@ -135,8 +162,16 @@ fn main() {
         )
         .set("cold", leg_json(&cold_rep, cold_secs))
         .set("warm", leg_json(&warm_rep, warm_secs))
+        .set(
+            "warm_restore",
+            leg_json(&restore_rep, restore_secs)
+                .set("scopes_restored", restore.scopes_restored)
+                .set("scopes_rejected", restore.scopes_rejected)
+                .set("snapshot_bytes", spill.bytes),
+        )
         .set("reference_nonstreaming", leg_json(&ref_rep, ref_secs))
-        .set("speedup_warm_vs_cold", speedup);
+        .set("speedup_warm_vs_cold", speedup)
+        .set("speedup_restore_vs_cold", cold_secs / restore_secs.max(1e-12));
 
     let path = std::env::var("ASTRA_BENCH_OUT").unwrap_or_else(|_| "BENCH_search.json".into());
     match std::fs::write(&path, astra::json::to_string_pretty(&out) + "\n") {
@@ -156,5 +191,23 @@ fn main() {
             std::process::exit(1);
         }
         println!("warm memo hit-rate {got:.3} ≥ floor {floor:.3} — ok");
+    }
+
+    // Same floor for the restore leg: a restored snapshot that misses is a
+    // persistence regression (format drift, digest over-rejection, rows
+    // dropped), even if the warm leg stays healthy.
+    if let Ok(floor) = std::env::var("ASTRA_BENCH_MIN_RESTORE_HIT_RATE") {
+        let floor: f64 =
+            floor.parse().expect("ASTRA_BENCH_MIN_RESTORE_HIT_RATE must be a number");
+        let got = hit_rate(&restore_rep);
+        if got < floor || restore.scopes_restored == 0 {
+            eprintln!(
+                "perf_search: FAIL — restored hit-rate {got:.3} (floor {floor:.3}), \
+                 {} scope(s) restored",
+                restore.scopes_restored
+            );
+            std::process::exit(1);
+        }
+        println!("restored memo hit-rate {got:.3} ≥ floor {floor:.3} — ok");
     }
 }

@@ -53,6 +53,7 @@ use crate::rules::RuleSet;
 use crate::runtime::ScorerRuntime;
 use crate::strategy::{ClusterAssignment, GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};
 use crate::{AstraError, Result};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -93,7 +94,16 @@ pub struct EngineConfig {
     /// totals concurrently against a frontier *snapshot* and then replay
     /// the admission decisions serially, so reports — including pruning
     /// counts — stay byte-identical to the serial sweep at any wave size.
+    /// This is the *base* wave; the sweep adapts upward from it (see
+    /// `sweep_wave_max`).
     pub sweep_wave: usize,
+    /// Adaptive-wave ceiling: after a wave whose speculative admissions
+    /// were all replayed without waste, the next wave grows by one total
+    /// (more cross-total overlap for free); any waste resets the wave to
+    /// `sweep_wave`. Growth is driven only by the deterministic admission
+    /// replay, so — like `sweep_wave` itself — the schedule never changes
+    /// the report and stays out of the request fingerprint.
+    pub sweep_wave_max: usize,
     /// Keep this many best strategies in the report.
     pub top_k: usize,
 }
@@ -111,6 +121,7 @@ impl Default for EngineConfig {
             money_prune: true,
             streaming: true,
             sweep_wave: 2,
+            sweep_wave_max: 8,
             top_k: 16,
         }
     }
@@ -277,6 +288,12 @@ pub struct ScoringCore {
     /// Lifetime count of searches that entered the filter/score pipeline —
     /// the cache-effectiveness anchor for [`crate::service`] tests.
     searches: AtomicU64,
+    /// Warm-start spill/restore accounting ([`crate::persist`]), surfaced
+    /// through `astra stats` and the wire `stats` response.
+    persist: crate::persist::PersistCounters,
+    /// Snapshot identity of this core, digested once at construction
+    /// (forest digests walk every tree node — too costly per spill).
+    warm_meta: crate::persist::EngineMeta,
 }
 
 /// One unit of streaming scoring work: a fixed `(cluster, tp, dp)` pool
@@ -374,12 +391,20 @@ impl ScoringCore {
             EtaProvider::Analytic
         };
         let cost = CostModel::new(catalog.clone(), eta);
+        let warm_meta = crate::persist::EngineMeta::new(
+            &catalog,
+            &cost.eta,
+            &cost.consts,
+            &config.money.book,
+        );
         ScoringCore {
             catalog,
             config,
             cost,
             memos: MemoRegistry::new(16),
             searches: AtomicU64::new(0),
+            persist: crate::persist::PersistCounters::default(),
+            warm_meta,
         }
     }
 
@@ -399,6 +424,83 @@ impl ScoringCore {
     pub fn memo_counters(&self) -> (usize, u64, u64) {
         let (h, m) = self.memos.counters();
         (self.memos.scopes(), h, m)
+    }
+
+    /// Lifetime warm-start spill/restore counters (shared with the service
+    /// layer, which also spills the result cache through them).
+    pub fn persist_counters(&self) -> &crate::persist::PersistCounters {
+        &self.persist
+    }
+
+    /// Plain-data view of [`Self::persist_counters`] for the stats line.
+    pub fn persist_stats(&self) -> crate::persist::PersistSnapshot {
+        self.persist.snapshot()
+    }
+
+    /// This core's snapshot identity, digested once at construction.
+    pub fn engine_meta(&self) -> &crate::persist::EngineMeta {
+        &self.warm_meta
+    }
+
+    /// Append every live memo scope (with this core's identity header) to a
+    /// snapshot under construction. The service layer uses this to combine
+    /// memo scopes and its result cache into one file.
+    pub fn export_warm(&self, w: &mut crate::persist::WarmWriter) {
+        for (key, memo) in self.memos.export_scopes() {
+            let rows = memo.export_rows();
+            if rows.is_empty() {
+                continue;
+            }
+            w.memo_scope(key, &rows, &self.warm_meta);
+        }
+    }
+
+    /// Spill every live memo scope to a versioned snapshot at `path`
+    /// (atomic temp-file + rename). See [`crate::persist`] for the format
+    /// and the invalidation contract.
+    pub fn save_warm(&self, path: &Path) -> Result<crate::persist::SpillStats> {
+        let mut w = crate::persist::WarmWriter::new();
+        self.export_warm(&mut w);
+        let stats = w.finish_to(path)?;
+        self.persist.note_spill(&stats);
+        Ok(stats)
+    }
+
+    /// Import an already-parsed restore set's memo scopes into the
+    /// registry (cache entries, if any, are the service layer's to insert).
+    pub fn restore_warm_set(&self, set: &crate::persist::RestoreSet) {
+        for (key, rows) in &set.memo_scopes {
+            self.memos.restore_scope(*key, rows);
+        }
+        self.persist.note_restore(&set.stats());
+    }
+
+    /// Restore memo scopes from a snapshot at `path`. Scopes whose headers
+    /// do not match this core's identity — or whose rows fail validation —
+    /// are skipped (counted in `scopes_rejected`), so a stale or corrupt
+    /// snapshot degrades to a cold start, never an error or a wrong
+    /// answer. Only a missing/unreadable file is an `Err`.
+    pub fn load_warm(&self, path: &Path) -> Result<crate::persist::RestoreStats> {
+        // Memo-only consumer: cache sections are checksummed for the
+        // accounting but their reports are not decoded.
+        self.load_warm_set(path, false).map(|set| set.stats())
+    }
+
+    /// [`Self::load_warm`] returning the full [`crate::persist::RestoreSet`]
+    /// — the service layer layers its cache insertion on top of this one
+    /// load path instead of duplicating it. `want_cache` skips the
+    /// per-report decode when the caller would discard the entries anyway.
+    pub fn load_warm_set(
+        &self,
+        path: &Path,
+        want_cache: bool,
+    ) -> Result<crate::persist::RestoreSet> {
+        let text = std::fs::read_to_string(path)?;
+        let set =
+            crate::persist::read_warm_filtered(&text, &self.catalog, &self.warm_meta, want_cache);
+        self.restore_warm_set(&set);
+        self.persist.note_snapshot_bytes(text.len() as u64);
+        Ok(set)
     }
 
     /// Whether this search runs the fused streaming pipeline: configured
@@ -743,6 +845,13 @@ impl ScoringCore {
     /// outcome for every pool it accepts, and the reported counts, pruning
     /// statistics, frontier and picks are byte-identical to the serial
     /// sweep (`sweep_wave = 1`) at any wave size or worker count.
+    ///
+    /// The wave size is *adaptive*: after a wave whose speculative
+    /// admissions all survived the replay (zero waste), the next wave grows
+    /// by one total, up to `config.sweep_wave_max`; any waste resets it to
+    /// the configured base. Waste is a pure function of the deterministic
+    /// frontier evolution, so the schedule — like the wave size itself —
+    /// can never reach the report.
     #[allow(clippy::too_many_arguments)]
     fn hetero_cost_streaming(
         &self,
@@ -757,7 +866,9 @@ impl ScoringCore {
     ) -> SearchReport {
         let memo = self.memos.for_model(model);
         let money = &self.config.money;
-        let wave = self.config.sweep_wave.max(1);
+        let base_wave = self.config.sweep_wave.max(1);
+        let wave_cap = self.config.sweep_wave_max.max(base_wave);
+        let mut wave = base_wave;
         let mut n_generated = 0usize;
         let mut rule_filtered = 0usize;
         let mut mem_filtered = 0usize;
@@ -765,7 +876,10 @@ impl ScoringCore {
         let mut simulate_secs = 0.0f64;
         let mut memo_stats = MemoStats::default();
         let mut scored_all: Vec<ScoredStrategy> = Vec::new();
-        for wave_totals in totals.chunks(wave) {
+        let mut next = 0usize;
+        while next < totals.len() {
+            let wave_totals = &totals[next..totals.len().min(next + wave)];
+            next += wave_totals.len();
             let t_gen = Instant::now();
             let snapshot = pruner.clone();
             // Phase 1: per round, every pool's (ub tput, lb USD, admitted
@@ -805,6 +919,7 @@ impl ScoringCore {
             // Phase 3: deterministic serial replay of the admissions.
             let (mut filter_busy, mut score_busy) = (0.0f64, 0.0f64);
             let mut oc_idx = 0usize;
+            let mut wasted = 0usize;
             for meta in &rounds {
                 let mut round_scored: Vec<ScoredStrategy> = Vec::new();
                 for &(ub, lb, spec) in meta {
@@ -821,6 +936,7 @@ impl ScoringCore {
                         // Speculation waste: scored in phase 2, pruned by
                         // the true frontier — dropped so the report matches
                         // the serial sweep exactly.
+                        wasted += 1;
                         continue;
                     }
                     n_generated += oc.generated;
@@ -844,6 +960,9 @@ impl ScoringCore {
             } else {
                 search_secs += gen_secs + wall;
             }
+            // Adaptive schedule: grow while speculation is free, reset to
+            // the base on the first wasted pool.
+            wave = if wasted == 0 { (wave + 1).min(wave_cap) } else { base_wave };
         }
         self.assemble_report(
             n_generated,

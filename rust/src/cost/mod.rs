@@ -47,10 +47,36 @@
 //! Hit/miss counters are surfaced per search in `SearchReport.memo_hits` /
 //! `memo_misses` and benchmarked by `rust/benches/perf_search.rs`, which
 //! writes `BENCH_search.json`: `cold` is a fresh-memo search, `warm` repeats
-//! it against the populated memo; `memo_hit_rate` is hits/(hits+misses) and
-//! `strategies_per_sec` is generated candidates over wall seconds. The
-//! `BENCH=1 ./ci.sh` lane fails if the warm hit-rate drops below its pinned
-//! floor.
+//! it against the populated memo, and `warm_restore` replays it on a fresh
+//! engine restored from a spilled snapshot (the restart story below);
+//! `memo_hit_rate` is hits/(hits+misses) and `strategies_per_sec` is
+//! generated candidates over wall seconds. The `BENCH=1 ./ci.sh` lane fails
+//! if the warm or restored hit-rate drops below its pinned floor.
+//!
+//! ## Warm-start snapshots ([`crate::persist`])
+//!
+//! Memos outlive the process: [`SharedCostMemo::export_rows`] drains the
+//! stripe locks into sorted, flattened rows and
+//! [`MemoRegistry::restore_scope`] imports them back, with the
+//! line-delimited snapshot format owned by [`crate::persist`]. Because the
+//! scope/key split above means a memo value is a pure function of its key
+//! *given* the scope, a snapshot is safe to load exactly when every
+//! scope-level input matches — which the persist layer enforces through a
+//! scope header that is checked field-for-field before any row is imported
+//! (mismatch ⇒ the scope is skipped and that model starts cold):
+//!
+//! | header field      | pins                                            |
+//! |-------------------|-------------------------------------------------|
+//! | `format`          | row-encoding version ([`crate::persist::FORMAT_VERSION`]) |
+//! | `key`             | [`model_scope_key`] — the full `ModelSpec`      |
+//! | `catalog`         | every `GpuSpec` field, order and topology (keys store catalog indices) |
+//! | `eta`             | η source: `"analytic"` or a digest over every forest node |
+//! | `consts`          | the [`CostConsts`] overlap/host-rate constants  |
+//! | `book`            | the full price card incl. spot/time-of-day state |
+//!
+//! Values are serialized as IEEE-754 bit patterns and the footer carries a
+//! row checksum, so a restored search is byte-identical to its cold
+//! counterpart or the scope is rejected — never silently wrong.
 
 pub mod features;
 pub mod ops;
@@ -201,6 +227,18 @@ struct StageKey {
     ep: u16,
 }
 
+fn u16_of(x: u64) -> Option<u16> {
+    u16::try_from(x).ok()
+}
+
+fn bool_of(x: u64) -> Option<bool> {
+    match x {
+        0 => Some(false),
+        1 => Some(true),
+        _ => None,
+    }
+}
+
 impl StageKey {
     fn new(s: &ParallelStrategy, stage: usize) -> StageKey {
         StageKey {
@@ -222,6 +260,47 @@ impl StageKey {
             p2p_ovl: s.overlap_p2p,
             ep: s.ep as u16,
         }
+    }
+
+    /// Flattened snapshot form; the field order is part of the persist
+    /// format version — changing it requires bumping
+    /// `crate::persist::FORMAT_VERSION`.
+    fn to_row(self) -> [u64; 13] {
+        [
+            self.gpu as u64,
+            self.next_gpu as u64,
+            self.layers as u64,
+            self.is_last as u64,
+            self.tp as u64,
+            self.dp as u64,
+            self.mbs as u64,
+            self.recompute as u64,
+            self.rc_layers as u64,
+            self.flash as u64,
+            self.tp_ovl as u64,
+            self.p2p_ovl as u64,
+            self.ep as u64,
+        ]
+    }
+
+    /// Inverse of [`StageKey::to_row`]; `None` on any out-of-range field
+    /// (restores reject the whole scope rather than guess).
+    fn from_row(r: &[u64; 13]) -> Option<StageKey> {
+        Some(StageKey {
+            gpu: u16_of(r[0])?,
+            next_gpu: u16_of(r[1])?,
+            layers: u16_of(r[2])?,
+            is_last: bool_of(r[3])?,
+            tp: u16_of(r[4])?,
+            dp: u32::try_from(r[5]).ok()?,
+            mbs: u16_of(r[6])?,
+            recompute: u8::try_from(r[7]).ok().filter(|&v| v <= 2)?,
+            rc_layers: u16_of(r[8])?,
+            flash: bool_of(r[9])?,
+            tp_ovl: bool_of(r[10])?,
+            p2p_ovl: bool_of(r[11])?,
+            ep: u16_of(r[12])?,
+        })
     }
 }
 
@@ -254,6 +333,65 @@ impl SyncKey {
             grad_ovl: s.overlap_grad_reduce,
             param_ovl: s.overlap_param_gather,
         }
+    }
+
+    /// Flattened snapshot form (see [`StageKey::to_row`]).
+    fn to_row(self) -> [u64; 10] {
+        [
+            self.gpu as u64,
+            self.layers as u64,
+            self.is_first as u64,
+            self.is_last as u64,
+            self.tp as u64,
+            self.dp as u64,
+            self.dist_opt as u64,
+            self.offload as u64,
+            self.grad_ovl as u64,
+            self.param_ovl as u64,
+        ]
+    }
+
+    fn from_row(r: &[u64; 10]) -> Option<SyncKey> {
+        Some(SyncKey {
+            gpu: u16_of(r[0])?,
+            layers: u16_of(r[1])?,
+            is_first: bool_of(r[2])?,
+            is_last: bool_of(r[3])?,
+            tp: u16_of(r[4])?,
+            dp: u32::try_from(r[5]).ok()?,
+            dist_opt: bool_of(r[6])?,
+            offload: bool_of(r[7])?,
+            grad_ovl: bool_of(r[8])?,
+            param_ovl: bool_of(r[9])?,
+        })
+    }
+}
+
+/// Flattened, order-stable dump of one memo's entries: key fields as raw
+/// integers, values as IEEE-754 bit patterns (the persist layer's unit of
+/// exchange — see [`crate::persist`] for the on-disk framing).
+#[derive(Debug, Clone, Default)]
+pub struct MemoRows {
+    /// `(StageKey fields, (fwd, bwd, p2p) bit patterns)`.
+    pub stages: Vec<([u64; 13], [u64; 3])>,
+    /// `(SyncKey fields, (dp, opt, off) bit patterns)`.
+    pub syncs: Vec<([u64; 10], [u64; 3])>,
+}
+
+impl MemoRows {
+    pub fn len(&self) -> usize {
+        self.stages.len() + self.syncs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty() && self.syncs.is_empty()
+    }
+
+    /// Every row decodes to an in-range key. Restores check this before
+    /// importing so a scope is taken whole or not at all.
+    pub fn validate(&self) -> bool {
+        self.stages.iter().all(|(k, _)| StageKey::from_row(k).is_some())
+            && self.syncs.iter().all(|(k, _)| SyncKey::from_row(k).is_some())
     }
 }
 
@@ -412,6 +550,61 @@ impl SharedCostMemo {
             s.lock().unwrap().clear();
         }
     }
+
+    /// Drain every resident entry into flattened rows for spilling. Each
+    /// stripe lock is held only while its shard is cloned out; the sort
+    /// (for a deterministic, diffable snapshot) runs outside all locks.
+    /// Concurrent scoring may insert while this runs — the snapshot is a
+    /// consistent-per-shard point-in-time view, which is all warm-start
+    /// needs (a missed racing insert is just one future cold key).
+    pub fn export_rows(&self) -> MemoRows {
+        let mut rows = MemoRows::default();
+        for shard in &self.stages {
+            for (k, v) in shard.lock().unwrap().iter() {
+                rows.stages.push((k.to_row(), [v.fwd.to_bits(), v.bwd.to_bits(), v.p2p.to_bits()]));
+            }
+        }
+        for shard in &self.syncs {
+            for (k, v) in shard.lock().unwrap().iter() {
+                rows.syncs.push((k.to_row(), [v.0.to_bits(), v.1.to_bits(), v.2.to_bits()]));
+            }
+        }
+        rows.stages.sort_unstable();
+        rows.syncs.sort_unstable();
+        rows
+    }
+
+    /// Import previously exported rows; returns how many were inserted.
+    /// Values land bit-identical to what [`Self::export_rows`] drained, so
+    /// a restored memo scores exactly like the one that was spilled.
+    /// Malformed rows are skipped defensively — the persist layer validates
+    /// ([`MemoRows::validate`]) and rejects whole scopes before calling in.
+    pub fn import_rows(&self, rows: &MemoRows) -> usize {
+        let mut n = 0;
+        for (k, v) in &rows.stages {
+            if let Some(key) = StageKey::from_row(k) {
+                self.put_stage(
+                    key,
+                    StageTime {
+                        fwd: f64::from_bits(v[0]),
+                        bwd: f64::from_bits(v[1]),
+                        p2p: f64::from_bits(v[2]),
+                    },
+                );
+                n += 1;
+            }
+        }
+        for (k, v) in &rows.syncs {
+            if let Some(key) = SyncKey::from_row(k) {
+                self.put_sync(
+                    key,
+                    (f64::from_bits(v[0]), f64::from_bits(v[1]), f64::from_bits(v[2])),
+                );
+                n += 1;
+            }
+        }
+        n
+    }
 }
 
 /// Scope key of a [`SharedCostMemo`]: the full model spec. Catalog, η and
@@ -467,7 +660,13 @@ impl MemoRegistry {
     /// The memo for this model's scope, creating (and possibly evicting the
     /// least-recently-used scope) on first sight.
     pub fn for_model(&self, m: &ModelSpec) -> Arc<SharedCostMemo> {
-        let key = model_scope_key(m);
+        self.for_key(model_scope_key(m))
+    }
+
+    /// The memo for a raw scope key — the restore path, where the key comes
+    /// from a snapshot header and no `ModelSpec` is in hand. Same
+    /// get-or-create + LRU semantics as [`Self::for_model`].
+    pub fn for_key(&self, key: u64) -> Arc<SharedCostMemo> {
         let now = self.clock.fetch_add(1, Ordering::Relaxed);
         let mut scopes = self.scopes.lock().unwrap();
         if let Some(entry) = scopes.iter_mut().find(|(k, _, _)| *k == key) {
@@ -493,6 +692,24 @@ impl MemoRegistry {
     /// Number of live scopes.
     pub fn scopes(&self) -> usize {
         self.scopes.lock().unwrap().len()
+    }
+
+    /// Every live scope `(key, memo)`, sorted by key so spills enumerate
+    /// deterministically whatever the arrival order was.
+    pub fn export_scopes(&self) -> Vec<(u64, Arc<SharedCostMemo>)> {
+        let scopes = self.scopes.lock().unwrap();
+        let mut v: Vec<(u64, Arc<SharedCostMemo>)> =
+            scopes.iter().map(|(k, _, m)| (*k, m.clone())).collect();
+        drop(scopes);
+        v.sort_unstable_by_key(|&(k, _)| k);
+        v
+    }
+
+    /// Import spilled rows into a scope (created if absent, LRU-bumped if
+    /// present — restoring into a live registry only ever *adds* warmth).
+    /// Returns how many rows were inserted.
+    pub fn restore_scope(&self, key: u64, rows: &MemoRows) -> usize {
+        self.for_key(key).import_rows(rows)
     }
 
     /// Summed lifetime (hits, misses) over every scope ever registered —
@@ -1174,6 +1391,79 @@ mod tests {
         assert_eq!(registry.counters(), before, "eviction must not lose lifetime counters");
         let a2 = registry.for_model(m7);
         assert!(Arc::ptr_eq(&a, &a2), "recently-used scope must survive eviction");
+    }
+
+    #[test]
+    fn export_import_rows_roundtrip_bit_exactly() {
+        use crate::strategy::{SearchSpace, SpaceConfig};
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let c = cm();
+        let space = SearchSpace::new(SpaceConfig::default());
+        let strategies: Vec<_> =
+            space.homogeneous(m, &cat, 1, 64).into_iter().take(300).collect();
+        let memo = SharedCostMemo::new();
+        let mut stats = MemoStats::default();
+        for s in &strategies {
+            c.evaluate_shared(m, s, &memo, &mut stats);
+        }
+        let rows = memo.export_rows();
+        assert!(!rows.is_empty());
+        assert!(rows.validate());
+        assert_eq!(rows.stages.len(), memo.stage_entries());
+        assert_eq!(rows.syncs.len(), memo.sync_entries());
+        // Export is deterministic (sorted) regardless of shard layout.
+        let memo2 = SharedCostMemo::with_shards(3);
+        assert_eq!(memo2.import_rows(&rows), rows.len());
+        assert_eq!(memo2.export_rows().stages, rows.stages);
+        assert_eq!(memo2.export_rows().syncs, rows.syncs);
+        // A restored memo scores every strategy without a single miss and
+        // bit-identically to the original.
+        let mut warm = MemoStats::default();
+        for s in &strategies {
+            let a = c.evaluate_shared(m, s, &memo2, &mut warm);
+            let b = c.evaluate(m, s);
+            assert_eq!(a.step_time.to_bits(), b.step_time.to_bits());
+        }
+        assert_eq!(warm.misses, 0, "restored memo must be fully warm");
+    }
+
+    #[test]
+    fn malformed_rows_fail_validation_and_are_skipped() {
+        let mut rows = MemoRows::default();
+        rows.stages.push(([1, 2, 8, 1, 2, 4, 1, 0, 0, 1, 1, 1, 1], [0, 0, 0]));
+        assert!(rows.validate());
+        // bool field out of range.
+        rows.stages.push(([1, 2, 8, 7, 2, 4, 1, 0, 0, 1, 1, 1, 1], [0, 0, 0]));
+        assert!(!rows.validate());
+        let mut bad = MemoRows::default();
+        bad.syncs.push(([1, 8, 1, 0, 2, 4, 1, 0, 1, 2], [0, 0, 0]));
+        assert!(!bad.validate());
+        let memo = SharedCostMemo::new();
+        assert_eq!(memo.import_rows(&rows), 1, "only the valid row imports");
+    }
+
+    #[test]
+    fn registry_restores_by_raw_key() {
+        let reg = ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let c = cm();
+        let registry = MemoRegistry::new(4);
+        let memo = registry.for_model(m);
+        let mut stats = MemoStats::default();
+        c.evaluate_shared(m, &strat(m, 2, 4, 8, 2), &memo, &mut stats);
+        let key = model_scope_key(m);
+        let scopes = registry.export_scopes();
+        assert_eq!(scopes.len(), 1);
+        assert_eq!(scopes[0].0, key);
+        let rows = scopes[0].1.export_rows();
+        let fresh = MemoRegistry::new(4);
+        assert_eq!(fresh.restore_scope(key, &rows), rows.len());
+        // for_model after restore finds the same (now-warm) scope.
+        let restored = fresh.for_model(m);
+        assert_eq!(restored.stage_entries(), memo.stage_entries());
+        assert_eq!(fresh.scopes(), 1);
     }
 
     #[test]

@@ -87,6 +87,7 @@ pub mod logging;
 pub mod memory;
 pub mod model;
 pub mod pareto;
+pub mod persist;
 pub mod pool;
 pub mod pricing;
 pub mod prng;
@@ -112,6 +113,7 @@ pub mod prelude {
     pub use crate::memory::MemoryModel;
     pub use crate::model::{ModelRegistry, ModelSpec};
     pub use crate::pareto::{DominancePruner, MoneyModel, OptimalPool};
+    pub use crate::persist::{RestoreStats, SpillStats};
     pub use crate::pricing::{PriceBook, PriceEntry};
     pub use crate::rules::RuleSet;
     pub use crate::simulator::{PipelineSimulator, SimConfig};

@@ -7,8 +7,16 @@
 //!                Pareto frontier and the within-budget pick
 //!   simulate     replay one strategy on the discrete-event simulator
 //!   validate     cost model vs simulator accuracy over top-k strategies
-//!   serve        long-running search service (stdin or TCP, JSON lines)
+//!   serve        long-running search service (stdin or TCP, JSON lines);
+//!                `--warm-dir` restores warm state on boot and spills it
+//!                every N admissions and on clean shutdown
 //!   batch        score a file of JSON requests through the admission queue
+//!   warm         save | load | inspect a warm-start snapshot
+//!                (`astra warm save w.jsonl --model … --gpus …` runs the
+//!                configured search to heat the memo, then spills it)
+//!   stats        print the service statistics line (with --warm-dir:
+//!                after restoring, so operators can see registry state
+//!                across restarts)
 //!   info         print the GPU catalog and model registry
 
 use astra::cli::Cli;
@@ -30,7 +38,7 @@ fn main() {
         "astra",
         "automatic parallel-strategy search on homogeneous and heterogeneous GPUs",
     )
-    .positional("command", "search | hetero-cost | simulate | validate | serve | batch | info")
+    .positional("command", "search | hetero-cost | simulate | validate | serve | batch | warm | stats | info")
     .opt("model", "model name (see `astra info`)", Some("llama2-7b"))
     .opt("gpu", "GPU type for homogeneous/cost modes", Some("a800"))
     .opt("gpus", "cluster GPU count", Some("64"))
@@ -47,6 +55,12 @@ fn main() {
     .opt("cache-entries", "service cache capacity (reports)", Some("1024"))
     .opt("cache-mb", "service cache byte budget (MiB)", Some("256"))
     .opt("cache-ttl-secs", "service cache TTL in seconds (0 = none)", Some("0"))
+    .opt("warm-dir", "directory for the warm-start snapshot (serve/stats)", None)
+    .opt("warm-spill-every", "spill after every N admissions (0 = shutdown only)", Some("32"))
+    .opt("warm-load", "restore a warm snapshot before searching (search)", None)
+    .opt("warm-save", "spill the memo to a snapshot after searching (search)", None)
+    .flag("warm-no-cache", "persist memo scopes only, not the result cache (serve)")
+    .flag("json", "print the canonical report JSON instead of tables (search)")
     .flag("exhaustive", "exhaustive Eq.23 layer enumeration (hetero)")
     .flag("spot", "bill at spot rates instead of on-demand")
     .flag("no-prune", "disable branch-and-bound pool pruning (hetero-cost)")
@@ -109,9 +123,15 @@ fn build_service(args: &astra::cli::Args, catalog: GpuCatalog) -> astra::Result<
         ttl: (ttl > 0).then(|| Duration::from_secs(ttl as u64)),
         ..Default::default()
     };
+    let warm = astra::service::WarmConfig {
+        dir: args.get("warm-dir").map(std::path::PathBuf::from),
+        spill_every: args.get_usize("warm-spill-every")? as u64,
+        include_cache: !args.flag("warm-no-cache"),
+    };
     let service_cfg = ServiceConfig {
         cache,
         max_batch: args.get_usize("max-batch")?.max(1),
+        warm,
         ..Default::default()
     };
     Ok(SearchService::new(ScoringCore::new(catalog, config), service_cfg))
@@ -163,7 +183,11 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
                 // a Send handle).
                 let stdin = std::io::BufReader::new(std::io::stdin());
                 let mut stdout = std::io::stdout().lock();
-                let stats = run_serve_loop(&service, stdin, &mut stdout, &opts)?;
+                // Spill before propagating any loop error — a failed write
+                // to stdout must not also discard the accumulated warmth.
+                let stats = run_serve_loop(&service, stdin, &mut stdout, &opts);
+                spill_on_exit(&service);
+                let stats = stats?;
                 eprintln!(
                     "served {} lines ({} ok, {} errors); engine searches: {}",
                     stats.lines,
@@ -174,6 +198,18 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
                 Ok(())
             }
         };
+    }
+
+    if command == "stats" {
+        // Build the service (restoring any configured warm snapshot) and
+        // print the same stats payload the wire `{"cmd":"stats"}` returns —
+        // registry/persistence state stays observable across restarts.
+        let service = build_service(args, catalog)?;
+        println!(
+            "{}",
+            astra::json::to_string_pretty(&astra::service::server::stats_json(&service))
+        );
+        return Ok(());
     }
 
     if command == "batch" {
@@ -188,7 +224,9 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         };
         let t0 = std::time::Instant::now();
         let mut stdout = std::io::stdout().lock();
-        let stats = run_batch_lines(&service, &text, &mut stdout, &opts)?;
+        let stats = run_batch_lines(&service, &text, &mut stdout, &opts);
+        spill_on_exit(&service);
+        let stats = stats?;
         let secs = t0.elapsed().as_secs_f64();
         let cache = service.cache_stats();
         eprintln!(
@@ -246,8 +284,77 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
 
     match command {
         "search" => {
+            if let Some(p) = args.get("warm-load") {
+                let st = engine.core().load_warm(std::path::Path::new(p))?;
+                eprintln!(
+                    "warm: restored {} scope(s) ({} stage + {} sync rows), rejected {}",
+                    st.scopes_restored, st.stage_rows, st.sync_rows, st.scopes_rejected
+                );
+            }
             let report = engine.search(&req)?;
-            print_report(&model.name, &report, args.get_usize("top")?);
+            if args.flag("json") {
+                // Canonical result view (no wall-clock / memo fields):
+                // byte-stable across runs, which the ci.sh persistence
+                // roundtrip lane diffs cold-vs-restored.
+                println!(
+                    "{}",
+                    astra::json::to_string_pretty(&astra::report::report_json(
+                        &report, &catalog
+                    ))
+                );
+            } else {
+                print_report(&model.name, &report, args.get_usize("top")?);
+            }
+            if let Some(p) = args.get("warm-save") {
+                let st = engine.core().save_warm(std::path::Path::new(p))?;
+                eprintln!("warm: spilled {} scope(s), {} bytes to {p}", st.scopes, st.bytes);
+            }
+        }
+        "warm" => {
+            let usage = "usage: astra warm save|load|inspect <file> [search flags]";
+            let action = args.positionals().get(1).cloned().unwrap_or_default();
+            let file = args
+                .positionals()
+                .get(2)
+                .ok_or_else(|| astra::AstraError::Config(usage.into()))?
+                .clone();
+            let path = std::path::Path::new(&file);
+            match action.as_str() {
+                "save" => {
+                    // Heat the memo with the flag-configured search, then
+                    // spill — a prewarming tool for the serve fleet.
+                    let report = engine.search(&req)?;
+                    let st = engine.core().save_warm(path)?;
+                    println!(
+                        "warmed by 1 search ({} scored); spilled {} scope(s), {} bytes to {}",
+                        report.scored,
+                        st.scopes,
+                        st.bytes,
+                        path.display()
+                    );
+                }
+                "load" => {
+                    let st = engine.core().load_warm(path)?;
+                    println!(
+                        "restored {} scope(s) ({} stage + {} sync rows), rejected {}",
+                        st.scopes_restored, st.stage_rows, st.sync_rows, st.scopes_rejected
+                    );
+                }
+                "inspect" => {
+                    let text = std::fs::read_to_string(path)?;
+                    let meta = astra::persist::EngineMeta::of_core(engine.core());
+                    let mut t = Table::new(&["kind", "scope", "rows", "status"]);
+                    for info in astra::persist::inspect(&text, &meta) {
+                        t.row(&[info.kind, info.detail, info.rows.to_string(), info.status]);
+                    }
+                    t.emit(&format!("warm snapshot {}", path.display()), None);
+                }
+                other => {
+                    return Err(astra::AstraError::Config(format!(
+                        "unknown warm action '{other}' — {usage}"
+                    )));
+                }
+            }
         }
         "hetero-cost" => {
             let report = engine.search(&req)?;
@@ -322,11 +429,24 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         }
         other => {
             return Err(astra::AstraError::Config(format!(
-                "unknown command '{other}' (search | hetero-cost | simulate | validate | serve | batch | info)"
+                "unknown command '{other}' (search | hetero-cost | simulate | validate | serve | batch | warm | stats | info)"
             )));
         }
     }
     Ok(())
+}
+
+/// Final spill for the serve/batch front ends (clean shutdown half of the
+/// warm policy); failures are reported, never fatal.
+fn spill_on_exit(service: &SearchService) {
+    match service.spill_warm() {
+        Ok(Some(s)) => eprintln!(
+            "warm spill: {} scope(s), {} cache entries, {} bytes",
+            s.scopes, s.cache_entries, s.bytes
+        ),
+        Ok(None) => {}
+        Err(e) => eprintln!("warm spill failed: {e}"),
+    }
 }
 
 fn print_report(model: &str, report: &astra::coordinator::SearchReport, top: usize) {

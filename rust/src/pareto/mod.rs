@@ -225,6 +225,14 @@ impl OptimalPool {
         OptimalPool { entries: frontier }
     }
 
+    /// Reconstruct a pool from already-built frontier entries — the
+    /// persist restore path, which replays exactly what [`Self::build`]
+    /// produced before the spill. Trusts the input to be in Eq. 33 order;
+    /// use [`Self::build`] for raw candidates.
+    pub fn from_entries(entries: Vec<PoolEntry>) -> OptimalPool {
+        OptimalPool { entries }
+    }
+
     /// Frontier entries in Eq. 33 order.
     pub fn entries(&self) -> &[PoolEntry] {
         &self.entries

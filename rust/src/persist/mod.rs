@@ -1,0 +1,1254 @@
+//! `astra::persist` — the versioned warm-start store.
+//!
+//! PR 3 made repeat traffic sublinear through the shared cost memo, but
+//! every restart of `astra serve` threw that warmth away and paid the full
+//! cold pass again. This module defines a durable on-disk contract for the
+//! warm state: hot [`crate::cost::SharedCostMemo`] scopes (the
+//! `StageKey → StageTime` and `SyncKey → (dp, opt, off)` tables) and,
+//! optionally, the service's sharded result cache, spill to a
+//! line-delimited JSON snapshot and restore on startup — so a restarted
+//! service skips the cold pass entirely.
+//!
+//! ## File format (`astra_warm` v1)
+//!
+//! One JSON object per line, written through the in-tree [`crate::json`]
+//! (no new dependencies):
+//!
+//! ```text
+//! {"astra_warm":1}                                     file header
+//! {"scope":{"kind":"memo","format":1,"key":"<hex16>",  scope header
+//!           "catalog":"<hex16>","eta":"analytic",
+//!           "consts":"<hex16>","book":"<hex16>",
+//!           "stage_rows":N,"sync_rows":M}}
+//! {"k":[13 ints],"t":"stage","v":["<hex16>",×3]}       N stage rows
+//! {"k":[10 ints],"t":"sync","v":["<hex16>",×3]}        M sync rows
+//! {"end":"<hex16 key>","rows":N+M,"sum":"<hex16>"}     scope footer
+//! {"scope":{"kind":"cache","format":1,...,"entries":K}}
+//! {"fp":"<hex16>","report":{…},"t":"report"}           K cache rows
+//! {"end":"cache","rows":K,"sum":"<hex16>"}
+//! ```
+//!
+//! Every `f64` payload is serialized as the 16-hex-digit form of its IEEE
+//! bit pattern, so a restored value is **bit-identical** to the spilled one
+//! — a restored-memo search must reproduce a cold search byte-for-byte,
+//! and shortest-round-trip decimal would be one `ulp` of risk for zero
+//! benefit. Scope footers carry an FNV-1a checksum over the decoded rows;
+//! a flipped bit inside an otherwise well-formed row is caught there.
+//!
+//! ## Integrity: never trust-and-load
+//!
+//! A snapshot is only as good as the engine it was spilled from. Each
+//! scope header pins everything the memo'd values depend on besides the
+//! key itself (the scope/key split documented atop [`crate::cost`]):
+//!
+//! | header field | pins                                  | on mismatch |
+//! |--------------|---------------------------------------|-------------|
+//! | `format`     | row encoding version                  | skip scope  |
+//! | `key`        | `model_scope_key` (the model spec)    | n/a (scopes coexist) |
+//! | `catalog`    | [`catalog_digest`]: every `GpuSpec` field + topology | skip scope |
+//! | `eta`        | [`eta_identity`]: analytic vs forests (+ forest digest) | skip scope |
+//! | `consts`     | [`consts_digest`]: the `CostConsts` overlap/host rates | skip scope |
+//! | `book`       | [`book_digest`]: the full price card + spot/ToD state | skip scope |
+//!
+//! Mismatching, corrupt, truncated or partially written scopes are
+//! *skipped* — counted in [`RestoreStats::scopes_rejected`], never an
+//! error and never a wrong answer; the engine just starts cold for that
+//! scope. The only hard failure [`read_warm`] has is none at all: it
+//! always returns, with whatever subset of the file validated.
+//!
+//! Cache entries restore behind the same digest gate. Their fingerprints
+//! additionally encode the full request+config key, so entries spilled
+//! under a config that later changed are simply never hit again and age
+//! out by LRU. Cache TTLs restart on restore (the snapshot stores no wall
+//! clock).
+//!
+//! ## Who calls what
+//!
+//! * [`crate::coordinator::ScoringCore::save_warm`] / `load_warm` — memo
+//!   scopes only (CLI `astra warm save|load`, `astra search --warm-*`).
+//! * [`crate::service::SearchService::spill_warm`] / `restore_warm` — memo
+//!   scopes plus the result cache (`astra serve --warm-dir`, spilled every
+//!   N admissions and on clean shutdown, restored on boot).
+//! * `astra warm inspect <file>` — [`inspect`], header-level validity
+//!   against the current engine without importing anything.
+
+use crate::coordinator::{ScoredStrategy, ScoringCore, SearchReport};
+use crate::cost::{CostBreakdown, CostConsts, EtaProvider, MemoRows, StageTime};
+use crate::gbdt::Forest;
+use crate::gpu::GpuCatalog;
+use crate::json::{self, Value};
+use crate::pareto::{OptimalPool, PoolEntry};
+use crate::pricing::PriceBook;
+use crate::service::fingerprint::Fnv64;
+use crate::strategy::{
+    ClusterAssignment, ParallelStrategy, Recompute, RecomputeMethod, Segment,
+};
+use crate::{AstraError, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// On-disk format version; bumped whenever a row encoding changes. Old
+/// snapshots are rejected wholesale (cold start), never misread.
+pub const FORMAT_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Bit-exact scalar encoding
+// ---------------------------------------------------------------------------
+
+fn hex64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// `f64` as its bit pattern — the only encoding that restores bit-identical.
+fn bits(x: f64) -> Value {
+    Value::Str(hex64(x.to_bits()))
+}
+
+fn parse_hex(v: &Value) -> Option<u64> {
+    let s = v.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn req_hex(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(parse_hex)
+        .ok_or_else(|| AstraError::Json(format!("missing/invalid hex64 field '{key}'")))
+}
+
+fn req_bits(v: &Value, key: &str) -> Result<f64> {
+    req_hex(v, key).map(f64::from_bits)
+}
+
+fn req_bool(v: &Value, key: &str) -> Result<bool> {
+    v.get(key)
+        .and_then(Value::as_bool)
+        .ok_or_else(|| AstraError::Json(format!("missing/invalid bool field '{key}'")))
+}
+
+// ---------------------------------------------------------------------------
+// Engine identity digests
+// ---------------------------------------------------------------------------
+
+/// The engine-identity half of a scope header: everything memo'd values
+/// depend on besides their keys. Two engines with equal `EngineMeta` (and
+/// equal scope keys) compute bit-identical memo values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineMeta {
+    pub catalog: u64,
+    pub eta: String,
+    pub consts: u64,
+    pub book: u64,
+}
+
+impl EngineMeta {
+    /// Digest the identity from its parts. Forest digests walk every tree
+    /// node, so cores compute this once at construction and hand out
+    /// [`ScoringCore::engine_meta`] thereafter.
+    pub fn new(
+        catalog: &GpuCatalog,
+        eta: &EtaProvider,
+        consts: &CostConsts,
+        book: &PriceBook,
+    ) -> EngineMeta {
+        EngineMeta {
+            catalog: catalog_digest(catalog),
+            eta: eta_identity(eta),
+            consts: consts_digest(consts),
+            book: book_digest(book),
+        }
+    }
+
+    /// The live identity of a [`ScoringCore`] — the core's cached copy
+    /// (digested once at construction), not a recomputation.
+    pub fn of_core(core: &ScoringCore) -> EngineMeta {
+        core.engine_meta().clone()
+    }
+}
+
+/// Digest over every result-relevant catalog field (specs in order plus
+/// topology). Also pins GPU *indices*: memo keys and snapshot rows store
+/// catalog indices, so a reordered catalog must (and does) change this.
+pub fn catalog_digest(c: &GpuCatalog) -> u64 {
+    let mut h = Fnv64::new();
+    h.field_str("catalog", "v1")
+        .field_usize("gpus_per_node", c.gpus_per_node)
+        .field_usize("len", c.len());
+    for s in c.all() {
+        h.field_str("name", &s.name)
+            .field_f64("mem_gib", s.mem_gib)
+            .field_f64("peak", s.peak_tflops_bf16)
+            .field_f64("hbm", s.hbm_gbs)
+            .field_f64("nvlink", s.nvlink_gbs)
+            .field_f64("inter", s.internode_gbs)
+            .field_f64("pcie", s.pcie_gbs)
+            .field_f64("price", s.price_per_hour)
+            .field_f64("util_max", s.eff.util_max)
+            .field_f64("launch", s.eff.launch_overhead_s)
+            .field_f64("skinny_dim", s.eff.skinny_dim)
+            .field_f64("skinny_pen", s.eff.skinny_penalty)
+            .field_f64("mbi", s.eff.mem_bound_intensity)
+            .field_f64("lat", s.eff.comm_latency_s)
+            .field_f64("ceff", s.eff.comm_eff_max);
+    }
+    h.finish()
+}
+
+/// Digest over the [`CostConsts`] composition constants.
+pub fn consts_digest(c: &CostConsts) -> u64 {
+    let mut h = Fnv64::new();
+    h.field_str("consts", "v1")
+        .field_f64("p2p_hide", c.p2p_hide)
+        .field_f64("grad_reduce_hide", c.grad_reduce_hide)
+        .field_f64("param_gather_hide", c.param_gather_hide)
+        .field_f64("tp_hide", c.tp_hide)
+        .field_f64("adam_bytes", c.adam_bytes_per_param)
+        .field_f64("host_ddr", c.host_ddr_gbs)
+        .field_f64("offload_hide", c.offload_hide);
+    h.finish()
+}
+
+fn forest_digest(h: &mut Fnv64, tag: &str, f: &Forest) {
+    h.field_str("forest", tag)
+        .field_usize("n_features", f.n_features)
+        .field_u64("base", f.base.to_bits() as u64)
+        .field_u64("lr", f.lr.to_bits() as u64)
+        .field_usize("trees", f.trees.len());
+    for t in &f.trees {
+        h.field_usize("depth", t.depth);
+        for &x in &t.feat {
+            h.field_u64("f", x as u64);
+        }
+        for &x in &t.thresh {
+            h.field_u64("t", x.to_bits() as u64);
+        }
+        for &x in &t.leaf {
+            h.field_u64("l", x.to_bits() as u64);
+        }
+    }
+}
+
+/// Identity of the η source: `"analytic"` (the curves are part of the
+/// catalog digest) or `"forests:<hex16>"` over every tree node — retrained
+/// forests must invalidate spilled memos.
+pub fn eta_identity(eta: &EtaProvider) -> String {
+    match eta {
+        EtaProvider::Analytic => "analytic".to_string(),
+        EtaProvider::Forests(f) => {
+            let mut h = Fnv64::new();
+            forest_digest(&mut h, "comp", &f.comp);
+            forest_digest(&mut h, "comm", &f.comm);
+            format!("forests:{}", hex64(h.finish()))
+        }
+    }
+}
+
+/// Digest over the full rate card, delegating to the request
+/// fingerprint's field walk so the two book hashes can never silently
+/// diverge when [`PriceBook`] grows a field.
+pub fn book_digest(book: &PriceBook) -> u64 {
+    let mut h = Fnv64::new();
+    h.field_str("book", "v1");
+    crate::service::fingerprint::hash_book(&mut h, book);
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Stats + counters
+// ---------------------------------------------------------------------------
+
+/// Outcome of one spill.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Memo scopes written.
+    pub scopes: usize,
+    /// Result-cache entries written.
+    pub cache_entries: usize,
+    /// Snapshot size on disk.
+    pub bytes: u64,
+}
+
+/// Outcome of one restore.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RestoreStats {
+    /// Memo scopes that validated and imported.
+    pub scopes_restored: usize,
+    /// Scopes/sections skipped (digest or version mismatch, corruption,
+    /// truncation) — the cold-start degradations.
+    pub scopes_rejected: usize,
+    /// Result-cache entries that validated (insertion is the caller's job).
+    pub cache_entries: usize,
+    pub stage_rows: usize,
+    pub sync_rows: usize,
+}
+
+/// Lifetime persistence counters, owned by the [`ScoringCore`] so operators
+/// can observe registry state across restarts (`astra stats` / the wire
+/// `stats` response).
+#[derive(Default)]
+pub struct PersistCounters {
+    scopes_spilled: AtomicU64,
+    scopes_restored: AtomicU64,
+    scopes_rejected: AtomicU64,
+    bytes_on_disk: AtomicU64,
+    cache_spilled: AtomicU64,
+    cache_restored: AtomicU64,
+}
+
+impl PersistCounters {
+    pub fn note_spill(&self, s: &SpillStats) {
+        self.scopes_spilled.fetch_add(s.scopes as u64, Ordering::Relaxed);
+        self.cache_spilled.fetch_add(s.cache_entries as u64, Ordering::Relaxed);
+        // A gauge, not a counter: the latest snapshot's size.
+        self.bytes_on_disk.store(s.bytes, Ordering::Relaxed);
+    }
+
+    /// Folds in a restore's memo-scope outcome. Cache insertions are
+    /// counted by whoever actually inserts ([`Self::note_cache_restored`]).
+    pub fn note_restore(&self, s: &RestoreStats) {
+        self.scopes_restored.fetch_add(s.scopes_restored as u64, Ordering::Relaxed);
+        self.scopes_rejected.fetch_add(s.scopes_rejected as u64, Ordering::Relaxed);
+    }
+
+    pub fn note_cache_restored(&self, entries: u64) {
+        self.cache_restored.fetch_add(entries, Ordering::Relaxed);
+    }
+
+    /// Update the on-disk size gauge from a freshly *read* snapshot, so
+    /// `persist_bytes` is meaningful right after a restore-on-boot (not
+    /// only after the first spill).
+    pub fn note_snapshot_bytes(&self, bytes: u64) {
+        self.bytes_on_disk.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PersistSnapshot {
+        PersistSnapshot {
+            scopes_spilled: self.scopes_spilled.load(Ordering::Relaxed),
+            scopes_restored: self.scopes_restored.load(Ordering::Relaxed),
+            scopes_rejected: self.scopes_rejected.load(Ordering::Relaxed),
+            bytes_on_disk: self.bytes_on_disk.load(Ordering::Relaxed),
+            cache_entries_spilled: self.cache_spilled.load(Ordering::Relaxed),
+            cache_entries_restored: self.cache_restored.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data view of [`PersistCounters`] for the stats line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PersistSnapshot {
+    pub scopes_spilled: u64,
+    pub scopes_restored: u64,
+    pub scopes_rejected: u64,
+    pub bytes_on_disk: u64,
+    pub cache_entries_spilled: u64,
+    pub cache_entries_restored: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Builds a snapshot in memory and commits it atomically (temp file +
+/// rename), so a crash mid-spill can never leave a half-written file at
+/// the published path.
+pub struct WarmWriter {
+    out: String,
+    scopes: usize,
+    cache_entries: usize,
+}
+
+impl Default for WarmWriter {
+    fn default() -> Self {
+        WarmWriter::new()
+    }
+}
+
+impl WarmWriter {
+    pub fn new() -> WarmWriter {
+        let mut out = String::new();
+        out.push_str(&json::to_string(&Value::obj().set("astra_warm", FORMAT_VERSION)));
+        out.push('\n');
+        WarmWriter { out, scopes: 0, cache_entries: 0 }
+    }
+
+    fn push_line(&mut self, v: &Value) {
+        self.out.push_str(&json::to_string(v));
+        self.out.push('\n');
+    }
+
+    fn meta_header(meta: &EngineMeta, kind: &str) -> Value {
+        Value::obj()
+            .set("kind", kind)
+            .set("format", FORMAT_VERSION)
+            .set("catalog", hex64(meta.catalog))
+            .set("eta", meta.eta.as_str())
+            .set("consts", hex64(meta.consts))
+            .set("book", hex64(meta.book))
+    }
+
+    fn push_row(&mut self, t: &str, k: &[u64], v: &[u64; 3], sum: &mut Fnv64) {
+        for &x in k {
+            sum.field_u64("k", x);
+        }
+        for &x in v {
+            sum.field_u64("v", x);
+        }
+        let kv: Vec<Value> = k.iter().map(|&x| Value::from(x)).collect();
+        let vv: Vec<Value> = v.iter().map(|&x| Value::Str(hex64(x))).collect();
+        self.push_line(&Value::obj().set("t", t).set("k", Value::Arr(kv)).set("v", Value::Arr(vv)));
+    }
+
+    /// One memo scope: header, sorted rows (the caller exports them via
+    /// [`crate::cost::SharedCostMemo::export_rows`], which drains the
+    /// stripe locks shard by shard), checksummed footer.
+    pub fn memo_scope(&mut self, key: u64, rows: &MemoRows, meta: &EngineMeta) {
+        let header = Self::meta_header(meta, "memo")
+            .set("key", hex64(key))
+            .set("stage_rows", rows.stages.len())
+            .set("sync_rows", rows.syncs.len());
+        self.push_line(&Value::obj().set("scope", header));
+        let mut sum = Fnv64::new();
+        for (k, v) in &rows.stages {
+            self.push_row("stage", k, v, &mut sum);
+        }
+        for (k, v) in &rows.syncs {
+            self.push_row("sync", k, v, &mut sum);
+        }
+        self.push_line(
+            &Value::obj()
+                .set("end", hex64(key))
+                .set("rows", rows.stages.len() + rows.syncs.len())
+                .set("sum", hex64(sum.finish())),
+        );
+        self.scopes += 1;
+    }
+
+    /// The result-cache section: one row per entry, fingerprint + the
+    /// bit-exact report codec, checksummed over the serialized bytes.
+    pub fn cache_section(
+        &mut self,
+        entries: &[(u64, Arc<SearchReport>)],
+        catalog: &GpuCatalog,
+        meta: &EngineMeta,
+    ) {
+        if entries.is_empty() {
+            return;
+        }
+        let header = Self::meta_header(meta, "cache").set("entries", entries.len());
+        self.push_line(&Value::obj().set("scope", header));
+        let mut sum = Fnv64::new();
+        for (fp, report) in entries {
+            let rv = report_to_value(report, catalog);
+            sum.field_u64("fp", *fp);
+            sum.write_bytes(json::to_string(&rv).as_bytes());
+            self.push_line(&Value::obj().set("fp", hex64(*fp)).set("t", "report").set("report", rv));
+        }
+        self.push_line(
+            &Value::obj()
+                .set("end", "cache")
+                .set("rows", entries.len())
+                .set("sum", hex64(sum.finish())),
+        );
+        self.cache_entries += entries.len();
+    }
+
+    /// Commit atomically; returns what landed on disk. The temp name is
+    /// pid-unique so two processes spilling to the same path (a serve
+    /// instance plus an operator's `astra warm save`) cannot interleave
+    /// into a torn file — last rename wins, both candidates are whole.
+    pub fn finish_to(self, path: &Path) -> Result<SpillStats> {
+        let bytes = self.out.len() as u64;
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.out.as_bytes())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(SpillStats { scopes: self.scopes, cache_entries: self.cache_entries, bytes })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Everything a snapshot yielded under the caller's [`EngineMeta`]:
+/// validated memo scopes and cache entries, plus rejection accounting.
+pub struct RestoreSet {
+    pub memo_scopes: Vec<(u64, MemoRows)>,
+    pub cache: Vec<(u64, SearchReport)>,
+    pub scopes_rejected: usize,
+    pub stage_rows: usize,
+    pub sync_rows: usize,
+}
+
+impl RestoreSet {
+    fn empty() -> RestoreSet {
+        RestoreSet {
+            memo_scopes: Vec::new(),
+            cache: Vec::new(),
+            scopes_rejected: 0,
+            stage_rows: 0,
+            sync_rows: 0,
+        }
+    }
+
+    pub fn stats(&self) -> RestoreStats {
+        RestoreStats {
+            scopes_restored: self.memo_scopes.len(),
+            scopes_rejected: self.scopes_rejected,
+            cache_entries: self.cache.len(),
+            stage_rows: self.stage_rows,
+            sync_rows: self.sync_rows,
+        }
+    }
+}
+
+fn header_matches(h: &Value, meta: &EngineMeta) -> bool {
+    h.get("format").and_then(Value::as_u64) == Some(FORMAT_VERSION)
+        && h.get("catalog").and_then(parse_hex) == Some(meta.catalog)
+        && h.opt_str("eta") == Some(meta.eta.as_str())
+        && h.get("consts").and_then(parse_hex) == Some(meta.consts)
+        && h.get("book").and_then(parse_hex) == Some(meta.book)
+}
+
+fn parse_memo_row(line: &str) -> Option<(String, Vec<u64>, [u64; 3])> {
+    let v = json::parse(line).ok()?;
+    let t = v.opt_str("t")?.to_string();
+    let k: Option<Vec<u64>> = v.get("k")?.as_arr()?.iter().map(Value::as_u64).collect();
+    let k = k?;
+    let vals = v.get("v")?.as_arr()?;
+    if vals.len() != 3 {
+        return None;
+    }
+    let mut out = [0u64; 3];
+    for (i, x) in vals.iter().enumerate() {
+        out[i] = parse_hex(x)?;
+    }
+    Some((t, k, out))
+}
+
+/// Footer check shared by both scope kinds. `None` when the line is not
+/// even a footer (sync lost — abort the file), `Some(ok)` otherwise.
+fn check_footer(line: Option<&str>, end: &Value, rows: usize, sum: u64) -> Option<bool> {
+    let v = json::parse(line?).ok()?;
+    let end_field = v.get("end")?;
+    Some(
+        end_field == end
+            && v.opt_usize("rows") == Some(rows)
+            && v.get("sum").and_then(parse_hex) == Some(sum),
+    )
+}
+
+/// Parse one memo scope. Returns `false` when the stream can no longer be
+/// trusted (truncation / lost sync) and parsing must stop.
+fn read_memo_scope(
+    header: &Value,
+    lines: &mut std::str::Lines<'_>,
+    meta: &EngineMeta,
+    set: &mut RestoreSet,
+) -> bool {
+    let (ns, nq, key) = match (
+        header.opt_usize("stage_rows"),
+        header.opt_usize("sync_rows"),
+        header.get("key").and_then(parse_hex),
+    ) {
+        (Some(ns), Some(nq), Some(key)) => (ns, nq, key),
+        // Malformed header: the row count is unknown, so the rest of the
+        // file cannot be skipped reliably.
+        _ => {
+            set.scopes_rejected += 1;
+            return false;
+        }
+    };
+    let accept = header_matches(header, meta);
+    let mut rows = MemoRows::default();
+    let mut sum = Fnv64::new();
+    let mut good = true;
+    for i in 0..(ns + nq) {
+        let Some(line) = lines.next() else {
+            // Truncated mid-scope.
+            set.scopes_rejected += 1;
+            return false;
+        };
+        if !good {
+            continue; // keep consuming the declared rows to stay in sync
+        }
+        match parse_memo_row(line) {
+            Some((t, k, v)) => {
+                for &x in &k {
+                    sum.field_u64("k", x);
+                }
+                for &x in &v {
+                    sum.field_u64("v", x);
+                }
+                if i < ns && t == "stage" && k.len() == 13 {
+                    let mut arr = [0u64; 13];
+                    arr.copy_from_slice(&k);
+                    rows.stages.push((arr, v));
+                } else if i >= ns && t == "sync" && k.len() == 10 {
+                    let mut arr = [0u64; 10];
+                    arr.copy_from_slice(&k);
+                    rows.syncs.push((arr, v));
+                } else {
+                    good = false;
+                }
+            }
+            None => good = false,
+        }
+    }
+    let footer = check_footer(lines.next(), &Value::Str(hex64(key)), ns + nq, sum.finish());
+    let Some(footer_ok) = footer else {
+        set.scopes_rejected += 1;
+        return false;
+    };
+    if accept && good && footer_ok && rows.validate() {
+        set.stage_rows += rows.stages.len();
+        set.sync_rows += rows.syncs.len();
+        set.memo_scopes.push((key, rows));
+    } else {
+        set.scopes_rejected += 1;
+    }
+    true
+}
+
+/// Parse the cache section; same contract as [`read_memo_scope`]. With
+/// `want_cache` off the rows are still consumed and checksummed (sync and
+/// integrity accounting are unchanged) but the expensive per-report struct
+/// decode is skipped and nothing is collected.
+fn read_cache_scope(
+    header: &Value,
+    lines: &mut std::str::Lines<'_>,
+    catalog: &GpuCatalog,
+    meta: &EngineMeta,
+    want_cache: bool,
+    set: &mut RestoreSet,
+) -> bool {
+    let Some(n) = header.opt_usize("entries") else {
+        set.scopes_rejected += 1;
+        return false;
+    };
+    let accept = header_matches(header, meta);
+    let mut sum = Fnv64::new();
+    let mut good = true;
+    // The count is untrusted header data: clamp the pre-allocation so a
+    // corrupt header cannot abort the process on an absurd reserve (the
+    // row loop self-limits — a lying count runs out of lines and rejects).
+    let mut entries: Vec<(u64, SearchReport)> = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let Some(line) = lines.next() else {
+            set.scopes_rejected += 1;
+            return false;
+        };
+        if !good {
+            continue;
+        }
+        let parsed = json::parse(line).ok().and_then(|v| {
+            let fp = v.get("fp").and_then(parse_hex)?;
+            let rv = v.get("report")?.clone();
+            Some((fp, rv))
+        });
+        match parsed {
+            Some((fp, rv)) => {
+                sum.field_u64("fp", fp);
+                sum.write_bytes(json::to_string(&rv).as_bytes());
+                if want_cache {
+                    match report_from_value(&rv, catalog) {
+                        Ok(report) => entries.push((fp, report)),
+                        Err(_) => good = false,
+                    }
+                }
+            }
+            None => good = false,
+        }
+    }
+    let footer = check_footer(lines.next(), &Value::Str("cache".to_string()), n, sum.finish());
+    let Some(footer_ok) = footer else {
+        set.scopes_rejected += 1;
+        return false;
+    };
+    if accept && good && footer_ok {
+        set.cache.extend(entries);
+    } else {
+        set.scopes_rejected += 1;
+    }
+    true
+}
+
+/// Parse a snapshot against the caller's engine identity. Infallible by
+/// design: anything that does not validate is skipped and counted, so a
+/// bad snapshot degrades to a cold start rather than an error.
+pub fn read_warm(text: &str, catalog: &GpuCatalog, meta: &EngineMeta) -> RestoreSet {
+    read_warm_filtered(text, catalog, meta, true)
+}
+
+/// [`read_warm`] with the cache section's per-report decode made optional:
+/// memo-only consumers (`astra warm load`, `search --warm-load`,
+/// `include_cache: false` services) skip reconstructing reports they would
+/// immediately discard.
+pub fn read_warm_filtered(
+    text: &str,
+    catalog: &GpuCatalog,
+    meta: &EngineMeta,
+    want_cache: bool,
+) -> RestoreSet {
+    let mut set = RestoreSet::empty();
+    let mut lines = text.lines();
+    let header_ok = lines
+        .next()
+        .and_then(|l| json::parse(l).ok())
+        .and_then(|v| v.get("astra_warm").and_then(Value::as_u64))
+        == Some(FORMAT_VERSION);
+    if !header_ok {
+        set.scopes_rejected += 1;
+        return set;
+    }
+    while let Some(line) = lines.next() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let header = json::parse(line).ok().and_then(|v| v.get("scope").cloned());
+        let Some(header) = header else {
+            // A stray non-scope line means sync is lost; nothing after it
+            // can be attributed to a scope.
+            set.scopes_rejected += 1;
+            return set;
+        };
+        let go = match header.opt_str("kind") {
+            Some("memo") => read_memo_scope(&header, &mut lines, meta, &mut set),
+            Some("cache") => {
+                read_cache_scope(&header, &mut lines, catalog, meta, want_cache, &mut set)
+            }
+            _ => {
+                set.scopes_rejected += 1;
+                false
+            }
+        };
+        if !go {
+            return set;
+        }
+    }
+    set
+}
+
+// ---------------------------------------------------------------------------
+// Inspection (header-level; no import)
+// ---------------------------------------------------------------------------
+
+/// One scope's header summary for `astra warm inspect`.
+#[derive(Debug, Clone)]
+pub struct ScopeInfo {
+    pub kind: String,
+    /// Scope key (memo) or entry count (cache).
+    pub detail: String,
+    pub rows: usize,
+    /// `"ok"` or the first mismatching header field. Header-level only —
+    /// row checksums are verified at restore time.
+    pub status: String,
+}
+
+fn header_status(h: &Value, meta: &EngineMeta) -> String {
+    if h.get("format").and_then(Value::as_u64) != Some(FORMAT_VERSION) {
+        return "format mismatch".to_string();
+    }
+    if h.get("catalog").and_then(parse_hex) != Some(meta.catalog) {
+        return "catalog digest mismatch".to_string();
+    }
+    if h.opt_str("eta") != Some(meta.eta.as_str()) {
+        return "eta identity mismatch".to_string();
+    }
+    if h.get("consts").and_then(parse_hex) != Some(meta.consts) {
+        return "cost-consts digest mismatch".to_string();
+    }
+    if h.get("book").and_then(parse_hex) != Some(meta.book) {
+        return "price-book digest mismatch".to_string();
+    }
+    "ok".to_string()
+}
+
+/// Walk a snapshot's scope headers and report their validity against the
+/// current engine identity without importing anything.
+pub fn inspect(text: &str, meta: &EngineMeta) -> Vec<ScopeInfo> {
+    let mut out = Vec::new();
+    let mut lines = text.lines();
+    let header_ok = lines
+        .next()
+        .and_then(|l| json::parse(l).ok())
+        .and_then(|v| v.get("astra_warm").and_then(Value::as_u64))
+        == Some(FORMAT_VERSION);
+    if !header_ok {
+        out.push(ScopeInfo {
+            kind: "file".to_string(),
+            detail: String::new(),
+            rows: 0,
+            status: "unsupported file header".to_string(),
+        });
+        return out;
+    }
+    for line in lines {
+        let Some(h) = json::parse(line).ok().and_then(|v| v.get("scope").cloned()) else {
+            continue;
+        };
+        let kind = h.opt_str("kind").unwrap_or("?").to_string();
+        let (detail, rows) = match kind.as_str() {
+            "memo" => (
+                h.opt_str("key").unwrap_or("?").to_string(),
+                h.opt_usize("stage_rows").unwrap_or(0) + h.opt_usize("sync_rows").unwrap_or(0),
+            ),
+            "cache" => ("result cache".to_string(), h.opt_usize("entries").unwrap_or(0)),
+            _ => ("?".to_string(), 0),
+        };
+        out.push(ScopeInfo { kind, detail, rows, status: header_status(&h, meta) });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Bit-exact SearchReport codec (the cache payload)
+// ---------------------------------------------------------------------------
+
+fn strategy_to_value(s: &ParallelStrategy, catalog: &GpuCatalog) -> Value {
+    let segs: Vec<Value> = s
+        .cluster
+        .segments
+        .iter()
+        .map(|seg| {
+            Value::obj()
+                .set("gpu", catalog.spec(seg.gpu).name.as_str())
+                .set("stages", seg.stages)
+                .set("layers", seg.layers_per_stage)
+        })
+        .collect();
+    Value::obj()
+        .set("segments", Value::Arr(segs))
+        .set("tp", s.tp)
+        .set("dp", s.dp)
+        .set("mbs", s.micro_batch)
+        .set("gbs", s.global_batch)
+        .set("vpp", s.vpp)
+        .set("ep", s.ep)
+        .set("sp", s.sequence_parallel)
+        .set("dist_opt", s.use_distributed_optimizer)
+        .set("recompute", s.recompute.as_str())
+        .set("rc_method", s.recompute_method.as_str())
+        .set("rc_layers", s.recompute_num_layers)
+        .set("offload", s.offload_optimizer)
+        .set("ovl_grad", s.overlap_grad_reduce)
+        .set("ovl_param", s.overlap_param_gather)
+        .set("ovl_p2p", s.overlap_p2p)
+        .set("ovl_tp", s.tp_comm_overlap)
+        .set("flash", s.use_flash_attn)
+}
+
+fn strategy_from_value(v: &Value, catalog: &GpuCatalog) -> Result<ParallelStrategy> {
+    let mut segments = Vec::new();
+    for sv in v.req_arr("segments")? {
+        segments.push(Segment {
+            gpu: catalog.find(sv.req_str("gpu")?)?,
+            stages: sv.req_usize("stages")?,
+            layers_per_stage: sv.req_usize("layers")?,
+        });
+    }
+    let recompute = Recompute::parse(v.req_str("recompute")?)
+        .ok_or_else(|| AstraError::Json("bad recompute variant".into()))?;
+    let recompute_method = RecomputeMethod::parse(v.req_str("rc_method")?)
+        .ok_or_else(|| AstraError::Json("bad recompute method".into()))?;
+    Ok(ParallelStrategy {
+        cluster: ClusterAssignment { segments },
+        tp: v.req_usize("tp")?,
+        dp: v.req_usize("dp")?,
+        micro_batch: v.req_usize("mbs")?,
+        global_batch: v.req_usize("gbs")?,
+        vpp: v.req_usize("vpp")?,
+        sequence_parallel: req_bool(v, "sp")?,
+        use_distributed_optimizer: req_bool(v, "dist_opt")?,
+        recompute,
+        recompute_method,
+        recompute_num_layers: v.req_usize("rc_layers")?,
+        offload_optimizer: req_bool(v, "offload")?,
+        overlap_grad_reduce: req_bool(v, "ovl_grad")?,
+        overlap_param_gather: req_bool(v, "ovl_param")?,
+        overlap_p2p: req_bool(v, "ovl_p2p")?,
+        tp_comm_overlap: req_bool(v, "ovl_tp")?,
+        use_flash_attn: req_bool(v, "flash")?,
+        ep: v.req_usize("ep")?,
+    })
+}
+
+fn cost_to_value(c: &CostBreakdown) -> Value {
+    let st: Vec<Value> = c
+        .stage_times
+        .iter()
+        .map(|t| Value::Arr(vec![bits(t.fwd), bits(t.bwd), bits(t.p2p)]))
+        .collect();
+    Value::obj()
+        .set("stage_times", Value::Arr(st))
+        .set("pipeline_fwd", bits(c.pipeline_fwd))
+        .set("pipeline_bwd", bits(c.pipeline_bwd))
+        .set("dp_time", bits(c.dp_time))
+        .set("optimizer_time", bits(c.optimizer_time))
+        .set("offload_time", bits(c.offload_time))
+        .set("step_time", bits(c.step_time))
+        .set("tokens_per_s", bits(c.tokens_per_s))
+        .set("mfu", bits(c.mfu))
+}
+
+fn cost_from_value(v: &Value) -> Result<CostBreakdown> {
+    let mut stage_times = Vec::new();
+    for tv in v.req_arr("stage_times")? {
+        let parts = tv
+            .as_arr()
+            .filter(|a| a.len() == 3)
+            .ok_or_else(|| AstraError::Json("bad stage_times row".into()))?;
+        let mut t = [0.0f64; 3];
+        for (i, p) in parts.iter().enumerate() {
+            t[i] = parse_hex(p)
+                .map(f64::from_bits)
+                .ok_or_else(|| AstraError::Json("bad stage time bits".into()))?;
+        }
+        stage_times.push(StageTime { fwd: t[0], bwd: t[1], p2p: t[2] });
+    }
+    Ok(CostBreakdown {
+        stage_times,
+        pipeline_fwd: req_bits(v, "pipeline_fwd")?,
+        pipeline_bwd: req_bits(v, "pipeline_bwd")?,
+        dp_time: req_bits(v, "dp_time")?,
+        optimizer_time: req_bits(v, "optimizer_time")?,
+        offload_time: req_bits(v, "offload_time")?,
+        step_time: req_bits(v, "step_time")?,
+        tokens_per_s: req_bits(v, "tokens_per_s")?,
+        mfu: req_bits(v, "mfu")?,
+    })
+}
+
+/// Full-fidelity [`SearchReport`] encoding — every field, floats as bit
+/// patterns, GPUs by catalog name. Unlike [`crate::report::report_json`]
+/// (the lossy canonical *result* view), this restores the exact struct so
+/// a restored cache entry serves byte-identical wire responses.
+pub fn report_to_value(r: &SearchReport, catalog: &GpuCatalog) -> Value {
+    let top: Vec<Value> = r
+        .top
+        .iter()
+        .map(|s| {
+            Value::obj()
+                .set("strategy", strategy_to_value(&s.strategy, catalog))
+                .set("cost", cost_to_value(&s.cost))
+                .set("money", bits(s.money_usd))
+        })
+        .collect();
+    let pool: Vec<Value> = r
+        .pool
+        .entries()
+        .iter()
+        .map(|e| Value::obj().set("idx", e.idx).set("tput", bits(e.throughput)).set("cost", bits(e.cost)))
+        .collect();
+    Value::obj()
+        .set("generated", r.generated)
+        .set("rule_filtered", r.rule_filtered)
+        .set("mem_filtered", r.mem_filtered)
+        .set("scored", r.scored)
+        .set("pruned_pools", r.pruned_pools)
+        .set("search_secs", bits(r.search_secs))
+        .set("simulate_secs", bits(r.simulate_secs))
+        .set("memo_hits", r.memo_hits)
+        .set("memo_misses", r.memo_misses)
+        .set("top", Value::Arr(top))
+        .set("pool", Value::Arr(pool))
+}
+
+/// Inverse of [`report_to_value`].
+pub fn report_from_value(v: &Value, catalog: &GpuCatalog) -> Result<SearchReport> {
+    let mut top = Vec::new();
+    for sv in v.req_arr("top")? {
+        let strategy = strategy_from_value(
+            sv.get("strategy").ok_or_else(|| AstraError::Json("missing strategy".into()))?,
+            catalog,
+        )?;
+        let cost = cost_from_value(
+            sv.get("cost").ok_or_else(|| AstraError::Json("missing cost".into()))?,
+        )?;
+        top.push(ScoredStrategy { strategy, cost, money_usd: req_bits(sv, "money")? });
+    }
+    let mut entries = Vec::new();
+    for ev in v.req_arr("pool")? {
+        entries.push(PoolEntry {
+            idx: ev.req_usize("idx")?,
+            throughput: req_bits(ev, "tput")?,
+            cost: req_bits(ev, "cost")?,
+        });
+    }
+    let req_count = |key: &str| -> Result<u64> {
+        v.get(key)
+            .and_then(Value::as_u64)
+            .ok_or_else(|| AstraError::Json(format!("missing/invalid count field '{key}'")))
+    };
+    Ok(SearchReport {
+        generated: v.req_usize("generated")?,
+        rule_filtered: v.req_usize("rule_filtered")?,
+        mem_filtered: v.req_usize("mem_filtered")?,
+        scored: v.req_usize("scored")?,
+        pruned_pools: v.req_usize("pruned_pools")?,
+        search_secs: req_bits(v, "search_secs")?,
+        simulate_secs: req_bits(v, "simulate_secs")?,
+        memo_hits: req_count("memo_hits")?,
+        memo_misses: req_count("memo_misses")?,
+        top,
+        pool: OptimalPool::from_entries(entries),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy::{ClusterAssignment, RecomputeMethod};
+
+    fn meta() -> EngineMeta {
+        EngineMeta { catalog: 0x1111, eta: "analytic".to_string(), consts: 0x2222, book: 0x3333 }
+    }
+
+    fn rows() -> MemoRows {
+        MemoRows {
+            stages: vec![
+                (
+                    [1, 2, 8, 1, 2, 4, 1, 0, 0, 1, 1, 1, 1],
+                    [1.5f64.to_bits(), 2.5f64.to_bits(), 0.25f64.to_bits()],
+                ),
+                (
+                    [2, 65535, 8, 1, 2, 4, 1, 2, 4, 0, 0, 0, 1],
+                    [0.5f64.to_bits(), (-0.0f64).to_bits(), f64::INFINITY.to_bits()],
+                ),
+            ],
+            syncs: vec![(
+                [1, 8, 1, 0, 2, 4, 1, 0, 1, 1],
+                [0.1f64.to_bits(), 0.2f64.to_bits(), 0.0f64.to_bits()],
+            )],
+        }
+    }
+
+    fn write_one_scope() -> String {
+        let mut w = WarmWriter::new();
+        w.memo_scope(0xabcd, &rows(), &meta());
+        w.out
+    }
+
+    #[test]
+    fn memo_scope_roundtrips_bit_exactly() {
+        let text = write_one_scope();
+        let set = read_warm(&text, &GpuCatalog::builtin(), &meta());
+        assert_eq!(set.scopes_rejected, 0);
+        assert_eq!(set.memo_scopes.len(), 1);
+        let (key, got) = &set.memo_scopes[0];
+        assert_eq!(*key, 0xabcd);
+        assert_eq!(got.stages, rows().stages, "stage rows must restore bit-exactly");
+        assert_eq!(got.syncs, rows().syncs);
+    }
+
+    #[test]
+    fn mismatched_identity_rejects_scope() {
+        let text = write_one_scope();
+        for bad in [
+            EngineMeta { catalog: 0x9999, ..meta() },
+            EngineMeta { eta: "forests:0000000000000000".to_string(), ..meta() },
+            EngineMeta { consts: 0x9999, ..meta() },
+            EngineMeta { book: 0x9999, ..meta() },
+        ] {
+            let set = read_warm(&text, &GpuCatalog::builtin(), &bad);
+            assert!(set.memo_scopes.is_empty(), "mismatch must not import");
+            assert_eq!(set.scopes_rejected, 1);
+        }
+    }
+
+    #[test]
+    fn tampered_value_fails_the_checksum() {
+        let text = write_one_scope();
+        // 1.5 = 0x3ff8000000000000; flip the low nibble of its row value.
+        let tampered = text.replace("3ff8000000000000", "3ff8000000000001");
+        assert_ne!(text, tampered, "tamper target missing from transcript");
+        let set = read_warm(&tampered, &GpuCatalog::builtin(), &meta());
+        assert!(set.memo_scopes.is_empty(), "bit flip must reject the scope");
+        assert_eq!(set.scopes_rejected, 1);
+    }
+
+    #[test]
+    fn truncated_and_garbage_files_degrade_not_error() {
+        let text = write_one_scope();
+        // Cut mid-rows.
+        let cut: String = text.lines().take(3).map(|l| format!("{l}\n")).collect();
+        let set = read_warm(&cut, &GpuCatalog::builtin(), &meta());
+        assert!(set.memo_scopes.is_empty());
+        assert!(set.scopes_rejected >= 1);
+        // Unsupported version.
+        let v2 = text.replace("{\"astra_warm\":1}", "{\"astra_warm\":2}");
+        let set = read_warm(&v2, &GpuCatalog::builtin(), &meta());
+        assert!(set.memo_scopes.is_empty());
+        // Plain garbage.
+        let set = read_warm("not a snapshot\nat all\n", &GpuCatalog::builtin(), &meta());
+        assert!(set.memo_scopes.is_empty());
+        assert_eq!(set.scopes_rejected, 1);
+        // Empty file.
+        let set = read_warm("", &GpuCatalog::builtin(), &meta());
+        assert!(set.memo_scopes.is_empty());
+    }
+
+    #[test]
+    fn second_scope_survives_a_rejected_first() {
+        let mut w = WarmWriter::new();
+        w.memo_scope(0x1, &rows(), &meta());
+        w.memo_scope(0x2, &rows(), &meta());
+        // Tamper only the first scope's footer checksum.
+        let text = w.out;
+        let mut lines: Vec<String> = text.lines().map(String::from).collect();
+        let first_footer = lines.iter().position(|l| l.contains("\"end\"")).unwrap();
+        lines[first_footer] = lines[first_footer].replace("\"sum\":\"", "\"sum\":\"f");
+        // Keep the 16-digit width: drop the last checksum digit.
+        let l = &mut lines[first_footer];
+        let pos = l.rfind('"').unwrap();
+        l.remove(pos - 1);
+        let tampered = lines.join("\n") + "\n";
+        let set = read_warm(&tampered, &GpuCatalog::builtin(), &meta());
+        assert_eq!(set.scopes_rejected, 1);
+        assert_eq!(set.memo_scopes.len(), 1, "clean second scope must still restore");
+        assert_eq!(set.memo_scopes[0].0, 0x2);
+    }
+
+    #[test]
+    fn inspect_reports_header_validity() {
+        let mut w = WarmWriter::new();
+        w.memo_scope(0xabcd, &rows(), &meta());
+        let text = w.out;
+        let ok = inspect(&text, &meta());
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].kind, "memo");
+        assert_eq!(ok[0].rows, 3);
+        assert_eq!(ok[0].status, "ok");
+        let bad = inspect(&text, &EngineMeta { consts: 0x9999, ..meta() });
+        assert_eq!(bad[0].status, "cost-consts digest mismatch");
+    }
+
+    fn sample_report(catalog: &GpuCatalog) -> SearchReport {
+        let strategy = ParallelStrategy {
+            cluster: ClusterAssignment::homogeneous(catalog.find("a800").unwrap(), 4, 8),
+            tp: 2,
+            dp: 8,
+            micro_batch: 2,
+            global_batch: 512,
+            vpp: 1,
+            sequence_parallel: true,
+            use_distributed_optimizer: true,
+            recompute: Recompute::Full,
+            recompute_method: RecomputeMethod::Uniform,
+            recompute_num_layers: 4,
+            offload_optimizer: false,
+            overlap_grad_reduce: true,
+            overlap_param_gather: false,
+            overlap_p2p: true,
+            tp_comm_overlap: true,
+            use_flash_attn: true,
+            ep: 1,
+        };
+        let cost = CostBreakdown {
+            stage_times: vec![StageTime { fwd: 0.125, bwd: 0.33333333333333337, p2p: 1e-6 }],
+            pipeline_fwd: 0.1,
+            pipeline_bwd: 0.2,
+            dp_time: 0.05,
+            optimizer_time: 0.01,
+            offload_time: 0.0,
+            step_time: 0.36,
+            tokens_per_s: 123456.789,
+            mfu: 0.4321,
+        };
+        SearchReport {
+            generated: 100,
+            rule_filtered: 40,
+            mem_filtered: 10,
+            scored: 50,
+            pruned_pools: 3,
+            search_secs: 0.123456789,
+            simulate_secs: 0.987654321,
+            memo_hits: 42,
+            memo_misses: 7,
+            top: vec![ScoredStrategy { strategy, cost, money_usd: 1234.5678 }],
+            pool: OptimalPool::from_entries(vec![PoolEntry {
+                idx: 0,
+                throughput: 123456.789,
+                cost: 1234.5678,
+            }]),
+        }
+    }
+
+    #[test]
+    fn report_codec_roundtrips_bit_exactly() {
+        let catalog = GpuCatalog::builtin();
+        let r = sample_report(&catalog);
+        let encoded = json::to_string(&report_to_value(&r, &catalog));
+        let back = report_from_value(&json::parse(&encoded).unwrap(), &catalog).unwrap();
+        assert_eq!(back.generated, r.generated);
+        assert_eq!(back.pruned_pools, r.pruned_pools);
+        assert_eq!(back.search_secs.to_bits(), r.search_secs.to_bits());
+        assert_eq!((back.memo_hits, back.memo_misses), (r.memo_hits, r.memo_misses));
+        assert_eq!(back.top.len(), 1);
+        assert_eq!(back.top[0].strategy, r.top[0].strategy);
+        assert_eq!(back.top[0].money_usd.to_bits(), r.top[0].money_usd.to_bits());
+        assert_eq!(
+            back.top[0].cost.step_time.to_bits(),
+            r.top[0].cost.step_time.to_bits()
+        );
+        assert_eq!(
+            back.top[0].cost.stage_times[0].bwd.to_bits(),
+            r.top[0].cost.stage_times[0].bwd.to_bits()
+        );
+        assert_eq!(back.pool.entries(), r.pool.entries());
+        // And the canonical result view agrees byte-for-byte.
+        assert_eq!(
+            json::to_string(&crate::report::report_json(&back, &catalog)),
+            json::to_string(&crate::report::report_json(&r, &catalog)),
+        );
+    }
+
+    #[test]
+    fn cache_section_roundtrips_through_the_file() {
+        let catalog = GpuCatalog::builtin();
+        let r = sample_report(&catalog);
+        let mut w = WarmWriter::new();
+        w.cache_section(&[(0xfeed, Arc::new(sample_report(&catalog)))], &catalog, &meta());
+        let set = read_warm(&w.out, &catalog, &meta());
+        assert_eq!(set.scopes_rejected, 0);
+        assert_eq!(set.cache.len(), 1);
+        assert_eq!(set.cache[0].0, 0xfeed);
+        assert_eq!(
+            json::to_string(&report_to_value(&set.cache[0].1, &catalog)),
+            json::to_string(&report_to_value(&r, &catalog)),
+        );
+        // A mismatched identity skips the cache section too.
+        let set = read_warm(&w.out, &catalog, &EngineMeta { book: 0x9999, ..meta() });
+        assert!(set.cache.is_empty());
+        assert_eq!(set.scopes_rejected, 1);
+    }
+
+    #[test]
+    fn digests_discriminate() {
+        let catalog = GpuCatalog::builtin();
+        let d = catalog_digest(&catalog);
+        let mut other = catalog.clone();
+        other.gpus_per_node = 16;
+        assert_ne!(d, catalog_digest(&other));
+
+        let consts = CostConsts::default();
+        let mut c2 = consts.clone();
+        c2.tp_hide += 0.01;
+        assert_ne!(consts_digest(&consts), consts_digest(&c2));
+
+        let book = PriceBook::builtin();
+        let mut spot = book.clone();
+        spot.use_spot = true;
+        assert_ne!(book_digest(&book), book_digest(&spot));
+
+        assert_eq!(eta_identity(&EtaProvider::Analytic), "analytic");
+        let f = crate::gbdt::EtaForests {
+            comp: Forest::constant(0.5, 4),
+            comm: Forest::constant(0.6, 4),
+        };
+        let id = eta_identity(&EtaProvider::Forests(f));
+        assert!(id.starts_with("forests:"), "{id}");
+    }
+}

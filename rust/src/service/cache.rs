@@ -207,6 +207,21 @@ impl ShardedCache {
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
     }
 
+    /// Every resident entry `(fingerprint, report)`, sorted by fingerprint
+    /// so spills are deterministic. TTL is *not* re-checked here: restore
+    /// re-inserts with a fresh timestamp, so an entry's TTL restarts with
+    /// the process (the snapshot stores no wall clock to age against).
+    pub fn export_entries(&self) -> Vec<(u64, Arc<SearchReport>)> {
+        let mut v: Vec<(u64, Arc<SearchReport>)> = Vec::new();
+        for s in &self.shards {
+            for (k, e) in s.lock().unwrap().map.iter() {
+                v.push((*k, e.report.clone()));
+            }
+        }
+        v.sort_unstable_by_key(|&(k, _)| k);
+        v
+    }
+
     /// Drop every entry (tests / `astra serve` SIGHUP-style reset).
     pub fn clear(&self) {
         for s in &self.shards {

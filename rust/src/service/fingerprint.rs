@@ -174,8 +174,11 @@ fn hash_mode(h: &mut Fnv64, mode: &GpuPoolMode, catalog: &GpuCatalog) {
 
 /// The price book is part of every result (it prices each scored
 /// strategy), so the whole card enters the key: entries are already
-/// canonically sorted by GPU name inside [`PriceBook`].
-fn hash_book(h: &mut Fnv64, book: &crate::pricing::PriceBook) {
+/// canonically sorted by GPU name inside [`PriceBook`]. `pub(crate)`
+/// because [`crate::persist::book_digest`] reuses this exact field walk —
+/// one canonical list, so a new `PriceBook` field cannot silently enter
+/// one hash and not the other.
+pub(crate) fn hash_book(h: &mut Fnv64, book: &crate::pricing::PriceBook) {
     h.field_usize("book.len", book.entries().len());
     for e in book.entries() {
         h.field_str("book.gpu", &e.gpu)
@@ -252,9 +255,10 @@ fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
     .field_bool("streaming", cfg.streaming)
     .field_usize("top_k", cfg.top_k);
     hash_book(h, &cfg.money.book);
-    // `workers` and `sweep_wave` deliberately excluded: worker count never
-    // changes results, and the hetero-cost wave replay is byte-identical
-    // to the serial sweep at any wave size (differential-tested).
+    // `workers`, `sweep_wave` and `sweep_wave_max` deliberately excluded:
+    // worker count never changes results, and the hetero-cost wave replay
+    // (adaptive or not) is byte-identical to the serial sweep at any wave
+    // schedule (differential-tested).
 }
 
 /// Fingerprint of (request, config): the service cache key.

@@ -25,6 +25,12 @@
 //! model), so even *distinct* requests over the same model — different
 //! pool sizes, budgets or modes — score mostly warm; the `{"cmd":"stats"}`
 //! line reports the memo scope/hit/miss counters next to the cache's.
+//!
+//! Both layers of warmth survive restarts: with a [`WarmConfig::dir`]
+//! configured (`astra serve --warm-dir`), the service restores memo scopes
+//! and cache entries from the versioned [`crate::persist`] snapshot on
+//! boot, re-spills every N admissions and on clean shutdown, and reports
+//! `persist_*` counters on the stats line.
 
 pub mod cache;
 pub mod fingerprint;
@@ -34,11 +40,34 @@ pub use cache::{CacheConfig, CacheStats, ShardedCache};
 pub use fingerprint::{fingerprint, Fingerprint};
 
 use crate::coordinator::{ScoringCore, SearchReport, SearchRequest};
+use crate::persist;
 use crate::pool::par_for_indices;
 use crate::{AstraError, Result};
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// Warm-start persistence policy ([`crate::persist`]).
+#[derive(Debug, Clone)]
+pub struct WarmConfig {
+    /// Directory holding the `warm.jsonl` snapshot. `None` disables
+    /// persistence entirely (the pre-PR-4 behavior).
+    pub dir: Option<PathBuf>,
+    /// Spill in the background after every N engine admissions (cache hits
+    /// and coalesced requests do not count — they add no new warmth).
+    /// 0 = spill only on shutdown or explicit [`SearchService::spill_warm`].
+    pub spill_every: u64,
+    /// Also spill the sharded result cache (not just the memo scopes).
+    pub include_cache: bool,
+}
+
+impl Default for WarmConfig {
+    fn default() -> Self {
+        WarmConfig { dir: None, spill_every: 32, include_cache: true }
+    }
+}
 
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
@@ -53,11 +82,18 @@ pub struct ServiceConfig {
     /// uneven length — auto caps it at 4 to avoid workers² thread
     /// oversubscription on cold batches.
     pub batch_workers: usize,
+    /// Warm-start spill/restore policy.
+    pub warm: WarmConfig,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { cache: CacheConfig::default(), max_batch: 32, batch_workers: 0 }
+        ServiceConfig {
+            cache: CacheConfig::default(),
+            max_batch: 32,
+            batch_workers: 0,
+            warm: WarmConfig::default(),
+        }
     }
 }
 
@@ -154,15 +190,105 @@ pub struct SearchService {
     cache: ShardedCache,
     inflight: Mutex<HashMap<u64, Arc<FlightSlot>>>,
     config: ServiceConfig,
+    /// Engine admissions (source = `Search`) since boot; drives the
+    /// every-N spill policy.
+    admissions: AtomicU64,
+    /// At most one spill writes at a time; late arrivals skip (the next
+    /// admission will spill strictly more warmth anyway).
+    spilling: Mutex<()>,
 }
 
 impl SearchService {
+    /// Build the service; when `config.warm.dir` holds a snapshot from an
+    /// earlier process, memo scopes and cache entries that validate
+    /// against this engine's identity are restored before the first
+    /// request (anything else is skipped — cold start, never an error).
     pub fn new(core: ScoringCore, config: ServiceConfig) -> SearchService {
-        SearchService {
+        let svc = SearchService {
             core: Arc::new(core),
             cache: ShardedCache::new(config.cache.clone()),
             inflight: Mutex::new(HashMap::new()),
             config,
+            admissions: AtomicU64::new(0),
+            spilling: Mutex::new(()),
+        };
+        if let Some(path) = svc.warm_path() {
+            if path.exists() {
+                match svc.restore_warm(&path) {
+                    Ok(st) => crate::log_info!(
+                        "warm restore: {} scope(s) ({} rows), {} cache entries, {} rejected",
+                        st.scopes_restored,
+                        st.stage_rows + st.sync_rows,
+                        st.cache_entries,
+                        st.scopes_rejected
+                    ),
+                    Err(e) => crate::log_warn!("warm restore failed (starting cold): {e}"),
+                }
+            }
+        }
+        svc
+    }
+
+    /// Where this service spills/restores, when persistence is configured.
+    pub fn warm_path(&self) -> Option<PathBuf> {
+        self.config.warm.dir.as_ref().map(|d| d.join("warm.jsonl"))
+    }
+
+    /// Restore memo scopes and cache entries from a snapshot. Mismatching
+    /// or corrupt scopes are skipped and counted; only an unreadable file
+    /// is an `Err`. Cache entries are inserted only when
+    /// `warm.include_cache` is set — the flag governs both directions, so
+    /// an operator who excluded the result cache from persistence never
+    /// serves restored entries from a snapshot another config wrote.
+    pub fn restore_warm(&self, path: &Path) -> Result<persist::RestoreStats> {
+        let set = self.core.load_warm_set(path, self.config.warm.include_cache)?;
+        let stats = set.stats();
+        if !set.cache.is_empty() {
+            let n = set.cache.len() as u64;
+            for (fp, report) in set.cache {
+                self.cache.insert(Fingerprint(fp), Arc::new(report));
+            }
+            self.core.persist_counters().note_cache_restored(n);
+        }
+        Ok(stats)
+    }
+
+    /// Spill the live memo scopes (and, per config, the result cache) to
+    /// the warm snapshot. `Ok(None)` when persistence is unconfigured or a
+    /// concurrent spill is already writing.
+    pub fn spill_warm(&self) -> Result<Option<persist::SpillStats>> {
+        let Some(path) = self.warm_path() else { return Ok(None) };
+        let Ok(_guard) = self.spilling.try_lock() else { return Ok(None) };
+        if let Some(dir) = &self.config.warm.dir {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = persist::WarmWriter::new();
+        self.core.export_warm(&mut w);
+        if self.config.warm.include_cache {
+            let entries = self.cache.export_entries();
+            w.cache_section(&entries, &self.core.catalog, self.core.engine_meta());
+        }
+        let stats = w.finish_to(&path)?;
+        self.core.persist_counters().note_spill(&stats);
+        Ok(Some(stats))
+    }
+
+    /// Periodic spill policy: every `warm.spill_every`-th engine admission
+    /// rewrites the snapshot, so a crash loses at most one spill interval
+    /// of warmth. The write runs *inline on the admitting request's
+    /// thread* (memo rows are a few hundred; with `include_cache` the cost
+    /// grows with cache occupancy — raise `spill_every` or disable
+    /// `include_cache` if the every-Nth-request tail matters more than
+    /// restart warmth). Concurrent admissions skip via the try-lock.
+    fn note_admission(&self) {
+        if self.config.warm.dir.is_none() || self.config.warm.spill_every == 0 {
+            return;
+        }
+        let n = self.admissions.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.config.warm.spill_every == 0 {
+            if let Err(e) = self.spill_warm() {
+                crate::log_warn!("warm spill failed: {e}");
+            }
         }
     }
 
@@ -249,12 +375,17 @@ impl SearchService {
             });
             self.inflight.lock().unwrap().remove(&fp.0);
             guard.disarm();
-            result.map(|report| ServiceResponse {
+            let resp = result.map(|report| ServiceResponse {
                 fingerprint: fp,
                 source: ResponseSource::Search,
                 service_secs: t0.elapsed().as_secs_f64(),
                 report,
-            })
+            });
+            if resp.is_ok() {
+                // New warmth entered the registry/cache; maybe spill.
+                self.note_admission();
+            }
+            resp
         } else {
             match slot.wait() {
                 Ok(report) => Ok(ServiceResponse {

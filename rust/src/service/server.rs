@@ -278,10 +278,11 @@ pub fn normalize_response_line(line: &str) -> Result<String> {
             }
         }
         // Cache byte accounting is an estimate that may drift with struct
-        // layout; the entry/hit counters stay pinned. Memo counters are
-        // load-dependent (see above).
+        // layout, and snapshot bytes drift with the persist format; the
+        // entry/hit counters stay pinned. Memo counters are load-dependent
+        // (see above).
         if let Some(Value::Obj(stats)) = m.get_mut("stats") {
-            for k in ["cache_bytes", "memo_hits", "memo_misses"] {
+            for k in ["cache_bytes", "memo_hits", "memo_misses", "persist_bytes"] {
                 if stats.contains_key(k) {
                     stats.insert(k.to_string(), Value::Num(0.0));
                 }
@@ -301,9 +302,13 @@ pub fn error_json(id: &Option<String>, msg: &str) -> Value {
 }
 
 /// Cache/engine statistics line (the `{"cmd":"stats"}` control request).
+/// The `persist_*` counters make warm-start state observable across
+/// restarts: scopes spilled/restored/rejected, cache entries moved, and
+/// the latest snapshot's size on disk.
 pub fn stats_json(service: &SearchService) -> Value {
     let s = service.cache_stats();
     let (memo_scopes, memo_hits, memo_misses) = service.core().memo_counters();
+    let p = service.core().persist_stats();
     Value::obj()
         .set("ok", true)
         .set("stats", Value::obj()
@@ -317,7 +322,13 @@ pub fn stats_json(service: &SearchService) -> Value {
             .set("cache_bytes", s.bytes)
             .set("memo_scopes", memo_scopes)
             .set("memo_hits", memo_hits)
-            .set("memo_misses", memo_misses))
+            .set("memo_misses", memo_misses)
+            .set("persist_scopes_spilled", p.scopes_spilled)
+            .set("persist_scopes_restored", p.scopes_restored)
+            .set("persist_scopes_rejected", p.scopes_rejected)
+            .set("persist_bytes", p.bytes_on_disk)
+            .set("persist_cache_spilled", p.cache_entries_spilled)
+            .set("persist_cache_restored", p.cache_entries_restored))
 }
 
 /// What one admitted line turned into.
@@ -499,6 +510,18 @@ pub fn serve_tcp(service: Arc<SearchService>, addr: &str, opts: &ServeOpts) -> R
             let mut writer = std::io::BufWriter::new(stream);
             if let Err(e) = run_serve_loop(&service, reader, &mut writer, &opts) {
                 crate::log_warn!("connection ended with error: {e}");
+            }
+            // The TCP front end has no process-shutdown hook, so each
+            // connection close doubles as one: with --warm-dir configured
+            // this keeps `--warm-spill-every 0` meaningful under --listen.
+            match service.spill_warm() {
+                Ok(Some(s)) => crate::log_info!(
+                    "warm spill on connection close: {} scope(s), {} cache entries",
+                    s.scopes,
+                    s.cache_entries
+                ),
+                Ok(None) => {}
+                Err(e) => crate::log_warn!("warm spill failed: {e}"),
             }
         });
     }

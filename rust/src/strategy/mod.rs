@@ -36,6 +36,16 @@ impl Recompute {
             Recompute::Full => "full",
         }
     }
+
+    /// Inverse of [`Recompute::as_str`] (wire/persist decode).
+    pub fn parse(s: &str) -> Option<Recompute> {
+        match s {
+            "none" => Some(Recompute::None),
+            "selective" => Some(Recompute::Selective),
+            "full" => Some(Recompute::Full),
+            _ => None,
+        }
+    }
 }
 
 /// Megatron `--recompute-method` (only meaningful with [`Recompute::Full`]).
@@ -50,6 +60,15 @@ impl RecomputeMethod {
         match self {
             RecomputeMethod::Block => "block",
             RecomputeMethod::Uniform => "uniform",
+        }
+    }
+
+    /// Inverse of [`RecomputeMethod::as_str`] (wire/persist decode).
+    pub fn parse(s: &str) -> Option<RecomputeMethod> {
+        match s {
+            "block" => Some(RecomputeMethod::Block),
+            "uniform" => Some(RecomputeMethod::Uniform),
+            _ => None,
         }
     }
 }

@@ -1,0 +1,352 @@
+//! Persistence determinism pins for `astra::persist`:
+//!
+//! * a search on a restored-memo engine must produce **byte-identical**
+//!   canonical report JSON (counts, pruning statistics, ranked `top`, full
+//!   Pareto pool) to a cold search, in all four modes, with zero memo
+//!   misses — restore really does skip the cold pass;
+//! * corrupt / version-mismatched / partially-written snapshots must
+//!   silently degrade to a cold start — same bytes as cold, never an error
+//!   and never a wrong answer;
+//! * the service's result cache survives a restart: a fresh service built
+//!   over the spilled snapshot serves the same reports from cache without
+//!   re-searching.
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::report::report_json;
+use astra::service::{SearchService, ServiceConfig, WarmConfig};
+use astra::strategy::SpaceConfig;
+use std::path::PathBuf;
+
+/// Narrow space so the whole matrix stays debug-profile fast.
+fn small_space() -> SpaceConfig {
+    SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 4,
+        mbs_candidates: vec![1, 2],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    }
+}
+
+fn engine() -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, space: small_space(), ..Default::default() },
+    )
+}
+
+fn canon(eng: &AstraEngine, req: &SearchRequest) -> String {
+    astra::json::to_string(&report_json(&eng.search(req).unwrap(), &GpuCatalog::builtin()))
+}
+
+fn requests() -> Vec<(&'static str, SearchRequest)> {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    vec![
+        ("homogeneous", SearchRequest::homogeneous("a800", 16, model.clone()).unwrap()),
+        (
+            "heterogeneous",
+            SearchRequest::heterogeneous(&[("a800", 8), ("h100", 8)], 8, model.clone())
+                .unwrap(),
+        ),
+        ("cost", SearchRequest::cost("a800", 16, 1e7, model.clone()).unwrap()),
+        (
+            "hetero-cost",
+            SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8)], 2e5, model).unwrap(),
+        ),
+    ]
+}
+
+/// Unique temp path per test so the parallel test runner never collides.
+fn tmppath(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("astra_persist_{}_{}.jsonl", tag, std::process::id()))
+}
+
+#[test]
+fn restored_memo_search_is_byte_identical_and_fully_warm() {
+    for (name, req) in requests() {
+        // Cold oracle on a completely fresh engine.
+        let cold = canon(&engine(), &req);
+
+        // Heat a second engine with the same request and spill it.
+        let warm_eng = engine();
+        let warm_rep = warm_eng.search(&req).unwrap();
+        assert!(warm_rep.memo_misses > 0, "mode {name}: cold pass must populate the memo");
+        let path = tmppath(&format!("modes_{name}"));
+        let spill = warm_eng.core().save_warm(&path).unwrap();
+        assert_eq!(spill.scopes, 1, "mode {name}: one model scope expected");
+        assert!(spill.bytes > 0);
+
+        // A fresh engine (simulated restarted process) restores and must
+        // reproduce the cold report byte-for-byte without a single miss —
+        // the restored hit-rate is 1.0, far above the 0.50 bench floor.
+        let restored_eng = engine();
+        let st = restored_eng.core().load_warm(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(st.scopes_restored, 1, "mode {name}: scope must restore");
+        assert_eq!(st.scopes_rejected, 0, "mode {name}: nothing to reject");
+        assert!(st.stage_rows + st.sync_rows > 0);
+        let report = restored_eng.search(&req).unwrap();
+        assert_eq!(
+            report.memo_misses, 0,
+            "mode {name}: restored memo missed {} profiles",
+            report.memo_misses
+        );
+        assert!(report.memo_hits > 0);
+        let got = astra::json::to_string(&report_json(&report, &GpuCatalog::builtin()));
+        assert_eq!(got, cold, "mode {name}: restored search diverged from cold");
+        // Persistence counters reflect the traffic.
+        let p = restored_eng.core().persist_stats();
+        assert_eq!((p.scopes_restored, p.scopes_rejected), (1, 0));
+    }
+}
+
+#[test]
+fn corrupt_snapshots_degrade_to_cold_never_error_or_lie() {
+    let (_, req) = requests().remove(3); // hetero-cost: exercises pruning too
+    let cold = canon(&engine(), &req);
+
+    let warm_eng = engine();
+    warm_eng.search(&req).unwrap();
+    let path = tmppath("corrupt");
+    warm_eng.core().save_warm(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let n_lines = text.lines().count();
+    let truncated: String =
+        text.lines().take(n_lines / 2).map(|l| format!("{l}\n")).collect();
+    let version_bumped = text.replace("{\"astra_warm\":1}", "{\"astra_warm\":2}");
+    // Tamper one value's bit pattern: pick the first value hex out of a
+    // row line and flip its last digit. The row stays well-formed JSON —
+    // only the footer checksum can catch it.
+    let tampered = {
+        let row = text
+            .lines()
+            .find(|l| l.contains("\"t\":\"stage\""))
+            .expect("no stage row in snapshot");
+        let start = row.find("\"v\":[\"").expect("no value array") + "\"v\":[\"".len();
+        let hex = &row[start..start + 16];
+        let flipped: String = hex
+            .chars()
+            .take(15)
+            .chain(std::iter::once(if hex.ends_with('0') { '1' } else { '0' }))
+            .collect();
+        text.replacen(hex, &flipped, 1)
+    };
+    let garbage = "definitely not a snapshot\n{\"scope\":oops\n".to_string();
+    let scope_digest_tampered = {
+        // Zero out the consts digest in the scope header only.
+        let header = text
+            .lines()
+            .find(|l| l.contains("\"scope\""))
+            .expect("no scope header");
+        let start = header.find("\"consts\":\"").expect("no consts digest")
+            + "\"consts\":\"".len();
+        let hex = header[start..start + 16].to_string();
+        text.replacen(&hex, "0000000000000000", 1)
+    };
+
+    for (case, bad) in [
+        ("truncated", truncated),
+        ("version_bumped", version_bumped),
+        ("value_tampered", tampered),
+        ("garbage", garbage),
+        ("digest_tampered", scope_digest_tampered),
+    ] {
+        let bad_path = tmppath(&format!("corrupt_{case}"));
+        std::fs::write(&bad_path, &bad).unwrap();
+        let eng = engine();
+        // Loading must not error…
+        let st = eng.core().load_warm(&bad_path).unwrap();
+        let _ = std::fs::remove_file(&bad_path);
+        assert_eq!(st.scopes_restored, 0, "case {case}: must not import anything");
+        assert!(st.scopes_rejected >= 1, "case {case}: rejection must be counted");
+        // …and the next search is a correct cold start.
+        let report = eng.search(&req).unwrap();
+        assert!(report.memo_misses > 0, "case {case}: engine must start cold");
+        let got = astra::json::to_string(&report_json(&report, &GpuCatalog::builtin()));
+        assert_eq!(got, cold, "case {case}: degraded start produced wrong bytes");
+    }
+
+    // A missing file is the only hard error (callers gate on existence).
+    assert!(engine().core().load_warm(&tmppath("never_written")).is_err());
+}
+
+fn warm_service(dir: &std::path::Path, spill_every: u64) -> SearchService {
+    let core = astra::coordinator::ScoringCore::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, space: small_space(), ..Default::default() },
+    );
+    SearchService::new(
+        core,
+        ServiceConfig {
+            warm: WarmConfig {
+                dir: Some(dir.to_path_buf()),
+                spill_every,
+                include_cache: true,
+            },
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn service_cache_survives_a_restart() {
+    let dir = std::env::temp_dir().join(format!("astra_warm_svc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let req = SearchRequest::homogeneous("a800", 16, model.clone()).unwrap();
+    let req2 = SearchRequest::homogeneous("a800", 8, model).unwrap();
+
+    // First process: two searches, manual spill on "shutdown".
+    let first = warm_service(&dir, 0);
+    let a = first.handle(&req).unwrap();
+    let b = first.handle(&req2).unwrap();
+    assert_eq!(first.core().searches_run(), 2);
+    let spill = first.spill_warm().unwrap().expect("warm dir configured");
+    assert_eq!(spill.scopes, 1, "both requests share one model scope");
+    assert_eq!(spill.cache_entries, 2);
+
+    // Second process: restore on boot; both requests come from the cache,
+    // the engine never runs, and the reports are byte-identical.
+    let second = warm_service(&dir, 0);
+    let ra = second.handle(&req).unwrap();
+    let rb = second.handle(&req2).unwrap();
+    assert_eq!(second.core().searches_run(), 0, "restored cache must serve without searching");
+    assert_eq!(ra.source, astra::service::ResponseSource::Cache);
+    assert_eq!(rb.source, astra::service::ResponseSource::Cache);
+    assert_eq!(ra.fingerprint, a.fingerprint);
+    assert_eq!(rb.fingerprint, b.fingerprint);
+    let cat = GpuCatalog::builtin();
+    for (fresh, restored) in [(&a, &ra), (&b, &rb)] {
+        assert_eq!(
+            astra::json::to_string(&report_json(&fresh.report, &cat)),
+            astra::json::to_string(&report_json(&restored.report, &cat)),
+            "restored cache entry drifted from the original report"
+        );
+    }
+    // Persistence counters surface on the stats line.
+    let p = second.core().persist_stats();
+    assert_eq!(p.scopes_restored, 1);
+    assert_eq!(p.cache_entries_restored, 2);
+    let stats = astra::service::server::stats_json(&second);
+    assert_eq!(
+        stats.pointer("/stats/persist_scopes_restored").and_then(astra::json::Value::as_u64),
+        Some(1)
+    );
+    assert_eq!(
+        stats.pointer("/stats/persist_cache_restored").and_then(astra::json::Value::as_u64),
+        Some(2)
+    );
+    // And a third process's restored *memo* pre-warms even a request the
+    // cache has never seen: the mode-3 count sweep over ≤16 GPUs revisits
+    // the count-8 and count-16 pools whose profiles were spilled, so it
+    // must miss strictly less than the same search on a cold engine.
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let req3 = SearchRequest::cost("a800", 16, f64::INFINITY, model).unwrap();
+    let cold3 = engine().search(&req3).unwrap();
+    assert!(cold3.memo_misses > 0);
+    let third = warm_service(&dir, 0);
+    let rc = third.handle(&req3).unwrap();
+    assert_eq!(rc.source, astra::service::ResponseSource::Search);
+    assert!(
+        rc.report.memo_misses < cold3.memo_misses,
+        "restored scope must pre-warm unseen requests: {} misses vs cold {}",
+        rc.report.memo_misses,
+        cold3.memo_misses
+    );
+    assert_eq!(
+        astra::json::to_string(&report_json(&rc.report, &cat)),
+        astra::json::to_string(&report_json(&cold3, &cat)),
+        "pre-warming must not change the selection"
+    );
+
+    // include_cache: false gates the restore direction too — the snapshot
+    // on disk still carries cache entries, but none may be served; the
+    // memo scopes, by contrast, still restore.
+    let core = astra::coordinator::ScoringCore::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, space: small_space(), ..Default::default() },
+    );
+    let no_cache = SearchService::new(
+        core,
+        ServiceConfig {
+            warm: WarmConfig {
+                dir: Some(dir.clone()),
+                spill_every: 0,
+                include_cache: false,
+            },
+            ..Default::default()
+        },
+    );
+    let r = no_cache.handle(&req).unwrap();
+    assert_eq!(
+        r.source,
+        astra::service::ResponseSource::Search,
+        "include_cache=false must not serve restored cache entries"
+    );
+    assert_eq!(r.report.memo_misses, 0, "memo scopes still restore without the cache");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spill_every_n_admissions_writes_in_the_background() {
+    let dir = std::env::temp_dir().join(format!("astra_warm_auto_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let svc = warm_service(&dir, 1); // spill after every admission
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    svc.handle(&SearchRequest::homogeneous("a800", 8, model.clone()).unwrap()).unwrap();
+    let path = svc.warm_path().unwrap();
+    assert!(path.exists(), "first admission must have spilled");
+    let first_spill = std::fs::metadata(&path).unwrap().len();
+    assert!(first_spill > 0);
+    // A cache hit is not an admission: the file is not rewritten with new
+    // state (byte size is a cheap stand-in — one scope either way).
+    svc.handle(&SearchRequest::homogeneous("a800", 8, model.clone()).unwrap()).unwrap();
+    let p = svc.core().persist_stats();
+    assert_eq!(p.scopes_spilled, 1, "cache hit must not trigger a spill");
+    // A second distinct admission re-spills (now with two cache entries).
+    svc.handle(&SearchRequest::homogeneous("a800", 16, model).unwrap()).unwrap();
+    let p = svc.core().persist_stats();
+    assert_eq!(p.scopes_spilled, 2);
+    assert!(std::fs::metadata(&path).unwrap().len() > first_spill);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The adaptive sweep schedule (grow-on-zero-waste, reset-on-waste) must
+/// be invisible in the report, like every other schedule knob.
+#[test]
+fn adaptive_wave_cap_does_not_change_results() {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let req =
+        SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8), ("v100", 8)], 1e5, model)
+            .unwrap();
+    let mk = |wave: usize, wave_max: usize| {
+        AstraEngine::new(
+            GpuCatalog::builtin(),
+            EngineConfig {
+                use_forests: false,
+                sweep_wave: wave,
+                sweep_wave_max: wave_max,
+                space: small_space(),
+                ..Default::default()
+            },
+        )
+    };
+    let serial = canon(&mk(1, 1), &req);
+    for (wave, wave_max) in [(1, 8), (2, 2), (2, 64), (4, 4), (3, 1)] {
+        assert_eq!(
+            canon(&mk(wave, wave_max), &req),
+            serial,
+            "wave {wave} / cap {wave_max} drifted from the serial sweep"
+        );
+    }
+}
