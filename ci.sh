@@ -13,11 +13,16 @@
 #   bench (BENCH=1)   — perf smoke lane on top of tier-1: runs the
 #                       rust/benches/perf_search.rs hetero-cost workload in
 #                       fast mode, writes BENCH_search.json at the repo
-#                       root, and FAILS if the memo-warm hit-rate on the
-#                       reference workload drops below the pinned floor
-#                       (override with ASTRA_BENCH_MIN_HIT_RATE), or if the
-#                       warm_restore leg's restored hit-rate drops below
-#                       its floor (ASTRA_BENCH_MIN_RESTORE_HIT_RATE).
+#                       root (commit it to track perf PR-over-PR), and
+#                       FAILS if the memo-warm hit-rate on the reference
+#                       workload drops below the pinned floor (override
+#                       with ASTRA_BENCH_MIN_HIT_RATE), if the warm_restore
+#                       leg's restored hit-rate drops below its floor
+#                       (ASTRA_BENCH_MIN_RESTORE_HIT_RATE), or if the HLO
+#                       engine's streamed path disagrees with the native
+#                       pick on the fig5 workload
+#                       (ASTRA_BENCH_MIN_HLO_PARITY; self-skips without
+#                       PJRT artifacts).
 #
 # Tier-1 also runs a persistence roundtrip through the release binary
 # (astra warm save → search --warm-load → diff of the canonical --json
@@ -101,11 +106,16 @@ if [ "${BENCH:-0}" = "1" ]; then
   # The restore floor mirrors the warm floor: a healthy snapshot replays
   # the exact profile set, so its hit-rate sits near 1.0; 0.50 catches
   # format/digest regressions with wide margin.
+  # The HLO-parity smoke additionally asserts the HLO engine's streamed
+  # per-pool path picks the same strategy as the native engine on the fig5
+  # workload; it self-skips when the PJRT artifacts are absent.
   run env ASTRA_BENCH_FAST=1 \
       ASTRA_BENCH_OUT="$ROOT/BENCH_search.json" \
       ASTRA_BENCH_MIN_HIT_RATE="${ASTRA_BENCH_MIN_HIT_RATE:-0.50}" \
       ASTRA_BENCH_MIN_RESTORE_HIT_RATE="${ASTRA_BENCH_MIN_RESTORE_HIT_RATE:-0.50}" \
+      ASTRA_BENCH_MIN_HLO_PARITY="${ASTRA_BENCH_MIN_HLO_PARITY:-1.0}" \
       cargo bench --bench perf_search
+  echo "ci.sh: BENCH_search.json written at the repo root — commit it to extend the perf trajectory" >&2
 fi
 
 if [ "${TIER2:-0}" != "1" ]; then

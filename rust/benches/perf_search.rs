@@ -1,11 +1,11 @@
 //! Search-path perf instrument: the fig7 hetero-cost workload, cold
 //! (fresh `SharedCostMemo`) vs memo-warm (same engine, repeated) vs
 //! warm-restore (fresh engine fed from a spilled `astra::persist`
-//! snapshot — the restarted-service story), plus the pre-refactor
-//! non-streaming reference for context. Writes the machine-readable
-//! `BENCH_search.json` perf-trajectory artifact — strategies/sec, memo
-//! hit-rate, wall seconds per leg (see the `astra::cost` module docs for
-//! how to read it).
+//! snapshot — the restarted-service story), plus the strictly serial
+//! workers=1/wave=1 oracle execution of the same plan for context. Writes
+//! the machine-readable `BENCH_search.json` perf-trajectory artifact —
+//! strategies/sec, memo hit-rate, wall seconds per leg (see the
+//! `astra::cost` module docs for how to read it).
 //!
 //! Env knobs:
 //! * `ASTRA_BENCH_FAST=1`       — smaller caps for smoke/CI runs;
@@ -14,19 +14,40 @@
 //! * `ASTRA_BENCH_MIN_HIT_RATE=<0..1>` — exit nonzero if the *warm* memo
 //!   hit-rate drops below this floor (the `BENCH=1 ./ci.sh` gate);
 //! * `ASTRA_BENCH_MIN_RESTORE_HIT_RATE=<0..1>` — same floor for the
-//!   *warm_restore* leg (restore must actually skip the cold pass).
+//!   *warm_restore* leg (restore must actually skip the cold pass);
+//! * `ASTRA_BENCH_MIN_HLO_PARITY=<0..1>` — run the HLO-parity smoke on the
+//!   fig5 workload (llama2-7b, homogeneous a800): the HLO engine's
+//!   streamed per-pool path must pick the same strategy as the native
+//!   engine (parity 1.0 = identical best pick; fractional = top-3
+//!   overlap). Skipped with a notice when the PJRT artifacts are absent,
+//!   like `crosscheck_hw.rs`.
 
 use astra::bench_util::section;
-use astra::coordinator::{AstraEngine, EngineConfig, SearchReport, SearchRequest};
+use astra::coordinator::{AstraEngine, EngineConfig, ScoringEngine, SearchReport, SearchRequest};
 use astra::gpu::GpuCatalog;
 use astra::json::Value;
 use astra::model::ModelRegistry;
 use std::time::Instant;
 
-fn engine(streaming: bool) -> AstraEngine {
+fn engine() -> AstraEngine {
     AstraEngine::new(
         GpuCatalog::builtin(),
-        EngineConfig { use_forests: false, streaming, ..Default::default() },
+        EngineConfig { use_forests: false, ..Default::default() },
+    )
+}
+
+/// The strictly serial oracle: one worker, wave pinned to 1/1 — the same
+/// plan the other engines execute, with all parallelism off.
+fn oracle() -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig {
+            use_forests: false,
+            workers: 1,
+            sweep_wave: 1,
+            sweep_wave_max: 1,
+            ..Default::default()
+        },
     )
 }
 
@@ -51,6 +72,24 @@ fn leg_json(r: &SearchReport, secs: f64) -> Value {
         .set("memo_hit_rate", hit_rate(r))
 }
 
+/// HLO-vs-native pick parity on the fig5 workload: 1.0 when the best
+/// strategies are identical, else the fraction of the native top-3 the HLO
+/// ranking reproduces.
+fn hlo_parity(native: &SearchReport, hlo: &SearchReport) -> f64 {
+    match (native.best(), hlo.best()) {
+        (Some(n), Some(h)) if n.strategy == h.strategy => 1.0,
+        _ => {
+            let top_n: Vec<_> = native.top.iter().take(3).map(|s| &s.strategy).collect();
+            let top_h: Vec<_> = hlo.top.iter().take(3).map(|s| &s.strategy).collect();
+            if top_n.is_empty() {
+                return 0.0;
+            }
+            let shared = top_n.iter().filter(|s| top_h.contains(*s)).count();
+            shared as f64 / top_n.len() as f64
+        }
+    }
+}
+
 fn main() {
     let fast = std::env::var("ASTRA_BENCH_FAST").as_deref() == Ok("1");
     let registry = ModelRegistry::builtin();
@@ -65,7 +104,7 @@ fn main() {
 
     // Cold: fresh engine, empty memo. This is the first-request latency a
     // service tenant sees for a new model scope.
-    let eng = engine(true);
+    let eng = engine();
     let t = Instant::now();
     let cold_rep = eng.search(&req).unwrap();
     let cold_secs = t.elapsed().as_secs_f64();
@@ -106,7 +145,7 @@ fn main() {
     let warm_file =
         std::env::temp_dir().join(format!("astra_warm_bench_{}.jsonl", std::process::id()));
     let spill = eng.core().save_warm(&warm_file).unwrap();
-    let eng_restored = engine(true);
+    let eng_restored = engine();
     let restore = eng_restored.core().load_warm(&warm_file).unwrap();
     let t = Instant::now();
     let restore_rep = eng_restored.search(&req).unwrap();
@@ -121,29 +160,30 @@ fn main() {
         100.0 * hit_rate(&restore_rep)
     );
 
-    // Reference: the pre-refactor collect-then-filter pipeline with
-    // per-chunk memos (context for the trajectory, not a gated number).
+    // Oracle: the same plan, strictly serial (workers=1, wave=1/1) on a
+    // fresh engine — the differential harness's oracle, and the trajectory
+    // context for how much the parallel executor buys.
     let t = Instant::now();
-    let ref_rep = engine(false).search(&req).unwrap();
-    let ref_secs = t.elapsed().as_secs_f64();
-    println!("ref  : {ref_secs:.3}s  (non-streaming reference path)");
+    let oracle_rep = oracle().search(&req).unwrap();
+    let oracle_secs = t.elapsed().as_secs_f64();
+    println!("serial: {oracle_secs:.3}s  (workers=1/wave=1 oracle execution)");
 
     let speedup = cold_secs / warm_secs.max(1e-12);
     println!(
         "memo-warm speedup: {speedup:.2}×  ({cold_secs:.3}s → {warm_secs:.3}s); \
-         streaming vs reference cold: {:.2}×",
-        ref_secs / cold_secs.max(1e-12)
+         parallel executor vs serial oracle (cold): {:.2}×",
+        oracle_secs / cold_secs.max(1e-12)
     );
 
-    // Sanity: warmth must not change what is selected.
+    // Sanity: warmth and parallelism must not change what is selected.
     let best = |r: &SearchReport| {
         r.best().map(|s| (s.cost.tokens_per_s.to_bits(), s.money_usd.to_bits()))
     };
     assert_eq!(best(&cold_rep), best(&warm_rep), "memo warmth changed the selection");
-    assert_eq!(best(&cold_rep), best(&ref_rep), "streaming diverged from the reference");
+    assert_eq!(best(&cold_rep), best(&oracle_rep), "executor diverged from the serial oracle");
     assert_eq!(best(&cold_rep), best(&restore_rep), "restored memo changed the selection");
 
-    let out = Value::obj()
+    let mut out = Value::obj()
         .set(
             "workload",
             Value::obj()
@@ -169,9 +209,68 @@ fn main() {
                 .set("scopes_rejected", restore.scopes_rejected)
                 .set("snapshot_bytes", spill.bytes),
         )
-        .set("reference_nonstreaming", leg_json(&ref_rep, ref_secs))
+        .set("oracle_serial", leg_json(&oracle_rep, oracle_secs))
         .set("speedup_warm_vs_cold", speedup)
         .set("speedup_restore_vs_cold", cold_secs / restore_secs.max(1e-12));
+
+    // --- HLO parity smoke (gated): fig5 workload through both engines ---
+    let mut parity_result: Option<(f64, bool)> = None;
+    if let Ok(floor) = std::env::var("ASTRA_BENCH_MIN_HLO_PARITY") {
+        let floor: f64 = floor.parse().expect("ASTRA_BENCH_MIN_HLO_PARITY must be a number");
+        if !astra::runtime::artifacts_present() {
+            println!("hlo-parity: SKIP — PJRT artifacts missing (run `make artifacts`)");
+        } else {
+            // Identical config on both sides (default space + forest η —
+            // the HLO scorer was trained against forest η, so this is the
+            // apples-to-apples comparison); ASTRA_BENCH_FAST narrows the
+            // space like the other legs narrow their caps.
+            let parity_cfg = || {
+                let mut cfg = EngineConfig::default();
+                if fast {
+                    cfg.space = astra::strategy::SpaceConfig {
+                        mbs_candidates: vec![1, 2, 4],
+                        vpp_candidates: vec![1],
+                        offload_options: vec![false],
+                        ..astra::strategy::SpaceConfig::default()
+                    };
+                }
+                cfg
+            };
+            let hlo_eng = AstraEngine::new(
+                GpuCatalog::builtin(),
+                EngineConfig { engine: ScoringEngine::Hlo, ..parity_cfg() },
+            );
+            if !hlo_eng.hlo_active() {
+                println!("hlo-parity: SKIP — PJRT runtime failed to load");
+            } else {
+                let native_eng = AstraEngine::new(GpuCatalog::builtin(), parity_cfg());
+                let fig5 =
+                    SearchRequest::homogeneous("a800", 32, model.clone()).expect("fig5 request");
+                let native_rep = native_eng.search(&fig5).unwrap();
+                let hlo_rep = hlo_eng.search(&fig5).unwrap();
+                assert!(
+                    hlo_rep.memo_hits + hlo_rep.memo_misses == 0,
+                    "HLO engine must score through PJRT, not the memo"
+                );
+                let parity = hlo_parity(&native_rep, &hlo_rep);
+                let ok = parity >= floor;
+                println!(
+                    "hlo-parity: {parity:.2} (floor {floor:.2}) — native best {} vs hlo best {}",
+                    native_rep.best().map(|s| s.strategy.summary()).unwrap_or_default(),
+                    hlo_rep.best().map(|s| s.strategy.summary()).unwrap_or_default()
+                );
+                out = out.set(
+                    "hlo_parity",
+                    Value::obj()
+                        .set("parity", parity)
+                        .set("floor", floor)
+                        .set("generated", hlo_rep.generated)
+                        .set("scored", hlo_rep.scored),
+                );
+                parity_result = Some((parity, ok));
+            }
+        }
+    }
 
     let path = std::env::var("ASTRA_BENCH_OUT").unwrap_or_else(|_| "BENCH_search.json".into());
     match std::fs::write(&path, astra::json::to_string_pretty(&out) + "\n") {
@@ -209,5 +308,14 @@ fn main() {
             std::process::exit(1);
         }
         println!("restored memo hit-rate {got:.3} ≥ floor {floor:.3} — ok");
+    }
+
+    // HLO parity gate (only when the smoke actually ran — skips pass).
+    if let Some((parity, ok)) = parity_result {
+        if !ok {
+            eprintln!("perf_search: FAIL — HLO pick parity {parity:.2} below floor");
+            std::process::exit(1);
+        }
+        println!("hlo pick parity {parity:.2} — ok");
     }
 }

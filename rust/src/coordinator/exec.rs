@@ -1,0 +1,413 @@
+//! The streaming executor: runs any compiled [`SearchPlan`] through the
+//! one fused expand → rule-filter → memory-filter → score pipeline, for
+//! **both** scoring engines.
+//!
+//! ## Invariants
+//!
+//! * **Deterministic at any parallelism.** The unit of work is a
+//!   [`PoolSpec`]; `par_for_indices` returns pool outcomes in task order
+//!   whatever the worker count, and every result-relevant decision replays
+//!   serially, so the canonical report bytes are identical across worker
+//!   counts, wave schedules and repeat runs (pinned by `determinism.rs` and
+//!   `diff_streaming.rs`).
+//!
+//! * **Snapshot–speculate–replay.** Rounds are processed in speculative
+//!   waves: pools are admitted against a *snapshot* of the dominance
+//!   frontier taken at wave start (phase 1), every speculated pool streams
+//!   through the fused pipeline concurrently (phase 2), and the admissions
+//!   replay serially against the true running frontier in (round, pool)
+//!   order (phase 3), discarding outcomes the frontier rejects. Snapshot
+//!   coverage is a subset of every later frontier's coverage, so
+//!   speculation only ever *over*-admits — the replay has an outcome for
+//!   every accepted pool and the counts, `pruned_pools`, frontier and picks
+//!   are byte-identical to the strictly serial sweep. The wave grows by one
+//!   after a zero-waste replay (up to `wave_max`) and resets on waste; the
+//!   schedule is a pure function of the deterministic frontier evolution
+//!   and can never reach the report.
+//!
+//! * **Serial oracle.** `EngineConfig::streaming == false` does not select
+//!   a second pipeline (the pre-refactor reference path is gone): it
+//!   compiles the same plan with a pinned `1/1` wave and executes with one
+//!   worker. The differential harness uses that configuration as its
+//!   oracle.
+//!
+//! * **Both engines, one pipeline.** The native engine scores inside the
+//!   fused per-pool pass through the core's [`SharedCostMemo`]. The HLO
+//!   engine's PJRT executable is batch-oriented and thread-confined, so its
+//!   pools are expanded/filtered on the worker pool and then **packed per
+//!   pool** into padded `ScorerRuntime::batch`-row batches, executed
+//!   serially on the calling thread. Per-strategy rows are independent, so
+//!   per-pool packing scores exactly what whole-run packing scored;
+//!   `score_hlo`'s old detour through the reference path is gone.
+
+use super::plan::{PoolSpec, SearchPlan};
+use super::{ScoredStrategy, ScoringCore, SearchReport};
+use crate::cost::features::{pack_batch, OUT};
+use crate::cost::{CostBreakdown, MemoStats, SharedCostMemo};
+use crate::memory::MemoryModel;
+use crate::model::ModelSpec;
+use crate::pareto::{DominancePruner, OptimalPool, PoolEntry};
+use crate::pool::par_for_indices;
+use crate::runtime::ScorerRuntime;
+use crate::strategy::{ParallelStrategy, SearchSpace};
+use crate::Result;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Outcome of streaming one pool. Counts and scored strategies are
+/// deterministic (pure functions of the pool); the wall-second fields are
+/// per-worker accumulations used only to apportion the report's search vs
+/// simulation times.
+#[derive(Default)]
+struct PoolOutcome {
+    generated: usize,
+    rule_filtered: usize,
+    mem_filtered: usize,
+    scored: Vec<ScoredStrategy>,
+    memo: MemoStats,
+    filter_secs: f64,
+    score_secs: f64,
+}
+
+/// Pool-order filter outcome of the HLO path's parallel phase: survivors
+/// are collected (not scored) because the PJRT handle is thread-confined.
+struct FilteredPool {
+    generated: usize,
+    rule_filtered: usize,
+    mem_filtered: usize,
+    survivors: Vec<ParallelStrategy>,
+    filter_secs: f64,
+}
+
+impl ScoringCore {
+    /// Execute a compiled plan. `rt` diverts scoring to the HLO engine when
+    /// the config asks for it and the runtime loaded; `t0` anchors the
+    /// request-to-now share (plan compilation) of "Search Time".
+    pub(crate) fn execute_plan(
+        &self,
+        model: &ModelSpec,
+        plan: &SearchPlan,
+        rt: Option<&Mutex<ScorerRuntime>>,
+        t0: Instant,
+    ) -> Result<SearchReport> {
+        self.searches.fetch_add(1, Ordering::Relaxed);
+        let hlo_rt = match (self.config.engine, rt) {
+            (super::ScoringEngine::Hlo, Some(rt)) => Some(rt),
+            _ => None,
+        };
+        // The native path scores through the model scope's shared memo; the
+        // HLO path never touches the registry (its scorer has no memo).
+        let memo = if hlo_rt.is_none() { Some(self.memos.for_model(model)) } else { None };
+        let workers = if self.config.streaming { self.config.workers } else { 1 };
+
+        let mut pruner = DominancePruner::new(plan.budget.unwrap_or(f64::INFINITY));
+        let base_wave = plan.wave_base.max(1);
+        let wave_cap = plan.wave_max.max(base_wave);
+        let mut wave = base_wave;
+
+        let mut n_generated = 0usize;
+        let mut rule_filtered = 0usize;
+        let mut mem_filtered = 0usize;
+        let mut search_secs = t0.elapsed().as_secs_f64();
+        let mut simulate_secs = 0.0f64;
+        let mut memo_stats = MemoStats::default();
+        let mut scored_all: Vec<ScoredStrategy> = Vec::new();
+
+        let mut next = 0usize;
+        while next < plan.rounds.len() {
+            let wave_rounds = &plan.rounds[next..plan.rounds.len().min(next + wave)];
+            next += wave_rounds.len();
+
+            // Phase 1 (serial, cheap): speculative admission against a
+            // frontier snapshot; admitted pools join one flat task list in
+            // (round, pool) order.
+            let t_gen = Instant::now();
+            let snapshot = pruner.clone();
+            let mut tasks: Vec<&PoolSpec> = Vec::new();
+            let mut spec_flags: Vec<bool> = Vec::new();
+            for round in wave_rounds {
+                for pool in &round.pools {
+                    let spec = !plan.prune || snapshot.would_admit(pool.ub_tput, pool.lb_usd);
+                    spec_flags.push(spec);
+                    if spec {
+                        tasks.push(pool);
+                    }
+                }
+            }
+            let gen_secs = t_gen.elapsed().as_secs_f64();
+
+            // Phase 2: one streaming pass over the whole wave.
+            let t_run = Instant::now();
+            let mut outcomes = match hlo_rt {
+                Some(rt) => self.stream_pools_hlo(model, &plan.space, &tasks, rt, workers)?,
+                None => {
+                    let memo = memo.as_ref().expect("native path always has a memo");
+                    self.stream_pools(model, &plan.space, &tasks, memo, workers)
+                }
+            };
+            let wall = t_run.elapsed().as_secs_f64();
+
+            // Phase 3: deterministic serial replay of the admissions.
+            let (mut filter_busy, mut score_busy) = (0.0f64, 0.0f64);
+            let mut flag_idx = 0usize;
+            let mut oc_idx = 0usize;
+            let mut wasted = 0usize;
+            for round in wave_rounds {
+                let mut round_scored: Vec<ScoredStrategy> = Vec::new();
+                for pool in &round.pools {
+                    let spec = spec_flags[flag_idx];
+                    flag_idx += 1;
+                    let admit = !plan.prune || pruner.admit(pool.ub_tput, pool.lb_usd);
+                    if !spec {
+                        debug_assert!(!admit, "snapshot admitted what the frontier rejects");
+                        continue;
+                    }
+                    let oc = &mut outcomes[oc_idx];
+                    oc_idx += 1;
+                    filter_busy += oc.filter_secs;
+                    score_busy += oc.score_secs;
+                    if !admit {
+                        // Speculation waste: scored in phase 2, pruned by
+                        // the true frontier — dropped so the report matches
+                        // the serial sweep exactly.
+                        wasted += 1;
+                        continue;
+                    }
+                    n_generated += oc.generated;
+                    rule_filtered += oc.rule_filtered;
+                    mem_filtered += oc.mem_filtered;
+                    memo_stats.merge(oc.memo);
+                    round_scored.append(&mut oc.scored);
+                }
+                // Observe only after the round completes: admissions within
+                // a round never see the round's own strategies. Non-pruning
+                // plans skip the frontier entirely (`admit` above is never
+                // reached either, so the report cannot tell).
+                if plan.prune {
+                    for s in &round_scored {
+                        pruner.observe(s.cost.tokens_per_s, s.money_usd);
+                    }
+                }
+                scored_all.extend(round_scored);
+            }
+
+            // Split the wave's wall time between the filter and scoring
+            // phases in proportion to worker busy time — the fused pass has
+            // no phase barrier to time directly, but search + simulate
+            // still sums to the true wall clock.
+            let busy = filter_busy + score_busy;
+            if busy > 0.0 {
+                search_secs += gen_secs + wall * filter_busy / busy;
+                simulate_secs += wall * score_busy / busy;
+            } else {
+                search_secs += gen_secs + wall;
+            }
+            // Adaptive schedule: grow while speculation is free, reset to
+            // the base on the first wasted pool.
+            wave = if wasted == 0 { (wave + 1).min(wave_cap) } else { base_wave };
+        }
+
+        Ok(assemble_report(
+            n_generated,
+            rule_filtered,
+            mem_filtered,
+            pruner.pruned(),
+            search_secs,
+            simulate_secs,
+            plan.budget,
+            plan.top_k,
+            memo_stats,
+            scored_all,
+        ))
+    }
+
+    /// The fused native streaming pass: expand → rule filter → memory
+    /// filter → score, one pool per work item on the scoped worker pool,
+    /// scoring through the shared memo. No candidate vector is ever
+    /// materialized — each strategy goes from the generator's visitor
+    /// straight through the filters into (at most) one [`ScoredStrategy`].
+    fn stream_pools(
+        &self,
+        model: &ModelSpec,
+        space: &SearchSpace,
+        tasks: &[&PoolSpec],
+        memo: &SharedCostMemo,
+        workers: usize,
+    ) -> Vec<PoolOutcome> {
+        let rules = &self.config.rules;
+        let catalog = &self.catalog;
+        let cost = &self.cost;
+        let money = &self.config.money;
+        let mem = MemoryModel::default();
+        par_for_indices(tasks.len(), workers, |i| {
+            let task = tasks[i];
+            let mut oc = PoolOutcome::default();
+            let t_pool = Instant::now();
+            space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
+                oc.generated += 1;
+                if rules.filters_out(&s).unwrap_or(true) {
+                    oc.rule_filtered += 1;
+                    return;
+                }
+                if !mem.fits(model, &s, catalog) {
+                    oc.mem_filtered += 1;
+                    return;
+                }
+                let t_score = Instant::now();
+                let breakdown = cost.evaluate_shared(model, &s, memo, &mut oc.memo);
+                let money_usd = money.cost_usd(model, &s, catalog, breakdown.step_time);
+                oc.score_secs += t_score.elapsed().as_secs_f64();
+                oc.scored.push(ScoredStrategy { strategy: s, cost: breakdown, money_usd });
+            });
+            oc.filter_secs = (t_pool.elapsed().as_secs_f64() - oc.score_secs).max(0.0);
+            oc
+        })
+    }
+
+    /// The HLO streaming pass: the same fused expand/filter runs on the
+    /// worker pool, but survivors are collected per pool and scored through
+    /// the PJRT executable — packed **per pool** into padded batches of the
+    /// artifact's geometry, executed serially on this thread (the handle is
+    /// thread-confined). Outcomes keep task order like the native pass.
+    fn stream_pools_hlo(
+        &self,
+        model: &ModelSpec,
+        space: &SearchSpace,
+        tasks: &[&PoolSpec],
+        rt: &Mutex<ScorerRuntime>,
+        workers: usize,
+    ) -> Result<Vec<PoolOutcome>> {
+        let rules = &self.config.rules;
+        let catalog = &self.catalog;
+        let mem = MemoryModel::default();
+        let filtered: Vec<FilteredPool> = par_for_indices(tasks.len(), workers, |i| {
+            let task = tasks[i];
+            let t_pool = Instant::now();
+            let mut fp = FilteredPool {
+                generated: 0,
+                rule_filtered: 0,
+                mem_filtered: 0,
+                survivors: Vec::new(),
+                filter_secs: 0.0,
+            };
+            space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
+                fp.generated += 1;
+                if rules.filters_out(&s).unwrap_or(true) {
+                    fp.rule_filtered += 1;
+                    return;
+                }
+                if !mem.fits(model, &s, catalog) {
+                    fp.mem_filtered += 1;
+                    return;
+                }
+                fp.survivors.push(s);
+            });
+            fp.filter_secs = t_pool.elapsed().as_secs_f64();
+            fp
+        });
+
+        let batch = rt.lock().unwrap().batch.max(1);
+        let money = &self.config.money;
+        let mut outcomes = Vec::with_capacity(filtered.len());
+        for fp in filtered {
+            let mut oc = PoolOutcome {
+                generated: fp.generated,
+                rule_filtered: fp.rule_filtered,
+                mem_filtered: fp.mem_filtered,
+                filter_secs: fp.filter_secs,
+                ..Default::default()
+            };
+            let t_score = Instant::now();
+            let mut costs: Vec<CostBreakdown> = Vec::with_capacity(fp.survivors.len());
+            for chunk in fp.survivors.chunks(batch) {
+                let refs: Vec<&ParallelStrategy> = chunk.iter().collect();
+                let pb = pack_batch(model, &refs, catalog, batch);
+                let rows: Vec<[f32; OUT]> = rt
+                    .lock()
+                    .unwrap()
+                    .execute(&pb.stage_feats, &pb.stage_mask, &pb.strat_feats)?;
+                for (j, s) in chunk.iter().enumerate() {
+                    let r = rows[j];
+                    let step_time = r[0] as f64;
+                    let tokens = (s.global_batch * model.seq_len) as f64;
+                    costs.push(CostBreakdown {
+                        stage_times: Vec::new(),
+                        pipeline_fwd: 0.0,
+                        pipeline_bwd: r[1] as f64,
+                        dp_time: r[2] as f64,
+                        optimizer_time: r[3] as f64,
+                        offload_time: 0.0,
+                        step_time,
+                        tokens_per_s: tokens / step_time,
+                        mfu: 0.0,
+                    });
+                }
+            }
+            for (strategy, cost) in fp.survivors.into_iter().zip(costs) {
+                let money_usd = money.cost_usd(model, &strategy, catalog, cost.step_time);
+                oc.scored.push(ScoredStrategy { strategy, cost, money_usd });
+            }
+            oc.score_secs = t_score.elapsed().as_secs_f64();
+            outcomes.push(oc);
+        }
+        Ok(outcomes)
+    }
+}
+
+/// Pool construction + ranking tail shared by every plan. With a `budget`,
+/// the fastest within-budget plan is promoted to `top[0]` (Eq. 33
+/// selection) *before* truncation, so the pick survives even when `top_k`
+/// faster-but-over-budget plans exist.
+#[allow(clippy::too_many_arguments)]
+fn assemble_report(
+    generated: usize,
+    rule_filtered: usize,
+    mem_filtered: usize,
+    pruned_pools: usize,
+    search_secs: f64,
+    simulate_secs: f64,
+    budget: Option<f64>,
+    top_k: usize,
+    memo: MemoStats,
+    mut scored: Vec<ScoredStrategy>,
+) -> SearchReport {
+    let pool = OptimalPool::build(
+        scored
+            .iter()
+            .enumerate()
+            .map(|(idx, s)| PoolEntry {
+                idx,
+                throughput: s.cost.tokens_per_s,
+                cost: s.money_usd,
+            })
+            .collect(),
+    );
+    let n_scored = scored.len();
+    scored.sort_by(|a, b| a.cost.step_time.partial_cmp(&b.cost.step_time).unwrap());
+    if let Some(b) = budget {
+        // Step-time ascending is throughput descending (tokens/step is
+        // fixed per model), so the first within-budget entry is the
+        // fastest affordable plan.
+        if let Some(pos) = scored.iter().position(|s| s.money_usd <= b) {
+            if pos > 0 {
+                let pick = scored.remove(pos);
+                scored.insert(0, pick);
+            }
+        }
+    }
+    scored.truncate(top_k);
+    SearchReport {
+        generated,
+        rule_filtered,
+        mem_filtered,
+        scored: n_scored,
+        pruned_pools,
+        search_secs,
+        simulate_secs,
+        memo_hits: memo.hits,
+        memo_misses: memo.misses,
+        top: scored,
+        pool,
+    }
+}

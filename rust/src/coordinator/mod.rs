@@ -2,57 +2,71 @@
 //! (paper Fig. 2): input preprocess → search-space generation → rule filter
 //! → memory filter → cost simulation → selection (throughput or money).
 //!
-//! Scoring runs on one of two engines with identical math:
+//! ## Architecture: plan IR + one executor
+//!
+//! Every [`SearchRequest`] mode (Eq. 1–3 plus the heterogeneous money
+//! sweep) **compiles** into a [`SearchPlan`] — ordered rounds of
+//! `(cluster, tp, dp)` [`PoolSpec`]s plus an objective/pruning spec — and a
+//! single streaming executor runs any plan. The split lives in three
+//! submodules:
+//!
+//! * [`modes`] — [`SearchRequest`] constructors and budget validation
+//!   (pure input; no engine state);
+//! * [`plan`] — the IR and [`ScoringCore::compile_plan`] (pure compilation:
+//!   enumeration and closed-form branch-and-bound bounds, no scoring);
+//! * [`exec`] — the executor: fused expand → rules → memory → score per
+//!   pool, speculative-wave sweep with snapshot–speculate–replay admission,
+//!   byte-identical reports at any worker count or wave schedule (its
+//!   module docs state the invariants).
+//!
+//! Scoring runs on one of two engines with identical math, **both** through
+//! the same executor:
 //!
 //! * `native` — the pure-rust [`CostModel`] (η from GBDT forests when
-//!   `artifacts/forest.json` exists, hardware-truth curves otherwise);
+//!   `artifacts/forest.json` exists, hardware-truth curves otherwise),
+//!   scored inside the fused per-pool pass through the core's
+//!   [`SharedCostMemo`] (shared across chunks, sweep rounds and requests —
+//!   see the [`crate::cost`] module docs for the memo architecture);
 //! * `hlo` — the AOT-compiled Layer-2 scorer executed through PJRT
-//!   ([`crate::runtime::ScorerRuntime`]), exercising the Pallas kernels.
+//!   ([`crate::runtime::ScorerRuntime`]): pools are filtered on the worker
+//!   pool, then packed *per pool* into the artifact's padded batch geometry
+//!   and executed serially (the PJRT handle is thread-confined).
 //!
-//! Search is fanned out over a scoped thread pool; the per-phase wall times
-//! reported in [`SearchReport`] correspond to Table 1's "Search Time" and
-//! "Simulation Time" columns.
-//!
-//! ## Streaming scoring engine
-//!
-//! With `EngineConfig::streaming` (the default), the native pipeline never
-//! materializes a round's full candidate vector: the unit of parallel work
-//! is a `(cluster, tp, dp)` *pool*, and each worker fuses parameter
-//! expansion → rule filter → memory filter → cost scoring into one pass
-//! per pool, scoring through the core's [`SharedCostMemo`] (shared across
-//! chunks, sweep rounds and requests — see the [`crate::cost`] module docs
-//! for the memo architecture). The hetero-cost sweep additionally runs its
-//! pool totals in speculative waves ([`ScoringCore::hetero_cost_streaming`])
-//! whose deterministic replay keeps reports byte-identical to the serial
-//! sweep. `streaming: false` keeps the pre-refactor collect-then-filter
-//! pipeline as the reference half of the differential harness
-//! (`rust/tests/diff_streaming.rs`); the HLO engine always takes the
-//! reference path because its PJRT handle is batch-oriented.
+//! `EngineConfig::streaming` is a compatibility flag, not a second
+//! pipeline: `false` compiles the same plan with a pinned serial `1/1` wave
+//! and executes with one worker — the differential harness's oracle. The
+//! per-phase wall times reported in [`SearchReport`] correspond to Table
+//! 1's "Search Time" and "Simulation Time" columns.
 //!
 //! ## Engine anatomy: [`ScoringCore`] vs [`AstraEngine`]
 //!
 //! The PJRT executable handle is thread-confined (the `xla` wrappers are
 //! neither `Send` nor `Sync`), which would make the whole engine unshareable
-//! across threads. The state the native pipeline actually needs — catalog,
-//! config, cost model — is plain data, so it lives in [`ScoringCore`], a
-//! `Sync` scoring entry point that one process can share across many
-//! concurrent requests (this is what [`crate::service`] fans out over).
-//! [`AstraEngine`] is `ScoringCore` plus the optional HLO runtime; it keeps
-//! the historical single-owner API and is what the CLI constructs.
+//! across threads. The state the pipeline actually needs — catalog, config,
+//! cost model, memo registry — is plain data, so it lives in
+//! [`ScoringCore`], a `Sync` scoring entry point that one process can share
+//! across many concurrent requests (this is what [`crate::service`] fans
+//! out over). [`AstraEngine`] is `ScoringCore` plus the optional HLO
+//! runtime; it keeps the historical single-owner API and is what the CLI
+//! constructs.
 
-use crate::cost::features::{pack_batch, OUT};
-use crate::cost::{CostBreakdown, CostModel, EtaProvider, MemoRegistry, MemoStats, SharedCostMemo};
+pub mod exec;
+pub mod modes;
+pub mod plan;
+
+pub use modes::{validate_budget, SearchRequest};
+pub use plan::{plan_json, PlanRound, PoolSpec, SearchPlan};
+
+use crate::cost::{CostBreakdown, CostModel, EtaProvider, MemoRegistry, SharedCostMemo};
 use crate::gbdt::EtaForests;
 use crate::gpu::GpuCatalog;
-use crate::hetero::HeteroSolver;
-use crate::memory::MemoryModel;
 use crate::model::ModelSpec;
-use crate::pareto::{DominancePruner, MoneyModel, OptimalPool, PoolEntry};
-use crate::pool::{default_workers, par_for_indices, par_map_chunks};
+use crate::pareto::{MoneyModel, OptimalPool};
+use crate::pool::default_workers;
 use crate::rules::RuleSet;
 use crate::runtime::ScorerRuntime;
-use crate::strategy::{ClusterAssignment, GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};
-use crate::{AstraError, Result};
+use crate::strategy::{ParallelStrategy, SpaceConfig};
+use crate::Result;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -80,25 +94,24 @@ pub struct EngineConfig {
     /// for the exhaustive differential reference; results are identical,
     /// only the search time changes).
     pub money_prune: bool,
-    /// Stream generation → rule filter → memory filter → scoring in fused
-    /// per-worker passes over `(cluster, tp, dp)` pools, scoring through
-    /// the core's [`SharedCostMemo`] (the fast path; native engine only).
-    /// Off = the pre-refactor reference pipeline that materializes the full
-    /// candidate vector per round and memoizes per worker chunk — kept for
-    /// the differential harness, which proves the two paths select
-    /// identically.
+    /// Compatibility flag (stays in the request fingerprint). `true` — the
+    /// default — executes plans with the configured workers and wave
+    /// schedule. `false` compiles the *same* plan pinned to a `1/1` wave
+    /// and executes with one worker: the strictly serial oracle the
+    /// differential harness (`rust/tests/diff_streaming.rs`) compares
+    /// against. There is no second pipeline behind it.
     pub streaming: bool,
-    /// Pool totals per speculative wave of the parallel hetero-cost sweep.
+    /// Pool-total rounds per speculative wave of the sweep executor.
     /// 1 = fully serial (each round's pruner sees every earlier round's
     /// frontier, zero speculation waste); larger waves score consecutive
-    /// totals concurrently against a frontier *snapshot* and then replay
+    /// rounds concurrently against a frontier *snapshot* and then replay
     /// the admission decisions serially, so reports — including pruning
     /// counts — stay byte-identical to the serial sweep at any wave size.
     /// This is the *base* wave; the sweep adapts upward from it (see
     /// `sweep_wave_max`).
     pub sweep_wave: usize,
     /// Adaptive-wave ceiling: after a wave whose speculative admissions
-    /// were all replayed without waste, the next wave grows by one total
+    /// were all replayed without waste, the next wave grows by one round
     /// (more cross-total overlap for free); any waste resets the wave to
     /// `sweep_wave`. Growth is driven only by the deterministic admission
     /// replay, so — like `sweep_wave` itself — the schedule never changes
@@ -126,89 +139,6 @@ impl Default for EngineConfig {
         }
     }
 }
-
-/// A search request: model + GPU-pool mode (§3.2 input integration, Eq. 7).
-#[derive(Debug, Clone)]
-pub struct SearchRequest {
-    pub mode: GpuPoolMode,
-    pub model: ModelSpec,
-}
-
-impl SearchRequest {
-    /// Mode 1 (Eq. 1): one GPU type, fixed count. Unknown GPU names are a
-    /// recoverable [`AstraError::Config`] (service requests must not abort
-    /// the process).
-    pub fn homogeneous(gpu_name: &str, count: usize, model: ModelSpec) -> Result<SearchRequest> {
-        let catalog = GpuCatalog::builtin();
-        let gpu = catalog.find(gpu_name)?;
-        Ok(SearchRequest { mode: GpuPoolMode::Homogeneous { gpu, count }, model })
-    }
-
-    /// Mode 2 (Eq. 2): total cluster size + per-type caps, named by GPU.
-    /// Caps are a per-type *map*: duplicate entries of the same type merge
-    /// by summation (matching the JSON wire form, which is an object).
-    pub fn heterogeneous(
-        caps: &[(&str, usize)],
-        total: usize,
-        model: ModelSpec,
-    ) -> Result<SearchRequest> {
-        let catalog = GpuCatalog::builtin();
-        let mut resolved: Vec<(crate::gpu::GpuType, usize)> = Vec::with_capacity(caps.len());
-        for &(name, cap) in caps {
-            resolved.push((catalog.find(name)?, cap));
-        }
-        let resolved = crate::strategy::merge_caps(resolved);
-        Ok(SearchRequest { mode: GpuPoolMode::Heterogeneous { total, caps: resolved }, model })
-    }
-
-    /// Mode 3 (Eq. 3): count sweep under a money ceiling. NaN and
-    /// non-positive budgets are recoverable [`AstraError::Config`]s, like
-    /// the unknown-GPU paths (`+inf` means "no ceiling" and is fine).
-    pub fn cost(
-        gpu_name: &str,
-        max_count: usize,
-        max_money: f64,
-        model: ModelSpec,
-    ) -> Result<SearchRequest> {
-        let catalog = GpuCatalog::builtin();
-        let gpu = catalog.find(gpu_name)?;
-        validate_budget(max_money)?;
-        Ok(SearchRequest { mode: GpuPoolMode::Cost { gpu, max_count, max_money }, model })
-    }
-
-    /// Heterogeneous money search: per-type caps (a map — duplicate names
-    /// merge by summation) swept under a money ceiling.
-    pub fn hetero_cost(
-        caps: &[(&str, usize)],
-        max_money: f64,
-        model: ModelSpec,
-    ) -> Result<SearchRequest> {
-        let catalog = GpuCatalog::builtin();
-        validate_budget(max_money)?;
-        let mut resolved: Vec<(crate::gpu::GpuType, usize)> = Vec::with_capacity(caps.len());
-        for &(name, cap) in caps {
-            resolved.push((catalog.find(name)?, cap));
-        }
-        let resolved = crate::strategy::merge_caps(resolved);
-        if resolved.iter().map(|&(_, c)| c).sum::<usize>() < 2 {
-            return Err(AstraError::Config("hetero-cost caps admit fewer than 2 GPUs".into()));
-        }
-        Ok(SearchRequest { mode: GpuPoolMode::HeteroCost { caps: resolved, max_money }, model })
-    }
-}
-
-/// Money ceilings must be positive and not NaN (`+inf` = unlimited). Shared
-/// by the request constructors, the wire parser and the engine dispatch so
-/// hand-built modes cannot smuggle a bad budget past validation.
-pub fn validate_budget(max_money: f64) -> Result<()> {
-    if max_money.is_nan() || max_money <= 0.0 {
-        return Err(AstraError::Config(format!(
-            "max_money must be a positive number of USD (got {max_money})"
-        )));
-    }
-    Ok(())
-}
-
 
 /// One scored strategy.
 #[derive(Debug, Clone)]
@@ -248,11 +178,11 @@ pub struct SearchReport {
     /// Scoring wall time ("Simulation Time").
     pub simulate_secs: f64,
     /// Shared-cost-memo hits accumulated by this search's scoring passes
-    /// (0 on the non-streaming reference path and the HLO engine). Like
-    /// the wall times these are observability, not results: a memo warmed
-    /// by earlier traffic raises hits, and concurrent workers may both
-    /// miss a key one of them is about to insert — so golden transcripts
-    /// and determinism diffs normalize them out.
+    /// (0 on the HLO engine, whose scorer has no memo). Like the wall
+    /// times these are observability, not results: a memo warmed by
+    /// earlier traffic raises hits, and concurrent workers may both miss a
+    /// key one of them is about to insert — so golden transcripts and
+    /// determinism diffs normalize them out.
     pub memo_hits: u64,
     /// Shared-cost-memo misses (see `memo_hits`).
     pub memo_misses: u64,
@@ -279,95 +209,21 @@ impl SearchReport {
 pub struct ScoringCore {
     pub catalog: GpuCatalog,
     pub config: EngineConfig,
-    cost: CostModel,
+    pub(crate) cost: CostModel,
     /// Shared cost memos, one per model scope ([`crate::cost::model_scope_key`]):
     /// reused across worker chunks, sweep rounds and service requests. The
     /// catalog/η/consts dimension of memo validity is pinned by `cost`
     /// being immutable for the core's lifetime.
-    memos: MemoRegistry,
+    pub(crate) memos: MemoRegistry,
     /// Lifetime count of searches that entered the filter/score pipeline —
     /// the cache-effectiveness anchor for [`crate::service`] tests.
-    searches: AtomicU64,
+    pub(crate) searches: AtomicU64,
     /// Warm-start spill/restore accounting ([`crate::persist`]), surfaced
     /// through `astra stats` and the wire `stats` response.
     persist: crate::persist::PersistCounters,
     /// Snapshot identity of this core, digested once at construction
     /// (forest digests walk every tree node — too costly per spill).
     warm_meta: crate::persist::EngineMeta,
-}
-
-/// One unit of streaming scoring work: a fixed `(cluster, tp, dp)` pool
-/// whose parameter cross-product is expanded, filtered and scored in a
-/// single per-worker pass.
-struct PoolTask {
-    cluster: ClusterAssignment,
-    tp: usize,
-    dp: usize,
-}
-
-/// Outcome of streaming one pool. Counts and scored strategies are
-/// deterministic (pure functions of the pool); the wall-second fields are
-/// per-worker accumulations used only to apportion the report's search vs
-/// simulation times.
-#[derive(Default)]
-struct PoolOutcome {
-    generated: usize,
-    rule_filtered: usize,
-    mem_filtered: usize,
-    scored: Vec<ScoredStrategy>,
-    memo: MemoStats,
-    filter_secs: f64,
-    score_secs: f64,
-}
-
-/// Aggregation of a streaming pass over many pools.
-struct StreamedBatch {
-    generated: usize,
-    rule_filtered: usize,
-    mem_filtered: usize,
-    scored: Vec<ScoredStrategy>,
-    memo: MemoStats,
-    /// Wall-clock share attributed to generation + filtering.
-    search_secs: f64,
-    /// Wall-clock share attributed to cost scoring.
-    simulate_secs: f64,
-}
-
-impl StreamedBatch {
-    /// Fold per-pool outcomes (in pool order) and split the pass's wall
-    /// time between the filter and scoring phases in proportion to the
-    /// workers' accumulated busy time in each — the fused pass has no
-    /// phase barrier to time directly, but `search + simulate` still sums
-    /// to the true wall clock.
-    fn collect(outcomes: Vec<PoolOutcome>, wall_secs: f64) -> StreamedBatch {
-        let mut b = StreamedBatch {
-            generated: 0,
-            rule_filtered: 0,
-            mem_filtered: 0,
-            scored: Vec::new(),
-            memo: MemoStats::default(),
-            search_secs: 0.0,
-            simulate_secs: 0.0,
-        };
-        let (mut filter_busy, mut score_busy) = (0.0f64, 0.0f64);
-        for mut oc in outcomes {
-            b.generated += oc.generated;
-            b.rule_filtered += oc.rule_filtered;
-            b.mem_filtered += oc.mem_filtered;
-            b.memo.merge(oc.memo);
-            b.scored.append(&mut oc.scored);
-            filter_busy += oc.filter_secs;
-            score_busy += oc.score_secs;
-        }
-        let busy = filter_busy + score_busy;
-        if busy > 0.0 {
-            b.search_secs = wall_secs * filter_busy / busy;
-            b.simulate_secs = wall_secs * score_busy / busy;
-        } else {
-            b.search_secs = wall_secs;
-        }
-        b
-    }
 }
 
 impl ScoringCore {
@@ -446,12 +302,63 @@ impl ScoringCore {
     /// snapshot under construction. The service layer uses this to combine
     /// memo scopes and its result cache into one file.
     pub fn export_warm(&self, w: &mut crate::persist::WarmWriter) {
-        for (key, memo) in self.memos.export_scopes() {
+        self.export_warm_within(w, 0);
+    }
+
+    /// [`Self::export_warm`] under a snapshot byte budget (`0` =
+    /// unlimited). When the serialized scopes would push the snapshot past
+    /// `max_bytes`, least-recently-used scopes are dropped first: sections
+    /// are sized individually, the registry's LRU clock orders candidates
+    /// (most recent kept first), and whatever does not fit is counted in
+    /// the `persist_scopes_dropped` stats counter. Kept scopes still land
+    /// in key order, so budgeted snapshots stay deterministic and diffable
+    /// for a fixed request history.
+    pub fn export_warm_within(&self, w: &mut crate::persist::WarmWriter, max_bytes: u64) {
+        if max_bytes == 0 {
+            // Unbudgeted: stream each scope straight into the writer (no
+            // per-section buffering — spills can be large).
+            for (key, _, memo) in self.memos.export_scopes_with_recency() {
+                let rows = memo.export_rows();
+                if !rows.is_empty() {
+                    w.memo_scope(key, &rows, &self.warm_meta);
+                }
+            }
+            return;
+        }
+        // Budgeted: size each section individually so LRU scopes can be
+        // dropped first. (last_use, key, serialized section) per scope.
+        let mut sections: Vec<(u64, u64, String)> = Vec::new();
+        for (key, last_use, memo) in self.memos.export_scopes_with_recency() {
             let rows = memo.export_rows();
             if rows.is_empty() {
                 continue;
             }
-            w.memo_scope(key, &rows, &self.warm_meta);
+            sections.push((
+                last_use,
+                key,
+                crate::persist::WarmWriter::memo_scope_section(key, &rows, &self.warm_meta),
+            ));
+        }
+        // Most-recently-used first; keep what fits, count the rest.
+        sections.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut used = w.len() as u64;
+        let mut dropped = 0u64;
+        sections.retain(|(_, _, sec)| {
+            if used + sec.len() as u64 <= max_bytes {
+                used += sec.len() as u64;
+                true
+            } else {
+                dropped += 1;
+                false
+            }
+        });
+        if dropped > 0 {
+            self.persist.note_scopes_dropped(dropped);
+        }
+        // Deterministic file order whatever the recency ordering was.
+        sections.sort_by(|a, b| a.1.cmp(&b.1));
+        for (_, _, sec) in &sections {
+            w.push_memo_section(sec);
         }
     }
 
@@ -459,8 +366,18 @@ impl ScoringCore {
     /// (atomic temp-file + rename). See [`crate::persist`] for the format
     /// and the invalidation contract.
     pub fn save_warm(&self, path: &Path) -> Result<crate::persist::SpillStats> {
+        self.save_warm_within(path, 0)
+    }
+
+    /// [`Self::save_warm`] under a snapshot byte budget (`0` = unlimited);
+    /// see [`Self::export_warm_within`] for the LRU drop policy.
+    pub fn save_warm_within(
+        &self,
+        path: &Path,
+        max_bytes: u64,
+    ) -> Result<crate::persist::SpillStats> {
         let mut w = crate::persist::WarmWriter::new();
-        self.export_warm(&mut w);
+        self.export_warm_within(&mut w, max_bytes);
         let stats = w.finish_to(path)?;
         self.persist.note_spill(&stats);
         Ok(stats)
@@ -503,19 +420,14 @@ impl ScoringCore {
         Ok(set)
     }
 
-    /// Whether this search runs the fused streaming pipeline: configured
-    /// on, and not diverted to the thread-confined HLO scorer.
-    fn streaming_native(&self, rt: Option<&Mutex<ScorerRuntime>>) -> bool {
-        self.config.streaming && !(self.config.engine == ScoringEngine::Hlo && rt.is_some())
-    }
-
     /// How many searches have entered the filter/score pipeline (cache hits
     /// in the service layer do NOT increment this).
     pub fn searches_run(&self) -> u64 {
         self.searches.load(Ordering::Relaxed)
     }
 
-    /// Run a search request with native scoring (mode dispatch).
+    /// Run a search request with native scoring: compile the plan, execute
+    /// it. All four modes take exactly this path.
     pub fn search(&self, req: &SearchRequest) -> Result<SearchReport> {
         self.search_with(req, None)
     }
@@ -525,733 +437,9 @@ impl ScoringCore {
         req: &SearchRequest,
         rt: Option<&Mutex<ScorerRuntime>>,
     ) -> Result<SearchReport> {
-        match &req.mode {
-            GpuPoolMode::Homogeneous { gpu, count } => {
-                self.search_homogeneous_with(&req.model, *gpu, *count, rt)
-            }
-            GpuPoolMode::Heterogeneous { total, caps } => {
-                self.search_heterogeneous_with(&req.model, *total, caps, rt)
-            }
-            GpuPoolMode::Cost { gpu, max_count, max_money } => {
-                self.search_cost_with(&req.model, *gpu, *max_count, *max_money, rt)
-            }
-            GpuPoolMode::HeteroCost { caps, max_money } => {
-                self.search_hetero_cost_with(&req.model, caps, *max_money, rt)
-            }
-        }
-    }
-
-    /// Mode 1 (Eq. 1).
-    pub fn search_homogeneous(
-        &self,
-        model: &ModelSpec,
-        gpu: crate::gpu::GpuType,
-        count: usize,
-    ) -> Result<SearchReport> {
-        self.search_homogeneous_with(model, gpu, count, None)
-    }
-
-    fn search_homogeneous_with(
-        &self,
-        model: &ModelSpec,
-        gpu: crate::gpu::GpuType,
-        count: usize,
-        rt: Option<&Mutex<ScorerRuntime>>,
-    ) -> Result<SearchReport> {
         let t0 = Instant::now();
-        let space = SearchSpace::new(self.config.space.clone());
-        if self.streaming_native(rt) {
-            let tasks: Vec<PoolTask> = space
-                .homogeneous_pools(model, &self.catalog, gpu, count)
-                .into_iter()
-                .map(|(cluster, tp, dp)| PoolTask { cluster, tp, dp })
-                .collect();
-            return self.stream_and_report(model, &space, tasks, t0, None);
-        }
-        let generated = space.homogeneous(model, &self.catalog, gpu, count);
-        self.filter_and_score(model, generated, t0, None, rt)
-    }
-
-    /// Mode 2 (Eq. 2): heterogeneous pipeline partition search (§3.4).
-    pub fn search_heterogeneous(
-        &self,
-        model: &ModelSpec,
-        total: usize,
-        caps: &[(crate::gpu::GpuType, usize)],
-    ) -> Result<SearchReport> {
-        self.search_heterogeneous_with(model, total, caps, None)
-    }
-
-    fn search_heterogeneous_with(
-        &self,
-        model: &ModelSpec,
-        total: usize,
-        caps: &[(crate::gpu::GpuType, usize)],
-        rt: Option<&Mutex<ScorerRuntime>>,
-    ) -> Result<SearchReport> {
-        let t0 = Instant::now();
-        // Canonicalize caps as a per-type map here, not just in the named
-        // constructor: hand-built modes with split duplicate entries must
-        // see the same budgets the fingerprint hashes, or the result cache
-        // would conflate genuinely different searches.
-        let caps = crate::strategy::merge_caps(caps.iter().copied());
-        if caps.iter().map(|&(_, l)| l).sum::<usize>() < total {
-            return Err(AstraError::Config(format!(
-                "type caps sum below cluster size {total}"
-            )));
-        }
-        let space = self.hetero_space();
-        let solver = HeteroSolver::default();
-        if self.streaming_native(rt) {
-            let mut tasks: Vec<PoolTask> = Vec::new();
-            self.hetero_pool_tasks(model, total, &caps, &space, &solver, |_, _, _| true, &mut tasks);
-            return self.stream_and_report(model, &space, tasks, t0, None);
-        }
-        let mut generated: Vec<ParallelStrategy> = Vec::new();
-        self.generate_hetero_pools(model, total, &caps, &space, &solver, |_, _, _| true, &mut generated);
-        self.filter_and_score(model, generated, t0, None, rt)
-    }
-
-    /// Search space used by the heterogeneous paths: interleaving over
-    /// heterogeneous segments is not supported by the Megatron runtime, so
-    /// vpp is fixed to 1 (DESIGN.md §6).
-    fn hetero_space(&self) -> SearchSpace {
-        SearchSpace::new(SpaceConfig { vpp_candidates: vec![1], ..self.config.space.clone() })
-    }
-
-    /// Mode-2-style pool enumeration for one fixed cluster size: tp × pp ×
-    /// dp splits × segment/layer assignments from the [`HeteroSolver`].
-    /// `admit` sees each candidate pool `(assignment, tp, dp)` before it is
-    /// emitted — the hetero-cost pruner hooks in there; mode 2 admits
-    /// everything. Both the streaming fan-out and the reference generator
-    /// ([`Self::generate_hetero_pools`]) consume this one enumeration, so
-    /// their pool order cannot drift.
-    fn hetero_pool_tasks(
-        &self,
-        model: &ModelSpec,
-        total: usize,
-        caps: &[(crate::gpu::GpuType, usize)],
-        space: &SearchSpace,
-        solver: &HeteroSolver,
-        mut admit: impl FnMut(&ClusterAssignment, usize, usize) -> bool,
-        out: &mut Vec<PoolTask>,
-    ) {
-        for tp in space.valid_tps(model, &self.catalog) {
-            for pp in 2..=space.config.max_pp.min(model.layers).min(total / tp) {
-                if total % (tp * pp) != 0 {
-                    continue;
-                }
-                let dp = total / (tp * pp);
-                let budgets = HeteroSolver::budgets(&self.catalog, caps, tp, dp);
-                if budgets.iter().map(|b| b.max_stages).sum::<usize>() < pp {
-                    continue;
-                }
-                let assignments =
-                    solver.enumerate(model.layers, pp, &budgets, self.config.hetero_exhaustive);
-                for ca in assignments {
-                    if !admit(&ca, tp, dp) {
-                        continue;
-                    }
-                    out.push(PoolTask { cluster: ca, tp, dp });
-                }
-            }
-        }
-    }
-
-    /// Collected form of [`Self::hetero_pool_tasks`] for the non-streaming
-    /// reference pipeline: expand every admitted pool into one flat
-    /// candidate vector.
-    fn generate_hetero_pools(
-        &self,
-        model: &ModelSpec,
-        total: usize,
-        caps: &[(crate::gpu::GpuType, usize)],
-        space: &SearchSpace,
-        solver: &HeteroSolver,
-        admit: impl FnMut(&ClusterAssignment, usize, usize) -> bool,
-        out: &mut Vec<ParallelStrategy>,
-    ) {
-        let mut tasks: Vec<PoolTask> = Vec::new();
-        self.hetero_pool_tasks(model, total, caps, space, solver, admit, &mut tasks);
-        for t in &tasks {
-            space.expand_params(model, &t.cluster, t.tp, t.dp, out);
-        }
-    }
-
-    /// Mode 3 (Eq. 3): sweep GPU counts, Pareto-pool everything, pick the
-    /// fastest plan under the money ceiling (§3.6).
-    pub fn search_cost(
-        &self,
-        model: &ModelSpec,
-        gpu: crate::gpu::GpuType,
-        max_count: usize,
-        max_money: f64,
-    ) -> Result<SearchReport> {
-        self.search_cost_with(model, gpu, max_count, max_money, None)
-    }
-
-    fn search_cost_with(
-        &self,
-        model: &ModelSpec,
-        gpu: crate::gpu::GpuType,
-        max_count: usize,
-        max_money: f64,
-        rt: Option<&Mutex<ScorerRuntime>>,
-    ) -> Result<SearchReport> {
-        let t0 = Instant::now();
-        validate_budget(max_money)?;
-        let space = SearchSpace::new(self.config.space.clone());
-        if self.streaming_native(rt) {
-            // Every count's pools stream through one fan-out: the shared
-            // memo carries stage profiles across the whole sweep instead
-            // of rebuilding them per round.
-            let mut tasks: Vec<PoolTask> = Vec::new();
-            for count in SearchSpace::count_sweep(max_count) {
-                tasks.extend(
-                    space
-                        .homogeneous_pools(model, &self.catalog, gpu, count)
-                        .into_iter()
-                        .map(|(cluster, tp, dp)| PoolTask { cluster, tp, dp }),
-                );
-            }
-            return self.stream_and_report(model, &space, tasks, t0, Some(max_money));
-        }
-        let mut generated: Vec<ParallelStrategy> = Vec::new();
-        for count in SearchSpace::count_sweep(max_count) {
-            generated.extend(space.homogeneous(model, &self.catalog, gpu, count));
-        }
-        self.filter_and_score(model, generated, t0, Some(max_money), rt)
-    }
-
-    /// Heterogeneous money search (§3.6 fused with §3.4): sweep mixed-type
-    /// cluster sizes under per-type caps, price every candidate per type
-    /// per hour through the [`crate::pricing::PriceBook`], and select the
-    /// fastest plan under the money ceiling. A branch-and-bound pruner
-    /// ([`DominancePruner`]) skips whole pools whose bounds prove them
-    /// over-budget or dominated before any strategy is expanded.
-    pub fn search_hetero_cost(
-        &self,
-        model: &ModelSpec,
-        caps: &[(crate::gpu::GpuType, usize)],
-        max_money: f64,
-    ) -> Result<SearchReport> {
-        self.search_hetero_cost_with(model, caps, max_money, None)
-    }
-
-    fn search_hetero_cost_with(
-        &self,
-        model: &ModelSpec,
-        caps: &[(crate::gpu::GpuType, usize)],
-        max_money: f64,
-        rt: Option<&Mutex<ScorerRuntime>>,
-    ) -> Result<SearchReport> {
-        validate_budget(max_money)?;
-        // Same per-type-map canonicalization as the fingerprint (see the
-        // mode-2 path above) — duplicate entries merge by summation.
-        let caps = crate::strategy::merge_caps(caps.iter().copied());
-        let cap_sum: usize = caps.iter().map(|&(_, c)| c).sum();
-        if caps.is_empty() || cap_sum < 2 {
-            return Err(AstraError::Config("hetero-cost caps admit fewer than 2 GPUs".into()));
-        }
-        self.searches.fetch_add(1, Ordering::Relaxed);
-        let space = self.hetero_space();
-        let solver = HeteroSolver::default();
-        let money = &self.config.money;
-        let prune = self.config.money_prune;
-        let mut pruner = DominancePruner::new(max_money);
-        // Power-of-two sweep plus the full pool when it is not a power of
-        // two (callers stating exact caps expect the whole pool tried).
-        let mut totals = SearchSpace::count_sweep(cap_sum);
-        if totals.last() != Some(&cap_sum) {
-            totals.push(cap_sum);
-        }
-        if self.streaming_native(rt) {
-            return Ok(self.hetero_cost_streaming(
-                model, &caps, max_money, &space, &solver, prune, pruner, &totals,
-            ));
-        }
-        // Pre-refactor reference sweep: strictly serial rounds, full
-        // candidate vector per round, per-chunk memoization. Kept as the
-        // slow half of the differential harness.
-        let mut n_generated = 0usize;
-        let mut rule_filtered = 0usize;
-        let mut mem_filtered = 0usize;
-        let mut search_secs = 0.0f64;
-        let mut simulate_secs = 0.0f64;
-        let mut scored_all: Vec<ScoredStrategy> = Vec::new();
-        // One sweep round per cluster size: earlier rounds' scored points
-        // feed the pruner's dominance frontier for later rounds.
-        for total in totals {
-            let tgen = Instant::now();
-            let mut generated: Vec<ParallelStrategy> = Vec::new();
-            self.generate_hetero_pools(
-                model,
-                total,
-                &caps,
-                &space,
-                &solver,
-                |ca, tp, dp| {
-                    if !prune {
-                        return true;
-                    }
-                    let (ub_tput, lb_usd) =
-                        money.pool_bounds(model, &ca.gpus_by_type(tp, dp), &self.catalog);
-                    pruner.admit(ub_tput, lb_usd)
-                },
-                &mut generated,
-            );
-            let gen_secs = tgen.elapsed().as_secs_f64();
-            n_generated += generated.len();
-            let (rf, mf, scored, filter_secs, score_secs) =
-                self.score_candidates(model, generated, rt)?;
-            rule_filtered += rf;
-            mem_filtered += mf;
-            search_secs += gen_secs + filter_secs;
-            simulate_secs += score_secs;
-            for s in &scored {
-                pruner.observe(s.cost.tokens_per_s, s.money_usd);
-            }
-            scored_all.extend(scored);
-        }
-        Ok(self.assemble_report(
-            n_generated,
-            rule_filtered,
-            mem_filtered,
-            pruner.pruned(),
-            search_secs,
-            simulate_secs,
-            Some(max_money),
-            MemoStats::default(),
-            scored_all,
-        ))
-    }
-
-    /// The parallel hetero-cost sweep: pool totals are processed in
-    /// *speculative waves* of `config.sweep_wave` consecutive rounds.
-    ///
-    /// Phase 1 (serial, cheap) enumerates each round's candidate pools
-    /// with their branch-and-bound bounds and admits them *speculatively*
-    /// against a snapshot of the dominance frontier taken at the wave
-    /// start. Phase 2 (parallel) streams every speculatively admitted pool
-    /// of the wave — across totals — through the fused expand/filter/score
-    /// pass. Phase 3 (serial) replays the admissions in round order
-    /// against the true running frontier, observing each round's accepted
-    /// strategies before the next round's decisions, and discards the
-    /// outcomes of pools the true frontier rejects (bounded speculation
-    /// waste, the price of cross-total parallelism).
-    ///
-    /// Because snapshot coverage is a subset of every later frontier's
-    /// coverage, speculation only ever *over*-admits — so the replay has an
-    /// outcome for every pool it accepts, and the reported counts, pruning
-    /// statistics, frontier and picks are byte-identical to the serial
-    /// sweep (`sweep_wave = 1`) at any wave size or worker count.
-    ///
-    /// The wave size is *adaptive*: after a wave whose speculative
-    /// admissions all survived the replay (zero waste), the next wave grows
-    /// by one total, up to `config.sweep_wave_max`; any waste resets it to
-    /// the configured base. Waste is a pure function of the deterministic
-    /// frontier evolution, so the schedule — like the wave size itself —
-    /// can never reach the report.
-    #[allow(clippy::too_many_arguments)]
-    fn hetero_cost_streaming(
-        &self,
-        model: &ModelSpec,
-        caps: &[(crate::gpu::GpuType, usize)],
-        max_money: f64,
-        space: &SearchSpace,
-        solver: &HeteroSolver,
-        prune: bool,
-        mut pruner: DominancePruner,
-        totals: &[usize],
-    ) -> SearchReport {
-        let memo = self.memos.for_model(model);
-        let money = &self.config.money;
-        let base_wave = self.config.sweep_wave.max(1);
-        let wave_cap = self.config.sweep_wave_max.max(base_wave);
-        let mut wave = base_wave;
-        let mut n_generated = 0usize;
-        let mut rule_filtered = 0usize;
-        let mut mem_filtered = 0usize;
-        let mut search_secs = 0.0f64;
-        let mut simulate_secs = 0.0f64;
-        let mut memo_stats = MemoStats::default();
-        let mut scored_all: Vec<ScoredStrategy> = Vec::new();
-        let mut next = 0usize;
-        while next < totals.len() {
-            let wave_totals = &totals[next..totals.len().min(next + wave)];
-            next += wave_totals.len();
-            let t_gen = Instant::now();
-            let snapshot = pruner.clone();
-            // Phase 1: per round, every pool's (ub tput, lb USD, admitted
-            // vs snapshot); speculatively admitted pools append to one
-            // flat task list in (round, pool) order.
-            let mut rounds: Vec<Vec<(f64, f64, bool)>> = Vec::with_capacity(wave_totals.len());
-            let mut tasks: Vec<PoolTask> = Vec::new();
-            for &total in wave_totals {
-                let mut meta: Vec<(f64, f64, bool)> = Vec::new();
-                self.hetero_pool_tasks(
-                    model,
-                    total,
-                    caps,
-                    space,
-                    solver,
-                    |ca, tp, dp| {
-                        let (ub, lb) = if prune {
-                            money.pool_bounds(model, &ca.gpus_by_type(tp, dp), &self.catalog)
-                        } else {
-                            (f64::INFINITY, 0.0)
-                        };
-                        let spec = !prune || snapshot.would_admit(ub, lb);
-                        meta.push((ub, lb, spec));
-                        spec
-                    },
-                    &mut tasks,
-                );
-                rounds.push(meta);
-            }
-            let gen_secs = t_gen.elapsed().as_secs_f64();
-
-            // Phase 2: one parallel streaming pass over the whole wave.
-            let t_run = Instant::now();
-            let mut outcomes = self.stream_pools(model, space, &tasks, &memo);
-            let wall = t_run.elapsed().as_secs_f64();
-
-            // Phase 3: deterministic serial replay of the admissions.
-            let (mut filter_busy, mut score_busy) = (0.0f64, 0.0f64);
-            let mut oc_idx = 0usize;
-            let mut wasted = 0usize;
-            for meta in &rounds {
-                let mut round_scored: Vec<ScoredStrategy> = Vec::new();
-                for &(ub, lb, spec) in meta {
-                    let admit = !prune || pruner.admit(ub, lb);
-                    if !spec {
-                        debug_assert!(!admit, "snapshot admitted what the frontier rejects");
-                        continue;
-                    }
-                    let oc = &mut outcomes[oc_idx];
-                    oc_idx += 1;
-                    filter_busy += oc.filter_secs;
-                    score_busy += oc.score_secs;
-                    if !admit {
-                        // Speculation waste: scored in phase 2, pruned by
-                        // the true frontier — dropped so the report matches
-                        // the serial sweep exactly.
-                        wasted += 1;
-                        continue;
-                    }
-                    n_generated += oc.generated;
-                    rule_filtered += oc.rule_filtered;
-                    mem_filtered += oc.mem_filtered;
-                    memo_stats.merge(oc.memo);
-                    round_scored.append(&mut oc.scored);
-                }
-                // Observe only after the round completes, exactly like the
-                // serial sweep: admissions within a round never see the
-                // round's own strategies.
-                for s in &round_scored {
-                    pruner.observe(s.cost.tokens_per_s, s.money_usd);
-                }
-                scored_all.extend(round_scored);
-            }
-            let busy = filter_busy + score_busy;
-            if busy > 0.0 {
-                search_secs += gen_secs + wall * filter_busy / busy;
-                simulate_secs += wall * score_busy / busy;
-            } else {
-                search_secs += gen_secs + wall;
-            }
-            // Adaptive schedule: grow while speculation is free, reset to
-            // the base on the first wasted pool.
-            wave = if wasted == 0 { (wave + 1).min(wave_cap) } else { base_wave };
-        }
-        self.assemble_report(
-            n_generated,
-            rule_filtered,
-            mem_filtered,
-            pruner.pruned(),
-            search_secs,
-            simulate_secs,
-            Some(max_money),
-            memo_stats,
-            scored_all,
-        )
-    }
-
-    /// The fused streaming pass: expand → rule filter → memory filter →
-    /// score, one pool per work item on the scoped worker pool, scoring
-    /// through the shared memo. No candidate vector is ever materialized —
-    /// each strategy goes from the generator's visitor straight through the
-    /// filters into (at most) one `ScoredStrategy`. `par_for_indices`
-    /// returns outcomes in task order whatever the worker count, so
-    /// downstream ranking is deterministic.
-    fn stream_pools(
-        &self,
-        model: &ModelSpec,
-        space: &SearchSpace,
-        tasks: &[PoolTask],
-        memo: &SharedCostMemo,
-    ) -> Vec<PoolOutcome> {
-        let rules = &self.config.rules;
-        let catalog = &self.catalog;
-        let cost = &self.cost;
-        let money = &self.config.money;
-        let mem = MemoryModel::default();
-        par_for_indices(tasks.len(), self.config.workers, |i| {
-            let task = &tasks[i];
-            let mut oc = PoolOutcome::default();
-            let t_pool = Instant::now();
-            space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
-                oc.generated += 1;
-                if rules.filters_out(&s).unwrap_or(true) {
-                    oc.rule_filtered += 1;
-                    return;
-                }
-                if !mem.fits(model, &s, catalog) {
-                    oc.mem_filtered += 1;
-                    return;
-                }
-                let t_score = Instant::now();
-                let breakdown = cost.evaluate_shared(model, &s, memo, &mut oc.memo);
-                let money_usd = money.cost_usd(model, &s, catalog, breakdown.step_time);
-                oc.score_secs += t_score.elapsed().as_secs_f64();
-                oc.scored.push(ScoredStrategy { strategy: s, cost: breakdown, money_usd });
-            });
-            oc.filter_secs = (t_pool.elapsed().as_secs_f64() - oc.score_secs).max(0.0);
-            oc
-        })
-    }
-
-    /// Streaming-path tail for the single-sweep modes (1, 2 and 3): fan the
-    /// pool tasks out, aggregate, assemble. `t0` anchors the task
-    /// enumeration share of "Search Time".
-    fn stream_and_report(
-        &self,
-        model: &ModelSpec,
-        space: &SearchSpace,
-        tasks: Vec<PoolTask>,
-        t0: Instant,
-        budget: Option<f64>,
-    ) -> Result<SearchReport> {
-        self.searches.fetch_add(1, Ordering::Relaxed);
-        let memo = self.memos.for_model(model);
-        let setup_secs = t0.elapsed().as_secs_f64();
-        let t_run = Instant::now();
-        let outcomes = self.stream_pools(model, space, &tasks, &memo);
-        let batch = StreamedBatch::collect(outcomes, t_run.elapsed().as_secs_f64());
-        Ok(self.assemble_report(
-            batch.generated,
-            batch.rule_filtered,
-            batch.mem_filtered,
-            0,
-            setup_secs + batch.search_secs,
-            batch.simulate_secs,
-            budget,
-            batch.memo,
-            batch.scored,
-        ))
-    }
-
-    /// Shared tail: rules → memory → scoring → ranking (bumps the search
-    /// counter and assembles the report; `t0` anchors "Search Time";
-    /// `budget` triggers the mode-3 within-budget promotion).
-    fn filter_and_score(
-        &self,
-        model: &ModelSpec,
-        generated: Vec<ParallelStrategy>,
-        t0: Instant,
-        budget: Option<f64>,
-        rt: Option<&Mutex<ScorerRuntime>>,
-    ) -> Result<SearchReport> {
-        self.searches.fetch_add(1, Ordering::Relaxed);
-        let n_generated = generated.len();
-        let t_call = Instant::now();
-        let (rule_filtered, mem_filtered, scored, filter_secs, simulate_secs) =
-            self.score_candidates(model, generated, rt)?;
-        let search_secs = t_call.duration_since(t0).as_secs_f64() + filter_secs;
-        Ok(self.assemble_report(
-            n_generated,
-            rule_filtered,
-            mem_filtered,
-            0,
-            search_secs,
-            simulate_secs,
-            budget,
-            MemoStats::default(),
-            scored,
-        ))
-    }
-
-    /// Filter + score one candidate batch without touching counters or
-    /// assembling a report (the hetero-cost sweep calls this once per
-    /// round). Returns `(rule_filtered, mem_filtered, scored strategies,
-    /// filter wall secs, scoring wall secs)`.
-    fn score_candidates(
-        &self,
-        model: &ModelSpec,
-        generated: Vec<ParallelStrategy>,
-        rt: Option<&Mutex<ScorerRuntime>>,
-    ) -> Result<(usize, usize, Vec<ScoredStrategy>, f64, f64)> {
-        let n_generated = generated.len();
-        let workers = self.config.workers;
-        let t0 = Instant::now();
-
-        // --- rule filter (Eq. 10) ---
-        let rules = &self.config.rules;
-        let rule_keep: Vec<bool> = par_map_chunks(&generated, workers, |_, chunk| {
-            chunk.iter().map(|s| !rules.filters_out(s).unwrap_or(true)).collect()
-        });
-        let after_rules: Vec<ParallelStrategy> = generated
-            .into_iter()
-            .zip(&rule_keep)
-            .filter_map(|(s, &keep)| keep.then_some(s))
-            .collect();
-        let rule_filtered = n_generated - after_rules.len();
-
-        // --- memory filter (Eq. 20/21) ---
-        let mem = MemoryModel::default();
-        let catalog = &self.catalog;
-        let mem_keep: Vec<bool> = par_map_chunks(&after_rules, workers, |_, chunk| {
-            chunk.iter().map(|s| mem.fits(model, s, catalog)).collect()
-        });
-        let valid: Vec<ParallelStrategy> = after_rules
-            .into_iter()
-            .zip(&mem_keep)
-            .filter_map(|(s, &keep)| keep.then_some(s))
-            .collect();
-        let mem_filtered = n_generated - rule_filtered - valid.len();
-        let filter_secs = t0.elapsed().as_secs_f64();
-
-        // --- cost simulation (§3.5) ---
-        let t1 = Instant::now();
-        let costs: Vec<CostBreakdown> = match rt {
-            Some(rt) if self.config.engine == ScoringEngine::Hlo => {
-                self.score_hlo(model, &valid, rt)?
-            }
-            _ => {
-                // Capture only the Sync cost model, not &self (the PJRT
-                // runtime handle is intentionally thread-confined). Each
-                // chunk scores through a memoized batch — strategies share
-                // stage profiles massively (§Perf).
-                let cost = &self.cost;
-                par_map_chunks(&valid, workers, |_, chunk| {
-                    let refs: Vec<&ParallelStrategy> = chunk.iter().collect();
-                    cost.evaluate_batch(model, &refs)
-                })
-            }
-        };
-        let simulate_secs = t1.elapsed().as_secs_f64();
-
-        // --- pricing (Eq. 32) ---
-        let money = &self.config.money;
-        let scored: Vec<ScoredStrategy> = valid
-            .into_iter()
-            .zip(costs)
-            .map(|(strategy, cost)| {
-                let money_usd = money.cost_usd(model, &strategy, catalog, cost.step_time);
-                ScoredStrategy { strategy, cost, money_usd }
-            })
-            .collect();
-        Ok((rule_filtered, mem_filtered, scored, filter_secs, simulate_secs))
-    }
-
-    /// Pool construction + ranking tail shared by every mode. With a
-    /// `budget`, the fastest within-budget plan is promoted to `top[0]`
-    /// (Eq. 33 selection) *before* truncation, so the pick survives even
-    /// when `top_k` faster-but-over-budget plans exist.
-    #[allow(clippy::too_many_arguments)]
-    fn assemble_report(
-        &self,
-        generated: usize,
-        rule_filtered: usize,
-        mem_filtered: usize,
-        pruned_pools: usize,
-        search_secs: f64,
-        simulate_secs: f64,
-        budget: Option<f64>,
-        memo: MemoStats,
-        mut scored: Vec<ScoredStrategy>,
-    ) -> SearchReport {
-        let pool = OptimalPool::build(
-            scored
-                .iter()
-                .enumerate()
-                .map(|(idx, s)| PoolEntry {
-                    idx,
-                    throughput: s.cost.tokens_per_s,
-                    cost: s.money_usd,
-                })
-                .collect(),
-        );
-        let n_scored = scored.len();
-        scored.sort_by(|a, b| a.cost.step_time.partial_cmp(&b.cost.step_time).unwrap());
-        if let Some(b) = budget {
-            // Step-time ascending is throughput descending (tokens/step is
-            // fixed per model), so the first within-budget entry is the
-            // fastest affordable plan.
-            if let Some(pos) = scored.iter().position(|s| s.money_usd <= b) {
-                if pos > 0 {
-                    let pick = scored.remove(pos);
-                    scored.insert(0, pick);
-                }
-            }
-        }
-        scored.truncate(self.config.top_k);
-        SearchReport {
-            generated,
-            rule_filtered,
-            mem_filtered,
-            scored: n_scored,
-            pruned_pools,
-            search_secs,
-            simulate_secs,
-            memo_hits: memo.hits,
-            memo_misses: memo.misses,
-            top: scored,
-            pool,
-        }
-    }
-
-    /// Score through the PJRT executable, chunked to the artifact's batch.
-    fn score_hlo(
-        &self,
-        model: &ModelSpec,
-        valid: &[ParallelStrategy],
-        rt: &Mutex<ScorerRuntime>,
-    ) -> Result<Vec<CostBreakdown>> {
-        let batch = rt.lock().unwrap().batch;
-        let n_chunks = valid.len().div_ceil(batch.max(1));
-        let chunks: Vec<&[ParallelStrategy]> = valid.chunks(batch).collect();
-        // PJRT executables are not Sync-safe to share blindly; packing is
-        // parallel, execution serialized through the mutex.
-        let catalog = &self.catalog;
-        let packed = par_for_indices(n_chunks, self.config.workers, |i| {
-            let refs: Vec<&ParallelStrategy> = chunks[i].iter().collect();
-            pack_batch(model, &refs, catalog, batch)
-        });
-        let mut out = Vec::with_capacity(valid.len());
-        for (i, pb) in packed.iter().enumerate() {
-            let rows: Vec<[f32; OUT]> = rt
-                .lock()
-                .unwrap()
-                .execute(&pb.stage_feats, &pb.stage_mask, &pb.strat_feats)?;
-            for (j, s) in chunks[i].iter().enumerate() {
-                let r = rows[j];
-                let step_time = r[0] as f64;
-                let tokens = (s.global_batch * model.seq_len) as f64;
-                out.push(CostBreakdown {
-                    stage_times: Vec::new(),
-                    pipeline_fwd: 0.0,
-                    pipeline_bwd: r[1] as f64,
-                    dp_time: r[2] as f64,
-                    optimizer_time: r[3] as f64,
-                    offload_time: 0.0,
-                    step_time,
-                    tokens_per_s: tokens / step_time,
-                    mfu: 0.0,
-                });
-            }
-        }
-        Ok(out)
+        let plan = self.compile_plan(req)?;
+        self.execute_plan(&req.model, &plan, rt, t0)
     }
 }
 
@@ -1303,50 +491,10 @@ impl AstraEngine {
         self.runtime.is_some()
     }
 
-    /// Run a search request (mode dispatch).
+    /// Run a search request: compile, then execute — on the HLO engine
+    /// when it is live, natively otherwise.
     pub fn search(&self, req: &SearchRequest) -> Result<SearchReport> {
         self.core.search_with(req, self.runtime.as_ref())
-    }
-
-    /// Mode 1 (Eq. 1).
-    pub fn search_homogeneous(
-        &self,
-        model: &ModelSpec,
-        gpu: crate::gpu::GpuType,
-        count: usize,
-    ) -> Result<SearchReport> {
-        self.core.search_homogeneous_with(model, gpu, count, self.runtime.as_ref())
-    }
-
-    /// Mode 2 (Eq. 2): heterogeneous pipeline partition search (§3.4).
-    pub fn search_heterogeneous(
-        &self,
-        model: &ModelSpec,
-        total: usize,
-        caps: &[(crate::gpu::GpuType, usize)],
-    ) -> Result<SearchReport> {
-        self.core.search_heterogeneous_with(model, total, caps, self.runtime.as_ref())
-    }
-
-    /// Mode 3 (Eq. 3).
-    pub fn search_cost(
-        &self,
-        model: &ModelSpec,
-        gpu: crate::gpu::GpuType,
-        max_count: usize,
-        max_money: f64,
-    ) -> Result<SearchReport> {
-        self.core.search_cost_with(model, gpu, max_count, max_money, self.runtime.as_ref())
-    }
-
-    /// Heterogeneous money search (mode 3 over mixed pools).
-    pub fn search_hetero_cost(
-        &self,
-        model: &ModelSpec,
-        caps: &[(crate::gpu::GpuType, usize)],
-        max_money: f64,
-    ) -> Result<SearchReport> {
-        self.core.search_hetero_cost_with(model, caps, max_money, self.runtime.as_ref())
     }
 }
 
@@ -1362,6 +510,7 @@ impl std::ops::Deref for AstraEngine {
 mod tests {
     use super::*;
     use crate::model::ModelRegistry;
+    use crate::strategy::GpuPoolMode;
 
     fn engine() -> AstraEngine {
         AstraEngine::new(
@@ -1496,7 +645,7 @@ mod tests {
         }
         // +inf means "no ceiling" and must keep working.
         assert!(SearchRequest::cost("a800", 64, f64::INFINITY, model.clone()).is_ok());
-        // Hand-built modes cannot smuggle a bad budget past the engine.
+        // Hand-built modes cannot smuggle a bad budget past the compiler.
         let eng = engine();
         let gpu = GpuCatalog::builtin().find("a800").unwrap();
         let hand = SearchRequest {
@@ -1504,6 +653,7 @@ mod tests {
             model,
         };
         assert!(eng.search(&hand).is_err());
+        assert!(eng.core().compile_plan(&hand).is_err());
     }
 
     /// Narrowed space so the hetero-cost tests stay fast in debug profile.
@@ -1559,7 +709,7 @@ mod tests {
     }
 
     #[test]
-    fn hand_built_duplicate_caps_merge_in_engine() {
+    fn hand_built_duplicate_caps_merge_in_compiler() {
         // Split duplicate cap entries must see the same budgets the
         // fingerprint hashes — otherwise the service cache would conflate
         // genuinely different searches.
@@ -1649,20 +799,26 @@ mod tests {
     }
 
     #[test]
-    fn reference_path_reports_zero_memo_counters() {
+    fn no_streaming_flag_maps_to_serial_plan() {
+        // The `streaming: false` compatibility flag is not a second
+        // pipeline: it compiles the same rounds with a pinned 1/1 wave and
+        // scores through the same executor (so memo counters are live).
         let reg = ModelRegistry::builtin();
         let model = reg.get("llama2-7b").unwrap().clone();
         let eng = AstraEngine::new(
             GpuCatalog::builtin(),
             EngineConfig { use_forests: false, streaming: false, ..Default::default() },
         );
-        let rep = eng.search(&SearchRequest::homogeneous("a800", 16, model).unwrap()).unwrap();
-        assert_eq!((rep.memo_hits, rep.memo_misses), (0, 0));
+        let req = SearchRequest::homogeneous("a800", 16, model).unwrap();
+        let plan = eng.core().compile_plan(&req).unwrap();
+        assert_eq!((plan.wave_base, plan.wave_max), (1, 1));
+        let rep = eng.search(&req).unwrap();
         assert!(rep.scored > 0);
+        assert!(rep.memo_hits + rep.memo_misses > 0, "oracle scores through the memo too");
     }
 
     #[test]
-    fn streaming_matches_reference_counts_and_best() {
+    fn serial_oracle_matches_streaming_counts_and_best() {
         let reg = ModelRegistry::builtin();
         let model = reg.get("llama2-7b").unwrap().clone();
         let mk = |streaming: bool| {
@@ -1684,6 +840,65 @@ mod tests {
             assert_eq!(a.cost.step_time.to_bits(), b.cost.step_time.to_bits());
             assert_eq!(a.money_usd.to_bits(), b.money_usd.to_bits());
         }
+    }
+
+    #[test]
+    fn plans_compile_for_every_mode() {
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        let eng = small_engine();
+        let core = eng.core();
+
+        let homog = core
+            .compile_plan(&SearchRequest::homogeneous("a800", 16, model.clone()).unwrap())
+            .unwrap();
+        assert_eq!(homog.rounds.len(), 1);
+        assert!(homog.pool_count() > 0);
+        assert!(homog.budget.is_none() && !homog.prune);
+        // Homogeneous pools carry the trivial bounds.
+        assert!(homog.rounds[0].pools.iter().all(|p| p.ub_tput.is_infinite() && p.lb_usd == 0.0));
+
+        let hetero = core
+            .compile_plan(
+                &SearchRequest::heterogeneous(&[("a800", 8), ("h100", 8)], 8, model.clone())
+                    .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(hetero.rounds.len(), 1);
+        assert!(hetero.pool_count() > 0);
+        // Heterogeneous modes pin vpp to 1.
+        assert_eq!(hetero.space.config.vpp_candidates, vec![1]);
+
+        let cost = core
+            .compile_plan(&SearchRequest::cost("a800", 16, 1e7, model.clone()).unwrap())
+            .unwrap();
+        assert_eq!(cost.rounds.len(), 1, "mode 3 sweeps inside one round");
+        assert_eq!(cost.budget, Some(1e7));
+        assert!(!cost.prune);
+
+        let hc = core
+            .compile_plan(
+                &SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8)], 1e7, model).unwrap(),
+            )
+            .unwrap();
+        // Power-of-two totals over cap_sum = 16: [2, 4, 8, 16].
+        assert_eq!(
+            hc.rounds.iter().map(|r| r.total).collect::<Vec<_>>(),
+            vec![2, 4, 8, 16]
+        );
+        assert!(hc.prune, "money_prune defaults on");
+        assert_eq!(hc.budget, Some(1e7));
+        // Pruning plans carry finite bounds on every pool.
+        assert!(hc
+            .rounds
+            .iter()
+            .flat_map(|r| &r.pools)
+            .all(|p| p.ub_tput.is_finite() && p.lb_usd > 0.0));
+        // The compiled plan serializes (smoke; byte-pinning lives in the
+        // golden snapshots and the determinism matrix).
+        let js = crate::json::to_string(&plan_json(&hc, &cat));
+        assert!(js.contains("\"astra_plan\":1"));
     }
 
     #[test]

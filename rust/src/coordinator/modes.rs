@@ -1,0 +1,96 @@
+//! Search-request modes (§3.2 input integration, Eq. 1–3 + the hetero
+//! money mode) and their validation.
+//!
+//! A [`SearchRequest`] is pure input: a model plus a [`GpuPoolMode`]. The
+//! named constructors resolve GPU names against the builtin catalog and
+//! reject bad budgets / unknown types as recoverable [`AstraError::Config`]
+//! errors (service requests must never abort the process). Everything
+//! downstream of a request is the plan compiler ([`super::plan`]): requests
+//! never carry engine state.
+
+use crate::gpu::GpuCatalog;
+use crate::model::ModelSpec;
+use crate::strategy::GpuPoolMode;
+use crate::{AstraError, Result};
+
+/// A search request: model + GPU-pool mode (§3.2 input integration, Eq. 7).
+#[derive(Debug, Clone)]
+pub struct SearchRequest {
+    pub mode: GpuPoolMode,
+    pub model: ModelSpec,
+}
+
+impl SearchRequest {
+    /// Mode 1 (Eq. 1): one GPU type, fixed count. Unknown GPU names are a
+    /// recoverable [`AstraError::Config`] (service requests must not abort
+    /// the process).
+    pub fn homogeneous(gpu_name: &str, count: usize, model: ModelSpec) -> Result<SearchRequest> {
+        let catalog = GpuCatalog::builtin();
+        let gpu = catalog.find(gpu_name)?;
+        Ok(SearchRequest { mode: GpuPoolMode::Homogeneous { gpu, count }, model })
+    }
+
+    /// Mode 2 (Eq. 2): total cluster size + per-type caps, named by GPU.
+    /// Caps are a per-type *map*: duplicate entries of the same type merge
+    /// by summation (matching the JSON wire form, which is an object).
+    pub fn heterogeneous(
+        caps: &[(&str, usize)],
+        total: usize,
+        model: ModelSpec,
+    ) -> Result<SearchRequest> {
+        let catalog = GpuCatalog::builtin();
+        let mut resolved: Vec<(crate::gpu::GpuType, usize)> = Vec::with_capacity(caps.len());
+        for &(name, cap) in caps {
+            resolved.push((catalog.find(name)?, cap));
+        }
+        let resolved = crate::strategy::merge_caps(resolved);
+        Ok(SearchRequest { mode: GpuPoolMode::Heterogeneous { total, caps: resolved }, model })
+    }
+
+    /// Mode 3 (Eq. 3): count sweep under a money ceiling. NaN and
+    /// non-positive budgets are recoverable [`AstraError::Config`]s, like
+    /// the unknown-GPU paths (`+inf` means "no ceiling" and is fine).
+    pub fn cost(
+        gpu_name: &str,
+        max_count: usize,
+        max_money: f64,
+        model: ModelSpec,
+    ) -> Result<SearchRequest> {
+        let catalog = GpuCatalog::builtin();
+        let gpu = catalog.find(gpu_name)?;
+        validate_budget(max_money)?;
+        Ok(SearchRequest { mode: GpuPoolMode::Cost { gpu, max_count, max_money }, model })
+    }
+
+    /// Heterogeneous money search: per-type caps (a map — duplicate names
+    /// merge by summation) swept under a money ceiling.
+    pub fn hetero_cost(
+        caps: &[(&str, usize)],
+        max_money: f64,
+        model: ModelSpec,
+    ) -> Result<SearchRequest> {
+        let catalog = GpuCatalog::builtin();
+        validate_budget(max_money)?;
+        let mut resolved: Vec<(crate::gpu::GpuType, usize)> = Vec::with_capacity(caps.len());
+        for &(name, cap) in caps {
+            resolved.push((catalog.find(name)?, cap));
+        }
+        let resolved = crate::strategy::merge_caps(resolved);
+        if resolved.iter().map(|&(_, c)| c).sum::<usize>() < 2 {
+            return Err(AstraError::Config("hetero-cost caps admit fewer than 2 GPUs".into()));
+        }
+        Ok(SearchRequest { mode: GpuPoolMode::HeteroCost { caps: resolved, max_money }, model })
+    }
+}
+
+/// Money ceilings must be positive and not NaN (`+inf` = unlimited). Shared
+/// by the request constructors, the wire parser and the plan compiler so
+/// hand-built modes cannot smuggle a bad budget past validation.
+pub fn validate_budget(max_money: f64) -> Result<()> {
+    if max_money.is_nan() || max_money <= 0.0 {
+        return Err(AstraError::Config(format!(
+            "max_money must be a positive number of USD (got {max_money})"
+        )));
+    }
+    Ok(())
+}

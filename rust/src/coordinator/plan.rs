@@ -1,0 +1,345 @@
+//! The search-plan IR: every [`SearchRequest`] mode **compiles** — purely,
+//! with no scoring — into one [`SearchPlan`], and a single streaming
+//! executor ([`super::exec`]) runs any plan for either engine.
+//!
+//! ## Why an IR
+//!
+//! The four pool modes (Eq. 1–3 plus the hetero money sweep) differ only in
+//! *which pools* they enumerate and *under which objective* they select;
+//! the expand → rule-filter → memory-filter → score pipeline is identical.
+//! Before this refactor each mode owned a near-duplicate driver; now the
+//! mode dispatch lives entirely in [`ScoringCore::compile_plan`] and the
+//! pipeline exists exactly once.
+//!
+//! A plan is:
+//!
+//! * the [`SearchSpace`] whose parameter cross-product every pool expands
+//!   (heterogeneous modes pin `vpp = 1` — interleaving over heterogeneous
+//!   segments is not supported by the Megatron runtime, DESIGN.md §6);
+//! * ordered [`PlanRound`]s of [`PoolSpec`]s — one round per sweep
+//!   coordinate (GPU total). Pruning state carries **across** rounds and a
+//!   round's own strategies never influence its own admissions, which is
+//!   what makes the executor's speculative waves replayable;
+//! * the objective: optional money `budget` (drives the within-budget
+//!   promotion and the [`crate::pareto::DominancePruner`]), the `prune`
+//!   switch, the speculative-wave schedule `(wave_base, wave_max)` and
+//!   `top_k`.
+//!
+//! Compilation is deterministic: the same request and result-relevant
+//! config always produce byte-identical [`plan_json`] — pinned by the
+//! determinism matrix (worker counts never enter a plan) and the golden
+//! plan snapshots under `rust/tests/golden/`.
+//!
+//! Branch-and-bound bounds (`ub_tput`, `lb_usd` per pool) are part of the
+//! IR, not the executor: [`crate::pareto::MoneyModel::pool_bounds`] is pure
+//! FLOPs arithmetic, so baking the bounds in at compile time keeps the
+//! executor's admission replay free of model math. Pools of non-pruning
+//! plans carry the trivial bounds `(+inf, 0)`.
+
+use super::{ScoringCore, SearchRequest};
+use crate::hetero::HeteroSolver;
+use crate::json::Value;
+use crate::model::ModelSpec;
+use crate::pareto::MoneyModel;
+use crate::strategy::{ClusterAssignment, GpuPoolMode, SearchSpace, SpaceConfig};
+use crate::{AstraError, Result};
+
+/// One candidate `(cluster, tp, dp)` pool: the unit of streaming work. The
+/// executor expands, filters and scores a pool's parameter cross-product in
+/// one fused per-worker pass.
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    pub cluster: ClusterAssignment,
+    pub tp: usize,
+    pub dp: usize,
+    /// Branch-and-bound upper bound on the pool's throughput (tokens/s);
+    /// `+inf` when the plan does not prune.
+    pub ub_tput: f64,
+    /// Branch-and-bound lower bound on the pool's bill (USD); `0` when the
+    /// plan does not prune.
+    pub lb_usd: f64,
+}
+
+impl PoolSpec {
+    fn unbounded((cluster, tp, dp): (ClusterAssignment, usize, usize)) -> PoolSpec {
+        PoolSpec { cluster, tp, dp, ub_tput: f64::INFINITY, lb_usd: 0.0 }
+    }
+}
+
+/// One sweep round: all candidate pools of one cluster size. The executor
+/// admits round `k+1`'s pools against a dominance frontier that has
+/// observed rounds `0..=k`'s scored strategies.
+#[derive(Debug, Clone)]
+pub struct PlanRound {
+    /// The GPU total this round covers (the sweep coordinate; for the
+    /// single-round modes, the request's count ceiling).
+    pub total: usize,
+    pub pools: Vec<PoolSpec>,
+}
+
+/// A compiled search plan — see the module docs.
+#[derive(Debug, Clone)]
+pub struct SearchPlan {
+    /// Parameter cross-product spec every pool expands under.
+    pub space: SearchSpace,
+    /// Ordered sweep rounds.
+    pub rounds: Vec<PlanRound>,
+    /// Money ceiling: `Some` for the cost modes (promotes the fastest
+    /// within-budget plan to `top[0]`), `None` otherwise.
+    pub budget: Option<f64>,
+    /// Run the branch-and-bound [`crate::pareto::DominancePruner`] over the
+    /// pools' bounds (hetero-cost only).
+    pub prune: bool,
+    /// Base speculative-wave size (rounds scored concurrently against a
+    /// frontier snapshot); `1` = strictly serial sweep.
+    pub wave_base: usize,
+    /// Adaptive-wave ceiling (grow-on-zero-waste, reset-on-waste).
+    pub wave_max: usize,
+    /// Ranked strategies kept in the report.
+    pub top_k: usize,
+}
+
+impl SearchPlan {
+    /// Total candidate pools across every round.
+    pub fn pool_count(&self) -> usize {
+        self.rounds.iter().map(|r| r.pools.len()).sum()
+    }
+}
+
+impl ScoringCore {
+    /// Compile a request into its [`SearchPlan`]. Pure: no scoring, no memo
+    /// traffic, no engine state — only enumeration (space × solver) and
+    /// closed-form pool bounds. Validation errors (bad budgets, caps below
+    /// the cluster size) surface here, before anything is counted.
+    pub fn compile_plan(&self, req: &SearchRequest) -> Result<SearchPlan> {
+        let cfg = &self.config;
+        // `streaming: false` is kept as a compatibility flag (it stays in
+        // the request fingerprint): it compiles the same rounds but pins
+        // the wave schedule to the strictly serial 1/1 — together with the
+        // executor's workers=1 override this is the differential oracle.
+        let (wave_base, wave_max) = if cfg.streaming {
+            let base = cfg.sweep_wave.max(1);
+            (base, cfg.sweep_wave_max.max(base))
+        } else {
+            (1, 1)
+        };
+        let model = &req.model;
+        let (space, rounds, budget, prune) = match &req.mode {
+            GpuPoolMode::Homogeneous { gpu, count } => {
+                let space = SearchSpace::new(cfg.space.clone());
+                let pools: Vec<PoolSpec> = space
+                    .homogeneous_pools(model, &self.catalog, *gpu, *count)
+                    .into_iter()
+                    .map(PoolSpec::unbounded)
+                    .collect();
+                (space, vec![PlanRound { total: *count, pools }], None, false)
+            }
+            GpuPoolMode::Heterogeneous { total, caps } => {
+                // Canonicalize caps as a per-type map here, not just in the
+                // named constructor: hand-built modes with split duplicate
+                // entries must see the same budgets the fingerprint hashes,
+                // or the result cache would conflate different searches.
+                let caps = crate::strategy::merge_caps(caps.iter().copied());
+                if caps.iter().map(|&(_, l)| l).sum::<usize>() < *total {
+                    return Err(AstraError::Config(format!(
+                        "type caps sum below cluster size {total}"
+                    )));
+                }
+                let space = self.hetero_space();
+                let solver = HeteroSolver::default();
+                let mut pools = Vec::new();
+                self.hetero_pools(model, *total, &caps, &space, &solver, None, &mut pools);
+                (space, vec![PlanRound { total: *total, pools }], None, false)
+            }
+            GpuPoolMode::Cost { gpu, max_count, max_money } => {
+                super::validate_budget(*max_money)?;
+                let space = SearchSpace::new(cfg.space.clone());
+                // The whole count sweep is one round: there is no pruner,
+                // so nothing distinguishes rounds, and one fan-out lets the
+                // shared memo carry stage profiles across every count
+                // instead of rebuilding them per round.
+                let mut pools = Vec::new();
+                for count in SearchSpace::count_sweep(*max_count) {
+                    pools.extend(
+                        space
+                            .homogeneous_pools(model, &self.catalog, *gpu, count)
+                            .into_iter()
+                            .map(PoolSpec::unbounded),
+                    );
+                }
+                (space, vec![PlanRound { total: *max_count, pools }], Some(*max_money), false)
+            }
+            GpuPoolMode::HeteroCost { caps, max_money } => {
+                super::validate_budget(*max_money)?;
+                // Same per-type-map canonicalization as mode 2.
+                let caps = crate::strategy::merge_caps(caps.iter().copied());
+                let cap_sum: usize = caps.iter().map(|&(_, c)| c).sum();
+                if caps.is_empty() || cap_sum < 2 {
+                    return Err(AstraError::Config(
+                        "hetero-cost caps admit fewer than 2 GPUs".into(),
+                    ));
+                }
+                let space = self.hetero_space();
+                let solver = HeteroSolver::default();
+                // Power-of-two sweep plus the full pool when it is not a
+                // power of two (callers stating exact caps expect the whole
+                // pool tried).
+                let mut totals = SearchSpace::count_sweep(cap_sum);
+                if totals.last() != Some(&cap_sum) {
+                    totals.push(cap_sum);
+                }
+                let money = cfg.money_prune.then_some(&cfg.money);
+                let rounds: Vec<PlanRound> = totals
+                    .into_iter()
+                    .map(|total| {
+                        let mut pools = Vec::new();
+                        self.hetero_pools(model, total, &caps, &space, &solver, money, &mut pools);
+                        PlanRound { total, pools }
+                    })
+                    .collect();
+                (space, rounds, Some(*max_money), cfg.money_prune)
+            }
+        };
+        Ok(SearchPlan {
+            space,
+            rounds,
+            budget,
+            prune,
+            wave_base,
+            wave_max,
+            top_k: cfg.top_k,
+        })
+    }
+
+    /// Search space used by the heterogeneous modes: interleaving over
+    /// heterogeneous segments is not supported by the Megatron runtime, so
+    /// vpp is fixed to 1 (DESIGN.md §6).
+    fn hetero_space(&self) -> SearchSpace {
+        SearchSpace::new(SpaceConfig { vpp_candidates: vec![1], ..self.config.space.clone() })
+    }
+
+    /// Heterogeneous pool enumeration for one fixed cluster size: tp × pp ×
+    /// dp splits × segment/layer assignments from the [`HeteroSolver`].
+    /// With `money` set, each pool carries its branch-and-bound bounds
+    /// (hetero-cost); without, the trivial `(+inf, 0)` (mode 2, or pruning
+    /// disabled). Both hetero modes compile through this one enumeration,
+    /// so their pool order cannot drift.
+    fn hetero_pools(
+        &self,
+        model: &ModelSpec,
+        total: usize,
+        caps: &[(crate::gpu::GpuType, usize)],
+        space: &SearchSpace,
+        solver: &HeteroSolver,
+        money: Option<&MoneyModel>,
+        out: &mut Vec<PoolSpec>,
+    ) {
+        for tp in space.valid_tps(model, &self.catalog) {
+            for pp in 2..=space.config.max_pp.min(model.layers).min(total / tp) {
+                if total % (tp * pp) != 0 {
+                    continue;
+                }
+                let dp = total / (tp * pp);
+                let budgets = HeteroSolver::budgets(&self.catalog, caps, tp, dp);
+                if budgets.iter().map(|b| b.max_stages).sum::<usize>() < pp {
+                    continue;
+                }
+                let assignments =
+                    solver.enumerate(model.layers, pp, &budgets, self.config.hetero_exhaustive);
+                for ca in assignments {
+                    let (ub_tput, lb_usd) = match money {
+                        Some(m) => m.pool_bounds(model, &ca.gpus_by_type(tp, dp), &self.catalog),
+                        None => (f64::INFINITY, 0.0),
+                    };
+                    out.push(PoolSpec { cluster: ca, tp, dp, ub_tput, lb_usd });
+                }
+            }
+        }
+    }
+}
+
+/// Non-finite-safe number rendering: JSON has no `inf`, so infinite bounds
+/// and budgets serialize as the string `"inf"`.
+fn num_or_inf(x: f64) -> Value {
+    if x.is_finite() {
+        Value::Num(x)
+    } else {
+        Value::Str("inf".to_string())
+    }
+}
+
+fn usizes(xs: &[usize]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+}
+
+fn bools(xs: &[bool]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Bool(x)).collect())
+}
+
+fn space_json(s: &SpaceConfig) -> Value {
+    Value::obj()
+        .set("tp", usizes(&s.tp_candidates))
+        .set("max_pp", s.max_pp)
+        .set("mbs", usizes(&s.mbs_candidates))
+        .set("vpp", usizes(&s.vpp_candidates))
+        .set("ep", usizes(&s.ep_candidates))
+        .set("seq_parallel", bools(&s.seq_parallel_options))
+        .set("dist_opt", bools(&s.dist_opt_options))
+        .set("offload", bools(&s.offload_options))
+        .set("recompute_none", s.recompute_none)
+        .set("recompute_selective", s.recompute_selective)
+        .set("recompute_full", s.recompute_full)
+        .set("overlap", s.overlap)
+        .set("use_flash_attn", s.use_flash_attn)
+}
+
+/// Canonical JSON view of a [`SearchPlan`] — the golden-snapshot and
+/// determinism-matrix surface. Everything result-relevant is present (GPUs
+/// by catalog *name*, bounds as shortest-round-trip decimals); two plans
+/// that would drive the executor identically serialize byte-identically.
+pub fn plan_json(plan: &SearchPlan, catalog: &crate::gpu::GpuCatalog) -> Value {
+    let rounds: Vec<Value> = plan
+        .rounds
+        .iter()
+        .map(|round| {
+            let pools: Vec<Value> = round
+                .pools
+                .iter()
+                .map(|p| {
+                    let segments: Vec<Value> = p
+                        .cluster
+                        .segments
+                        .iter()
+                        .map(|seg| {
+                            Value::obj()
+                                .set("gpu", catalog.spec(seg.gpu).name.as_str())
+                                .set("stages", seg.stages)
+                                .set("layers_per_stage", seg.layers_per_stage)
+                        })
+                        .collect();
+                    Value::obj()
+                        .set("segments", Value::Arr(segments))
+                        .set("tp", p.tp)
+                        .set("dp", p.dp)
+                        .set("ub_tput", num_or_inf(p.ub_tput))
+                        .set("lb_usd", num_or_inf(p.lb_usd))
+                })
+                .collect();
+            Value::obj().set("total", round.total).set("pools", Value::Arr(pools))
+        })
+        .collect();
+    let budget = match plan.budget {
+        None => Value::Str("none".to_string()),
+        Some(b) => num_or_inf(b),
+    };
+    Value::obj()
+        .set("astra_plan", 1u64)
+        .set("space", space_json(&plan.space.config))
+        .set("budget", budget)
+        .set("prune", plan.prune)
+        .set("wave_base", plan.wave_base)
+        .set("wave_max", plan.wave_max)
+        .set("top_k", plan.top_k)
+        .set("pool_count", plan.pool_count())
+        .set("rounds", Value::Arr(rounds))
+}

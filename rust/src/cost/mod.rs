@@ -21,9 +21,10 @@
 //! distinct profiles. Two memo layers exploit that:
 //!
 //! * [`CostMemo`] — the historical single-owner memo, still used by
-//!   [`CostModel::evaluate_batch`] (the non-streaming reference pipeline)
-//!   and by [`CostModel::evaluate`], which routes through the same
-//!   [`CostModel::evaluate_memo`] path with a throwaway memo.
+//!   [`CostModel::evaluate_batch`] (standalone batch scoring in benches and
+//!   tests) and by [`CostModel::evaluate`], which routes through the same
+//!   [`CostModel::evaluate_memo`] path with a throwaway memo. The search
+//!   pipeline itself always scores through the shared memo below.
 //! * [`SharedCostMemo`] — a sharded, lock-striped concurrent memo owned by
 //!   the coordinator's `ScoringCore` through a [`MemoRegistry`]. One memo
 //!   is shared across worker chunks, across every round of the mode-2/3 and
@@ -697,11 +698,19 @@ impl MemoRegistry {
     /// Every live scope `(key, memo)`, sorted by key so spills enumerate
     /// deterministically whatever the arrival order was.
     pub fn export_scopes(&self) -> Vec<(u64, Arc<SharedCostMemo>)> {
+        self.export_scopes_with_recency().into_iter().map(|(k, _, m)| (k, m)).collect()
+    }
+
+    /// [`Self::export_scopes`] with each scope's LRU clock value
+    /// (`last_use`): the byte-budgeted spill path drops least-recently-used
+    /// scopes first, and the logical clock is the same deterministic
+    /// recency order eviction uses. Sorted by key.
+    pub fn export_scopes_with_recency(&self) -> Vec<(u64, u64, Arc<SharedCostMemo>)> {
         let scopes = self.scopes.lock().unwrap();
-        let mut v: Vec<(u64, Arc<SharedCostMemo>)> =
-            scopes.iter().map(|(k, _, m)| (*k, m.clone())).collect();
+        let mut v: Vec<(u64, u64, Arc<SharedCostMemo>)> =
+            scopes.iter().map(|(k, t, m)| (*k, *t, m.clone())).collect();
         drop(scopes);
-        v.sort_unstable_by_key(|&(k, _)| k);
+        v.sort_unstable_by_key(|&(k, _, _)| k);
         v
     }
 

@@ -22,9 +22,11 @@
 //!   forest inference and batched pipeline-time evaluation.
 //!
 //! The [`runtime`] module loads the AOT artifacts through PJRT so that no
-//! Python runs on the search path. The [`coordinator`] can score strategies
-//! either with the `native` pure-rust engine or the `hlo` engine; both
-//! implement identical math (parity-tested).
+//! Python runs on the search path. The [`coordinator`] compiles every
+//! request mode into a search-plan IR ([`coordinator::SearchPlan`]) and
+//! runs it through one streaming executor; scoring uses either the
+//! `native` pure-rust engine or the `hlo` engine — both implement
+//! identical math (parity-tested) behind the same pipeline.
 //!
 //! ## Quickstart
 //!

@@ -57,6 +57,7 @@ fn main() {
     .opt("cache-ttl-secs", "service cache TTL in seconds (0 = none)", Some("0"))
     .opt("warm-dir", "directory for the warm-start snapshot (serve/stats)", None)
     .opt("warm-spill-every", "spill after every N admissions (0 = shutdown only)", Some("32"))
+    .opt("warm-max-bytes", "snapshot byte budget; LRU scopes dropped first (0 = unlimited)", Some("0"))
     .opt("warm-load", "restore a warm snapshot before searching (search)", None)
     .opt("warm-save", "spill the memo to a snapshot after searching (search)", None)
     .flag("warm-no-cache", "persist memo scopes only, not the result cache (serve)")
@@ -64,7 +65,7 @@ fn main() {
     .flag("exhaustive", "exhaustive Eq.23 layer enumeration (hetero)")
     .flag("spot", "bill at spot rates instead of on-demand")
     .flag("no-prune", "disable branch-and-bound pool pruning (hetero-cost)")
-    .flag("no-streaming", "score through the reference collect-then-filter pipeline")
+    .flag("no-streaming", "serial oracle: execute the plan with workers=1 and wave=1")
     .flag("no-forest", "use analytic η instead of the trained GBDT")
     .flag("verbose", "debug logging");
     let args = cli.parse();
@@ -127,6 +128,7 @@ fn build_service(args: &astra::cli::Args, catalog: GpuCatalog) -> astra::Result<
         dir: args.get("warm-dir").map(std::path::PathBuf::from),
         spill_every: args.get_usize("warm-spill-every")? as u64,
         include_cache: !args.flag("warm-no-cache"),
+        max_snapshot_bytes: args.get_usize("warm-max-bytes")? as u64,
     };
     let service_cfg = ServiceConfig {
         cache,
@@ -324,7 +326,8 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
                     // Heat the memo with the flag-configured search, then
                     // spill — a prewarming tool for the serve fleet.
                     let report = engine.search(&req)?;
-                    let st = engine.core().save_warm(path)?;
+                    let budget = args.get_usize("warm-max-bytes")? as u64;
+                    let st = engine.core().save_warm_within(path, budget)?;
                     println!(
                         "warmed by 1 search ({} scored); spilled {} scope(s), {} bytes to {}",
                         report.scored,

@@ -66,6 +66,11 @@
 //!
 //! * [`crate::coordinator::ScoringCore::save_warm`] / `load_warm` — memo
 //!   scopes only (CLI `astra warm save|load`, `astra search --warm-*`).
+//!   `save_warm_within` / `export_warm_within` enforce an optional
+//!   `max_snapshot_bytes` budget: scope sections are sized individually and
+//!   least-recently-used scopes are dropped first (counted in the
+//!   `persist_scopes_dropped` stats counter) so a bounded snapshot keeps
+//!   the hottest warmth.
 //! * [`crate::service::SearchService::spill_warm`] / `restore_warm` — memo
 //!   scopes plus the result cache (`astra serve --warm-dir`, spilled every
 //!   N admissions and on clean shutdown, restored on boot).
@@ -293,6 +298,8 @@ pub struct PersistCounters {
     scopes_spilled: AtomicU64,
     scopes_restored: AtomicU64,
     scopes_rejected: AtomicU64,
+    /// Scopes left out of budgeted spills (`max_snapshot_bytes`), LRU first.
+    scopes_dropped: AtomicU64,
     bytes_on_disk: AtomicU64,
     cache_spilled: AtomicU64,
     cache_restored: AtomicU64,
@@ -317,6 +324,11 @@ impl PersistCounters {
         self.cache_restored.fetch_add(entries, Ordering::Relaxed);
     }
 
+    /// Scopes a byte-budgeted spill left out (least-recently-used first).
+    pub fn note_scopes_dropped(&self, scopes: u64) {
+        self.scopes_dropped.fetch_add(scopes, Ordering::Relaxed);
+    }
+
     /// Update the on-disk size gauge from a freshly *read* snapshot, so
     /// `persist_bytes` is meaningful right after a restore-on-boot (not
     /// only after the first spill).
@@ -329,6 +341,7 @@ impl PersistCounters {
             scopes_spilled: self.scopes_spilled.load(Ordering::Relaxed),
             scopes_restored: self.scopes_restored.load(Ordering::Relaxed),
             scopes_rejected: self.scopes_rejected.load(Ordering::Relaxed),
+            scopes_dropped: self.scopes_dropped.load(Ordering::Relaxed),
             bytes_on_disk: self.bytes_on_disk.load(Ordering::Relaxed),
             cache_entries_spilled: self.cache_spilled.load(Ordering::Relaxed),
             cache_entries_restored: self.cache_restored.load(Ordering::Relaxed),
@@ -342,6 +355,8 @@ pub struct PersistSnapshot {
     pub scopes_spilled: u64,
     pub scopes_restored: u64,
     pub scopes_rejected: u64,
+    /// Scopes dropped from budgeted spills (`max_snapshot_bytes`), LRU first.
+    pub scopes_dropped: u64,
     pub bytes_on_disk: u64,
     pub cache_entries_spilled: u64,
     pub cache_entries_restored: u64,
@@ -389,7 +404,7 @@ impl WarmWriter {
             .set("book", hex64(meta.book))
     }
 
-    fn push_row(&mut self, t: &str, k: &[u64], v: &[u64; 3], sum: &mut Fnv64) {
+    fn push_row_to(out: &mut String, t: &str, k: &[u64], v: &[u64; 3], sum: &mut Fnv64) {
         for &x in k {
             sum.field_u64("k", x);
         }
@@ -398,32 +413,65 @@ impl WarmWriter {
         }
         let kv: Vec<Value> = k.iter().map(|&x| Value::from(x)).collect();
         let vv: Vec<Value> = v.iter().map(|&x| Value::Str(hex64(x))).collect();
-        self.push_line(&Value::obj().set("t", t).set("k", Value::Arr(kv)).set("v", Value::Arr(vv)));
+        out.push_str(&json::to_string(
+            &Value::obj().set("t", t).set("k", Value::Arr(kv)).set("v", Value::Arr(vv)),
+        ));
+        out.push('\n');
+    }
+
+    /// One memo scope rendered standalone — header, sorted rows, checksummed
+    /// footer — so the byte-budgeted spill path
+    /// ([`crate::coordinator::ScoringCore::export_warm_within`]) can size a
+    /// section before committing it to a snapshot.
+    pub fn memo_scope_section(key: u64, rows: &MemoRows, meta: &EngineMeta) -> String {
+        let mut out = String::new();
+        let header = Self::meta_header(meta, "memo")
+            .set("key", hex64(key))
+            .set("stage_rows", rows.stages.len())
+            .set("sync_rows", rows.syncs.len());
+        out.push_str(&json::to_string(&Value::obj().set("scope", header)));
+        out.push('\n');
+        let mut sum = Fnv64::new();
+        for (k, v) in &rows.stages {
+            Self::push_row_to(&mut out, "stage", k, v, &mut sum);
+        }
+        for (k, v) in &rows.syncs {
+            Self::push_row_to(&mut out, "sync", k, v, &mut sum);
+        }
+        out.push_str(&json::to_string(
+            &Value::obj()
+                .set("end", hex64(key))
+                .set("rows", rows.stages.len() + rows.syncs.len())
+                .set("sum", hex64(sum.finish())),
+        ));
+        out.push('\n');
+        out
+    }
+
+    /// Append a section produced by [`Self::memo_scope_section`].
+    pub fn push_memo_section(&mut self, section: &str) {
+        self.out.push_str(section);
+        self.scopes += 1;
     }
 
     /// One memo scope: header, sorted rows (the caller exports them via
     /// [`crate::cost::SharedCostMemo::export_rows`], which drains the
     /// stripe locks shard by shard), checksummed footer.
     pub fn memo_scope(&mut self, key: u64, rows: &MemoRows, meta: &EngineMeta) {
-        let header = Self::meta_header(meta, "memo")
-            .set("key", hex64(key))
-            .set("stage_rows", rows.stages.len())
-            .set("sync_rows", rows.syncs.len());
-        self.push_line(&Value::obj().set("scope", header));
-        let mut sum = Fnv64::new();
-        for (k, v) in &rows.stages {
-            self.push_row("stage", k, v, &mut sum);
-        }
-        for (k, v) in &rows.syncs {
-            self.push_row("sync", k, v, &mut sum);
-        }
-        self.push_line(
-            &Value::obj()
-                .set("end", hex64(key))
-                .set("rows", rows.stages.len() + rows.syncs.len())
-                .set("sum", hex64(sum.finish())),
-        );
-        self.scopes += 1;
+        let section = Self::memo_scope_section(key, rows, meta);
+        self.push_memo_section(&section);
+    }
+
+    /// Serialized size so far (file header plus appended sections) — the
+    /// byte-budget accounting input.
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Never true (the file header is written at construction); present to
+    /// satisfy the `len`/`is_empty` API convention.
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
     }
 
     /// The result-cache section: one row per entry, fingerprint + the

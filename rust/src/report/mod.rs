@@ -139,8 +139,8 @@ pub fn scored_strategy_json(
 /// (wall times, memo hit/miss counters), which legitimately vary run to
 /// run. Two searches that select identically serialize byte-identically
 /// here; the determinism and differential test suites compare exactly this
-/// string across worker counts, sweep-wave sizes and the
-/// streaming-vs-reference pipelines.
+/// string across worker counts, sweep-wave sizes and the parallel executor
+/// vs the serial workers=1/wave=1 oracle.
 pub fn report_json(
     r: &crate::coordinator::SearchReport,
     catalog: &crate::gpu::GpuCatalog,

@@ -249,9 +249,10 @@ fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
     .field_f64("money.train_tokens", cfg.money.train_tokens)
     .field_bool("hetero_exhaustive", cfg.hetero_exhaustive)
     .field_bool("money_prune", cfg.money_prune)
-    // `streaming` selects picks-identical pipelines, but the report's memo
-    // counters differ (the reference path reports zeros) — like
-    // `money_prune`'s pruning counts, that makes it part of the key.
+    // `streaming` is a compatibility flag (it maps to the serial
+    // workers=1/wave=1 plan, same executor, identical result bytes) but it
+    // stays in the key so fingerprints are stable across the refactor that
+    // retired the old reference pipeline.
     .field_bool("streaming", cfg.streaming)
     .field_usize("top_k", cfg.top_k);
     hash_book(h, &cfg.money.book);

@@ -61,11 +61,16 @@ pub struct WarmConfig {
     pub spill_every: u64,
     /// Also spill the sharded result cache (not just the memo scopes).
     pub include_cache: bool,
+    /// Snapshot byte budget for the memo scopes (0 = unlimited): when the
+    /// serialized scopes would exceed it, least-recently-used scopes are
+    /// dropped first (counted in `persist_scopes_dropped`). The cache
+    /// section, when included, is written after the budgeted scopes.
+    pub max_snapshot_bytes: u64,
 }
 
 impl Default for WarmConfig {
     fn default() -> Self {
-        WarmConfig { dir: None, spill_every: 32, include_cache: true }
+        WarmConfig { dir: None, spill_every: 32, include_cache: true, max_snapshot_bytes: 0 }
     }
 }
 
@@ -263,7 +268,7 @@ impl SearchService {
             std::fs::create_dir_all(dir)?;
         }
         let mut w = persist::WarmWriter::new();
-        self.core.export_warm(&mut w);
+        self.core.export_warm_within(&mut w, self.config.warm.max_snapshot_bytes);
         if self.config.warm.include_cache {
             let entries = self.cache.export_entries();
             w.cache_section(&entries, &self.core.catalog, self.core.engine_meta());

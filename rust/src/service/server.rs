@@ -326,6 +326,7 @@ pub fn stats_json(service: &SearchService) -> Value {
             .set("persist_scopes_spilled", p.scopes_spilled)
             .set("persist_scopes_restored", p.scopes_restored)
             .set("persist_scopes_rejected", p.scopes_rejected)
+            .set("persist_scopes_dropped", p.scopes_dropped)
             .set("persist_bytes", p.bytes_on_disk)
             .set("persist_cache_spilled", p.cache_entries_spilled)
             .set("persist_cache_restored", p.cache_entries_restored))

@@ -1,13 +1,18 @@
-//! Determinism pins for the parallel search pipeline: the canonical report
-//! JSON ([`astra::report::report_json`] — counts, pruning statistics,
-//! ranked `top`, full Pareto pool; observability fields excluded) must be
-//! byte-identical across worker counts, across repeated runs, and across
-//! hetero-cost sweep schedules. The streaming scorer's fan-out
-//! (`par_for_indices`) returns pool outcomes in task order and the wave
-//! sweep replays its pruning decisions serially, so *nothing* about thread
-//! timing may reach the result.
+//! Determinism pins for the plan compiler and the streaming executor:
+//!
+//! * the canonical report JSON ([`astra::report::report_json`] — counts,
+//!   pruning statistics, ranked `top`, full Pareto pool; observability
+//!   fields excluded) must be byte-identical across worker counts, across
+//!   repeated runs, and across hetero-cost sweep schedules — the
+//!   executor's fan-out (`par_for_indices`) returns pool outcomes in task
+//!   order and the wave sweep replays its pruning decisions serially, so
+//!   *nothing* about thread timing may reach the result;
+//! * the compiled [`astra::coordinator::SearchPlan`] itself must be
+//!   byte-identical ([`astra::coordinator::plan_json`]) across repeats and
+//!   worker counts — compilation is pure, and `workers` never enters a
+//!   plan.
 
-use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+use astra::coordinator::{plan_json, AstraEngine, EngineConfig, ScoringCore, SearchRequest};
 use astra::gpu::GpuCatalog;
 use astra::model::ModelRegistry;
 use astra::report::report_json;
@@ -66,8 +71,9 @@ fn requests() -> Vec<(&'static str, SearchRequest)> {
 }
 
 /// workers=1 vs workers=N: byte-identical canonical reports on every mode,
-/// for both the streaming and the reference pipelines. Fresh engines per
-/// run so memo state cannot differ either.
+/// with the streaming flag in both positions (`false` = the serial-oracle
+/// compatibility mapping). Fresh engines per run so memo state cannot
+/// differ either.
 #[test]
 fn workers_do_not_change_report_json() {
     for streaming in [true, false] {
@@ -109,5 +115,40 @@ fn repeat_runs_on_one_engine_are_byte_identical() {
         let first = canon(&eng, &req);
         let second = canon(&eng, &req);
         assert_eq!(first, second, "mode {name}: repeat run drifted");
+    }
+}
+
+/// Plan-level matrix: the same request compiles to a byte-identical
+/// [`astra::coordinator::SearchPlan`] across repeats and worker counts, on
+/// every mode. (Wave knobs *are* part of the plan — they are pinned by the
+/// golden plan snapshots instead — but `workers` must never enter it.)
+#[test]
+fn plan_compilation_is_deterministic_and_worker_invariant() {
+    let cat = GpuCatalog::builtin();
+    let core = |workers: usize| {
+        ScoringCore::new(
+            cat.clone(),
+            EngineConfig {
+                use_forests: false,
+                workers,
+                space: small_space(),
+                ..Default::default()
+            },
+        )
+    };
+    for (name, req) in requests() {
+        let base_core = core(1);
+        let plan = |c: &ScoringCore| {
+            astra::json::to_string(&plan_json(&c.compile_plan(&req).unwrap(), &cat))
+        };
+        let base = plan(&base_core);
+        assert_eq!(base, plan(&base_core), "mode {name}: repeat compile drifted");
+        for workers in [2, 8] {
+            assert_eq!(
+                base,
+                plan(&core(workers)),
+                "mode {name}: workers={workers} changed the compiled plan"
+            );
+        }
     }
 }

@@ -1,8 +1,11 @@
-//! Differential harness for the shared-memo streaming scorer: the fast
-//! path (`streaming: true`, fused per-pool passes over a `SharedCostMemo`,
-//! speculative-wave hetero-cost sweep) must select **exactly** what the
-//! pre-refactor reference path (`streaming: false`, collect → filter →
-//! score with per-chunk memos) selects, on every search mode.
+//! Differential harness for the plan executor: any parallel configuration
+//! (workers > 1, speculative waves, adaptive schedule) must select
+//! **exactly** what the strictly serial oracle selects, on every search
+//! mode. The oracle is the `workers = 1, wave = 1/1` execution of the same
+//! [`astra::coordinator::SearchPlan`] — since the pre-refactor reference
+//! pipeline was retired, `EngineConfig::streaming = false` *is* that
+//! oracle (it compiles the identical plan with the wave pinned to 1/1 and
+//! executes single-worker), which the flag-compatibility test pins.
 //!
 //! Comparison is on [`astra::report::report_json`] — the canonical result
 //! view (counts, pruning statistics, ranked `top`, full Pareto pool) with
@@ -47,6 +50,21 @@ fn engine_with(streaming: bool, workers: usize, sweep_wave: usize) -> AstraEngin
     )
 }
 
+/// The strictly serial oracle: one worker, wave pinned to 1/1.
+fn oracle_engine() -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig {
+            use_forests: false,
+            workers: 1,
+            sweep_wave: 1,
+            sweep_wave_max: 1,
+            space: small_space(),
+            ..Default::default()
+        },
+    )
+}
+
 fn canon(report: &SearchReport) -> String {
     astra::json::to_string(&report_json(report, &GpuCatalog::builtin()))
 }
@@ -74,17 +92,37 @@ fn requests() -> Vec<(&'static str, SearchRequest)> {
     ]
 }
 
-/// The acceptance differential: fast path == slow path, every mode,
-/// byte-for-byte over counts, `top` and the Pareto pool (which covers the
-/// `budget_pick` promotion — it reorders `top[0]`).
+/// The acceptance differential: parallel executor == serial oracle, every
+/// mode, byte-for-byte over counts, `top` and the Pareto pool (which
+/// covers the `budget_pick` promotion — it reorders `top[0]`).
 #[test]
-fn streaming_selects_exactly_what_reference_selects() {
+fn parallel_executor_selects_exactly_what_serial_oracle_selects() {
     let fast = engine_with(true, 4, 2);
-    let slow = engine_with(false, 4, 2);
+    let oracle = oracle_engine();
     for (name, req) in requests() {
         let a = fast.search(&req).unwrap();
-        let b = slow.search(&req).unwrap();
-        assert_eq!(canon(&a), canon(&b), "mode {name}: fast path diverged from reference");
+        let b = oracle.search(&req).unwrap();
+        assert_eq!(canon(&a), canon(&b), "mode {name}: executor diverged from serial oracle");
+    }
+}
+
+/// `streaming: false` is the oracle spelled as a compatibility flag: it
+/// must compile a 1/1-wave plan and reproduce the oracle's bytes exactly —
+/// whatever workers/wave the config asks for (the executor overrides them).
+#[test]
+fn no_streaming_flag_is_the_serial_oracle() {
+    let flagged = engine_with(false, 8, 64);
+    let oracle = oracle_engine();
+    for (name, req) in requests() {
+        let plan = flagged.core().compile_plan(&req).unwrap();
+        assert_eq!(
+            (plan.wave_base, plan.wave_max),
+            (1, 1),
+            "mode {name}: streaming=false must pin the serial wave"
+        );
+        let a = flagged.search(&req).unwrap();
+        let b = oracle.search(&req).unwrap();
+        assert_eq!(canon(&a), canon(&b), "mode {name}: streaming=false diverged from oracle");
     }
 }
 
@@ -124,7 +162,7 @@ fn hetero_cost_wave_sizes_are_byte_identical() {
     let cheap = free.pool.entries().last().expect("empty frontier").cost;
     for budget in [cheap * 1.05, cheap * 2.0, f64::INFINITY] {
         let req = SearchRequest::hetero_cost(&caps, budget, model.clone()).unwrap();
-        let serial = engine_with(true, 4, 1).search(&req).unwrap();
+        let serial = oracle_engine().search(&req).unwrap();
         if budget.is_finite() {
             assert!(serial.pruned_pools > 0, "budget ${budget} pruned nothing — weak test");
         }
@@ -140,8 +178,8 @@ fn hetero_cost_wave_sizes_are_byte_identical() {
                 "wave {wave}, budget ${budget}: wave sweep diverged from serial"
             );
         }
-        // And the whole family agrees with the unpruned streaming and the
-        // non-streaming references on the canonical result.
+        // And the whole family agrees with the unpruned executor on the
+        // canonical pick (pruning soundness).
         let unpruned = AstraEngine::new(
             GpuCatalog::builtin(),
             EngineConfig {
@@ -158,7 +196,7 @@ fn hetero_cost_wave_sizes_are_byte_identical() {
             r.pool.best_within_budget(budget).map(|e| (e.throughput.to_bits(), e.cost.to_bits()))
         };
         assert_eq!(pick(&serial), pick(&unpruned), "budget ${budget}: pruning changed the pick");
-        let reference = engine_with(false, 4, 1).search(&req).unwrap();
-        assert_eq!(canon(&serial), canon(&reference), "budget ${budget}: fast != reference");
+        let flagged = engine_with(false, 4, 1).search(&req).unwrap();
+        assert_eq!(canon(&serial), canon(&flagged), "budget ${budget}: oracle != streaming:false");
     }
 }

@@ -1,0 +1,141 @@
+//! Golden snapshots of compiled [`astra::coordinator::SearchPlan`]s: one
+//! fixed request per mode compiles to a canonical [`plan_json`] document
+//! that must byte-match the checked-in snapshot under
+//! `rust/tests/golden/plan_<mode>.json` — so plan-compilation regressions
+//! (pool enumeration order, sweep totals, bounds, space pinning) are
+//! caught without running a single search.
+//!
+//! ## Regeneration
+//!
+//! After an *intentional* compiler change:
+//!
+//! ```text
+//! ASTRA_REGEN_GOLDEN=1 cargo test --test golden_plan
+//! git diff rust/tests/golden/plan_*.json   # review, then commit
+//! ```
+//!
+//! Missing snapshots (fresh checkout state) bootstrap in place and pass
+//! with a notice — commit the generated files to arm the byte-match.
+
+use astra::coordinator::{plan_json, EngineConfig, ScoringCore, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::strategy::SpaceConfig;
+use std::path::PathBuf;
+
+/// Deterministic compiler: analytic η (no forest dependence), a tiny fixed
+/// space so snapshots stay small and reviewable.
+fn core() -> ScoringCore {
+    let space = SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 2,
+        mbs_candidates: vec![1],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    };
+    ScoringCore::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, space, ..Default::default() },
+    )
+}
+
+fn requests() -> Vec<(&'static str, SearchRequest)> {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    vec![
+        ("homogeneous", SearchRequest::homogeneous("a800", 8, model.clone()).unwrap()),
+        (
+            "heterogeneous",
+            SearchRequest::heterogeneous(&[("a800", 4), ("h100", 4)], 8, model.clone())
+                .unwrap(),
+        ),
+        ("cost", SearchRequest::cost("a800", 8, 1e5, model.clone()).unwrap()),
+        (
+            "hetero_cost",
+            SearchRequest::hetero_cost(&[("a800", 4), ("h100", 4)], 1e5, model).unwrap(),
+        ),
+    ]
+}
+
+fn golden_dir() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for rel in ["tests/golden", "rust/tests/golden"] {
+        let dir = manifest.join(rel);
+        if dir.is_dir() {
+            return dir;
+        }
+    }
+    manifest.join("tests/golden")
+}
+
+fn render(mode: &str) -> String {
+    let c = core();
+    let req = requests().into_iter().find(|(m, _)| *m == mode).unwrap().1;
+    let plan = c.compile_plan(&req).expect("compile");
+    astra::json::to_string_pretty(&plan_json(&plan, &c.catalog))
+}
+
+#[test]
+fn plan_snapshots_match_golden() {
+    let regen = std::env::var("ASTRA_REGEN_GOLDEN").as_deref() == Ok("1");
+    for (mode, _) in requests() {
+        let got = render(mode);
+
+        // Shape assertions that hold regardless of the snapshot state.
+        let v = astra::json::parse(&got).unwrap();
+        assert_eq!(v.get("astra_plan").and_then(astra::json::Value::as_u64), Some(1));
+        assert!(
+            v.get("pool_count").and_then(astra::json::Value::as_usize).unwrap() > 0,
+            "{mode}: plan compiled no pools"
+        );
+
+        let path = golden_dir().join(format!("plan_{mode}.json"));
+        if regen || !path.exists() {
+            let write = std::fs::create_dir_all(path.parent().unwrap())
+                .and_then(|_| std::fs::write(&path, &got));
+            match write {
+                Ok(()) => eprintln!(
+                    "golden_plan: {} snapshot at {} — commit it to arm the byte-match",
+                    if regen { "regenerated" } else { "bootstrapped" },
+                    path.display()
+                ),
+                Err(e) => {
+                    eprintln!("golden_plan: SKIP byte-match (cannot write {}: {e})", path.display())
+                }
+            }
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        if got != want {
+            for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+                assert_eq!(
+                    g, w,
+                    "{mode}: plan snapshot line {i} diverged from {} — if the change is \
+                     intentional, regenerate with ASTRA_REGEN_GOLDEN=1 (see module docs)",
+                    path.display()
+                );
+            }
+            panic!(
+                "{mode}: plan snapshot length changed ({} vs {} lines) — regenerate with \
+                 ASTRA_REGEN_GOLDEN=1 if intentional",
+                got.lines().count(),
+                want.lines().count()
+            );
+        }
+    }
+}
+
+/// The snapshot surface itself must be replay-stable: two fresh cores
+/// compile byte-identical documents (pins compiler nondeterminism even
+/// while snapshots are in their bootstrapped first-run state).
+#[test]
+fn plan_snapshots_are_deterministic_across_cores() {
+    for (mode, _) in requests() {
+        assert_eq!(render(mode), render(mode), "{mode}: plan snapshot is not replay-stable");
+    }
+}

@@ -192,6 +192,7 @@ fn warm_service(dir: &std::path::Path, spill_every: u64) -> SearchService {
                 dir: Some(dir.to_path_buf()),
                 spill_every,
                 include_cache: true,
+                max_snapshot_bytes: 0,
             },
             ..Default::default()
         },
@@ -283,6 +284,7 @@ fn service_cache_survives_a_restart() {
                 dir: Some(dir.clone()),
                 spill_every: 0,
                 include_cache: false,
+                max_snapshot_bytes: 0,
             },
             ..Default::default()
         },
@@ -318,6 +320,92 @@ fn spill_every_n_admissions_writes_in_the_background() {
     let p = svc.core().persist_stats();
     assert_eq!(p.scopes_spilled, 2);
     assert!(std::fs::metadata(&path).unwrap().len() > first_spill);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `max_snapshot_bytes`: a budgeted spill drops least-recently-used scopes
+/// first, counts them, and what survives still restores bit-exactly.
+#[test]
+fn snapshot_byte_budget_drops_lru_scopes_first() {
+    let reg = ModelRegistry::builtin();
+    let m7 = reg.get("llama2-7b").unwrap().clone();
+    let m8 = reg.get("llama3-8b").unwrap().clone();
+    let req7 = SearchRequest::homogeneous("a800", 8, m7).unwrap();
+    let req8 = SearchRequest::homogeneous("a800", 8, m8).unwrap();
+
+    // Heat two model scopes in a known recency order: 7b first, 8b last —
+    // so the llama3-8b scope is the most recently used.
+    let eng = engine();
+    eng.search(&req7).unwrap();
+    eng.search(&req8).unwrap();
+
+    let full_path = tmppath("budget_full");
+    let full = eng.core().save_warm(&full_path).unwrap();
+    let _ = std::fs::remove_file(&full_path);
+    assert_eq!(full.scopes, 2, "two model scopes expected");
+
+    // One byte under the full size: the most-recent scope that fits is
+    // kept, the LRU one is dropped and counted.
+    let capped_path = tmppath("budget_capped");
+    let capped = eng.core().save_warm_within(&capped_path, full.bytes - 1).unwrap();
+    assert_eq!(capped.scopes, 1, "budget must drop exactly the LRU scope");
+    assert!(capped.bytes < full.bytes);
+    let p = eng.core().persist_stats();
+    assert_eq!(p.scopes_dropped, 1, "dropped scope must be counted");
+
+    // The surviving scope is the most recently used (llama3-8b): a fresh
+    // engine restoring the capped snapshot runs that search with zero
+    // misses while the 7b search starts cold.
+    let fresh = engine();
+    let st = fresh.core().load_warm(&capped_path).unwrap();
+    let _ = std::fs::remove_file(&capped_path);
+    assert_eq!((st.scopes_restored, st.scopes_rejected), (1, 0));
+    let warm8 = fresh.search(&req8).unwrap();
+    assert_eq!(warm8.memo_misses, 0, "kept scope must be the most recently used (llama3-8b)");
+    let cold7 = fresh.search(&req7).unwrap();
+    assert!(cold7.memo_misses > 0, "dropped scope must start cold");
+
+    // A budget below even the file header + smallest scope keeps nothing,
+    // but the snapshot stays well-formed (restores to a clean cold start).
+    let tiny_path = tmppath("budget_tiny");
+    let tiny = eng.core().save_warm_within(&tiny_path, 32).unwrap();
+    assert_eq!(tiny.scopes, 0);
+    let st = engine().core().load_warm(&tiny_path).unwrap();
+    let _ = std::fs::remove_file(&tiny_path);
+    assert_eq!((st.scopes_restored, st.scopes_rejected), (0, 0));
+
+    // The counter surfaces on the service stats line.
+    let dir = std::env::temp_dir().join(format!("astra_warm_budget_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let core = astra::coordinator::ScoringCore::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, space: small_space(), ..Default::default() },
+    );
+    let svc = SearchService::new(
+        core,
+        ServiceConfig {
+            warm: WarmConfig {
+                dir: Some(dir.clone()),
+                spill_every: 0,
+                include_cache: false,
+                // Comfortably below one serialized scope, forcing a drop.
+                max_snapshot_bytes: 256,
+            },
+            ..Default::default()
+        },
+    );
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    svc.handle(&SearchRequest::homogeneous("a800", 8, model).unwrap()).unwrap();
+    svc.spill_warm().unwrap().expect("warm dir configured");
+    let stats = astra::service::server::stats_json(&svc);
+    assert!(
+        stats
+            .pointer("/stats/persist_scopes_dropped")
+            .and_then(astra::json::Value::as_u64)
+            .unwrap()
+            >= 1,
+        "budget drops must surface on the stats line"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 
