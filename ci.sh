@@ -26,8 +26,10 @@
 #
 # Tier-1 also runs a persistence roundtrip through the release binary
 # (astra warm save → search --warm-load → diff of the canonical --json
-# reports against a cold search); skipped under FAST=1 since it needs the
-# release build.
+# reports against a cold search) and a trace smoke (search --trace must
+# emit a valid, ts-monotonic Chrome-trace JSONL while leaving the --json
+# report byte-identical to an untraced run); both are skipped under
+# FAST=1 since they need the release build.
 #
 #   ./ci.sh            # tier-1 gate
 #   FAST=1 ./ci.sh     # tier-1 minus the release build (debug tests only)
@@ -79,6 +81,20 @@ if [ "${FAST:-0}" != "1" ]; then
   run diff "$WARMTMP/cold.json" "$WARMTMP/restored.json"
   rm -rf "$WARMTMP"
   echo "ci.sh: persistence roundtrip ok (cold == restored, 1 scope imported)" >&2
+
+  # --- tier-1 trace smoke: flight recorder must not change the picks ---
+  # Run the same search untraced and traced; the canonical --json reports
+  # must be byte-identical, and the trace file must pass trace-check
+  # (every line valid JSON, `ts` nondecreasing).
+  TRACETMP="$(mktemp -d)"
+  "$BIN" search --model llama2-7b --gpu a800 --gpus 8 --json > "$TRACETMP/plain.json"
+  "$BIN" search --model llama2-7b --gpu a800 --gpus 8 --json \
+      --trace "$TRACETMP/t.jsonl" > "$TRACETMP/traced.json"
+  run diff "$TRACETMP/plain.json" "$TRACETMP/traced.json"
+  run test -s "$TRACETMP/t.jsonl"
+  run "$BIN" trace-check "$TRACETMP/t.jsonl"
+  rm -rf "$TRACETMP"
+  echo "ci.sh: trace smoke ok (traced report identical, trace valid and monotonic)" >&2
 fi
 
 if [ "${TIER2:-0}" = "1" ]; then

@@ -15,6 +15,10 @@
 //!   hit-rate drops below this floor (the `BENCH=1 ./ci.sh` gate);
 //! * `ASTRA_BENCH_MIN_RESTORE_HIT_RATE=<0..1>` — same floor for the
 //!   *warm_restore* leg (restore must actually skip the cold pass);
+//! * `ASTRA_BENCH_MAX_TRACE_OVERHEAD=<ratio>` — exit nonzero if the
+//!   *telemetry_overhead* leg (cold search with the flight recorder
+//!   streaming vs the untraced cold leg) exceeds this fractional slowdown
+//!   (e.g. `0.05` = 5%);
 //! * `ASTRA_BENCH_MIN_HLO_PARITY=<0..1>` — run the HLO-parity smoke on the
 //!   fig5 workload (llama2-7b, homogeneous a800): the HLO engine's
 //!   streamed per-pool path must pick the same strategy as the native
@@ -168,6 +172,26 @@ fn main() {
     let oracle_secs = t.elapsed().as_secs_f64();
     println!("serial: {oracle_secs:.3}s  (workers=1/wave=1 oracle execution)");
 
+    // Telemetry: the same cold workload with the flight recorder streaming
+    // span events — the opt-in cost of turning tracing on. (Tracing *off*
+    // costs one relaxed atomic load per guard; this leg bounds the *on*
+    // path against the untraced cold leg above.)
+    let trace_file =
+        std::env::temp_dir().join(format!("astra_trace_bench_{}.jsonl", std::process::id()));
+    astra::telemetry::trace::enable(&trace_file).unwrap();
+    let t = Instant::now();
+    let traced_rep = engine().search(&req).unwrap();
+    let traced_secs = t.elapsed().as_secs_f64();
+    astra::telemetry::trace::disable();
+    let trace_events =
+        std::fs::read_to_string(&trace_file).map(|s| s.lines().count()).unwrap_or(0);
+    let _ = std::fs::remove_file(&trace_file);
+    let trace_overhead = traced_secs / cold_secs.max(1e-12) - 1.0;
+    println!(
+        "trace: {traced_secs:.3}s with the recorder on ({trace_events} span(s), {:+.1}% vs cold)",
+        100.0 * trace_overhead
+    );
+
     let speedup = cold_secs / warm_secs.max(1e-12);
     println!(
         "memo-warm speedup: {speedup:.2}×  ({cold_secs:.3}s → {warm_secs:.3}s); \
@@ -182,6 +206,7 @@ fn main() {
     assert_eq!(best(&cold_rep), best(&warm_rep), "memo warmth changed the selection");
     assert_eq!(best(&cold_rep), best(&oracle_rep), "executor diverged from the serial oracle");
     assert_eq!(best(&cold_rep), best(&restore_rep), "restored memo changed the selection");
+    assert_eq!(best(&cold_rep), best(&traced_rep), "flight recorder changed the selection");
 
     let mut out = Value::obj()
         .set(
@@ -210,6 +235,12 @@ fn main() {
                 .set("snapshot_bytes", spill.bytes),
         )
         .set("oracle_serial", leg_json(&oracle_rep, oracle_secs))
+        .set(
+            "telemetry_overhead",
+            leg_json(&traced_rep, traced_secs)
+                .set("trace_events", trace_events)
+                .set("overhead_vs_cold", trace_overhead),
+        )
         .set("speedup_warm_vs_cold", speedup)
         .set("speedup_restore_vs_cold", cold_secs / restore_secs.max(1e-12));
 
@@ -308,6 +339,19 @@ fn main() {
             std::process::exit(1);
         }
         println!("restored memo hit-rate {got:.3} ≥ floor {floor:.3} — ok");
+    }
+
+    // Tracing is opt-in, but the opt-in must stay cheap: gate the on-vs-off
+    // slowdown when a cap is pinned.
+    if let Ok(cap) = std::env::var("ASTRA_BENCH_MAX_TRACE_OVERHEAD") {
+        let cap: f64 = cap.parse().expect("ASTRA_BENCH_MAX_TRACE_OVERHEAD must be a number");
+        if trace_overhead > cap {
+            eprintln!(
+                "perf_search: FAIL — tracing overhead {trace_overhead:.3} above cap {cap:.3}"
+            );
+            std::process::exit(1);
+        }
+        println!("tracing overhead {trace_overhead:.3} ≤ cap {cap:.3} — ok");
     }
 
     // HLO parity gate (only when the smoke actually ran — skips pass).

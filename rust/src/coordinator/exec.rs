@@ -40,8 +40,8 @@
 //!   per-pool packing scores exactly what whole-run packing scored;
 //!   `score_hlo`'s old detour through the reference path is gone.
 
-use super::plan::{PoolSpec, SearchPlan};
-use super::{ScoredStrategy, ScoringCore, SearchReport};
+use super::plan::{plan_json, PoolSpec, SearchPlan};
+use super::{PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport};
 use crate::cost::features::{pack_batch, OUT};
 use crate::cost::{CostBreakdown, MemoStats, SharedCostMemo};
 use crate::memory::MemoryModel;
@@ -67,6 +67,9 @@ struct PoolOutcome {
     scored: Vec<ScoredStrategy>,
     memo: MemoStats,
     filter_secs: f64,
+    /// Memory-filter slice of `filter_secs` (the phase breakdown splits the
+    /// fused pass into expand+rules vs memory-filter shares).
+    mem_secs: f64,
     score_secs: f64,
 }
 
@@ -78,6 +81,7 @@ struct FilteredPool {
     mem_filtered: usize,
     survivors: Vec<ParallelStrategy>,
     filter_secs: f64,
+    mem_secs: f64,
 }
 
 impl ScoringCore {
@@ -92,6 +96,7 @@ impl ScoringCore {
         t0: Instant,
     ) -> Result<SearchReport> {
         self.searches.fetch_add(1, Ordering::Relaxed);
+        crate::telemetry::counter_macro!("astra_searches_total").inc();
         let hlo_rt = match (self.config.engine, rt) {
             (super::ScoringEngine::Hlo, Some(rt)) => Some(rt),
             _ => None,
@@ -101,6 +106,19 @@ impl ScoringCore {
         let memo = if hlo_rt.is_none() { Some(self.memos.for_model(model)) } else { None };
         let workers = if self.config.streaming { self.config.workers } else { 1 };
 
+        // Flight-recorder context, computed only when the recorder is on —
+        // the disabled path pays one relaxed load per guard and nothing
+        // else. The plan id ties every span of this search together.
+        let trace = crate::telemetry::trace::enabled();
+        let plan_id = if trace {
+            crate::telemetry::trace::plan_id(&crate::json::to_string(&plan_json(
+                plan,
+                &self.catalog,
+            )))
+        } else {
+            String::new()
+        };
+
         let mut pruner = DominancePruner::new(plan.budget.unwrap_or(f64::INFINITY));
         let base_wave = plan.wave_base.max(1);
         let wave_cap = plan.wave_max.max(base_wave);
@@ -109,13 +127,24 @@ impl ScoringCore {
         let mut n_generated = 0usize;
         let mut rule_filtered = 0usize;
         let mut mem_filtered = 0usize;
-        let mut search_secs = t0.elapsed().as_secs_f64();
-        let mut simulate_secs = 0.0f64;
+        let mut phases = PhaseBreakdown { compile_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
         let mut memo_stats = MemoStats::default();
         let mut scored_all: Vec<ScoredStrategy> = Vec::new();
+        if trace {
+            crate::telemetry::trace::emit(
+                "compile",
+                "search",
+                phases.compile_secs,
+                crate::json::Value::obj()
+                    .set("plan", plan_id.as_str())
+                    .set("rounds", plan.rounds.len())
+                    .set("pools", plan.pool_count()),
+            );
+        }
 
         let mut next = 0usize;
         while next < plan.rounds.len() {
+            let round_base = next;
             let wave_rounds = &plan.rounds[next..plan.rounds.len().min(next + wave)];
             next += wave_rounds.len();
 
@@ -149,13 +178,14 @@ impl ScoringCore {
             let wall = t_run.elapsed().as_secs_f64();
 
             // Phase 3: deterministic serial replay of the admissions.
-            let (mut filter_busy, mut score_busy) = (0.0f64, 0.0f64);
+            let (mut filter_busy, mut mem_busy, mut score_busy) = (0.0f64, 0.0f64, 0.0f64);
             let mut flag_idx = 0usize;
             let mut oc_idx = 0usize;
             let mut wasted = 0usize;
-            for round in wave_rounds {
+            let mut wave_scored = 0usize;
+            for (ri, round) in wave_rounds.iter().enumerate() {
                 let mut round_scored: Vec<ScoredStrategy> = Vec::new();
-                for pool in &round.pools {
+                for (pi, pool) in round.pools.iter().enumerate() {
                     let spec = spec_flags[flag_idx];
                     flag_idx += 1;
                     let admit = !plan.prune || pruner.admit(pool.ub_tput, pool.lb_usd);
@@ -166,7 +196,22 @@ impl ScoringCore {
                     let oc = &mut outcomes[oc_idx];
                     oc_idx += 1;
                     filter_busy += oc.filter_secs;
+                    mem_busy += oc.mem_secs;
                     score_busy += oc.score_secs;
+                    if trace {
+                        crate::telemetry::trace::emit(
+                            "pool",
+                            "search",
+                            oc.filter_secs + oc.score_secs,
+                            crate::json::Value::obj()
+                                .set("plan", plan_id.as_str())
+                                .set("round", round_base + ri)
+                                .set("pool", pi)
+                                .set("generated", oc.generated)
+                                .set("scored", oc.scored.len())
+                                .set("admitted", admit),
+                        );
+                    }
                     if !admit {
                         // Speculation waste: scored in phase 2, pruned by
                         // the true frontier — dropped so the report matches
@@ -189,23 +234,83 @@ impl ScoringCore {
                         pruner.observe(s.cost.tokens_per_s, s.money_usd);
                     }
                 }
+                wave_scored += round_scored.len();
                 scored_all.extend(round_scored);
             }
 
-            // Split the wave's wall time between the filter and scoring
-            // phases in proportion to worker busy time — the fused pass has
-            // no phase barrier to time directly, but search + simulate
-            // still sums to the true wall clock.
+            // Split the wave's wall time across the pipeline phases in
+            // proportion to worker busy time — the fused pass has no phase
+            // barrier to time directly, but the phase breakdown (and so
+            // search + simulate, which are derived from it) still sums to
+            // the true wall clock. The HLO engine's scoring share is its
+            // pack+execute time; the native engine's is memo'd evaluation.
+            phases.speculate_secs += gen_secs;
             let busy = filter_busy + score_busy;
             if busy > 0.0 {
-                search_secs += gen_secs + wall * filter_busy / busy;
-                simulate_secs += wall * score_busy / busy;
+                let mem_share = mem_busy.min(filter_busy);
+                phases.expand_rules_secs += wall * (filter_busy - mem_share) / busy;
+                phases.mem_filter_secs += wall * mem_share / busy;
+                let score_share = wall * score_busy / busy;
+                if hlo_rt.is_some() {
+                    phases.hlo_pack_secs += score_share;
+                } else {
+                    phases.score_secs += score_share;
+                }
             } else {
-                search_secs += gen_secs + wall;
+                phases.expand_rules_secs += wall;
+            }
+            if trace {
+                let (h, m) = (memo_stats.hits, memo_stats.misses);
+                let hit_rate = if h + m > 0 { h as f64 / (h + m) as f64 } else { 0.0 };
+                crate::telemetry::trace::emit(
+                    "wave",
+                    "search",
+                    gen_secs + wall,
+                    crate::json::Value::obj()
+                        .set("plan", plan_id.as_str())
+                        .set("round", round_base)
+                        .set("rounds", wave_rounds.len())
+                        .set("wave", wave)
+                        .set("pools", tasks.len())
+                        .set("wasted", wasted)
+                        .set("scored", wave_scored)
+                        .set("memo_hit_rate", hit_rate),
+                );
             }
             // Adaptive schedule: grow while speculation is free, reset to
             // the base on the first wasted pool.
             wave = if wasted == 0 { (wave + 1).min(wave_cap) } else { base_wave };
+        }
+
+        // Registry + histogram recording (process-wide totals; the report
+        // itself stays per-search).
+        {
+            use crate::telemetry::{counter_macro, gauge_macro, histogram_macro};
+            counter_macro!("astra_strategies_generated_total").add(n_generated as u64);
+            counter_macro!("astra_strategies_scored_total").add(scored_all.len() as u64);
+            gauge_macro!("astra_memo_scopes").set(self.memos.scopes() as i64);
+            histogram_macro!("astra_search_e2e_seconds").observe(phases.total_secs());
+            histogram_macro!("astra_phase_compile_seconds").observe(phases.compile_secs);
+            histogram_macro!("astra_phase_speculate_seconds").observe(phases.speculate_secs);
+            histogram_macro!("astra_phase_expand_rules_seconds").observe(phases.expand_rules_secs);
+            histogram_macro!("astra_phase_mem_filter_seconds").observe(phases.mem_filter_secs);
+            histogram_macro!("astra_phase_score_seconds").observe(phases.score_secs);
+            histogram_macro!("astra_phase_hlo_pack_seconds").observe(phases.hlo_pack_secs);
+        }
+        if trace {
+            let (h, m) = (memo_stats.hits, memo_stats.misses);
+            let hit_rate = if h + m > 0 { h as f64 / (h + m) as f64 } else { 0.0 };
+            crate::telemetry::trace::emit(
+                "search",
+                "search",
+                phases.total_secs(),
+                crate::json::Value::obj()
+                    .set("plan", plan_id.as_str())
+                    .set("generated", n_generated)
+                    .set("scored", scored_all.len())
+                    .set("pruned_pools", pruner.pruned())
+                    .set("memo_hit_rate", hit_rate),
+            );
         }
 
         Ok(assemble_report(
@@ -213,8 +318,7 @@ impl ScoringCore {
             rule_filtered,
             mem_filtered,
             pruner.pruned(),
-            search_secs,
-            simulate_secs,
+            phases,
             plan.budget,
             plan.top_k,
             memo_stats,
@@ -250,7 +354,10 @@ impl ScoringCore {
                     oc.rule_filtered += 1;
                     return;
                 }
-                if !mem.fits(model, &s, catalog) {
+                let t_mem = Instant::now();
+                let fits = mem.fits(model, &s, catalog);
+                oc.mem_secs += t_mem.elapsed().as_secs_f64();
+                if !fits {
                     oc.mem_filtered += 1;
                     return;
                 }
@@ -290,6 +397,7 @@ impl ScoringCore {
                 mem_filtered: 0,
                 survivors: Vec::new(),
                 filter_secs: 0.0,
+                mem_secs: 0.0,
             };
             space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
                 fp.generated += 1;
@@ -297,7 +405,10 @@ impl ScoringCore {
                     fp.rule_filtered += 1;
                     return;
                 }
-                if !mem.fits(model, &s, catalog) {
+                let t_mem = Instant::now();
+                let fits = mem.fits(model, &s, catalog);
+                fp.mem_secs += t_mem.elapsed().as_secs_f64();
+                if !fits {
                     fp.mem_filtered += 1;
                     return;
                 }
@@ -316,6 +427,7 @@ impl ScoringCore {
                 rule_filtered: fp.rule_filtered,
                 mem_filtered: fp.mem_filtered,
                 filter_secs: fp.filter_secs,
+                mem_secs: fp.mem_secs,
                 ..Default::default()
             };
             let t_score = Instant::now();
@@ -358,15 +470,15 @@ impl ScoringCore {
 /// Pool construction + ranking tail shared by every plan. With a `budget`,
 /// the fastest within-budget plan is promoted to `top[0]` (Eq. 33
 /// selection) *before* truncation, so the pick survives even when `top_k`
-/// faster-but-over-budget plans exist.
+/// faster-but-over-budget plans exist. The wall fields are derived from
+/// the phase breakdown, so `phases` always sums to them exactly.
 #[allow(clippy::too_many_arguments)]
 fn assemble_report(
     generated: usize,
     rule_filtered: usize,
     mem_filtered: usize,
     pruned_pools: usize,
-    search_secs: f64,
-    simulate_secs: f64,
+    phases: PhaseBreakdown,
     budget: Option<f64>,
     top_k: usize,
     memo: MemoStats,
@@ -403,8 +515,9 @@ fn assemble_report(
         mem_filtered,
         scored: n_scored,
         pruned_pools,
-        search_secs,
-        simulate_secs,
+        search_secs: phases.search_secs(),
+        simulate_secs: phases.simulate_secs(),
+        phases,
         memo_hits: memo.hits,
         memo_misses: memo.misses,
         top: scored,

@@ -161,6 +161,64 @@ impl ScoredStrategy {
     }
 }
 
+/// Per-phase wall-time breakdown of one search — the `phases` section
+/// every [`SearchReport`] carries. The executor accumulates these and then
+/// *derives* the two Table-1 wall fields from them
+/// ([`PhaseBreakdown::search_secs`]/[`PhaseBreakdown::simulate_secs`]), so
+/// the phases sum to the wall fields exactly, by construction.
+///
+/// Like the wall fields, phase times are observability, never results:
+/// they stay out of [`crate::report::report_json`] and the request
+/// fingerprint, and the wire layer normalizes them in golden transcripts
+/// ([`crate::service::server::normalize_response_line`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    /// Request → [`SearchPlan`] compilation (enumeration + bounds), plus
+    /// executor setup up to the first wave.
+    pub compile_secs: f64,
+    /// Speculative-wave admission: the serial phase-1 snapshot walk that
+    /// decides which pools join each wave (and its replay bookkeeping).
+    pub speculate_secs: f64,
+    /// Strategy expansion + rule-filter share of the fused streaming pass.
+    pub expand_rules_secs: f64,
+    /// Memory-filter share of the fused streaming pass.
+    pub mem_filter_secs: f64,
+    /// Native-engine scoring share (0 when the HLO engine scored).
+    pub score_secs: f64,
+    /// HLO pack+execute share (0 on the native engine).
+    pub hlo_pack_secs: f64,
+}
+
+impl PhaseBreakdown {
+    /// Generation + filtering phases — the "Search Time" wall field.
+    pub fn search_secs(&self) -> f64 {
+        self.compile_secs + self.speculate_secs + self.expand_rules_secs + self.mem_filter_secs
+    }
+
+    /// Scoring phases — the "Simulation Time" wall field.
+    pub fn simulate_secs(&self) -> f64 {
+        self.score_secs + self.hlo_pack_secs
+    }
+
+    /// End-to-end: every phase.
+    pub fn total_secs(&self) -> f64 {
+        self.search_secs() + self.simulate_secs()
+    }
+
+    /// `(name, seconds)` rows in fixed order — one loop serves the wire
+    /// JSON, the phase histograms and the flight recorder.
+    pub fn rows(&self) -> [(&'static str, f64); 6] {
+        [
+            ("compile", self.compile_secs),
+            ("speculate", self.speculate_secs),
+            ("expand_rules", self.expand_rules_secs),
+            ("mem_filter", self.mem_filter_secs),
+            ("score", self.score_secs),
+            ("hlo_pack", self.hlo_pack_secs),
+        ]
+    }
+}
+
 /// Search outcome + phase accounting (Table 1 columns).
 #[derive(Debug, Clone)]
 pub struct SearchReport {
@@ -173,10 +231,17 @@ pub struct SearchReport {
     /// Candidate pools rejected by the hetero-cost branch-and-bound pruner
     /// before strategy expansion (0 for the other modes).
     pub pruned_pools: usize,
-    /// Generation + filtering wall time ("Search Time").
+    /// Generation + filtering wall time ("Search Time"). Derived from
+    /// `phases` ([`PhaseBreakdown::search_secs`]) so the breakdown sums to
+    /// this field exactly.
     pub search_secs: f64,
-    /// Scoring wall time ("Simulation Time").
+    /// Scoring wall time ("Simulation Time"); equals
+    /// [`PhaseBreakdown::simulate_secs`] of `phases`.
     pub simulate_secs: f64,
+    /// Where the wall time went, phase by phase (see [`PhaseBreakdown`]).
+    /// Observability like the wall fields: excluded from the canonical
+    /// report JSON and normalized in golden wire transcripts.
+    pub phases: PhaseBreakdown,
     /// Shared-cost-memo hits accumulated by this search's scoring passes
     /// (0 on the HLO engine, whose scorer has no memo). Like the wall
     /// times these are observability, not results: a memo warmed by
@@ -230,6 +295,12 @@ impl ScoringCore {
     /// Build a core; loads `artifacts/forest.json` (η forests) when
     /// `config.use_forests` is set.
     pub fn new(catalog: GpuCatalog, config: EngineConfig) -> Self {
+        // Pre-register the well-known metric set so one `{"cmd":"metrics"}`
+        // dump always shows the whole picture (and the golden transcript's
+        // metric *name* set is deterministic from the first request on).
+        crate::telemetry::register_core_metrics();
+        // Opt-in flight recorder via ASTRA_TRACE=<path> (Once-guarded).
+        crate::telemetry::trace::init_from_env();
         let dir = crate::runtime::artifacts_dir();
         let eta = if config.use_forests {
             match EtaForests::from_file(&dir.join("forest.json")) {

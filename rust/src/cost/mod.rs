@@ -512,13 +512,18 @@ impl SharedCostMemo {
         self.syncs[shard_of(&key, self.syncs.len())].lock().unwrap().insert(key, val);
     }
 
-    /// Fold one pass's local counters into the lifetime totals.
+    /// Fold one pass's local counters into the lifetime totals. The
+    /// per-memo atomics stay authoritative (tests isolate on them); the
+    /// process-global registry is mirrored additionally so `{"cmd":"metrics"}`
+    /// sees memo traffic from every scope at once.
     fn record(&self, stats: MemoStats) {
         if stats.hits > 0 {
             self.hits.fetch_add(stats.hits, Ordering::Relaxed);
+            crate::telemetry::counter_macro!("astra_memo_hits_total").add(stats.hits);
         }
         if stats.misses > 0 {
             self.misses.fetch_add(stats.misses, Ordering::Relaxed);
+            crate::telemetry::counter_macro!("astra_memo_misses_total").add(stats.misses);
         }
     }
 

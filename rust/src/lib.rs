@@ -99,6 +99,7 @@ pub mod runtime;
 pub mod service;
 pub mod simulator;
 pub mod strategy;
+pub mod telemetry;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {

@@ -19,21 +19,19 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(2); // default Info
 static INIT: std::sync::Once = std::sync::Once::new();
-static mut START: Option<Instant> = None;
 
+/// Process start instant for the elapsed-time log column. Shared with the
+/// flight recorder's span timestamps ([`crate::telemetry::process_epoch`])
+/// so log lines and trace events line up on one clock.
 fn start() -> Instant {
-    unsafe {
-        INIT.call_once(|| {
-            START = Some(Instant::now());
-            if let Ok(env) = std::env::var("ASTRA_LOG") {
-                if let Some(l) = parse_level(&env) {
-                    LEVEL.store(l as u8, Ordering::Relaxed);
-                }
+    INIT.call_once(|| {
+        if let Ok(env) = std::env::var("ASTRA_LOG") {
+            if let Some(l) = parse_level(&env) {
+                LEVEL.store(l as u8, Ordering::Relaxed);
             }
-        });
-        #[allow(static_mut_refs)]
-        START.unwrap()
-    }
+        }
+    });
+    crate::telemetry::process_epoch()
 }
 
 fn parse_level(s: &str) -> Option<Level> {

@@ -16,8 +16,15 @@
 //!                configured search to heat the memo, then spills it)
 //!   stats        print the service statistics line (with --warm-dir:
 //!                after restoring, so operators can see registry state
-//!                across restarts)
+//!                across restarts; `--metrics-text` dumps the telemetry
+//!                registry in Prometheus text format instead)
+//!   trace-check  validate a flight-recorder trace file: every line must
+//!                parse as JSON and carry a nondecreasing numeric `ts`
 //!   info         print the GPU catalog and model registry
+//!
+//! `--trace <path>` (or `ASTRA_TRACE=<path>`) turns on the flight
+//! recorder for any search-running command; span events stream to the
+//! file as Chrome-trace JSONL without changing the picks.
 
 use astra::cli::Cli;
 use astra::coordinator::{AstraEngine, EngineConfig, ScoringCore, ScoringEngine, SearchRequest};
@@ -38,7 +45,7 @@ fn main() {
         "astra",
         "automatic parallel-strategy search on homogeneous and heterogeneous GPUs",
     )
-    .positional("command", "search | hetero-cost | simulate | validate | serve | batch | warm | stats | info")
+    .positional("command", "search | hetero-cost | simulate | validate | serve | batch | warm | stats | trace-check | info")
     .opt("model", "model name (see `astra info`)", Some("llama2-7b"))
     .opt("gpu", "GPU type for homogeneous/cost modes", Some("a800"))
     .opt("gpus", "cluster GPU count", Some("64"))
@@ -60,6 +67,8 @@ fn main() {
     .opt("warm-max-bytes", "snapshot byte budget; LRU scopes dropped first (0 = unlimited)", Some("0"))
     .opt("warm-load", "restore a warm snapshot before searching (search)", None)
     .opt("warm-save", "spill the memo to a snapshot after searching (search)", None)
+    .opt("trace", "stream flight-recorder span events to this JSONL file", None)
+    .flag("metrics-text", "print the telemetry registry as Prometheus text (stats)")
     .flag("warm-no-cache", "persist memo scopes only, not the result cache (serve)")
     .flag("json", "print the canonical report JSON instead of tables (search)")
     .flag("exhaustive", "exhaustive Eq.23 layer enumeration (hetero)")
@@ -140,6 +149,13 @@ fn build_service(args: &astra::cli::Args, catalog: GpuCatalog) -> astra::Result<
 }
 
 fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
+    // ASTRA_TRACE first (so the recorder covers everything), --trace wins
+    // when both are given.
+    astra::telemetry::trace::init_from_env();
+    if let Some(path) = args.get("trace") {
+        astra::telemetry::trace::enable(std::path::Path::new(path))?;
+    }
+
     let catalog = GpuCatalog::builtin();
     let registry = ModelRegistry::builtin();
 
@@ -207,10 +223,46 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         // print the same stats payload the wire `{"cmd":"stats"}` returns —
         // registry/persistence state stays observable across restarts.
         let service = build_service(args, catalog)?;
+        if args.flag("metrics-text") {
+            // Restore-on-boot above already folded persistence/cache state
+            // into the registry; dump it Prometheus-style.
+            print!("{}", astra::telemetry::registry_text());
+            return Ok(());
+        }
         println!(
             "{}",
             astra::json::to_string_pretty(&astra::service::server::stats_json(&service))
         );
+        return Ok(());
+    }
+
+    if command == "trace-check" {
+        let path = args.positionals().get(1).ok_or_else(|| {
+            astra::AstraError::Config("usage: astra trace-check <trace.jsonl>".into())
+        })?;
+        let text = std::fs::read_to_string(path)?;
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut events = 0usize;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = astra::json::parse(line).map_err(|e| {
+                astra::AstraError::Config(format!("line {}: not valid JSON: {e}", i + 1))
+            })?;
+            let ts = v.get("ts").and_then(astra::json::Value::as_f64).ok_or_else(|| {
+                astra::AstraError::Config(format!("line {}: missing numeric 'ts'", i + 1))
+            })?;
+            if ts < last_ts {
+                return Err(astra::AstraError::Config(format!(
+                    "line {}: ts {ts} < previous {last_ts} — trace not monotonic",
+                    i + 1
+                )));
+            }
+            last_ts = ts;
+            events += 1;
+        }
+        println!("trace ok: {events} event(s), ts monotonic");
         return Ok(());
     }
 
@@ -432,7 +484,7 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         }
         other => {
             return Err(astra::AstraError::Config(format!(
-                "unknown command '{other}' (search | hetero-cost | simulate | validate | serve | batch | warm | stats | info)"
+                "unknown command '{other}' (search | hetero-cost | simulate | validate | serve | batch | warm | stats | trace-check | info)"
             )));
         }
     }

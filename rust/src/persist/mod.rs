@@ -77,7 +77,7 @@
 //! * `astra warm inspect <file>` — [`inspect`], header-level validity
 //!   against the current engine without importing anything.
 
-use crate::coordinator::{ScoredStrategy, ScoringCore, SearchReport};
+use crate::coordinator::{PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport};
 use crate::cost::{CostBreakdown, CostConsts, EtaProvider, MemoRows, StageTime};
 use crate::gbdt::Forest;
 use crate::gpu::GpuCatalog;
@@ -311,6 +311,10 @@ impl PersistCounters {
         self.cache_spilled.fetch_add(s.cache_entries as u64, Ordering::Relaxed);
         // A gauge, not a counter: the latest snapshot's size.
         self.bytes_on_disk.store(s.bytes, Ordering::Relaxed);
+        crate::telemetry::counter_macro!("astra_persist_scopes_spilled_total").add(s.scopes as u64);
+        crate::telemetry::counter_macro!("astra_persist_cache_spilled_total")
+            .add(s.cache_entries as u64);
+        crate::telemetry::gauge_macro!("astra_persist_snapshot_bytes").set(s.bytes as i64);
     }
 
     /// Folds in a restore's memo-scope outcome. Cache insertions are
@@ -318,15 +322,21 @@ impl PersistCounters {
     pub fn note_restore(&self, s: &RestoreStats) {
         self.scopes_restored.fetch_add(s.scopes_restored as u64, Ordering::Relaxed);
         self.scopes_rejected.fetch_add(s.scopes_rejected as u64, Ordering::Relaxed);
+        crate::telemetry::counter_macro!("astra_persist_scopes_restored_total")
+            .add(s.scopes_restored as u64);
+        crate::telemetry::counter_macro!("astra_persist_scopes_rejected_total")
+            .add(s.scopes_rejected as u64);
     }
 
     pub fn note_cache_restored(&self, entries: u64) {
         self.cache_restored.fetch_add(entries, Ordering::Relaxed);
+        crate::telemetry::counter_macro!("astra_persist_cache_restored_total").add(entries);
     }
 
     /// Scopes a byte-budgeted spill left out (least-recently-used first).
     pub fn note_scopes_dropped(&self, scopes: u64) {
         self.scopes_dropped.fetch_add(scopes, Ordering::Relaxed);
+        crate::telemetry::counter_macro!("astra_persist_scopes_dropped_total").add(scopes);
     }
 
     /// Update the on-disk size gauge from a freshly *read* snapshot, so
@@ -334,6 +344,7 @@ impl PersistCounters {
     /// only after the first spill).
     pub fn note_snapshot_bytes(&self, bytes: u64) {
         self.bytes_on_disk.store(bytes, Ordering::Relaxed);
+        crate::telemetry::gauge_macro!("astra_persist_snapshot_bytes").set(bytes as i64);
     }
 
     pub fn snapshot(&self) -> PersistSnapshot {
@@ -998,6 +1009,16 @@ pub fn report_to_value(r: &SearchReport, catalog: &GpuCatalog) -> Value {
         .set("pruned_pools", r.pruned_pools)
         .set("search_secs", bits(r.search_secs))
         .set("simulate_secs", bits(r.simulate_secs))
+        .set(
+            "phases",
+            Value::obj()
+                .set("compile", bits(r.phases.compile_secs))
+                .set("speculate", bits(r.phases.speculate_secs))
+                .set("expand_rules", bits(r.phases.expand_rules_secs))
+                .set("mem_filter", bits(r.phases.mem_filter_secs))
+                .set("score", bits(r.phases.score_secs))
+                .set("hlo_pack", bits(r.phases.hlo_pack_secs)),
+        )
         .set("memo_hits", r.memo_hits)
         .set("memo_misses", r.memo_misses)
         .set("top", Value::Arr(top))
@@ -1030,6 +1051,19 @@ pub fn report_from_value(v: &Value, catalog: &GpuCatalog) -> Result<SearchReport
             .and_then(Value::as_u64)
             .ok_or_else(|| AstraError::Json(format!("missing/invalid count field '{key}'")))
     };
+    // Optional for forward-compat: format-v1 snapshots written before the
+    // phase breakdown existed restore with an all-zero breakdown.
+    let phases = match v.get("phases") {
+        Some(pv) => PhaseBreakdown {
+            compile_secs: req_bits(pv, "compile")?,
+            speculate_secs: req_bits(pv, "speculate")?,
+            expand_rules_secs: req_bits(pv, "expand_rules")?,
+            mem_filter_secs: req_bits(pv, "mem_filter")?,
+            score_secs: req_bits(pv, "score")?,
+            hlo_pack_secs: req_bits(pv, "hlo_pack")?,
+        },
+        None => PhaseBreakdown::default(),
+    };
     Ok(SearchReport {
         generated: v.req_usize("generated")?,
         rule_filtered: v.req_usize("rule_filtered")?,
@@ -1038,6 +1072,7 @@ pub fn report_from_value(v: &Value, catalog: &GpuCatalog) -> Result<SearchReport
         pruned_pools: v.req_usize("pruned_pools")?,
         search_secs: req_bits(v, "search_secs")?,
         simulate_secs: req_bits(v, "simulate_secs")?,
+        phases,
         memo_hits: req_count("memo_hits")?,
         memo_misses: req_count("memo_misses")?,
         top,
@@ -1213,6 +1248,14 @@ mod tests {
             pruned_pools: 3,
             search_secs: 0.123456789,
             simulate_secs: 0.987654321,
+            phases: PhaseBreakdown {
+                compile_secs: 0.001,
+                speculate_secs: 0.002,
+                expand_rules_secs: 0.1,
+                mem_filter_secs: 0.02,
+                score_secs: 0.5,
+                hlo_pack_secs: 0.25,
+            },
             memo_hits: 42,
             memo_misses: 7,
             top: vec![ScoredStrategy { strategy, cost, money_usd: 1234.5678 }],
@@ -1233,6 +1276,8 @@ mod tests {
         assert_eq!(back.generated, r.generated);
         assert_eq!(back.pruned_pools, r.pruned_pools);
         assert_eq!(back.search_secs.to_bits(), r.search_secs.to_bits());
+        assert_eq!(back.phases, r.phases);
+        assert_eq!(back.phases.score_secs.to_bits(), r.phases.score_secs.to_bits());
         assert_eq!((back.memo_hits, back.memo_misses), (r.memo_hits, r.memo_misses));
         assert_eq!(back.top.len(), 1);
         assert_eq!(back.top[0].strategy, r.top[0].strategy);
@@ -1251,6 +1296,21 @@ mod tests {
             json::to_string(&crate::report::report_json(&back, &catalog)),
             json::to_string(&crate::report::report_json(&r, &catalog)),
         );
+    }
+
+    #[test]
+    fn report_codec_accepts_snapshots_without_phases() {
+        // Format-v1 snapshots written before the phase breakdown existed
+        // must still restore; the breakdown comes back all-zero.
+        let catalog = GpuCatalog::builtin();
+        let r = sample_report(&catalog);
+        let mut v = report_to_value(&r, &catalog);
+        if let Value::Obj(m) = &mut v {
+            m.remove("phases");
+        }
+        let back = report_from_value(&v, &catalog).unwrap();
+        assert_eq!(back.phases, PhaseBreakdown::default());
+        assert_eq!(back.search_secs.to_bits(), r.search_secs.to_bits());
     }
 
     #[test]

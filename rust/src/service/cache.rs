@@ -92,6 +92,32 @@ impl Shard {
     }
 }
 
+/// Process-global registry mirror: the per-instance atomics below stay
+/// authoritative for [`ShardedCache::stats`] (tests build many independent
+/// caches), while these handles additionally accumulate process-wide
+/// totals behind `{"cmd":"metrics"}` (see [`crate::telemetry`]).
+struct RegistryMirror {
+    hits: Arc<crate::telemetry::Counter>,
+    misses: Arc<crate::telemetry::Counter>,
+    insertions: Arc<crate::telemetry::Counter>,
+    evictions: Arc<crate::telemetry::Counter>,
+    expirations: Arc<crate::telemetry::Counter>,
+    oversize_rejects: Arc<crate::telemetry::Counter>,
+}
+
+impl RegistryMirror {
+    fn new() -> RegistryMirror {
+        RegistryMirror {
+            hits: crate::telemetry::counter("astra_cache_hits_total"),
+            misses: crate::telemetry::counter("astra_cache_misses_total"),
+            insertions: crate::telemetry::counter("astra_cache_insertions_total"),
+            evictions: crate::telemetry::counter("astra_cache_evictions_total"),
+            expirations: crate::telemetry::counter("astra_cache_expirations_total"),
+            oversize_rejects: crate::telemetry::counter("astra_cache_oversize_rejects_total"),
+        }
+    }
+}
+
 /// The sharded LRU+TTL result cache.
 pub struct ShardedCache {
     shards: Vec<Mutex<Shard>>,
@@ -105,6 +131,7 @@ pub struct ShardedCache {
     evictions: AtomicU64,
     expirations: AtomicU64,
     oversize_rejects: AtomicU64,
+    mirror: RegistryMirror,
 }
 
 impl ShardedCache {
@@ -120,6 +147,7 @@ impl ShardedCache {
             evictions: AtomicU64::new(0),
             expirations: AtomicU64::new(0),
             oversize_rejects: AtomicU64::new(0),
+            mirror: RegistryMirror::new(),
         }
     }
 
@@ -161,8 +189,10 @@ impl ShardedCache {
                         shard.map.remove(&fp.0);
                         shard.bytes -= bytes;
                         self.expirations.fetch_add(1, Ordering::Relaxed);
+                        self.mirror.expirations.inc();
                         if count {
                             self.misses.fetch_add(1, Ordering::Relaxed);
+                            self.mirror.misses.inc();
                         }
                         return None;
                     }
@@ -170,12 +200,14 @@ impl ShardedCache {
                 e.last_used = self.tick.fetch_add(1, Ordering::Relaxed);
                 if count {
                     self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.mirror.hits.inc();
                 }
                 Some(e.report.clone())
             }
             None => {
                 if count {
                     self.misses.fetch_add(1, Ordering::Relaxed);
+                    self.mirror.misses.inc();
                 }
                 None
             }
@@ -191,6 +223,7 @@ impl ShardedCache {
             // every co-resident entry in the shard and then be evicted
             // itself, leaving the shard empty and the report uncached.
             self.oversize_rejects.fetch_add(1, Ordering::Relaxed);
+            self.mirror.oversize_rejects.inc();
             return;
         }
         let last_used = self.tick.fetch_add(1, Ordering::Relaxed);
@@ -203,8 +236,10 @@ impl ShardedCache {
         }
         shard.bytes += bytes;
         self.insertions.fetch_add(1, Ordering::Relaxed);
+        self.mirror.insertions.inc();
         let evicted = shard.evict_to(self.per_shard_entries(), self.per_shard_bytes());
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        self.mirror.evictions.add(evicted);
     }
 
     /// Every resident entry `(fingerprint, report)`, sorted by fingerprint
@@ -288,6 +323,7 @@ mod tests {
             pruned_pools: 0,
             search_secs: 0.0,
             simulate_secs: 0.0,
+            phases: Default::default(),
             memo_hits: 0,
             memo_misses: 0,
             top: Vec::new(),

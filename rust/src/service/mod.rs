@@ -428,11 +428,16 @@ impl SearchService {
             self.core.config.workers.min(4)
         };
         // Admit at most `max_batch` distinct requests per fan-out round.
+        // The queue-depth gauge tracks how many distinct requests are in
+        // fan-out right now, across every concurrent batch.
+        let depth = crate::telemetry::gauge_macro!("astra_admission_queue_depth");
         let mut leader_results: Vec<Result<ServiceResponse>> =
             Vec::with_capacity(distinct.len());
         for chunk in distinct.chunks(self.config.max_batch.max(1)) {
+            depth.add(chunk.len() as i64);
             let mut part =
                 par_for_indices(chunk.len(), workers, |i| self.handle(&reqs[chunk[i]]));
+            depth.add(-(chunk.len() as i64));
             leader_results.append(&mut part);
         }
         // Map distinct-index → result, then assemble per-input responses.

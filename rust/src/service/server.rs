@@ -11,6 +11,7 @@
 //! {"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":50000}
 //! {"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":16,"h100":16},"max_money":50000}
 //! {"cmd":"stats"}
+//! {"cmd":"metrics"}
 //! ```
 //!
 //! * `model` — required, a [`crate::model::ModelRegistry`] name.
@@ -36,6 +37,16 @@
 //!
 //! Identical requests always carry the same `fingerprint`, making responses
 //! join-able across batches and tenants.
+//!
+//! ## Control lines
+//!
+//! * `{"cmd":"stats"}` — service/engine counters (cache, memo, persist,
+//!   searches run), backward-compatible keys only appended.
+//! * `{"cmd":"metrics"}` — the full process-global telemetry registry
+//!   ([`crate::telemetry::registry_json`]) as canonical JSON: every named
+//!   counter/gauge/histogram, including the per-phase search latency
+//!   histograms. Values are load-dependent, so golden transcripts zero
+//!   every number under `metrics` (names and shape stay pinned).
 
 use crate::coordinator::{SearchReport, SearchRequest};
 use crate::gpu::GpuCatalog;
@@ -216,6 +227,10 @@ pub fn request_to_json(req: &SearchRequest, catalog: &GpuCatalog) -> Value {
 }
 
 fn report_counts_json(r: &SearchReport) -> Value {
+    let mut phases = Value::obj();
+    for (name, secs) in r.phases.rows() {
+        phases = phases.set(name, secs);
+    }
     Value::obj()
         .set("generated", r.generated)
         .set("rule_filtered", r.rule_filtered)
@@ -224,6 +239,7 @@ fn report_counts_json(r: &SearchReport) -> Value {
         .set("pruned_pools", r.pruned_pools)
         .set("search_secs", r.search_secs)
         .set("simulate_secs", r.simulate_secs)
+        .set("phases", phases)
         .set("memo_hits", r.memo_hits)
         .set("memo_misses", r.memo_misses)
 }
@@ -276,20 +292,55 @@ pub fn normalize_response_line(line: &str) -> Result<String> {
                     engine.insert(k.to_string(), Value::Num(0.0));
                 }
             }
+            // The phase breakdown is wall time by another name.
+            if let Some(phases) = engine.get_mut("phases") {
+                zero_numbers(phases);
+            }
         }
         // Cache byte accounting is an estimate that may drift with struct
         // layout, and snapshot bytes drift with the persist format; the
         // entry/hit counters stay pinned. Memo counters are load-dependent
         // (see above).
         if let Some(Value::Obj(stats)) = m.get_mut("stats") {
-            for k in ["cache_bytes", "memo_hits", "memo_misses", "persist_bytes"] {
+            // `metrics_registered` counts *names* in the process-global
+            // registry, which other code in the same process may grow.
+            for k in
+                ["cache_bytes", "memo_hits", "memo_misses", "persist_bytes", "metrics_registered"]
+            {
                 if stats.contains_key(k) {
                     stats.insert(k.to_string(), Value::Num(0.0));
                 }
             }
         }
+        // Every metric value is load-dependent (process-global counters see
+        // traffic from the whole test run); pin the registry's *names and
+        // shape*, zero the numbers. Histogram buckets are elided when empty,
+        // so their objects are normalized to `{}` for stability.
+        if let Some(metrics) = m.get_mut("metrics") {
+            zero_numbers(metrics);
+            if let Value::Obj(mm) = metrics {
+                if let Some(Value::Obj(hists)) = mm.get_mut("histograms") {
+                    for h in hists.values_mut() {
+                        if let Value::Obj(hm) = h {
+                            hm.insert("buckets".to_string(), Value::obj());
+                        }
+                    }
+                }
+            }
+        }
     }
     Ok(json::to_string(&v))
+}
+
+/// Recursively zero every number under `v` (normalization helper for the
+/// load-dependent `metrics`/`phases` payloads).
+fn zero_numbers(v: &mut Value) {
+    match v {
+        Value::Num(n) => *n = 0.0,
+        Value::Obj(m) => m.values_mut().for_each(zero_numbers),
+        Value::Arr(a) => a.iter_mut().for_each(zero_numbers),
+        _ => {}
+    }
 }
 
 /// Error response line.
@@ -329,7 +380,15 @@ pub fn stats_json(service: &SearchService) -> Value {
             .set("persist_scopes_dropped", p.scopes_dropped)
             .set("persist_bytes", p.bytes_on_disk)
             .set("persist_cache_spilled", p.cache_entries_spilled)
-            .set("persist_cache_restored", p.cache_entries_restored))
+            .set("persist_cache_restored", p.cache_entries_restored)
+            .set("metrics_registered", crate::telemetry::metric_count()))
+}
+
+/// Telemetry registry line (the `{"cmd":"metrics"}` control request): the
+/// whole process-global registry as canonical JSON. One command, the whole
+/// picture — cache, memo, persist, per-phase latency histograms.
+pub fn metrics_json() -> Value {
+    Value::obj().set("ok", true).set("metrics", crate::telemetry::registry_json())
 }
 
 /// What one admitted line turned into.
@@ -341,6 +400,9 @@ enum Admitted {
     /// `{"cmd":"stats"}` — rendered at emission time, after the batch's
     /// requests have run, so the counters reflect them. Carries the echo id.
     Stats(Option<String>),
+    /// `{"cmd":"metrics"}` — the telemetry registry dump; rendered at
+    /// emission time like `stats`.
+    Metrics(Option<String>),
 }
 
 /// Process one admitted batch of raw lines: parse, fan out the valid
@@ -360,9 +422,16 @@ fn process_batch<W: Write>(
     for line in lines {
         match json::parse(line) {
             Ok(v) => {
-                if v.get("cmd").and_then(Value::as_str) == Some("stats") {
-                    admitted.push(Admitted::Stats(wire_id(&v)));
-                    continue;
+                match v.get("cmd").and_then(Value::as_str) {
+                    Some("stats") => {
+                        admitted.push(Admitted::Stats(wire_id(&v)));
+                        continue;
+                    }
+                    Some("metrics") => {
+                        admitted.push(Admitted::Metrics(wire_id(&v)));
+                        continue;
+                    }
+                    _ => {}
                 }
                 match parse_request(&v, catalog, &registry) {
                     Ok(w) => {
@@ -389,6 +458,14 @@ fn process_batch<W: Write>(
             Admitted::Stats(id) => {
                 stats.ok += 1;
                 let mut v = stats_json(service);
+                if let Some(id) = id {
+                    v = v.set("id", id.as_str());
+                }
+                json::to_string(&v)
+            }
+            Admitted::Metrics(id) => {
+                stats.ok += 1;
+                let mut v = metrics_json();
                 if let Some(id) = id {
                     v = v.set("id", id.as_str());
                 }
@@ -590,6 +667,31 @@ mod tests {
         // Error lines (no timing fields) pass through unchanged.
         let err = r#"{"error":"nope","ok":false}"#;
         assert_eq!(normalize_response_line(err).unwrap(), err);
+    }
+
+    #[test]
+    fn normalization_zeroes_phases_and_metrics_payloads() {
+        // The phase breakdown is wall time; every number zeroes, counts stay.
+        let line = r#"{"engine":{"generated":3,"phases":{"compile":0.1,"score":0.2}},"ok":true}"#;
+        let v = json::parse(&normalize_response_line(line).unwrap()).unwrap();
+        assert_eq!(v.pointer("/engine/phases/compile").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(v.pointer("/engine/phases/score").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(v.pointer("/engine/generated").and_then(Value::as_usize), Some(3));
+        // A metrics line keeps its names/shape but zeroes every value and
+        // empties the (load-dependent) histogram bucket maps.
+        let line = r#"{"metrics":{"counters":{"astra_searches_total":7},"gauges":{"astra_memo_scopes":2},"histograms":{"astra_search_e2e_seconds":{"buckets":{"b21":4},"count":4,"sum_secs":1.5}}},"ok":true}"#;
+        let v = json::parse(&normalize_response_line(line).unwrap()).unwrap();
+        assert_eq!(
+            v.pointer("/metrics/counters/astra_searches_total").and_then(Value::as_f64),
+            Some(0.0)
+        );
+        assert_eq!(
+            v.pointer("/metrics/gauges/astra_memo_scopes").and_then(Value::as_f64),
+            Some(0.0)
+        );
+        let h = v.pointer("/metrics/histograms/astra_search_e2e_seconds").unwrap();
+        assert_eq!(h.get("count").and_then(Value::as_f64), Some(0.0));
+        assert!(h.get("buckets").and_then(Value::as_obj).unwrap().is_empty());
     }
 
     #[test]

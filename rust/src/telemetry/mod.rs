@@ -1,0 +1,541 @@
+//! `astra::telemetry` — the unified observability substrate: one
+//! process-global metrics registry plus an opt-in flight recorder
+//! ([`trace`]). Zero external dependencies, like [`crate::logging`].
+//!
+//! ## Registry architecture
+//!
+//! One process-global [`Registry`] maps metric *names* to typed handles:
+//!
+//! * [`Counter`] — monotone `u64`, saturating on overflow (a counter that
+//!   pegs at `u64::MAX` is more useful than one that wraps to a small lie);
+//! * [`Gauge`] — settable `i64` level (queue depths, resident scopes,
+//!   snapshot bytes);
+//! * [`Histogram`] — fixed log₂-scale latency buckets: bucket `i` counts
+//!   observations `≤ 2^(i-20)` seconds (`i = 0..40`, so ~0.95 µs up to
+//!   ~6 days) plus one overflow bucket for `+∞`/NaN. Zero, negative and
+//!   subnormal observations land in bucket 0; the bucket layout is fixed
+//!   at compile time so dumps from different processes are mergeable.
+//!
+//! Handles are `Arc`s: subsystems resolve a name once (at construction —
+//! [`register_core_metrics`] pre-registers the full well-known set so one
+//! dump always shows the whole picture) and bump plain relaxed atomics on
+//! the hot path. The global map lock is touched only at registration and
+//! at dump time. The pre-existing per-instance counters (cache stats, memo
+//! registries, persist counters) are *mirrored* into the registry, not
+//! replaced: per-instance semantics stay exactly as before (tests and the
+//! wire `stats` payload depend on them), while the registry accumulates
+//! the process-wide totals behind one `{"cmd":"metrics"}` /
+//! `astra stats --metrics-text` surface.
+//!
+//! ## Determinism contract
+//!
+//! Telemetry is observability, never results:
+//!
+//! * nothing in this module enters the request fingerprint
+//!   ([`crate::service::fingerprint`]) or the canonical result view
+//!   ([`crate::report::report_json`]);
+//! * metric *values* are load-dependent (warmth, worker interleaving), so
+//!   golden wire transcripts zero them exactly like the wall-time fields
+//!   ([`crate::service::server::normalize_response_line`]);
+//! * the flight recorder only ever writes to its own file — reports are
+//!   byte-identical with tracing on or off (pinned by `determinism.rs`
+//!   and the ci.sh trace smoke lane), and the disabled path is a single
+//!   relaxed atomic load.
+//!
+//! ## Metric naming scheme
+//!
+//! Prometheus-style snake case, `astra_` prefix: counters end in
+//! `_total`, histograms in `_seconds`, gauges are bare levels. The
+//! well-known set:
+//!
+//! | metric | type | meaning |
+//! |---|---|---|
+//! | `astra_searches_total` | counter | searches that entered the pipeline |
+//! | `astra_strategies_generated_total` | counter | raw candidates expanded |
+//! | `astra_strategies_scored_total` | counter | candidates scored |
+//! | `astra_cache_{hits,misses,insertions,evictions,expirations,oversize_rejects}_total` | counter | result-cache traffic |
+//! | `astra_memo_{hits,misses}_total` | counter | shared-cost-memo traffic |
+//! | `astra_persist_scopes_{spilled,restored,rejected,dropped}_total` | counter | warm-start scope movement |
+//! | `astra_persist_cache_{spilled,restored}_total` | counter | warm-start cache-entry movement |
+//! | `astra_trace_events_total` | counter | flight-recorder events written |
+//! | `astra_admission_queue_depth` | gauge | distinct requests in fan-out |
+//! | `astra_memo_scopes` | gauge | live memo scopes |
+//! | `astra_persist_snapshot_bytes` | gauge | last snapshot size on disk |
+//! | `astra_search_e2e_seconds` | histogram | per-search end-to-end time |
+//! | `astra_phase_{compile,speculate,expand_rules,mem_filter,score,hlo_pack}_seconds` | histogram | per-search phase times |
+//!
+//! Use the [`counter!`](crate::telemetry_counter)/[`gauge!`](crate::telemetry_gauge)/
+//! [`histogram!`](crate::telemetry_histogram) macros for one-line call
+//! sites: they cache the resolved handle in a per-call-site static, so the
+//! registry lock is paid once per site, not per event.
+
+pub mod trace;
+
+use crate::json::Value;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// The process start instant shared by log lines and trace timestamps
+/// (the [`crate::logging`] `[   1.234s ...]` column and the flight
+/// recorder's `ts` field count from the same epoch).
+pub fn process_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotone counter. Saturates at `u64::MAX` instead of wrapping.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        // fetch_add wraps; a saturating CAS keeps a pegged counter honest.
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(n);
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Settable level (queue depth, resident scopes, bytes on disk).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Finite log₂-bucket boundary count; one overflow bucket follows.
+const HIST_BUCKETS: usize = 40;
+/// Lowest bucket upper bound: 2⁻²⁰ s ≈ 0.95 µs (each next bound doubles).
+const HIST_MIN_BOUND: f64 = 1.0 / 1048576.0;
+
+/// Upper bound (`le`) of finite bucket `i` in seconds.
+fn bucket_bound(i: usize) -> f64 {
+    let mut b = HIST_MIN_BOUND;
+    for _ in 0..i {
+        b *= 2.0;
+    }
+    b
+}
+
+/// Bucket index for one observation: `0` for anything `≤ 2⁻²⁰ s`
+/// (including zero, negatives and subnormals), `HIST_BUCKETS` (overflow)
+/// for `+∞`, NaN, and anything past the top bound.
+fn bucket_index(v: f64) -> usize {
+    if v.is_nan() {
+        return HIST_BUCKETS;
+    }
+    let mut bound = HIST_MIN_BOUND;
+    for i in 0..HIST_BUCKETS {
+        if v <= bound {
+            return i;
+        }
+        bound *= 2.0;
+    }
+    HIST_BUCKETS
+}
+
+/// Fixed log₂-scale latency histogram (see the module docs for the bucket
+/// layout). The sum accumulates in nanoseconds so it stays a saturating
+/// atomic like everything else; `+∞` observations peg it.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>, // HIST_BUCKETS + 1 (overflow), non-cumulative
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..=HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one latency in seconds.
+    pub fn observe(&self, secs: f64) {
+        self.buckets[bucket_index(secs)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // Float-to-int casts saturate (NaN → 0), so ∞ pegs instead of UB.
+        let ns = (secs.max(0.0) * 1e9) as u64;
+        if ns > 0 {
+            let mut cur = self.sum_nanos.load(Ordering::Relaxed);
+            loop {
+                let next = cur.saturating_add(ns);
+                match self.sum_nanos.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(now) => cur = now,
+                }
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Non-cumulative bucket counts, overflow last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// The process-global name → handle map. Locked only at registration and
+/// dump time; handles bump lock-free atomics.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+/// Get-or-create the named counter. Registering a name that already holds
+/// a different metric type returns a fresh detached handle (never panics
+/// on the telemetry path) — don't do that.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut m = registry().metrics.lock().unwrap();
+    match m
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+    {
+        Metric::Counter(c) => c.clone(),
+        _ => Arc::new(Counter::default()),
+    }
+}
+
+/// Get-or-create the named gauge (see [`counter`] on type mismatches).
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut m = registry().metrics.lock().unwrap();
+    match m.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+    {
+        Metric::Gauge(g) => g.clone(),
+        _ => Arc::new(Gauge::default()),
+    }
+}
+
+/// Get-or-create the named histogram (see [`counter`] on type mismatches).
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut m = registry().metrics.lock().unwrap();
+    match m
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::default())))
+    {
+        Metric::Histogram(h) => h.clone(),
+        _ => Arc::new(Histogram::default()),
+    }
+}
+
+/// How many metrics are registered.
+pub fn metric_count() -> usize {
+    registry().metrics.lock().unwrap().len()
+}
+
+/// Pre-register the full well-known metric set (the module-doc table) so a
+/// fresh process dumps the whole picture — zeros included — instead of
+/// only the names whose code paths happened to run. Called from
+/// [`crate::coordinator::ScoringCore::new`]; idempotent.
+pub fn register_core_metrics() {
+    for name in [
+        "astra_searches_total",
+        "astra_strategies_generated_total",
+        "astra_strategies_scored_total",
+        "astra_cache_hits_total",
+        "astra_cache_misses_total",
+        "astra_cache_insertions_total",
+        "astra_cache_evictions_total",
+        "astra_cache_expirations_total",
+        "astra_cache_oversize_rejects_total",
+        "astra_memo_hits_total",
+        "astra_memo_misses_total",
+        "astra_persist_scopes_spilled_total",
+        "astra_persist_scopes_restored_total",
+        "astra_persist_scopes_rejected_total",
+        "astra_persist_scopes_dropped_total",
+        "astra_persist_cache_spilled_total",
+        "astra_persist_cache_restored_total",
+        "astra_trace_events_total",
+    ] {
+        let _ = counter(name);
+    }
+    for name in
+        ["astra_admission_queue_depth", "astra_memo_scopes", "astra_persist_snapshot_bytes"]
+    {
+        let _ = gauge(name);
+    }
+    for name in [
+        "astra_search_e2e_seconds",
+        "astra_phase_compile_seconds",
+        "astra_phase_speculate_seconds",
+        "astra_phase_expand_rules_seconds",
+        "astra_phase_mem_filter_seconds",
+        "astra_phase_score_seconds",
+        "astra_phase_hlo_pack_seconds",
+    ] {
+        let _ = histogram(name);
+    }
+}
+
+/// The registry as canonical JSON (sorted names, like every other wire
+/// payload): `{"counters":{…},"gauges":{…},"histograms":{name:
+/// {"buckets":{"b07":n,…,"inf":n},"count":N,"sum_secs":S}}}`. Histogram
+/// buckets are non-cumulative, keyed `bNN` by bucket index (bound
+/// `2^(NN-20)` s) with only non-zero buckets emitted; `"inf"` is the
+/// overflow bucket.
+pub fn registry_json() -> Value {
+    let m = registry().metrics.lock().unwrap();
+    let mut counters = Value::obj();
+    let mut gauges = Value::obj();
+    let mut histograms = Value::obj();
+    for (name, metric) in m.iter() {
+        match metric {
+            Metric::Counter(c) => {
+                counters = counters.set(name, c.get() as f64);
+            }
+            Metric::Gauge(g) => {
+                gauges = gauges.set(name, g.get() as f64);
+            }
+            Metric::Histogram(h) => {
+                let mut buckets = Value::obj();
+                for (i, n) in h.bucket_counts().into_iter().enumerate() {
+                    if n == 0 {
+                        continue;
+                    }
+                    let key = if i == HIST_BUCKETS {
+                        "inf".to_string()
+                    } else {
+                        format!("b{i:02}")
+                    };
+                    buckets = buckets.set(&key, n as f64);
+                }
+                histograms = histograms.set(
+                    name,
+                    Value::obj()
+                        .set("buckets", buckets)
+                        .set("count", h.count() as f64)
+                        .set("sum_secs", h.sum_secs()),
+                );
+            }
+        }
+    }
+    Value::obj()
+        .set("counters", counters)
+        .set("gauges", gauges)
+        .set("histograms", histograms)
+}
+
+/// Prometheus-style text exposition of the registry (`astra stats
+/// --metrics-text`). Histogram buckets are cumulative with `le` labels,
+/// the conventional `_bucket`/`_sum`/`_count` triplet.
+pub fn registry_text() -> String {
+    let m = registry().metrics.lock().unwrap();
+    let mut out = String::new();
+    for (name, metric) in m.iter() {
+        match metric {
+            Metric::Counter(c) => {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+            }
+            Metric::Gauge(g) => {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+            }
+            Metric::Histogram(h) => {
+                out.push_str(&format!("# TYPE {name} histogram\n"));
+                let mut cumulative = 0u64;
+                for (i, n) in h.bucket_counts().into_iter().enumerate() {
+                    cumulative = cumulative.saturating_add(n);
+                    if i == HIST_BUCKETS {
+                        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cumulative}\n"));
+                    } else if n > 0 {
+                        // Elide empty finite buckets; +Inf always closes
+                        // the series so the total stays visible.
+                        out.push_str(&format!(
+                            "{name}_bucket{{le=\"{}\"}} {cumulative}\n",
+                            bucket_bound(i)
+                        ));
+                    }
+                }
+                out.push_str(&format!("{name}_sum {}\n", h.sum_secs()));
+                out.push_str(&format!("{name}_count {}\n", h.count()));
+            }
+        }
+    }
+    out
+}
+
+/// One-line counter access with a per-call-site handle cache: the registry
+/// lock is paid on the first hit only. `$name` should be a literal — the
+/// cache keys on the call site, not the string.
+#[macro_export]
+macro_rules! telemetry_counter {
+    ($name:expr) => {{
+        static HANDLE: ::std::sync::OnceLock<::std::sync::Arc<$crate::telemetry::Counter>> =
+            ::std::sync::OnceLock::new();
+        ::std::sync::Arc::clone(HANDLE.get_or_init(|| $crate::telemetry::counter($name)))
+    }};
+}
+
+/// [`telemetry_counter!`] for gauges.
+#[macro_export]
+macro_rules! telemetry_gauge {
+    ($name:expr) => {{
+        static HANDLE: ::std::sync::OnceLock<::std::sync::Arc<$crate::telemetry::Gauge>> =
+            ::std::sync::OnceLock::new();
+        ::std::sync::Arc::clone(HANDLE.get_or_init(|| $crate::telemetry::gauge($name)))
+    }};
+}
+
+/// [`telemetry_counter!`] for histograms.
+#[macro_export]
+macro_rules! telemetry_histogram {
+    ($name:expr) => {{
+        static HANDLE: ::std::sync::OnceLock<::std::sync::Arc<$crate::telemetry::Histogram>> =
+            ::std::sync::OnceLock::new();
+        ::std::sync::Arc::clone(HANDLE.get_or_init(|| $crate::telemetry::histogram($name)))
+    }};
+}
+
+// The `telemetry::counter!("…")` spelling: path-accessible aliases of the
+// exported macros (macro and function namespaces are disjoint, so these
+// coexist with the `fn counter`-style accessors above).
+pub use crate::telemetry_counter as counter_macro;
+pub use crate::telemetry_gauge as gauge_macro;
+pub use crate::telemetry_histogram as histogram_macro;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and tests share one process: every
+    // test uses metric names no production code touches.
+
+    #[test]
+    fn counter_saturates_instead_of_wrapping() {
+        let c = Counter::default();
+        c.add(u64::MAX - 1);
+        c.add(5);
+        assert_eq!(c.get(), u64::MAX, "overflow must peg, not wrap");
+        c.inc();
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        // Zero, negatives and subnormals land in bucket 0.
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(f64::MIN_POSITIVE / 2.0), 0, "subnormal");
+        assert_eq!(bucket_index(1e-320), 0, "subnormal");
+        // Exact boundary is inclusive; just past it moves up one.
+        assert_eq!(bucket_index(HIST_MIN_BOUND), 0);
+        assert_eq!(bucket_index(HIST_MIN_BOUND * 1.0000001), 1);
+        // Infinity, NaN and beyond-top-bound overflow.
+        assert_eq!(bucket_index(f64::INFINITY), HIST_BUCKETS);
+        assert_eq!(bucket_index(f64::NAN), HIST_BUCKETS);
+        assert_eq!(bucket_index(1e300), HIST_BUCKETS);
+        // A human-scale latency sits strictly inside the finite range.
+        let i = bucket_index(1.27);
+        assert!(i > 0 && i < HIST_BUCKETS, "1.27 s must be a finite bucket, got {i}");
+        assert!(bucket_bound(i) >= 1.27 && bucket_bound(i.saturating_sub(1)) < 1.27);
+    }
+
+    #[test]
+    fn histogram_observe_accounts_count_and_sum() {
+        let h = Histogram::default();
+        h.observe(0.0);
+        h.observe(1e-320);
+        h.observe(0.5);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 4);
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 2, "zero + subnormal share bucket 0");
+        assert_eq!(counts[HIST_BUCKETS], 1, "inf lands in overflow");
+        assert_eq!(counts.iter().sum::<u64>(), 4);
+        // ∞ pegs the sum; it must not wrap back down.
+        assert!(h.sum_secs() >= 0.5);
+    }
+
+    #[test]
+    fn registry_get_or_create_returns_shared_handles() {
+        let a = counter("astra_test_registry_shared_total");
+        let b = counter("astra_test_registry_shared_total");
+        a.add(3);
+        assert_eq!(b.get(), 3, "same name must resolve to the same counter");
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn macros_cache_and_resolve() {
+        telemetry_counter!("astra_test_macro_total").add(2);
+        assert_eq!(counter("astra_test_macro_total").get(), 2);
+        telemetry_gauge!("astra_test_macro_gauge").set(-7);
+        assert_eq!(gauge("astra_test_macro_gauge").get(), -7);
+        telemetry_histogram!("astra_test_macro_seconds").observe(0.25);
+        assert_eq!(histogram("astra_test_macro_seconds").count(), 1);
+    }
+
+    #[test]
+    fn json_and_text_render_the_test_metrics() {
+        counter("astra_test_render_total").add(9);
+        histogram("astra_test_render_seconds").observe(0.125);
+        let v = registry_json();
+        assert_eq!(
+            v.pointer("/counters/astra_test_render_total").and_then(Value::as_f64),
+            Some(9.0)
+        );
+        let h = v.pointer("/histograms/astra_test_render_seconds").unwrap();
+        assert_eq!(h.get("count").and_then(Value::as_f64), Some(1.0));
+        let text = registry_text();
+        assert!(text.contains("# TYPE astra_test_render_total counter"));
+        assert!(text.contains("astra_test_render_total 9"));
+        assert!(text.contains("astra_test_render_seconds_count 1"));
+        assert!(text.contains("le=\"+Inf\"}} 1") || text.contains("le=\"+Inf\"} 1"));
+    }
+}

@@ -1,0 +1,168 @@
+//! The flight recorder: an opt-in stream of Chrome-trace-format span
+//! events (one JSON object per line) for profiling the plan executor's
+//! compile → round → wave → pool schedule.
+//!
+//! Enabled by `ASTRA_TRACE=<path>` (read once per process via
+//! [`init_from_env`]) or programmatically / by `astra … --trace <path>`
+//! through [`enable`]. When disabled — the default — every [`emit`] call
+//! is a single relaxed atomic load and an immediate return; that *is* the
+//! hot-path overhead contract, pinned by the bench `telemetry_overhead`
+//! leg.
+//!
+//! Each line is a complete ("ph":"X") event: `name`, `cat`, `ts`/`dur` in
+//! microseconds, and an `args` object carrying executor context (plan id,
+//! round, wave, pool, strategies scored, memo hit-rate). Timestamps count
+//! from [`super::process_epoch`] — the same epoch the log prefix uses —
+//! and are computed *under the sink lock*, so `ts` is nondecreasing in
+//! file order even with concurrent searches (`astra trace-check` and the
+//! ci.sh smoke lane assert exactly that). Load a trace with Perfetto /
+//! `chrome://tracing` after wrapping the lines in a JSON array, or grep
+//! it as-is.
+//!
+//! Tracing never touches results: reports are byte-identical with the
+//! recorder on or off (pinned in `determinism.rs`), and a write failure
+//! disables the recorder rather than failing the search.
+
+use crate::json::{self, Value};
+use std::fs::File;
+use std::io::{LineWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once};
+
+/// Fast-path switch: [`emit`] bails on one relaxed load when off.
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+/// The open sink. `LineWriter` flushes per event line, so the file is
+/// complete even though process-exit never drops statics.
+static SINK: Mutex<Option<LineWriter<File>>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+
+/// Is the recorder on? Call sites guard event *construction* behind this
+/// so the disabled path never formats or allocates.
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// One-shot `ASTRA_TRACE=<path>` pickup; idempotent, cheap after the
+/// first call. A bad path warns and leaves the recorder off — tracing is
+/// observability, never a reason to fail a search.
+pub fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(path) = std::env::var("ASTRA_TRACE") {
+            if !path.is_empty() {
+                if let Err(e) = enable(Path::new(&path)) {
+                    crate::log_warn!("trace: ASTRA_TRACE={path} not usable: {e}");
+                }
+            }
+        }
+    });
+}
+
+/// Start streaming events to `path` (truncates any existing file).
+pub fn enable(path: &Path) -> crate::Result<()> {
+    let file = File::create(path)?;
+    *SINK.lock().unwrap() = Some(LineWriter::new(file));
+    TRACE_ON.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Stop recording and flush/close the sink.
+pub fn disable() {
+    TRACE_ON.store(false, Ordering::Relaxed);
+    if let Some(mut sink) = SINK.lock().unwrap().take() {
+        let _ = sink.flush();
+    }
+}
+
+/// Write one complete span event (`ph:"X"`): `dur_secs` is the span
+/// length, `args` the executor context. No-op when disabled. The `ts`
+/// stamp is taken under the sink lock — see the module docs.
+pub fn emit(name: &str, cat: &str, dur_secs: f64, args: Value) {
+    if !enabled() {
+        return;
+    }
+    let mut guard = SINK.lock().unwrap();
+    let Some(sink) = guard.as_mut() else { return };
+    let ts_us = super::process_epoch().elapsed().as_secs_f64() * 1e6;
+    let event = Value::obj()
+        .set("args", args)
+        .set("cat", cat)
+        .set("dur", dur_secs.max(0.0) * 1e6)
+        .set("name", name)
+        .set("ph", "X")
+        .set("pid", 1u64)
+        .set("tid", 0u64)
+        .set("ts", ts_us);
+    let line = json::to_string(&event);
+    if writeln!(sink, "{line}").is_err() {
+        // A dead sink (disk full, closed fd) must not sink the search.
+        drop(guard);
+        disable();
+        crate::log_warn!("trace: write failed; recorder disabled");
+        return;
+    }
+    drop(guard);
+    crate::telemetry::counter_macro!("astra_trace_events_total").inc();
+}
+
+/// FNV-1a over a plan's canonical JSON — the stable `plan` id that ties
+/// every span of one search together in a trace. Only computed when the
+/// recorder is on.
+pub fn plan_id(canonical_plan: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in canonical_plan.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Enable → emit → disable writes parseable JSONL with nondecreasing
+    /// timestamps; runs serially inside one test since the recorder is
+    /// process-global.
+    #[test]
+    fn recorder_roundtrip_monotonic_and_parseable() {
+        let path = std::env::temp_dir().join(format!("astra_trace_test_{}.jsonl", std::process::id()));
+        assert!(!enabled(), "recorder must default to off");
+        emit("noop", "test", 0.0, Value::obj()); // disabled: must be a no-op
+        enable(&path).unwrap();
+        assert!(enabled());
+        for i in 0..8u64 {
+            emit("span", "test", 1e-4, Value::obj().set("i", i));
+        }
+        disable();
+        assert!(!enabled());
+        emit("after", "test", 0.0, Value::obj()); // off again: swallowed
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut ours = 0usize;
+        for line in text.lines() {
+            let v = json::parse(line).unwrap();
+            assert_eq!(v.opt_str("ph"), Some("X"));
+            let ts = v.req_f64("ts").unwrap();
+            assert!(ts >= last_ts, "ts must be nondecreasing in file order");
+            last_ts = ts;
+            // Concurrent unit tests may run searches while the recorder is
+            // on (it is process-global); count only this test's spans.
+            if v.opt_str("cat") == Some("test") {
+                assert_eq!(v.opt_str("name"), Some("span"));
+                ours += 1;
+            }
+        }
+        assert_eq!(ours, 8, "exactly the enabled-window test spans are on disk");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn plan_id_is_stable_and_input_sensitive() {
+        assert_eq!(plan_id("abc"), plan_id("abc"));
+        assert_ne!(plan_id("abc"), plan_id("abd"));
+        assert_eq!(plan_id("").len(), 16);
+    }
+}

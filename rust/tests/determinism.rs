@@ -118,6 +118,73 @@ fn repeat_runs_on_one_engine_are_byte_identical() {
     }
 }
 
+/// Telemetry must be pure observation: running the full mode matrix with
+/// the flight recorder streaming (and the metrics registry live — it
+/// always is) produces byte-identical canonical reports, and the trace
+/// file itself is valid JSONL with nondecreasing timestamps.
+#[test]
+fn telemetry_and_tracing_do_not_change_reports() {
+    let mut baselines = Vec::new();
+    for (_, req) in requests() {
+        baselines.push(canon(&engine(true, 4, 2), &req));
+    }
+
+    let path = std::env::temp_dir()
+        .join(format!("astra_determinism_trace_{}.jsonl", std::process::id()));
+    astra::telemetry::trace::enable(&path).unwrap();
+    let mut traced = Vec::new();
+    for (_, req) in requests() {
+        traced.push(canon(&engine(true, 4, 2), &req));
+    }
+    astra::telemetry::trace::disable();
+
+    for ((name, _), (base, got)) in requests().iter().zip(baselines.iter().zip(&traced)) {
+        assert_eq!(base, got, "mode {name}: tracing changed the canonical report");
+    }
+
+    // The recorder side: every line parses, ts never goes backwards.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert!(!text.is_empty(), "tracing produced no span events");
+    let mut last_ts = f64::NEG_INFINITY;
+    for line in text.lines() {
+        let v = astra::json::parse(line).expect("trace line must be valid JSON");
+        assert_eq!(v.get("ph").and_then(astra::json::Value::as_str), Some("X"));
+        let ts = v.get("ts").and_then(astra::json::Value::as_f64).expect("numeric ts");
+        assert!(ts >= last_ts, "trace ts went backwards: {ts} < {last_ts}");
+        last_ts = ts;
+    }
+}
+
+/// The per-phase breakdown is not an estimate alongside the wall fields —
+/// it *is* the wall fields: `search_secs` and `simulate_secs` are derived
+/// from the phase sums, so they agree bit-for-bit.
+#[test]
+fn phase_breakdown_sums_to_wall_fields() {
+    for streaming in [true, false] {
+        let eng = engine(streaming, 4, 2);
+        for (name, req) in requests() {
+            let r = eng.search(&req).unwrap();
+            assert_eq!(
+                r.search_secs.to_bits(),
+                r.phases.search_secs().to_bits(),
+                "mode {name} (streaming={streaming}): search_secs != phase sum"
+            );
+            assert_eq!(
+                r.simulate_secs.to_bits(),
+                r.phases.simulate_secs().to_bits(),
+                "mode {name} (streaming={streaming}): simulate_secs != phase sum"
+            );
+            for (phase, secs) in r.phases.rows() {
+                assert!(
+                    secs.is_finite() && secs >= 0.0,
+                    "mode {name}: phase {phase} has invalid duration {secs}"
+                );
+            }
+        }
+    }
+}
+
 /// Plan-level matrix: the same request compiles to a byte-identical
 /// [`astra::coordinator::SearchPlan`] across repeats and worker counts, on
 /// every mode. (Wave knobs *are* part of the plan — they are pinned by the

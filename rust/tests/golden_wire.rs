@@ -29,8 +29,9 @@ use astra::strategy::SpaceConfig;
 use std::path::PathBuf;
 
 /// The fixed request script: every mode, a cache repeat, three error
-/// shapes and a stats line. One request per admitted batch (max_batch 1)
-/// keeps sources deterministic (`search`/`cache`, never `coalesced`).
+/// shapes, a stats line and a metrics line. One request per admitted
+/// batch (max_batch 1) keeps sources deterministic (`search`/`cache`,
+/// never `coalesced`).
 const SCRIPT: &str = "\
 {\"id\":\"homog\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
 {\"id\":\"repeat\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
@@ -40,7 +41,8 @@ const SCRIPT: &str = "\
 not json at all\n\
 {\"id\":\"badmodel\",\"model\":\"gpt-5\",\"gpu\":\"a800\",\"gpus\":8}\n\
 {\"id\":\"badbudget\",\"model\":\"llama2-7b\",\"mode\":\"cost\",\"gpu\":\"a800\",\"gpus\":8,\"max_money\":-1}\n\
-{\"cmd\":\"stats\",\"id\":\"stats\"}\n";
+{\"cmd\":\"stats\",\"id\":\"stats\"}\n\
+{\"cmd\":\"metrics\",\"id\":\"metrics\"}\n";
 
 /// Deterministic engine: analytic η (no forest dependence), fixed narrow
 /// space so the transcript stays small and debug-profile CI fast.
@@ -83,7 +85,7 @@ fn run_script() -> String {
     let mut out: Vec<u8> = Vec::new();
     let opts = ServeOpts { max_batch: 1, top: 1 };
     let stats = run_batch_lines(&svc, SCRIPT, &mut out, &opts).unwrap();
-    assert_eq!(stats.lines, 9, "script drifted");
+    assert_eq!(stats.lines, 10, "script drifted");
     assert_eq!(stats.errors, 3, "exactly the three error lines fail");
     let text = String::from_utf8(out).unwrap();
     let mut normalized = String::new();
@@ -102,8 +104,26 @@ fn wire_protocol_matches_golden_transcript() {
     // hetero-cost line must be a well-formed success with a priced plan.
     let lines: Vec<astra::json::Value> =
         got.lines().map(|l| astra::json::parse(l).unwrap()).collect();
-    assert_eq!(lines.len(), 9);
+    assert_eq!(lines.len(), 10);
     assert_eq!(lines[1].opt_str("source"), Some("cache"), "repeat must hit the cache");
+    // The metrics line is a success carrying the (normalized) registry
+    // dump: the three metric families are present, values are zeroed.
+    let metrics = &lines[9];
+    assert_eq!(metrics.opt_str("id"), Some("metrics"));
+    assert_eq!(metrics.get("ok").and_then(astra::json::Value::as_bool), Some(true));
+    for family in ["counters", "gauges", "histograms"] {
+        assert!(
+            metrics.pointer(&format!("/metrics/{family}")).is_some(),
+            "metrics payload missing the {family} family"
+        );
+    }
+    assert!(
+        metrics
+            .pointer("/metrics/counters/astra_searches_total")
+            .and_then(astra::json::Value::as_f64)
+            == Some(0.0),
+        "normalization must zero metric values"
+    );
     let hc = &lines[4];
     assert_eq!(hc.opt_str("id"), Some("hc"));
     assert_eq!(hc.get("ok").and_then(astra::json::Value::as_bool), Some(true));
