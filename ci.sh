@@ -22,7 +22,10 @@
 #                       engine's streamed path disagrees with the native
 #                       pick on the fig5 workload
 #                       (ASTRA_BENCH_MIN_HLO_PARITY; self-skips without
-#                       PJRT artifacts).
+#                       PJRT artifacts), or if repricing a held frontier
+#                       report under a rate-only price-book change beats a
+#                       cold re-search by less than the pinned factor
+#                       (ASTRA_BENCH_MIN_REPRICE_SPEEDUP, default 100×).
 #
 # Tier-1 also runs a persistence roundtrip through the release binary
 # (astra warm save → search --warm-load → diff of the canonical --json
@@ -125,11 +128,16 @@ if [ "${BENCH:-0}" = "1" ]; then
   # The HLO-parity smoke additionally asserts the HLO engine's streamed
   # per-pool path picks the same strategy as the native engine on the fig5
   # workload; it self-skips when the PJRT artifacts are absent.
+  # The frontier_reprice leg re-bills a held frontier report under a
+  # rate-only price-book change and must beat a cold re-search under the
+  # same book by ≥100× (the reprice is arithmetic over the cached skeleton;
+  # the cold search re-runs the whole sweep) while staying byte-identical.
   run env ASTRA_BENCH_FAST=1 \
       ASTRA_BENCH_OUT="$ROOT/BENCH_search.json" \
       ASTRA_BENCH_MIN_HIT_RATE="${ASTRA_BENCH_MIN_HIT_RATE:-0.50}" \
       ASTRA_BENCH_MIN_RESTORE_HIT_RATE="${ASTRA_BENCH_MIN_RESTORE_HIT_RATE:-0.50}" \
       ASTRA_BENCH_MIN_HLO_PARITY="${ASTRA_BENCH_MIN_HLO_PARITY:-1.0}" \
+      ASTRA_BENCH_MIN_REPRICE_SPEEDUP="${ASTRA_BENCH_MIN_REPRICE_SPEEDUP:-100}" \
       cargo bench --bench perf_search
   echo "ci.sh: BENCH_search.json written at the repo root — commit it to extend the perf trajectory" >&2
 fi

@@ -19,6 +19,11 @@
 //!   *telemetry_overhead* leg (cold search with the flight recorder
 //!   streaming vs the untraced cold leg) exceeds this fractional slowdown
 //!   (e.g. `0.05` = 5%);
+//! * `ASTRA_BENCH_MIN_REPRICE_SPEEDUP=<ratio>` — exit nonzero if the
+//!   *frontier_reprice* leg (re-billing a held frontier report under a
+//!   rate-only price-book change vs a cold frontier re-search under the
+//!   same new book) speeds up by less than this factor — the money axis
+//!   of the frontier cache story (`BENCH=1 ./ci.sh` pins 100×);
 //! * `ASTRA_BENCH_MIN_HLO_PARITY=<0..1>` — run the HLO-parity smoke on the
 //!   fig5 workload (llama2-7b, homogeneous a800): the HLO engine's
 //!   streamed per-pool path must pick the same strategy as the native
@@ -208,6 +213,60 @@ fn main() {
     assert_eq!(best(&cold_rep), best(&restore_rep), "restored memo changed the selection");
     assert_eq!(best(&cold_rep), best(&traced_rep), "flight recorder changed the selection");
 
+    // Frontier reprice: cold frontier search under the builtin book, then a
+    // rate-only book change — re-billing the held report must match a cold
+    // re-search under the new book byte-for-byte while skipping the engine
+    // entirely. This is the service's cached-frontier path; the leg prices
+    // how much the skip buys.
+    let catalog = GpuCatalog::builtin();
+    let fr_req = SearchRequest::frontier(&caps, model.clone()).unwrap();
+    let t = Instant::now();
+    let fr_cold_a = engine().search(&fr_req).unwrap();
+    let fr_cold_a_secs = t.elapsed().as_secs_f64();
+    let mut book_b = astra::pricing::PriceBook::builtin();
+    for e in astra::pricing::PriceBook::builtin().entries() {
+        book_b.upsert(astra::pricing::PriceEntry {
+            gpu: e.gpu.clone(),
+            on_demand_per_hour: e.on_demand_per_hour * 1.7,
+            spot_per_hour: e.spot_per_hour * 1.7,
+        });
+    }
+    book_b.use_spot = true;
+    let money_b = astra::pareto::MoneyModel { book: book_b, ..Default::default() };
+    // Best of three: the reprice is microseconds against seconds, so a
+    // single scheduler hiccup would otherwise dominate the ratio.
+    let mut reprice_secs = f64::INFINITY;
+    let mut repriced = None;
+    for _ in 0..3 {
+        let t = Instant::now();
+        let r = fr_cold_a.reprice(&model, &catalog, &money_b).expect("frontier reprice");
+        let secs = t.elapsed().as_secs_f64();
+        if secs < reprice_secs {
+            reprice_secs = secs;
+            repriced = Some(r);
+        }
+    }
+    let repriced = repriced.unwrap();
+    let eng_b = AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, money: money_b.clone(), ..Default::default() },
+    );
+    let t = Instant::now();
+    let fr_cold_b = eng_b.search(&fr_req).unwrap();
+    let fr_cold_b_secs = t.elapsed().as_secs_f64();
+    assert_eq!(
+        astra::json::to_string_pretty(&astra::report::report_json(&repriced, &catalog)),
+        astra::json::to_string_pretty(&astra::report::report_json(&fr_cold_b, &catalog)),
+        "reprice diverged from a cold frontier search under the new book"
+    );
+    let reprice_speedup = fr_cold_b_secs / reprice_secs.max(1e-12);
+    println!(
+        "reprice: {:.1}µs vs {fr_cold_b_secs:.3}s cold re-search ({reprice_speedup:.0}× — \
+         {} frontier point(s), byte-identical result)",
+        reprice_secs * 1e6,
+        repriced.pool.len()
+    );
+
     let mut out = Value::obj()
         .set(
             "workload",
@@ -242,7 +301,15 @@ fn main() {
                 .set("overhead_vs_cold", trace_overhead),
         )
         .set("speedup_warm_vs_cold", speedup)
-        .set("speedup_restore_vs_cold", cold_secs / restore_secs.max(1e-12));
+        .set("speedup_restore_vs_cold", cold_secs / restore_secs.max(1e-12))
+        .set(
+            "frontier_reprice",
+            leg_json(&fr_cold_b, fr_cold_b_secs)
+                .set("cold_first_book_secs", fr_cold_a_secs)
+                .set("reprice_secs", reprice_secs)
+                .set("frontier_points", repriced.pool.len())
+                .set("speedup_reprice_vs_cold", reprice_speedup),
+        );
 
     // --- HLO parity smoke (gated): fig5 workload through both engines ---
     let mut parity_result: Option<(f64, bool)> = None;
@@ -339,6 +406,22 @@ fn main() {
             std::process::exit(1);
         }
         println!("restored memo hit-rate {got:.3} ≥ floor {floor:.3} — ok");
+    }
+
+    // The whole point of serving frontiers from cache is skipping the
+    // engine: if repricing stops being orders of magnitude cheaper than a
+    // cold re-search, the cache path has regressed into a slow path.
+    if let Ok(floor) = std::env::var("ASTRA_BENCH_MIN_REPRICE_SPEEDUP") {
+        let floor: f64 =
+            floor.parse().expect("ASTRA_BENCH_MIN_REPRICE_SPEEDUP must be a number");
+        if reprice_speedup < floor {
+            eprintln!(
+                "perf_search: FAIL — frontier reprice speedup {reprice_speedup:.1}× below \
+                 pinned floor {floor:.1}×"
+            );
+            std::process::exit(1);
+        }
+        println!("frontier reprice speedup {reprice_speedup:.1}× ≥ floor {floor:.1}× — ok");
     }
 
     // Tracing is opt-in, but the opt-in must stay cheap: gate the on-vs-off

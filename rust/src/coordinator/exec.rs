@@ -41,7 +41,9 @@
 //!   `score_hlo`'s old detour through the reference path is gone.
 
 use super::plan::{plan_json, PoolSpec, SearchPlan};
-use super::{PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport};
+use super::{
+    FrontierCandidate, FrontierReport, PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport,
+};
 use crate::cost::features::{pack_batch, OUT};
 use crate::cost::{CostBreakdown, MemoStats, SharedCostMemo};
 use crate::memory::MemoryModel;
@@ -321,6 +323,7 @@ impl ScoringCore {
             phases,
             plan.budget,
             plan.top_k,
+            plan.frontier,
             memo_stats,
             scored_all,
         ))
@@ -481,6 +484,7 @@ fn assemble_report(
     phases: PhaseBreakdown,
     budget: Option<f64>,
     top_k: usize,
+    frontier: bool,
     memo: MemoStats,
     mut scored: Vec<ScoredStrategy>,
 ) -> SearchReport {
@@ -495,8 +499,11 @@ fn assemble_report(
             })
             .collect(),
     );
+    // Frontier plans carry the reprice skeleton, built against the same
+    // replay-order index space as the pool (before the ranking sort).
+    let frontier = frontier.then(|| FrontierReport { candidates: frontier_skeleton(&scored) });
     let n_scored = scored.len();
-    scored.sort_by(|a, b| a.cost.step_time.partial_cmp(&b.cost.step_time).unwrap());
+    scored.sort_by(|a, b| a.cost.step_time.total_cmp(&b.cost.step_time));
     if let Some(b) = budget {
         // Step-time ascending is throughput descending (tokens/step is
         // fixed per model), so the first within-budget entry is the
@@ -522,5 +529,72 @@ fn assemble_report(
         memo_misses: memo.misses,
         top: scored,
         pool,
+        frontier,
     }
+}
+
+/// The reprice skeleton: keep exactly the scored strategies that could sit
+/// on the (throughput, USD) Pareto frontier under *some* positive price
+/// book. A strategy's bill under any book is `steps × Σ_g w_g·rate_g` with
+/// per-type coefficients `w_g = step_time × count_g`, so candidate `e` can
+/// be dropped iff some `e'` has `tput' ≥ tput`, `w' ≤ w` componentwise
+/// (types missing from `e'` count as 0) and wins the [`OptimalPool::build`]
+/// tie-break (`tput' > tput`, or an earlier replay index) — such an `e` is
+/// filtered by every book's frontier build, so removing it changes nothing.
+/// The scan processes candidates in (throughput desc, idx asc) order and
+/// tests only already-kept entries; dominance is transitive along that
+/// order, so the reduction is complete as well as sound.
+fn frontier_skeleton(scored: &[ScoredStrategy]) -> Vec<FrontierCandidate> {
+    // Entries that can never pass the pool's validity retain are out
+    // entirely (they are no-ops in every build).
+    let eligible: Vec<usize> = (0..scored.len())
+        .filter(|&i| {
+            let c = &scored[i].cost;
+            c.tokens_per_s.is_finite()
+                && c.tokens_per_s >= 0.0
+                && c.step_time.is_finite()
+                && c.step_time >= 0.0
+        })
+        .collect();
+    let weights: Vec<Vec<(crate::gpu::GpuType, f64)>> = eligible
+        .iter()
+        .map(|&i| {
+            let s = &scored[i].strategy;
+            s.cluster
+                .gpus_by_type(s.tp, s.dp)
+                .into_iter()
+                .map(|(g, n)| (g, scored[i].cost.step_time * n as f64))
+                .collect()
+        })
+        .collect();
+    // `a`'s coefficients ≤ `b`'s componentwise over the type union.
+    let le = |a: &[(crate::gpu::GpuType, f64)], b: &[(crate::gpu::GpuType, f64)]| {
+        a.iter().all(|&(g, wa)| b.iter().any(|&(h, wb)| h == g && wa <= wb))
+    };
+    let mut order: Vec<usize> = (0..eligible.len()).collect();
+    order.sort_by(|&a, &b| {
+        scored[eligible[b]]
+            .cost
+            .tokens_per_s
+            .total_cmp(&scored[eligible[a]].cost.tokens_per_s)
+            .then(eligible[a].cmp(&eligible[b]))
+    });
+    let mut kept: Vec<usize> = Vec::new();
+    'next: for &o in &order {
+        let (i, w) = (eligible[o], &weights[o]);
+        let tput = scored[i].cost.tokens_per_s;
+        for &k in &kept {
+            let (j, wk) = (eligible[k], &weights[k]);
+            let beats_tie = scored[j].cost.tokens_per_s > tput || j < i;
+            if beats_tie && le(wk, w) {
+                continue 'next;
+            }
+        }
+        kept.push(o);
+    }
+    let mut idxs: Vec<usize> = kept.into_iter().map(|o| eligible[o]).collect();
+    idxs.sort_unstable();
+    idxs.into_iter()
+        .map(|idx| FrontierCandidate { idx, scored: scored[idx].clone() })
+        .collect()
 }

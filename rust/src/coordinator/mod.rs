@@ -219,6 +219,31 @@ impl PhaseBreakdown {
     }
 }
 
+/// One frontier-mode reprice candidate: a scored strategy plus its index
+/// in the executor's deterministic replay order (the same index space the
+/// report's [`OptimalPool`] entries use, so frontier points join back to
+/// full strategies exactly).
+#[derive(Debug, Clone)]
+pub struct FrontierCandidate {
+    /// Position in the replay-order scored list of the search that built
+    /// this report.
+    pub idx: usize,
+    pub scored: ScoredStrategy,
+}
+
+/// The frontier mode's reprice skeleton: every scored strategy that could
+/// sit on the (throughput, USD) Pareto frontier under *any* positive price
+/// book, in replay-order (`idx` ascending). A strategy is dropped iff some
+/// other strategy has throughput ≥ its own and a per-GPU-type cost
+/// coefficient vector (`step_time × count` per type) that is ≤ component-
+/// wise — such a strategy is dominated under every book, so the skeleton
+/// rebuilds the exact cold-search pool for any book via
+/// [`SearchReport::reprice`].
+#[derive(Debug, Clone)]
+pub struct FrontierReport {
+    pub candidates: Vec<FrontierCandidate>,
+}
+
 /// Search outcome + phase accounting (Table 1 columns).
 #[derive(Debug, Clone)]
 pub struct SearchReport {
@@ -255,6 +280,9 @@ pub struct SearchReport {
     pub top: Vec<ScoredStrategy>,
     /// Pareto pool over (throughput, money) — all scored candidates.
     pub pool: OptimalPool,
+    /// Frontier mode only: the reprice skeleton ([`FrontierReport`]).
+    /// `None` for every other mode.
+    pub frontier: Option<FrontierReport>,
 }
 
 impl SearchReport {
@@ -264,6 +292,53 @@ impl SearchReport {
 
     pub fn e2e_secs(&self) -> f64 {
         self.search_secs + self.simulate_secs
+    }
+
+    /// Re-bill a frontier report under a (possibly different) price book
+    /// without re-searching: recompute every skeleton candidate's and
+    /// every top strategy's bill through the same [`MoneyModel::cost_usd`]
+    /// path the executor used, then rebuild the pool. `None` when the
+    /// report carries no skeleton (non-frontier modes).
+    ///
+    /// Byte-identity with a cold re-search under `money.book` holds by
+    /// construction: the candidate set, counts and `top`
+    /// membership/order are price-independent for frontier plans (no
+    /// budget, no pruning, `top` sorts by step time), the bills are
+    /// recomputed bit-identically, and the skeleton provably contains
+    /// every possible frontier member (see [`FrontierReport`]).
+    pub fn reprice(
+        &self,
+        model: &ModelSpec,
+        catalog: &GpuCatalog,
+        money: &MoneyModel,
+    ) -> Option<SearchReport> {
+        self.frontier.as_ref()?;
+        let mut out = self.clone();
+        if let Some(fr) = out.frontier.as_mut() {
+            for c in fr.candidates.iter_mut() {
+                c.scored.money_usd =
+                    money.cost_usd(model, &c.scored.strategy, catalog, c.scored.cost.step_time);
+            }
+        }
+        for s in out.top.iter_mut() {
+            s.money_usd = money.cost_usd(model, &s.strategy, catalog, s.cost.step_time);
+        }
+        let entries = out
+            .frontier
+            .as_ref()
+            .map(|fr| {
+                fr.candidates
+                    .iter()
+                    .map(|c| crate::pareto::PoolEntry {
+                        idx: c.idx,
+                        throughput: c.scored.cost.tokens_per_s,
+                        cost: c.scored.money_usd,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        out.pool = OptimalPool::build(entries);
+        Some(out)
     }
 }
 
@@ -725,6 +800,42 @@ mod tests {
         };
         assert!(eng.search(&hand).is_err());
         assert!(eng.core().compile_plan(&hand).is_err());
+    }
+
+    /// Degenerate budgets at the float edges: zero (either sign) is a hard
+    /// request error, while a subnormal-but-positive budget is accepted,
+    /// searched and answered with an *explicitly empty* report — every pool
+    /// falls to the money bound in
+    /// `DominancePruner::new(plan.budget.unwrap_or(f64::INFINITY))`, and
+    /// nothing panics or fabricates an over-budget pick.
+    #[test]
+    fn zero_and_subnormal_budgets_are_explicit() {
+        let reg = ModelRegistry::builtin();
+        let model = reg.get("llama2-7b").unwrap().clone();
+        for zero in [0.0_f64, -0.0] {
+            assert!(
+                SearchRequest::cost("a800", 8, zero, model.clone()).is_err(),
+                "cost accepted budget {zero}"
+            );
+            assert!(
+                SearchRequest::hetero_cost(&[("a800", 4), ("h100", 4)], zero, model.clone())
+                    .is_err(),
+                "hetero_cost accepted budget {zero}"
+            );
+        }
+        let eng = small_engine();
+        for tiny in [f64::from_bits(1), f64::MIN_POSITIVE] {
+            let req =
+                SearchRequest::hetero_cost(&[("a800", 4), ("h100", 4)], tiny, model.clone())
+                    .unwrap();
+            let rep = eng.search(&req).unwrap();
+            assert_eq!(rep.scored, 0, "budget {tiny:e} scored a strategy");
+            assert!(rep.best().is_none(), "budget {tiny:e} bought a plan");
+            assert!(rep.top.is_empty(), "budget {tiny:e} left entries in top");
+            assert!(rep.pool.is_empty(), "empty sweep still built a pool");
+            assert!(rep.pool.best_within_budget(tiny).is_none());
+            assert!(rep.pruned_pools > 0, "nothing was pruned at budget {tiny:e}");
+        }
     }
 
     /// Narrowed space so the hetero-cost tests stay fast in debug profile.

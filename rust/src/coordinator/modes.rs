@@ -81,6 +81,23 @@ impl SearchRequest {
         }
         Ok(SearchRequest { mode: GpuPoolMode::HeteroCost { caps: resolved, max_money }, model })
     }
+
+    /// Frontier mode: the hetero-cost sweep with no budget and no money
+    /// pruning — the result is the full (throughput, USD) Pareto frontier
+    /// over mixed pools, re-priceable without re-search. Caps are a map
+    /// like [`Self::hetero_cost`]'s (duplicate names merge by summation).
+    pub fn frontier(caps: &[(&str, usize)], model: ModelSpec) -> Result<SearchRequest> {
+        let catalog = GpuCatalog::builtin();
+        let mut resolved: Vec<(crate::gpu::GpuType, usize)> = Vec::with_capacity(caps.len());
+        for &(name, cap) in caps {
+            resolved.push((catalog.find(name)?, cap));
+        }
+        let resolved = crate::strategy::merge_caps(resolved);
+        if resolved.iter().map(|&(_, c)| c).sum::<usize>() < 2 {
+            return Err(AstraError::Config("frontier caps admit fewer than 2 GPUs".into()));
+        }
+        Ok(SearchRequest { mode: GpuPoolMode::Frontier { caps: resolved }, model })
+    }
 }
 
 /// Money ceilings must be positive and not NaN (`+inf` = unlimited). Shared

@@ -97,6 +97,11 @@ pub struct SearchPlan {
     pub wave_max: usize,
     /// Ranked strategies kept in the report.
     pub top_k: usize,
+    /// Carry the full Pareto frontier (with its reprice skeleton) in the
+    /// report. Frontier plans never prune and never carry a budget, so
+    /// their candidate set is price-book-independent — the property the
+    /// service's reprice-without-re-search path rests on.
+    pub frontier: bool,
 }
 
 impl SearchPlan {
@@ -199,6 +204,36 @@ impl ScoringCore {
                     .collect();
                 (space, rounds, Some(*max_money), cfg.money_prune)
             }
+            GpuPoolMode::Frontier { caps } => {
+                // The hetero-cost sweep minus everything price-dependent:
+                // no budget, no money pruning, trivial pool bounds. Every
+                // pool is scored, so the candidate set — and with it the
+                // report counts and the frontier skeleton — is a pure
+                // function of (model, catalog, caps, space): the same
+                // search serves every price book via reprice.
+                let caps = crate::strategy::merge_caps(caps.iter().copied());
+                let cap_sum: usize = caps.iter().map(|&(_, c)| c).sum();
+                if caps.is_empty() || cap_sum < 2 {
+                    return Err(AstraError::Config(
+                        "frontier caps admit fewer than 2 GPUs".into(),
+                    ));
+                }
+                let space = self.hetero_space();
+                let solver = HeteroSolver::default();
+                let mut totals = SearchSpace::count_sweep(cap_sum);
+                if totals.last() != Some(&cap_sum) {
+                    totals.push(cap_sum);
+                }
+                let rounds: Vec<PlanRound> = totals
+                    .into_iter()
+                    .map(|total| {
+                        let mut pools = Vec::new();
+                        self.hetero_pools(model, total, &caps, &space, &solver, None, &mut pools);
+                        PlanRound { total, pools }
+                    })
+                    .collect();
+                (space, rounds, None, false)
+            }
         };
         Ok(SearchPlan {
             space,
@@ -208,6 +243,7 @@ impl ScoringCore {
             wave_base,
             wave_max,
             top_k: cfg.top_k,
+            frontier: matches!(req.mode, GpuPoolMode::Frontier { .. }),
         })
     }
 
@@ -337,6 +373,7 @@ pub fn plan_json(plan: &SearchPlan, catalog: &crate::gpu::GpuCatalog) -> Value {
         .set("space", space_json(&plan.space.config))
         .set("budget", budget)
         .set("prune", plan.prune)
+        .set("frontier", plan.frontier)
         .set("wave_base", plan.wave_base)
         .set("wave_max", plan.wave_max)
         .set("top_k", plan.top_k)

@@ -5,6 +5,11 @@
 //!   hetero-cost  heterogeneous money search: sweep mixed pools under
 //!                per-type caps and a budget, print the (tokens/s, USD)
 //!                Pareto frontier and the within-budget pick
+//!   frontier     the budget-free version of hetero-cost: sweep mixed
+//!                pools under per-type caps and print the *full*
+//!                (tokens/s, USD) Pareto curve — priced through
+//!                `--price-book`/`--spot`, re-priceable from cache without
+//!                re-searching when only rates change
 //!   simulate     replay one strategy on the discrete-event simulator
 //!   validate     cost model vs simulator accuracy over top-k strategies
 //!   serve        long-running search service (stdin or TCP, JSON lines);
@@ -45,11 +50,11 @@ fn main() {
         "astra",
         "automatic parallel-strategy search on homogeneous and heterogeneous GPUs",
     )
-    .positional("command", "search | hetero-cost | simulate | validate | serve | batch | warm | stats | trace-check | info")
+    .positional("command", "search | hetero-cost | frontier | simulate | validate | serve | batch | warm | stats | trace-check | info")
     .opt("model", "model name (see `astra info`)", Some("llama2-7b"))
     .opt("gpu", "GPU type for homogeneous/cost modes", Some("a800"))
     .opt("gpus", "cluster GPU count", Some("64"))
-    .opt("mode", "homogeneous | heterogeneous | cost | hetero-cost", Some("homogeneous"))
+    .opt("mode", "homogeneous | heterogeneous | cost | hetero-cost | frontier", Some("homogeneous"))
     .opt("hetero", "hetero caps, e.g. 'a800:2048,h100:7168'", None)
     .opt("max-money", "money ceiling in USD (cost modes)", None)
     .opt("price-book", "rate card JSON (default: builtin data/price_book.json card)", None)
@@ -305,8 +310,24 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         let max_money = args.get_f64("max-money").unwrap_or(f64::INFINITY);
         Ok(GpuPoolMode::HeteroCost { caps, max_money })
     };
+    let frontier_mode = |args: &astra::cli::Args| -> astra::Result<GpuPoolMode> {
+        let spec = args.get("hetero").ok_or_else(|| {
+            astra::AstraError::Config("--hetero 'type:cap,type:cap' required".into())
+        })?;
+        if args.get("max-money").is_some() {
+            return Err(astra::AstraError::Config(
+                "--max-money does not apply to frontier mode (the full Pareto curve \
+                 is returned); use hetero-cost for a budgeted pick"
+                    .into(),
+            ));
+        }
+        let caps = catalog.parse_caps(spec)?;
+        Ok(GpuPoolMode::Frontier { caps })
+    };
     let mode = if command == "hetero-cost" {
         hetero_cost_mode(args)?
+    } else if command == "frontier" {
+        frontier_mode(args)?
     } else {
         match args.get("mode").unwrap() {
             "homogeneous" => {
@@ -326,6 +347,7 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
                 GpuPoolMode::Cost { gpu, max_count: count, max_money }
             }
             "hetero-cost" => hetero_cost_mode(args)?,
+            "frontier" => frontier_mode(args)?,
             other => {
                 return Err(astra::AstraError::Config(format!("unknown mode '{other}'")));
             }
@@ -465,6 +487,50 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
                 _ => println!("\nno strategy fits the budget — raise it or relax the caps"),
             }
         }
+        "frontier" => {
+            let report = engine.search(&req)?;
+            if args.flag("json") {
+                println!(
+                    "{}",
+                    astra::json::to_string_pretty(&astra::report::report_json(
+                        &report, &catalog
+                    ))
+                );
+            } else {
+                print_report(&model.name, &report, args.get_usize("top")?);
+                let empty = Vec::new();
+                let cands =
+                    report.frontier.as_ref().map(|f| &f.candidates).unwrap_or(&empty);
+                let mut t = Table::new(&["tokens/s", "run cost USD", "gpus", "strategy"]);
+                for e in report.pool.entries() {
+                    // Unlike the hetero-cost table's approximate float
+                    // match, every frontier point joins exactly to its
+                    // scored strategy through the shared index space.
+                    let Some(c) = cands.iter().find(|c| c.idx == e.idx) else { continue };
+                    let gpus = c
+                        .scored
+                        .strategy
+                        .cluster
+                        .gpus_by_type(c.scored.strategy.tp, c.scored.strategy.dp)
+                        .iter()
+                        .map(|&(g, n)| format!("{}×{}", n, catalog.spec(g).name))
+                        .collect::<Vec<_>>()
+                        .join("+");
+                    t.row(&[
+                        format!("{:.0}", e.throughput),
+                        format!("{:.0}", e.cost),
+                        gpus,
+                        c.scored.strategy.summary(),
+                    ]);
+                }
+                t.emit("full (tokens/s, USD) Pareto frontier over mixed pools", None);
+                println!(
+                    "\n{} frontier point(s); rate-only price-book changes re-price \
+                     this curve from cache without re-searching",
+                    report.pool.len()
+                );
+            }
+        }
         "simulate" | "validate" => {
             let report = engine.search(&req)?;
             let sim = PipelineSimulator::new(catalog, SimConfig::default());
@@ -484,7 +550,7 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         }
         other => {
             return Err(astra::AstraError::Config(format!(
-                "unknown command '{other}' (search | hetero-cost | simulate | validate | serve | batch | warm | stats | trace-check | info)"
+                "unknown command '{other}' (search | hetero-cost | frontier | simulate | validate | serve | batch | warm | stats | trace-check | info)"
             )));
         }
     }

@@ -5,6 +5,52 @@
 //! `M_i = T_i · N_g · F_g` (Eq. 32, summed per GPU type for heterogeneous
 //! clusters), and selects the highest-throughput strategy under a money
 //! ceiling using the Eq. 33 sort order.
+//!
+//! ## Frontier mode (`"mode":"frontier"`)
+//!
+//! The frontier search promotes this module's pool to a first-class
+//! result: the report carries the full (throughput, USD) Pareto curve
+//! plus a *reprice skeleton* (`coordinator::FrontierReport`) — every
+//! scored strategy that could sit on the frontier under **any** positive
+//! price book. Wire shape (one line per response, key-sorted like every
+//! other payload):
+//!
+//! ```text
+//! {"id":..,"ok":true,"fingerprint":..,"source":"search|cache",
+//!  "frontier":{"astra_frontier":1,"count":N,
+//!              "points":[{strategy.., "money_usd":.., "tokens_per_s":..}, ..]},
+//!  "best":{..}, "engine":{..}}
+//! ```
+//!
+//! Points arrive in Eq. 33 order (throughput descending, cost descending
+//! — faster is pricier on a frontier).
+//!
+//! ### Cache keying: what is (and is not) in the money axis
+//!
+//! Frontier candidate *membership* is price-independent by construction
+//! (frontier plans compile with no budget and no money pruning), so the
+//! service caches frontiers under a fingerprint whose money axis keeps
+//! only the price book's **GPU-type name set** (membership) and drops the
+//! rates: on-demand/spot dollar figures, `use_spot`, the billing hour and
+//! the 24 time-of-day multipliers are all *out* of the frontier cache
+//! key. Model, catalog identity, caps, search space and `train_tokens`
+//! stay *in* — changing any of those is a different search.
+//!
+//! ### Reprice vs re-search
+//!
+//! | price-book change                          | served by            |
+//! | ------------------------------------------ | -------------------- |
+//! | on-demand / spot rate moved                | reprice (cache hit)  |
+//! | `use_spot` toggled                         | reprice (cache hit)  |
+//! | billing hour / time-of-day multiplier      | reprice (cache hit)  |
+//! | GPU type added to or removed from the book | re-search (new key)  |
+//! | catalog / model / caps / space changed     | re-search (new key)  |
+//!
+//! Reprice recomputes every candidate's bill through the *same*
+//! [`MoneyModel::cost_usd`] code path the executor used, then rebuilds
+//! the pool with [`OptimalPool::build`] — the result is byte-identical to
+//! a cold re-search under the new book (property-tested in
+//! `rust/tests/prop_money.rs`).
 
 use crate::gpu::{GpuCatalog, GpuType};
 use crate::model::ModelSpec;
@@ -194,6 +240,20 @@ pub struct PoolEntry {
     pub cost: f64,
 }
 
+impl PoolEntry {
+    /// Validated construction: the frontier invariant ("no NaN, nothing
+    /// negative on either axis") is enforced once, here. Callers building
+    /// entries from untrusted numbers (degenerate price books, restored
+    /// snapshots) get `None` instead of a poisoned pool.
+    pub fn new(idx: usize, throughput: f64, cost: f64) -> Option<PoolEntry> {
+        if throughput.is_finite() && cost.is_finite() && throughput >= 0.0 && cost >= 0.0 {
+            Some(PoolEntry { idx, throughput, cost })
+        } else {
+            None
+        }
+    }
+}
+
 /// The optimal pool (Eq. 30–31): the Pareto frontier over (P, C), kept
 /// sorted by Eq. 33 (throughput desc, cost asc on ties).
 #[derive(Debug, Clone, Default)]
@@ -203,14 +263,17 @@ pub struct OptimalPool {
 
 impl OptimalPool {
     /// Build the frontier in O(n log n): sort by cost ascending and keep
-    /// strictly-increasing throughput.
+    /// strictly-increasing throughput. Entries violating the frontier
+    /// invariant (NaN or negative on either axis) are dropped up front —
+    /// the sort itself is `total_cmp`, so even a hand-built `PoolEntry`
+    /// that smuggled a NaN past [`PoolEntry::new`] can no longer panic
+    /// the search.
     pub fn build(mut candidates: Vec<PoolEntry>) -> OptimalPool {
-        candidates.retain(|e| e.throughput.is_finite() && e.cost.is_finite());
+        candidates.retain(|e| {
+            e.throughput.is_finite() && e.cost.is_finite() && e.throughput >= 0.0 && e.cost >= 0.0
+        });
         candidates.sort_by(|a, b| {
-            a.cost
-                .partial_cmp(&b.cost)
-                .unwrap()
-                .then(b.throughput.partial_cmp(&a.throughput).unwrap())
+            a.cost.total_cmp(&b.cost).then(b.throughput.total_cmp(&a.throughput))
         });
         let mut frontier: Vec<PoolEntry> = Vec::new();
         let mut best = f64::NEG_INFINITY;
@@ -324,6 +387,41 @@ mod tests {
     fn ties_kept_single() {
         let pool = OptimalPool::build(vec![e(0, 100.0, 10.0), e(1, 100.0, 10.0)]);
         assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn nan_and_negative_entries_never_panic_or_pollute() {
+        // Regression: the old sort used partial_cmp().unwrap() — one NaN
+        // cost (a degenerate price book) panicked the whole search.
+        let pool = OptimalPool::build(vec![
+            e(0, f64::NAN, 10.0),
+            e(1, 100.0, f64::NAN),
+            e(2, -5.0, 10.0),
+            e(3, 100.0, -1.0),
+            e(4, f64::INFINITY, 1.0),
+            e(5, 100.0, 10.0),
+        ]);
+        let idxs: Vec<usize> = pool.entries().iter().map(|x| x.idx).collect();
+        assert_eq!(idxs, vec![5], "only the finite non-negative entry survives");
+        assert!(pool.is_valid_frontier());
+        // All-invalid input degrades to an empty pool, not a panic.
+        assert!(OptimalPool::build(vec![e(0, f64::NAN, f64::NAN)]).is_empty());
+    }
+
+    #[test]
+    fn pool_entry_constructor_rejects_invalid_pairs() {
+        assert!(PoolEntry::new(0, 100.0, 10.0).is_some());
+        assert!(PoolEntry::new(0, 0.0, 0.0).is_some(), "zero is a legal boundary");
+        for (p, c) in [
+            (f64::NAN, 1.0),
+            (1.0, f64::NAN),
+            (-1.0, 1.0),
+            (1.0, -1.0),
+            (f64::INFINITY, 1.0),
+            (1.0, f64::INFINITY),
+        ] {
+            assert!(PoolEntry::new(0, p, c).is_none(), "accepted ({p}, {c})");
+        }
     }
 
     #[test]

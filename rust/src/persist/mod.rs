@@ -77,7 +77,9 @@
 //! * `astra warm inspect <file>` — [`inspect`], header-level validity
 //!   against the current engine without importing anything.
 
-use crate::coordinator::{PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport};
+use crate::coordinator::{
+    FrontierCandidate, FrontierReport, PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport,
+};
 use crate::cost::{CostBreakdown, CostConsts, EtaProvider, MemoRows, StageTime};
 use crate::gbdt::Forest;
 use crate::gpu::GpuCatalog;
@@ -147,6 +149,9 @@ pub struct EngineMeta {
     pub eta: String,
     pub consts: u64,
     pub book: u64,
+    /// Rate-free membership digest of the same book — the book pin used by
+    /// `"cache.frontier"` scopes (see [`book_membership_digest`]).
+    pub book_membership: u64,
 }
 
 impl EngineMeta {
@@ -164,6 +169,7 @@ impl EngineMeta {
             eta: eta_identity(eta),
             consts: consts_digest(consts),
             book: book_digest(book),
+            book_membership: book_membership_digest(book),
         }
     }
 
@@ -258,6 +264,19 @@ pub fn book_digest(book: &PriceBook) -> u64 {
     let mut h = Fnv64::new();
     h.field_str("book", "v1");
     crate::service::fingerprint::hash_book(&mut h, book);
+    h.finish()
+}
+
+/// Digest over the book's *membership* only — which GPU types carry a rate
+/// card, not what the rates are. This is the book pin for
+/// `"cache.frontier"` scopes: a frontier's candidate set is independent of
+/// rates, so spilled frontiers must survive rate-only book edits (they are
+/// re-priced at serve time) and be invalidated only when a card appears or
+/// disappears, which can change frontier membership.
+pub fn book_membership_digest(book: &PriceBook) -> u64 {
+    let mut h = Fnv64::new();
+    h.field_str("book.membership", "v1");
+    crate::service::fingerprint::hash_book_membership(&mut h, book);
     h.finish()
 }
 
@@ -405,14 +424,17 @@ impl WarmWriter {
         self.out.push('\n');
     }
 
-    fn meta_header(meta: &EngineMeta, kind: &str) -> Value {
+    /// Scope header skeleton. `book` is the caller's pick of book pin:
+    /// the full [`book_digest`] for `"memo"`/`"cache"` scopes, the rate-free
+    /// [`book_membership_digest`] for `"cache.frontier"` scopes.
+    fn meta_header(meta: &EngineMeta, kind: &str, book: u64) -> Value {
         Value::obj()
             .set("kind", kind)
             .set("format", FORMAT_VERSION)
             .set("catalog", hex64(meta.catalog))
             .set("eta", meta.eta.as_str())
             .set("consts", hex64(meta.consts))
-            .set("book", hex64(meta.book))
+            .set("book", hex64(book))
     }
 
     fn push_row_to(out: &mut String, t: &str, k: &[u64], v: &[u64; 3], sum: &mut Fnv64) {
@@ -436,7 +458,7 @@ impl WarmWriter {
     /// section before committing it to a snapshot.
     pub fn memo_scope_section(key: u64, rows: &MemoRows, meta: &EngineMeta) -> String {
         let mut out = String::new();
-        let header = Self::meta_header(meta, "memo")
+        let header = Self::meta_header(meta, "memo", meta.book)
             .set("key", hex64(key))
             .set("stage_rows", rows.stages.len())
             .set("sync_rows", rows.syncs.len());
@@ -493,10 +515,35 @@ impl WarmWriter {
         catalog: &GpuCatalog,
         meta: &EngineMeta,
     ) {
+        self.cache_section_kind(entries, catalog, meta, "cache", meta.book);
+    }
+
+    /// Like [`Self::cache_section`] but for frontier-mode reports: the
+    /// scope kind is `"cache.frontier"` and the book pin is the rate-free
+    /// [`book_membership_digest`], so spilled frontiers survive rate-only
+    /// price-book changes across a restart (the service re-prices them at
+    /// serve time) and are invalidated only when membership could change.
+    pub fn frontier_cache_section(
+        &mut self,
+        entries: &[(u64, Arc<SearchReport>)],
+        catalog: &GpuCatalog,
+        meta: &EngineMeta,
+    ) {
+        self.cache_section_kind(entries, catalog, meta, "cache.frontier", meta.book_membership);
+    }
+
+    fn cache_section_kind(
+        &mut self,
+        entries: &[(u64, Arc<SearchReport>)],
+        catalog: &GpuCatalog,
+        meta: &EngineMeta,
+        kind: &str,
+        book: u64,
+    ) {
         if entries.is_empty() {
             return;
         }
-        let header = Self::meta_header(meta, "cache").set("entries", entries.len());
+        let header = Self::meta_header(meta, kind, book).set("entries", entries.len());
         self.push_line(&Value::obj().set("scope", header));
         let mut sum = Fnv64::new();
         for (fp, report) in entries {
@@ -507,7 +554,7 @@ impl WarmWriter {
         }
         self.push_line(
             &Value::obj()
-                .set("end", "cache")
+                .set("end", kind)
                 .set("rows", entries.len())
                 .set("sum", hex64(sum.finish())),
         );
@@ -563,12 +610,16 @@ impl RestoreSet {
     }
 }
 
-fn header_matches(h: &Value, meta: &EngineMeta) -> bool {
+fn header_matches_with_book(h: &Value, meta: &EngineMeta, book: u64) -> bool {
     h.get("format").and_then(Value::as_u64) == Some(FORMAT_VERSION)
         && h.get("catalog").and_then(parse_hex) == Some(meta.catalog)
         && h.opt_str("eta") == Some(meta.eta.as_str())
         && h.get("consts").and_then(parse_hex) == Some(meta.consts)
-        && h.get("book").and_then(parse_hex) == Some(meta.book)
+        && h.get("book").and_then(parse_hex) == Some(book)
+}
+
+fn header_matches(h: &Value, meta: &EngineMeta) -> bool {
+    header_matches_with_book(h, meta, meta.book)
 }
 
 fn parse_memo_row(line: &str) -> Option<(String, Vec<u64>, [u64; 3])> {
@@ -680,6 +731,8 @@ fn read_cache_scope(
     lines: &mut std::str::Lines<'_>,
     catalog: &GpuCatalog,
     meta: &EngineMeta,
+    kind: &str,
+    book: u64,
     want_cache: bool,
     set: &mut RestoreSet,
 ) -> bool {
@@ -687,7 +740,7 @@ fn read_cache_scope(
         set.scopes_rejected += 1;
         return false;
     };
-    let accept = header_matches(header, meta);
+    let accept = header_matches_with_book(header, meta, book);
     let mut sum = Fnv64::new();
     let mut good = true;
     // The count is untrusted header data: clamp the pre-allocation so a
@@ -721,7 +774,7 @@ fn read_cache_scope(
             None => good = false,
         }
     }
-    let footer = check_footer(lines.next(), &Value::Str("cache".to_string()), n, sum.finish());
+    let footer = check_footer(lines.next(), &Value::Str(kind.to_string()), n, sum.finish());
     let Some(footer_ok) = footer else {
         set.scopes_rejected += 1;
         return false;
@@ -775,9 +828,19 @@ pub fn read_warm_filtered(
         };
         let go = match header.opt_str("kind") {
             Some("memo") => read_memo_scope(&header, &mut lines, meta, &mut set),
-            Some("cache") => {
-                read_cache_scope(&header, &mut lines, catalog, meta, want_cache, &mut set)
-            }
+            Some("cache") => read_cache_scope(
+                &header, &mut lines, catalog, meta, "cache", meta.book, want_cache, &mut set,
+            ),
+            Some("cache.frontier") => read_cache_scope(
+                &header,
+                &mut lines,
+                catalog,
+                meta,
+                "cache.frontier",
+                meta.book_membership,
+                want_cache,
+                &mut set,
+            ),
             _ => {
                 set.scopes_rejected += 1;
                 false
@@ -819,7 +882,12 @@ fn header_status(h: &Value, meta: &EngineMeta) -> String {
     if h.get("consts").and_then(parse_hex) != Some(meta.consts) {
         return "cost-consts digest mismatch".to_string();
     }
-    if h.get("book").and_then(parse_hex) != Some(meta.book) {
+    // Frontier scopes pin the rate-free membership digest, not the full card.
+    if h.opt_str("kind") == Some("cache.frontier") {
+        if h.get("book").and_then(parse_hex) != Some(meta.book_membership) {
+            return "price-book membership mismatch".to_string();
+        }
+    } else if h.get("book").and_then(parse_hex) != Some(meta.book) {
         return "price-book digest mismatch".to_string();
     }
     "ok".to_string()
@@ -855,6 +923,7 @@ pub fn inspect(text: &str, meta: &EngineMeta) -> Vec<ScopeInfo> {
                 h.opt_usize("stage_rows").unwrap_or(0) + h.opt_usize("sync_rows").unwrap_or(0),
             ),
             "cache" => ("result cache".to_string(), h.opt_usize("entries").unwrap_or(0)),
+            "cache.frontier" => ("frontier cache".to_string(), h.opt_usize("entries").unwrap_or(0)),
             _ => ("?".to_string(), 0),
         };
         out.push(ScopeInfo { kind, detail, rows, status: header_status(&h, meta) });
@@ -1001,7 +1070,7 @@ pub fn report_to_value(r: &SearchReport, catalog: &GpuCatalog) -> Value {
         .iter()
         .map(|e| Value::obj().set("idx", e.idx).set("tput", bits(e.throughput)).set("cost", bits(e.cost)))
         .collect();
-    Value::obj()
+    let out = Value::obj()
         .set("generated", r.generated)
         .set("rule_filtered", r.rule_filtered)
         .set("mem_filtered", r.mem_filtered)
@@ -1022,7 +1091,24 @@ pub fn report_to_value(r: &SearchReport, catalog: &GpuCatalog) -> Value {
         .set("memo_hits", r.memo_hits)
         .set("memo_misses", r.memo_misses)
         .set("top", Value::Arr(top))
-        .set("pool", Value::Arr(pool))
+        .set("pool", Value::Arr(pool));
+    match &r.frontier {
+        Some(fr) => {
+            let cands: Vec<Value> = fr
+                .candidates
+                .iter()
+                .map(|c| {
+                    Value::obj()
+                        .set("idx", c.idx)
+                        .set("strategy", strategy_to_value(&c.scored.strategy, catalog))
+                        .set("cost", cost_to_value(&c.scored.cost))
+                        .set("money", bits(c.scored.money_usd))
+                })
+                .collect();
+            out.set("frontier", Value::Arr(cands))
+        }
+        None => out,
+    }
 }
 
 /// Inverse of [`report_to_value`].
@@ -1064,6 +1150,29 @@ pub fn report_from_value(v: &Value, catalog: &GpuCatalog) -> Result<SearchReport
         },
         None => PhaseBreakdown::default(),
     };
+    // Optional: only frontier-mode reports carry a candidate skeleton, and
+    // snapshots written before frontier mode existed have no field at all.
+    let frontier = match v.get("frontier") {
+        Some(fv) => {
+            let mut candidates = Vec::new();
+            for cv in fv.as_arr().ok_or_else(|| AstraError::Json("bad frontier array".into()))? {
+                let strategy = strategy_from_value(
+                    cv.get("strategy")
+                        .ok_or_else(|| AstraError::Json("missing frontier strategy".into()))?,
+                    catalog,
+                )?;
+                let cost = cost_from_value(
+                    cv.get("cost").ok_or_else(|| AstraError::Json("missing frontier cost".into()))?,
+                )?;
+                candidates.push(FrontierCandidate {
+                    idx: cv.req_usize("idx")?,
+                    scored: ScoredStrategy { strategy, cost, money_usd: req_bits(cv, "money")? },
+                });
+            }
+            Some(FrontierReport { candidates })
+        }
+        None => None,
+    };
     Ok(SearchReport {
         generated: v.req_usize("generated")?,
         rule_filtered: v.req_usize("rule_filtered")?,
@@ -1077,16 +1186,24 @@ pub fn report_from_value(v: &Value, catalog: &GpuCatalog) -> Result<SearchReport
         memo_misses: req_count("memo_misses")?,
         top,
         pool: OptimalPool::from_entries(entries),
+        frontier,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pricing::PriceEntry;
     use crate::strategy::{ClusterAssignment, RecomputeMethod};
 
     fn meta() -> EngineMeta {
-        EngineMeta { catalog: 0x1111, eta: "analytic".to_string(), consts: 0x2222, book: 0x3333 }
+        EngineMeta {
+            catalog: 0x1111,
+            eta: "analytic".to_string(),
+            consts: 0x2222,
+            book: 0x3333,
+            book_membership: 0x4444,
+        }
     }
 
     fn rows() -> MemoRows {
@@ -1264,7 +1381,19 @@ mod tests {
                 throughput: 123456.789,
                 cost: 1234.5678,
             }]),
+            frontier: None,
         }
+    }
+
+    /// [`sample_report`] with a one-candidate frontier skeleton attached,
+    /// as a frontier-mode search would produce.
+    fn sample_frontier_report(catalog: &GpuCatalog) -> SearchReport {
+        let mut r = sample_report(catalog);
+        let scored = r.top[0].clone();
+        r.frontier = Some(FrontierReport {
+            candidates: vec![FrontierCandidate { idx: 0, scored }],
+        });
+        r
     }
 
     #[test]
@@ -1329,6 +1458,87 @@ mod tests {
         );
         // A mismatched identity skips the cache section too.
         let set = read_warm(&w.out, &catalog, &EngineMeta { book: 0x9999, ..meta() });
+        assert!(set.cache.is_empty());
+        assert_eq!(set.scopes_rejected, 1);
+    }
+
+    #[test]
+    fn frontier_codec_roundtrips_bit_exactly() {
+        let catalog = GpuCatalog::builtin();
+        let r = sample_frontier_report(&catalog);
+        let encoded = json::to_string(&report_to_value(&r, &catalog));
+        let back = report_from_value(&json::parse(&encoded).unwrap(), &catalog).unwrap();
+        let (fa, fb) = (r.frontier.as_ref().unwrap(), back.frontier.as_ref().unwrap());
+        assert_eq!(fa.candidates.len(), fb.candidates.len());
+        assert_eq!(fa.candidates[0].idx, fb.candidates[0].idx);
+        assert_eq!(fa.candidates[0].scored.strategy, fb.candidates[0].scored.strategy);
+        assert_eq!(
+            fa.candidates[0].scored.money_usd.to_bits(),
+            fb.candidates[0].scored.money_usd.to_bits()
+        );
+        assert_eq!(
+            fa.candidates[0].scored.cost.step_time.to_bits(),
+            fb.candidates[0].scored.cost.step_time.to_bits()
+        );
+        // Frontier-free reports encode without the field and restore None.
+        let plain = sample_report(&catalog);
+        let encoded = json::to_string(&report_to_value(&plain, &catalog));
+        assert!(!encoded.contains("\"frontier\""));
+        let back = report_from_value(&json::parse(&encoded).unwrap(), &catalog).unwrap();
+        assert!(back.frontier.is_none());
+    }
+
+    #[test]
+    fn frontier_cache_section_pins_membership_not_rates() {
+        let catalog = GpuCatalog::builtin();
+        let book_a = PriceBook::builtin();
+        let meta_for = |book: &PriceBook| EngineMeta {
+            book: book_digest(book),
+            book_membership: book_membership_digest(book),
+            ..meta()
+        };
+        let mut w = WarmWriter::new();
+        w.frontier_cache_section(
+            &[(0xf00d, Arc::new(sample_frontier_report(&catalog)))],
+            &catalog,
+            &meta_for(&book_a),
+        );
+        let text = w.out;
+
+        // Rate-only edits (price move, spot billing, time-of-day) keep the
+        // spilled frontier restorable: it is re-priced at serve time.
+        let mut rates = book_a.clone();
+        rates.upsert(PriceEntry {
+            gpu: "h100".to_string(),
+            on_demand_per_hour: 9.99,
+            spot_per_hour: 3.33,
+        });
+        rates.use_spot = true;
+        rates.hour = Some(3);
+        assert_ne!(book_digest(&book_a), book_digest(&rates));
+        let set = read_warm(&text, &catalog, &meta_for(&rates));
+        assert_eq!(set.scopes_rejected, 0);
+        assert_eq!(set.cache.len(), 1);
+        assert_eq!(set.cache[0].0, 0xf00d);
+        assert!(set.cache[0].1.frontier.is_some());
+
+        // A membership change (new rate card) invalidates the section:
+        // the frontier's candidate set could differ under the new book.
+        let mut grown = book_a.clone();
+        grown.upsert(PriceEntry {
+            gpu: "tpu-v9".to_string(),
+            on_demand_per_hour: 7.0,
+            spot_per_hour: 2.8,
+        });
+        let set = read_warm(&text, &catalog, &meta_for(&grown));
+        assert!(set.cache.is_empty(), "membership change must not restore");
+        assert_eq!(set.scopes_rejected, 1);
+
+        // And the ordinary cache section still pins the *full* book: the
+        // same rate-only edit rejects it.
+        let mut w = WarmWriter::new();
+        w.cache_section(&[(0xbeef, Arc::new(sample_report(&catalog)))], &catalog, &meta_for(&book_a));
+        let set = read_warm(&w.out, &catalog, &meta_for(&rates));
         assert!(set.cache.is_empty());
         assert_eq!(set.scopes_rejected, 1);
     }

@@ -293,6 +293,56 @@ mod tests {
         assert_eq!(book.rate_per_hour("h100").unwrap(), 4.1);
     }
 
+    /// `from_json` must reject malformed `tod_multipliers` arrays at load
+    /// time — short, long, NaN and non-positive values all fail validation
+    /// before the book can reach the money model (re: frontier repricing,
+    /// where a bad multiplier would otherwise poison every cached curve).
+    #[test]
+    fn from_json_rejects_bad_tod_multipliers() {
+        let gpus = r#""gpus":[{"name":"a800","on_demand_per_hour":2.6}]"#;
+        let ok = |mults: &str| {
+            let v = crate::json::parse(&format!("{{{gpus},\"tod_multipliers\":{mults}}}"))
+                .unwrap();
+            PriceBook::from_json(&v)
+        };
+
+        let flat24: Vec<String> = (0..24).map(|_| "1.0".to_string()).collect();
+        assert!(ok(&format!("[{}]", flat24.join(","))).is_ok(), "24 flat multipliers");
+
+        let short23 = format!("[{}]", flat24[..23].join(","));
+        let err = ok(&short23).unwrap_err().to_string();
+        assert!(err.contains("23"), "short array names its length: {err}");
+
+        let mut long25 = flat24.clone();
+        long25.push("1.0".to_string());
+        let err = ok(&format!("[{}]", long25.join(","))).unwrap_err().to_string();
+        assert!(err.contains("25"), "long array names its length: {err}");
+
+        // RFC 8259 has no NaN literal, so inject one past the parser: the
+        // validator must still catch it.
+        let mut v = crate::json::parse(&format!(
+            "{{{gpus},\"tod_multipliers\":[{}]}}",
+            flat24.join(",")
+        ))
+        .unwrap();
+        if let crate::json::Value::Obj(m) = &mut v {
+            if let Some(crate::json::Value::Arr(a)) = m.get_mut("tod_multipliers") {
+                a[7] = crate::json::Value::Num(f64::NAN);
+            }
+        }
+        let err = PriceBook::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("non-positive"), "NaN multiplier rejected: {err}");
+
+        let mut with_neg = flat24.clone();
+        with_neg[11] = "-0.5".to_string();
+        let err = ok(&format!("[{}]", with_neg.join(","))).unwrap_err().to_string();
+        assert!(err.contains("non-positive"), "negative multiplier rejected: {err}");
+
+        let mut with_zero = flat24;
+        with_zero[0] = "0.0".to_string();
+        assert!(ok(&format!("[{}]", with_zero.join(","))).is_err(), "zero multiplier");
+    }
+
     #[test]
     fn json_matches_builtin() {
         // data/price_book.json must agree with the compiled-in card. The

@@ -158,14 +158,47 @@ pub fn report_json(
                 .set("cost", e.cost)
         })
         .collect();
-    Value::obj()
+    let out = Value::obj()
         .set("generated", r.generated)
         .set("rule_filtered", r.rule_filtered)
         .set("mem_filtered", r.mem_filtered)
         .set("scored", r.scored)
         .set("pruned_pools", r.pruned_pools)
         .set("top", Value::Arr(top))
-        .set("pool", Value::Arr(pool))
+        .set("pool", Value::Arr(pool));
+    match frontier_json(r, catalog) {
+        Some(f) => out.set("frontier", f),
+        None => out,
+    }
+}
+
+/// Canonical wire view of a frontier-mode result: the full Pareto curve in
+/// Eq. 33 order (throughput descending), each point joined back to its
+/// complete scored strategy through the pool/skeleton shared index space.
+/// `None` for reports of the other modes (their wire shape is unchanged).
+pub fn frontier_json(
+    r: &crate::coordinator::SearchReport,
+    catalog: &crate::gpu::GpuCatalog,
+) -> Option<crate::json::Value> {
+    use crate::json::Value;
+    let fr = r.frontier.as_ref()?;
+    let points: Vec<Value> = r
+        .pool
+        .entries()
+        .iter()
+        .filter_map(|e| {
+            fr.candidates
+                .iter()
+                .find(|c| c.idx == e.idx)
+                .map(|c| scored_strategy_json(&c.scored, catalog))
+        })
+        .collect();
+    Some(
+        Value::obj()
+            .set("astra_frontier", 1u64)
+            .set("count", points.len())
+            .set("points", Value::Arr(points)),
+    )
 }
 
 /// Human formatting helpers shared by benches.

@@ -306,6 +306,13 @@ pub fn report_bytes(r: &SearchReport) -> usize {
         b += s.cost.stage_times.len() * std::mem::size_of::<f64>();
     }
     b += r.pool.len() * std::mem::size_of::<PoolEntry>();
+    if let Some(fr) = &r.frontier {
+        for c in &fr.candidates {
+            b += std::mem::size_of_val(c);
+            b += c.scored.strategy.cluster.segments.len() * std::mem::size_of::<Segment>();
+            b += c.scored.cost.stage_times.len() * std::mem::size_of::<f64>();
+        }
+    }
     b
 }
 
@@ -328,6 +335,7 @@ mod tests {
             memo_misses: 0,
             top: Vec::new(),
             pool: OptimalPool::default(),
+            frontier: None,
         })
     }
 

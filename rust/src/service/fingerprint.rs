@@ -169,6 +169,17 @@ fn hash_mode(h: &mut Fnv64, mode: &GpuPoolMode, catalog: &GpuCatalog) {
                 h.field_str("cap.gpu", name).field_usize("cap.n", cap);
             }
         }
+        GpuPoolMode::Frontier { caps } => {
+            h.field_str("mode", "frontier");
+            let mut named = merge_caps(
+                caps.iter().map(|&(g, c)| (catalog.spec(g).name.as_str(), c)),
+            );
+            named.sort_unstable();
+            h.field_usize("caps.len", named.len());
+            for (name, cap) in named {
+                h.field_str("cap.gpu", name).field_usize("cap.n", cap);
+            }
+        }
     }
 }
 
@@ -228,7 +239,26 @@ fn hash_space(h: &mut Fnv64, s: &SpaceConfig) {
         .field_bool("space.flash", s.use_flash_attn);
 }
 
-fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
+/// Membership-only view of the price book: the GPU-type *name set*, none
+/// of the rates. This is the frontier cache key's money axis — frontier
+/// candidate sets are rate-independent by construction (no budget, no
+/// money pruning), so only a change that could alter frontier *membership*
+/// (a type entering or leaving the book, flipping whose bills fall back to
+/// the catalog rate) may change the key. On-demand/spot dollars,
+/// `use_spot`, the billing hour and the time-of-day multipliers are all
+/// deliberately absent: those changes are served by reprice, not
+/// re-search.
+pub(crate) fn hash_book_membership(h: &mut Fnv64, book: &crate::pricing::PriceBook) {
+    h.field_usize("book.members.len", book.entries().len());
+    for e in book.entries() {
+        h.field_str("book.member", &e.gpu);
+    }
+}
+
+/// Everything [`hash_config`] covers except the price book — shared by the
+/// full fingerprint (which appends [`hash_book`]) and the frontier
+/// fingerprint (which appends [`hash_book_membership`] instead).
+fn hash_config_core(h: &mut Fnv64, cfg: &EngineConfig) {
     hash_space(h, &cfg.space);
     // Rule order is irrelevant (any match filters); sort + dedup sources.
     let mut sources: Vec<&str> = cfg.rules.rules.iter().map(|r| r.source.as_str()).collect();
@@ -255,11 +285,15 @@ fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
     // retired the old reference pipeline.
     .field_bool("streaming", cfg.streaming)
     .field_usize("top_k", cfg.top_k);
-    hash_book(h, &cfg.money.book);
     // `workers`, `sweep_wave` and `sweep_wave_max` deliberately excluded:
     // worker count never changes results, and the hetero-cost wave replay
     // (adaptive or not) is byte-identical to the serial sweep at any wave
     // schedule (differential-tested).
+}
+
+fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
+    hash_config_core(h, cfg);
+    hash_book(h, &cfg.money.book);
 }
 
 /// Fingerprint of (request, config): the service cache key.
@@ -269,6 +303,26 @@ pub fn fingerprint(req: &SearchRequest, catalog: &GpuCatalog, cfg: &EngineConfig
     hash_model(&mut h, &req.model);
     hash_mode(&mut h, &req.mode, catalog);
     hash_config(&mut h, cfg);
+    Fingerprint(h.finish())
+}
+
+/// The frontier cache key: identical to [`fingerprint`] except the price
+/// book enters membership-only ([`hash_book_membership`]) — rates, spot
+/// selection, billing hour and time-of-day multipliers are out, so a
+/// rate-only book change keys to the *same* cached frontier and is served
+/// by reprice instead of re-search. Its own version tag keeps the two
+/// keyspaces from ever colliding inside the shared cache.
+pub fn frontier_fingerprint(
+    req: &SearchRequest,
+    catalog: &GpuCatalog,
+    cfg: &EngineConfig,
+) -> Fingerprint {
+    let mut h = Fnv64::new();
+    h.field_str("astra.frontier_fingerprint", "v1");
+    hash_model(&mut h, &req.model);
+    hash_mode(&mut h, &req.mode, catalog);
+    hash_config_core(&mut h, cfg);
+    hash_book_membership(&mut h, &cfg.money.book);
     Fingerprint(h.finish())
 }
 
@@ -430,6 +484,65 @@ mod tests {
         let mut cb = EngineConfig::default();
         cb.rules = rb;
         assert_eq!(fp(&req, &ca), fp(&req, &cb));
+    }
+
+    #[test]
+    fn frontier_key_drops_rates_but_keeps_membership() {
+        let cat = GpuCatalog::builtin();
+        let req = SearchRequest::frontier(&[("a800", 8), ("h100", 8)], model()).unwrap();
+        let base = EngineConfig::default();
+        let ffp = |cfg: &EngineConfig| frontier_fingerprint(&req, &cat, cfg);
+        let f = ffp(&base);
+
+        // Rate-only book changes: same frontier key (served by reprice) …
+        let mut repriced = EngineConfig::default();
+        repriced.money.book.upsert(crate::pricing::PriceEntry {
+            gpu: "a800".to_string(),
+            on_demand_per_hour: 9.99,
+            spot_per_hour: 1.0,
+        });
+        assert_eq!(f, ffp(&repriced), "a rate move must not change the frontier key");
+        let mut spot = EngineConfig::default();
+        spot.money.book.use_spot = true;
+        assert_eq!(f, ffp(&spot), "spot billing must not change the frontier key");
+        let mut tod = EngineConfig::default();
+        tod.money.book.tod_multipliers[3] = 0.5;
+        tod.money.book.hour = Some(3);
+        assert_eq!(f, ffp(&tod), "time-of-day pricing must not change the frontier key");
+        // … while the full (response) fingerprint still sees them all.
+        assert_ne!(fp(&req, &base), fp(&req, &repriced));
+        assert_ne!(fp(&req, &base), fp(&req, &spot));
+
+        // Membership changes re-key: a GPU type entering the book could
+        // change whose bills fall back to the catalog rate.
+        let mut grown = EngineConfig::default();
+        grown.money.book.upsert(crate::pricing::PriceEntry {
+            gpu: "tpu-v9".to_string(),
+            on_demand_per_hour: 5.0,
+            spot_per_hour: 2.0,
+        });
+        assert_ne!(f, ffp(&grown), "book membership must stay in the frontier key");
+        // Non-book axes still key normally.
+        let mut tokens = EngineConfig::default();
+        tokens.money.train_tokens = 2e9;
+        assert_ne!(f, ffp(&tokens));
+        let other_caps = SearchRequest::frontier(&[("a800", 4), ("h100", 8)], model()).unwrap();
+        assert_ne!(f, frontier_fingerprint(&other_caps, &cat, &base));
+        // The two keyspaces never collide (distinct version tags).
+        assert_ne!(f, fp(&req, &base));
+    }
+
+    #[test]
+    fn frontier_caps_canonicalize_like_the_other_hetero_modes() {
+        let cat = GpuCatalog::builtin();
+        let cfg = EngineConfig::default();
+        let a = SearchRequest::frontier(&[("a800", 48), ("h100", 16)], model()).unwrap();
+        let b = SearchRequest::frontier(&[("h100", 16), ("a800", 48)], model()).unwrap();
+        let c =
+            SearchRequest::frontier(&[("h100", 16), ("a800", 24), ("a800", 24)], model()).unwrap();
+        assert_eq!(frontier_fingerprint(&a, &cat, &cfg), frontier_fingerprint(&b, &cat, &cfg));
+        assert_eq!(frontier_fingerprint(&a, &cat, &cfg), frontier_fingerprint(&c, &cat, &cfg));
+        assert_eq!(fp(&a, &cfg), fp(&b, &cfg));
     }
 
     #[test]

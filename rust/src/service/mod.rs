@@ -37,9 +37,10 @@ pub mod fingerprint;
 pub mod server;
 
 pub use cache::{CacheConfig, CacheStats, ShardedCache};
-pub use fingerprint::{fingerprint, Fingerprint};
+pub use fingerprint::{fingerprint, frontier_fingerprint, Fingerprint};
 
 use crate::coordinator::{ScoringCore, SearchReport, SearchRequest};
+use crate::strategy::GpuPoolMode;
 use crate::persist;
 use crate::pool::par_for_indices;
 use crate::{AstraError, Result};
@@ -270,8 +271,18 @@ impl SearchService {
         let mut w = persist::WarmWriter::new();
         self.core.export_warm_within(&mut w, self.config.warm.max_snapshot_bytes);
         if self.config.warm.include_cache {
-            let entries = self.cache.export_entries();
-            w.cache_section(&entries, &self.core.catalog, self.core.engine_meta());
+            // Frontier reports spill into their own scope: it is pinned to
+            // the book's *membership* digest instead of the full rate card,
+            // so a restart under a rate-only book change keeps the frontier
+            // (repriced at serve time) while ordinary cached results are
+            // correctly invalidated with the rates they were billed under.
+            let (frontier, regular): (Vec<_>, Vec<_>) = self
+                .cache
+                .export_entries()
+                .into_iter()
+                .partition(|(_, r)| r.frontier.is_some());
+            w.cache_section(&regular, &self.core.catalog, self.core.engine_meta());
+            w.frontier_cache_section(&frontier, &self.core.catalog, self.core.engine_meta());
         }
         let stats = w.finish_to(&path)?;
         self.core.persist_counters().note_spill(&stats);
@@ -320,38 +331,78 @@ impl SearchService {
         fingerprint(req, &self.core.catalog, &self.core.config)
     }
 
+    /// The *cache* key of a request. Frontier requests key through
+    /// [`frontier_fingerprint`] — the price book's rates are out of the
+    /// key's money axis (membership only), so a rate-only book change
+    /// lands on the same cached frontier and is served by reprice. Every
+    /// other mode keys through the full [`fingerprint`].
+    pub fn cache_key_of(&self, req: &SearchRequest) -> Fingerprint {
+        match req.mode {
+            GpuPoolMode::Frontier { .. } => {
+                frontier_fingerprint(req, &self.core.catalog, &self.core.config)
+            }
+            _ => self.fingerprint_of(req),
+        }
+    }
+
+    /// Serve a cached report. Frontier hits are re-billed under the
+    /// engine's *current* price book on the way out ([`SearchReport::reprice`]
+    /// — identity for an in-process hit, the whole point after a warm
+    /// restart under a changed book). Reprice is pure recomputation: the
+    /// engine admission counter never moves. `None` when a frontier entry
+    /// carries no skeleton (treated as a miss, falls through to search).
+    fn serve_cached(
+        &self,
+        req: &SearchRequest,
+        fp: Fingerprint,
+        is_frontier: bool,
+        report: Arc<SearchReport>,
+        t0: &Instant,
+    ) -> Option<ServiceResponse> {
+        let report = if is_frontier {
+            Arc::new(report.reprice(&req.model, &self.core.catalog, &self.core.config.money)?)
+        } else {
+            report
+        };
+        Some(ServiceResponse {
+            fingerprint: fp,
+            source: ResponseSource::Cache,
+            service_secs: t0.elapsed().as_secs_f64(),
+            report,
+        })
+    }
+
     /// Serve one request: cache → single-flight coalescing → engine search.
     pub fn handle(&self, req: &SearchRequest) -> Result<ServiceResponse> {
         let t0 = Instant::now();
         let fp = self.fingerprint_of(req);
-        if let Some(report) = self.cache.get(fp) {
-            return Ok(ServiceResponse {
-                fingerprint: fp,
-                source: ResponseSource::Cache,
-                service_secs: t0.elapsed().as_secs_f64(),
-                report,
-            });
+        let is_frontier = matches!(req.mode, GpuPoolMode::Frontier { .. });
+        // The response fingerprint stays the full, book-dependent one even
+        // for frontier requests — a repriced hit and a cold search under
+        // the same book answer byte-identically.
+        let key = if is_frontier { self.cache_key_of(req) } else { fp };
+        if let Some(report) = self.cache.get(key) {
+            if let Some(resp) = self.serve_cached(req, fp, is_frontier, report, &t0) {
+                return Ok(resp);
+            }
         }
         // Single-flight: exactly one thread (the leader) runs the search;
-        // everyone else arriving with the same fingerprint waits on it.
+        // everyone else arriving with the same cache key waits on it.
         let (slot, leader) = {
             let mut map = self.inflight.lock().unwrap();
             // Re-check the cache under the in-flight lock: a finishing
             // leader publishes to the cache *before* clearing its marker,
             // so a miss here is authoritative and we cannot double-search.
-            if let Some(report) = self.cache.peek(fp) {
-                return Ok(ServiceResponse {
-                    fingerprint: fp,
-                    source: ResponseSource::Cache,
-                    service_secs: t0.elapsed().as_secs_f64(),
-                    report,
-                });
+            if let Some(report) = self.cache.peek(key) {
+                if let Some(resp) = self.serve_cached(req, fp, is_frontier, report, &t0) {
+                    return Ok(resp);
+                }
             }
-            match map.get(&fp.0) {
+            match map.get(&key.0) {
                 Some(s) => (s.clone(), false),
                 None => {
                     let s = Arc::new(FlightSlot::new());
-                    map.insert(fp.0, s.clone());
+                    map.insert(key.0, s.clone());
                     (s, true)
                 }
             }
@@ -364,7 +415,7 @@ impl SearchService {
             let mut guard = FlightGuard {
                 inflight: &self.inflight,
                 slot: slot.as_ref(),
-                key: fp.0,
+                key: key.0,
                 armed: true,
             };
             let result = self.core.search(req).map(Arc::new);
@@ -372,13 +423,13 @@ impl SearchService {
             // in-flight marker, so a racing request either joins the flight
             // or hits the cache — never re-searches.
             if let Ok(report) = &result {
-                self.cache.insert(fp, report.clone());
+                self.cache.insert(key, report.clone());
             }
             slot.publish(match &result {
                 Ok(r) => Ok(r.clone()),
                 Err(e) => Err(e.to_string()),
             });
-            self.inflight.lock().unwrap().remove(&fp.0);
+            self.inflight.lock().unwrap().remove(&key.0);
             guard.disarm();
             let resp = result.map(|report| ServiceResponse {
                 fingerprint: fp,
@@ -471,10 +522,16 @@ mod tests {
     use crate::coordinator::EngineConfig;
     use crate::gpu::GpuCatalog;
     use crate::model::ModelRegistry;
+    use crate::pareto::MoneyModel;
+    use crate::pricing::{PriceBook, PriceEntry};
     use crate::strategy::SpaceConfig;
 
     /// A deliberately small space so unit tests stay fast.
     pub(crate) fn small_core() -> ScoringCore {
+        small_core_with_book(PriceBook::builtin())
+    }
+
+    fn small_core_with_book(book: PriceBook) -> ScoringCore {
         let space = SpaceConfig {
             tp_candidates: vec![1, 2],
             max_pp: 4,
@@ -490,7 +547,12 @@ mod tests {
         };
         ScoringCore::new(
             GpuCatalog::builtin(),
-            EngineConfig { use_forests: false, space, ..Default::default() },
+            EngineConfig {
+                use_forests: false,
+                space,
+                money: MoneyModel { book, ..Default::default() },
+                ..Default::default()
+            },
         )
     }
 
@@ -538,6 +600,82 @@ mod tests {
             1,
             "exactly one leader: {sources:?}"
         );
+    }
+
+    fn frontier_req() -> SearchRequest {
+        let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+        SearchRequest::frontier(&[("a800", 4), ("h100", 4)], model).unwrap()
+    }
+
+    #[test]
+    fn frontier_repeat_repriced_from_cache_not_engine() {
+        let svc = SearchService::new(small_core(), ServiceConfig::default());
+        let a = svc.handle(&frontier_req()).unwrap();
+        assert_eq!(a.source, ResponseSource::Search);
+        assert!(a.report.frontier.is_some(), "frontier mode must return a skeleton");
+        assert!(!a.report.pool.is_empty(), "frontier must be non-empty");
+        let b = svc.handle(&frontier_req()).unwrap();
+        assert_eq!(b.source, ResponseSource::Cache);
+        assert_eq!(svc.core().searches_run(), 1, "repeat must reprice, not re-search");
+        assert_eq!(a.fingerprint, b.fingerprint);
+        // Same book ⇒ the serve-time reprice is the identity on the wire.
+        let catalog = &svc.core().catalog;
+        assert_eq!(
+            crate::json::to_string(&crate::report::report_json(&a.report, catalog)),
+            crate::json::to_string(&crate::report::report_json(&b.report, catalog)),
+        );
+    }
+
+    #[test]
+    fn repriced_frontier_after_restart_matches_cold_search_under_new_book() {
+        let dir = std::env::temp_dir()
+            .join(format!("astra_warm_frontier_restart_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ServiceConfig {
+            warm: WarmConfig {
+                dir: Some(dir.clone()),
+                spill_every: 0,
+                include_cache: true,
+                max_snapshot_bytes: 0,
+            },
+            ..Default::default()
+        };
+        // Book B differs from the builtin card by rates only: a price move
+        // plus spot billing. Membership is unchanged.
+        let mut book_b = PriceBook::builtin();
+        book_b.upsert(PriceEntry {
+            gpu: "h100".to_string(),
+            on_demand_per_hour: 9.99,
+            spot_per_hour: 3.99,
+        });
+        book_b.use_spot = true;
+
+        // Boot 1: search a frontier under the builtin book and spill.
+        let svc_a = SearchService::new(small_core(), cfg.clone());
+        let a = svc_a.handle(&frontier_req()).unwrap();
+        assert_eq!(a.source, ResponseSource::Search);
+        svc_a.spill_warm().unwrap().expect("configured spill must run");
+
+        // Boot 2: same engine, rates changed. The spilled frontier must
+        // restore (membership pin) and serve repriced — no engine admission.
+        let svc_b = SearchService::new(small_core_with_book(book_b.clone()), cfg);
+        let b = svc_b.handle(&frontier_req()).unwrap();
+        assert_eq!(b.source, ResponseSource::Cache, "restored frontier must serve from cache");
+        assert_eq!(svc_b.core().searches_run(), 0, "reprice must not admit the engine");
+
+        // Reference: a cold search under book B. The repriced cached answer
+        // must match it byte-for-byte on the canonical wire view.
+        let svc_c = SearchService::new(small_core_with_book(book_b), ServiceConfig::default());
+        let c = svc_c.handle(&frontier_req()).unwrap();
+        assert_eq!(c.source, ResponseSource::Search);
+        let catalog = &svc_c.core().catalog;
+        assert_eq!(
+            crate::json::to_string(&crate::report::report_json(&b.report, catalog)),
+            crate::json::to_string(&crate::report::report_json(&c.report, catalog)),
+            "reprice-from-cache must equal a cold re-search under the new book"
+        );
+        assert_eq!(b.report.top[0].money_usd.to_bits(), c.report.top[0].money_usd.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

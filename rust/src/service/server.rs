@@ -10,20 +10,28 @@
 //! {"model":"llama2-13b","mode":"heterogeneous","gpus":64,"caps":{"a800":48,"h100":48}}
 //! {"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":50000}
 //! {"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":16,"h100":16},"max_money":50000}
+//! {"model":"llama2-7b","mode":"frontier","caps":{"a800":16,"h100":16}}
 //! {"cmd":"stats"}
 //! {"cmd":"metrics"}
 //! ```
 //!
 //! * `model` — required, a [`crate::model::ModelRegistry`] name.
 //! * `mode` — `homogeneous` (default) | `heterogeneous` | `cost` |
-//!   `hetero-cost`.
+//!   `hetero-cost` | `frontier`.
 //! * `gpu` / `gpus` — GPU type and count (for `cost`: the count ceiling;
-//!   `hetero-cost` needs neither — pool sizes are swept from the caps).
-//! * `caps` — per-type caps, `{gpu_name: max_count}` (`heterogeneous` and
-//!   `hetero-cost`).
+//!   `hetero-cost` and `frontier` need neither — pool sizes are swept from
+//!   the caps).
+//! * `caps` — per-type caps, `{gpu_name: max_count}` (`heterogeneous`,
+//!   `hetero-cost` and `frontier`).
 //! * `max_money` — optional money ceiling in USD (`cost` / `hetero-cost`);
-//!   must be positive when present.
+//!   must be positive when present. Rejected for `frontier`, which returns
+//!   the whole (throughput, $) curve instead of the best plan under one
+//!   budget.
 //! * `id` — optional opaque tag echoed back in the response.
+//!
+//! `frontier` responses additionally carry a `frontier` object (see
+//! [`crate::report::frontier_json`]): the full Pareto curve of
+//! (tokens/s, USD) plans in throughput-descending order.
 //!
 //! ## Response lines
 //!
@@ -132,9 +140,21 @@ pub fn parse_request(
             let max_money = parse_budget(v)?;
             SearchRequest { mode: GpuPoolMode::HeteroCost { caps, max_money }, model }
         }
+        "frontier" => {
+            if v.get("max_money").is_some() {
+                return Err(AstraError::Config(
+                    "'max_money' does not apply to mode 'frontier': the full \
+                     (throughput, money) Pareto curve is returned; pick a budget \
+                     client-side or use 'hetero-cost'"
+                        .into(),
+                ));
+            }
+            let caps = parse_caps(v, catalog)?;
+            SearchRequest { mode: GpuPoolMode::Frontier { caps }, model }
+        }
         other => {
             return Err(AstraError::Config(format!(
-                "unknown mode '{other}' (homogeneous | heterogeneous | cost | hetero-cost)"
+                "unknown mode '{other}' (homogeneous | heterogeneous | cost | hetero-cost | frontier)"
             )));
         }
     };
@@ -223,6 +243,16 @@ pub fn request_to_json(req: &SearchRequest, catalog: &GpuCatalog) -> Value {
                 v
             }
         }
+        GpuPoolMode::Frontier { caps } => {
+            let merged = crate::strategy::merge_caps(
+                caps.iter().map(|&(g, c)| (catalog.spec(g).name.as_str(), c)),
+            );
+            let mut obj = Value::obj();
+            for (name, c) in merged {
+                obj = obj.set(name, c);
+            }
+            base.set("mode", "frontier").set("caps", obj)
+        }
     }
 }
 
@@ -270,6 +300,10 @@ pub fn response_json(
         .take(top)
         .map(|s| scored_strategy_json(s, catalog))
         .collect();
+    // Frontier-mode responses carry the whole Pareto curve next to `top`.
+    if let Some(f) = crate::report::frontier_json(&resp.report, catalog) {
+        v = v.set("frontier", f);
+    }
     v.set("top", Value::Arr(tops))
 }
 
@@ -655,6 +689,29 @@ mod tests {
     }
 
     #[test]
+    fn parse_frontier() {
+        let v = json::parse(r#"{"model":"llama2-7b","mode":"frontier","caps":{"a800":16,"h100":8}}"#)
+            .unwrap();
+        let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
+        match &w.request.mode {
+            GpuPoolMode::Frontier { caps } => {
+                assert_eq!(caps.len(), 2);
+                let total: usize = caps.iter().map(|&(_, c)| c).sum();
+                assert_eq!(total, 24);
+            }
+            other => panic!("wrong mode {other:?}"),
+        }
+        // Frontier mode has no budget axis: a `max_money` is a client bug
+        // and must be rejected loudly, not silently ignored.
+        let v = json::parse(
+            r#"{"model":"llama2-7b","mode":"frontier","caps":{"a800":16},"max_money":100}"#,
+        )
+        .unwrap();
+        let err = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap_err();
+        assert!(err.to_string().contains("max_money"), "{err}");
+    }
+
+    #[test]
     fn normalization_zeroes_only_wall_clock_fields() {
         let line = r#"{"engine":{"generated":10,"search_secs":0.123,"simulate_secs":4.5},"fingerprint":"00000000000000ff","ok":true,"service_ms":9.87,"source":"search"}"#;
         let norm = normalize_response_line(line).unwrap();
@@ -704,6 +761,8 @@ mod tests {
             r#"{"model":"llama2-7b","mode":"quantum","gpus":64}"#, // unknown mode
             r#"{"model":"llama2-7b","mode":"heterogeneous","gpus":64}"#, // no caps
             r#"{"model":"llama2-7b","mode":"hetero-cost","max_money":100}"#, // no caps
+            r#"{"model":"llama2-7b","mode":"frontier"}"#,                // no caps
+            r#"{"model":"llama2-7b","mode":"frontier","caps":{"a800":8},"max_money":100}"#,
             r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":0}"#,
             r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":-5}"#,
             r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":8},"max_money":-1}"#,
@@ -725,6 +784,7 @@ mod tests {
             r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":50000}"#,
             r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":16,"h100":16},"max_money":50000}"#,
             r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":16,"v100":8}}"#,
+            r#"{"model":"llama2-7b","mode":"frontier","caps":{"a800":16,"h100":16}}"#,
         ] {
             let w = parse_request(&json::parse(src).unwrap(), &cat, &reg).unwrap();
             let wire = request_to_json(&w.request, &cat);

@@ -353,6 +353,12 @@ pub enum GpuPoolMode {
     /// hour through the [`crate::pricing::PriceBook`], and a money ceiling
     /// prunes and selects (§3.6 fused with §3.4).
     HeteroCost { caps: Vec<(GpuType, usize)>, max_money: f64 },
+    /// The hetero-cost sweep with no budget and no money pruning: every
+    /// pool is scored and the *full* (throughput, USD) Pareto frontier is
+    /// the result, carried as a reprice skeleton so a cached frontier can
+    /// be re-billed under a new price book without re-searching (see
+    /// [`crate::pareto`] module docs).
+    Frontier { caps: Vec<(GpuType, usize)> },
 }
 
 /// Canonicalize per-type capacity entries as a *map*: duplicate keys merge

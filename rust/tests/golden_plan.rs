@@ -57,7 +57,12 @@ fn requests() -> Vec<(&'static str, SearchRequest)> {
         ("cost", SearchRequest::cost("a800", 8, 1e5, model.clone()).unwrap()),
         (
             "hetero_cost",
-            SearchRequest::hetero_cost(&[("a800", 4), ("h100", 4)], 1e5, model).unwrap(),
+            SearchRequest::hetero_cost(&[("a800", 4), ("h100", 4)], 1e5, model.clone())
+                .unwrap(),
+        ),
+        (
+            "frontier",
+            SearchRequest::frontier(&[("a800", 4), ("h100", 4)], model).unwrap(),
         ),
     ]
 }

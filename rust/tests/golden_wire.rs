@@ -28,8 +28,10 @@ use astra::service::{SearchService, ServiceConfig};
 use astra::strategy::SpaceConfig;
 use std::path::PathBuf;
 
-/// The fixed request script: every mode, a cache repeat, three error
-/// shapes, a stats line and a metrics line. One request per admitted
+/// The fixed request script: every mode, a cache repeat, a frontier
+/// request plus its cache-repeat (pins the reprice-from-cache path on the
+/// wire), three error shapes, a stats line and a metrics line. One
+/// request per admitted
 /// batch (max_batch 1) keeps sources deterministic (`search`/`cache`,
 /// never `coalesced`).
 const SCRIPT: &str = "\
@@ -38,6 +40,8 @@ const SCRIPT: &str = "\
 {\"id\":\"hetero\",\"model\":\"llama2-7b\",\"mode\":\"heterogeneous\",\"gpus\":8,\"caps\":{\"a800\":8,\"h100\":8}}\n\
 {\"id\":\"cost\",\"model\":\"llama2-7b\",\"mode\":\"cost\",\"gpu\":\"a800\",\"gpus\":8,\"max_money\":100000}\n\
 {\"id\":\"hc\",\"model\":\"llama2-7b\",\"mode\":\"hetero-cost\",\"caps\":{\"a800\":4,\"h100\":4},\"max_money\":100000}\n\
+{\"id\":\"fr\",\"model\":\"llama2-7b\",\"mode\":\"frontier\",\"caps\":{\"a800\":4,\"h100\":4}}\n\
+{\"id\":\"fr2\",\"model\":\"llama2-7b\",\"mode\":\"frontier\",\"caps\":{\"a800\":4,\"h100\":4}}\n\
 not json at all\n\
 {\"id\":\"badmodel\",\"model\":\"gpt-5\",\"gpu\":\"a800\",\"gpus\":8}\n\
 {\"id\":\"badbudget\",\"model\":\"llama2-7b\",\"mode\":\"cost\",\"gpu\":\"a800\",\"gpus\":8,\"max_money\":-1}\n\
@@ -85,7 +89,7 @@ fn run_script() -> String {
     let mut out: Vec<u8> = Vec::new();
     let opts = ServeOpts { max_batch: 1, top: 1 };
     let stats = run_batch_lines(&svc, SCRIPT, &mut out, &opts).unwrap();
-    assert_eq!(stats.lines, 10, "script drifted");
+    assert_eq!(stats.lines, 12, "script drifted");
     assert_eq!(stats.errors, 3, "exactly the three error lines fail");
     let text = String::from_utf8(out).unwrap();
     let mut normalized = String::new();
@@ -104,11 +108,11 @@ fn wire_protocol_matches_golden_transcript() {
     // hetero-cost line must be a well-formed success with a priced plan.
     let lines: Vec<astra::json::Value> =
         got.lines().map(|l| astra::json::parse(l).unwrap()).collect();
-    assert_eq!(lines.len(), 10);
+    assert_eq!(lines.len(), 12);
     assert_eq!(lines[1].opt_str("source"), Some("cache"), "repeat must hit the cache");
     // The metrics line is a success carrying the (normalized) registry
     // dump: the three metric families are present, values are zeroed.
-    let metrics = &lines[9];
+    let metrics = &lines[11];
     assert_eq!(metrics.opt_str("id"), Some("metrics"));
     assert_eq!(metrics.get("ok").and_then(astra::json::Value::as_bool), Some(true));
     for family in ["counters", "gauges", "histograms"] {
@@ -129,7 +133,20 @@ fn wire_protocol_matches_golden_transcript() {
     assert_eq!(hc.get("ok").and_then(astra::json::Value::as_bool), Some(true));
     assert!(hc.pointer("/best/money_usd").and_then(astra::json::Value::as_f64).unwrap() > 0.0);
     assert!(hc.pointer("/engine/pruned_pools").is_some());
-    for (i, id) in [(6usize, "badmodel"), (7usize, "badbudget")] {
+    // The frontier line is a success carrying the full Pareto curve, and
+    // its immediate repeat is served (repriced) from the cache — the wire
+    // evidence that rate-only price changes never trigger a re-search.
+    let fr = &lines[5];
+    assert_eq!(fr.opt_str("id"), Some("fr"));
+    assert_eq!(fr.get("ok").and_then(astra::json::Value::as_bool), Some(true));
+    let points = fr
+        .pointer("/frontier/points")
+        .and_then(astra::json::Value::as_arr)
+        .expect("frontier response must carry frontier.points");
+    assert!(!points.is_empty(), "frontier must hold at least one (tput, USD) point");
+    assert_eq!(lines[6].opt_str("id"), Some("fr2"));
+    assert_eq!(lines[6].opt_str("source"), Some("cache"), "frontier repeat must hit the cache");
+    for (i, id) in [(8usize, "badmodel"), (9usize, "badbudget")] {
         assert_eq!(lines[i].get("ok").and_then(astra::json::Value::as_bool), Some(false));
         assert_eq!(lines[i].opt_str("id"), Some(id));
     }

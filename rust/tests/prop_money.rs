@@ -201,6 +201,82 @@ fn prop_pool_bounds_sound_against_cost_model() {
     assert!(checked > 100, "too few strategies checked: {checked}");
 }
 
+/// Frontier repricing: for *rate-only* price-book changes (same GPU
+/// names, arbitrary new rates / time-of-day multipliers / spot flag /
+/// hour), `SearchReport::reprice` on a frontier report equals a cold
+/// frontier search under the new book — byte-for-byte on the canonical
+/// report JSON. This is the property the service's reprice-without-
+/// re-search cache path rests on; membership changes (a new GPU type)
+/// are out of scope here and force a re-search at the service layer.
+#[test]
+fn prop_frontier_reprice_equals_cold_search_under_rate_changes() {
+    use astra::coordinator::{AstraEngine, EngineConfig, SearchRequest};
+    use astra::report::report_json;
+
+    let space = SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 2,
+        mbs_candidates: vec![1],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    };
+    let engine_with = |book: PriceBook| {
+        AstraEngine::new(
+            GpuCatalog::builtin(),
+            EngineConfig {
+                use_forests: false,
+                space: space.clone(),
+                money: MoneyModel { book, ..MoneyModel::default() },
+                ..EngineConfig::default()
+            },
+        )
+    };
+    let catalog = GpuCatalog::builtin();
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let req = SearchRequest::frontier(&[("a800", 4), ("h100", 4)], model.clone()).unwrap();
+
+    let base_book = PriceBook::builtin();
+    let cold_a = engine_with(base_book.clone()).search(&req).unwrap();
+    assert!(cold_a.frontier.is_some(), "frontier mode must carry the skeleton");
+    assert!(!cold_a.pool.is_empty(), "frontier search found no points");
+
+    let mut rng = Rng::new(0xFA57_CA5E);
+    for case in 0..6 {
+        // Rate-only mutation: every listed GPU keeps its name, everything
+        // priced about it is redrawn.
+        let mut book = base_book.clone();
+        for e in base_book.entries() {
+            let od = rng.range_f64(0.2, 12.0);
+            let spot = od * rng.range_f64(0.1, 1.0);
+            book.upsert(PriceEntry {
+                gpu: e.gpu.clone(),
+                on_demand_per_hour: od,
+                spot_per_hour: spot,
+            });
+        }
+        for m in book.tod_multipliers.iter_mut() {
+            *m = rng.range_f64(0.25, 2.0);
+        }
+        book.use_spot = rng.bool();
+        book.hour = if rng.bool() { Some(rng.below(24) as usize) } else { None };
+        book.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        let money = MoneyModel { book: book.clone(), ..MoneyModel::default() };
+        let repriced =
+            cold_a.reprice(&model, &catalog, &money).expect("frontier report must reprice");
+        let cold_b = engine_with(book).search(&req).unwrap();
+        let got = astra::json::to_string_pretty(&report_json(&repriced, &catalog));
+        let want = astra::json::to_string_pretty(&report_json(&cold_b, &catalog));
+        assert_eq!(got, want, "case {case}: reprice diverged from a cold search");
+    }
+}
+
 /// The pruner itself: random admit/observe streams never reject a point
 /// that genuinely improves on everything scored so far.
 #[test]
