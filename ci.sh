@@ -29,10 +29,12 @@
 #
 # Tier-1 also runs a persistence roundtrip through the release binary
 # (astra warm save → search --warm-load → diff of the canonical --json
-# reports against a cold search) and a trace smoke (search --trace must
+# reports against a cold search), a trace smoke (search --trace must
 # emit a valid, ts-monotonic Chrome-trace JSONL while leaving the --json
-# report byte-identical to an untraced run); both are skipped under
-# FAST=1 since they need the release build.
+# report byte-identical to an untraced run), and a chaos smoke (a fault
+# injected via ASTRA_FAILPOINTS into the release binary must surface as
+# a typed error line while the process keeps serving); all are skipped
+# under FAST=1 since they need the release build.
 #
 #   ./ci.sh            # tier-1 gate
 #   FAST=1 ./ci.sh     # tier-1 minus the release build (debug tests only)
@@ -98,6 +100,30 @@ if [ "${FAST:-0}" != "1" ]; then
   run "$BIN" trace-check "$TRACETMP/t.jsonl"
   rm -rf "$TRACETMP"
   echo "ci.sh: trace smoke ok (traced report identical, trace valid and monotonic)" >&2
+
+  # --- tier-1 chaos smoke: injected faults surface as typed lines ---
+  # Arm the scoring seam for exactly one panic through the env grammar
+  # (the production binary needs no wiring to become chaos-testable).
+  # The first request must come back as an isolated `kind:"panic"` error
+  # line, the identical second request must then succeed with a real
+  # search, and the process must exit 0 — an injected fault degrades one
+  # line, never the service. Deeper scripted schedules live in
+  # rust/tests/chaos.rs (run by `cargo test` above in its own process).
+  CHAOSTMP="$(mktemp -d)"
+  printf '%s\n' \
+    '{"id":"boom","model":"llama2-7b","gpu":"a800","gpus":8}' \
+    '{"id":"ok","model":"llama2-7b","gpu":"a800","gpus":8}' \
+    > "$CHAOSTMP/reqs.jsonl"
+  run env ASTRA_FAILPOINTS="engine.score=panic:1:1" ASTRA_FAILPOINT_SEED=42 \
+      "$BIN" batch "$CHAOSTMP/reqs.jsonl" --max-batch 1 --retries 0 \
+      > "$CHAOSTMP/out.jsonl"
+  run test "$(wc -l < "$CHAOSTMP/out.jsonl")" -eq 2
+  run grep -q '"id":"boom","kind":"panic"' "$CHAOSTMP/out.jsonl"
+  run grep -q '"retryable":false' "$CHAOSTMP/out.jsonl"
+  run grep -q '"id":"ok"' "$CHAOSTMP/out.jsonl"
+  run grep -q '"source":"search"' "$CHAOSTMP/out.jsonl"
+  rm -rf "$CHAOSTMP"
+  echo "ci.sh: chaos smoke ok (injected panic isolated to one typed line, service recovered)" >&2
 fi
 
 if [ "${TIER2:-0}" = "1" ]; then

@@ -50,6 +50,7 @@ use crate::memory::MemoryModel;
 use crate::model::ModelSpec;
 use crate::pareto::{DominancePruner, OptimalPool, PoolEntry};
 use crate::pool::par_for_indices;
+use crate::resilience::CancelToken;
 use crate::runtime::ScorerRuntime;
 use crate::strategy::{ParallelStrategy, SearchSpace};
 use crate::Result;
@@ -90,13 +91,23 @@ impl ScoringCore {
     /// Execute a compiled plan. `rt` diverts scoring to the HLO engine when
     /// the config asks for it and the runtime loaded; `t0` anchors the
     /// request-to-now share (plan compilation) of "Search Time".
+    ///
+    /// `cancel` is polled at wave boundaries (and cheaply inside the
+    /// per-pool streaming closures): a fired token unwinds with a typed
+    /// [`crate::AstraError::Deadline`] and every partial wave is discarded
+    /// whole — a caller gets either the complete, deterministic report or
+    /// the error, never a truncated report.
     pub(crate) fn execute_plan(
         &self,
         model: &ModelSpec,
         plan: &SearchPlan,
         rt: Option<&Mutex<ScorerRuntime>>,
         t0: Instant,
+        cancel: &CancelToken,
     ) -> Result<SearchReport> {
+        // A pre-expired deadline never enters the pipeline (and never
+        // counts as a search): the caller gets the typed error immediately.
+        cancel.check()?;
         self.searches.fetch_add(1, Ordering::Relaxed);
         crate::telemetry::counter_macro!("astra_searches_total").inc();
         let hlo_rt = match (self.config.engine, rt) {
@@ -146,6 +157,10 @@ impl ScoringCore {
 
         let mut next = 0usize;
         while next < plan.rounds.len() {
+            // Wave boundary: the only cancellation point that can surface.
+            // Everything merged so far is dropped with this early return,
+            // so cancellation can never yield a partial report.
+            cancel.check()?;
             let round_base = next;
             let wave_rounds = &plan.rounds[next..plan.rounds.len().min(next + wave)];
             next += wave_rounds.len();
@@ -171,10 +186,12 @@ impl ScoringCore {
             // Phase 2: one streaming pass over the whole wave.
             let t_run = Instant::now();
             let mut outcomes = match hlo_rt {
-                Some(rt) => self.stream_pools_hlo(model, &plan.space, &tasks, rt, workers)?,
+                Some(rt) => {
+                    self.stream_pools_hlo(model, &plan.space, &tasks, rt, workers, cancel)?
+                }
                 None => {
                     let memo = memo.as_ref().expect("native path always has a memo");
-                    self.stream_pools(model, &plan.space, &tasks, memo, workers)
+                    self.stream_pools(model, &plan.space, &tasks, memo, workers, cancel)
                 }
             };
             let wall = t_run.elapsed().as_secs_f64();
@@ -341,6 +358,7 @@ impl ScoringCore {
         tasks: &[&PoolSpec],
         memo: &SharedCostMemo,
         workers: usize,
+        cancel: &CancelToken,
     ) -> Vec<PoolOutcome> {
         let rules = &self.config.rules;
         let catalog = &self.catalog;
@@ -348,6 +366,18 @@ impl ScoringCore {
         let money = &self.config.money;
         let mem = MemoryModel::default();
         par_for_indices(tasks.len(), workers, |i| {
+            // Cancelled mid-wave: stop burning workers on pools whose
+            // outcomes the wave boundary is about to discard anyway. The
+            // empty outcome never reaches a report (the boundary check
+            // errors first), so determinism is unaffected.
+            if cancel.is_cancelled() {
+                return PoolOutcome::default();
+            }
+            // Chaos seam: an armed `engine.score` failpoint panics inside
+            // the worker closure — `par_for_indices` propagates it to the
+            // requesting thread, where the service's `catch_unwind` turns
+            // it into a typed `panic`-kind response.
+            crate::resilience::failpoint::fire_as_panic("engine.score");
             let task = tasks[i];
             let mut oc = PoolOutcome::default();
             let t_pool = Instant::now();
@@ -387,6 +417,7 @@ impl ScoringCore {
         tasks: &[&PoolSpec],
         rt: &Mutex<ScorerRuntime>,
         workers: usize,
+        cancel: &CancelToken,
     ) -> Result<Vec<PoolOutcome>> {
         let rules = &self.config.rules;
         let catalog = &self.catalog;
@@ -402,6 +433,12 @@ impl ScoringCore {
                 filter_secs: 0.0,
                 mem_secs: 0.0,
             };
+            if cancel.is_cancelled() {
+                // Same contract as the native pass: discarded at the wave
+                // boundary before any report assembly.
+                return fp;
+            }
+            crate::resilience::failpoint::fire_as_panic("engine.score");
             space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
                 fp.generated += 1;
                 if rules.filters_out(&s).unwrap_or(true) {

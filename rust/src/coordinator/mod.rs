@@ -558,6 +558,9 @@ impl ScoringCore {
         path: &Path,
         want_cache: bool,
     ) -> Result<crate::persist::RestoreSet> {
+        // Chaos seam: an armed `persist.restore` fails the load like an
+        // unreadable snapshot file (the caller degrades to a cold start).
+        crate::failpoint!("persist.restore");
         let text = std::fs::read_to_string(path)?;
         let set =
             crate::persist::read_warm_filtered(&text, &self.catalog, &self.warm_meta, want_cache);
@@ -578,14 +581,36 @@ impl ScoringCore {
         self.search_with(req, None)
     }
 
+    /// [`Self::search`] under a cancellation token: the executor polls the
+    /// token at wave boundaries, so a fired deadline unwinds with a typed
+    /// [`crate::AstraError::Deadline`] — never a partial report. The
+    /// service layer builds one token per admitted cold request from the
+    /// effective `deadline_ms`.
+    pub fn search_with_cancel(
+        &self,
+        req: &SearchRequest,
+        cancel: &crate::resilience::CancelToken,
+    ) -> Result<SearchReport> {
+        self.search_with_cancel_rt(req, None, cancel)
+    }
+
     fn search_with(
         &self,
         req: &SearchRequest,
         rt: Option<&Mutex<ScorerRuntime>>,
     ) -> Result<SearchReport> {
+        self.search_with_cancel_rt(req, rt, &crate::resilience::CancelToken::unlimited())
+    }
+
+    fn search_with_cancel_rt(
+        &self,
+        req: &SearchRequest,
+        rt: Option<&Mutex<ScorerRuntime>>,
+        cancel: &crate::resilience::CancelToken,
+    ) -> Result<SearchReport> {
         let t0 = Instant::now();
         let plan = self.compile_plan(req)?;
-        self.execute_plan(&req.model, &plan, rt, t0)
+        self.execute_plan(&req.model, &plan, rt, t0, cancel)
     }
 }
 

@@ -94,6 +94,7 @@ pub mod pool;
 pub mod pricing;
 pub mod prng;
 pub mod report;
+pub mod resilience;
 pub mod rules;
 pub mod runtime;
 pub mod service;
@@ -118,6 +119,7 @@ pub mod prelude {
     pub use crate::pareto::{DominancePruner, MoneyModel, OptimalPool};
     pub use crate::persist::{RestoreStats, SpillStats};
     pub use crate::pricing::{PriceBook, PriceEntry};
+    pub use crate::resilience::{CancelToken, RetryPolicy};
     pub use crate::rules::RuleSet;
     pub use crate::simulator::{PipelineSimulator, SimConfig};
     pub use crate::strategy::{GpuPoolMode, ParallelStrategy, SearchSpace, SpaceConfig};
@@ -138,6 +140,18 @@ pub enum AstraError {
     Runtime(String),
     /// Filesystem error.
     Io(std::io::Error),
+    /// Request deadline exceeded (cooperative cancellation; see
+    /// [`resilience::CancelToken`]). Never carries a partial report.
+    Deadline(String),
+    /// Admission queue full — shed load. The only *retryable* kind: the
+    /// wire layer marks it `"retryable":true` and `astra batch` backs off
+    /// and retries it client-side.
+    Overloaded(String),
+    /// Injected or isolated internal fault (failpoints, degraded seams).
+    Fault(String),
+    /// A request handler panicked; the panic was caught and isolated by
+    /// the service layer instead of killing the serve loop.
+    Panicked(String),
 }
 
 impl std::fmt::Display for AstraError {
@@ -149,6 +163,74 @@ impl std::fmt::Display for AstraError {
             AstraError::Search(m) => write!(f, "search error: {m}"),
             AstraError::Runtime(m) => write!(f, "runtime error: {m}"),
             AstraError::Io(e) => write!(f, "io error: {e}"),
+            AstraError::Deadline(m) => write!(f, "deadline error: {m}"),
+            AstraError::Overloaded(m) => write!(f, "overloaded: {m}"),
+            AstraError::Fault(m) => write!(f, "fault: {m}"),
+            AstraError::Panicked(m) => write!(f, "panic: {m}"),
+        }
+    }
+}
+
+impl AstraError {
+    /// Stable machine-readable kind tag, carried on wire error responses
+    /// (`"kind"`) and across the single-flight slot so coalesced waiters
+    /// receive the same typed error as the search leader.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AstraError::Json(_) => "json",
+            AstraError::Rule(_) => "rule",
+            AstraError::Config(_) => "config",
+            AstraError::Search(_) => "search",
+            AstraError::Runtime(_) => "runtime",
+            AstraError::Io(_) => "io",
+            AstraError::Deadline(_) => "deadline",
+            AstraError::Overloaded(_) => "overloaded",
+            AstraError::Fault(_) => "fault",
+            AstraError::Panicked(_) => "panic",
+        }
+    }
+
+    /// Whether a client should retry the identical request after backoff.
+    /// Only load shedding qualifies: every other kind is deterministic
+    /// (same request, same failure) or needs operator attention.
+    pub fn retryable(&self) -> bool {
+        matches!(self, AstraError::Overloaded(_))
+    }
+
+    /// The inner message without the `Display` kind prefix (used when an
+    /// error is rebuilt from `(kind, message)` across the single-flight
+    /// slot — re-wrapping the full `Display` would stack prefixes).
+    pub fn message(&self) -> String {
+        match self {
+            AstraError::Json(m)
+            | AstraError::Rule(m)
+            | AstraError::Config(m)
+            | AstraError::Search(m)
+            | AstraError::Runtime(m)
+            | AstraError::Deadline(m)
+            | AstraError::Overloaded(m)
+            | AstraError::Fault(m)
+            | AstraError::Panicked(m) => m.clone(),
+            AstraError::Io(e) => e.to_string(),
+        }
+    }
+
+    /// Rebuild a typed error from a [`kind`](AstraError::kind) tag and a
+    /// message (errors are not `Clone`; the service layer fans one leader
+    /// error out to every coalesced waiter). Unknown tags degrade to
+    /// `Search`. `"io"` rebuilds as `Fault`: the original `io::Error`
+    /// cannot be reconstructed and waiters only need kind + text.
+    pub fn from_kind(kind: &str, msg: String) -> AstraError {
+        match kind {
+            "json" => AstraError::Json(msg),
+            "rule" => AstraError::Rule(msg),
+            "config" => AstraError::Config(msg),
+            "runtime" => AstraError::Runtime(msg),
+            "deadline" => AstraError::Deadline(msg),
+            "overloaded" => AstraError::Overloaded(msg),
+            "fault" | "io" => AstraError::Fault(msg),
+            "panic" => AstraError::Panicked(msg),
+            _ => AstraError::Search(msg),
         }
     }
 }

@@ -14,8 +14,11 @@
 //!   validate     cost model vs simulator accuracy over top-k strategies
 //!   serve        long-running search service (stdin or TCP, JSON lines);
 //!                `--warm-dir` restores warm state on boot and spills it
-//!                every N admissions and on clean shutdown
+//!                every N admissions and on clean shutdown; `--deadline-ms`
+//!                bounds every request without its own wire deadline and
+//!                `--max-queue` sheds cold requests past the depth bound
 //!   batch        score a file of JSON requests through the admission queue
+//!                (retrying shed requests per `--retries`, seeded backoff)
 //!   warm         save | load | inspect a warm-start snapshot
 //!                (`astra warm save w.jsonl --model … --gpus …` runs the
 //!                configured search to heat the memo, then spills it)
@@ -64,6 +67,11 @@ fn main() {
     .opt("top", "how many strategies to print", Some("5"))
     .opt("listen", "serve over TCP on host:port instead of stdin", None)
     .opt("max-batch", "requests admitted per service batch", Some("32"))
+    .opt("deadline-ms", "default per-request deadline in ms (0 = unlimited; wire deadline_ms wins)", Some("0"))
+    .opt("max-queue", "max cold requests past admission before shedding (0 = unbounded)", Some("1024"))
+    .opt("retries", "client-side retries of shed (retryable) requests (batch)", Some("3"))
+    .opt("retry-base-ms", "base backoff delay in ms for --retries", Some("25"))
+    .opt("retry-seed", "seed for the deterministic retry jitter", Some("42"))
     .opt("cache-entries", "service cache capacity (reports)", Some("1024"))
     .opt("cache-mb", "service cache byte budget (MiB)", Some("256"))
     .opt("cache-ttl-secs", "service cache TTL in seconds (0 = none)", Some("0"))
@@ -148,6 +156,8 @@ fn build_service(args: &astra::cli::Args, catalog: GpuCatalog) -> astra::Result<
         cache,
         max_batch: args.get_usize("max-batch")?.max(1),
         warm,
+        default_deadline_ms: args.get_usize("deadline-ms")? as u64,
+        max_queue_depth: args.get_usize("max-queue")?,
         ..Default::default()
     };
     Ok(SearchService::new(ScoringCore::new(catalog, config), service_cfg))
@@ -195,9 +205,13 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
 
     if command == "serve" {
         let service = build_service(args, catalog)?;
+        // No server-side retries: a remote client owns its retry budget;
+        // retrying shed work inside the server would defeat the shedding.
         let opts = ServeOpts {
             max_batch: service.config().max_batch,
             top: args.get_usize("top")?,
+            retries: 0,
+            ..Default::default()
         };
         return match args.get("listen") {
             Some(addr) => serve_tcp(Arc::new(service), addr, &opts),
@@ -277,9 +291,14 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         })?;
         let text = std::fs::read_to_string(path)?;
         let service = build_service(args, catalog)?;
+        // Batch is its own client: shed requests retry here with seeded
+        // exponential backoff instead of surfacing as transient errors.
         let opts = ServeOpts {
             max_batch: service.config().max_batch,
             top: args.get_usize("top")?,
+            retries: args.get_usize("retries")? as u32,
+            retry_base_ms: args.get_usize("retry-base-ms")? as u64,
+            retry_seed: args.get_usize("retry-seed")? as u64,
         };
         let t0 = std::time::Instant::now();
         let mut stdout = std::io::stdout().lock();

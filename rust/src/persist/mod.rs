@@ -566,6 +566,9 @@ impl WarmWriter {
     /// instance plus an operator's `astra warm save`) cannot interleave
     /// into a torn file — last rename wins, both candidates are whole.
     pub fn finish_to(self, path: &Path) -> Result<SpillStats> {
+        // Chaos seam: an armed `persist.spill` fails the commit before any
+        // byte reaches disk — the previous snapshot (if any) stays whole.
+        crate::failpoint!("persist.spill");
         let bytes = self.out.len() as u64;
         let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
         std::fs::write(&tmp, self.out.as_bytes())?;
@@ -805,12 +808,17 @@ pub fn read_warm_filtered(
     want_cache: bool,
 ) -> RestoreSet {
     let mut set = RestoreSet::empty();
+    // Chaos seam: an armed `persist.decode` makes the snapshot read like a
+    // corrupt header — the reject-and-cold-start path, never an error.
+    let decode_fault =
+        crate::resilience::failpoint::should_fire("persist.decode").is_some();
     let mut lines = text.lines();
-    let header_ok = lines
-        .next()
-        .and_then(|l| json::parse(l).ok())
-        .and_then(|v| v.get("astra_warm").and_then(Value::as_u64))
-        == Some(FORMAT_VERSION);
+    let header_ok = !decode_fault
+        && lines
+            .next()
+            .and_then(|l| json::parse(l).ok())
+            .and_then(|v| v.get("astra_warm").and_then(Value::as_u64))
+            == Some(FORMAT_VERSION);
     if !header_ok {
         set.scopes_rejected += 1;
         return set;

@@ -10,7 +10,7 @@
 //!   costs are wildly uneven).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
 /// Number of workers to use: `ASTRA_THREADS` env override, else available
 /// parallelism, else 4.
@@ -99,14 +99,19 @@ pub fn par_for_indices<R: Send>(
                     }
                     local.push((i, f(i)));
                 }
-                results.lock().unwrap().extend(local);
+                // Poison-tolerant: if a sibling worker panicked inside `f`
+                // (e.g. an injected fault), this worker's results are still
+                // valid — the panic re-raises at the join below either way.
+                results.lock().unwrap_or_else(PoisonError::into_inner).extend(local);
             }));
         }
         for h in handles {
+            // A panicking `f` propagates to the caller thread here, where
+            // the service layer's `catch_unwind` isolates it per-request.
             h.join().expect("worker panicked");
         }
     });
-    let mut pairs = results.into_inner().unwrap();
+    let mut pairs = results.into_inner().unwrap_or_else(PoisonError::into_inner);
     pairs.sort_by_key(|(i, _)| *i);
     pairs.into_iter().map(|(_, r)| r).collect()
 }

@@ -1,0 +1,394 @@
+//! Zero-dependency deterministic fault injection.
+//!
+//! A *failpoint* is a named seam in production code where a test (or an
+//! operator, via environment variables) can inject a failure:
+//!
+//! ```text
+//! failpoint!("persist.spill");          // in a Result<_, AstraError> fn
+//! failpoint::fire_as_panic("engine.score"); // in a non-Result closure
+//! ```
+//!
+//! Disarmed cost is two relaxed atomic loads — no allocation, no lock, no
+//! branch on the data path — so the seams stay compiled into release
+//! builds and chaos schedules exercise the exact production binary.
+//!
+//! ## Arming
+//!
+//! * Tests: [`arm`]`("name", FailSpec::once(FailAction::Panic))` /
+//!   [`disarm_all`]. The registry is process-global, so tests that arm
+//!   production seam names must serialize (see `rust/tests/chaos.rs`).
+//! * Environment (the `ci.sh` chaos smoke lane):
+//!   `ASTRA_FAILPOINTS="name=action[:prob[:max_fires]];…"` with
+//!   `action ∈ {error, panic}`, e.g.
+//!   `ASTRA_FAILPOINTS="engine.score=panic:1:1;wire.parse=error:0.5"`.
+//!   `ASTRA_FAILPOINT_SEED=<u64>` seeds the firing hash.
+//!
+//! ## Determinism
+//!
+//! Probabilistic firing is *not* sampled from a clock or an OS RNG: hit
+//! `i` of failpoint `name` fires iff `hash(seed, name, i)` maps below the
+//! armed probability. The same seed and the same hit sequence therefore
+//! reproduce the same fault schedule on every run — a chaos failure is
+//! replayable by re-running the test.
+//!
+//! ## Production seams
+//!
+//! | name | site | armed effect |
+//! |---|---|---|
+//! | `persist.spill` | `persist::WarmWriter::finish_to` | spill returns a typed fault before touching disk |
+//! | `persist.restore` | `coordinator::ScoringCore::load_warm_set` | warm load fails like unreadable IO |
+//! | `persist.decode` | `persist::read_warm_filtered` | snapshot treated as corrupt (cold start) |
+//! | `engine.score` | `coordinator` wave streaming closure | scoring panics mid-wave (panic either way) |
+//! | `wire.parse` | `service::server::process_batch` | a parsed request line errors at admission |
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// What an armed failpoint does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailAction {
+    /// Surface a typed [`crate::AstraError::Fault`] from the seam.
+    Error,
+    /// Panic at the seam (exercises the service's `catch_unwind` wall).
+    Panic,
+}
+
+/// Arming spec for one named failpoint.
+#[derive(Debug, Clone, Copy)]
+pub struct FailSpec {
+    pub action: FailAction,
+    /// Firing probability per hit in `[0, 1]`; `1.0` fires every hit.
+    pub probability: f64,
+    /// Cap on total fires (`0` = unlimited).
+    pub max_fires: u64,
+}
+
+impl FailSpec {
+    /// Fire on every hit, forever.
+    pub fn always(action: FailAction) -> Self {
+        FailSpec { action, probability: 1.0, max_fires: 0 }
+    }
+
+    /// Fire on the first hit only, then fall silent.
+    pub fn once(action: FailAction) -> Self {
+        FailSpec { action, probability: 1.0, max_fires: 1 }
+    }
+}
+
+struct Entry {
+    spec: FailSpec,
+    hits: u64,
+    fires: u64,
+}
+
+struct Registry {
+    points: HashMap<String, Entry>,
+    seed: u64,
+}
+
+/// Fast-path switch: flipped on whenever any failpoint is armed. The
+/// disarmed data path is this single relaxed load (plus the one-time
+/// `Once` fence below).
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Total fires across all failpoints since process start (mirrored into
+/// the `astra_faults_injected_total` telemetry counter at fire time).
+static FIRED: AtomicU64 = AtomicU64::new(0);
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry { points: HashMap::new(), seed: 0 }))
+}
+
+/// One-time environment arming: `ASTRA_FAILPOINTS` / `ASTRA_FAILPOINT_SEED`
+/// are read on the first failpoint hit (or the first registry call), so
+/// the serve binary needs no wiring to become chaos-testable.
+fn init_from_env() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        let mut reg = crate::resilience::lock_unpoisoned(registry());
+        if let Ok(s) = std::env::var("ASTRA_FAILPOINT_SEED") {
+            if let Ok(n) = s.trim().parse::<u64>() {
+                reg.seed = n;
+            }
+        }
+        if let Ok(s) = std::env::var("ASTRA_FAILPOINTS") {
+            for (name, spec) in parse_env(&s) {
+                reg.points.insert(name, Entry { spec, hits: 0, fires: 0 });
+            }
+        }
+        if !reg.points.is_empty() {
+            ARMED.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Parse the `ASTRA_FAILPOINTS` grammar: `name=action[:prob[:max_fires]]`
+/// entries separated by `;` or `,`; malformed entries are skipped (chaos
+/// tooling must never take the process down by itself).
+pub(crate) fn parse_env(s: &str) -> Vec<(String, FailSpec)> {
+    let mut out = Vec::new();
+    for item in s.split([';', ',']) {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let Some((name, rhs)) = item.split_once('=') else { continue };
+        let mut parts = rhs.split(':');
+        let action = match parts.next().map(str::trim) {
+            Some("error") => FailAction::Error,
+            Some("panic") => FailAction::Panic,
+            _ => continue,
+        };
+        let probability = match parts.next() {
+            None => 1.0,
+            Some(p) => match p.trim().parse::<f64>() {
+                Ok(v) if (0.0..=1.0).contains(&v) => v,
+                _ => continue,
+            },
+        };
+        let max_fires = match parts.next() {
+            None => 0,
+            Some(m) => match m.trim().parse::<u64>() {
+                Ok(v) => v,
+                _ => continue,
+            },
+        };
+        out.push((name.trim().to_string(), FailSpec { action, probability, max_fires }));
+    }
+    out
+}
+
+/// Arm (or re-arm, resetting hit/fire counts) a named failpoint.
+pub fn arm(name: &str, spec: FailSpec) {
+    init_from_env();
+    let mut reg = crate::resilience::lock_unpoisoned(registry());
+    reg.points.insert(name.to_string(), Entry { spec, hits: 0, fires: 0 });
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm one failpoint; the fast path stays hot only while any remain.
+pub fn disarm(name: &str) {
+    init_from_env();
+    let mut reg = crate::resilience::lock_unpoisoned(registry());
+    reg.points.remove(name);
+    if reg.points.is_empty() {
+        ARMED.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Disarm everything (chaos tests call this on entry and exit).
+pub fn disarm_all() {
+    init_from_env();
+    let mut reg = crate::resilience::lock_unpoisoned(registry());
+    reg.points.clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Set the firing-hash seed (also settable via `ASTRA_FAILPOINT_SEED`).
+pub fn set_seed(seed: u64) {
+    init_from_env();
+    crate::resilience::lock_unpoisoned(registry()).seed = seed;
+}
+
+/// Total injected faults fired so far in this process.
+pub fn faults_injected() -> u64 {
+    FIRED.load(Ordering::Relaxed)
+}
+
+/// The seam primitive: did failpoint `name` fire on this hit, and with
+/// which action? Disarmed cost: two relaxed atomic loads.
+pub fn should_fire(name: &str) -> Option<FailAction> {
+    init_from_env();
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut reg = crate::resilience::lock_unpoisoned(registry());
+    let seed = reg.seed;
+    let entry = reg.points.get_mut(name)?;
+    let hit = entry.hits;
+    entry.hits += 1;
+    if entry.spec.max_fires > 0 && entry.fires >= entry.spec.max_fires {
+        return None;
+    }
+    let fire = if entry.spec.probability >= 1.0 {
+        true
+    } else if entry.spec.probability <= 0.0 {
+        false
+    } else {
+        // Deterministic "coin": 53 high bits of the mixed hash → [0, 1).
+        let u = (fire_hash(seed, name, hit) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < entry.spec.probability
+    };
+    if !fire {
+        return None;
+    }
+    entry.fires += 1;
+    let action = entry.spec.action;
+    drop(reg);
+    FIRED.fetch_add(1, Ordering::Relaxed);
+    crate::telemetry_counter!("astra_faults_injected_total").inc();
+    Some(action)
+}
+
+/// FNV-1a over (name, hit index) folded with the seed, finished with the
+/// SplitMix64 avalanche so high bits are well mixed for the `[0,1)` map.
+fn fire_hash(seed: u64, name: &str, hit: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    for b in hit.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Seam helper for closures with no `Result` channel (worker-pool scoring
+/// bodies): any armed action becomes a panic, which the service layer's
+/// `catch_unwind` isolates into a typed `panic`-kind error response.
+pub fn fire_as_panic(name: &str) {
+    if should_fire(name).is_some() {
+        panic!("failpoint '{name}' fired (injected panic)");
+    }
+}
+
+/// Inject a fault at a named seam inside a `Result<_, AstraError>`
+/// function: an armed `Error` action returns a typed
+/// [`crate::AstraError::Fault`] from the *enclosing* function; an armed
+/// `Panic` action panics there (isolated by the service layer).
+#[macro_export]
+macro_rules! failpoint {
+    ($name:expr) => {
+        if let Some(action) = $crate::resilience::failpoint::should_fire($name) {
+            match action {
+                $crate::resilience::failpoint::FailAction::Panic => {
+                    panic!("failpoint '{}' fired (injected panic)", $name)
+                }
+                $crate::resilience::failpoint::FailAction::Error => {
+                    return Err($crate::AstraError::Fault(format!(
+                        "failpoint '{}' fired (injected fault)",
+                        $name
+                    )));
+                }
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and the lib test binary is
+    // multi-threaded: every test here uses `test.*` seam names that no
+    // production code hits, so arming them cannot perturb concurrently
+    // running searches. End-to-end schedules against production seam
+    // names live in `rust/tests/chaos.rs` (its own process).
+
+    #[test]
+    fn disarmed_points_never_fire() {
+        assert!(should_fire("test.never.armed").is_none());
+    }
+
+    #[test]
+    fn always_fires_until_disarmed() {
+        arm("test.always", FailSpec::always(FailAction::Error));
+        assert_eq!(should_fire("test.always"), Some(FailAction::Error));
+        assert_eq!(should_fire("test.always"), Some(FailAction::Error));
+        disarm("test.always");
+        assert!(should_fire("test.always").is_none());
+    }
+
+    #[test]
+    fn once_caps_at_one_fire() {
+        arm("test.once", FailSpec::once(FailAction::Panic));
+        assert_eq!(should_fire("test.once"), Some(FailAction::Panic));
+        assert!(should_fire("test.once").is_none(), "max_fires=1 must cap");
+        assert!(should_fire("test.once").is_none());
+        disarm("test.once");
+    }
+
+    #[test]
+    fn probabilistic_firing_is_seeded_deterministic() {
+        let run = |seed: u64| -> Vec<bool> {
+            set_seed(seed);
+            arm(
+                "test.prob",
+                FailSpec { action: FailAction::Error, probability: 0.5, max_fires: 0 },
+            );
+            let out = (0..64).map(|_| should_fire("test.prob").is_some()).collect();
+            disarm("test.prob");
+            set_seed(0);
+            out
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b, "same seed, same schedule");
+        let fired = a.iter().filter(|&&x| x).count();
+        assert!((8..=56).contains(&fired), "p=0.5 over 64 hits fired {fired}");
+        let c = run(43);
+        assert_ne!(a, c, "different seed should reshuffle the schedule");
+    }
+
+    #[test]
+    fn fires_bump_the_global_count() {
+        let before = faults_injected();
+        arm("test.count", FailSpec::once(FailAction::Error));
+        let _ = should_fire("test.count");
+        disarm("test.count");
+        assert!(faults_injected() > before);
+    }
+
+    #[test]
+    fn macro_error_action_returns_typed_fault() {
+        fn seam() -> crate::Result<u32> {
+            failpoint!("test.macro.err");
+            Ok(5)
+        }
+        assert_eq!(seam().unwrap(), 5, "disarmed: pass through");
+        arm("test.macro.err", FailSpec::always(FailAction::Error));
+        let err = seam().unwrap_err();
+        disarm("test.macro.err");
+        assert_eq!(err.kind(), "fault");
+        assert!(err.to_string().contains("failpoint 'test.macro.err' fired"), "{err}");
+        assert_eq!(seam().unwrap(), 5, "disarmed again: pass through");
+    }
+
+    #[test]
+    fn fire_as_panic_panics_with_seam_name() {
+        arm("test.panic.seam", FailSpec::once(FailAction::Panic));
+        let caught = std::panic::catch_unwind(|| fire_as_panic("test.panic.seam"));
+        disarm("test.panic.seam");
+        let payload = caught.unwrap_err();
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("failpoint 'test.panic.seam' fired"), "{msg}");
+        fire_as_panic("test.panic.seam"); // disarmed: no-op
+    }
+
+    #[test]
+    fn env_grammar_parses_and_skips_garbage() {
+        let specs = parse_env(
+            "persist.spill=error; engine.score=panic:1:1 , wire.parse=error:0.25:4;\
+             bogus;also=bogus;bad=error:2.0;neg=panic:-1",
+        );
+        let names: Vec<&str> = specs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["persist.spill", "engine.score", "wire.parse"]);
+        let (_, spill) = &specs[0];
+        assert_eq!(spill.action, FailAction::Error);
+        assert_eq!(spill.probability, 1.0);
+        assert_eq!(spill.max_fires, 0);
+        let (_, score) = &specs[1];
+        assert_eq!(score.action, FailAction::Panic);
+        assert_eq!(score.max_fires, 1);
+        let (_, wire) = &specs[2];
+        assert_eq!(wire.probability, 0.25);
+        assert_eq!(wire.max_fires, 4);
+        assert!(parse_env("").is_empty());
+    }
+}

@@ -1,0 +1,234 @@
+//! `astra::resilience` — deadlines, cooperative cancellation, retry
+//! policy, poison-tolerant locking, and the fault-injection substrate
+//! ([`failpoint`]). Zero external dependencies, like [`crate::telemetry`].
+//!
+//! The paper's headline guarantee is *bounded* search latency; this module
+//! is how the service keeps that promise under real traffic:
+//!
+//! * [`CancelToken`] — a shared deadline + cancellation flag carried from
+//!   the wire (`deadline_ms`) into the search-plan executor, which checks
+//!   it at wave boundaries. A cancelled search returns a typed
+//!   [`AstraError::Deadline`] and never a partial report: waves that
+//!   already ran are discarded whole, so the determinism contract (byte-
+//!   identical reports at any worker/wave count) is untouched — a request
+//!   either gets the full report or a clean typed error.
+//! * [`RetryPolicy`] — deterministic full-jitter exponential backoff for
+//!   retryable (`overloaded`) responses, seeded via [`crate::prng`] so
+//!   tests can pin the exact delay sequence.
+//! * [`lock_unpoisoned`] — mutex poisoning is a side effect of panic
+//!   isolation: once per-request handling is wrapped in `catch_unwind`,
+//!   a panicking request must not wedge every later request that touches
+//!   the same shard/registry lock. The data under our locks is
+//!   append/replace-style (cache shards, inflight markers, metric maps),
+//!   valid at every intermediate state, so recovering the guard is safe.
+//! * [`failpoint`] — env/registry-armed deterministic fault injection at
+//!   the seams that matter (persist IO, snapshot decode, engine scoring,
+//!   wire parse); `rust/tests/chaos.rs` drives the serve loop through
+//!   scripted fault schedules against the invariants above.
+
+pub mod failpoint;
+
+pub use failpoint::{FailAction, FailSpec};
+
+use crate::{AstraError, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// Used on locks that protect always-valid data (cache shards, the
+/// inflight map, the telemetry registry, worker result vectors): a panic
+/// mid-critical-section there can at worst lose one in-flight update,
+/// never corrupt an invariant, so inheriting the poisoned state beats
+/// propagating a second panic to every subsequent request.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Shared cancellation token: an optional absolute deadline plus a manual
+/// cancellation flag. Cheap to check (one relaxed load, plus one clock
+/// read when a deadline is armed), safe to share across worker threads by
+/// reference or `Arc`.
+///
+/// The executor polls [`check`](CancelToken::check) at wave boundaries and
+/// [`is_cancelled`](CancelToken::is_cancelled) inside per-pool closures;
+/// the service layer builds one per admitted cold request from the
+/// effective `deadline_ms`.
+#[derive(Debug)]
+pub struct CancelToken {
+    deadline: Option<Instant>,
+    /// The original budget, kept for deterministic error messages
+    /// (elapsed times would break byte-stable wire transcripts).
+    budget_ms: Option<u64>,
+    cancelled: AtomicBool,
+}
+
+impl CancelToken {
+    /// A token that never fires (the default for direct engine use).
+    pub fn unlimited() -> Self {
+        CancelToken { deadline: None, budget_ms: None, cancelled: AtomicBool::new(false) }
+    }
+
+    /// A token that fires once `budget` has elapsed from now.
+    pub fn with_deadline(budget: Duration) -> Self {
+        CancelToken {
+            deadline: Some(Instant::now() + budget),
+            budget_ms: Some(budget.as_millis() as u64),
+            cancelled: AtomicBool::new(false),
+        }
+    }
+
+    /// Convenience: `0` means "already expired" (the wire contract for
+    /// `deadline_ms: 0` — serve from cache or fail immediately).
+    pub fn with_deadline_ms(ms: u64) -> Self {
+        Self::with_deadline(Duration::from_millis(ms))
+    }
+
+    /// Manually cancel (idempotent).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Has this token fired? Latches: once the deadline has passed the
+    /// token stays cancelled even if the clock could not be re-read.
+    pub fn is_cancelled(&self) -> bool {
+        if self.cancelled.load(Ordering::Relaxed) {
+            return true;
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                self.cancelled.store(true, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Time left before the deadline (`None` when unlimited, zero once
+    /// expired).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+
+    /// Checkpoint: `Ok(())` to keep going, a typed [`AstraError::Deadline`]
+    /// once cancelled. The executor calls this at wave boundaries so a
+    /// cancelled search unwinds without assembling a partial report.
+    pub fn check(&self) -> Result<()> {
+        if !self.is_cancelled() {
+            return Ok(());
+        }
+        Err(match self.budget_ms {
+            Some(ms) => AstraError::Deadline(format!(
+                "deadline of {ms} ms exceeded; search cancelled at a wave boundary"
+            )),
+            None => AstraError::Deadline("search cancelled".to_string()),
+        })
+    }
+}
+
+/// Deterministic full-jitter exponential backoff for client-side retries
+/// of retryable (`overloaded`) responses.
+///
+/// Attempt `k` (0-based) sleeps a uniform duration in `[d/2, d]` where
+/// `d = min(base_ms << k, cap_ms)`; the jitter stream is seeded, so a
+/// fixed seed yields a fixed delay sequence (pinned in tests).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub base_ms: u64,
+    pub cap_ms: u64,
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    pub fn new(max_retries: u32, base_ms: u64, seed: u64) -> Self {
+        RetryPolicy { max_retries, base_ms: base_ms.max(1), cap_ms: 5_000, seed }
+    }
+
+    /// The backoff delay before retry attempt `attempt` (0-based).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let exp = self
+            .base_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.cap_ms.max(self.base_ms))
+            .max(1);
+        // One independent, deterministic stream per attempt index.
+        let mut rng =
+            crate::prng::Rng::new(self.seed ^ (attempt as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        Duration::from_millis(rng.range_u64(exp.div_ceil(2), exp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_token_never_fires() {
+        let t = CancelToken::unlimited();
+        assert!(!t.is_cancelled());
+        assert!(t.check().is_ok());
+        assert!(t.remaining().is_none());
+    }
+
+    #[test]
+    fn zero_deadline_is_immediately_cancelled() {
+        let t = CancelToken::with_deadline_ms(0);
+        assert!(t.is_cancelled());
+        let err = t.check().unwrap_err();
+        assert_eq!(err.kind(), "deadline");
+        assert!(err.to_string().contains("deadline of 0 ms exceeded"), "{err}");
+    }
+
+    #[test]
+    fn manual_cancel_latches() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(t.check().is_ok());
+        t.cancel();
+        assert!(t.is_cancelled());
+        assert_eq!(t.check().unwrap_err().kind(), "deadline");
+        assert!(t.is_cancelled(), "cancellation must latch");
+    }
+
+    #[test]
+    fn generous_deadline_not_cancelled_yet() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(!t.is_cancelled());
+        assert!(t.remaining().unwrap() > Duration::from_secs(3000));
+    }
+
+    #[test]
+    fn retry_delays_are_deterministic_and_bounded() {
+        let p = RetryPolicy::new(4, 25, 42);
+        let a: Vec<_> = (0..4).map(|k| p.delay(k)).collect();
+        let b: Vec<_> = (0..4).map(|k| p.delay(k)).collect();
+        assert_eq!(a, b, "same seed, same delays");
+        for (k, d) in a.iter().enumerate() {
+            let full = (25u64 << k).min(5_000);
+            let ms = d.as_millis() as u64;
+            assert!(ms >= full.div_ceil(2) && ms <= full, "attempt {k}: {ms} ms vs cap {full}");
+        }
+        let other = RetryPolicy::new(4, 25, 43);
+        assert_ne!(
+            (0..4).map(|k| other.delay(k)).collect::<Vec<_>>(),
+            a,
+            "different seed should shift the jitter"
+        );
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panic() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7, "guard recovered, data intact");
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+}

@@ -11,6 +11,7 @@
 
 use crate::coordinator::SearchReport;
 use crate::pareto::PoolEntry;
+use crate::resilience::lock_unpoisoned;
 use crate::strategy::Segment;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -180,7 +181,11 @@ impl ShardedCache {
 
     fn lookup(&self, fp: Fingerprint, count: bool) -> Option<Arc<SearchReport>> {
         let now = Instant::now();
-        let mut shard = self.shard(fp).lock().unwrap();
+        // Poison-tolerant locks throughout: the service isolates request
+        // panics (`catch_unwind`), so a shard must stay usable even if a
+        // panic ever unwound through it — its state is a plain map that is
+        // valid at every step.
+        let mut shard = lock_unpoisoned(self.shard(fp));
         match shard.map.get_mut(&fp.0) {
             Some(e) => {
                 if let Some(ttl) = self.config.ttl {
@@ -227,7 +232,7 @@ impl ShardedCache {
             return;
         }
         let last_used = self.tick.fetch_add(1, Ordering::Relaxed);
-        let mut shard = self.shard(fp).lock().unwrap();
+        let mut shard = lock_unpoisoned(self.shard(fp));
         if let Some(old) = shard.map.insert(
             fp.0,
             Entry { report, bytes, inserted: Instant::now(), last_used },
@@ -249,7 +254,7 @@ impl ShardedCache {
     pub fn export_entries(&self) -> Vec<(u64, Arc<SearchReport>)> {
         let mut v: Vec<(u64, Arc<SearchReport>)> = Vec::new();
         for s in &self.shards {
-            for (k, e) in s.lock().unwrap().map.iter() {
+            for (k, e) in lock_unpoisoned(s).map.iter() {
                 v.push((*k, e.report.clone()));
             }
         }
@@ -260,7 +265,7 @@ impl ShardedCache {
     /// Drop every entry (tests / `astra serve` SIGHUP-style reset).
     pub fn clear(&self) {
         for s in &self.shards {
-            let mut s = s.lock().unwrap();
+            let mut s = lock_unpoisoned(s);
             s.map.clear();
             s.bytes = 0;
         }
@@ -268,7 +273,7 @@ impl ShardedCache {
 
     /// Current resident entry count.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards.iter().map(|s| lock_unpoisoned(s).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -278,7 +283,7 @@ impl ShardedCache {
     pub fn stats(&self) -> CacheStats {
         let (mut entries, mut bytes) = (0, 0);
         for s in &self.shards {
-            let s = s.lock().unwrap();
+            let s = lock_unpoisoned(s);
             entries += s.map.len();
             bytes += s.bytes;
         }

@@ -31,6 +31,42 @@
 //! and cache entries from the versioned [`crate::persist`] snapshot on
 //! boot, re-spills every N admissions and on clean shutdown, and reports
 //! `persist_*` counters on the stats line.
+//!
+//! ## Request lifecycle (admit → single-flight → execute → publish)
+//!
+//! Every request walks one path, [`SearchService::handle_opts`], with four
+//! typed early exits (wire `kind` tags in parentheses):
+//!
+//! 1. **Cache.** The canonical fingerprint is looked up first. Hits are
+//!    served in microseconds and are exempt from deadlines and shedding —
+//!    answering from the cache is cheaper than refusing, so even
+//!    `deadline_ms: 0` gets a cached result.
+//! 2. **Deadline gate.** The effective deadline — the request's
+//!    `deadline_ms`, else [`ServiceConfig::default_deadline_ms`] — is
+//!    resolved; an already-expired budget (`0`) fails immediately
+//!    (`deadline`) without ever starting a search.
+//! 3. **Admission.** Cold requests count against
+//!    [`ServiceConfig::max_queue_depth`]; past it they are shed with an
+//!    immediate *retryable* error (`overloaded`) — `astra batch` retries
+//!    these client-side with seeded exponential backoff.
+//! 4. **Single-flight.** One leader per cache key searches; followers
+//!    block on the slot with `Condvar::wait_timeout`, bounded by their own
+//!    deadline (`deadline`) and by [`ServiceConfig::flight_wait_ms`]
+//!    (`fault`) — a wedged leader can never strand followers forever.
+//! 5. **Execute.** The leader runs the executor under a
+//!    [`crate::resilience::CancelToken`] polled at wave boundaries — a fired
+//!    deadline returns a typed error (`deadline`), never a partial report
+//!    — wrapped in `catch_unwind`, so a poisoned request is counted and
+//!    isolated (`panic`) instead of killing the serve loop.
+//! 6. **Publish.** Success inserts into the cache *before* waking waiters
+//!    and clearing the in-flight marker; errors fan out to every waiter
+//!    as `(kind, message)` so all coalesced requests receive the same
+//!    typed error. Either way each request gets exactly one terminal
+//!    response.
+//!
+//! The resilience counters (`requests_shed`, `requests_deadline`,
+//! `requests_panicked`, plus the failpoint module's `faults_injected`)
+//! ride the `{"cmd":"stats"}` line and the telemetry registry.
 
 pub mod cache;
 pub mod fingerprint;
@@ -40,15 +76,16 @@ pub use cache::{CacheConfig, CacheStats, ShardedCache};
 pub use fingerprint::{fingerprint, frontier_fingerprint, Fingerprint};
 
 use crate::coordinator::{ScoringCore, SearchReport, SearchRequest};
+use crate::resilience::{lock_unpoisoned, CancelToken};
 use crate::strategy::GpuPoolMode;
 use crate::persist;
 use crate::pool::par_for_indices;
 use crate::{AstraError, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
 /// Warm-start persistence policy ([`crate::persist`]).
 #[derive(Debug, Clone)]
@@ -90,6 +127,18 @@ pub struct ServiceConfig {
     pub batch_workers: usize,
     /// Warm-start spill/restore policy.
     pub warm: WarmConfig,
+    /// Deadline (ms) applied to requests that carry none of their own
+    /// (`0` = unlimited). An explicit wire `deadline_ms` always wins.
+    pub default_deadline_ms: u64,
+    /// Load-shedding bound: max cold requests (leaders + coalesced
+    /// waiters) past admission at once (`0` = unbounded). Beyond it new
+    /// cold requests get an immediate retryable `overloaded` error; cache
+    /// hits are never shed.
+    pub max_queue_depth: usize,
+    /// Ceiling (ms) on how long a coalesced follower waits for its search
+    /// leader before giving up with a `fault` error. Generous by design —
+    /// it only fires when a leader is wedged beyond any plausible search.
+    pub flight_wait_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -99,8 +148,22 @@ impl Default for ServiceConfig {
             max_batch: 32,
             batch_workers: 0,
             warm: WarmConfig::default(),
+            default_deadline_ms: 0,
+            max_queue_depth: 0,
+            flight_wait_ms: 300_000,
         }
     }
+}
+
+/// Per-request serving options (everything here is out of the request
+/// fingerprint: two requests differing only in deadline share one cache
+/// entry and one single-flight slot).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestOpts {
+    /// Deadline for this request in ms. `None` falls back to
+    /// [`ServiceConfig::default_deadline_ms`]; `Some(0)` is an
+    /// already-expired budget (cache-or-fail, never a search).
+    pub deadline_ms: Option<u64>,
 }
 
 /// Where a response came from.
@@ -135,10 +198,15 @@ pub struct ServiceResponse {
     pub report: Arc<SearchReport>,
 }
 
+/// Typed error payload carried across the single-flight slot: the
+/// leader's [`AstraError::kind`] tag plus its prefix-free message, so
+/// every coalesced waiter rebuilds the same typed error (`AstraError` is
+/// not `Clone`).
+type FlightErr = (String, String);
+
 /// Single-flight slot: the leader publishes into `done` and notifies.
-/// Errors are carried as strings (the engine error is not `Clone`).
 struct FlightSlot {
-    done: Mutex<Option<std::result::Result<Arc<SearchReport>, String>>>,
+    done: Mutex<Option<std::result::Result<Arc<SearchReport>, FlightErr>>>,
     cv: Condvar,
 }
 
@@ -147,22 +215,44 @@ impl FlightSlot {
         FlightSlot { done: Mutex::new(None), cv: Condvar::new() }
     }
 
-    fn wait(&self) -> std::result::Result<Arc<SearchReport>, String> {
-        let mut g = self.done.lock().unwrap();
+    /// Wait for the leader's result, at most `ceiling`. On timeout the
+    /// waiter gets a typed error of `timeout_kind` — `"deadline"` when the
+    /// request's own deadline is the binding bound, `"fault"` when the
+    /// generous [`ServiceConfig::flight_wait_ms`] ceiling fired (a wedged
+    /// leader must never strand followers forever).
+    fn wait(
+        &self,
+        ceiling: Duration,
+        timeout_kind: &str,
+    ) -> std::result::Result<Arc<SearchReport>, FlightErr> {
+        let deadline = Instant::now() + ceiling;
+        let mut g = lock_unpoisoned(&self.done);
         while g.is_none() {
-            g = self.cv.wait(g).unwrap();
+            let now = Instant::now();
+            if now >= deadline {
+                return Err((
+                    timeout_kind.to_string(),
+                    "timed out waiting for the in-flight search leader".to_string(),
+                ));
+            }
+            let (ng, _timed_out) = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            g = ng;
         }
         g.as_ref().unwrap().clone()
     }
 
-    fn publish(&self, r: std::result::Result<Arc<SearchReport>, String>) {
-        *self.done.lock().unwrap() = Some(r);
+    fn publish(&self, r: std::result::Result<Arc<SearchReport>, FlightErr>) {
+        *lock_unpoisoned(&self.done) = Some(r);
         self.cv.notify_all();
     }
 }
 
 /// Leader-side unwind guard: publishes an error and clears the in-flight
-/// marker if the search panics. Disarmed on the normal path.
+/// marker if the search panics *outside* the `catch_unwind` wall (cache
+/// insertion, publication). Disarmed on the normal path.
 struct FlightGuard<'a> {
     inflight: &'a Mutex<HashMap<u64, Arc<FlightSlot>>>,
     slot: &'a FlightSlot,
@@ -181,11 +271,29 @@ impl Drop for FlightGuard<'_> {
         if !self.armed {
             return;
         }
-        self.slot.publish(Err("search leader panicked".to_string()));
-        // `lock()` may be poisoned during unwind; best-effort removal.
-        if let Ok(mut m) = self.inflight.lock() {
-            m.remove(&self.key);
-        }
+        self.slot.publish(Err(("panic".to_string(), "search leader panicked".to_string())));
+        lock_unpoisoned(self.inflight).remove(&self.key);
+    }
+}
+
+/// Admission token: holding one counts against the shedding bound;
+/// dropping it (normal return *or* unwind) releases the slot.
+struct AdmitGuard<'a>(&'a SearchService);
+
+impl Drop for AdmitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Extract a human-readable message from a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -202,6 +310,15 @@ pub struct SearchService {
     /// At most one spill writes at a time; late arrivals skip (the next
     /// admission will spill strictly more warmth anyway).
     spilling: Mutex<()>,
+    /// Cold requests currently past admission (leaders + coalesced
+    /// waiters); compared against `config.max_queue_depth` for shedding.
+    active: AtomicUsize,
+    /// Requests shed by the queue-depth bound since boot.
+    shed: AtomicU64,
+    /// Requests that exited with a `deadline` error since boot.
+    deadline_hits: AtomicU64,
+    /// Requests whose search panicked and was isolated since boot.
+    panicked: AtomicU64,
 }
 
 impl SearchService {
@@ -217,6 +334,10 @@ impl SearchService {
             config,
             admissions: AtomicU64::new(0),
             spilling: Mutex::new(()),
+            active: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            deadline_hits: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
         };
         if let Some(path) = svc.warm_path() {
             if path.exists() {
@@ -372,8 +493,50 @@ impl SearchService {
         })
     }
 
+    /// Cold requests currently past admission (leaders plus coalesced
+    /// waiters) — the live value the shedding bound compares against.
+    pub fn active_requests(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime resilience counters: `(shed, deadline, panicked)`.
+    pub fn resilience_counters(&self) -> (u64, u64, u64) {
+        (
+            self.shed.load(Ordering::Relaxed),
+            self.deadline_hits.load(Ordering::Relaxed),
+            self.panicked.load(Ordering::Relaxed),
+        )
+    }
+
+    fn note_deadline(&self) {
+        self.deadline_hits.fetch_add(1, Ordering::Relaxed);
+        crate::telemetry::counter_macro!("astra_requests_deadline_total").inc();
+    }
+
+    /// Admission gate for cold requests: over `max_queue_depth`, shed with
+    /// an immediate retryable `overloaded` error instead of queueing.
+    fn try_admit(&self) -> Result<AdmitGuard<'_>> {
+        let depth = self.config.max_queue_depth;
+        let now = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+        if depth > 0 && now > depth {
+            self.active.fetch_sub(1, Ordering::Relaxed);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::counter_macro!("astra_requests_shed_total").inc();
+            return Err(AstraError::Overloaded(format!(
+                "admission queue full (depth {depth}); retry after backoff"
+            )));
+        }
+        Ok(AdmitGuard(self))
+    }
+
     /// Serve one request: cache → single-flight coalescing → engine search.
     pub fn handle(&self, req: &SearchRequest) -> Result<ServiceResponse> {
+        self.handle_opts(req, RequestOpts::default())
+    }
+
+    /// [`Self::handle`] with per-request serving options (deadline). See
+    /// the module docs for the lifecycle and its typed exits.
+    pub fn handle_opts(&self, req: &SearchRequest, opts: RequestOpts) -> Result<ServiceResponse> {
         let t0 = Instant::now();
         let fp = self.fingerprint_of(req);
         let is_frontier = matches!(req.mode, GpuPoolMode::Frontier { .. });
@@ -381,15 +544,32 @@ impl SearchService {
         // for frontier requests — a repriced hit and a cold search under
         // the same book answer byte-identically.
         let key = if is_frontier { self.cache_key_of(req) } else { fp };
+        // Cache first, before any deadline/shed gate: a hit is cheaper
+        // than the refusal, so cached results are served even when the
+        // deadline would reject a cold search.
         if let Some(report) = self.cache.get(key) {
             if let Some(resp) = self.serve_cached(req, fp, is_frontier, report, &t0) {
                 return Ok(resp);
             }
         }
+        // Effective deadline: the wire value wins; otherwise the service
+        // default (where 0 means "no default" rather than "expired").
+        let deadline_ms = opts
+            .deadline_ms
+            .or((self.config.default_deadline_ms > 0).then_some(self.config.default_deadline_ms));
+        if deadline_ms == Some(0) {
+            self.note_deadline();
+            return Err(AstraError::Deadline(
+                "deadline_ms is 0 and the result is not cached".to_string(),
+            ));
+        }
+        // Load shedding: only cold requests consume an admission slot; the
+        // guard releases it on every exit path, unwinds included.
+        let _admit = self.try_admit()?;
         // Single-flight: exactly one thread (the leader) runs the search;
         // everyone else arriving with the same cache key waits on it.
         let (slot, leader) = {
-            let mut map = self.inflight.lock().unwrap();
+            let mut map = lock_unpoisoned(&self.inflight);
             // Re-check the cache under the in-flight lock: a finishing
             // leader publishes to the cache *before* clearing its marker,
             // so a miss here is authoritative and we cannot double-search.
@@ -408,17 +588,36 @@ impl SearchService {
             }
         };
         if leader {
-            // Unwind safety: if the engine panics, the guard still
-            // publishes a failure and clears the marker — otherwise every
-            // waiter (condvar, no timeout) and all future requests with
-            // this fingerprint would wedge for the server's lifetime.
+            // Unwind safety, two layers: `catch_unwind` turns an engine
+            // panic into a typed `panic`-kind error right here; the guard
+            // is the backstop for panics *outside* that wall (publication,
+            // cache insertion) so waiters can never wedge on the slot.
             let mut guard = FlightGuard {
                 inflight: &self.inflight,
                 slot: slot.as_ref(),
                 key: key.0,
                 armed: true,
             };
-            let result = self.core.search(req).map(Arc::new);
+            let cancel = match deadline_ms {
+                Some(ms) => CancelToken::with_deadline_ms(ms),
+                None => CancelToken::unlimited(),
+            };
+            let result = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.core.search_with_cancel(req, &cancel).map(Arc::new)
+            })) {
+                Ok(r) => r,
+                Err(payload) => {
+                    self.panicked.fetch_add(1, Ordering::Relaxed);
+                    crate::telemetry::counter_macro!("astra_requests_panicked_total").inc();
+                    Err(AstraError::Panicked(format!(
+                        "search panicked (isolated): {}",
+                        panic_message(payload.as_ref())
+                    )))
+                }
+            };
+            if matches!(result, Err(AstraError::Deadline(_))) {
+                self.note_deadline();
+            }
             // Publish to the cache *before* waking waiters and clearing the
             // in-flight marker, so a racing request either joins the flight
             // or hits the cache — never re-searches.
@@ -427,9 +626,9 @@ impl SearchService {
             }
             slot.publish(match &result {
                 Ok(r) => Ok(r.clone()),
-                Err(e) => Err(e.to_string()),
+                Err(e) => Err((e.kind().to_string(), e.message())),
             });
-            self.inflight.lock().unwrap().remove(&key.0);
+            lock_unpoisoned(&self.inflight).remove(&key.0);
             guard.disarm();
             let resp = result.map(|report| ServiceResponse {
                 fingerprint: fp,
@@ -443,14 +642,32 @@ impl SearchService {
             }
             resp
         } else {
-            match slot.wait() {
+            // Followers bound their wait by their own deadline and by the
+            // generous flight ceiling, whichever is tighter; the timeout
+            // kind tells the client which bound fired.
+            let flight_ceiling = Duration::from_millis(self.config.flight_wait_ms.max(1));
+            let (ceiling, timeout_kind) = match deadline_ms {
+                Some(ms) if Duration::from_millis(ms) < flight_ceiling => {
+                    (Duration::from_millis(ms), "deadline")
+                }
+                _ => (flight_ceiling, "fault"),
+            };
+            match slot.wait(ceiling, timeout_kind) {
                 Ok(report) => Ok(ServiceResponse {
                     fingerprint: fp,
                     source: ResponseSource::Coalesced,
                     service_secs: t0.elapsed().as_secs_f64(),
                     report,
                 }),
-                Err(msg) => Err(AstraError::Search(format!("coalesced request failed: {msg}"))),
+                Err((kind, msg)) => {
+                    if kind == "deadline" {
+                        self.note_deadline();
+                    }
+                    Err(AstraError::from_kind(
+                        &kind,
+                        format!("coalesced request failed: {msg}"),
+                    ))
+                }
             }
         }
     }
@@ -460,6 +677,16 @@ impl SearchService {
     /// in input order. Duplicates of an earlier batch entry are reported as
     /// [`ResponseSource::Coalesced`] and share the leader's report.
     pub fn handle_batch(&self, reqs: &[SearchRequest]) -> Vec<Result<ServiceResponse>> {
+        self.handle_batch_opts(reqs, &[])
+    }
+
+    /// [`Self::handle_batch`] with per-request serving options, matched to
+    /// `reqs` by index (missing entries default to no deadline).
+    pub fn handle_batch_opts(
+        &self,
+        reqs: &[SearchRequest],
+        opts: &[RequestOpts],
+    ) -> Vec<Result<ServiceResponse>> {
         let fps: Vec<Fingerprint> = reqs.iter().map(|r| self.fingerprint_of(r)).collect();
         // First occurrence of each fingerprint runs; later ones coalesce.
         let mut first_of: HashMap<u64, usize> = HashMap::new();
@@ -486,8 +713,12 @@ impl SearchService {
             Vec::with_capacity(distinct.len());
         for chunk in distinct.chunks(self.config.max_batch.max(1)) {
             depth.add(chunk.len() as i64);
-            let mut part =
-                par_for_indices(chunk.len(), workers, |i| self.handle(&reqs[chunk[i]]));
+            let mut part = par_for_indices(chunk.len(), workers, |i| {
+                self.handle_opts(
+                    &reqs[chunk[i]],
+                    opts.get(chunk[i]).copied().unwrap_or_default(),
+                )
+            });
             depth.add(-(chunk.len() as i64));
             leader_results.append(&mut part);
         }
@@ -509,7 +740,10 @@ impl SearchService {
                         }
                         Ok(resp)
                     }
-                    Err(e) => Err(AstraError::Search(e.to_string())),
+                    // Rebuild from (kind, message) so duplicates keep the
+                    // leader's typed kind (and retryability) instead of
+                    // degrading to a prefix-stacked `Search` error.
+                    Err(e) => Err(AstraError::from_kind(e.kind(), e.message())),
                 }
             })
             .collect()
@@ -689,5 +923,84 @@ mod tests {
         assert_ne!(resp[0].fingerprint, resp[1].fingerprint);
         assert_eq!(resp[2].source, ResponseSource::Coalesced);
         assert_eq!(svc.core().searches_run(), 3, "3 distinct requests in the batch");
+    }
+
+    #[test]
+    fn flight_wait_times_out_with_the_binding_kind() {
+        let slot = FlightSlot::new();
+        // Nobody publishes: the wait must end at the ceiling, not hang,
+        // and surface whichever bound was binding as the error kind.
+        let err = slot.wait(Duration::from_millis(10), "fault").unwrap_err();
+        assert_eq!(err.0, "fault");
+        let err = slot.wait(Duration::from_millis(10), "deadline").unwrap_err();
+        assert_eq!(err.0, "deadline");
+        assert!(err.1.contains("in-flight search leader"), "{}", err.1);
+    }
+
+    #[test]
+    fn flight_guard_drop_publishes_panic_marker_and_clears_marker() {
+        let inflight: Mutex<HashMap<u64, Arc<FlightSlot>>> = Mutex::new(HashMap::new());
+        let slot = Arc::new(FlightSlot::new());
+        inflight.lock().unwrap().insert(7, slot.clone());
+        drop(FlightGuard { inflight: &inflight, slot: &slot, key: 7, armed: true });
+        // Waiters are released with the pinned marker, not stranded.
+        let err = slot.wait(Duration::from_millis(10), "fault").unwrap_err();
+        assert_eq!(err, ("panic".to_string(), "search leader panicked".to_string()));
+        assert!(!inflight.lock().unwrap().contains_key(&7), "marker must be cleared");
+    }
+
+    #[test]
+    fn deadline_zero_fails_immediately_without_searching() {
+        let svc = SearchService::new(small_core(), ServiceConfig::default());
+        let err = svc.handle_opts(&req(16), RequestOpts { deadline_ms: Some(0) }).unwrap_err();
+        assert!(matches!(err, AstraError::Deadline(_)), "got {err}");
+        assert_eq!(err.kind(), "deadline");
+        assert!(!err.retryable(), "deadline errors are not retryable");
+        assert_eq!(svc.core().searches_run(), 0, "an expired budget must never search");
+        assert_eq!(svc.resilience_counters(), (0, 1, 0));
+        // Not sticky: the same request with budget succeeds afterwards.
+        assert!(svc.handle(&req(16)).is_ok());
+    }
+
+    #[test]
+    fn cached_hit_served_even_at_deadline_zero() {
+        let svc = SearchService::new(small_core(), ServiceConfig::default());
+        svc.handle(&req(16)).unwrap();
+        let hit = svc.handle_opts(&req(16), RequestOpts { deadline_ms: Some(0) }).unwrap();
+        assert_eq!(hit.source, ResponseSource::Cache, "cache is checked before the gate");
+        assert_eq!(svc.resilience_counters().1, 0, "a hit is not a deadline event");
+    }
+
+    #[test]
+    fn admission_sheds_past_queue_depth_and_recovers() {
+        let cfg = ServiceConfig { max_queue_depth: 2, ..Default::default() };
+        let svc = SearchService::new(small_core(), cfg);
+        let a = svc.try_admit().unwrap();
+        let _b = svc.try_admit().unwrap();
+        assert_eq!(svc.active_requests(), 2);
+        let err = svc.try_admit().unwrap_err();
+        assert!(matches!(err, AstraError::Overloaded(_)), "got {err}");
+        assert!(err.retryable(), "shedding must be the retryable kind");
+        assert_eq!(svc.resilience_counters().0, 1);
+        drop(a);
+        // A freed slot re-admits; the guard released its count on drop.
+        let _c = svc.try_admit().unwrap();
+        assert_eq!(svc.active_requests(), 2);
+    }
+
+    #[test]
+    fn explicit_deadline_overrides_service_default() {
+        // Default of 0 means "no default": a plain request is unlimited,
+        // while an explicit 0 on the wire still refuses immediately.
+        let cfg = ServiceConfig { default_deadline_ms: 0, ..Default::default() };
+        let svc = SearchService::new(small_core(), cfg);
+        assert!(svc.handle(&req(16)).is_ok());
+        let err = svc.handle_opts(&req(24), RequestOpts { deadline_ms: Some(0) }).unwrap_err();
+        assert_eq!(err.kind(), "deadline");
+        // A generous explicit deadline still completes the search.
+        let ok = svc
+            .handle_opts(&req(24), RequestOpts { deadline_ms: Some(600_000) })
+            .unwrap();
+        assert_eq!(ok.source, ResponseSource::Search);
     }
 }

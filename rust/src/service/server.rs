@@ -28,6 +28,11 @@
 //!   the whole (throughput, $) curve instead of the best plan under one
 //!   budget.
 //! * `id` — optional opaque tag echoed back in the response.
+//! * `deadline_ms` — optional per-request deadline in milliseconds. The
+//!   search is cancelled cooperatively at wave boundaries once it expires
+//!   and the response is a typed `deadline` error (never a partial
+//!   report). `0` means "cache or fail now". Cached results are served
+//!   regardless of deadline. Not part of the fingerprint.
 //!
 //! `frontier` responses additionally carry a `frontier` object (see
 //! [`crate::report::frontier_json`]): the full Pareto curve of
@@ -40,8 +45,14 @@
 //! ```text
 //! {"id":"r1","ok":true,"fingerprint":"91c4…","source":"search|cache|coalesced",
 //!  "service_ms":…, "engine":{"generated":…,"scored":…,…}, "best":{…}, "top":[…]}
-//! {"id":"r2","ok":false,"error":"unknown model 'gpt-5' (…)"}
+//! {"id":"r2","ok":false,"kind":"config","retryable":false,
+//!  "error":"config error: unknown model 'gpt-5' (…)"}
 //! ```
+//!
+//! Error lines carry the stable [`AstraError::kind`] tag (`json`, `config`,
+//! `deadline`, `overloaded`, `fault`, `panic`, …) and a `retryable` flag;
+//! only `overloaded` (load shedding) is retryable — `astra batch` retries
+//! those client-side with seeded exponential backoff (`--retries`).
 //!
 //! Identical requests always carry the same `fingerprint`, making responses
 //! join-able across batches and tenants.
@@ -61,13 +72,14 @@ use crate::gpu::GpuCatalog;
 use crate::json::{self, Value};
 use crate::model::ModelRegistry;
 use crate::report::scored_strategy_json;
+use crate::resilience::RetryPolicy;
 use crate::strategy::GpuPoolMode;
 use crate::{AstraError, Result};
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use super::{SearchService, ServiceResponse};
+use super::{RequestOpts, SearchService, ServiceResponse};
 
 /// A parsed request line.
 #[derive(Debug, Clone)]
@@ -75,6 +87,8 @@ pub struct WireRequest {
     /// Opaque client tag, echoed back verbatim.
     pub id: Option<String>,
     pub request: SearchRequest,
+    /// Per-request deadline (ms); `None` defers to the service default.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Serve-loop options.
@@ -84,11 +98,20 @@ pub struct ServeOpts {
     pub max_batch: usize,
     /// Strategies included in each response's `top` array.
     pub top: usize,
+    /// Client-side retry budget for *retryable* errors (load shedding).
+    /// `0` disables — the right setting for `astra serve`, where the
+    /// remote client owns the retry decision; `astra batch` defaults on.
+    pub retries: u32,
+    /// Base backoff delay (ms) for the retry schedule (exponential,
+    /// jittered; see [`RetryPolicy`]).
+    pub retry_base_ms: u64,
+    /// Seed for the deterministic retry jitter.
+    pub retry_seed: u64,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { max_batch: 32, top: 3 }
+        ServeOpts { max_batch: 32, top: 3, retries: 0, retry_base_ms: 25, retry_seed: 0 }
     }
 }
 
@@ -116,6 +139,12 @@ pub fn parse_request(
     registry: &ModelRegistry,
 ) -> Result<WireRequest> {
     let id = wire_id(v);
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(x) => Some(x.as_u64().ok_or_else(|| {
+            AstraError::Json("'deadline_ms' is not a non-negative integer".into())
+        })?),
+    };
     let model = registry.get(v.req_str("model")?)?.clone();
     let mode = v.get("mode").and_then(Value::as_str).unwrap_or("homogeneous");
     let request = match mode {
@@ -158,7 +187,7 @@ pub fn parse_request(
             )));
         }
     };
-    Ok(WireRequest { id, request })
+    Ok(WireRequest { id, request, deadline_ms })
 }
 
 /// The `caps` object, `{gpu_name: max_count}`.
@@ -337,10 +366,17 @@ pub fn normalize_response_line(line: &str) -> Result<String> {
         // (see above).
         if let Some(Value::Obj(stats)) = m.get_mut("stats") {
             // `metrics_registered` counts *names* in the process-global
-            // registry, which other code in the same process may grow.
-            for k in
-                ["cache_bytes", "memo_hits", "memo_misses", "persist_bytes", "metrics_registered"]
-            {
+            // registry, which other code in the same process may grow;
+            // `faults_injected` is process-global too (other tests in the
+            // same binary may arm failpoints).
+            for k in [
+                "cache_bytes",
+                "memo_hits",
+                "memo_misses",
+                "persist_bytes",
+                "metrics_registered",
+                "faults_injected",
+            ] {
                 if stats.contains_key(k) {
                     stats.insert(k.to_string(), Value::Num(0.0));
                 }
@@ -377,9 +413,14 @@ fn zero_numbers(v: &mut Value) {
     }
 }
 
-/// Error response line.
-pub fn error_json(id: &Option<String>, msg: &str) -> Value {
-    let mut v = Value::obj().set("ok", false).set("error", msg);
+/// Error response line: the full `Display` text plus the stable machine
+/// `kind` tag and the `retryable` flag clients key their backoff on.
+pub fn error_json(id: &Option<String>, err: &AstraError) -> Value {
+    let mut v = Value::obj()
+        .set("ok", false)
+        .set("kind", err.kind())
+        .set("retryable", err.retryable())
+        .set("error", err.to_string().as_str());
     if let Some(id) = id {
         v = v.set("id", id.as_str());
     }
@@ -394,6 +435,7 @@ pub fn stats_json(service: &SearchService) -> Value {
     let s = service.cache_stats();
     let (memo_scopes, memo_hits, memo_misses) = service.core().memo_counters();
     let p = service.core().persist_stats();
+    let (shed, deadline, panicked) = service.resilience_counters();
     Value::obj()
         .set("ok", true)
         .set("stats", Value::obj()
@@ -415,6 +457,10 @@ pub fn stats_json(service: &SearchService) -> Value {
             .set("persist_bytes", p.bytes_on_disk)
             .set("persist_cache_spilled", p.cache_entries_spilled)
             .set("persist_cache_restored", p.cache_entries_restored)
+            .set("requests_shed", shed)
+            .set("requests_deadline", deadline)
+            .set("requests_panicked", panicked)
+            .set("faults_injected", crate::resilience::failpoint::faults_injected())
             .set("metrics_registered", crate::telemetry::metric_count()))
 }
 
@@ -453,8 +499,15 @@ fn process_batch<W: Write>(
     let registry = ModelRegistry::builtin();
     let mut admitted: Vec<Admitted> = Vec::with_capacity(lines.len());
     let mut requests: Vec<SearchRequest> = Vec::new();
+    let mut request_opts: Vec<RequestOpts> = Vec::new();
     for line in lines {
-        match json::parse(line) {
+        // The parse seam: a fired `wire.parse` failpoint degrades this
+        // line to an error response — never a panic, never a lost line.
+        let parsed = (|| -> Result<Value> {
+            crate::failpoint!("wire.parse");
+            json::parse(line)
+        })();
+        match parsed {
             Ok(v) => {
                 match v.get("cmd").and_then(Value::as_str) {
                     Some("stats") => {
@@ -471,18 +524,41 @@ fn process_batch<W: Write>(
                     Ok(w) => {
                         admitted.push(Admitted::Request { id: w.id, slot: requests.len() });
                         requests.push(w.request);
+                        request_opts.push(RequestOpts { deadline_ms: w.deadline_ms });
                     }
                     Err(e) => {
-                        admitted.push(Admitted::Immediate(error_json(&wire_id(&v), &e.to_string())));
+                        admitted.push(Admitted::Immediate(error_json(&wire_id(&v), &e)));
                     }
                 }
             }
             Err(e) => {
-                admitted.push(Admitted::Immediate(error_json(&None, &e.to_string())));
+                admitted.push(Admitted::Immediate(error_json(&None, &e)));
             }
         }
     }
-    let responses = service.handle_batch(&requests);
+    let mut responses = service.handle_batch_opts(&requests, &request_opts);
+    // Client-side retry of *retryable* errors (load shedding) with seeded
+    // exponential backoff; everything else is deterministic and final.
+    if opts.retries > 0 {
+        let policy = RetryPolicy::new(opts.retries, opts.retry_base_ms, opts.retry_seed);
+        for attempt in 0..opts.retries {
+            let again: Vec<usize> = responses
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| matches!(r, Err(e) if e.retryable()))
+                .map(|(i, _)| i)
+                .collect();
+            if again.is_empty() {
+                break;
+            }
+            std::thread::sleep(policy.delay(attempt));
+            let reqs: Vec<SearchRequest> = again.iter().map(|&i| requests[i].clone()).collect();
+            let ro: Vec<RequestOpts> = again.iter().map(|&i| request_opts[i]).collect();
+            for (k, r) in service.handle_batch_opts(&reqs, &ro).into_iter().enumerate() {
+                responses[again[k]] = r;
+            }
+        }
+    }
     for a in &admitted {
         let line = match a {
             Admitted::Immediate(v) => {
@@ -512,7 +588,7 @@ fn process_batch<W: Write>(
                 }
                 Err(e) => {
                     stats.errors += 1;
-                    json::to_string(&error_json(id, &e.to_string()))
+                    json::to_string(&error_json(id, e))
                 }
             },
         };
@@ -654,9 +730,33 @@ mod tests {
         let v = json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64}"#).unwrap();
         let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
         assert!(w.id.is_none());
-        match &w.request.mode {
-            GpuPoolMode::Homogeneous { count, .. } => assert_eq!(*count, 64),
-            other => panic!("wrong mode {other:?}"),
+        assert!(w.deadline_ms.is_none());
+        let GpuPoolMode::Homogeneous { count, .. } = &w.request.mode else {
+            unreachable!("parsed the wrong mode: {:?}", w.request.mode)
+        };
+        assert_eq!(*count, 64);
+    }
+
+    #[test]
+    fn parse_deadline_ms() {
+        let v = json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64,"deadline_ms":250}"#)
+            .unwrap();
+        let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
+        assert_eq!(w.deadline_ms, Some(250));
+        // 0 parses fine — "cache or fail now" is decided by the service.
+        let v = json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64,"deadline_ms":0}"#)
+            .unwrap();
+        let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
+        assert_eq!(w.deadline_ms, Some(0));
+        // Garbage deadlines are typed json errors, not panics or silence.
+        for bad in [
+            r#"{"model":"llama2-7b","gpu":"a800","gpus":64,"deadline_ms":-5}"#,
+            r#"{"model":"llama2-7b","gpu":"a800","gpus":64,"deadline_ms":1.5}"#,
+            r#"{"model":"llama2-7b","gpu":"a800","gpus":64,"deadline_ms":"soon"}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            let err = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap_err();
+            assert_eq!(err.kind(), "json", "{bad} → {err}");
         }
     }
 
@@ -667,25 +767,23 @@ mod tests {
         )
         .unwrap();
         let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
-        match &w.request.mode {
-            GpuPoolMode::HeteroCost { caps, max_money } => {
-                assert_eq!(caps.len(), 2);
-                assert_eq!(*max_money, 1234.5);
-                let cat = catalog();
-                let total: usize = caps.iter().map(|&(_, c)| c).sum();
-                assert_eq!(total, 24);
-                assert!(caps.iter().any(|&(g, c)| cat.spec(g).name == "a800" && c == 16));
-            }
-            other => panic!("wrong mode {other:?}"),
-        }
+        let GpuPoolMode::HeteroCost { caps, max_money } = &w.request.mode else {
+            unreachable!("parsed the wrong mode: {:?}", w.request.mode)
+        };
+        assert_eq!(caps.len(), 2);
+        assert_eq!(*max_money, 1234.5);
+        let cat = catalog();
+        let total: usize = caps.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 24);
+        assert!(caps.iter().any(|&(g, c)| cat.spec(g).name == "a800" && c == 16));
         // Budget omitted = unlimited.
         let v = json::parse(r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":8}}"#)
             .unwrap();
         let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
-        match &w.request.mode {
-            GpuPoolMode::HeteroCost { max_money, .. } => assert!(max_money.is_infinite()),
-            other => panic!("wrong mode {other:?}"),
-        }
+        let GpuPoolMode::HeteroCost { max_money, .. } = &w.request.mode else {
+            unreachable!("parsed the wrong mode: {:?}", w.request.mode)
+        };
+        assert!(max_money.is_infinite());
     }
 
     #[test]
@@ -693,14 +791,12 @@ mod tests {
         let v = json::parse(r#"{"model":"llama2-7b","mode":"frontier","caps":{"a800":16,"h100":8}}"#)
             .unwrap();
         let w = parse_request(&v, &catalog(), &ModelRegistry::builtin()).unwrap();
-        match &w.request.mode {
-            GpuPoolMode::Frontier { caps } => {
-                assert_eq!(caps.len(), 2);
-                let total: usize = caps.iter().map(|&(_, c)| c).sum();
-                assert_eq!(total, 24);
-            }
-            other => panic!("wrong mode {other:?}"),
-        }
+        let GpuPoolMode::Frontier { caps } = &w.request.mode else {
+            unreachable!("parsed the wrong mode: {:?}", w.request.mode)
+        };
+        assert_eq!(caps.len(), 2);
+        let total: usize = caps.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 24);
         // Frontier mode has no budget axis: a `max_money` is a client bug
         // and must be rejected loudly, not silently ignored.
         let v = json::parse(
@@ -815,5 +911,46 @@ mod tests {
         )
         .unwrap();
         assert_eq!(fingerprint(&a.request, &cat, &cfg), fingerprint(&b.request, &cat, &cfg));
+    }
+
+    /// Every mode's malformed payload must come back as a typed error
+    /// *line* — the serve loop never panics, never drops a line, and keeps
+    /// serving afterwards.
+    #[test]
+    fn malformed_payloads_per_mode_become_error_lines() {
+        let svc = crate::service::SearchService::new(
+            crate::service::tests::small_core(),
+            crate::service::ServiceConfig::default(),
+        );
+        let cases: &[(&str, &str)] = &[
+            (r#"{"model":"llama2-7b","mode":"homogeneous","gpu":"a800"}"#, "json"),
+            (r#"{"model":"llama2-7b","mode":"heterogeneous","gpus":64}"#, "json"),
+            (r#"{"model":"llama2-7b","mode":"cost","gpu":"h100","gpus":64,"max_money":0}"#, "config"),
+            (r#"{"model":"llama2-7b","mode":"hetero-cost","caps":{"a800":"many"}}"#, "json"),
+            (r#"{"model":"llama2-7b","mode":"frontier","caps":{"a800":8},"max_money":9}"#, "config"),
+            (r#"{"model":"llama2-7b","mode":"quantum","gpus":64}"#, "config"),
+            (r#"this is not json"#, "json"),
+        ];
+        let input: String =
+            cases.iter().map(|(l, _)| format!("{l}\n")).collect::<Vec<_>>().concat();
+        let mut out = Vec::new();
+        let stats =
+            run_batch_lines(&svc, &input, &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!(stats.lines, cases.len());
+        assert_eq!(stats.errors, cases.len(), "every malformed line is an error line");
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), cases.len(), "exactly one response per request line");
+        for (line, (src, kind)) in lines.iter().zip(cases) {
+            let v = json::parse(line).unwrap();
+            assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false), "{src}");
+            assert_eq!(v.opt_str("kind"), Some(*kind), "{src} → {line}");
+            assert_eq!(v.get("retryable").and_then(Value::as_bool), Some(false), "{src}");
+        }
+        // The loop is not poisoned: a well-formed request still succeeds.
+        let mut out = Vec::new();
+        let good = r#"{"model":"llama2-7b","gpu":"a800","gpus":16}"#;
+        let stats = run_batch_lines(&svc, good, &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!((stats.ok, stats.errors), (1, 0));
     }
 }

@@ -58,6 +58,10 @@
 //! | `astra_persist_scopes_{spilled,restored,rejected,dropped}_total` | counter | warm-start scope movement |
 //! | `astra_persist_cache_{spilled,restored}_total` | counter | warm-start cache-entry movement |
 //! | `astra_trace_events_total` | counter | flight-recorder events written |
+//! | `astra_requests_shed_total` | counter | requests refused by load shedding |
+//! | `astra_requests_deadline_total` | counter | requests ended by their deadline |
+//! | `astra_requests_panicked_total` | counter | request panics caught and isolated |
+//! | `astra_faults_injected_total` | counter | failpoint firings ([`crate::resilience::failpoint`]) |
 //! | `astra_admission_queue_depth` | gauge | distinct requests in fan-out |
 //! | `astra_memo_scopes` | gauge | live memo scopes |
 //! | `astra_persist_snapshot_bytes` | gauge | last snapshot size on disk |
@@ -303,6 +307,10 @@ pub fn register_core_metrics() {
         "astra_persist_cache_spilled_total",
         "astra_persist_cache_restored_total",
         "astra_trace_events_total",
+        "astra_requests_shed_total",
+        "astra_requests_deadline_total",
+        "astra_requests_panicked_total",
+        "astra_faults_injected_total",
     ] {
         let _ = counter(name);
     }

@@ -1,0 +1,448 @@
+//! Deterministic chaos schedules against the production failpoint seams
+//! (`astra::resilience::failpoint`), in their own process so arming
+//! process-global failpoints cannot perturb the other test binaries.
+//!
+//! Every schedule asserts the same three resilience invariants:
+//!
+//! 1. **No panic escapes** — the serve loop and the service API return
+//!    typed errors (`kind` ∈ {fault, panic, deadline, overloaded}) for
+//!    every injected failure; the process never dies.
+//! 2. **Exactly one terminal response per request** — lines in, lines
+//!    out, no drops and no duplicates, under every schedule.
+//! 3. **Clean recovery** — once faults clear, reports and warm snapshots
+//!    are byte-identical to an undisturbed run: no fault leaves residue
+//!    in the cache, the memo, or the single-flight table.
+//!
+//! The failpoint registry is process-global and the test harness is
+//! multi-threaded, so every test (arming or searching) serializes on
+//! [`FP_LOCK`].
+
+use astra::coordinator::{EngineConfig, ScoringCore, SearchRequest};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::resilience::failpoint::{self, FailAction, FailSpec};
+use astra::resilience::CancelToken;
+use astra::service::server::{normalize_response_line, run_batch_lines, run_serve_loop, ServeOpts};
+use astra::service::{ResponseSource, SearchService, ServiceConfig, WarmConfig};
+use astra::strategy::SpaceConfig;
+use astra::AstraError;
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: failpoints are process-global,
+/// so an armed seam in one test must never fire inside another.
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    // A previous test failing while holding the lock poisons it; the
+    // guard state (nothing) is trivially valid, and `disarm_all` on entry
+    // re-establishes the failpoint invariant.
+    let g = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    failpoint::disarm_all();
+    failpoint::set_seed(0);
+    g
+}
+
+/// Deliberately narrow space: large enough to stream real waves, small
+/// enough that a debug-profile chaos run stays fast.
+fn core() -> ScoringCore {
+    let space = SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 4,
+        mbs_candidates: vec![1, 2],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    };
+    ScoringCore::new(
+        GpuCatalog::builtin(),
+        EngineConfig { use_forests: false, space, ..Default::default() },
+    )
+}
+
+fn service() -> SearchService {
+    SearchService::new(core(), ServiceConfig::default())
+}
+
+fn warm_service(dir: &std::path::Path) -> SearchService {
+    SearchService::new(
+        core(),
+        ServiceConfig {
+            warm: WarmConfig {
+                dir: Some(dir.to_path_buf()),
+                spill_every: 0,
+                include_cache: true,
+                max_snapshot_bytes: 0,
+            },
+            ..Default::default()
+        },
+    )
+}
+
+fn req(count: usize) -> SearchRequest {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    SearchRequest::homogeneous("a800", count, model).unwrap()
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("astra_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Canonical (wall-clock-free) view of a report for byte comparison.
+fn report_bytes(svc: &SearchService, resp: &astra::service::ServiceResponse) -> String {
+    astra::json::to_string(&astra::report::report_json(&resp.report, &svc.core().catalog))
+}
+
+/// Run one fixed script through the serve loop, returning (stats, lines).
+fn serve_script(svc: &SearchService, script: &str) -> (astra::service::server::ServeStats, Vec<String>) {
+    let mut out: Vec<u8> = Vec::new();
+    let input = std::io::Cursor::new(script.as_bytes().to_vec());
+    let opts = ServeOpts { max_batch: 1, top: 1, ..Default::default() };
+    let stats = run_serve_loop(svc, input, &mut out, &opts).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    (stats, text.lines().map(String::from).collect())
+}
+
+fn parsed(line: &str) -> astra::json::Value {
+    astra::json::parse(line).unwrap_or_else(|e| panic!("unparseable response {line}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Schedule 1: persist IO failure (`persist.spill`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spill_fault_is_isolated_and_recovery_is_byte_identical() {
+    let _g = locked();
+    let dir_a = temp_dir("spill_a");
+    let dir_b = temp_dir("spill_b");
+
+    // Disturbed service: search, then spill into an armed seam.
+    let svc = warm_service(&dir_a);
+    svc.handle(&req(8)).unwrap();
+    failpoint::arm("persist.spill", FailSpec::always(FailAction::Error));
+    let err = svc.spill_warm().unwrap_err();
+    assert_eq!(err.kind(), "fault", "{err}");
+    assert!(
+        !dir_a.join("warm.jsonl").exists(),
+        "a failed spill must not leave a partial snapshot"
+    );
+    // The service keeps serving through the spill fault (cache hit).
+    assert_eq!(svc.handle(&req(8)).unwrap().source, ResponseSource::Cache);
+
+    // Faults clear → the spill succeeds and the snapshot is byte-identical
+    // to an undisturbed twin's.
+    failpoint::disarm_all();
+    svc.spill_warm().unwrap().expect("configured spill must run");
+
+    let twin = warm_service(&dir_b);
+    twin.handle(&req(8)).unwrap();
+    twin.spill_warm().unwrap().expect("configured spill must run");
+    let a = std::fs::read_to_string(dir_a.join("warm.jsonl")).unwrap();
+    let b = std::fs::read_to_string(dir_b.join("warm.jsonl")).unwrap();
+    assert_eq!(a, b, "post-recovery snapshot must match the undisturbed run");
+    assert!(failpoint::faults_injected() > 0, "the schedule must actually have fired");
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+// ---------------------------------------------------------------------------
+// Schedule 2: snapshot corruption (`persist.decode`) + restore IO
+// (`persist.restore`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn decode_fault_degrades_to_cold_start_and_clears() {
+    let _g = locked();
+    let dir = temp_dir("decode");
+
+    // Seed a valid snapshot.
+    let svc = warm_service(&dir);
+    svc.handle(&req(8)).unwrap();
+    svc.spill_warm().unwrap().expect("configured spill must run");
+
+    // Corrupt decode: the snapshot is rejected wholesale — cold start,
+    // never an error, never a partial restore.
+    failpoint::arm("persist.decode", FailSpec::always(FailAction::Error));
+    let cold = warm_service(&dir);
+    assert!(
+        cold.core().persist_stats().scopes_rejected >= 1,
+        "corrupt snapshot must be counted as rejected"
+    );
+    assert_eq!(cold.cache_stats().entries, 0, "nothing restores from a corrupt snapshot");
+    let r = cold.handle(&req(8)).unwrap();
+    assert_eq!(r.source, ResponseSource::Search, "cold start must re-search");
+
+    // Fault cleared: the same snapshot restores and serves from cache.
+    failpoint::disarm_all();
+    let warm = warm_service(&dir);
+    let r = warm.handle(&req(8)).unwrap();
+    assert_eq!(r.source, ResponseSource::Cache, "intact snapshot must restore");
+    assert_eq!(warm.core().searches_run(), 0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restore_fault_is_a_typed_error_from_load_warm() {
+    let _g = locked();
+    let dir = temp_dir("restore");
+    let svc = warm_service(&dir);
+    svc.handle(&req(8)).unwrap();
+    svc.spill_warm().unwrap().expect("configured spill must run");
+
+    failpoint::arm("persist.restore", FailSpec::always(FailAction::Error));
+    let err = core().load_warm(&dir.join("warm.jsonl")).unwrap_err();
+    assert_eq!(err.kind(), "fault", "{err}");
+    failpoint::disarm_all();
+    let st = core().load_warm(&dir.join("warm.jsonl")).unwrap();
+    assert!(st.scopes_restored >= 1, "restore must work once the fault clears");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Schedule 3: scoring panic (`engine.score`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scoring_panic_is_isolated_and_recovery_is_byte_identical() {
+    let _g = locked();
+    let svc = service();
+
+    failpoint::arm("engine.score", FailSpec::once(FailAction::Panic));
+    let err = svc.handle(&req(8)).unwrap_err();
+    assert_eq!(err.kind(), "panic", "{err}");
+    assert!(err.to_string().contains("isolated"), "{err}");
+    assert_eq!(svc.resilience_counters().2, 1, "the panic must be counted");
+    assert_eq!(svc.cache_stats().insertions, 0, "a panicked search must not cache");
+
+    // The failpoint is fire-capped: the identical request now succeeds,
+    // and its report byte-matches an undisturbed service's.
+    let recovered = svc.handle(&req(8)).unwrap();
+    assert_eq!(recovered.source, ResponseSource::Search);
+    let twin = service();
+    let undisturbed = twin.handle(&req(8)).unwrap();
+    assert_eq!(
+        report_bytes(&svc, &recovered),
+        report_bytes(&twin, &undisturbed),
+        "post-panic report must match the undisturbed run byte-for-byte"
+    );
+    failpoint::disarm_all();
+}
+
+#[test]
+fn serve_loop_survives_a_panic_on_every_search() {
+    let _g = locked();
+    let svc = service();
+    failpoint::arm("engine.score", FailSpec::always(FailAction::Panic));
+    let script = "\
+{\"id\":\"a\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"b\",\"model\":\"llama2-7b\",\"mode\":\"heterogeneous\",\"gpus\":8,\"caps\":{\"a800\":8,\"h100\":8}}\n\
+garbage line\n\
+{\"id\":\"c\",\"model\":\"llama2-7b\",\"gpu\":\"h100\",\"gpus\":8}\n";
+    let (stats, lines) = serve_script(&svc, script);
+    assert_eq!(stats.lines, 4);
+    assert_eq!(lines.len(), 4, "exactly one terminal response per request line");
+    for (i, id) in [(0usize, "a"), (1, "b"), (3, "c")] {
+        let v = parsed(&lines[i]);
+        assert_eq!(v.opt_str("id"), Some(id));
+        assert_eq!(v.opt_str("kind"), Some("panic"), "line {i}: {}", lines[i]);
+    }
+    assert_eq!(parsed(&lines[2]).opt_str("kind"), Some("json"), "{}", lines[2]);
+    assert_eq!(svc.resilience_counters().2, 3, "three isolated panics");
+
+    // Disarm → the same service serves the same requests normally: no
+    // wedged single-flight slots, no poisoned shard locks.
+    failpoint::disarm_all();
+    let (stats, lines) = serve_script(&svc, script);
+    assert_eq!((stats.ok, stats.errors), (3, 1));
+    assert_eq!(parsed(&lines[0]).opt_str("source"), Some("search"));
+}
+
+// ---------------------------------------------------------------------------
+// Schedule 4: wire garbage (`wire.parse`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_parse_faults_degrade_lines_without_killing_the_loop() {
+    let _g = locked();
+    let svc = service();
+    failpoint::arm(
+        "wire.parse",
+        FailSpec { action: FailAction::Error, probability: 1.0, max_fires: 2 },
+    );
+    let script = "\
+{\"id\":\"a\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"b\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"c\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n";
+    let (stats, lines) = serve_script(&svc, script);
+    assert_eq!(lines.len(), 3, "one response per line under parse faults");
+    assert_eq!((stats.ok, stats.errors), (1, 2));
+    for line in &lines[..2] {
+        let v = parsed(line);
+        assert_eq!(v.opt_str("kind"), Some("fault"), "{line}");
+        assert_eq!(v.get("retryable").and_then(astra::json::Value::as_bool), Some(false));
+        assert!(v.opt_str("id").is_none(), "a line that failed to parse has no id echo");
+    }
+    let ok = parsed(&lines[2]);
+    assert_eq!(ok.opt_str("id"), Some("c"));
+    assert_eq!(ok.opt_str("source"), Some("search"));
+    failpoint::disarm_all();
+}
+
+// ---------------------------------------------------------------------------
+// Schedule 5: deadline overrun (cooperative cancellation)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pre_expired_deadline_cancels_before_the_search_starts() {
+    let _g = locked();
+    let c = core();
+    let err = c
+        .search_with_cancel(&req(8), &CancelToken::with_deadline_ms(0))
+        .unwrap_err();
+    assert!(matches!(err, AstraError::Deadline(_)), "{err}");
+    assert_eq!(c.searches_run(), 0, "a cancelled-before-start search never counts");
+    // The engine is not poisoned: the same core searches fine afterwards.
+    let report = c.search_with_cancel(&req(8), &CancelToken::unlimited()).unwrap();
+    assert!(report.best().is_some());
+    assert_eq!(c.searches_run(), 1);
+}
+
+#[test]
+fn mid_search_cancel_is_clean_never_partial() {
+    let _g = locked();
+    let c = core();
+    let cancel = CancelToken::unlimited();
+    let result = std::thread::scope(|s| {
+        let h = s.spawn(|| c.search_with_cancel(&req(32), &cancel));
+        // Let the search get going, then pull the plug; the executor
+        // notices at the next wave boundary.
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        cancel.cancel();
+        h.join().unwrap()
+    });
+    match result {
+        // Finished before the boundary check: must be a *complete* report.
+        Ok(report) => assert!(report.best().is_some(), "an Ok result is never partial"),
+        // Cancelled at a boundary: typed, no partial payload by construction.
+        Err(e) => assert_eq!(e.kind(), "deadline", "{e}"),
+    }
+    // Either way the core still serves.
+    assert!(c.search_with_cancel(&req(8), &CancelToken::unlimited()).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// Schedule 6: queue overflow (load shedding + client retry)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shed_request_is_typed_retryable_and_slot_frees() {
+    let _g = locked();
+    let svc = SearchService::new(
+        core(),
+        ServiceConfig { max_queue_depth: 1, ..Default::default() },
+    );
+    std::thread::scope(|s| {
+        let leader = s.spawn(|| svc.handle(&req(32)));
+        // Wait until the leader holds the single admission slot.
+        while svc.active_requests() == 0 && !leader.is_finished() {
+            std::thread::yield_now();
+        }
+        // Depth 1 is occupied → the distinct cold request is shed with
+        // the one retryable kind. (If the leader finished in the tiny gap
+        // since the poll, the probe legitimately admits instead — the
+        // deterministic shed mechanics are pinned by the unit test in
+        // `service::tests`.)
+        match svc.handle(&req(16)) {
+            Err(err) => {
+                assert!(matches!(err, AstraError::Overloaded(_)), "{err}");
+                assert!(err.retryable());
+                assert!(svc.resilience_counters().0 >= 1, "shed must be counted");
+            }
+            Ok(r) => assert!(r.report.best().is_some()),
+        }
+        leader.join().unwrap().unwrap();
+    });
+    // The admission slot is released with the leader: no residue.
+    assert_eq!(svc.active_requests(), 0);
+    assert!(svc.handle(&req(16)).is_ok(), "shedding must not be sticky");
+}
+
+#[test]
+fn batch_retry_converges_under_shedding() {
+    let _g = locked();
+    // Depth 1 with two distinct cold requests fanned out concurrently:
+    // whichever loses admission is shed, then retried with backoff. The
+    // *final* state is deterministic regardless of interleaving: every
+    // line ends Ok.
+    let svc = SearchService::new(
+        core(),
+        ServiceConfig { max_queue_depth: 1, batch_workers: 2, ..Default::default() },
+    );
+    let script = "\
+{\"id\":\"a\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"b\",\"model\":\"llama2-7b\",\"gpu\":\"h100\",\"gpus\":8}\n";
+    let mut out: Vec<u8> = Vec::new();
+    let opts = ServeOpts {
+        max_batch: 8,
+        top: 1,
+        retries: 5,
+        retry_base_ms: 1,
+        retry_seed: 42,
+    };
+    let stats = run_batch_lines(&svc, script, &mut out, &opts).unwrap();
+    assert_eq!((stats.lines, stats.ok, stats.errors), (2, 2, 0), "retries must converge");
+    let text = String::from_utf8(out).unwrap();
+    assert_eq!(text.lines().count(), 2, "one terminal response per request");
+    for line in text.lines() {
+        let v = parsed(line);
+        assert_eq!(v.get("ok").and_then(astra::json::Value::as_bool), Some(true), "{line}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-schedule: disarmed failpoints are byte-free
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disarmed_seams_leave_the_wire_transcript_untouched() {
+    let _g = locked();
+    // The seams are compiled in; disarmed they must cost nothing and
+    // change nothing. Two fresh services, one script, identical bytes —
+    // and a third run after an arm/disarm cycle stays identical too.
+    let script = "\
+{\"id\":\"a\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"a2\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
+{\"id\":\"dl\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8,\"deadline_ms\":0}\n\
+{\"id\":\"bad\",\"model\":\"llama2-7b\",\"mode\":\"quantum\",\"gpus\":8}\n";
+    let normalize = |lines: Vec<String>| -> Vec<String> {
+        lines.iter().map(|l| normalize_response_line(l).unwrap()).collect()
+    };
+    let (_, first) = serve_script(&service(), script);
+    let (_, second) = serve_script(&service(), script);
+    assert_eq!(normalize(first.clone()), normalize(second), "transcript must be replay-stable");
+
+    failpoint::arm("engine.score", FailSpec::once(FailAction::Panic));
+    failpoint::disarm_all();
+    let (_, third) = serve_script(&service(), script);
+    assert_eq!(
+        normalize(first),
+        normalize(third),
+        "an arm/disarm cycle must leave no residue in the transcript"
+    );
+    // The deadline-0 repeat request hits the cache (deadline-exempt); the
+    // cold `dl` line in a fresh service... is actually the same
+    // fingerprint as `a`, so it serves from cache — pinned here.
+    let (_, lines) = serve_script(&service(), script);
+    assert_eq!(parsed(&lines[2]).opt_str("source"), Some("cache"));
+    assert_eq!(parsed(&lines[3]).opt_str("kind"), Some("config"));
+}

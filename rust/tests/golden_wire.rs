@@ -30,10 +30,10 @@ use std::path::PathBuf;
 
 /// The fixed request script: every mode, a cache repeat, a frontier
 /// request plus its cache-repeat (pins the reprice-from-cache path on the
-/// wire), three error shapes, a stats line and a metrics line. One
-/// request per admitted
-/// batch (max_batch 1) keeps sources deterministic (`search`/`cache`,
-/// never `coalesced`).
+/// wire), five error shapes (including two typed `deadline`/`config`
+/// refusals), a deadline-exempt cache hit, a stats line and a metrics
+/// line. One request per admitted batch (max_batch 1) keeps sources
+/// deterministic (`search`/`cache`, never `coalesced`).
 const SCRIPT: &str = "\
 {\"id\":\"homog\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
 {\"id\":\"repeat\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
@@ -45,6 +45,9 @@ const SCRIPT: &str = "\
 not json at all\n\
 {\"id\":\"badmodel\",\"model\":\"gpt-5\",\"gpu\":\"a800\",\"gpus\":8}\n\
 {\"id\":\"badbudget\",\"model\":\"llama2-7b\",\"mode\":\"cost\",\"gpu\":\"a800\",\"gpus\":8,\"max_money\":-1}\n\
+{\"id\":\"dl0\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8,\"deadline_ms\":0}\n\
+{\"id\":\"dlcold\",\"model\":\"llama2-13b\",\"gpu\":\"a800\",\"gpus\":8,\"deadline_ms\":0}\n\
+{\"id\":\"badmode\",\"model\":\"llama2-7b\",\"mode\":\"quantum\",\"gpus\":8}\n\
 {\"cmd\":\"stats\",\"id\":\"stats\"}\n\
 {\"cmd\":\"metrics\",\"id\":\"metrics\"}\n";
 
@@ -87,10 +90,10 @@ fn golden_path() -> PathBuf {
 fn run_script() -> String {
     let svc = service();
     let mut out: Vec<u8> = Vec::new();
-    let opts = ServeOpts { max_batch: 1, top: 1 };
+    let opts = ServeOpts { max_batch: 1, top: 1, ..Default::default() };
     let stats = run_batch_lines(&svc, SCRIPT, &mut out, &opts).unwrap();
-    assert_eq!(stats.lines, 12, "script drifted");
-    assert_eq!(stats.errors, 3, "exactly the three error lines fail");
+    assert_eq!(stats.lines, 15, "script drifted");
+    assert_eq!(stats.errors, 5, "exactly the five error lines fail");
     let text = String::from_utf8(out).unwrap();
     let mut normalized = String::new();
     for line in text.lines() {
@@ -108,11 +111,11 @@ fn wire_protocol_matches_golden_transcript() {
     // hetero-cost line must be a well-formed success with a priced plan.
     let lines: Vec<astra::json::Value> =
         got.lines().map(|l| astra::json::parse(l).unwrap()).collect();
-    assert_eq!(lines.len(), 12);
+    assert_eq!(lines.len(), 15);
     assert_eq!(lines[1].opt_str("source"), Some("cache"), "repeat must hit the cache");
     // The metrics line is a success carrying the (normalized) registry
     // dump: the three metric families are present, values are zeroed.
-    let metrics = &lines[11];
+    let metrics = &lines[14];
     assert_eq!(metrics.opt_str("id"), Some("metrics"));
     assert_eq!(metrics.get("ok").and_then(astra::json::Value::as_bool), Some(true));
     for family in ["counters", "gauges", "histograms"] {
@@ -146,10 +149,44 @@ fn wire_protocol_matches_golden_transcript() {
     assert!(!points.is_empty(), "frontier must hold at least one (tput, USD) point");
     assert_eq!(lines[6].opt_str("id"), Some("fr2"));
     assert_eq!(lines[6].opt_str("source"), Some("cache"), "frontier repeat must hit the cache");
-    for (i, id) in [(8usize, "badmodel"), (9usize, "badbudget")] {
+    for (i, id, kind) in [
+        (8usize, "badmodel", "config"),
+        (9, "badbudget", "config"),
+        (11, "dlcold", "deadline"),
+        (12, "badmode", "config"),
+    ] {
         assert_eq!(lines[i].get("ok").and_then(astra::json::Value::as_bool), Some(false));
         assert_eq!(lines[i].opt_str("id"), Some(id));
+        assert_eq!(lines[i].opt_str("kind"), Some(kind), "line {i} wrong error kind");
+        assert_eq!(
+            lines[i].get("retryable").and_then(astra::json::Value::as_bool),
+            Some(false),
+            "none of the scripted errors are retryable"
+        );
     }
+    // `dl0` repeats `homog` with an already-expired deadline: cached
+    // results are deadline-exempt, so it must still answer from the cache.
+    assert_eq!(lines[10].opt_str("id"), Some("dl0"));
+    assert_eq!(
+        lines[10].opt_str("source"),
+        Some("cache"),
+        "deadline_ms:0 on a cached request must serve the cache hit"
+    );
+    // The stats line counts exactly the one cold deadline refusal.
+    assert_eq!(lines[13].opt_str("id"), Some("stats"));
+    assert_eq!(
+        lines[13].pointer("/stats/requests_deadline").and_then(astra::json::Value::as_f64),
+        Some(1.0),
+        "dlcold is the single deadline event"
+    );
+    assert_eq!(
+        lines[13].pointer("/stats/requests_shed").and_then(astra::json::Value::as_f64),
+        Some(0.0)
+    );
+    assert_eq!(
+        lines[13].pointer("/stats/requests_panicked").and_then(astra::json::Value::as_f64),
+        Some(0.0)
+    );
 
     let path = golden_path();
     let regen = std::env::var("ASTRA_REGEN_GOLDEN").as_deref() == Ok("1");

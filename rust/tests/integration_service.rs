@@ -114,7 +114,7 @@ fn serve_loop_three_requests_two_identical() {
     let mut out: Vec<u8> = Vec::new();
     // max_batch = 1 ⇒ strictly sequential admission ⇒ the repeat is a
     // deterministic cache hit (not an in-batch coalesce).
-    let opts = ServeOpts { max_batch: 1, top: 1 };
+    let opts = ServeOpts { max_batch: 1, top: 1, ..Default::default() };
     let stats =
         run_serve_loop(&svc, Cursor::new(input.as_bytes().to_vec()), &mut out, &opts).unwrap();
     assert_eq!((stats.lines, stats.ok, stats.errors), (3, 3, 0));
@@ -149,7 +149,7 @@ not json at all\n\
 {\"id\":\"y\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":16}\n\
 {\"cmd\":\"stats\"}\n";
     let mut out: Vec<u8> = Vec::new();
-    let opts = ServeOpts { max_batch: 1, top: 1 };
+    let opts = ServeOpts { max_batch: 1, top: 1, ..Default::default() };
     let stats =
         run_serve_loop(&svc, Cursor::new(input.as_bytes().to_vec()), &mut out, &opts).unwrap();
     assert_eq!(stats.lines, 4);
@@ -194,7 +194,7 @@ fn batch_of_eight_distinct_requests_is_deterministic() {
     let run = || -> Vec<(String, String, String)> {
         let svc = small_service();
         let mut out: Vec<u8> = Vec::new();
-        let opts = ServeOpts { max_batch: 32, top: 1 };
+        let opts = ServeOpts { max_batch: 32, top: 1, ..Default::default() };
         let stats = run_batch_lines(&svc, &mk_lines(), &mut out, &opts).unwrap();
         assert_eq!((stats.lines, stats.ok, stats.errors), (8, 8, 0));
         assert_eq!(svc.core().searches_run(), 8, "all eight are distinct");
@@ -234,7 +234,7 @@ fn batch_mixes_modes_and_coalesces_duplicates() {
 {\"model\":\"llama2-7b\",\"mode\":\"heterogeneous\",\"gpus\":16,\"caps\":{\"a800\":8,\"h100\":8}}\n\
 {\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":16}\n";
     let mut out: Vec<u8> = Vec::new();
-    let opts = ServeOpts { max_batch: 8, top: 1 };
+    let opts = ServeOpts { max_batch: 8, top: 1, ..Default::default() };
     let stats = run_batch_lines(&svc, lines, &mut out, &opts).unwrap();
     assert_eq!((stats.ok, stats.errors), (3, 0));
     assert_eq!(svc.core().searches_run(), 2, "duplicate inside the batch must coalesce");
