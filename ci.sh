@@ -31,10 +31,14 @@
 # (astra warm save → search --warm-load → diff of the canonical --json
 # reports against a cold search), a trace smoke (search --trace must
 # emit a valid, ts-monotonic Chrome-trace JSONL while leaving the --json
-# report byte-identical to an untraced run), and a chaos smoke (a fault
+# report byte-identical to an untraced run), a chaos smoke (a fault
 # injected via ASTRA_FAILPOINTS into the release binary must surface as
-# a typed error line while the process keeps serving); all are skipped
-# under FAST=1 since they need the release build.
+# a typed error line while the process keeps serving), and an
+# explain/health smoke (`astra explain` on the fig7 hetero-cost workload
+# must certify every prune and stay byte-deterministic; an audited +
+# health request pair through `astra batch` must answer with the audit
+# object and a ready health line); all are skipped under FAST=1 since
+# they need the release build.
 #
 #   ./ci.sh            # tier-1 gate
 #   FAST=1 ./ci.sh     # tier-1 minus the release build (debug tests only)
@@ -124,6 +128,45 @@ if [ "${FAST:-0}" != "1" ]; then
   run grep -q '"source":"search"' "$CHAOSTMP/out.jsonl"
   rm -rf "$CHAOSTMP"
   echo "ci.sh: chaos smoke ok (injected panic isolated to one typed line, service recovered)" >&2
+
+  # --- tier-1 explain/health smoke: the decision audit through the binary ---
+  # A $1 ceiling sits below every pool's lower-bound bill on the fig7-style
+  # three-type workload, so the audit must show zero admitted pools and
+  # every prune as `pruned_budget` — and every pruned pool must carry its
+  # certifying evidence object. The canonical audit JSON is assembled by
+  # the executor's serial replay, so a second run is byte-identical.
+  AUDTMP="$(mktemp -d)"
+  "$BIN" explain --mode hetero-cost --model llama2-7b \
+      --hetero 'a800:8,h100:8,v100:8' --max-money 1 --json > "$AUDTMP/tight.json"
+  run grep -q '"astra_audit": 1' "$AUDTMP/tight.json"
+  run test "$(grep -c '"decision": "pruned_budget"' "$AUDTMP/tight.json")" -gt 0
+  run test "$(grep -c '"decision": "admitted"' "$AUDTMP/tight.json")" -eq 0
+  run test "$(grep -c '"decision": "pruned' "$AUDTMP/tight.json")" \
+      -eq "$(grep -c '"evidence"' "$AUDTMP/tight.json")"
+  "$BIN" explain --mode hetero-cost --model llama2-7b \
+      --hetero 'a800:8,h100:8,v100:8' --max-money 1 --json > "$AUDTMP/tight2.json"
+  run diff "$AUDTMP/tight.json" "$AUDTMP/tight2.json"
+  # --audit is a pure view switch: the canonical report of an audited
+  # search must be byte-identical to the unaudited one (the audited run
+  # appends the audit JSON after the report, so compare the report prefix).
+  "$BIN" search --model llama2-7b --gpu a800 --gpus 8 --json > "$AUDTMP/plain.json"
+  "$BIN" search --model llama2-7b --gpu a800 --gpus 8 --json --audit > "$AUDTMP/audited.json"
+  run test "$(wc -l < "$AUDTMP/audited.json")" -gt "$(wc -l < "$AUDTMP/plain.json")"
+  head -n "$(wc -l < "$AUDTMP/plain.json")" "$AUDTMP/audited.json" > "$AUDTMP/audited_report.json"
+  run diff "$AUDTMP/plain.json" "$AUDTMP/audited_report.json"
+  # Health through the wire grammar: after a real search the health line
+  # must report ready with a live latency window (compact wire format).
+  printf '%s\n' \
+    '{"id":"warm","model":"llama2-7b","gpu":"a800","gpus":8}' \
+    '{"cmd":"health","id":"h"}' \
+    > "$AUDTMP/reqs.jsonl"
+  run "$BIN" batch "$AUDTMP/reqs.jsonl" --max-batch 1 --retries 0 > "$AUDTMP/out.jsonl"
+  run test "$(wc -l < "$AUDTMP/out.jsonl")" -eq 2
+  run grep -q '"id":"h"' "$AUDTMP/out.jsonl"
+  run grep -q '"ready":true' "$AUDTMP/out.jsonl"
+  run grep -q '"p50_ms"' "$AUDTMP/out.jsonl"
+  rm -rf "$AUDTMP"
+  echo "ci.sh: explain/health smoke ok (all prunes certified, audit byte-deterministic, health ready)" >&2
 fi
 
 if [ "${TIER2:-0}" = "1" ]; then

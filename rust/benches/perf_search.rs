@@ -19,6 +19,10 @@
 //!   *telemetry_overhead* leg (cold search with the flight recorder
 //!   streaming vs the untraced cold leg) exceeds this fractional slowdown
 //!   (e.g. `0.05` = 5%);
+//! * `ASTRA_BENCH_MAX_AUDIT_OVERHEAD=<ratio>` — same cap for the
+//!   *audit_overhead* leg (cold search with the decision audit assembled
+//!   vs the unaudited cold leg): the explain plane must stay a bookkeeping
+//!   pass over the replay, never extra search work;
 //! * `ASTRA_BENCH_MIN_REPRICE_SPEEDUP=<ratio>` — exit nonzero if the
 //!   *frontier_reprice* leg (re-billing a held frontier report under a
 //!   rate-only price-book change vs a cold frontier re-search under the
@@ -197,6 +201,34 @@ fn main() {
         100.0 * trace_overhead
     );
 
+    // Audit: the same cold workload with the decision audit assembled —
+    // the opt-in cost of the explain plane. The audit rides the serial
+    // replay the executor runs anyway, so this leg prices pure bookkeeping
+    // (struct pushes per pool), not extra search work.
+    let t = Instant::now();
+    let audited_rep = engine().search_audited(&req).unwrap();
+    let audited_secs = t.elapsed().as_secs_f64();
+    let audit = audited_rep.audit.as_ref().expect("audited search carries an audit");
+    let audit_overhead = audited_secs / cold_secs.max(1e-12) - 1.0;
+    println!(
+        "audit: {audited_secs:.3}s with the audit on ({} pool(s) recorded, {:+.1}% vs cold)",
+        audit.pool_count(),
+        100.0 * audit_overhead
+    );
+    // Auditing is a view switch, not a different search: the canonical
+    // report bytes must be identical with it on or off.
+    assert_eq!(
+        astra::json::to_string_pretty(&astra::report::report_json(
+            &cold_rep,
+            &GpuCatalog::builtin()
+        )),
+        astra::json::to_string_pretty(&astra::report::report_json(
+            &audited_rep,
+            &GpuCatalog::builtin()
+        )),
+        "the audit changed the canonical report"
+    );
+
     let speedup = cold_secs / warm_secs.max(1e-12);
     println!(
         "memo-warm speedup: {speedup:.2}×  ({cold_secs:.3}s → {warm_secs:.3}s); \
@@ -299,6 +331,15 @@ fn main() {
             leg_json(&traced_rep, traced_secs)
                 .set("trace_events", trace_events)
                 .set("overhead_vs_cold", trace_overhead),
+        )
+        .set(
+            "audit_overhead",
+            leg_json(&audited_rep, audited_secs)
+                .set("audited_pools", audit.pool_count())
+                .set("audit_admitted", audit.admitted())
+                .set("audit_pruned_budget", audit.pruned_budget())
+                .set("audit_pruned_dominated", audit.pruned_dominated())
+                .set("overhead_vs_cold", audit_overhead),
         )
         .set("speedup_warm_vs_cold", speedup)
         .set("speedup_restore_vs_cold", cold_secs / restore_secs.max(1e-12))
@@ -435,6 +476,19 @@ fn main() {
             std::process::exit(1);
         }
         println!("tracing overhead {trace_overhead:.3} ≤ cap {cap:.3} — ok");
+    }
+
+    // Same shape for the explain plane: an audit that costs real search
+    // time means it stopped being replay bookkeeping.
+    if let Ok(cap) = std::env::var("ASTRA_BENCH_MAX_AUDIT_OVERHEAD") {
+        let cap: f64 = cap.parse().expect("ASTRA_BENCH_MAX_AUDIT_OVERHEAD must be a number");
+        if audit_overhead > cap {
+            eprintln!(
+                "perf_search: FAIL — audit overhead {audit_overhead:.3} above cap {cap:.3}"
+            );
+            std::process::exit(1);
+        }
+        println!("audit overhead {audit_overhead:.3} ≤ cap {cap:.3} — ok");
     }
 
     // HLO parity gate (only when the smoke actually ran — skips pass).

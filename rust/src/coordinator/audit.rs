@@ -1,0 +1,299 @@
+//! The search decision audit — the "explain plane" of a [`super::SearchReport`].
+//!
+//! An opt-in (`"audit":true` on the wire, `--audit`/`astra explain` on the
+//! CLI) per-request [`SearchAudit`] recording *why* the search decided what
+//! it decided: per-round, per-pool admitted-vs-pruned outcomes with the
+//! certifying evidence (budget prunes carry the offending `lb_usd` against
+//! the budget; dominance prunes carry the exact dominating frontier point,
+//! straight from [`crate::pareto::AdmitDecision`]), the candidate funnel
+//! (expanded → rules-rejected → memory-rejected → scored) per pool, and
+//! the winner/runner-up margins of the final ranking.
+//!
+//! ## Determinism contract
+//!
+//! * **The audit comes from the serial replay, never from speculation.**
+//!   The executor's phase-3 replay walks every pool of every round in
+//!   (round, pool) order against the true running frontier — the audit is
+//!   assembled exactly there, so its decisions and evidence are
+//!   byte-identical at any worker count and any wave schedule, like the
+//!   report itself.
+//! * **The audit never enters fingerprints.** `"audit":true` is a view
+//!   switch, not a different search: request fingerprints, the result
+//!   cache key and the canonical `report_json` bytes are all unchanged
+//!   whether auditing is on or off. A cached report may therefore carry an
+//!   audit from an earlier audited leader (served as-is) or none at all
+//!   (an audited request hitting an unaudited cache entry answers without
+//!   an audit) — the audit is best-effort observability, never a result.
+//! * **Canonical vs observability fields.** Two audit members are honest
+//!   observability and *load-dependent*: per-pool memo hit/miss counts
+//!   (workers race on the shared memo) and the per-wave speculation-waste
+//!   records in [`SearchAudit::waves`] (a `wave=1` schedule never wastes;
+//!   wider waves may). Both are carried in the struct for the human
+//!   `astra explain` view but are **excluded from the canonical
+//!   [`crate::report::audit_json`]**, exactly as `report_json` excludes
+//!   wall times and memo counters — which is what makes the canonical
+//!   audit bytes identical across the whole worker/wave matrix. For the
+//!   same reason the canonical view emits the funnel only for *admitted*
+//!   pools: a pruned pool's funnel exists only when a stale snapshot
+//!   speculated it, which is schedule-dependent.
+//!
+//! Every recorded prune is machine-checkable: `rust/tests/audit.rs`
+//! property-tests that budget-pruned pools satisfy `lb_usd > budget`, that
+//! dominance-pruned pools are actually dominated by their recorded frontier
+//! point, and that the audited pool set exactly partitions the plan's pool
+//! set (no pool unaccounted for).
+
+use crate::pareto::AdmitDecision;
+
+/// Why one pool was admitted or pruned, with the certifying evidence.
+/// Mirrors [`AdmitDecision`]; a separate type so the audit can be stored,
+/// serialized and persisted without coupling the pruner to the codec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AuditDecision {
+    /// The pool was expanded and scored.
+    Admitted,
+    /// Pruned: the pool's lower-bound bill exceeds the budget.
+    PrunedBudget { lb_usd: f64, budget: f64 },
+    /// Pruned: the recorded `(tokens_per_s, money_usd)` frontier point is
+    /// at least as fast AND at least as cheap as the pool's best case.
+    PrunedDominated { by: (f64, f64) },
+}
+
+impl AuditDecision {
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, AuditDecision::Admitted)
+    }
+
+    /// Stable machine tag (the `decision` field of the canonical JSON).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            AuditDecision::Admitted => "admitted",
+            AuditDecision::PrunedBudget { .. } => "pruned_budget",
+            AuditDecision::PrunedDominated { .. } => "pruned_dominated",
+        }
+    }
+}
+
+impl From<AdmitDecision> for AuditDecision {
+    fn from(d: AdmitDecision) -> AuditDecision {
+        match d {
+            AdmitDecision::Admitted => AuditDecision::Admitted,
+            AdmitDecision::PrunedBudget { lb_usd, budget } => {
+                AuditDecision::PrunedBudget { lb_usd, budget }
+            }
+            AdmitDecision::PrunedDominated { by } => AuditDecision::PrunedDominated { by },
+        }
+    }
+}
+
+/// The candidate funnel of one streamed pool: where candidates died on the
+/// expand → rules → memory → score pipeline. `expanded` always equals
+/// `rules_rejected + mem_rejected + scored`. The memo counters are
+/// load-dependent observability (see the module docs) — canonical views
+/// must not serialize them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AuditFunnel {
+    pub expanded: usize,
+    pub rules_rejected: usize,
+    pub mem_rejected: usize,
+    pub scored: usize,
+    /// Load-dependent: stage/sync memo hits while scoring this pool.
+    pub memo_hits: u64,
+    /// Load-dependent: memo misses while scoring this pool.
+    pub memo_misses: u64,
+}
+
+/// One pool's audit record. Identity is positional — `(round, pool)` index
+/// into the compiled [`super::SearchPlan`] — plus the human-meaningful GPU
+/// mix and parallelism split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditPool {
+    /// Index of this pool within its round.
+    pub pool: usize,
+    /// Per-type GPU mix `(catalog name, count)`, merged across segments.
+    pub gpus: Vec<(String, usize)>,
+    pub tp: usize,
+    pub dp: usize,
+    /// Branch-and-bound upper-bound throughput (tokens/s); `+inf` for
+    /// non-pruning plans.
+    pub ub_tput: f64,
+    /// Branch-and-bound lower-bound bill (USD); `0` for non-pruning plans.
+    pub lb_usd: f64,
+    pub decision: AuditDecision,
+    /// Present when the pool streamed through the pipeline (always, for
+    /// admitted pools; for pruned pools only when a stale snapshot
+    /// speculated it — schedule-dependent, so canonical views emit the
+    /// funnel for admitted pools only).
+    pub funnel: Option<AuditFunnel>,
+}
+
+/// One sweep round's audit: every pool of the round, in replay order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AuditRound {
+    /// Round index within the plan.
+    pub round: usize,
+    /// The round's GPU total (the sweep coordinate).
+    pub total: usize,
+    pub pools: Vec<AuditPool>,
+}
+
+/// One speculative wave's waste accounting (load-dependent observability:
+/// the wave schedule itself adapts, and a serial `wave=1` run never
+/// wastes). Excluded from the canonical JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AuditWave {
+    /// Wave sequence number (0-based).
+    pub wave: usize,
+    /// Rounds covered by this wave.
+    pub rounds: usize,
+    /// Pools speculatively streamed in phase 2.
+    pub speculated: usize,
+    /// Speculated pools the serial replay then pruned (wasted work).
+    pub wasted: usize,
+}
+
+/// One contender in the final ranking (the winner or the runner-up).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditContender {
+    /// `ParallelStrategy::summary()` — the human-readable strategy line.
+    pub summary: String,
+    pub step_time_s: f64,
+    pub tokens_per_s: f64,
+    pub money_usd: f64,
+}
+
+/// Winner vs runner-up margins of the final ranking (`top[0]` vs `top[1]`
+/// after the within-budget promotion). Positive step-time/throughput
+/// margins mean the winner is strictly faster; the money margin may go
+/// either way (a budget promotion picks a slower-but-affordable winner).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditMargins {
+    pub winner: AuditContender,
+    /// `None` when the ranking holds a single strategy.
+    pub runner_up: Option<AuditContender>,
+    /// `runner_up.step_time_s - winner.step_time_s` (0 without a runner-up).
+    pub step_time_margin_s: f64,
+    /// `winner.tokens_per_s - runner_up.tokens_per_s` (0 without one).
+    pub tokens_per_s_margin: f64,
+    /// `winner.money_usd - runner_up.money_usd` (0 without one).
+    pub money_margin_usd: f64,
+}
+
+/// The full decision audit of one search. Attached to
+/// [`super::SearchReport::audit`] when requested; `None` otherwise (and the
+/// report is byte-identical either way outside this field).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SearchAudit {
+    /// Every round of the plan, every pool of every round, in replay order.
+    pub rounds: Vec<AuditRound>,
+    /// Per-wave speculation-waste records (observability; excluded from
+    /// the canonical JSON — see the module docs).
+    pub waves: Vec<AuditWave>,
+    /// Winner/runner-up margins; `None` when nothing scored.
+    pub margins: Option<AuditMargins>,
+}
+
+impl SearchAudit {
+    /// Total pools recorded across every round.
+    pub fn pool_count(&self) -> usize {
+        self.rounds.iter().map(|r| r.pools.len()).sum()
+    }
+
+    /// Pools admitted (expanded and scored).
+    pub fn admitted(&self) -> usize {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.pools.iter())
+            .filter(|p| p.decision.is_admitted())
+            .count()
+    }
+
+    /// Pools pruned on the budget bound.
+    pub fn pruned_budget(&self) -> usize {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.pools.iter())
+            .filter(|p| matches!(p.decision, AuditDecision::PrunedBudget { .. }))
+            .count()
+    }
+
+    /// Pools pruned by dominance.
+    pub fn pruned_dominated(&self) -> usize {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.pools.iter())
+            .filter(|p| matches!(p.decision, AuditDecision::PrunedDominated { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(pool: usize, decision: AuditDecision) -> AuditPool {
+        AuditPool {
+            pool,
+            gpus: vec![("a800".to_string(), 4)],
+            tp: 1,
+            dp: 4,
+            ub_tput: 100.0,
+            lb_usd: 5.0,
+            decision,
+            funnel: None,
+        }
+    }
+
+    #[test]
+    fn counts_partition_by_decision() {
+        let audit = SearchAudit {
+            rounds: vec![
+                AuditRound {
+                    round: 0,
+                    total: 4,
+                    pools: vec![
+                        pool(0, AuditDecision::Admitted),
+                        pool(1, AuditDecision::PrunedBudget { lb_usd: 9.0, budget: 5.0 }),
+                    ],
+                },
+                AuditRound {
+                    round: 1,
+                    total: 8,
+                    pools: vec![pool(0, AuditDecision::PrunedDominated { by: (50.0, 1.0) })],
+                },
+            ],
+            waves: Vec::new(),
+            margins: None,
+        };
+        assert_eq!(audit.pool_count(), 3);
+        assert_eq!(audit.admitted(), 1);
+        assert_eq!(audit.pruned_budget(), 1);
+        assert_eq!(audit.pruned_dominated(), 1);
+        assert_eq!(
+            audit.pool_count(),
+            audit.admitted() + audit.pruned_budget() + audit.pruned_dominated(),
+            "decisions partition the pool set"
+        );
+    }
+
+    #[test]
+    fn decision_tags_are_stable() {
+        assert_eq!(AuditDecision::Admitted.tag(), "admitted");
+        assert_eq!(AuditDecision::PrunedBudget { lb_usd: 1.0, budget: 0.5 }.tag(), "pruned_budget");
+        assert_eq!(
+            AuditDecision::PrunedDominated { by: (1.0, 1.0) }.tag(),
+            "pruned_dominated"
+        );
+    }
+
+    #[test]
+    fn admit_decision_converts_with_evidence_intact() {
+        let d: AuditDecision =
+            crate::pareto::AdmitDecision::PrunedBudget { lb_usd: 7.0, budget: 3.0 }.into();
+        assert_eq!(d, AuditDecision::PrunedBudget { lb_usd: 7.0, budget: 3.0 });
+        let d: AuditDecision =
+            crate::pareto::AdmitDecision::PrunedDominated { by: (9.0, 2.0) }.into();
+        assert_eq!(d, AuditDecision::PrunedDominated { by: (9.0, 2.0) });
+        assert!(AuditDecision::from(crate::pareto::AdmitDecision::Admitted).is_admitted());
+    }
+}

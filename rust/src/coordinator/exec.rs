@@ -25,6 +25,16 @@
 //!   schedule is a pure function of the deterministic frontier evolution
 //!   and can never reach the report.
 //!
+//! * **Audit from the replay, never from speculation.** When a search is
+//!   audited ([`super::audit`]), the per-pool decision records are
+//!   assembled inside the phase-3 serial replay — the same place the
+//!   counting admissions happen — so the audit's decisions and certifying
+//!   evidence inherit the report's determinism at any worker count or wave
+//!   schedule. Speculation-waste accounting ([`super::AuditWave`]) and
+//!   per-pool memo counters are recorded too, but flagged as
+//!   load-/schedule-dependent observability: the canonical
+//!   [`crate::report::audit_json`] excludes them.
+//!
 //! * **Serial oracle.** `EngineConfig::streaming == false` does not select
 //!   a second pipeline (the pre-refactor reference path is gone): it
 //!   compiles the same plan with a pinned `1/1` wave and executes with one
@@ -40,10 +50,14 @@
 //!   per-pool packing scores exactly what whole-run packing scored;
 //!   `score_hlo`'s old detour through the reference path is gone.
 
+use super::audit::{
+    AuditContender, AuditFunnel, AuditMargins, AuditPool, AuditRound, AuditWave, SearchAudit,
+};
 use super::plan::{plan_json, PoolSpec, SearchPlan};
 use super::{
     FrontierCandidate, FrontierReport, PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport,
 };
+use crate::pareto::AdmitDecision;
 use crate::cost::features::{pack_batch, OUT};
 use crate::cost::{CostBreakdown, MemoStats, SharedCostMemo};
 use crate::memory::MemoryModel;
@@ -104,6 +118,7 @@ impl ScoringCore {
         rt: Option<&Mutex<ScorerRuntime>>,
         t0: Instant,
         cancel: &CancelToken,
+        audit: bool,
     ) -> Result<SearchReport> {
         // A pre-expired deadline never enters the pipeline (and never
         // counts as a search): the caller gets the typed error immediately.
@@ -133,6 +148,10 @@ impl ScoringCore {
         };
 
         let mut pruner = DominancePruner::new(plan.budget.unwrap_or(f64::INFINITY));
+        // The audit accumulator: `None` costs nothing on the unaudited
+        // path; `Some` is filled exclusively inside the serial replay, so
+        // audited searches stay deterministic at any parallelism.
+        let mut audit_acc: Option<SearchAudit> = audit.then(SearchAudit::default);
         let base_wave = plan.wave_base.max(1);
         let wave_cap = plan.wave_max.max(base_wave);
         let mut wave = base_wave;
@@ -203,17 +222,67 @@ impl ScoringCore {
             let mut wasted = 0usize;
             let mut wave_scored = 0usize;
             for (ri, round) in wave_rounds.iter().enumerate() {
+                if let Some(a) = audit_acc.as_mut() {
+                    a.rounds.push(AuditRound {
+                        round: round_base + ri,
+                        total: round.total,
+                        pools: Vec::new(),
+                    });
+                }
                 let mut round_scored: Vec<ScoredStrategy> = Vec::new();
                 for (pi, pool) in round.pools.iter().enumerate() {
                     let spec = spec_flags[flag_idx];
                     flag_idx += 1;
-                    let admit = !plan.prune || pruner.admit(pool.ub_tput, pool.lb_usd);
+                    let decision = if plan.prune {
+                        pruner.admit(pool.ub_tput, pool.lb_usd)
+                    } else {
+                        AdmitDecision::Admitted
+                    };
+                    let admit = decision.is_admitted();
+                    if let Some(a) = audit_acc.as_mut() {
+                        // Recorded for EVERY pool of the plan — admitted,
+                        // pruned, or never even speculated — so the audit
+                        // partitions the plan's pool set exactly.
+                        let gpus = pool
+                            .cluster
+                            .gpus_by_type(pool.tp, pool.dp)
+                            .into_iter()
+                            .map(|(g, n)| (self.catalog.spec(g).name.clone(), n))
+                            .collect();
+                        a.rounds.last_mut().expect("round pushed above").pools.push(AuditPool {
+                            pool: pi,
+                            gpus,
+                            tp: pool.tp,
+                            dp: pool.dp,
+                            ub_tput: pool.ub_tput,
+                            lb_usd: pool.lb_usd,
+                            decision: decision.into(),
+                            funnel: None,
+                        });
+                    }
                     if !spec {
                         debug_assert!(!admit, "snapshot admitted what the frontier rejects");
                         continue;
                     }
                     let oc = &mut outcomes[oc_idx];
                     oc_idx += 1;
+                    if let Some(a) = audit_acc.as_mut() {
+                        // The funnel is captured before the scored vector
+                        // is drained into the round below.
+                        let p = a
+                            .rounds
+                            .last_mut()
+                            .and_then(|r| r.pools.last_mut())
+                            .expect("pool record pushed above");
+                        p.funnel = Some(AuditFunnel {
+                            expanded: oc.generated,
+                            rules_rejected: oc.rule_filtered,
+                            mem_rejected: oc.mem_filtered,
+                            scored: oc.scored.len(),
+                            memo_hits: oc.memo.hits,
+                            memo_misses: oc.memo.misses,
+                        });
+                    }
                     filter_busy += oc.filter_secs;
                     mem_busy += oc.mem_secs;
                     score_busy += oc.score_secs;
@@ -255,6 +324,16 @@ impl ScoringCore {
                 }
                 wave_scored += round_scored.len();
                 scored_all.extend(round_scored);
+            }
+            if let Some(a) = audit_acc.as_mut() {
+                // Schedule-dependent observability (a serial wave never
+                // wastes); canonical views exclude this section.
+                a.waves.push(AuditWave {
+                    wave: a.waves.len(),
+                    rounds: wave_rounds.len(),
+                    speculated: tasks.len(),
+                    wasted,
+                });
             }
 
             // Split the wave's wall time across the pipeline phases in
@@ -336,13 +415,14 @@ impl ScoringCore {
             n_generated,
             rule_filtered,
             mem_filtered,
-            pruner.pruned(),
+            &pruner,
             phases,
             plan.budget,
             plan.top_k,
             plan.frontier,
             memo_stats,
             scored_all,
+            audit_acc,
         ))
     }
 
@@ -517,13 +597,14 @@ fn assemble_report(
     generated: usize,
     rule_filtered: usize,
     mem_filtered: usize,
-    pruned_pools: usize,
+    pruner: &DominancePruner,
     phases: PhaseBreakdown,
     budget: Option<f64>,
     top_k: usize,
     frontier: bool,
     memo: MemoStats,
     mut scored: Vec<ScoredStrategy>,
+    mut audit: Option<SearchAudit>,
 ) -> SearchReport {
     let pool = OptimalPool::build(
         scored
@@ -553,12 +634,44 @@ fn assemble_report(
         }
     }
     scored.truncate(top_k);
+    // Winner/runner-up margins come from the final ranking — after the
+    // within-budget promotion, so the "winner" the audit explains is the
+    // one the report actually returns.
+    if let Some(a) = audit.as_mut() {
+        let contender = |s: &ScoredStrategy| AuditContender {
+            summary: s.strategy.summary(),
+            step_time_s: s.cost.step_time,
+            tokens_per_s: s.cost.tokens_per_s,
+            money_usd: s.money_usd,
+        };
+        a.margins = scored.first().map(|w| {
+            let winner = contender(w);
+            let runner_up = scored.get(1).map(contender);
+            let (dt, dtput, dusd) = match &runner_up {
+                Some(r) => (
+                    r.step_time_s - winner.step_time_s,
+                    winner.tokens_per_s - r.tokens_per_s,
+                    winner.money_usd - r.money_usd,
+                ),
+                None => (0.0, 0.0, 0.0),
+            };
+            AuditMargins {
+                winner,
+                runner_up,
+                step_time_margin_s: dt,
+                tokens_per_s_margin: dtput,
+                money_margin_usd: dusd,
+            }
+        });
+    }
     SearchReport {
         generated,
         rule_filtered,
         mem_filtered,
         scored: n_scored,
-        pruned_pools,
+        pruned_pools: pruner.pruned(),
+        pruned_budget: pruner.pruned_budget,
+        pruned_dominated: pruner.pruned_dominated,
         search_secs: phases.search_secs(),
         simulate_secs: phases.simulate_secs(),
         phases,
@@ -567,6 +680,7 @@ fn assemble_report(
         top: scored,
         pool,
         frontier,
+        audit,
     }
 }
 

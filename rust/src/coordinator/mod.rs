@@ -17,7 +17,11 @@
 //! * [`exec`] — the executor: fused expand → rules → memory → score per
 //!   pool, speculative-wave sweep with snapshot–speculate–replay admission,
 //!   byte-identical reports at any worker count or wave schedule (its
-//!   module docs state the invariants).
+//!   module docs state the invariants);
+//! * [`audit`] — the opt-in decision audit ("explain plane"): per-pool
+//!   admitted/pruned records with certifying evidence, assembled inside
+//!   the executor's serial replay so the audit is as deterministic as the
+//!   report (its module docs state the contract).
 //!
 //! Scoring runs on one of two engines with identical math, **both** through
 //! the same executor:
@@ -50,10 +54,15 @@
 //! runtime; it keeps the historical single-owner API and is what the CLI
 //! constructs.
 
+pub mod audit;
 pub mod exec;
 pub mod modes;
 pub mod plan;
 
+pub use audit::{
+    AuditContender, AuditDecision, AuditFunnel, AuditMargins, AuditPool, AuditRound, AuditWave,
+    SearchAudit,
+};
 pub use modes::{validate_budget, SearchRequest};
 pub use plan::{plan_json, PlanRound, PoolSpec, SearchPlan};
 
@@ -254,8 +263,13 @@ pub struct SearchReport {
     pub mem_filtered: usize,
     pub scored: usize,
     /// Candidate pools rejected by the hetero-cost branch-and-bound pruner
-    /// before strategy expansion (0 for the other modes).
+    /// before strategy expansion (0 for the other modes). Always equals
+    /// `pruned_budget + pruned_dominated`.
     pub pruned_pools: usize,
+    /// Pools rejected because their lower-bound bill exceeds the budget.
+    pub pruned_budget: usize,
+    /// Pools rejected as dominated by an already-scored strategy.
+    pub pruned_dominated: usize,
     /// Generation + filtering wall time ("Search Time"). Derived from
     /// `phases` ([`PhaseBreakdown::search_secs`]) so the breakdown sums to
     /// this field exactly.
@@ -283,6 +297,11 @@ pub struct SearchReport {
     /// Frontier mode only: the reprice skeleton ([`FrontierReport`]).
     /// `None` for every other mode.
     pub frontier: Option<FrontierReport>,
+    /// Opt-in decision audit ([`SearchAudit`]), assembled by the executor's
+    /// serial replay when the request asked for it; `None` otherwise. Never
+    /// fingerprinted and never part of [`crate::report::report_json`] — a
+    /// report is byte-identical there whether or not it carries an audit.
+    pub audit: Option<SearchAudit>,
 }
 
 impl SearchReport {
@@ -581,6 +600,14 @@ impl ScoringCore {
         self.search_with(req, None)
     }
 
+    /// [`Self::search`] with the decision audit attached
+    /// ([`SearchReport::audit`]). Auditing changes nothing outside that
+    /// field: the core report is byte-identical to an unaudited search
+    /// (pinned by `rust/tests/determinism.rs`).
+    pub fn search_audited(&self, req: &SearchRequest) -> Result<SearchReport> {
+        self.search_full(req, None, &crate::resilience::CancelToken::unlimited(), true)
+    }
+
     /// [`Self::search`] under a cancellation token: the executor polls the
     /// token at wave boundaries, so a fired deadline unwinds with a typed
     /// [`crate::AstraError::Deadline`] — never a partial report. The
@@ -591,7 +618,17 @@ impl ScoringCore {
         req: &SearchRequest,
         cancel: &crate::resilience::CancelToken,
     ) -> Result<SearchReport> {
-        self.search_with_cancel_rt(req, None, cancel)
+        self.search_full(req, None, cancel, false)
+    }
+
+    /// [`Self::search_with_cancel`] with the decision audit attached — the
+    /// service layer's leader path for `"audit":true` requests.
+    pub fn search_with_cancel_audited(
+        &self,
+        req: &SearchRequest,
+        cancel: &crate::resilience::CancelToken,
+    ) -> Result<SearchReport> {
+        self.search_full(req, None, cancel, true)
     }
 
     fn search_with(
@@ -599,18 +636,19 @@ impl ScoringCore {
         req: &SearchRequest,
         rt: Option<&Mutex<ScorerRuntime>>,
     ) -> Result<SearchReport> {
-        self.search_with_cancel_rt(req, rt, &crate::resilience::CancelToken::unlimited())
+        self.search_full(req, rt, &crate::resilience::CancelToken::unlimited(), false)
     }
 
-    fn search_with_cancel_rt(
+    fn search_full(
         &self,
         req: &SearchRequest,
         rt: Option<&Mutex<ScorerRuntime>>,
         cancel: &crate::resilience::CancelToken,
+        audit: bool,
     ) -> Result<SearchReport> {
         let t0 = Instant::now();
         let plan = self.compile_plan(req)?;
-        self.execute_plan(&req.model, &plan, rt, t0, cancel)
+        self.execute_plan(&req.model, &plan, rt, t0, cancel, audit)
     }
 }
 
@@ -666,6 +704,17 @@ impl AstraEngine {
     /// when it is live, natively otherwise.
     pub fn search(&self, req: &SearchRequest) -> Result<SearchReport> {
         self.core.search_with(req, self.runtime.as_ref())
+    }
+
+    /// [`Self::search`] with the decision audit attached (`--audit` /
+    /// `astra explain`). Core report bytes are unchanged by auditing.
+    pub fn search_audited(&self, req: &SearchRequest) -> Result<SearchReport> {
+        self.core.search_full(
+            req,
+            self.runtime.as_ref(),
+            &crate::resilience::CancelToken::unlimited(),
+            true,
+        )
     }
 }
 

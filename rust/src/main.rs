@@ -10,6 +10,12 @@
 //!                (tokens/s, USD) Pareto curve — priced through
 //!                `--price-book`/`--spot`, re-priceable from cache without
 //!                re-searching when only rates change
+//!   explain      run an audited search and render the decision audit:
+//!                per-round, per-pool admitted-vs-pruned outcomes with the
+//!                certifying evidence, candidate funnels, speculation waste
+//!                and winner/runner-up margins (`--json` prints the
+//!                canonical audit JSON — byte-identical at any worker or
+//!                wave count)
 //!   simulate     replay one strategy on the discrete-event simulator
 //!   validate     cost model vs simulator accuracy over top-k strategies
 //!   serve        long-running search service (stdin or TCP, JSON lines);
@@ -26,6 +32,10 @@
 //!                after restoring, so operators can see registry state
 //!                across restarts; `--metrics-text` dumps the telemetry
 //!                registry in Prometheus text format instead)
+//!   health       print the live-ops health line the wire `{"cmd":"health"}`
+//!                returns: readiness, queue depth, warm-restore state and
+//!                rolling-window p50/p95/p99 latency + hit/shed/deadline/
+//!                panic rates per mode
 //!   trace-check  validate a flight-recorder trace file: every line must
 //!                parse as JSON and carry a nondecreasing numeric `ts`
 //!   info         print the GPU catalog and model registry
@@ -53,7 +63,7 @@ fn main() {
         "astra",
         "automatic parallel-strategy search on homogeneous and heterogeneous GPUs",
     )
-    .positional("command", "search | hetero-cost | frontier | simulate | validate | serve | batch | warm | stats | trace-check | info")
+    .positional("command", "search | hetero-cost | frontier | explain | simulate | validate | serve | batch | warm | stats | health | trace-check | info")
     .opt("model", "model name (see `astra info`)", Some("llama2-7b"))
     .opt("gpu", "GPU type for homogeneous/cost modes", Some("a800"))
     .opt("gpus", "cluster GPU count", Some("64"))
@@ -84,6 +94,7 @@ fn main() {
     .flag("metrics-text", "print the telemetry registry as Prometheus text (stats)")
     .flag("warm-no-cache", "persist memo scopes only, not the result cache (serve)")
     .flag("json", "print the canonical report JSON instead of tables (search)")
+    .flag("audit", "attach the search decision audit (search/hetero-cost; see `astra explain`)")
     .flag("exhaustive", "exhaustive Eq.23 layer enumeration (hetero)")
     .flag("spot", "bill at spot rates instead of on-demand")
     .flag("no-prune", "disable branch-and-bound pool pruning (hetero-cost)")
@@ -255,6 +266,20 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         return Ok(());
     }
 
+    if command == "health" {
+        // One-shot view of the wire `{"cmd":"health"}` line: build the
+        // service (restoring any configured warm snapshot so readiness
+        // reflects warm state) and print the same JSON an operator's probe
+        // would see. The window covers everything since boot — this
+        // process served no traffic, so rates are the idle-window zeros.
+        let service = build_service(args, catalog)?;
+        println!(
+            "{}",
+            astra::json::to_string_pretty(&astra::service::server::health_json(&service))
+        );
+        return Ok(());
+    }
+
     if command == "trace-check" {
         let path = args.positionals().get(1).ok_or_else(|| {
             astra::AstraError::Config("usage: astra trace-check <trace.jsonl>".into())
@@ -386,7 +411,11 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
                     st.scopes_restored, st.stage_rows, st.sync_rows, st.scopes_rejected
                 );
             }
-            let report = engine.search(&req)?;
+            let report = if args.flag("audit") {
+                engine.search_audited(&req)?
+            } else {
+                engine.search(&req)?
+            };
             if args.flag("json") {
                 // Canonical result view (no wall-clock / memo fields):
                 // byte-stable across runs, which the ci.sh persistence
@@ -397,12 +426,43 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
                         &report, &catalog
                     ))
                 );
+                if args.flag("audit") {
+                    if let Some(a) = astra::report::audit_json(&report) {
+                        println!("{}", astra::json::to_string_pretty(&a));
+                    }
+                }
             } else {
                 print_report(&model.name, &report, args.get_usize("top")?);
+                if let Some(a) = &report.audit {
+                    print_audit(a);
+                }
             }
             if let Some(p) = args.get("warm-save") {
                 let st = engine.core().save_warm(std::path::Path::new(p))?;
                 eprintln!("warm: spilled {} scope(s), {} bytes to {p}", st.scopes, st.bytes);
+            }
+        }
+        "explain" => {
+            // The audit is assembled by the executor's serial replay, so
+            // the canonical JSON below is byte-identical at any worker or
+            // wave count (the human table additionally shows the
+            // load-dependent memo/speculation observability).
+            let report = engine.search_audited(&req)?;
+            if args.flag("json") {
+                let audit = astra::report::audit_json(&report).ok_or_else(|| {
+                    astra::AstraError::Config("audited search returned no audit".into())
+                })?;
+                println!("{}", astra::json::to_string_pretty(&audit));
+            } else {
+                print_report(&model.name, &report, args.get_usize("top")?);
+                match &report.audit {
+                    Some(a) => print_audit(a),
+                    None => {
+                        return Err(astra::AstraError::Config(
+                            "audited search returned no audit".into(),
+                        ))
+                    }
+                }
             }
         }
         "warm" => {
@@ -453,7 +513,11 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
             }
         }
         "hetero-cost" => {
-            let report = engine.search(&req)?;
+            let report = if args.flag("audit") {
+                engine.search_audited(&req)?
+            } else {
+                engine.search(&req)?
+            };
             print_report(&model.name, &report, args.get_usize("top")?);
             let max_money = match &req.mode {
                 GpuPoolMode::HeteroCost { max_money, .. } => *max_money,
@@ -504,6 +568,9 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
                     best.strategy.summary()
                 ),
                 _ => println!("\nno strategy fits the budget — raise it or relax the caps"),
+            }
+            if let Some(a) = &report.audit {
+                print_audit(a);
             }
         }
         "frontier" => {
@@ -569,7 +636,7 @@ fn run(command: &str, args: &astra::cli::Args) -> astra::Result<()> {
         }
         other => {
             return Err(astra::AstraError::Config(format!(
-                "unknown command '{other}' (search | hetero-cost | frontier | simulate | validate | serve | batch | warm | stats | trace-check | info)"
+                "unknown command '{other}' (search | hetero-cost | frontier | explain | simulate | validate | serve | batch | warm | stats | health | trace-check | info)"
             )));
         }
     }
@@ -586,6 +653,94 @@ fn spill_on_exit(service: &SearchService) {
         ),
         Ok(None) => {}
         Err(e) => eprintln!("warm spill failed: {e}"),
+    }
+}
+
+/// Human rendering of the search decision audit (`astra explain`,
+/// `--audit`). Unlike the canonical `report::audit_json`, this view also
+/// shows the load-dependent observability: per-pool memo hit rates and the
+/// per-wave speculation-waste totals.
+fn print_audit(a: &astra::coordinator::SearchAudit) {
+    use astra::coordinator::AuditDecision;
+    println!(
+        "\naudit: {} pool(s) — {} admitted, {} pruned on budget, {} pruned by dominance",
+        a.pool_count(),
+        a.admitted(),
+        a.pruned_budget(),
+        a.pruned_dominated()
+    );
+    let mut t = Table::new(&[
+        "round", "pool", "gpus", "tp", "dp", "ub tokens/s", "lb USD", "decision", "evidence",
+    ]);
+    for r in &a.rounds {
+        for p in &r.pools {
+            let gpus = p
+                .gpus
+                .iter()
+                .map(|(g, n)| format!("{n}×{g}"))
+                .collect::<Vec<_>>()
+                .join("+");
+            let evidence = match p.decision {
+                AuditDecision::Admitted => p
+                    .funnel
+                    .map(|f| {
+                        format!(
+                            "funnel {}→{} scored ({} rules, {} mem; memo {}/{})",
+                            f.expanded,
+                            f.scored,
+                            f.rules_rejected,
+                            f.mem_rejected,
+                            f.memo_hits,
+                            f.memo_hits + f.memo_misses
+                        )
+                    })
+                    .unwrap_or_default(),
+                AuditDecision::PrunedBudget { lb_usd, budget } => {
+                    format!("lb ${lb_usd:.0} > budget ${budget:.0}")
+                }
+                AuditDecision::PrunedDominated { by: (tput, usd) } => {
+                    format!("dominated by {tput:.0} tokens/s @ ${usd:.0}")
+                }
+            };
+            t.row(&[
+                r.round.to_string(),
+                p.pool.to_string(),
+                gpus,
+                p.tp.to_string(),
+                p.dp.to_string(),
+                if p.ub_tput.is_finite() { format!("{:.0}", p.ub_tput) } else { "inf".into() },
+                format!("{:.0}", p.lb_usd),
+                p.decision.tag().to_string(),
+                evidence,
+            ]);
+        }
+    }
+    t.emit("search decision audit (serial-replay order)", None);
+    if !a.waves.is_empty() {
+        let speculated: usize = a.waves.iter().map(|w| w.speculated).sum();
+        let wasted: usize = a.waves.iter().map(|w| w.wasted).sum();
+        println!(
+            "speculation: {} wave(s), {} pool(s) speculated, {} wasted (load-dependent)",
+            a.waves.len(),
+            speculated,
+            wasted
+        );
+    }
+    if let Some(m) = &a.margins {
+        println!(
+            "winner: {} — step {}, {:.0} tokens/s, ${:.0}",
+            m.winner.summary,
+            fmt_secs(m.winner.step_time_s),
+            m.winner.tokens_per_s,
+            m.winner.money_usd
+        );
+        match &m.runner_up {
+            Some(r) => println!(
+                "runner-up: {} — margins: step {:+.4}s, {:+.0} tokens/s, {:+.0} USD",
+                r.summary, m.step_time_margin_s, m.tokens_per_s_margin, m.money_margin_usd
+            ),
+            None => println!("runner-up: none (a single strategy survived ranking)"),
+        }
     }
 }
 

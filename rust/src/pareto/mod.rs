@@ -172,6 +172,36 @@ pub struct DominancePruner {
     pub pruned_dominated: usize,
 }
 
+/// The attributed outcome of one [`DominancePruner::admit`] call: not just
+/// *whether* a pool was pruned but the certificate for *why* — the budget a
+/// lower-bound bill exceeded, or the exact frontier point that dominated
+/// the pool's bounds. The audit plane (`coordinator::audit`) records these
+/// verbatim so every prune in a report is machine-checkable after the fact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmitDecision {
+    /// The pool may still matter; it proceeds to strategy expansion.
+    Admitted,
+    /// `lb_usd > budget`: no plan in the pool can be affordable.
+    PrunedBudget {
+        /// The pool's lower-bound bill (USD).
+        lb_usd: f64,
+        /// The budget it exceeded.
+        budget: f64,
+    },
+    /// An already-scored `(tokens/s, USD)` point is at least as fast AND
+    /// at least as cheap as the pool's best-case bounds.
+    PrunedDominated {
+        /// The dominating frontier point `(tokens_per_s, money_usd)`.
+        by: (f64, f64),
+    },
+}
+
+impl AdmitDecision {
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, AdmitDecision::Admitted)
+    }
+}
+
 impl DominancePruner {
     pub fn new(budget: f64) -> DominancePruner {
         DominancePruner {
@@ -183,17 +213,19 @@ impl DominancePruner {
     }
 
     /// Whether a pool with these bounds may still matter. Counts the
-    /// rejection reason when it does not.
-    pub fn admit(&mut self, ub_throughput: f64, lb_cost: f64) -> bool {
+    /// rejection reason when it does not, and returns the attributed
+    /// [`AdmitDecision`] carrying the certifying evidence (budget exceeded,
+    /// or the exact dominating frontier point).
+    pub fn admit(&mut self, ub_throughput: f64, lb_cost: f64) -> AdmitDecision {
         if lb_cost > self.budget {
             self.pruned_budget += 1;
-            return false;
+            return AdmitDecision::PrunedBudget { lb_usd: lb_cost, budget: self.budget };
         }
-        if self.dominates(ub_throughput, lb_cost) {
+        if let Some(by) = self.dominating(ub_throughput, lb_cost) {
             self.pruned_dominated += 1;
-            return false;
+            return AdmitDecision::PrunedDominated { by };
         }
-        true
+        AdmitDecision::Admitted
     }
 
     /// Read-only form of [`Self::admit`]: same predicate, no counter
@@ -204,11 +236,20 @@ impl DominancePruner {
     /// grows under [`Self::observe`]: whatever a snapshot rejects, every
     /// later frontier rejects too.
     pub fn would_admit(&self, ub_throughput: f64, lb_cost: f64) -> bool {
-        lb_cost <= self.budget && !self.dominates(ub_throughput, lb_cost)
+        lb_cost <= self.budget && self.dominating(ub_throughput, lb_cost).is_none()
     }
 
-    fn dominates(&self, ub_throughput: f64, lb_cost: f64) -> bool {
-        self.frontier.iter().any(|&(p, c)| p >= ub_throughput && c <= lb_cost)
+    /// The first frontier point dominating these bounds, if any. First-match
+    /// (insertion-order) so the attributed evidence is deterministic: the
+    /// frontier's content at any replay step depends only on the serial
+    /// (round, pool) order, never on worker interleaving.
+    fn dominating(&self, ub_throughput: f64, lb_cost: f64) -> Option<(f64, f64)> {
+        self.frontier.iter().find(|&&(p, c)| p >= ub_throughput && c <= lb_cost).copied()
+    }
+
+    /// The money ceiling this pruner enforces.
+    pub fn budget(&self) -> f64 {
+        self.budget
     }
 
     /// Record a scored strategy (keeps the internal frontier minimal).
@@ -470,18 +511,26 @@ mod tests {
     #[test]
     fn pruner_budget_and_dominance() {
         let mut pr = DominancePruner::new(100.0);
-        assert!(pr.admit(1000.0, 50.0), "within budget, empty frontier");
-        assert!(!pr.admit(1000.0, 100.1), "lower bound above budget");
+        assert!(pr.admit(1000.0, 50.0).is_admitted(), "within budget, empty frontier");
+        assert_eq!(
+            pr.admit(1000.0, 100.1),
+            AdmitDecision::PrunedBudget { lb_usd: 100.1, budget: 100.0 },
+            "lower bound above budget carries the certificate"
+        );
         assert_eq!(pr.pruned_budget, 1);
         pr.observe(500.0, 20.0);
-        assert!(!pr.admit(400.0, 30.0), "dominated: slower and pricier than scored");
+        assert_eq!(
+            pr.admit(400.0, 30.0),
+            AdmitDecision::PrunedDominated { by: (500.0, 20.0) },
+            "dominated: slower and pricier than scored, evidence is the scored point"
+        );
         assert_eq!(pr.pruned_dominated, 1);
-        assert!(pr.admit(600.0, 30.0), "faster upper bound survives");
-        assert!(pr.admit(400.0, 10.0), "cheaper lower bound survives");
+        assert!(pr.admit(600.0, 30.0).is_admitted(), "faster upper bound survives");
+        assert!(pr.admit(400.0, 10.0).is_admitted(), "cheaper lower bound survives");
         assert_eq!(pr.pruned(), 2);
         // Infinite budget never rejects on money.
         let mut inf = DominancePruner::new(f64::INFINITY);
-        assert!(inf.admit(1.0, 1e30));
+        assert!(inf.admit(1.0, 1e30).is_admitted());
     }
 
     #[test]
@@ -492,7 +541,7 @@ mod tests {
             &[(1000.0, 50.0), (1000.0, 100.1), (400.0, 30.0), (600.0, 30.0), (400.0, 10.0)]
         {
             let speculative = pr.would_admit(ub, lb);
-            let counted = pr.clone().admit(ub, lb);
+            let counted = pr.clone().admit(ub, lb).is_admitted();
             assert_eq!(speculative, counted, "predicates diverged on ({ub}, {lb})");
         }
         assert_eq!(pr.pruned(), 0, "would_admit must not count");
@@ -517,7 +566,11 @@ mod tests {
         pr.observe(100.0, 10.0);
         pr.observe(90.0, 20.0); // dominated, dropped
         pr.observe(200.0, 5.0); // dominates the first, replaces it
-        assert!(!pr.admit(150.0, 7.0), "dominated by (200, 5)");
-        assert!(pr.admit(250.0, 7.0));
+        assert_eq!(
+            pr.admit(150.0, 7.0),
+            AdmitDecision::PrunedDominated { by: (200.0, 5.0) },
+            "dominated by (200, 5)"
+        );
+        assert!(pr.admit(250.0, 7.0).is_admitted());
     }
 }

@@ -78,7 +78,9 @@
 //!   against the current engine without importing anything.
 
 use crate::coordinator::{
-    FrontierCandidate, FrontierReport, PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport,
+    AuditContender, AuditDecision, AuditFunnel, AuditMargins, AuditPool, AuditRound, AuditWave,
+    FrontierCandidate, FrontierReport, PhaseBreakdown, ScoredStrategy, ScoringCore, SearchAudit,
+    SearchReport,
 };
 use crate::cost::{CostBreakdown, CostConsts, EtaProvider, MemoRows, StageTime};
 use crate::gbdt::Forest;
@@ -1057,6 +1059,186 @@ fn cost_from_value(v: &Value) -> Result<CostBreakdown> {
     })
 }
 
+/// Full-fidelity [`SearchAudit`] encoding — every field (including the
+/// load-dependent memo/wave observability the canonical
+/// [`crate::report::audit_json`] elides), floats as bit patterns, so a
+/// restored cache entry replays the exact audit it was stored with.
+fn audit_to_value(a: &SearchAudit) -> Value {
+    let rounds: Vec<Value> = a
+        .rounds
+        .iter()
+        .map(|r| {
+            let pools: Vec<Value> = r
+                .pools
+                .iter()
+                .map(|p| {
+                    let gpus: Vec<Value> = p
+                        .gpus
+                        .iter()
+                        .map(|(g, n)| Value::obj().set("gpu", g.as_str()).set("n", *n))
+                        .collect();
+                    let mut v = Value::obj()
+                        .set("pool", p.pool)
+                        .set("gpus", Value::Arr(gpus))
+                        .set("tp", p.tp)
+                        .set("dp", p.dp)
+                        .set("ub_tput", bits(p.ub_tput))
+                        .set("lb_usd", bits(p.lb_usd))
+                        .set("decision", p.decision.tag());
+                    match p.decision {
+                        AuditDecision::Admitted => {}
+                        AuditDecision::PrunedBudget { lb_usd, budget } => {
+                            v = v.set("ev_lb_usd", bits(lb_usd)).set("ev_budget", bits(budget));
+                        }
+                        AuditDecision::PrunedDominated { by } => {
+                            v = v.set("ev_by_tput", bits(by.0)).set("ev_by_usd", bits(by.1));
+                        }
+                    }
+                    if let Some(f) = &p.funnel {
+                        v = v.set(
+                            "funnel",
+                            Value::obj()
+                                .set("expanded", f.expanded)
+                                .set("rules_rejected", f.rules_rejected)
+                                .set("mem_rejected", f.mem_rejected)
+                                .set("scored", f.scored)
+                                .set("memo_hits", f.memo_hits)
+                                .set("memo_misses", f.memo_misses),
+                        );
+                    }
+                    v
+                })
+                .collect();
+            Value::obj().set("round", r.round).set("total", r.total).set("pools", Value::Arr(pools))
+        })
+        .collect();
+    let waves: Vec<Value> = a
+        .waves
+        .iter()
+        .map(|w| {
+            Value::obj()
+                .set("wave", w.wave)
+                .set("rounds", w.rounds)
+                .set("speculated", w.speculated)
+                .set("wasted", w.wasted)
+        })
+        .collect();
+    let mut out = Value::obj().set("rounds", Value::Arr(rounds)).set("waves", Value::Arr(waves));
+    if let Some(m) = &a.margins {
+        let cont = |c: &AuditContender| {
+            Value::obj()
+                .set("summary", c.summary.as_str())
+                .set("step", bits(c.step_time_s))
+                .set("tput", bits(c.tokens_per_s))
+                .set("usd", bits(c.money_usd))
+        };
+        let mut mv = Value::obj()
+            .set("winner", cont(&m.winner))
+            .set("step_margin", bits(m.step_time_margin_s))
+            .set("tput_margin", bits(m.tokens_per_s_margin))
+            .set("usd_margin", bits(m.money_margin_usd));
+        if let Some(ru) = &m.runner_up {
+            mv = mv.set("runner_up", cont(ru));
+        }
+        out = out.set("margins", mv);
+    }
+    out
+}
+
+/// Inverse of [`audit_to_value`].
+fn audit_from_value(v: &Value) -> Result<SearchAudit> {
+    let mut rounds = Vec::new();
+    for rv in v.req_arr("rounds")? {
+        let mut pools = Vec::new();
+        for pv in rv.req_arr("pools")? {
+            let mut gpus = Vec::new();
+            for gv in pv.req_arr("gpus")? {
+                let name = gv
+                    .get("gpu")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| AstraError::Json("missing audit gpu name".into()))?;
+                gpus.push((name.to_string(), gv.req_usize("n")?));
+            }
+            let decision = match pv.get("decision").and_then(Value::as_str) {
+                Some("admitted") => AuditDecision::Admitted,
+                Some("pruned_budget") => AuditDecision::PrunedBudget {
+                    lb_usd: req_bits(pv, "ev_lb_usd")?,
+                    budget: req_bits(pv, "ev_budget")?,
+                },
+                Some("pruned_dominated") => AuditDecision::PrunedDominated {
+                    by: (req_bits(pv, "ev_by_tput")?, req_bits(pv, "ev_by_usd")?),
+                },
+                _ => return Err(AstraError::Json("bad audit decision tag".into())),
+            };
+            let funnel = match pv.get("funnel") {
+                Some(fv) => Some(AuditFunnel {
+                    expanded: fv.req_usize("expanded")?,
+                    rules_rejected: fv.req_usize("rules_rejected")?,
+                    mem_rejected: fv.req_usize("mem_rejected")?,
+                    scored: fv.req_usize("scored")?,
+                    memo_hits: fv
+                        .get("memo_hits")
+                        .and_then(Value::as_u64)
+                        .ok_or_else(|| AstraError::Json("bad audit memo_hits".into()))?,
+                    memo_misses: fv
+                        .get("memo_misses")
+                        .and_then(Value::as_u64)
+                        .ok_or_else(|| AstraError::Json("bad audit memo_misses".into()))?,
+                }),
+                None => None,
+            };
+            pools.push(AuditPool {
+                pool: pv.req_usize("pool")?,
+                gpus,
+                tp: pv.req_usize("tp")?,
+                dp: pv.req_usize("dp")?,
+                ub_tput: req_bits(pv, "ub_tput")?,
+                lb_usd: req_bits(pv, "lb_usd")?,
+                decision,
+                funnel,
+            });
+        }
+        rounds.push(AuditRound { round: rv.req_usize("round")?, total: rv.req_usize("total")?, pools });
+    }
+    let mut waves = Vec::new();
+    for wv in v.req_arr("waves")? {
+        waves.push(AuditWave {
+            wave: wv.req_usize("wave")?,
+            rounds: wv.req_usize("rounds")?,
+            speculated: wv.req_usize("speculated")?,
+            wasted: wv.req_usize("wasted")?,
+        });
+    }
+    let contender = |cv: &Value| -> Result<AuditContender> {
+        Ok(AuditContender {
+            summary: cv
+                .get("summary")
+                .and_then(Value::as_str)
+                .ok_or_else(|| AstraError::Json("missing audit summary".into()))?
+                .to_string(),
+            step_time_s: req_bits(cv, "step")?,
+            tokens_per_s: req_bits(cv, "tput")?,
+            money_usd: req_bits(cv, "usd")?,
+        })
+    };
+    let margins = match v.get("margins") {
+        Some(mv) => Some(AuditMargins {
+            winner: contender(
+                mv.get("winner").ok_or_else(|| AstraError::Json("missing audit winner".into()))?,
+            )?,
+            runner_up: match mv.get("runner_up") {
+                Some(rv) => Some(contender(rv)?),
+                None => None,
+            },
+            step_time_margin_s: req_bits(mv, "step_margin")?,
+            tokens_per_s_margin: req_bits(mv, "tput_margin")?,
+            money_margin_usd: req_bits(mv, "usd_margin")?,
+        }),
+        None => None,
+    };
+    Ok(SearchAudit { rounds, waves, margins })
+}
+
 /// Full-fidelity [`SearchReport`] encoding — every field, floats as bit
 /// patterns, GPUs by catalog name. Unlike [`crate::report::report_json`]
 /// (the lossy canonical *result* view), this restores the exact struct so
@@ -1084,6 +1266,8 @@ pub fn report_to_value(r: &SearchReport, catalog: &GpuCatalog) -> Value {
         .set("mem_filtered", r.mem_filtered)
         .set("scored", r.scored)
         .set("pruned_pools", r.pruned_pools)
+        .set("pruned_budget", r.pruned_budget)
+        .set("pruned_dominated", r.pruned_dominated)
         .set("search_secs", bits(r.search_secs))
         .set("simulate_secs", bits(r.simulate_secs))
         .set(
@@ -1100,7 +1284,7 @@ pub fn report_to_value(r: &SearchReport, catalog: &GpuCatalog) -> Value {
         .set("memo_misses", r.memo_misses)
         .set("top", Value::Arr(top))
         .set("pool", Value::Arr(pool));
-    match &r.frontier {
+    let out = match &r.frontier {
         Some(fr) => {
             let cands: Vec<Value> = fr
                 .candidates
@@ -1115,6 +1299,13 @@ pub fn report_to_value(r: &SearchReport, catalog: &GpuCatalog) -> Value {
                 .collect();
             out.set("frontier", Value::Arr(cands))
         }
+        None => out,
+    };
+    // The audit rides along bit-exact (same format version: the key is
+    // simply absent for unaudited reports, and decoders treat a missing
+    // key as `None` — old snapshots keep decoding unchanged).
+    match &r.audit {
+        Some(a) => out.set("audit", audit_to_value(a)),
         None => out,
     }
 }
@@ -1181,12 +1372,24 @@ pub fn report_from_value(v: &Value, catalog: &GpuCatalog) -> Result<SearchReport
         }
         None => None,
     };
+    // Optional: unaudited reports (and every snapshot written before the
+    // audit existed) have no key and restore with `audit: None`.
+    let audit = match v.get("audit") {
+        Some(av) => Some(audit_from_value(av)?),
+        None => None,
+    };
+    // Optional for forward-compat: snapshots written before the prune-reason
+    // split restore with zeros (their `pruned_pools` total is still exact).
+    let opt_usize =
+        |key: &str| -> usize { v.get(key).and_then(Value::as_u64).unwrap_or(0) as usize };
     Ok(SearchReport {
         generated: v.req_usize("generated")?,
         rule_filtered: v.req_usize("rule_filtered")?,
         mem_filtered: v.req_usize("mem_filtered")?,
         scored: v.req_usize("scored")?,
         pruned_pools: v.req_usize("pruned_pools")?,
+        pruned_budget: opt_usize("pruned_budget"),
+        pruned_dominated: opt_usize("pruned_dominated"),
         search_secs: req_bits(v, "search_secs")?,
         simulate_secs: req_bits(v, "simulate_secs")?,
         phases,
@@ -1195,6 +1398,7 @@ pub fn report_from_value(v: &Value, catalog: &GpuCatalog) -> Result<SearchReport
         top,
         pool: OptimalPool::from_entries(entries),
         frontier,
+        audit,
     })
 }
 
@@ -1371,6 +1575,8 @@ mod tests {
             mem_filtered: 10,
             scored: 50,
             pruned_pools: 3,
+            pruned_budget: 2,
+            pruned_dominated: 1,
             search_secs: 0.123456789,
             simulate_secs: 0.987654321,
             phases: PhaseBreakdown {
@@ -1390,6 +1596,7 @@ mod tests {
                 cost: 1234.5678,
             }]),
             frontier: None,
+            audit: None,
         }
     }
 
@@ -1400,6 +1607,79 @@ mod tests {
         let scored = r.top[0].clone();
         r.frontier = Some(FrontierReport {
             candidates: vec![FrontierCandidate { idx: 0, scored }],
+        });
+        r
+    }
+
+    /// [`sample_report`] with a small but feature-complete audit attached:
+    /// every decision variant, non-finite bounds, a funnel, a wave record
+    /// and winner/runner-up margins.
+    fn sample_audited_report(catalog: &GpuCatalog) -> SearchReport {
+        let mut r = sample_report(catalog);
+        let winner = AuditContender {
+            summary: "tp2 dp8 mb2".to_string(),
+            step_time_s: 0.36,
+            tokens_per_s: 123456.789,
+            money_usd: 1234.5678,
+        };
+        let runner_up = AuditContender {
+            summary: "tp4 dp4 mb1".to_string(),
+            step_time_s: 0.375,
+            tokens_per_s: 118519.0,
+            money_usd: 1100.25,
+        };
+        r.audit = Some(SearchAudit {
+            rounds: vec![AuditRound {
+                round: 0,
+                total: 32,
+                pools: vec![
+                    AuditPool {
+                        pool: 0,
+                        gpus: vec![("a800".to_string(), 32)],
+                        tp: 2,
+                        dp: 8,
+                        ub_tput: f64::INFINITY,
+                        lb_usd: 0.0,
+                        decision: AuditDecision::Admitted,
+                        funnel: Some(AuditFunnel {
+                            expanded: 100,
+                            rules_rejected: 40,
+                            mem_rejected: 10,
+                            scored: 50,
+                            memo_hits: 42,
+                            memo_misses: 7,
+                        }),
+                    },
+                    AuditPool {
+                        pool: 1,
+                        gpus: vec![("h100".to_string(), 16), ("v100".to_string(), 16)],
+                        tp: 4,
+                        dp: 4,
+                        ub_tput: 2e5,
+                        lb_usd: 9001.5,
+                        decision: AuditDecision::PrunedBudget { lb_usd: 9001.5, budget: 5000.0 },
+                        funnel: None,
+                    },
+                    AuditPool {
+                        pool: 2,
+                        gpus: vec![("v100".to_string(), 32)],
+                        tp: 1,
+                        dp: 16,
+                        ub_tput: 9e4,
+                        lb_usd: 800.0,
+                        decision: AuditDecision::PrunedDominated { by: (123456.789, 700.0) },
+                        funnel: None,
+                    },
+                ],
+            }],
+            waves: vec![AuditWave { wave: 0, rounds: 1, speculated: 2, wasted: 1 }],
+            margins: Some(AuditMargins {
+                winner,
+                runner_up: Some(runner_up),
+                step_time_margin_s: 0.015,
+                tokens_per_s_margin: 4937.789,
+                money_margin_usd: 134.3178,
+            }),
         });
         r
     }
@@ -1494,6 +1774,65 @@ mod tests {
         assert!(!encoded.contains("\"frontier\""));
         let back = report_from_value(&json::parse(&encoded).unwrap(), &catalog).unwrap();
         assert!(back.frontier.is_none());
+    }
+
+    #[test]
+    fn audit_codec_roundtrips_bit_exactly() {
+        let catalog = GpuCatalog::builtin();
+        let r = sample_audited_report(&catalog);
+        let encoded = json::to_string(&report_to_value(&r, &catalog));
+        let back = report_from_value(&json::parse(&encoded).unwrap(), &catalog).unwrap();
+        // Struct-level equality covers decisions, evidence, funnels, waves
+        // and margins in one shot...
+        assert_eq!(back.audit, r.audit);
+        // ...and spot-check bit patterns where `==` would also accept a
+        // lossy decimal roundtrip (incl. the non-finite `ub_tput`).
+        let (pa, pb) = (
+            &r.audit.as_ref().unwrap().rounds[0].pools[0],
+            &back.audit.as_ref().unwrap().rounds[0].pools[0],
+        );
+        assert_eq!(pa.ub_tput.to_bits(), pb.ub_tput.to_bits());
+        assert!(pb.ub_tput.is_infinite());
+        let (ma, mb) = (
+            r.audit.as_ref().unwrap().margins.as_ref().unwrap(),
+            back.audit.as_ref().unwrap().margins.as_ref().unwrap(),
+        );
+        assert_eq!(ma.tokens_per_s_margin.to_bits(), mb.tokens_per_s_margin.to_bits());
+        assert_eq!(
+            ma.runner_up.as_ref().unwrap().money_usd.to_bits(),
+            mb.runner_up.as_ref().unwrap().money_usd.to_bits()
+        );
+        // The prune-reason split rides in the same row.
+        assert_eq!((back.pruned_budget, back.pruned_dominated), (2, 1));
+        // And a second encode of the restored struct is byte-identical:
+        // what the cache serves after a restart is what it served before.
+        assert_eq!(json::to_string(&report_to_value(&back, &catalog)), encoded);
+    }
+
+    #[test]
+    fn audit_free_reports_encode_without_the_key_and_restore_none() {
+        let catalog = GpuCatalog::builtin();
+        let plain = sample_report(&catalog);
+        let encoded = json::to_string(&report_to_value(&plain, &catalog));
+        assert!(!encoded.contains("\"audit\""));
+        let back = report_from_value(&json::parse(&encoded).unwrap(), &catalog).unwrap();
+        assert!(back.audit.is_none());
+    }
+
+    #[test]
+    fn report_codec_accepts_snapshots_without_pruned_split() {
+        // Snapshots written before the pruned_budget/pruned_dominated split
+        // existed restore with zeros; the total stays exact.
+        let catalog = GpuCatalog::builtin();
+        let r = sample_report(&catalog);
+        let mut v = report_to_value(&r, &catalog);
+        if let Value::Obj(m) = &mut v {
+            m.remove("pruned_budget");
+            m.remove("pruned_dominated");
+        }
+        let back = report_from_value(&v, &catalog).unwrap();
+        assert_eq!(back.pruned_pools, 3);
+        assert_eq!((back.pruned_budget, back.pruned_dominated), (0, 0));
     }
 
     #[test]

@@ -164,12 +164,128 @@ pub fn report_json(
         .set("mem_filtered", r.mem_filtered)
         .set("scored", r.scored)
         .set("pruned_pools", r.pruned_pools)
+        .set("pruned_budget", r.pruned_budget)
+        .set("pruned_dominated", r.pruned_dominated)
         .set("top", Value::Arr(top))
         .set("pool", Value::Arr(pool));
     match frontier_json(r, catalog) {
         Some(f) => out.set("frontier", f),
         None => out,
     }
+}
+
+/// Non-finite-safe number rendering: JSON has no `inf`, so the audit's
+/// unbounded pool bounds serialize as the string `"inf"` (the same idiom
+/// as [`crate::coordinator::plan_json`]).
+fn num_or_inf(x: f64) -> crate::json::Value {
+    if x.is_finite() {
+        crate::json::Value::Num(x)
+    } else {
+        crate::json::Value::Str("inf".to_string())
+    }
+}
+
+/// Canonical JSON view of a report's decision audit
+/// ([`crate::coordinator::SearchAudit`]); `None` for unaudited reports.
+///
+/// Canonical means *deterministic*: like [`report_json`], this view holds
+/// only fields that are byte-identical across worker counts and wave
+/// schedules — every pool's decision with its certifying evidence, the
+/// admitted pools' candidate funnels, and the winner/runner-up margins.
+/// The audit's load-dependent observability (per-pool memo hit/miss, the
+/// per-wave speculation-waste records, funnels of pruned-but-speculated
+/// pools) is deliberately excluded; `astra explain` shows it instead.
+pub fn audit_json(r: &crate::coordinator::SearchReport) -> Option<crate::json::Value> {
+    use crate::coordinator::{AuditContender, AuditDecision};
+    use crate::json::Value;
+    let a = r.audit.as_ref()?;
+    let rounds: Vec<Value> = a
+        .rounds
+        .iter()
+        .map(|round| {
+            let pools: Vec<Value> = round
+                .pools
+                .iter()
+                .map(|p| {
+                    let mut gpus = Value::obj();
+                    for (name, n) in &p.gpus {
+                        gpus = gpus.set(name.as_str(), *n);
+                    }
+                    let mut v = Value::obj()
+                        .set("pool", p.pool)
+                        .set("gpus", gpus)
+                        .set("tp", p.tp)
+                        .set("dp", p.dp)
+                        .set("ub_tput", num_or_inf(p.ub_tput))
+                        .set("lb_usd", num_or_inf(p.lb_usd))
+                        .set("decision", p.decision.tag());
+                    match p.decision {
+                        AuditDecision::Admitted => {
+                            // Always present for admitted pools (they were
+                            // streamed by construction); deterministic.
+                            if let Some(f) = &p.funnel {
+                                v = v.set(
+                                    "funnel",
+                                    Value::obj()
+                                        .set("expanded", f.expanded)
+                                        .set("rules_rejected", f.rules_rejected)
+                                        .set("mem_rejected", f.mem_rejected)
+                                        .set("scored", f.scored),
+                                );
+                            }
+                        }
+                        AuditDecision::PrunedBudget { lb_usd, budget } => {
+                            v = v.set(
+                                "evidence",
+                                Value::obj()
+                                    .set("lb_usd", lb_usd)
+                                    .set("budget", num_or_inf(budget)),
+                            );
+                        }
+                        AuditDecision::PrunedDominated { by } => {
+                            v = v.set(
+                                "evidence",
+                                Value::obj()
+                                    .set("dominated_by_tokens_per_s", by.0)
+                                    .set("dominated_by_money_usd", by.1),
+                            );
+                        }
+                    }
+                    v
+                })
+                .collect();
+            Value::obj()
+                .set("round", round.round)
+                .set("total", round.total)
+                .set("pools", Value::Arr(pools))
+        })
+        .collect();
+    let contender = |c: &AuditContender| {
+        Value::obj()
+            .set("summary", c.summary.as_str())
+            .set("step_time_s", c.step_time_s)
+            .set("tokens_per_s", c.tokens_per_s)
+            .set("money_usd", c.money_usd)
+    };
+    let mut out = Value::obj()
+        .set("astra_audit", 1u64)
+        .set("pools", a.pool_count())
+        .set("admitted", a.admitted())
+        .set("pruned_budget", a.pruned_budget())
+        .set("pruned_dominated", a.pruned_dominated())
+        .set("rounds", Value::Arr(rounds));
+    if let Some(m) = &a.margins {
+        let mut mv = Value::obj()
+            .set("winner", contender(&m.winner))
+            .set("step_time_margin_s", m.step_time_margin_s)
+            .set("tokens_per_s_margin", m.tokens_per_s_margin)
+            .set("money_margin_usd", m.money_margin_usd);
+        if let Some(ru) = &m.runner_up {
+            mv = mv.set("runner_up", contender(ru));
+        }
+        out = out.set("margins", mv);
+    }
+    Some(out)
 }
 
 /// Canonical wire view of a frontier-mode result: the full Pareto curve in

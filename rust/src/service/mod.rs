@@ -67,6 +67,18 @@
 //! The resilience counters (`requests_shed`, `requests_deadline`,
 //! `requests_panicked`, plus the failpoint module's `faults_injected`)
 //! ride the `{"cmd":"stats"}` line and the telemetry registry.
+//!
+//! ## Live ops plane
+//!
+//! `{"cmd":"health"}` on the wire (and `astra health` on the CLI) answers
+//! from [`SearchService::health`]: readiness (admission-queue headroom
+//! against `max_queue_depth`, plus the boot warm-restore summary) and a
+//! rolling window of per-mode p50/p95/p99 request latency and windowed
+//! cache-hit/shed/deadline/panic rates. The window is computed as
+//! [`crate::telemetry::window`] deltas between consecutive probes'
+//! registry snapshots — relaxed atomic reads only, so a health probe
+//! never takes the in-flight map or cache shard locks the search path
+//! contends on.
 
 pub mod cache;
 pub mod fingerprint;
@@ -78,6 +90,7 @@ pub use fingerprint::{fingerprint, frontier_fingerprint, Fingerprint};
 use crate::coordinator::{ScoringCore, SearchReport, SearchRequest};
 use crate::resilience::{lock_unpoisoned, CancelToken};
 use crate::strategy::GpuPoolMode;
+use crate::telemetry::window;
 use crate::persist;
 use crate::pool::par_for_indices;
 use crate::{AstraError, Result};
@@ -164,6 +177,13 @@ pub struct RequestOpts {
     /// [`ServiceConfig::default_deadline_ms`]; `Some(0)` is an
     /// already-expired budget (cache-or-fail, never a search).
     pub deadline_ms: Option<u64>,
+    /// Attach a decision audit ([`crate::coordinator::SearchAudit`]) when
+    /// this request runs a fresh search. Out of the fingerprint like
+    /// everything here — an audited and an unaudited request share one
+    /// cache entry and one single-flight slot, so an audited request may
+    /// be served a cached report without an audit (best-effort: the wire
+    /// layer simply omits the audit payload then).
+    pub audit: bool,
 }
 
 /// Where a response came from.
@@ -297,6 +317,95 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Wire-mode spelling and per-mode request-latency histogram, index-aligned
+/// with the health baseline (and with [`mode_index`]).
+const MODE_METRICS: &[(&str, &str)] = &[
+    ("homogeneous", "astra_request_homogeneous_seconds"),
+    ("heterogeneous", "astra_request_heterogeneous_seconds"),
+    ("cost", "astra_request_cost_seconds"),
+    ("hetero-cost", "astra_request_hetero_cost_seconds"),
+    ("frontier", "astra_request_frontier_seconds"),
+];
+
+fn mode_index(mode: &GpuPoolMode) -> usize {
+    match mode {
+        GpuPoolMode::Homogeneous { .. } => 0,
+        GpuPoolMode::Heterogeneous { .. } => 1,
+        GpuPoolMode::Cost { .. } => 2,
+        GpuPoolMode::HeteroCost { .. } => 3,
+        GpuPoolMode::Frontier { .. } => 4,
+    }
+}
+
+/// Registry counters the health window rates are diffed from,
+/// index-aligned with the baseline's counter snapshot.
+const RATE_COUNTERS: &[&str] = &[
+    "astra_cache_hits_total",
+    "astra_cache_misses_total",
+    "astra_requests_shed_total",
+    "astra_requests_deadline_total",
+    "astra_requests_panicked_total",
+];
+
+/// What the boot-time warm restore actually did (the log line, kept for
+/// the health surface).
+#[derive(Debug, Clone)]
+pub struct WarmRestoreSummary {
+    pub scopes_restored: usize,
+    /// Stage + sync memo rows imported.
+    pub rows: usize,
+    pub cache_entries: usize,
+    pub scopes_rejected: usize,
+}
+
+/// The previous probe's registry snapshots; the next probe diffs against
+/// these, so consecutive `health` calls see disjoint windows.
+struct HealthBaseline {
+    hists: Vec<window::HistSnapshot>,
+    counters: Vec<u64>,
+}
+
+impl Default for HealthBaseline {
+    fn default() -> Self {
+        HealthBaseline {
+            hists: (0..MODE_METRICS.len()).map(|_| window::HistSnapshot::zero()).collect(),
+            counters: vec![0; RATE_COUNTERS.len()],
+        }
+    }
+}
+
+/// One mode's slice of the health window.
+#[derive(Debug, Clone, Copy)]
+pub struct ModeWindow {
+    /// Wire spelling of the mode (`"hetero-cost"` etc.).
+    pub mode: &'static str,
+    /// Requests of this mode completed inside the window.
+    pub requests: u64,
+    /// p50/p95/p99 latency of those requests; `None` for an idle mode.
+    pub latency: Option<window::Percentiles>,
+}
+
+/// One `health` probe's answer ([`SearchService::health`]).
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    /// `true` when the admission queue has headroom (`max_queue_depth`
+    /// unset, or fewer active requests than the bound).
+    pub ready: bool,
+    pub active_requests: usize,
+    pub max_queue_depth: usize,
+    /// The boot warm restore, when one happened.
+    pub warm_restore: Option<WarmRestoreSummary>,
+    /// Per-mode latency windows, in [`MODE_METRICS`] order.
+    pub modes: Vec<ModeWindow>,
+    /// Requests (all modes) completed inside the window.
+    pub window_requests: u64,
+    /// Result-cache hits over lookups inside the window (`0` when idle).
+    pub cache_hit_rate: f64,
+    pub shed_rate: f64,
+    pub deadline_rate: f64,
+    pub panic_rate: f64,
+}
+
 /// The multi-tenant search service: one shared [`ScoringCore`], a sharded
 /// result cache, and single-flight admission.
 pub struct SearchService {
@@ -319,6 +428,11 @@ pub struct SearchService {
     deadline_hits: AtomicU64,
     /// Requests whose search panicked and was isolated since boot.
     panicked: AtomicU64,
+    /// What the boot warm restore did; `None` without one.
+    warm_restore: Option<WarmRestoreSummary>,
+    /// Previous health probe's registry snapshots (health-only lock — the
+    /// search path never touches it).
+    health_baseline: Mutex<HealthBaseline>,
 }
 
 impl SearchService {
@@ -327,7 +441,7 @@ impl SearchService {
     /// against this engine's identity are restored before the first
     /// request (anything else is skipped — cold start, never an error).
     pub fn new(core: ScoringCore, config: ServiceConfig) -> SearchService {
-        let svc = SearchService {
+        let mut svc = SearchService {
             core: Arc::new(core),
             cache: ShardedCache::new(config.cache.clone()),
             inflight: Mutex::new(HashMap::new()),
@@ -338,17 +452,27 @@ impl SearchService {
             shed: AtomicU64::new(0),
             deadline_hits: AtomicU64::new(0),
             panicked: AtomicU64::new(0),
+            warm_restore: None,
+            health_baseline: Mutex::new(HealthBaseline::default()),
         };
         if let Some(path) = svc.warm_path() {
             if path.exists() {
                 match svc.restore_warm(&path) {
-                    Ok(st) => crate::log_info!(
-                        "warm restore: {} scope(s) ({} rows), {} cache entries, {} rejected",
-                        st.scopes_restored,
-                        st.stage_rows + st.sync_rows,
-                        st.cache_entries,
-                        st.scopes_rejected
-                    ),
+                    Ok(st) => {
+                        crate::log_info!(
+                            "warm restore: {} scope(s) ({} rows), {} cache entries, {} rejected",
+                            st.scopes_restored,
+                            st.stage_rows + st.sync_rows,
+                            st.cache_entries,
+                            st.scopes_rejected
+                        );
+                        svc.warm_restore = Some(WarmRestoreSummary {
+                            scopes_restored: st.scopes_restored,
+                            rows: st.stage_rows + st.sync_rows,
+                            cache_entries: st.cache_entries,
+                            scopes_rejected: st.scopes_rejected,
+                        });
+                    }
                     Err(e) => crate::log_warn!("warm restore failed (starting cold): {e}"),
                 }
             }
@@ -499,6 +623,51 @@ impl SearchService {
         self.active.load(Ordering::Relaxed)
     }
 
+    /// One live health probe: readiness plus the rolling window since the
+    /// *previous* probe (the first window covers everything since boot).
+    ///
+    /// Lock discipline: reads only relaxed registry atomics plus the
+    /// health-only baseline mutex — never the in-flight map or a cache
+    /// shard, so a probe can neither stall admissions nor be stalled by a
+    /// wedged search.
+    pub fn health(&self) -> HealthReport {
+        crate::telemetry::counter_macro!("astra_health_checks_total").inc();
+        let mut base = lock_unpoisoned(&self.health_baseline);
+        let mut modes = Vec::with_capacity(MODE_METRICS.len());
+        let mut window_requests = 0u64;
+        for (i, (mode, metric)) in MODE_METRICS.iter().enumerate() {
+            let snap = window::HistSnapshot::of(&crate::telemetry::histogram(metric));
+            let d = snap.delta(&base.hists[i]);
+            base.hists[i] = snap;
+            window_requests += d.count();
+            modes.push(ModeWindow {
+                mode,
+                requests: d.count(),
+                latency: window::percentiles(&d),
+            });
+        }
+        let now: Vec<u64> =
+            RATE_COUNTERS.iter().map(|n| crate::telemetry::counter(n).get()).collect();
+        let d: Vec<u64> =
+            now.iter().zip(base.counters.iter()).map(|(n, b)| n.saturating_sub(*b)).collect();
+        base.counters = now;
+        let (hits, misses, shed, deadline, panicked) = (d[0], d[1], d[2], d[3], d[4]);
+        let active = self.active_requests();
+        let depth = self.config.max_queue_depth;
+        HealthReport {
+            ready: depth == 0 || active < depth,
+            active_requests: active,
+            max_queue_depth: depth,
+            warm_restore: self.warm_restore.clone(),
+            modes,
+            window_requests,
+            cache_hit_rate: window::ratio(hits, hits + misses),
+            shed_rate: window::ratio(shed, window_requests),
+            deadline_rate: window::ratio(deadline, window_requests),
+            panic_rate: window::ratio(panicked, window_requests),
+        }
+    }
+
     /// Lifetime resilience counters: `(shed, deadline, panicked)`.
     pub fn resilience_counters(&self) -> (u64, u64, u64) {
         (
@@ -534,9 +703,20 @@ impl SearchService {
         self.handle_opts(req, RequestOpts::default())
     }
 
-    /// [`Self::handle`] with per-request serving options (deadline). See
-    /// the module docs for the lifecycle and its typed exits.
+    /// [`Self::handle`] with per-request serving options (deadline,
+    /// audit). See the module docs for the lifecycle and its typed exits.
+    /// Every completed request — success or typed error — lands one
+    /// observation in its mode's `astra_request_*_seconds` histogram,
+    /// which is exactly the data the health window diffs.
     pub fn handle_opts(&self, req: &SearchRequest, opts: RequestOpts) -> Result<ServiceResponse> {
+        let t0 = Instant::now();
+        let result = self.handle_opts_impl(req, opts);
+        crate::telemetry::histogram(MODE_METRICS[mode_index(&req.mode)].1)
+            .observe(t0.elapsed().as_secs_f64());
+        result
+    }
+
+    fn handle_opts_impl(&self, req: &SearchRequest, opts: RequestOpts) -> Result<ServiceResponse> {
         let t0 = Instant::now();
         let fp = self.fingerprint_of(req);
         let is_frontier = matches!(req.mode, GpuPoolMode::Frontier { .. });
@@ -603,7 +783,12 @@ impl SearchService {
                 None => CancelToken::unlimited(),
             };
             let result = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                self.core.search_with_cancel(req, &cancel).map(Arc::new)
+                if opts.audit {
+                    crate::telemetry::counter_macro!("astra_audited_searches_total").inc();
+                    self.core.search_with_cancel_audited(req, &cancel).map(Arc::new)
+                } else {
+                    self.core.search_with_cancel(req, &cancel).map(Arc::new)
+                }
             })) {
                 Ok(r) => r,
                 Err(payload) => {
@@ -952,7 +1137,7 @@ mod tests {
     #[test]
     fn deadline_zero_fails_immediately_without_searching() {
         let svc = SearchService::new(small_core(), ServiceConfig::default());
-        let err = svc.handle_opts(&req(16), RequestOpts { deadline_ms: Some(0) }).unwrap_err();
+        let err = svc.handle_opts(&req(16), RequestOpts { deadline_ms: Some(0), ..Default::default() }).unwrap_err();
         assert!(matches!(err, AstraError::Deadline(_)), "got {err}");
         assert_eq!(err.kind(), "deadline");
         assert!(!err.retryable(), "deadline errors are not retryable");
@@ -966,7 +1151,7 @@ mod tests {
     fn cached_hit_served_even_at_deadline_zero() {
         let svc = SearchService::new(small_core(), ServiceConfig::default());
         svc.handle(&req(16)).unwrap();
-        let hit = svc.handle_opts(&req(16), RequestOpts { deadline_ms: Some(0) }).unwrap();
+        let hit = svc.handle_opts(&req(16), RequestOpts { deadline_ms: Some(0), ..Default::default() }).unwrap();
         assert_eq!(hit.source, ResponseSource::Cache, "cache is checked before the gate");
         assert_eq!(svc.resilience_counters().1, 0, "a hit is not a deadline event");
     }
@@ -995,11 +1180,11 @@ mod tests {
         let cfg = ServiceConfig { default_deadline_ms: 0, ..Default::default() };
         let svc = SearchService::new(small_core(), cfg);
         assert!(svc.handle(&req(16)).is_ok());
-        let err = svc.handle_opts(&req(24), RequestOpts { deadline_ms: Some(0) }).unwrap_err();
+        let err = svc.handle_opts(&req(24), RequestOpts { deadline_ms: Some(0), ..Default::default() }).unwrap_err();
         assert_eq!(err.kind(), "deadline");
         // A generous explicit deadline still completes the search.
         let ok = svc
-            .handle_opts(&req(24), RequestOpts { deadline_ms: Some(600_000) })
+            .handle_opts(&req(24), RequestOpts { deadline_ms: Some(600_000), ..Default::default() })
             .unwrap();
         assert_eq!(ok.source, ResponseSource::Search);
     }

@@ -13,6 +13,7 @@
 //! {"model":"llama2-7b","mode":"frontier","caps":{"a800":16,"h100":16}}
 //! {"cmd":"stats"}
 //! {"cmd":"metrics"}
+//! {"cmd":"health"}
 //! ```
 //!
 //! * `model` — required, a [`crate::model::ModelRegistry`] name.
@@ -33,6 +34,13 @@
 //!   and the response is a typed `deadline` error (never a partial
 //!   report). `0` means "cache or fail now". Cached results are served
 //!   regardless of deadline. Not part of the fingerprint.
+//! * `audit` — optional boolean. `true` asks for a decision audit
+//!   ([`crate::report::audit_json`]) on the response: per-round, per-pool
+//!   admitted/pruned decisions with certifying evidence, candidate
+//!   funnels and winner margins. Not part of the fingerprint — the core
+//!   report is byte-identical with auditing on or off, and a request that
+//!   hits a cached report without a stored audit answers without one
+//!   (best-effort).
 //!
 //! `frontier` responses additionally carry a `frontier` object (see
 //! [`crate::report::frontier_json`]): the full Pareto curve of
@@ -66,6 +74,14 @@
 //!   counter/gauge/histogram, including the per-phase search latency
 //!   histograms. Values are load-dependent, so golden transcripts zero
 //!   every number under `metrics` (names and shape stay pinned).
+//! * `{"cmd":"health"}` — live readiness and the rolling request window
+//!   ([`SearchService::health`]): `ready` (admission-queue headroom),
+//!   active/max queue depth, the boot warm-restore summary, and windowed
+//!   per-mode p50/p95/p99 latency plus cache-hit/shed/deadline/panic
+//!   rates, computed from [`crate::telemetry::window`] snapshot deltas —
+//!   never from the search path's locks. Golden transcripts zero the
+//!   numbers and collapse the per-mode objects (traffic-dependent), but
+//!   `ready` and the shape stay pinned.
 
 use crate::coordinator::{SearchReport, SearchRequest};
 use crate::gpu::GpuCatalog;
@@ -89,6 +105,9 @@ pub struct WireRequest {
     pub request: SearchRequest,
     /// Per-request deadline (ms); `None` defers to the service default.
     pub deadline_ms: Option<u64>,
+    /// `"audit":true` on the wire — attach a decision audit to a fresh
+    /// search for this request.
+    pub audit: bool,
 }
 
 /// Serve-loop options.
@@ -145,6 +164,12 @@ pub fn parse_request(
             AstraError::Json("'deadline_ms' is not a non-negative integer".into())
         })?),
     };
+    let audit = match v.get("audit") {
+        None => false,
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| AstraError::Json("'audit' is not a boolean".into()))?,
+    };
     let model = registry.get(v.req_str("model")?)?.clone();
     let mode = v.get("mode").and_then(Value::as_str).unwrap_or("homogeneous");
     let request = match mode {
@@ -187,7 +212,7 @@ pub fn parse_request(
             )));
         }
     };
-    Ok(WireRequest { id, request, deadline_ms })
+    Ok(WireRequest { id, request, deadline_ms, audit })
 }
 
 /// The `caps` object, `{gpu_name: max_count}`.
@@ -296,6 +321,8 @@ fn report_counts_json(r: &SearchReport) -> Value {
         .set("mem_filtered", r.mem_filtered)
         .set("scored", r.scored)
         .set("pruned_pools", r.pruned_pools)
+        .set("pruned_budget", r.pruned_budget)
+        .set("pruned_dominated", r.pruned_dominated)
         .set("search_secs", r.search_secs)
         .set("simulate_secs", r.simulate_secs)
         .set("phases", phases)
@@ -303,12 +330,15 @@ fn report_counts_json(r: &SearchReport) -> Value {
         .set("memo_misses", r.memo_misses)
 }
 
-/// Success response line.
+/// Success response line. `audit` is the *request's* wish: the audit
+/// object rides only when asked for AND the served report carries one (a
+/// cached report stored by an unaudited leader answers without).
 pub fn response_json(
     id: &Option<String>,
     resp: &ServiceResponse,
     top: usize,
     catalog: &GpuCatalog,
+    audit: bool,
 ) -> Value {
     let mut v = Value::obj()
         .set("ok", true)
@@ -332,6 +362,11 @@ pub fn response_json(
     // Frontier-mode responses carry the whole Pareto curve next to `top`.
     if let Some(f) = crate::report::frontier_json(&resp.report, catalog) {
         v = v.set("frontier", f);
+    }
+    if audit {
+        if let Some(a) = crate::report::audit_json(&resp.report) {
+            v = v.set("audit", a);
+        }
     }
     v.set("top", Value::Arr(tops))
 }
@@ -379,6 +414,24 @@ pub fn normalize_response_line(line: &str) -> Result<String> {
             ] {
                 if stats.contains_key(k) {
                     stats.insert(k.to_string(), Value::Num(0.0));
+                }
+            }
+        }
+        // Health is a live probe: every number is load-dependent, and the
+        // per-mode p50/p95/p99 keys only exist for modes that saw window
+        // traffic (the histograms are process-global, so other tests'
+        // requests leak into the window). Zero the numbers and collapse
+        // the per-mode objects; `ready` (a boolean) and the rest of the
+        // shape stay pinned.
+        if let Some(health) = m.get_mut("health") {
+            zero_numbers(health);
+            if let Value::Obj(hm) = health {
+                if let Some(Value::Obj(w)) = hm.get_mut("window") {
+                    if let Some(Value::Obj(modes)) = w.get_mut("modes") {
+                        for mv in modes.values_mut() {
+                            *mv = Value::obj();
+                        }
+                    }
                 }
             }
         }
@@ -471,6 +524,51 @@ pub fn metrics_json() -> Value {
     Value::obj().set("ok", true).set("metrics", crate::telemetry::registry_json())
 }
 
+/// Live health line (the `{"cmd":"health"}` control request): readiness
+/// plus the rolling window since the previous probe. See
+/// [`SearchService::health`] for the lock discipline (registry snapshot
+/// deltas only — a probe never waits on the search path).
+pub fn health_json(service: &SearchService) -> Value {
+    let h = service.health();
+    let mut modes = Value::obj();
+    for m in &h.modes {
+        let mut mv = Value::obj().set("requests", m.requests);
+        if let Some(p) = m.latency {
+            mv = mv
+                .set("p50_ms", p.p50 * 1e3)
+                .set("p95_ms", p.p95 * 1e3)
+                .set("p99_ms", p.p99 * 1e3);
+        }
+        modes = modes.set(m.mode, mv);
+    }
+    let mut health = Value::obj()
+        .set("ready", h.ready)
+        .set("active_requests", h.active_requests)
+        .set("max_queue_depth", h.max_queue_depth)
+        .set(
+            "window",
+            Value::obj()
+                .set("requests", h.window_requests)
+                .set("cache_hit_rate", h.cache_hit_rate)
+                .set("shed_rate", h.shed_rate)
+                .set("deadline_rate", h.deadline_rate)
+                .set("panic_rate", h.panic_rate)
+                .set("modes", modes),
+        );
+    health = match &h.warm_restore {
+        Some(w) => health.set(
+            "warm_restore",
+            Value::obj()
+                .set("scopes_restored", w.scopes_restored)
+                .set("rows", w.rows)
+                .set("cache_entries", w.cache_entries)
+                .set("scopes_rejected", w.scopes_rejected),
+        ),
+        None => health.set("warm_restore", Value::Null),
+    };
+    Value::obj().set("ok", true).set("health", health)
+}
+
 /// What one admitted line turned into.
 enum Admitted {
     /// Index into the batch's request vector.
@@ -483,6 +581,9 @@ enum Admitted {
     /// `{"cmd":"metrics"}` — the telemetry registry dump; rendered at
     /// emission time like `stats`.
     Metrics(Option<String>),
+    /// `{"cmd":"health"}` — readiness + rolling window; rendered at
+    /// emission time so the window includes this batch's requests.
+    Health(Option<String>),
 }
 
 /// Process one admitted batch of raw lines: parse, fan out the valid
@@ -518,13 +619,18 @@ fn process_batch<W: Write>(
                         admitted.push(Admitted::Metrics(wire_id(&v)));
                         continue;
                     }
+                    Some("health") => {
+                        admitted.push(Admitted::Health(wire_id(&v)));
+                        continue;
+                    }
                     _ => {}
                 }
                 match parse_request(&v, catalog, &registry) {
                     Ok(w) => {
                         admitted.push(Admitted::Request { id: w.id, slot: requests.len() });
                         requests.push(w.request);
-                        request_opts.push(RequestOpts { deadline_ms: w.deadline_ms });
+                        request_opts
+                            .push(RequestOpts { deadline_ms: w.deadline_ms, audit: w.audit });
                     }
                     Err(e) => {
                         admitted.push(Admitted::Immediate(error_json(&wire_id(&v), &e)));
@@ -581,10 +687,24 @@ fn process_batch<W: Write>(
                 }
                 json::to_string(&v)
             }
+            Admitted::Health(id) => {
+                stats.ok += 1;
+                let mut v = health_json(service);
+                if let Some(id) = id {
+                    v = v.set("id", id.as_str());
+                }
+                json::to_string(&v)
+            }
             Admitted::Request { id, slot } => match &responses[*slot] {
                 Ok(resp) => {
                     stats.ok += 1;
-                    json::to_string(&response_json(id, resp, opts.top, catalog))
+                    json::to_string(&response_json(
+                        id,
+                        resp,
+                        opts.top,
+                        catalog,
+                        request_opts[*slot].audit,
+                    ))
                 }
                 Err(e) => {
                     stats.errors += 1;
@@ -952,5 +1072,110 @@ mod tests {
         let good = r#"{"model":"llama2-7b","gpu":"a800","gpus":16}"#;
         let stats = run_batch_lines(&svc, good, &mut out, &ServeOpts::default()).unwrap();
         assert_eq!((stats.ok, stats.errors), (1, 0));
+    }
+
+    #[test]
+    fn parse_audit_flag() {
+        let reg = ModelRegistry::builtin();
+        let v = json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64}"#).unwrap();
+        assert!(!parse_request(&v, &catalog(), &reg).unwrap().audit, "default is off");
+        let v = json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64,"audit":true}"#)
+            .unwrap();
+        assert!(parse_request(&v, &catalog(), &reg).unwrap().audit);
+        let v = json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64,"audit":false}"#)
+            .unwrap();
+        assert!(!parse_request(&v, &catalog(), &reg).unwrap().audit);
+        // Non-boolean audit is a typed json error, not a silent default.
+        let v =
+            json::parse(r#"{"model":"llama2-7b","gpu":"a800","gpus":64,"audit":1}"#).unwrap();
+        assert_eq!(parse_request(&v, &catalog(), &reg).unwrap_err().kind(), "json");
+    }
+
+    #[test]
+    fn audited_request_carries_audit_and_unaudited_never_does() {
+        let svc = crate::service::SearchService::new(
+            crate::service::tests::small_core(),
+            crate::service::ServiceConfig::default(),
+        );
+        let input = r#"{"id":"a1","model":"llama2-7b","gpu":"a800","gpus":16,"audit":true}"#;
+        let mut out = Vec::new();
+        run_batch_lines(&svc, input, &mut out, &ServeOpts::default()).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+        let audit = v.get("audit").expect("audited response carries an audit object");
+        assert_eq!(audit.pointer("/astra_audit").and_then(Value::as_u64), Some(1));
+        // Decisions partition the audited pool set.
+        let pools = audit.get("pools").and_then(Value::as_u64).unwrap();
+        let admitted = audit.get("admitted").and_then(Value::as_u64).unwrap();
+        let pb = audit.get("pruned_budget").and_then(Value::as_u64).unwrap();
+        let pd = audit.get("pruned_dominated").and_then(Value::as_u64).unwrap();
+        assert_eq!(pools, admitted + pb + pd);
+        assert!(pools > 0, "a homogeneous search audits its one pool");
+        // The engine counters carry the prune split everywhere.
+        assert!(v.pointer("/engine/pruned_budget").is_some());
+        assert!(v.pointer("/engine/pruned_dominated").is_some());
+        // An unaudited repeat of the same request hits the cache — whose
+        // stored report DOES carry an audit — and must not leak it.
+        let input = r#"{"id":"a2","model":"llama2-7b","gpu":"a800","gpus":16}"#;
+        let mut out = Vec::new();
+        run_batch_lines(&svc, input, &mut out, &ServeOpts::default()).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.opt_str("source"), Some("cache"));
+        assert!(v.get("audit").is_none(), "audit rides only when asked for");
+        // An audited repeat served from that same cache entry gets the
+        // stored audit back without re-searching.
+        let input = r#"{"id":"a3","model":"llama2-7b","gpu":"a800","gpus":16,"audit":true}"#;
+        let mut out = Vec::new();
+        run_batch_lines(&svc, input, &mut out, &ServeOpts::default()).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.opt_str("source"), Some("cache"));
+        assert!(v.get("audit").is_some(), "cached audit is served back");
+    }
+
+    #[test]
+    fn health_line_reports_ready_and_normalizes_stably() {
+        let svc = crate::service::SearchService::new(
+            crate::service::tests::small_core(),
+            crate::service::ServiceConfig::default(),
+        );
+        let input = "{\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":16}\n{\"cmd\":\"health\",\"id\":\"h\"}";
+        let mut out = Vec::new();
+        let stats = run_batch_lines(&svc, input, &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!((stats.ok, stats.errors), (2, 0));
+        let text = String::from_utf8(out).unwrap();
+        let line = text.lines().nth(1).unwrap();
+        let v = json::parse(line).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.opt_str("id"), Some("h"));
+        assert_eq!(
+            v.pointer("/health/ready").and_then(Value::as_bool),
+            Some(true),
+            "unbounded queue is always ready"
+        );
+        // This batch's request landed in the window (histograms are
+        // process-global so other tests may add more — never fewer).
+        let reqs = v.pointer("/health/window/requests").and_then(Value::as_u64).unwrap();
+        assert!(reqs >= 1, "the batch's own request is in the window");
+        assert!(
+            v.pointer("/health/window/modes/homogeneous").is_some(),
+            "every mode is present in the window"
+        );
+        assert!(v.pointer("/health/warm_restore").is_some(), "warm state is reported");
+        // Normalization: readiness and shape pinned, numbers zeroed,
+        // traffic-dependent per-mode payloads collapsed.
+        let norm = json::parse(&normalize_response_line(line).unwrap()).unwrap();
+        assert_eq!(norm.pointer("/health/ready").and_then(Value::as_bool), Some(true));
+        assert_eq!(
+            norm.pointer("/health/window/requests").and_then(Value::as_f64),
+            Some(0.0)
+        );
+        assert!(norm
+            .pointer("/health/window/modes/homogeneous")
+            .and_then(Value::as_obj)
+            .unwrap()
+            .is_empty());
     }
 }

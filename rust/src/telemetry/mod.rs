@@ -62,18 +62,25 @@
 //! | `astra_requests_deadline_total` | counter | requests ended by their deadline |
 //! | `astra_requests_panicked_total` | counter | request panics caught and isolated |
 //! | `astra_faults_injected_total` | counter | failpoint firings ([`crate::resilience::failpoint`]) |
+//! | `astra_audited_searches_total` | counter | searches that carried a decision audit |
+//! | `astra_health_checks_total` | counter | `{"cmd":"health"}` / `astra health` probes answered |
 //! | `astra_admission_queue_depth` | gauge | distinct requests in fan-out |
 //! | `astra_memo_scopes` | gauge | live memo scopes |
 //! | `astra_persist_snapshot_bytes` | gauge | last snapshot size on disk |
 //! | `astra_search_e2e_seconds` | histogram | per-search end-to-end time |
 //! | `astra_phase_{compile,speculate,expand_rules,mem_filter,score,hlo_pack}_seconds` | histogram | per-search phase times |
+//! | `astra_request_{homogeneous,heterogeneous,cost,hetero_cost,frontier}_seconds` | histogram | served request latency per mode (the [`window`] health quantiles read these) |
 //!
+//! The set is *pinned*: [`core_metric_names`] returns exactly this table
+//! and `rust/tests/metrics_names.rs` asserts it matches the golden README
+//! table — rename or add a metric and both must move together.
 //! Use the [`counter!`](crate::telemetry_counter)/[`gauge!`](crate::telemetry_gauge)/
 //! [`histogram!`](crate::telemetry_histogram) macros for one-line call
 //! sites: they cache the resolved handle in a per-call-site static, so the
 //! registry lock is paid once per site, not per event.
 
 pub mod trace;
+pub mod window;
 
 use crate::json::Value;
 use std::collections::BTreeMap;
@@ -142,7 +149,7 @@ const HIST_BUCKETS: usize = 40;
 const HIST_MIN_BOUND: f64 = 1.0 / 1048576.0;
 
 /// Upper bound (`le`) of finite bucket `i` in seconds.
-fn bucket_bound(i: usize) -> f64 {
+pub(crate) fn bucket_bound(i: usize) -> f64 {
     let mut b = HIST_MIN_BOUND;
     for _ in 0..i {
         b *= 2.0;
@@ -283,51 +290,80 @@ pub fn metric_count() -> usize {
     registry().metrics.lock().unwrap().len()
 }
 
+/// The pinned well-known counter names (the module-doc table).
+pub const CORE_COUNTERS: &[&str] = &[
+    "astra_searches_total",
+    "astra_strategies_generated_total",
+    "astra_strategies_scored_total",
+    "astra_cache_hits_total",
+    "astra_cache_misses_total",
+    "astra_cache_insertions_total",
+    "astra_cache_evictions_total",
+    "astra_cache_expirations_total",
+    "astra_cache_oversize_rejects_total",
+    "astra_memo_hits_total",
+    "astra_memo_misses_total",
+    "astra_persist_scopes_spilled_total",
+    "astra_persist_scopes_restored_total",
+    "astra_persist_scopes_rejected_total",
+    "astra_persist_scopes_dropped_total",
+    "astra_persist_cache_spilled_total",
+    "astra_persist_cache_restored_total",
+    "astra_trace_events_total",
+    "astra_requests_shed_total",
+    "astra_requests_deadline_total",
+    "astra_requests_panicked_total",
+    "astra_faults_injected_total",
+    "astra_audited_searches_total",
+    "astra_health_checks_total",
+];
+
+/// The pinned well-known gauge names.
+pub const CORE_GAUGES: &[&str] =
+    &["astra_admission_queue_depth", "astra_memo_scopes", "astra_persist_snapshot_bytes"];
+
+/// The pinned well-known histogram names. The `astra_request_*_seconds`
+/// family is one histogram per [`crate::strategy::GpuPoolMode`] variant —
+/// the health window ([`window`]) reads its quantiles from these.
+pub const CORE_HISTOGRAMS: &[&str] = &[
+    "astra_search_e2e_seconds",
+    "astra_phase_compile_seconds",
+    "astra_phase_speculate_seconds",
+    "astra_phase_expand_rules_seconds",
+    "astra_phase_mem_filter_seconds",
+    "astra_phase_score_seconds",
+    "astra_phase_hlo_pack_seconds",
+    "astra_request_homogeneous_seconds",
+    "astra_request_heterogeneous_seconds",
+    "astra_request_cost_seconds",
+    "astra_request_hetero_cost_seconds",
+    "astra_request_frontier_seconds",
+];
+
+/// Every pinned well-known metric name, counters → gauges → histograms.
+/// The drift guard (`rust/tests/metrics_names.rs`) asserts this set is
+/// exactly the golden README's metric table.
+pub fn core_metric_names() -> Vec<&'static str> {
+    CORE_COUNTERS
+        .iter()
+        .chain(CORE_GAUGES.iter())
+        .chain(CORE_HISTOGRAMS.iter())
+        .copied()
+        .collect()
+}
+
 /// Pre-register the full well-known metric set (the module-doc table) so a
 /// fresh process dumps the whole picture — zeros included — instead of
 /// only the names whose code paths happened to run. Called from
 /// [`crate::coordinator::ScoringCore::new`]; idempotent.
 pub fn register_core_metrics() {
-    for name in [
-        "astra_searches_total",
-        "astra_strategies_generated_total",
-        "astra_strategies_scored_total",
-        "astra_cache_hits_total",
-        "astra_cache_misses_total",
-        "astra_cache_insertions_total",
-        "astra_cache_evictions_total",
-        "astra_cache_expirations_total",
-        "astra_cache_oversize_rejects_total",
-        "astra_memo_hits_total",
-        "astra_memo_misses_total",
-        "astra_persist_scopes_spilled_total",
-        "astra_persist_scopes_restored_total",
-        "astra_persist_scopes_rejected_total",
-        "astra_persist_scopes_dropped_total",
-        "astra_persist_cache_spilled_total",
-        "astra_persist_cache_restored_total",
-        "astra_trace_events_total",
-        "astra_requests_shed_total",
-        "astra_requests_deadline_total",
-        "astra_requests_panicked_total",
-        "astra_faults_injected_total",
-    ] {
+    for name in CORE_COUNTERS {
         let _ = counter(name);
     }
-    for name in
-        ["astra_admission_queue_depth", "astra_memo_scopes", "astra_persist_snapshot_bytes"]
-    {
+    for name in CORE_GAUGES {
         let _ = gauge(name);
     }
-    for name in [
-        "astra_search_e2e_seconds",
-        "astra_phase_compile_seconds",
-        "astra_phase_speculate_seconds",
-        "astra_phase_expand_rules_seconds",
-        "astra_phase_mem_filter_seconds",
-        "astra_phase_score_seconds",
-        "astra_phase_hlo_pack_seconds",
-    ] {
+    for name in CORE_HISTOGRAMS {
         let _ = histogram(name);
     }
 }

@@ -1,0 +1,194 @@
+//! Rolling-window arithmetic over registry snapshots — the math behind
+//! `{"cmd":"health"}` / `astra health`.
+//!
+//! The registry's counters and histograms are *cumulative* since process
+//! start. A live health surface wants *recent* behavior: p50/p95/p99
+//! latency and hit/shed/deadline/panic rates over the last window, not
+//! since boot. This module computes both from **snapshot deltas**: the
+//! service keeps the previous snapshot as a baseline, takes a fresh one
+//! per health check, and the difference is exactly the window's traffic.
+//!
+//! Deliberately lock-free with respect to the search path: a
+//! [`HistSnapshot`] reads only the histogram's relaxed atomics (the same
+//! reads `{"cmd":"metrics"}` does) — no search-path lock is ever taken,
+//! so a health probe can't stall or be stalled by admissions.
+//!
+//! Quantiles come from the log₂ bucket layout (see
+//! [`super::Histogram`]): the estimate walks the delta's cumulative
+//! counts to the target rank and linearly interpolates inside the
+//! containing bucket. With doubling buckets the estimate is within 2× of
+//! the true latency — exactly the precision a readiness probe needs, for
+//! free, from data the registry already collects.
+
+use super::{bucket_bound, Histogram, HIST_BUCKETS};
+
+/// A point-in-time copy of one histogram's non-cumulative bucket counts
+/// (overflow last) plus the total observation count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    buckets: Vec<u64>,
+    count: u64,
+}
+
+impl HistSnapshot {
+    /// Snapshot a live histogram (relaxed atomic reads only).
+    pub fn of(h: &Histogram) -> HistSnapshot {
+        HistSnapshot { buckets: h.bucket_counts(), count: h.count() }
+    }
+
+    /// The all-zero snapshot — the baseline before any health check, so
+    /// the first window covers everything since process start.
+    pub fn zero() -> HistSnapshot {
+        HistSnapshot { buckets: vec![0; HIST_BUCKETS + 1], count: 0 }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// `self - earlier`, per bucket, saturating at zero. Counters only
+    /// grow, so a negative delta means mismatched snapshots — saturation
+    /// keeps the window honest instead of panicking in a probe.
+    pub fn delta(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let n = self.buckets.len().max(earlier.buckets.len());
+        let at = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+        HistSnapshot {
+            buckets: (0..n)
+                .map(|i| at(&self.buckets, i).saturating_sub(at(&earlier.buckets, i)))
+                .collect(),
+            count: self.count.saturating_sub(earlier.count),
+        }
+    }
+
+    /// Quantile estimate (`q` in `[0,1]`) by linear interpolation inside
+    /// the log₂ bucket containing the target rank; `None` when the window
+    /// saw no observations. Overflow-bucket ranks clamp to the top finite
+    /// bound (there is no upper edge to interpolate toward).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut before = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if before + n >= rank {
+                if i == HIST_BUCKETS {
+                    return Some(bucket_bound(HIST_BUCKETS - 1));
+                }
+                let lower = if i == 0 { 0.0 } else { bucket_bound(i - 1) };
+                let upper = bucket_bound(i);
+                let frac = (rank - before) as f64 / n as f64;
+                return Some(lower + frac * (upper - lower));
+            }
+            before += n;
+        }
+        // Unreachable (total > 0 guarantees the loop returns); harmless.
+        None
+    }
+}
+
+/// The p50/p95/p99 triple of one window, `None` when the window is empty.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Convenience: all three health percentiles of a delta snapshot at once.
+pub fn percentiles(d: &HistSnapshot) -> Option<Percentiles> {
+    Some(Percentiles {
+        p50: d.quantile(0.50)?,
+        p95: d.quantile(0.95)?,
+        p99: d.quantile(0.99)?,
+    })
+}
+
+/// Windowed rate `num/den` with the zero-traffic convention `0/0 = 0`
+/// (an idle window is healthy, not NaN).
+pub fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_subtracts_per_bucket_and_saturates() {
+        let h = Histogram::default();
+        h.observe(0.5);
+        h.observe(0.5);
+        let early = HistSnapshot::of(&h);
+        h.observe(0.5);
+        h.observe(4.0);
+        let late = HistSnapshot::of(&h);
+        let d = late.delta(&early);
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.buckets.iter().sum::<u64>(), 2);
+        // Mismatched order saturates to zero instead of underflowing.
+        let rev = early.delta(&late);
+        assert_eq!(rev.count(), 0);
+        assert_eq!(rev.buckets.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn empty_window_has_no_quantiles() {
+        assert_eq!(HistSnapshot::zero().quantile(0.5), None);
+        assert!(percentiles(&HistSnapshot::zero()).is_none());
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bucket_accurate() {
+        let h = Histogram::default();
+        // 90 fast observations, 10 slow ones: p50 must sit near the fast
+        // bucket, p99 near the slow one.
+        for _ in 0..90 {
+            h.observe(0.01);
+        }
+        for _ in 0..10 {
+            h.observe(2.0);
+        }
+        let d = HistSnapshot::of(&h).delta(&HistSnapshot::zero());
+        let p = percentiles(&d).unwrap();
+        assert!(p.p50 <= p.p95 && p.p95 <= p.p99, "quantiles must be monotone: {p:?}");
+        // Log₂ buckets bound the estimate within 2× of the truth.
+        assert!(p.p50 > 0.005 && p.p50 <= 0.02, "p50 {p:?}");
+        assert!(p.p99 > 1.0 && p.p99 <= 4.0, "p99 {p:?}");
+    }
+
+    #[test]
+    fn single_bucket_interpolates_inside_its_bounds() {
+        let h = Histogram::default();
+        for _ in 0..4 {
+            h.observe(0.75); // bucket (0.5, 1.0]
+        }
+        let d = HistSnapshot::of(&h).delta(&HistSnapshot::zero());
+        for q in [0.25, 0.5, 0.99] {
+            let v = d.quantile(q).unwrap();
+            assert!(v > 0.5 && v <= 1.0, "q={q} → {v} must stay inside the bucket");
+        }
+    }
+
+    #[test]
+    fn overflow_ranks_clamp_to_the_top_finite_bound() {
+        let h = Histogram::default();
+        h.observe(f64::INFINITY);
+        let d = HistSnapshot::of(&h).delta(&HistSnapshot::zero());
+        assert_eq!(d.quantile(0.5), Some(bucket_bound(HIST_BUCKETS - 1)));
+    }
+
+    #[test]
+    fn ratio_treats_idle_as_zero() {
+        assert_eq!(ratio(0, 0), 0.0);
+        assert_eq!(ratio(1, 4), 0.25);
+    }
+}

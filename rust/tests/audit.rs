@@ -1,0 +1,293 @@
+//! Property tests for the search decision audit (`coordinator::audit`):
+//! every recorded prune must carry evidence that *certifies* it, the
+//! audited pool set must exactly partition the compiled plan's pool set,
+//! and the candidate funnel must conserve candidates. These are the
+//! machine-checkable halves of the determinism contract documented on
+//! `astra::coordinator::audit` (the byte-identity half lives in
+//! `rust/tests/determinism.rs`).
+//!
+//! Certification means re-deriving each decision from its own evidence:
+//! a `pruned_budget` pool must satisfy `lb_usd > budget` with the pool's
+//! own lower bound and the request's own ceiling; a `pruned_dominated`
+//! pool's recorded frontier point must be at least as fast as the pool's
+//! upper-bound throughput AND at most as expensive as its lower-bound
+//! bill — the exact predicate `DominancePruner::admit` prunes on.
+
+use astra::coordinator::{
+    AstraEngine, AuditDecision, EngineConfig, SearchRequest,
+};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::strategy::SpaceConfig;
+
+fn small_space() -> SpaceConfig {
+    SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 4,
+        mbs_candidates: vec![1, 2],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    }
+}
+
+fn engine(workers: usize, sweep_wave: usize) -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig {
+            use_forests: false,
+            workers,
+            sweep_wave,
+            space: small_space(),
+            ..Default::default()
+        },
+    )
+}
+
+fn hetero_cost_req(budget: f64) -> SearchRequest {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8), ("v100", 8)], budget, model).unwrap()
+}
+
+/// Deterministic budget generator (LCG) so the property sweeps a seeded
+/// spread of ceilings — from prune-everything-tight to prune-nothing-loose —
+/// without depending on an RNG crate or wall-clock entropy.
+fn seeded_budgets(seed: u64, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    let mut state = seed;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let unit = (state >> 11) as f64 / (1u64 << 53) as f64;
+            lo + unit * (hi - lo)
+        })
+        .collect()
+}
+
+/// Every prune in the audit is certified by its own evidence, and the
+/// evidence is copied verbatim from the pool's bounds and the request's
+/// budget — across a seeded spread of budgets.
+///
+/// The budgets are derived, not guessed: a free (infinite-budget) search
+/// learns the cost scale, and the spread covers the floor below every
+/// pool's lower bound (everything must budget-prune) through the band
+/// just above the cheapest frontier point where `diff_streaming.rs`
+/// proves pruning has real work.
+#[test]
+fn every_prune_is_certified_by_its_evidence() {
+    let free = engine(1, 1).search(&hetero_cost_req(f64::INFINITY)).unwrap();
+    let cheap = free.pool.entries().last().expect("empty frontier").cost;
+    let plan = engine(4, 2).core().compile_plan(&hetero_cost_req(f64::INFINITY)).unwrap();
+    let min_lb = plan
+        .rounds
+        .iter()
+        .flat_map(|r| r.pools.iter())
+        .map(|p| p.lb_usd)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        min_lb.is_finite() && min_lb > 0.0,
+        "hetero-cost pools must carry positive lower-bound bills, got {min_lb}"
+    );
+    let mut budgets = vec![min_lb * 0.5, cheap * 1.05, cheap * 2.0];
+    budgets.extend(seeded_budgets(0xA57_2A, 3, cheap * 1.05, cheap * 2.0));
+    let mut saw_budget_prune = false;
+    let mut saw_dominance_prune = false;
+    for budget in budgets {
+        let req = hetero_cost_req(budget);
+        let report = engine(4, 2).search_audited(&req).unwrap();
+        let audit = report.audit.as_ref().expect("audited search carries an audit");
+        for round in &audit.rounds {
+            for p in &round.pools {
+                match p.decision {
+                    AuditDecision::Admitted => {
+                        assert!(
+                            p.funnel.is_some(),
+                            "budget {budget:.0}: admitted pool {}/{} has no funnel",
+                            round.round,
+                            p.pool
+                        );
+                    }
+                    AuditDecision::PrunedBudget { lb_usd, budget: b } => {
+                        saw_budget_prune = true;
+                        assert!(
+                            lb_usd > b,
+                            "budget {budget:.0}: pool {}/{} pruned on budget but \
+                             lb ${lb_usd} ≤ ${b}",
+                            round.round,
+                            p.pool
+                        );
+                        assert_eq!(
+                            lb_usd.to_bits(),
+                            p.lb_usd.to_bits(),
+                            "evidence lb must be the pool's own lower bound"
+                        );
+                        assert_eq!(
+                            b.to_bits(),
+                            budget.to_bits(),
+                            "evidence budget must be the request's ceiling"
+                        );
+                    }
+                    AuditDecision::PrunedDominated { by: (tput, usd) } => {
+                        saw_dominance_prune = true;
+                        assert!(
+                            tput >= p.ub_tput && usd <= p.lb_usd,
+                            "budget {budget:.0}: pool {}/{} pruned as dominated but \
+                             ({tput}, {usd}) does not dominate bounds ({}, {})",
+                            round.round,
+                            p.pool,
+                            p.ub_tput,
+                            p.lb_usd
+                        );
+                    }
+                }
+            }
+        }
+        // The report's prune split is exactly the audit's.
+        assert_eq!(report.pruned_budget, audit.pruned_budget(), "budget {budget:.0}");
+        assert_eq!(report.pruned_dominated, audit.pruned_dominated(), "budget {budget:.0}");
+        assert_eq!(
+            report.pruned_pools,
+            report.pruned_budget + report.pruned_dominated,
+            "budget {budget:.0}: prune split must sum to the total"
+        );
+    }
+    // The floor budget sits below every pool's lower bound, so budget
+    // prunes are guaranteed to have been exercised. Dominance prunes are
+    // workload-shaped; record whether the sweep saw them so a silent
+    // weakening shows up in test output.
+    assert!(saw_budget_prune, "the sub-lower-bound floor budget pruned nothing");
+    if !saw_dominance_prune {
+        eprintln!("audit: note — this sweep exercised no dominance prunes");
+    }
+}
+
+/// The audited pool set partitions the compiled plan's pool set exactly:
+/// same rounds, same totals, same pool count per round, pools in replay
+/// (index) order — no pool unaccounted for, none invented.
+#[test]
+fn audit_partitions_the_plan_pool_set() {
+    for budget in [5e4, f64::INFINITY] {
+        let req = hetero_cost_req(budget);
+        let eng = engine(4, 2);
+        let plan = eng.core().compile_plan(&req).unwrap();
+        let report = eng.search_audited(&req).unwrap();
+        let audit = report.audit.as_ref().expect("audit");
+        assert_eq!(audit.rounds.len(), plan.rounds.len(), "budget {budget}: round count");
+        for (ar, pr) in audit.rounds.iter().zip(&plan.rounds) {
+            assert_eq!(ar.total, pr.total, "round {} GPU total", ar.round);
+            assert_eq!(
+                ar.pools.len(),
+                pr.pools.len(),
+                "round {}: audited pools must cover the plan's pools",
+                ar.round
+            );
+            for (i, p) in ar.pools.iter().enumerate() {
+                assert_eq!(p.pool, i, "round {}: pools must be in replay order", ar.round);
+            }
+        }
+        assert_eq!(
+            audit.pool_count(),
+            audit.admitted() + audit.pruned_budget() + audit.pruned_dominated(),
+            "decisions must partition the audited set"
+        );
+    }
+}
+
+/// Candidate conservation through the funnel: every expanded candidate is
+/// either rejected by rules, rejected by the memory model, or scored.
+#[test]
+fn admitted_funnels_conserve_candidates() {
+    // Infinite budget: no budget prunes, so admitted pools (and their
+    // funnels) are guaranteed to exist.
+    let req = hetero_cost_req(f64::INFINITY);
+    let report = engine(4, 2).search_audited(&req).unwrap();
+    let audit = report.audit.as_ref().expect("audit");
+    let mut funnels = 0usize;
+    for round in &audit.rounds {
+        for p in &round.pools {
+            let Some(f) = p.funnel else { continue };
+            funnels += 1;
+            assert_eq!(
+                f.expanded,
+                f.rules_rejected + f.mem_rejected + f.scored,
+                "round {} pool {}: candidates leaked from the funnel",
+                round.round,
+                p.pool
+            );
+        }
+    }
+    assert!(funnels > 0, "no pool carried a funnel — the property is vacuous");
+    // The report's global funnel is the sum of the admitted pools' funnels.
+    let sum = |pick: fn(&astra::coordinator::AuditFunnel) -> usize| -> usize {
+        audit
+            .rounds
+            .iter()
+            .flat_map(|r| r.pools.iter())
+            .filter(|p| p.decision.is_admitted())
+            .filter_map(|p| p.funnel.as_ref().map(pick))
+            .sum()
+    };
+    assert_eq!(report.generated, sum(|f| f.expanded), "generated != Σ expanded");
+    assert_eq!(report.rule_filtered, sum(|f| f.rules_rejected), "rule_filtered != Σ rules");
+    assert_eq!(report.mem_filtered, sum(|f| f.mem_rejected), "mem_filtered != Σ mem");
+    assert_eq!(report.scored, sum(|f| f.scored), "scored != Σ scored");
+}
+
+/// The margins block mirrors the final ranking: the winner is `top[0]`,
+/// the runner-up is `top[1]`, and each margin is the literal difference.
+#[test]
+fn margins_mirror_the_final_ranking() {
+    // Infinite budget guarantees a non-empty ranking to take margins of.
+    let req = hetero_cost_req(f64::INFINITY);
+    let report = engine(4, 2).search_audited(&req).unwrap();
+    let audit = report.audit.as_ref().expect("audit");
+    let m = audit.margins.as_ref().expect("a non-empty search has margins");
+    let top0 = &report.top[0];
+    assert_eq!(m.winner.summary, top0.strategy.summary());
+    assert_eq!(m.winner.step_time_s.to_bits(), top0.cost.step_time.to_bits());
+    assert_eq!(m.winner.tokens_per_s.to_bits(), top0.cost.tokens_per_s.to_bits());
+    assert_eq!(m.winner.money_usd.to_bits(), top0.money_usd.to_bits());
+    match (&m.runner_up, report.top.get(1)) {
+        (Some(r), Some(top1)) => {
+            assert_eq!(r.summary, top1.strategy.summary());
+            assert_eq!(
+                m.step_time_margin_s.to_bits(),
+                (top1.cost.step_time - top0.cost.step_time).to_bits()
+            );
+            assert_eq!(
+                m.tokens_per_s_margin.to_bits(),
+                (top0.cost.tokens_per_s - top1.cost.tokens_per_s).to_bits()
+            );
+            assert_eq!(
+                m.money_margin_usd.to_bits(),
+                (top0.money_usd - top1.money_usd).to_bits()
+            );
+        }
+        (None, None) => {}
+        (got, want) => panic!(
+            "runner-up mismatch: audit {:?} vs ranking {:?}",
+            got.is_some(),
+            want.is_some()
+        ),
+    }
+}
+
+/// An unaudited search carries no audit, on every mode — the plane is
+/// strictly opt-in.
+#[test]
+fn unaudited_searches_carry_no_audit() {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let reqs = vec![
+        SearchRequest::homogeneous("a800", 16, model.clone()).unwrap(),
+        SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8)], 1e5, model).unwrap(),
+    ];
+    let eng = engine(4, 2);
+    for req in reqs {
+        assert!(eng.search(&req).unwrap().audit.is_none());
+        assert!(eng.search_audited(&req).unwrap().audit.is_some());
+    }
+}

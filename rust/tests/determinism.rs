@@ -156,6 +156,61 @@ fn telemetry_and_tracing_do_not_change_reports() {
     }
 }
 
+/// The decision audit is a view switch, not a different search: on every
+/// mode the canonical report JSON is byte-identical with auditing on or
+/// off (`report_json` never serializes the audit field).
+#[test]
+fn audit_does_not_change_report_json() {
+    for (name, req) in requests() {
+        let plain = canon(&engine(true, 4, 2), &req);
+        let audited_rep = engine(true, 4, 2).search_audited(&req).unwrap();
+        assert!(audited_rep.audit.is_some(), "mode {name}: audited search lost its audit");
+        let audited =
+            astra::json::to_string(&report_json(&audited_rep, &GpuCatalog::builtin()));
+        assert_eq!(plain, audited, "mode {name}: auditing changed the canonical report");
+    }
+}
+
+/// The canonical audit JSON collapses the whole executor schedule matrix
+/// to one byte string: workers 1/2/4/8 × waves 1/2/64 on the three-type
+/// hetero-cost sweep all replay the same (round, pool) decisions against
+/// the same true frontier — so `report::audit_json` (which excludes the
+/// load-dependent wave/memo observability) cannot tell them apart.
+#[test]
+fn audit_json_is_schedule_invariant() {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    let caps = [("a800", 8), ("h100", 8), ("v100", 8)];
+    // Learn the cost scale free of any budget, then pin one just above the
+    // cheapest frontier point — the band where `diff_streaming.rs` proves
+    // the pruner has real work, so the schedule pin is never vacuous.
+    let free = engine(true, 1, 1)
+        .search(&SearchRequest::hetero_cost(&caps, f64::INFINITY, model.clone()).unwrap())
+        .unwrap();
+    let cheap = free.pool.entries().last().expect("empty frontier").cost;
+    let req = SearchRequest::hetero_cost(&caps, cheap * 1.05, model).unwrap();
+    let audit_canon = |workers: usize, wave: usize| {
+        let rep = engine(true, workers, wave).search_audited(&req).unwrap();
+        let v = astra::report::audit_json(&rep).expect("audited search emits audit JSON");
+        astra::json::to_string(&v)
+    };
+    let baseline = audit_canon(1, 1);
+    let v = astra::json::parse(&baseline).unwrap();
+    let count = |k: &str| v.get(k).and_then(astra::json::Value::as_u64).unwrap_or(0);
+    assert!(
+        count("pruned_budget") + count("pruned_dominated") > 0,
+        "sweep produced no prunes — the schedule pin would be vacuous"
+    );
+    for workers in [1, 2, 4, 8] {
+        for wave in [1, 2, 64] {
+            assert_eq!(
+                audit_canon(workers, wave),
+                baseline,
+                "workers={workers} wave={wave}: audit drifted from the serial schedule"
+            );
+        }
+    }
+}
+
 /// The per-phase breakdown is not an estimate alongside the wall fields —
 /// it *is* the wall fields: `search_secs` and `simulate_secs` are derived
 /// from the phase sums, so they agree bit-for-bit.

@@ -32,8 +32,12 @@ use std::path::PathBuf;
 /// request plus its cache-repeat (pins the reprice-from-cache path on the
 /// wire), five error shapes (including two typed `deadline`/`config`
 /// refusals), a deadline-exempt cache hit, a stats line and a metrics
-/// line. One request per admitted batch (max_batch 1) keeps sources
-/// deterministic (`search`/`cache`, never `coalesced`).
+/// line — then one *audited* hetero-cost request (a distinct budget, so
+/// it searches rather than hitting `hc`'s cache entry and the response
+/// carries a fresh decision audit) and a health line (normalized: `ready`
+/// and shape pinned, load-dependent window numbers zeroed). One request
+/// per admitted batch (max_batch 1) keeps sources deterministic
+/// (`search`/`cache`, never `coalesced`).
 const SCRIPT: &str = "\
 {\"id\":\"homog\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
 {\"id\":\"repeat\",\"model\":\"llama2-7b\",\"gpu\":\"a800\",\"gpus\":8}\n\
@@ -49,7 +53,9 @@ not json at all\n\
 {\"id\":\"dlcold\",\"model\":\"llama2-13b\",\"gpu\":\"a800\",\"gpus\":8,\"deadline_ms\":0}\n\
 {\"id\":\"badmode\",\"model\":\"llama2-7b\",\"mode\":\"quantum\",\"gpus\":8}\n\
 {\"cmd\":\"stats\",\"id\":\"stats\"}\n\
-{\"cmd\":\"metrics\",\"id\":\"metrics\"}\n";
+{\"cmd\":\"metrics\",\"id\":\"metrics\"}\n\
+{\"id\":\"hcaudit\",\"model\":\"llama2-7b\",\"mode\":\"hetero-cost\",\"caps\":{\"a800\":4,\"h100\":4},\"max_money\":50000,\"audit\":true}\n\
+{\"cmd\":\"health\",\"id\":\"health\"}\n";
 
 /// Deterministic engine: analytic η (no forest dependence), fixed narrow
 /// space so the transcript stays small and debug-profile CI fast.
@@ -92,7 +98,7 @@ fn run_script() -> String {
     let mut out: Vec<u8> = Vec::new();
     let opts = ServeOpts { max_batch: 1, top: 1, ..Default::default() };
     let stats = run_batch_lines(&svc, SCRIPT, &mut out, &opts).unwrap();
-    assert_eq!(stats.lines, 15, "script drifted");
+    assert_eq!(stats.lines, 17, "script drifted");
     assert_eq!(stats.errors, 5, "exactly the five error lines fail");
     let text = String::from_utf8(out).unwrap();
     let mut normalized = String::new();
@@ -111,7 +117,7 @@ fn wire_protocol_matches_golden_transcript() {
     // hetero-cost line must be a well-formed success with a priced plan.
     let lines: Vec<astra::json::Value> =
         got.lines().map(|l| astra::json::parse(l).unwrap()).collect();
-    assert_eq!(lines.len(), 15);
+    assert_eq!(lines.len(), 17);
     assert_eq!(lines[1].opt_str("source"), Some("cache"), "repeat must hit the cache");
     // The metrics line is a success carrying the (normalized) registry
     // dump: the three metric families are present, values are zeroed.
@@ -187,6 +193,52 @@ fn wire_protocol_matches_golden_transcript() {
         lines[13].pointer("/stats/requests_panicked").and_then(astra::json::Value::as_f64),
         Some(0.0)
     );
+    // The audited request answers with the explain plane attached: a
+    // fresh search (distinct budget from `hc`) whose `audit` object
+    // partitions its pools and certifies every prune.
+    let hcaudit = &lines[15];
+    assert_eq!(hcaudit.opt_str("id"), Some("hcaudit"));
+    assert_eq!(hcaudit.get("ok").and_then(astra::json::Value::as_bool), Some(true));
+    assert_eq!(hcaudit.opt_str("source"), Some("search"), "hcaudit must not share hc's cache entry");
+    assert_eq!(
+        hcaudit.pointer("/audit/astra_audit").and_then(astra::json::Value::as_u64),
+        Some(1)
+    );
+    let n = |k: &str| {
+        hcaudit
+            .pointer(&format!("/audit/{k}"))
+            .and_then(astra::json::Value::as_u64)
+            .unwrap_or_else(|| panic!("audit missing {k}"))
+    };
+    assert_eq!(n("pools"), n("admitted") + n("pruned_budget") + n("pruned_dominated"));
+    assert!(
+        hcaudit.pointer("/audit/margins/winner/summary").is_some(),
+        "audit must explain the winner"
+    );
+    assert!(hcaudit.pointer("/engine/pruned_budget").is_some());
+    // The health line: readiness and shape are pinned; the load-dependent
+    // window numbers are zeroed and the per-mode objects emptied by
+    // normalization (the registry is process-global).
+    let health = &lines[16];
+    assert_eq!(health.opt_str("id"), Some("health"));
+    assert_eq!(health.get("ok").and_then(astra::json::Value::as_bool), Some(true));
+    assert_eq!(
+        health.pointer("/health/ready").and_then(astra::json::Value::as_bool),
+        Some(true),
+        "an unbounded queue is always ready"
+    );
+    assert_eq!(
+        health.pointer("/health/window/requests").and_then(astra::json::Value::as_f64),
+        Some(0.0),
+        "normalization must zero the window counts"
+    );
+    for mode in ["homogeneous", "heterogeneous", "cost", "hetero-cost", "frontier"] {
+        let modes = health
+            .pointer(&format!("/health/window/modes/{mode}"))
+            .and_then(astra::json::Value::as_obj)
+            .unwrap_or_else(|| panic!("health window missing mode {mode}"));
+        assert!(modes.is_empty(), "mode {mode} payload must be emptied by normalization");
+    }
 
     let path = golden_path();
     let regen = std::env::var("ASTRA_REGEN_GOLDEN").as_deref() == Ok("1");

@@ -1,0 +1,90 @@
+//! Metric-name drift guard: the golden README's metric table and the
+//! pinned `telemetry::core_metric_names()` list must describe exactly the
+//! same set. A metric added, renamed or dropped in code without a
+//! matching documentation row (or a documented metric that no longer
+//! exists) fails here — before an operator's dashboard finds out.
+//!
+//! The README may compress families with shell-style braces
+//! (`astra_request_{homogeneous,…}_seconds`); the parser expands them, so
+//! docs stay readable without weakening the guard.
+
+use std::collections::BTreeSet;
+
+/// Expand one `{a,b,c}` brace group (the table never nests them).
+fn expand_braces(name: &str) -> Vec<String> {
+    let (Some(open), Some(close)) = (name.find('{'), name.find('}')) else {
+        return vec![name.to_string()];
+    };
+    assert!(open < close, "malformed brace family in metric row: {name}");
+    let (head, rest) = name.split_at(open);
+    let body = &rest[1..close - open];
+    let tail = &rest[close - open + 1..];
+    assert!(
+        !tail.contains('{'),
+        "nested/multiple brace families are not supported: {name}"
+    );
+    body.split(',').map(|alt| format!("{head}{}{tail}", alt.trim())).collect()
+}
+
+/// Every metric name documented in the golden README's table, families
+/// expanded. Rows look like `` | `name` | type | meaning | ``.
+fn documented_names() -> BTreeSet<String> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/README.md");
+    let text = std::fs::read_to_string(path).expect("golden README must exist");
+    let mut names = BTreeSet::new();
+    for line in text.lines() {
+        let line = line.trim();
+        // A table row whose first cell is a backticked metric name.
+        let Some(cell) = line.strip_prefix("| `") else { continue };
+        let Some(end) = cell.find('`') else { continue };
+        let name = &cell[..end];
+        if !name.starts_with("astra_") {
+            continue;
+        }
+        for expanded in expand_braces(name) {
+            assert!(
+                names.insert(expanded.clone()),
+                "metric {expanded} documented twice in the golden README"
+            );
+        }
+    }
+    names
+}
+
+#[test]
+fn documented_metrics_match_the_pinned_registry_set() {
+    let documented = documented_names();
+    let pinned: BTreeSet<String> =
+        astra::telemetry::core_metric_names().into_iter().map(String::from).collect();
+    assert!(!pinned.is_empty(), "pinned metric list is empty");
+
+    let undocumented: Vec<_> = pinned.difference(&documented).collect();
+    let stale: Vec<_> = documented.difference(&pinned).collect();
+    assert!(
+        undocumented.is_empty() && stale.is_empty(),
+        "metric-name drift:\n  pinned but not in the golden README table: {undocumented:?}\n  \
+         documented but not pinned in telemetry::core_metric_names(): {stale:?}"
+    );
+}
+
+/// The pinned list itself is duplicate-free and well-formed — a duplicate
+/// would silently collapse in the set comparison above.
+#[test]
+fn pinned_names_are_unique_and_prefixed() {
+    let names = astra::telemetry::core_metric_names();
+    let set: BTreeSet<_> = names.iter().collect();
+    assert_eq!(set.len(), names.len(), "duplicate name in the pinned metric list");
+    for n in &names {
+        assert!(n.starts_with("astra_"), "unprefixed metric name: {n}");
+    }
+}
+
+/// The brace expander the guard relies on.
+#[test]
+fn brace_families_expand() {
+    assert_eq!(expand_braces("astra_x_total"), vec!["astra_x_total"]);
+    assert_eq!(
+        expand_braces("astra_request_{a,b}_seconds"),
+        vec!["astra_request_a_seconds", "astra_request_b_seconds"]
+    );
+}

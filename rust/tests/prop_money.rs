@@ -294,7 +294,7 @@ fn prop_pruner_never_rejects_improvements() {
             let lb = cost * rng.range_f64(0.5, 1.0);
             let improves = cost <= budget
                 && !scored.iter().any(|&(p, c)| p >= tput && c <= cost);
-            let admitted = pr.admit(ub, lb);
+            let admitted = pr.admit(ub, lb).is_admitted();
             if improves {
                 assert!(
                     admitted,
