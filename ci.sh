@@ -25,7 +25,10 @@
 #                       PJRT artifacts), or if repricing a held frontier
 #                       report under a rate-only price-book change beats a
 #                       cold re-search by less than the pinned factor
-#                       (ASTRA_BENCH_MIN_REPRICE_SPEEDUP, default 100×).
+#                       (ASTRA_BENCH_MIN_REPRICE_SPEEDUP, default 100×),
+#                       or if the flat-forest η batch kernel beats the
+#                       scalar per-row walk by less than the pinned factor
+#                       (ASTRA_BENCH_MIN_ETA_SPEEDUP, default 3×).
 #
 # Tier-1 also runs a persistence roundtrip through the release binary
 # (astra warm save → search --warm-load → diff of the canonical --json
@@ -201,12 +204,17 @@ if [ "${BENCH:-0}" = "1" ]; then
   # rate-only price-book change and must beat a cold re-search under the
   # same book by ≥100× (the reprice is arithmetic over the cached skeleton;
   # the cold search re-runs the whole sweep) while staying byte-identical.
+  # The eta_kernel floor pins the flat-forest batch kernel at ≥3× over the
+  # scalar per-row walk (the cold_forest end-to-end leg when trained
+  # artifacts exist, else the synthetic micro-leg), with bit-identical
+  # predictions asserted before timing.
   run env ASTRA_BENCH_FAST=1 \
       ASTRA_BENCH_OUT="$ROOT/BENCH_search.json" \
       ASTRA_BENCH_MIN_HIT_RATE="${ASTRA_BENCH_MIN_HIT_RATE:-0.50}" \
       ASTRA_BENCH_MIN_RESTORE_HIT_RATE="${ASTRA_BENCH_MIN_RESTORE_HIT_RATE:-0.50}" \
       ASTRA_BENCH_MIN_HLO_PARITY="${ASTRA_BENCH_MIN_HLO_PARITY:-1.0}" \
       ASTRA_BENCH_MIN_REPRICE_SPEEDUP="${ASTRA_BENCH_MIN_REPRICE_SPEEDUP:-100}" \
+      ASTRA_BENCH_MIN_ETA_SPEEDUP="${ASTRA_BENCH_MIN_ETA_SPEEDUP:-3}" \
       cargo bench --bench perf_search
   echo "ci.sh: BENCH_search.json written at the repo root — commit it to extend the perf trajectory" >&2
 fi

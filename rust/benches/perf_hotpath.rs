@@ -8,7 +8,8 @@
 use astra::bench_util::{section, Bench};
 use astra::cost::features::pack_batch;
 use astra::cost::{pipeline_time, CostModel, EtaProvider};
-use astra::gbdt::EtaForests;
+use astra::gbdt::{EtaForests, FlatForest, FlatScratch, Forest, Tree};
+use astra::prng::Rng;
 use astra::gpu::GpuCatalog;
 use astra::hetero::HeteroSolver;
 use astra::memory::MemoryModel;
@@ -73,6 +74,50 @@ fn main() {
         });
         println!("  → {:.0} evals/s", 512.0 / stats.mean_secs());
     }
+
+    // Forest inference: scalar per-row walk vs the flat level-synchronous
+    // SoA batch kernel (the η hot path behind the cost memo). Synthetic
+    // deterministic forest so the leg runs without trained artifacts;
+    // predictions are asserted bit-identical before the timings count.
+    let nf = astra::hw::COMP_FEATURES;
+    let mut rng = Rng::new(0x0e7a_5eed);
+    let trees: Vec<Tree> = (0..64)
+        .map(|_| {
+            let depth = 1 + rng.below(6) as usize;
+            let internal = (1usize << depth) - 1;
+            Tree {
+                depth,
+                feat: (0..internal).map(|_| rng.below(nf as u64) as u32).collect(),
+                thresh: (0..internal).map(|_| rng.range_f64(-2.0, 12.0) as f32).collect(),
+                leaf: (0..1usize << depth).map(|_| rng.range_f64(0.05, 1.2) as f32).collect(),
+            }
+        })
+        .collect();
+    let eta_forest = Forest { trees, base: 0.3, lr: 0.05, n_features: nf };
+    let flat = FlatForest::from_forest(&eta_forest);
+    let rows = 16_384usize;
+    let xs: Vec<f32> = (0..rows * nf).map(|_| rng.range_f64(-2.0, 12.0) as f32).collect();
+    let scalar_stats = bench.run("forest.predict ×16384 (scalar walk)", || {
+        xs.chunks_exact(nf).map(|row| eta_forest.predict(row) as f64).sum::<f64>()
+    });
+    let mut scratch = FlatScratch::default();
+    let mut flat_out: Vec<f32> = Vec::new();
+    let flat_stats = bench.run("flat.predict_batch ×16384 (SoA kernel)", || {
+        flat_out.clear(); // predict_batch_with appends
+        flat.predict_batch_with(&xs, nf, &mut scratch, &mut flat_out);
+        flat_out.iter().map(|&v| v as f64).sum::<f64>()
+    });
+    for (i, row) in xs.chunks_exact(nf).enumerate() {
+        assert_eq!(
+            eta_forest.predict(row).to_bits(),
+            flat_out[i].to_bits(),
+            "row {i}: flat kernel diverged from the scalar walk"
+        );
+    }
+    println!(
+        "  → flat kernel speedup {:.2}× (bit-identical predictions)",
+        scalar_stats.mean_secs() / flat_stats.mean_secs().max(1e-12)
+    );
 
     // Feature packing (the HLO-engine feed path).
     let refs: Vec<&astra::strategy::ParallelStrategy> = valid.iter().take(256).collect();

@@ -33,13 +33,22 @@
 //!   streamed per-pool path must pick the same strategy as the native
 //!   engine (parity 1.0 = identical best pick; fractional = top-3
 //!   overlap). Skipped with a notice when the PJRT artifacts are absent,
-//!   like `crosscheck_hw.rs`.
+//!   like `crosscheck_hw.rs`;
+//! * `ASTRA_BENCH_MIN_ETA_SPEEDUP=<ratio>` — exit nonzero if the η-kernel
+//!   speedup falls below this floor. The gated figure is the *cold_forest*
+//!   leg (cold search with forest η, `batch_eta` on vs off) when trained
+//!   artifacts exist, else the *eta_kernel* micro-leg (flat SoA batch
+//!   kernel vs the scalar per-row `Forest::predict` walk on a synthetic
+//!   deterministic forest). Both legs assert bit-identical predictions
+//!   before timing anything (`BENCH=1 ./ci.sh` pins 3×).
 
 use astra::bench_util::section;
 use astra::coordinator::{AstraEngine, EngineConfig, ScoringEngine, SearchReport, SearchRequest};
+use astra::gbdt::{EtaForests, FlatForest, FlatScratch, Forest, Tree};
 use astra::gpu::GpuCatalog;
 use astra::json::Value;
 use astra::model::ModelRegistry;
+use astra::prng::Rng;
 use std::time::Instant;
 
 fn engine() -> AstraEngine {
@@ -101,6 +110,25 @@ fn hlo_parity(native: &SearchReport, hlo: &SearchReport) -> f64 {
             shared as f64 / top_n.len() as f64
         }
     }
+}
+
+/// Deterministic synthetic η-forest: the micro-leg must run (and stay
+/// comparable across machines) without trained artifacts on disk.
+fn synthetic_eta_forest(seed: u64, n_features: usize) -> Forest {
+    let mut rng = Rng::new(seed);
+    let trees: Vec<Tree> = (0..64)
+        .map(|_| {
+            let depth = 1 + rng.below(6) as usize;
+            let internal = (1usize << depth) - 1;
+            Tree {
+                depth,
+                feat: (0..internal).map(|_| rng.below(n_features as u64) as u32).collect(),
+                thresh: (0..internal).map(|_| rng.range_f64(-2.0, 12.0) as f32).collect(),
+                leaf: (0..1usize << depth).map(|_| rng.range_f64(0.05, 1.2) as f32).collect(),
+            }
+        })
+        .collect();
+    Forest { trees, base: 0.3, lr: 0.05, n_features }
 }
 
 fn main() {
@@ -299,6 +327,89 @@ fn main() {
         repriced.pool.len()
     );
 
+    // --- η-kernel micro-leg: scalar per-row walk vs the flat SoA batch ---
+    // The scalar side mirrors the pre-batching production path exactly:
+    // one `Forest::predict` call per memo miss. Predictions must match
+    // bit-for-bit before any timing is reported. Best of 3 per side so a
+    // scheduler hiccup cannot poison the ratio.
+    let nf = astra::hw::COMP_FEATURES;
+    let eta_forest = synthetic_eta_forest(0x0e7a_5eed, nf);
+    let flat = FlatForest::from_forest(&eta_forest);
+    let rows = if fast { 20_000 } else { 200_000 };
+    let mut rng = Rng::new(0x0e7a_40b5);
+    let xs: Vec<f32> = (0..rows * nf).map(|_| rng.range_f64(-2.0, 12.0) as f32).collect();
+
+    let mut scalar_out: Vec<f32> = Vec::with_capacity(rows);
+    let mut scalar_kernel_secs = f64::INFINITY;
+    for _ in 0..3 {
+        scalar_out.clear();
+        let t = Instant::now();
+        for row in xs.chunks_exact(nf) {
+            scalar_out.push(eta_forest.predict(row));
+        }
+        scalar_kernel_secs = scalar_kernel_secs.min(t.elapsed().as_secs_f64());
+    }
+
+    let mut scratch = FlatScratch::default();
+    let mut flat_out: Vec<f32> = Vec::new();
+    let mut flat_kernel_secs = f64::INFINITY;
+    for _ in 0..3 {
+        flat_out.clear(); // predict_batch_with appends
+        let t = Instant::now();
+        flat.predict_batch_with(&xs, nf, &mut scratch, &mut flat_out);
+        flat_kernel_secs = flat_kernel_secs.min(t.elapsed().as_secs_f64());
+    }
+    assert_eq!(scalar_out.len(), flat_out.len());
+    for (i, (a, b)) in scalar_out.iter().zip(flat_out.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "eta_kernel row {i}: flat kernel diverged");
+    }
+    let eta_kernel_speedup = scalar_kernel_secs / flat_kernel_secs.max(1e-12);
+    println!(
+        "eta-kernel: {rows} rows × {} trees — scalar {:.1}ms vs flat {:.1}ms \
+         ({eta_kernel_speedup:.2}×, bit-identical)",
+        eta_forest.trees.len(),
+        scalar_kernel_secs * 1e3,
+        flat_kernel_secs * 1e3
+    );
+
+    // --- Forest-η cold legs (need trained artifacts on disk) ---
+    // The end-to-end figure the micro-leg approximates: a cold search with
+    // forest η, batched kernel on vs off, byte-identical reports.
+    let mut forest_legs: Option<(SearchReport, f64, SearchReport, f64)> = None;
+    if EtaForests::from_file(&astra::runtime::artifacts_dir().join("forest.json")).is_ok() {
+        let mk = |batch_eta: bool| {
+            AstraEngine::new(
+                GpuCatalog::builtin(),
+                EngineConfig { use_forests: true, batch_eta, ..Default::default() },
+            )
+        };
+        let t = Instant::now();
+        let rep_scalar = mk(false).search(&req).unwrap();
+        let forest_scalar_secs = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let rep_batch = mk(true).search(&req).unwrap();
+        let forest_batch_secs = t.elapsed().as_secs_f64();
+        assert_eq!(
+            astra::json::to_string_pretty(&astra::report::report_json(
+                &rep_batch,
+                &GpuCatalog::builtin()
+            )),
+            astra::json::to_string_pretty(&astra::report::report_json(
+                &rep_scalar,
+                &GpuCatalog::builtin()
+            )),
+            "batched η changed the forest-η cold report"
+        );
+        println!(
+            "cold-forest: scalar η {forest_scalar_secs:.3}s vs batched η {forest_batch_secs:.3}s \
+             ({:.2}×, byte-identical report)",
+            forest_scalar_secs / forest_batch_secs.max(1e-12)
+        );
+        forest_legs = Some((rep_scalar, forest_scalar_secs, rep_batch, forest_batch_secs));
+    } else {
+        println!("cold-forest: SKIP — no trained artifacts/forest.json (micro-leg gates instead)");
+    }
+
     let mut out = Value::obj()
         .set(
             "workload",
@@ -350,7 +461,26 @@ fn main() {
                 .set("reprice_secs", reprice_secs)
                 .set("frontier_points", repriced.pool.len())
                 .set("speedup_reprice_vs_cold", reprice_speedup),
+        )
+        .set(
+            "eta_kernel",
+            Value::obj()
+                .set("rows", rows)
+                .set("trees", eta_forest.trees.len())
+                .set("features", nf)
+                .set("scalar_secs", scalar_kernel_secs)
+                .set("flat_secs", flat_kernel_secs)
+                .set("speedup_flat_vs_scalar", eta_kernel_speedup),
         );
+    if let Some((rep_scalar, scalar_secs, rep_batch, batch_secs)) = &forest_legs {
+        out = out
+            .set("cold_forest_scalar_eta", leg_json(rep_scalar, *scalar_secs))
+            .set(
+                "cold_forest_batched_eta",
+                leg_json(rep_batch, *batch_secs)
+                    .set("speedup_batched_vs_scalar", scalar_secs / batch_secs.max(1e-12)),
+            );
+    }
 
     // --- HLO parity smoke (gated): fig5 workload through both engines ---
     let mut parity_result: Option<(f64, bool)> = None;
@@ -489,6 +619,26 @@ fn main() {
             std::process::exit(1);
         }
         println!("audit overhead {audit_overhead:.3} ≤ cap {cap:.3} — ok");
+    }
+
+    // η-kernel floor: the SoA batch kernel is the whole point of the flat
+    // forest layout — gate the end-to-end forest cold leg when trained
+    // artifacts exist, else the micro-kernel ratio.
+    if let Ok(floor) = std::env::var("ASTRA_BENCH_MIN_ETA_SPEEDUP") {
+        let floor: f64 = floor.parse().expect("ASTRA_BENCH_MIN_ETA_SPEEDUP must be a number");
+        let (which, got) = match &forest_legs {
+            Some((_, scalar_secs, _, batch_secs)) => {
+                ("cold_forest", scalar_secs / batch_secs.max(1e-12))
+            }
+            None => ("eta_kernel", eta_kernel_speedup),
+        };
+        if got < floor {
+            eprintln!(
+                "perf_search: FAIL — {which} η speedup {got:.2}× below pinned floor {floor:.2}×"
+            );
+            std::process::exit(1);
+        }
+        println!("{which} η speedup {got:.2}× ≥ floor {floor:.2}× — ok");
     }
 
     // HLO parity gate (only when the smoke actually ran — skips pass).

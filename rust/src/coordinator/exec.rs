@@ -58,8 +58,8 @@ use super::{
     FrontierCandidate, FrontierReport, PhaseBreakdown, ScoredStrategy, ScoringCore, SearchReport,
 };
 use crate::pareto::AdmitDecision;
-use crate::cost::features::{pack_batch, OUT};
-use crate::cost::{CostBreakdown, MemoStats, SharedCostMemo};
+use crate::cost::features::{pack_batch_into, PackScratch, OUT};
+use crate::cost::{CostBreakdown, EtaBatchScratch, MemoStats, SharedCostMemo};
 use crate::memory::MemoryModel;
 use crate::model::ModelSpec;
 use crate::pareto::{DominancePruner, OptimalPool, PoolEntry};
@@ -71,6 +71,16 @@ use crate::Result;
 use std::sync::atomic::Ordering;
 use std::sync::Mutex;
 use std::time::Instant;
+
+thread_local! {
+    /// Per-worker η-batch scratch for the `batch_eta` scoring path.
+    /// `par_for_indices` hands one worker many pools per wave but shares
+    /// the closure (`Fn`), so per-worker mutable state lives here: the
+    /// gather/answer buffers amortize across every pool a worker scores
+    /// within a wave (worker threads are scoped per wave).
+    static ETA_SCRATCH: std::cell::RefCell<EtaBatchScratch> =
+        std::cell::RefCell::new(EtaBatchScratch::default());
+}
 
 /// Outcome of streaming one pool. Counts and scored strategies are
 /// deterministic (pure functions of the pool); the wall-second fields are
@@ -445,6 +455,7 @@ impl ScoringCore {
         let cost = &self.cost;
         let money = &self.config.money;
         let mem = MemoryModel::default();
+        let batch_eta = self.config.batch_eta;
         par_for_indices(tasks.len(), workers, |i| {
             // Cancelled mid-wave: stop burning workers on pools whose
             // outcomes the wave boundary is about to discard anyway. The
@@ -461,25 +472,65 @@ impl ScoringCore {
             let task = tasks[i];
             let mut oc = PoolOutcome::default();
             let t_pool = Instant::now();
-            space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
-                oc.generated += 1;
-                if rules.filters_out(&s).unwrap_or(true) {
-                    oc.rule_filtered += 1;
-                    return;
-                }
-                let t_mem = Instant::now();
-                let fits = mem.fits(model, &s, catalog);
-                oc.mem_secs += t_mem.elapsed().as_secs_f64();
-                if !fits {
-                    oc.mem_filtered += 1;
-                    return;
-                }
+            if batch_eta {
+                // Batched scoring: collect the pool's filter survivors,
+                // then push the memo misses through the flat-forest batch
+                // kernel in one `evaluate_pool_shared` call. Byte-identical
+                // to the per-strategy path below (pinned by
+                // `rust/tests/diff_forest.rs`).
+                let mut survivors: Vec<ParallelStrategy> = Vec::new();
+                space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
+                    oc.generated += 1;
+                    if rules.filters_out(&s).unwrap_or(true) {
+                        oc.rule_filtered += 1;
+                        return;
+                    }
+                    let t_mem = Instant::now();
+                    let fits = mem.fits(model, &s, catalog);
+                    oc.mem_secs += t_mem.elapsed().as_secs_f64();
+                    if !fits {
+                        oc.mem_filtered += 1;
+                        return;
+                    }
+                    survivors.push(s);
+                });
                 let t_score = Instant::now();
-                let breakdown = cost.evaluate_shared(model, &s, memo, &mut oc.memo);
-                let money_usd = money.cost_usd(model, &s, catalog, breakdown.step_time);
-                oc.score_secs += t_score.elapsed().as_secs_f64();
-                oc.scored.push(ScoredStrategy { strategy: s, cost: breakdown, money_usd });
-            });
+                let costs = ETA_SCRATCH.with(|sc| {
+                    cost.evaluate_pool_shared(
+                        model,
+                        &survivors,
+                        memo,
+                        &mut oc.memo,
+                        &mut sc.borrow_mut(),
+                    )
+                });
+                for (s, breakdown) in survivors.into_iter().zip(costs) {
+                    let money_usd = money.cost_usd(model, &s, catalog, breakdown.step_time);
+                    oc.scored.push(ScoredStrategy { strategy: s, cost: breakdown, money_usd });
+                }
+                oc.score_secs = t_score.elapsed().as_secs_f64();
+            } else {
+                // Per-strategy scalar walk — the differential reference.
+                space.expand_params_each(model, &task.cluster, task.tp, task.dp, &mut |s| {
+                    oc.generated += 1;
+                    if rules.filters_out(&s).unwrap_or(true) {
+                        oc.rule_filtered += 1;
+                        return;
+                    }
+                    let t_mem = Instant::now();
+                    let fits = mem.fits(model, &s, catalog);
+                    oc.mem_secs += t_mem.elapsed().as_secs_f64();
+                    if !fits {
+                        oc.mem_filtered += 1;
+                        return;
+                    }
+                    let t_score = Instant::now();
+                    let breakdown = cost.evaluate_shared(model, &s, memo, &mut oc.memo);
+                    let money_usd = money.cost_usd(model, &s, catalog, breakdown.step_time);
+                    oc.score_secs += t_score.elapsed().as_secs_f64();
+                    oc.scored.push(ScoredStrategy { strategy: s, cost: breakdown, money_usd });
+                });
+            }
             oc.filter_secs = (t_pool.elapsed().as_secs_f64() - oc.score_secs).max(0.0);
             oc
         })
@@ -541,6 +592,9 @@ impl ScoringCore {
         let batch = rt.lock().unwrap().batch.max(1);
         let money = &self.config.money;
         let mut outcomes = Vec::with_capacity(filtered.len());
+        // One set of scorer tensors, re-zeroed per chunk — the serial
+        // scoring loop used to allocate three fresh Vecs per pool.
+        let mut pack = PackScratch::default();
         for fp in filtered {
             let mut oc = PoolOutcome {
                 generated: fp.generated,
@@ -554,11 +608,11 @@ impl ScoringCore {
             let mut costs: Vec<CostBreakdown> = Vec::with_capacity(fp.survivors.len());
             for chunk in fp.survivors.chunks(batch) {
                 let refs: Vec<&ParallelStrategy> = chunk.iter().collect();
-                let pb = pack_batch(model, &refs, catalog, batch);
+                pack_batch_into(model, &refs, catalog, batch, &mut pack);
                 let rows: Vec<[f32; OUT]> = rt
                     .lock()
                     .unwrap()
-                    .execute(&pb.stage_feats, &pb.stage_mask, &pb.strat_feats)?;
+                    .execute(&pack.stage_feats, &pack.stage_mask, &pack.strat_feats)?;
                 for (j, s) in chunk.iter().enumerate() {
                     let r = rows[j];
                     let step_time = r[0] as f64;

@@ -126,6 +126,14 @@ pub struct EngineConfig {
     /// replay, so — like `sweep_wave` itself — the schedule never changes
     /// the report and stays out of the request fingerprint.
     pub sweep_wave_max: usize,
+    /// Score each pool's memo-miss candidates through the flattened GBDT
+    /// batch kernel (`CostModel::evaluate_pool_shared`) instead of one η
+    /// call at a time. `false` is the per-strategy scalar walk — the
+    /// differential reference (`rust/tests/diff_forest.rs`). Results are
+    /// byte-identical either way (the batch kernel is bit-identical by
+    /// construction), so — like `workers` and the wave schedule — this
+    /// flag never enters the request fingerprint.
+    pub batch_eta: bool,
     /// Keep this many best strategies in the report.
     pub top_k: usize,
 }
@@ -144,6 +152,7 @@ impl Default for EngineConfig {
             streaming: true,
             sweep_wave: 2,
             sweep_wave_max: 8,
+            batch_eta: true,
             top_k: 16,
         }
     }

@@ -13,6 +13,7 @@
 //! `artifacts/scorer_meta.json` pins them at AOT time (checked on load).
 
 use crate::gpu::GpuCatalog;
+use crate::memory::MemoryModel;
 use crate::model::ModelSpec;
 use crate::strategy::{ParallelStrategy, Recompute};
 
@@ -67,11 +68,15 @@ pub const GF_OFFLOAD: usize = 6;
 pub const GF_SEQ_PARALLEL: usize = 7;
 
 /// Pack one stage row. Mirrors `python/compile/model.py::pack conventions`.
+/// `mem` is the (stateless-but-not-free) memory model used for the
+/// `SF_PARAMS_M` feature — passed in so batch packers construct it once
+/// per batch instead of once per stage row.
 pub fn pack_stage(
     m: &ModelSpec,
     s: &ParallelStrategy,
     stage: usize,
     catalog: &GpuCatalog,
+    mem: &MemoryModel,
     out: &mut [f32],
 ) {
     assert_eq!(out.len(), FS);
@@ -122,8 +127,7 @@ pub fn pack_stage(
     };
     out[SF_TP_OVERLAP] = s.tp_comm_overlap as u8 as f32;
     out[SF_P2P_OVERLAP] = s.overlap_p2p as u8 as f32;
-    out[SF_PARAMS_M] =
-        (crate::memory::MemoryModel::default().stage_params(m, s, stage) / 1e6) as f32;
+    out[SF_PARAMS_M] = (mem.stage_params(m, s, stage) / 1e6) as f32;
     out[SF_DP_BW_GBS] = catalog.group_bandwidth_gbs(gpu, s.tp * s.dp) as f32;
     out[SF_PCIE_GBS] = spec.pcie_gbs as f32;
     out[SF_N_EXPERTS] = m.num_experts as f32;
@@ -161,27 +165,60 @@ pub fn pack_batch(
     catalog: &GpuCatalog,
     batch: usize,
 ) -> PackedBatch {
+    let mut scratch = PackScratch::default();
+    pack_batch_into(m, strategies, catalog, batch, &mut scratch);
+    PackedBatch {
+        stage_feats: scratch.stage_feats,
+        stage_mask: scratch.stage_mask,
+        strat_feats: scratch.strat_feats,
+        batch,
+    }
+}
+
+/// Reusable tensor buffers for [`pack_batch_into`] — the HLO pack path
+/// holds one of these per executor and re-zeroes in place instead of
+/// allocating three fresh `Vec`s per pool.
+#[derive(Debug, Default)]
+pub struct PackScratch {
+    pub stage_feats: Vec<f32>,
+    pub stage_mask: Vec<f32>,
+    pub strat_feats: Vec<f32>,
+}
+
+/// [`pack_batch`] into caller-owned buffers. The buffers are resized and
+/// re-zeroed every call (the padding rows are contract surface), but keep
+/// their capacity across calls.
+pub fn pack_batch_into(
+    m: &ModelSpec,
+    strategies: &[&ParallelStrategy],
+    catalog: &GpuCatalog,
+    batch: usize,
+    out: &mut PackScratch,
+) {
     assert!(strategies.len() <= batch);
-    let mut stage_feats = vec![0.0f32; batch * PMAX * FS];
-    let mut stage_mask = vec![0.0f32; batch * PMAX];
-    let mut strat_feats = vec![0.0f32; batch * FG];
+    let mem = MemoryModel::default();
+    out.stage_feats.clear();
+    out.stage_feats.resize(batch * PMAX * FS, 0.0);
+    out.stage_mask.clear();
+    out.stage_mask.resize(batch * PMAX, 0.0);
+    out.strat_feats.clear();
+    out.strat_feats.resize(batch * FG, 0.0);
     for (bi, s) in strategies.iter().enumerate() {
         let pp = s.pp();
         assert!(pp <= PMAX, "pp {pp} exceeds scorer PMAX {PMAX}");
         for stage in 0..pp {
             let off = (bi * PMAX + stage) * FS;
-            pack_stage(m, s, stage, catalog, &mut stage_feats[off..off + FS]);
-            stage_mask[bi * PMAX + stage] = 1.0;
+            pack_stage(m, s, stage, catalog, &mem, &mut out.stage_feats[off..off + FS]);
+            out.stage_mask[bi * PMAX + stage] = 1.0;
         }
-        pack_strategy(s, &mut strat_feats[bi * FG..(bi + 1) * FG]);
+        pack_strategy(s, &mut out.strat_feats[bi * FG..(bi + 1) * FG]);
     }
     // Padded rows keep K=1 etc. harmless defaults.
     for bi in strategies.len()..batch {
-        strat_feats[bi * FG + GF_K] = 1.0;
-        strat_feats[bi * FG + GF_VPP] = 1.0;
-        strat_feats[bi * FG + GF_DP] = 1.0;
+        out.strat_feats[bi * FG + GF_K] = 1.0;
+        out.strat_feats[bi * FG + GF_VPP] = 1.0;
+        out.strat_feats[bi * FG + GF_DP] = 1.0;
     }
-    PackedBatch { stage_feats, stage_mask, strat_feats, batch }
 }
 
 #[cfg(test)]
@@ -244,6 +281,24 @@ mod tests {
         // Last stage has no p2p bandwidth.
         assert_eq!(pb.stage_feats[3 * FS + SF_P2P_BW_GBS], 0.0);
         assert!(pb.stage_feats[0 * FS + SF_P2P_BW_GBS] > 0.0);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_pack() {
+        let reg = ModelRegistry::builtin();
+        let cat = GpuCatalog::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        let s1 = strat(m, 2, 4, 8);
+        let s2 = strat(m, 4, 2, 8);
+        let mut scratch = PackScratch::default();
+        // Dirty the scratch with a larger batch first; the smaller repack
+        // must still match a fresh pack byte-for-byte (padding re-zeroed).
+        pack_batch_into(m, &[&s1, &s2], &cat, 8, &mut scratch);
+        pack_batch_into(m, &[&s2], &cat, 2, &mut scratch);
+        let fresh = pack_batch(m, &[&s2], &cat, 2);
+        assert_eq!(scratch.stage_feats, fresh.stage_feats);
+        assert_eq!(scratch.stage_mask, fresh.stage_mask);
+        assert_eq!(scratch.strat_feats, fresh.strat_feats);
     }
 
     #[test]

@@ -32,6 +32,21 @@
 //!   model scope — this is what makes repeat traffic sublinear in the
 //!   candidates actually touched.
 //!
+//! **Where the batch kernel sits.** The level-synchronous flat-forest
+//! kernel ([`crate::gbdt::FlatForest`]) lives strictly *behind* the memo:
+//! [`CostModel::evaluate_pool_shared`] first probes the memo for every
+//! `(strategy, stage)` of a pool, deduplicates the misses into a
+//! first-seen-ordered pending list, and only that residue's η queries are
+//! gathered and answered by one batched kernel call per η family — the
+//! kernel only ever sees memo misses. Answers are memoized immediately, so
+//! warm traffic never touches the kernel at all. Batch answers are
+//! bit-identical to scalar [`EtaProvider::comp`]/[`EtaProvider::comm`]
+//! calls (same features, casts and clamp; the flat kernel is bit-identical
+//! to `Forest::predict` by construction), so memo values — and therefore
+//! reports — do not depend on which path filled them. Only the hit/miss
+//! *counters* can differ from a per-strategy interleaving; they are
+//! observability, excluded from `report_json`.
+//!
 //! **Invalidation rules.** Everything strategy- or stage-shaped enters the
 //! *key* (so it can never go stale); everything else is part of the memo's
 //! *scope* and therefore decides which memo may be consulted at all:
@@ -83,7 +98,7 @@ pub mod features;
 pub mod ops;
 
 use crate::gbdt::EtaForests;
-use crate::gpu::{GpuCatalog, GpuSpec};
+use crate::gpu::{GpuCatalog, GpuSpec, GpuType};
 use crate::hw;
 use crate::memory::MemoryModel;
 use crate::model::ModelSpec;
@@ -103,13 +118,81 @@ pub enum EtaProvider {
     Forests(EtaForests),
 }
 
+/// One η_comp query — the arguments of [`EtaProvider::comp`] with the GPU
+/// named by catalog index so queries can be gathered without holding a
+/// `&GpuSpec` borrow.
+#[derive(Debug, Clone, Copy)]
+pub struct CompQuery {
+    pub gpu: GpuType,
+    pub flops: f64,
+    pub min_dim: f64,
+    pub intensity: f64,
+}
+
+/// One η_comm query — the arguments of [`EtaProvider::comm`].
+#[derive(Debug, Clone, Copy)]
+pub struct CommQuery {
+    pub gpu: GpuType,
+    pub bytes: f64,
+    pub bw_gbs: f64,
+    pub participants: f64,
+}
+
+/// Caller-owned scratch for the batched η path. Holds the gathered raw
+/// queries, the packed f32 feature rows, the flat-kernel working buffers
+/// and the η outputs — every allocation is amortized across
+/// [`EtaProvider::comp_batch`] / [`EtaProvider::comm_batch`] calls (none
+/// of them allocate per call once the buffers are warm).
+#[derive(Debug, Default)]
+pub struct EtaBatchScratch {
+    /// Pending η_comp queries (filled by the gather pass).
+    pub comp: Vec<CompQuery>,
+    /// Pending η_comm queries (filled by the gather pass).
+    pub comm: Vec<CommQuery>,
+    /// η answers for `comp`, index-aligned.
+    comp_eta: Vec<f64>,
+    /// η answers for `comm`, index-aligned.
+    comm_eta: Vec<f64>,
+    /// Packed f32 feature rows (forest path only).
+    xs: Vec<f32>,
+    /// Flat-kernel row state.
+    flat: crate::gbdt::FlatScratch,
+    /// Raw f32 forest predictions before the clamp.
+    pred: Vec<f32>,
+}
+
+impl EtaBatchScratch {
+    /// Drop all pending queries and answers (buffers keep their capacity).
+    pub fn clear(&mut self) {
+        self.comp.clear();
+        self.comm.clear();
+        self.comp_eta.clear();
+        self.comm_eta.clear();
+    }
+
+    /// η answers for the gathered comp queries, index-aligned with
+    /// [`Self::comp`]. Valid after [`EtaProvider::comp_batch`].
+    pub fn comp_eta(&self) -> &[f64] {
+        &self.comp_eta
+    }
+
+    /// η answers for the gathered comm queries, index-aligned with
+    /// [`Self::comm`]. Valid after [`EtaProvider::comm_batch`].
+    pub fn comm_eta(&self) -> &[f64] {
+        &self.comm_eta
+    }
+}
+
 impl EtaProvider {
     pub fn comp(&self, spec: &GpuSpec, flops: f64, min_dim: f64, intensity: f64) -> f64 {
         match self {
             EtaProvider::Analytic => hw::eta_comp(spec, flops, min_dim, intensity),
             EtaProvider::Forests(f) => {
                 let feats = hw::comp_features(spec, flops, min_dim, intensity);
-                let x: Vec<f32> = feats.iter().map(|&v| v as f32).collect();
+                let mut x = [0.0f32; hw::COMP_FEATURES];
+                for (o, &v) in x.iter_mut().zip(feats.iter()) {
+                    *o = v as f32;
+                }
                 f.eta_comp(&x)
             }
         }
@@ -120,8 +203,90 @@ impl EtaProvider {
             EtaProvider::Analytic => hw::eta_comm(spec, bytes, bw_gbs, participants),
             EtaProvider::Forests(f) => {
                 let feats = hw::comm_features(spec, bytes, bw_gbs, participants);
-                let x: Vec<f32> = feats.iter().map(|&v| v as f32).collect();
+                let mut x = [0.0f32; hw::COMM_FEATURES];
+                for (o, &v) in x.iter_mut().zip(feats.iter()) {
+                    *o = v as f32;
+                }
                 f.eta_comm(&x)
+            }
+        }
+    }
+
+    /// Answer every query in `scratch.comp` into `scratch.comp_eta()`,
+    /// index-aligned. For [`EtaProvider::Forests`] this packs all feature
+    /// rows and runs *one* level-synchronous flat-kernel call; for
+    /// [`EtaProvider::Analytic`] it loops the closed-form curve. Either
+    /// way each answer is bit-identical to the corresponding
+    /// [`EtaProvider::comp`] call (same feature math, same f64→f32 cast,
+    /// same clamp; the flat kernel is bit-identical to `Forest::predict`).
+    pub fn comp_batch(&self, catalog: &GpuCatalog, scratch: &mut EtaBatchScratch) {
+        scratch.comp_eta.clear();
+        match self {
+            EtaProvider::Analytic => {
+                for q in &scratch.comp {
+                    scratch.comp_eta.push(hw::eta_comp(
+                        catalog.spec(q.gpu),
+                        q.flops,
+                        q.min_dim,
+                        q.intensity,
+                    ));
+                }
+            }
+            EtaProvider::Forests(f) => {
+                scratch.xs.clear();
+                for q in &scratch.comp {
+                    hw::comp_features_into(
+                        catalog.spec(q.gpu),
+                        q.flops,
+                        q.min_dim,
+                        q.intensity,
+                        &mut scratch.xs,
+                    );
+                }
+                f.eta_comp_batch(
+                    &scratch.xs,
+                    hw::COMP_FEATURES,
+                    &mut scratch.flat,
+                    &mut scratch.pred,
+                    &mut scratch.comp_eta,
+                );
+            }
+        }
+    }
+
+    /// Answer every query in `scratch.comm` into `scratch.comm_eta()`;
+    /// see [`Self::comp_batch`].
+    pub fn comm_batch(&self, catalog: &GpuCatalog, scratch: &mut EtaBatchScratch) {
+        scratch.comm_eta.clear();
+        match self {
+            EtaProvider::Analytic => {
+                for q in &scratch.comm {
+                    scratch.comm_eta.push(hw::eta_comm(
+                        catalog.spec(q.gpu),
+                        q.bytes,
+                        q.bw_gbs,
+                        q.participants,
+                    ));
+                }
+            }
+            EtaProvider::Forests(f) => {
+                scratch.xs.clear();
+                for q in &scratch.comm {
+                    hw::comm_features_into(
+                        catalog.spec(q.gpu),
+                        q.bytes,
+                        q.bw_gbs,
+                        q.participants,
+                        &mut scratch.xs,
+                    );
+                }
+                f.eta_comm_batch(
+                    &scratch.xs,
+                    hw::COMM_FEATURES,
+                    &mut scratch.flat,
+                    &mut scratch.pred,
+                    &mut scratch.comm_eta,
+                );
             }
         }
     }
@@ -748,6 +913,35 @@ impl CostModel {
 
     /// Per-microbatch forward/backward/p2p times of stage `i`.
     pub fn stage_time(&self, m: &ModelSpec, s: &ParallelStrategy, stage: usize) -> StageTime {
+        self.stage_time_with(
+            m,
+            s,
+            stage,
+            &mut |g, flops, min_dim, intensity| {
+                self.eta.comp(self.catalog.spec(g), flops, min_dim, intensity)
+            },
+            &mut |g, bytes, bw_gbs, parts| {
+                self.eta.comm(self.catalog.spec(g), bytes, bw_gbs, parts)
+            },
+        )
+    }
+
+    /// [`Self::stage_time`] with the η source abstracted out. Both
+    /// closures receive `(gpu, …)` with the exact argument tuples of
+    /// [`EtaProvider::comp`] / [`EtaProvider::comm`], and are called in a
+    /// deterministic order fixed by the operator census — which is what
+    /// lets the batched path run this body twice (a *gather* pass whose
+    /// closures record the queries, then a *compose* pass whose closures
+    /// replay the batch-kernel answers in the same order) and land on
+    /// bit-identical arithmetic.
+    fn stage_time_with(
+        &self,
+        m: &ModelSpec,
+        s: &ParallelStrategy,
+        stage: usize,
+        eta_comp: &mut dyn FnMut(GpuType, f64, f64, f64) -> f64,
+        eta_comm: &mut dyn FnMut(GpuType, f64, f64, f64) -> f64,
+    ) -> StageTime {
         let gpu = s.cluster.gpu_of_stage(stage);
         let spec = self.catalog.spec(gpu);
         let peak = spec.peak_flops();
@@ -756,7 +950,7 @@ impl CostModel {
         let mut fwd_comp = 0.0;
         let mut attn_fwd = 0.0; // selective-recompute portion
         for op in stage_fwd_ops(m, s, stage) {
-            let eta = self.eta.comp(spec, op.shape.flops, op.shape.min_dim, op.shape.intensity());
+            let eta = eta_comp(gpu, op.shape.flops, op.shape.min_dim, op.shape.intensity());
             let t = op.count * op.shape.flops / (peak * eta);
             fwd_comp += t;
             if matches!(op.kind, ops::OpKind::AttnScore | ops::OpKind::AttnContext | ops::OpKind::AttnFused)
@@ -786,7 +980,7 @@ impl CostModel {
         let mut tp_time = 0.0;
         if comm.tp_ops > 0.0 {
             let bw = self.catalog.group_bandwidth_gbs(gpu, s.tp) * 1e9;
-            let eta = self.eta.comm(spec, comm.tp_msg_bytes, bw / 1e9, s.tp as f64);
+            let eta = eta_comm(gpu, comm.tp_msg_bytes, bw / 1e9, s.tp as f64);
             tp_time = comm.tp_ring_bytes / (bw * eta);
             if s.tp_comm_overlap {
                 tp_time *= 1.0 - self.consts.tp_hide;
@@ -798,7 +992,7 @@ impl CostModel {
         if comm.a2a_ring_bytes > 0.0 {
             // EP ranks live inside the DP dimension: group spans tp·ep ranks.
             let bw = self.catalog.group_bandwidth_gbs(gpu, s.tp * s.ep);
-            let eta = self.eta.comm(spec, comm.a2a_msg_bytes, bw, s.ep as f64);
+            let eta = eta_comm(gpu, comm.a2a_msg_bytes, bw, s.ep as f64);
             a2a_time = comm.a2a_ring_bytes / (bw * 1e9 * eta);
         }
 
@@ -816,7 +1010,7 @@ impl CostModel {
             } else {
                 spec.internode_gbs.min(next_spec.internode_gbs)
             };
-            let eta = self.eta.comm(spec, comm.p2p_bytes, bw_gbs, 2.0);
+            let eta = eta_comm(gpu, comm.p2p_bytes, bw_gbs, 2.0);
             p2p = comm.p2p_bytes / (bw_gbs * 1e9 * eta);
             if s.overlap_p2p {
                 p2p *= 1.0 - self.consts.p2p_hide;
@@ -1018,6 +1212,177 @@ impl CostModel {
         memo.record(local);
         stats.merge(local);
         self.compose(m, s, k, stage_times, dp_worst, opt_worst, off_worst)
+    }
+
+    /// Batched scoring of one pool's survivors against a shared memo —
+    /// the executor's `batch_eta` path. Semantically identical to calling
+    /// [`Self::evaluate_shared`] per strategy, but the stage profiles the
+    /// memo does *not* already hold are scored through the level-synchronous
+    /// flat-forest kernel in three passes instead of one η call at a time:
+    ///
+    /// 1. **lookup** — probe the memo per `(strategy, stage)`; deduplicate
+    ///    the misses (a pool repeats a few hundred distinct profiles across
+    ///    thousands of strategies) into a first-seen-ordered pending list.
+    ///    Sync terms are computed inline (one comm-η call at most — not
+    ///    worth batching).
+    /// 2. **gather** — replay [`Self::stage_time_with`] over the pending
+    ///    profiles with recording closures, accumulating every η query
+    ///    into the caller's [`EtaBatchScratch`].
+    /// 3. **solve + compose** — one [`EtaProvider::comp_batch`] and one
+    ///    [`EtaProvider::comm_batch`] answer all queries (a single flat
+    ///    kernel invocation each under [`EtaProvider::Forests`]); a second
+    ///    `stage_time_with` replay consumes the answers in the same
+    ///    deterministic order, yielding bit-identical [`StageTime`]s,
+    ///    which are memoized and composed per strategy.
+    ///
+    /// Results are bit-identical to the scalar path; memo hit/miss
+    /// *counters* may differ from a per-strategy interleaving (a profile
+    /// seen `n` times in one pool counts 1 miss + `n−1` hits here), which
+    /// is fine — counters are observability, excluded from `report_json`.
+    pub fn evaluate_pool_shared(
+        &self,
+        m: &ModelSpec,
+        strategies: &[ParallelStrategy],
+        memo: &SharedCostMemo,
+        stats: &mut MemoStats,
+        scratch: &mut EtaBatchScratch,
+    ) -> Vec<CostBreakdown> {
+        let mem = MemoryModel::default();
+        let mut local = MemoStats::default();
+
+        // Pass 1: memo lookup + miss dedup. `Ok(st)` = resolved now,
+        // `Err(j)` = pending profile `j` (filled by pass 3).
+        let mut slots: Vec<Result<StageTime, usize>> = Vec::new();
+        let mut strat_sync: Vec<(f64, f64, f64)> = Vec::with_capacity(strategies.len());
+        let mut pending: Vec<(StageKey, usize, usize)> = Vec::new(); // (key, strat idx, stage)
+        let mut pending_idx: HashMap<StageKey, usize> = HashMap::new();
+        for (si, s) in strategies.iter().enumerate() {
+            let pp = s.pp();
+            let mut dp_worst = 0.0f64;
+            let mut opt_worst = 0.0f64;
+            let mut off_worst = 0.0f64;
+            for i in 0..pp {
+                let skey = StageKey::new(s, i);
+                match memo.get_stage(&skey) {
+                    Some(st) => {
+                        local.hits += 1;
+                        slots.push(Ok(st));
+                    }
+                    None => match pending_idx.get(&skey) {
+                        Some(&j) => {
+                            // Already queued this pool — the scalar path
+                            // would have hit the memo here.
+                            local.hits += 1;
+                            slots.push(Err(j));
+                        }
+                        None => {
+                            local.misses += 1;
+                            let j = pending.len();
+                            pending_idx.insert(skey, j);
+                            pending.push((skey, si, i));
+                            slots.push(Err(j));
+                        }
+                    },
+                }
+
+                let ykey = SyncKey::new(s, i);
+                let (dp_t, opt_t, off_t) = match memo.get_sync(&ykey) {
+                    Some(v) => {
+                        local.hits += 1;
+                        v
+                    }
+                    None => {
+                        local.misses += 1;
+                        let dp_t = self.dp_stage_term(m, s, i, &mem);
+                        let (opt_t, off_t) = self.opt_stage_term(m, s, i, &mem);
+                        memo.put_sync(ykey, (dp_t, opt_t, off_t));
+                        (dp_t, opt_t, off_t)
+                    }
+                };
+                dp_worst = dp_worst.max(dp_t);
+                opt_worst = opt_worst.max(opt_t);
+                off_worst = off_worst.max(off_t);
+            }
+            strat_sync.push((dp_worst, opt_worst, off_worst));
+        }
+
+        // Pass 2: gather every η query of the pending profiles, in the
+        // deterministic per-profile order of `stage_time_with`.
+        scratch.clear();
+        for &(_, si, stage) in &pending {
+            let s = &strategies[si];
+            self.stage_time_with(
+                m,
+                s,
+                stage,
+                &mut |g, flops, min_dim, intensity| {
+                    scratch.comp.push(CompQuery { gpu: g, flops, min_dim, intensity });
+                    1.0 // placeholder; this pass's StageTime is discarded
+                },
+                &mut |g, bytes, bw_gbs, participants| {
+                    scratch.comm.push(CommQuery { gpu: g, bytes, bw_gbs, participants });
+                    1.0
+                },
+            );
+        }
+
+        // Pass 3: one batched kernel call per η family, then replay the
+        // same order consuming the answers.
+        self.eta.comp_batch(&self.catalog, scratch);
+        self.eta.comm_batch(&self.catalog, scratch);
+        let mut ci = 0usize;
+        let mut mi = 0usize;
+        let mut pending_vals: Vec<StageTime> = Vec::with_capacity(pending.len());
+        for &(skey, si, stage) in &pending {
+            let s = &strategies[si];
+            let comp_eta = scratch.comp_eta();
+            let comm_eta = scratch.comm_eta();
+            let st = self.stage_time_with(
+                m,
+                s,
+                stage,
+                &mut |_, _, _, _| {
+                    let v = comp_eta[ci];
+                    ci += 1;
+                    v
+                },
+                &mut |_, _, _, _| {
+                    let v = comm_eta[mi];
+                    mi += 1;
+                    v
+                },
+            );
+            // A racing worker may have inserted the same key meanwhile;
+            // duplicate inserts write the same value (bit-identical by
+            // construction), exactly like the scalar path's race note.
+            memo.put_stage(skey, st);
+            pending_vals.push(st);
+        }
+        debug_assert_eq!(ci, scratch.comp_eta().len());
+        debug_assert_eq!(mi, scratch.comm_eta().len());
+
+        // Compose per strategy from resolved + batch-filled slots.
+        let mut out = Vec::with_capacity(strategies.len());
+        let mut cursor = 0usize;
+        for (si, s) in strategies.iter().enumerate() {
+            let pp = s.pp();
+            let k = s.num_microbatches();
+            let stage_times: Vec<StageTime> = slots[cursor..cursor + pp]
+                .iter()
+                .map(|r| match r {
+                    Ok(st) => *st,
+                    Err(j) => pending_vals[*j],
+                })
+                .collect();
+            cursor += pp;
+            let (dp_worst, opt_worst, off_worst) = strat_sync[si];
+            out.push(self.compose(m, s, k, stage_times, dp_worst, opt_worst, off_worst));
+        }
+        debug_assert_eq!(cursor, slots.len());
+
+        memo.record(local);
+        stats.merge(local);
+        out
     }
 
     /// Shared composition tail of `evaluate`/`evaluate_memo`.
@@ -1497,5 +1862,114 @@ mod tests {
         let sd = strat(dense, 2, 2, 16, 1);
         let td = c.stage_time(dense, &sd, 0);
         assert!(t1.fwd > td.fwd);
+    }
+
+    /// Small deterministic η forests exercising the real kernel path
+    /// (multiple trees, both feature widths).
+    fn synthetic_forests() -> crate::gbdt::EtaForests {
+        let mut rng = crate::prng::Rng::new(0x5eed_f0e5_7001);
+        let mut forest = |n_features: usize| {
+            let trees: Vec<crate::gbdt::Tree> = (0..24)
+                .map(|_| {
+                    let depth = 1 + rng.below(5) as usize;
+                    let internal = (1usize << depth) - 1;
+                    crate::gbdt::Tree {
+                        depth,
+                        feat: (0..internal).map(|_| rng.below(n_features as u64) as u32).collect(),
+                        thresh: (0..internal).map(|_| rng.range_f64(-2.0, 12.0) as f32).collect(),
+                        leaf: (0..1usize << depth)
+                            .map(|_| rng.range_f64(0.05, 1.2) as f32)
+                            .collect(),
+                    }
+                })
+                .collect();
+            Forest { trees, base: 0.3, lr: 0.05, n_features }
+        };
+        let comp = forest(hw::COMP_FEATURES);
+        let comm = forest(hw::COMM_FEATURES);
+        crate::gbdt::EtaForests::new(comp, comm)
+    }
+
+    #[test]
+    fn pool_batch_matches_per_strategy_scoring() {
+        let reg = ModelRegistry::builtin();
+        let m = reg.get("llama2-7b").unwrap();
+        for c in [cm(), CostModel::new(GpuCatalog::builtin(), EtaProvider::Forests(synthetic_forests()))] {
+            let pool: Vec<ParallelStrategy> = [(1, 2, 16, 1), (2, 4, 8, 2), (4, 4, 4, 2), (2, 4, 8, 1)]
+                .iter()
+                .map(|&(tp, pp, dp, mbs)| strat(m, tp, pp, dp, mbs))
+                .collect();
+
+            // Reference: per-strategy scalar walk against its own memo.
+            let memo_a = SharedCostMemo::default();
+            let mut stats_a = MemoStats::default();
+            let want: Vec<CostBreakdown> =
+                pool.iter().map(|s| c.evaluate_shared(m, s, &memo_a, &mut stats_a)).collect();
+
+            // Batched path, fresh memo (all misses go through the kernel).
+            let memo_b = SharedCostMemo::default();
+            let mut stats_b = MemoStats::default();
+            let mut scratch = EtaBatchScratch::default();
+            let got = c.evaluate_pool_shared(m, &pool, &memo_b, &mut stats_b, &mut scratch);
+
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.step_time.to_bits(), w.step_time.to_bits());
+                assert_eq!(g.tokens_per_s.to_bits(), w.tokens_per_s.to_bits());
+                assert_eq!(g.mfu.to_bits(), w.mfu.to_bits());
+                assert_eq!(g.stage_times.len(), w.stage_times.len());
+                for (gs, ws) in g.stage_times.iter().zip(&w.stage_times) {
+                    assert_eq!(gs.fwd.to_bits(), ws.fwd.to_bits());
+                    assert_eq!(gs.bwd.to_bits(), ws.bwd.to_bits());
+                    assert_eq!(gs.p2p.to_bits(), ws.p2p.to_bits());
+                }
+            }
+            // Identical total probes (hit/miss split may differ — see the
+            // method docs — but every (strategy, stage) probes twice).
+            assert_eq!(stats_a.hits + stats_a.misses, stats_b.hits + stats_b.misses);
+
+            // Warm repeat: everything hits, nothing pending, same bytes.
+            let mut stats_w = MemoStats::default();
+            let warm = c.evaluate_pool_shared(m, &pool, &memo_b, &mut stats_w, &mut scratch);
+            assert_eq!(stats_w.misses, 0);
+            for (g, w) in warm.iter().zip(&want) {
+                assert_eq!(g.step_time.to_bits(), w.step_time.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn batched_eta_queries_match_scalar_calls() {
+        let cat = GpuCatalog::builtin();
+        let gpu = cat.find("a800").unwrap();
+        let spec = cat.spec(gpu);
+        for eta in [EtaProvider::Analytic, EtaProvider::Forests(synthetic_forests())] {
+            let mut scratch = EtaBatchScratch::default();
+            for i in 0..17u32 {
+                let f = 1e9 * (i as f64 + 1.0);
+                scratch.comp.push(CompQuery {
+                    gpu,
+                    flops: f,
+                    min_dim: 64.0 * (i as f64 + 1.0),
+                    intensity: 10.0 + i as f64,
+                });
+                scratch.comm.push(CommQuery {
+                    gpu,
+                    bytes: 1e6 * (i as f64 + 1.0),
+                    bw_gbs: 200.0,
+                    participants: 2.0 + i as f64,
+                });
+            }
+            eta.comp_batch(&cat, &mut scratch);
+            eta.comm_batch(&cat, &mut scratch);
+            for i in 0..17usize {
+                let q = scratch.comp[i];
+                let want = eta.comp(spec, q.flops, q.min_dim, q.intensity);
+                assert_eq!(scratch.comp_eta()[i].to_bits(), want.to_bits(), "comp {i}");
+                let q = scratch.comm[i];
+                let want = eta.comm(spec, q.bytes, q.bw_gbs, q.participants);
+                assert_eq!(scratch.comm_eta()[i].to_bits(), want.to_bits(), "comm {i}");
+            }
+        }
     }
 }

@@ -1,0 +1,392 @@
+//! Flattened SoA forest and the level-synchronous batch η-kernel.
+//!
+//! `FlatForest` is a read-only compilation of a [`Forest`](super::Forest):
+//! every tree's node arrays are concatenated into four contiguous slabs
+//! (`feat`, `thresh`, `qthresh`, `leaf`) with per-tree offsets, so batch
+//! evaluation walks flat memory instead of chasing three `Vec`s per tree.
+//!
+//! ## SoA layout
+//!
+//! For tree `t` with depth `d`:
+//!   - internal nodes live at `feat[node_off[t] .. node_off[t] + 2^d - 1]`
+//!     (and the parallel `thresh` / `qthresh` slabs), in the same level
+//!     order as `Tree::feat` / `Tree::thresh`;
+//!   - leaves live at `leaf[leaf_off[t] .. leaf_off[t] + 2^d]`.
+//!
+//! ## Level-synchronous invariant
+//!
+//! The kernel is tree-outer, level-middle, row-inner: at each level every
+//! row of the batch advances one step. Per row it tracks the *level-local*
+//! index `li` (the scalar walk's `idx` minus the level base `2^L − 1`);
+//! the transition `idx ← 2·idx + 1 + go_right` is exactly `li ← 2·li +
+//! go_right` in level-local form, and after `d` levels `li` *is* the leaf
+//! index. The branch decision `go_right = (x[f] ≥ t)` and the per-row
+//! accumulation order (`acc += leaf` in tree order, then `base + lr·acc`,
+//! all in f32) are identical to the scalar `Forest::predict`, so batch
+//! results are bit-identical by construction.
+//!
+//! ## Quantized fast path and the exact-tie fallback
+//!
+//! Features and thresholds are mapped once through [`ordered_key`], a
+//! monotone f32→u32 map (`-0.0` collapsed to `+0.0`, then a sign-flip of
+//! the IEEE bits) under which `key(a) ≥ key(b) ⟺ a ≥ b` for all non-NaN
+//! values. Branch decisions then compare u32 keys instead of floats. Two
+//! guard rails keep the picks byte-identical to the float walk:
+//!   - **exact-tie fallback**: whenever `key(x) == key(t)` the kernel
+//!     re-decides on the original f32 compare `x ≥ t`, so a tie is routed
+//!     exactly as the scalar walk routes it even if the key map were ever
+//!     swapped for a lossy (bucketed) one;
+//!   - **NaN fallback**: rows containing a NaN feature are flagged during
+//!     quantization (the key map is only order-exact for non-NaN input)
+//!     and re-scored with the exact scalar float walk, which sends NaN
+//!     left at every node (`NaN ≥ t` is false) just like `Tree::predict`.
+
+use super::Forest;
+
+/// Monotone f32→u32 key: `key(a) >= key(b)` ⟺ `a >= b` for non-NaN a, b.
+///
+/// `-0.0` is collapsed to `+0.0` first (they compare equal as floats, so
+/// they must share a key); negative floats have their bits inverted and
+/// non-negative floats get the sign bit set, which maps the entire f32
+/// line onto an order-isomorphic stretch of the u32 line. NaN keys are
+/// meaningless — callers must route NaN input through the float fallback.
+#[inline]
+pub fn ordered_key(v: f32) -> u32 {
+    let v = if v == 0.0 { 0.0 } else { v };
+    let bits = v.to_bits();
+    if bits & 0x8000_0000 != 0 {
+        !bits
+    } else {
+        bits | 0x8000_0000
+    }
+}
+
+/// Reusable buffers for [`FlatForest::predict_batch_with`]. Callers on the
+/// hot path hold one of these and amortize every allocation across calls.
+#[derive(Debug, Default, Clone)]
+pub struct FlatScratch {
+    /// Quantized feature keys, `rows × n_features`, row-major.
+    qx: Vec<u32>,
+    /// Per-row level-local node index within the current tree.
+    li: Vec<u32>,
+    /// Per-row f32 accumulator (tree-order partial sums).
+    acc: Vec<f32>,
+    /// Rows containing at least one NaN feature (scalar-walk fallback).
+    nan_rows: Vec<u32>,
+}
+
+/// All trees of a [`Forest`] flattened into contiguous SoA slabs.
+///
+/// Built once (at `ScoringCore` / `CostModel` construction via
+/// `EtaForests`) and read-only afterwards; see the module header for the
+/// layout and the bit-identity argument.
+#[derive(Debug, Clone)]
+pub struct FlatForest {
+    n_features: usize,
+    base: f32,
+    lr: f32,
+    /// Per-tree depth (level count of internal nodes).
+    depths: Vec<u32>,
+    /// Per-tree start offset into `feat` / `thresh` / `qthresh`.
+    node_off: Vec<u32>,
+    /// Per-tree start offset into `leaf`.
+    leaf_off: Vec<u32>,
+    feat: Vec<u32>,
+    thresh: Vec<f32>,
+    /// `ordered_key` image of `thresh`, precomputed at build time.
+    qthresh: Vec<u32>,
+    leaf: Vec<f32>,
+}
+
+impl FlatForest {
+    /// Flatten `forest` (assumed validated — `Forest::from_json` rejects
+    /// malformed trees) into contiguous slabs.
+    pub fn from_forest(forest: &Forest) -> FlatForest {
+        let mut flat = FlatForest {
+            n_features: forest.n_features,
+            base: forest.base,
+            lr: forest.lr,
+            depths: Vec::with_capacity(forest.trees.len()),
+            node_off: Vec::with_capacity(forest.trees.len()),
+            leaf_off: Vec::with_capacity(forest.trees.len()),
+            feat: Vec::new(),
+            thresh: Vec::new(),
+            qthresh: Vec::new(),
+            leaf: Vec::new(),
+        };
+        for tree in &forest.trees {
+            flat.depths.push(tree.depth as u32);
+            flat.node_off.push(flat.feat.len() as u32);
+            flat.leaf_off.push(flat.leaf.len() as u32);
+            flat.feat.extend_from_slice(&tree.feat);
+            flat.thresh.extend_from_slice(&tree.thresh);
+            flat.qthresh.extend(tree.thresh.iter().map(|&t| ordered_key(t)));
+            flat.leaf.extend_from_slice(&tree.leaf);
+        }
+        flat
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.depths.len()
+    }
+
+    /// Batch prediction, quantized fast path. `xs` is row-major
+    /// `rows × n_features`; predictions are appended to `out` (one per
+    /// row). Convenience wrapper that allocates its own scratch — hot
+    /// paths should call [`predict_batch_with`](Self::predict_batch_with).
+    pub fn predict_batch_into(&self, xs: &[f32], out: &mut Vec<f32>) {
+        let mut scratch = FlatScratch::default();
+        self.predict_batch_with(xs, self.n_features.max(1), &mut scratch, out);
+    }
+
+    /// Batch prediction, quantized fast path, caller-owned scratch.
+    /// `xs` is row-major with `stride` floats per row (`stride` may exceed
+    /// `n_features` — scalar `Forest::predict` likewise tolerates longer
+    /// rows). Appends one prediction per row to `out`; bit-identical to
+    /// calling `Forest::predict` per row (see module header).
+    pub fn predict_batch_with(
+        &self,
+        xs: &[f32],
+        stride: usize,
+        scratch: &mut FlatScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let nf = stride;
+        assert!(
+            nf >= self.n_features.max(1) && xs.len() % nf == 0,
+            "xs length must be rows × stride, stride ≥ n_features"
+        );
+        let rows = xs.len() / nf;
+
+        // Quantize every feature once; flag NaN-bearing rows for the
+        // exact scalar fallback (the key map is order-exact only for
+        // non-NaN input).
+        scratch.qx.clear();
+        scratch.qx.reserve(xs.len());
+        scratch.nan_rows.clear();
+        for (r, row) in xs.chunks_exact(nf).enumerate() {
+            let mut has_nan = false;
+            for &v in row {
+                has_nan |= v.is_nan();
+                scratch.qx.push(ordered_key(v));
+            }
+            if has_nan {
+                scratch.nan_rows.push(r as u32);
+            }
+        }
+
+        scratch.acc.clear();
+        scratch.acc.resize(rows, 0.0);
+        scratch.li.clear();
+        scratch.li.resize(rows, 0);
+
+        for t in 0..self.depths.len() {
+            let depth = self.depths[t] as usize;
+            let node0 = self.node_off[t] as usize;
+            let leaf0 = self.leaf_off[t] as usize;
+            scratch.li.iter_mut().for_each(|v| *v = 0);
+            for level in 0..depth {
+                // Internal nodes of this level occupy the contiguous
+                // stretch [2^L − 1, 2^{L+1} − 1) of the tree's node slab.
+                let level_base = node0 + (1usize << level) - 1;
+                let width = 1usize << level;
+                let feat = &self.feat[level_base..level_base + width];
+                let qthresh = &self.qthresh[level_base..level_base + width];
+                let thresh = &self.thresh[level_base..level_base + width];
+                for r in 0..rows {
+                    let li = scratch.li[r] as usize;
+                    let f = feat[li] as usize;
+                    let qt = qthresh[li];
+                    let qv = scratch.qx[r * nf + f];
+                    // Exact-tie fallback: on key equality, re-decide on
+                    // the original float compare (see module header).
+                    let go_right = if qv != qt {
+                        (qv > qt) as u32
+                    } else {
+                        (xs[r * nf + f] >= thresh[li]) as u32
+                    };
+                    scratch.li[r] = 2 * scratch.li[r] + go_right;
+                }
+            }
+            let leaves = &self.leaf[leaf0..leaf0 + (1usize << depth)];
+            for r in 0..rows {
+                scratch.acc[r] += leaves[scratch.li[r] as usize];
+            }
+        }
+
+        let start = out.len();
+        out.extend(scratch.acc.iter().map(|&a| self.base + self.lr * a));
+
+        // NaN fallback: re-score flagged rows with the exact float walk.
+        for &r in &scratch.nan_rows {
+            let r = r as usize;
+            out[start + r] = self.predict_row_float(&xs[r * nf..(r + 1) * nf]);
+        }
+    }
+
+    /// Batch prediction with float compares at every node — the
+    /// level-synchronous *reference* path (no quantization). Used by the
+    /// differential tests to separate layout bugs from key-map bugs.
+    pub fn predict_batch_float_into(&self, xs: &[f32], out: &mut Vec<f32>) {
+        let nf = self.n_features.max(1);
+        assert!(xs.len() % nf == 0, "xs length must be rows × n_features");
+        let rows = xs.len() / nf;
+        let mut li = vec![0u32; rows];
+        let mut acc = vec![0.0f32; rows];
+        for t in 0..self.depths.len() {
+            let depth = self.depths[t] as usize;
+            let node0 = self.node_off[t] as usize;
+            let leaf0 = self.leaf_off[t] as usize;
+            li.iter_mut().for_each(|v| *v = 0);
+            for level in 0..depth {
+                let level_base = node0 + (1usize << level) - 1;
+                let width = 1usize << level;
+                let feat = &self.feat[level_base..level_base + width];
+                let thresh = &self.thresh[level_base..level_base + width];
+                for r in 0..rows {
+                    let i = li[r] as usize;
+                    let f = feat[i] as usize;
+                    let go_right = (xs[r * nf + f] >= thresh[i]) as u32;
+                    li[r] = 2 * li[r] + go_right;
+                }
+            }
+            let leaves = &self.leaf[leaf0..leaf0 + (1usize << depth)];
+            for r in 0..rows {
+                acc[r] += leaves[li[r] as usize];
+            }
+        }
+        out.extend(acc.iter().map(|&a| self.base + self.lr * a));
+    }
+
+    /// Scalar float walk over the flat slabs for a single row — the exact
+    /// arithmetic of `Tree::predict` / `Forest::predict`, used as the NaN
+    /// fallback and as a self-contained reference.
+    pub fn predict_row_float(&self, x: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for t in 0..self.depths.len() {
+            let depth = self.depths[t] as usize;
+            let node0 = self.node_off[t] as usize;
+            let leaf0 = self.leaf_off[t] as usize;
+            let mut li = 0usize;
+            for level in 0..depth {
+                let node = node0 + (1usize << level) - 1 + li;
+                let f = self.feat[node] as usize;
+                li = 2 * li + (x[f] >= self.thresh[node]) as usize;
+            }
+            acc += self.leaf[leaf0 + li];
+        }
+        self.base + self.lr * acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::Tree;
+
+    fn demo_forest() -> Forest {
+        let t1 = Tree {
+            depth: 2,
+            feat: vec![0, 1, 1],
+            thresh: vec![0.5, 0.25, 0.75],
+            leaf: vec![0.0, 1.0, 2.0, 3.0],
+        };
+        let t2 = Tree {
+            depth: 1,
+            feat: vec![1],
+            thresh: vec![0.5],
+            leaf: vec![-1.0, 4.0],
+        };
+        Forest { trees: vec![t1, t2], base: 0.25, lr: 0.5, n_features: 2 }
+    }
+
+    #[test]
+    fn ordered_key_is_monotone_and_collapses_zero_signs() {
+        let vals = [
+            f32::NEG_INFINITY,
+            -1e30,
+            -1.0,
+            -1e-30,
+            -0.0,
+            0.0,
+            1e-30,
+            1.0,
+            1e30,
+            f32::INFINITY,
+        ];
+        for i in 0..vals.len() {
+            for j in 0..vals.len() {
+                assert_eq!(
+                    ordered_key(vals[i]) >= ordered_key(vals[j]),
+                    vals[i] >= vals[j],
+                    "key order mismatch for {} vs {}",
+                    vals[i],
+                    vals[j]
+                );
+            }
+        }
+        assert_eq!(ordered_key(-0.0), ordered_key(0.0));
+    }
+
+    #[test]
+    fn flat_matches_scalar_on_demo_forest() {
+        let forest = demo_forest();
+        let flat = FlatForest::from_forest(&forest);
+        let rows: Vec<[f32; 2]> = vec![
+            [0.0, 0.0],
+            [0.5, 0.25], // exact ties on both splits of t1, below t2 split
+            [0.5, 0.5],  // tie routes right everywhere
+            [1.0, 1.0],
+            [0.49, 0.75],
+            [-0.0, 0.0],
+        ];
+        let xs: Vec<f32> = rows.iter().flatten().copied().collect();
+        let mut out = Vec::new();
+        flat.predict_batch_into(&xs, &mut out);
+        let mut out_f = Vec::new();
+        flat.predict_batch_float_into(&xs, &mut out_f);
+        for (r, row) in rows.iter().enumerate() {
+            let want = forest.predict(row);
+            assert_eq!(out[r].to_bits(), want.to_bits(), "quantized row {r}");
+            assert_eq!(out_f[r].to_bits(), want.to_bits(), "float-ref row {r}");
+            assert_eq!(flat.predict_row_float(row).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn nan_rows_fall_back_to_the_scalar_walk() {
+        let forest = demo_forest();
+        let flat = FlatForest::from_forest(&forest);
+        // NaN compares false against every threshold → always left,
+        // exactly like Tree::predict.
+        let xs = [f32::NAN, f32::NAN, 0.9, f32::NAN, 1.0, 1.0];
+        let mut out = Vec::new();
+        flat.predict_batch_into(&xs, &mut out);
+        for r in 0..3 {
+            let want = forest.predict(&xs[r * 2..r * 2 + 2]);
+            assert!(!want.is_nan());
+            assert_eq!(out[r].to_bits(), want.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_calls() {
+        let forest = demo_forest();
+        let flat = FlatForest::from_forest(&forest);
+        let mut scratch = FlatScratch::default();
+        let mut out = Vec::new();
+        let a = [f32::NAN, 0.1, 0.6, 0.6];
+        flat.predict_batch_with(&a, 2, &mut scratch, &mut out);
+        out.clear();
+        let b = [0.5, 0.25, 0.9, 0.9, 0.1, 0.1];
+        flat.predict_batch_with(&b, 2, &mut scratch, &mut out);
+        for r in 0..3 {
+            let want = forest.predict(&b[r * 2..r * 2 + 2]);
+            assert_eq!(out[r].to_bits(), want.to_bits(), "row {r}");
+        }
+    }
+}

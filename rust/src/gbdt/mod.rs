@@ -12,6 +12,10 @@
 
 use crate::json::Value;
 use crate::{AstraError, Result};
+use std::sync::OnceLock;
+
+pub mod flat;
+pub use flat::{FlatForest, FlatScratch};
 
 /// One complete regression tree.
 #[derive(Debug, Clone)]
@@ -130,14 +134,29 @@ impl Forest {
 }
 
 /// The pair of forests used by the cost model (η_comp, η_comm), plus the
-/// clamp into the paper's (0, 1] range.
+/// clamp to `[1e-4, 1.0]` — the paper treats η as lying in (0, 1], and the
+/// `1e-4` floor keeps the `t = θ/(φ·η)` division away from raw-prediction
+/// zeros/negatives while `1.0` caps efficiency at the hardware peak.
+/// (`f64::clamp` propagates NaN, but a NaN *prediction* cannot occur for
+/// finite leaves: a NaN feature routes left at every split — `NaN ≥ t` is
+/// false — and still lands on a finite leaf.)
+///
+/// Each forest also carries a lazily-built [`FlatForest`] mirror for the
+/// batched η path (`eta_comp_batch` / `eta_comm_batch`); it is derived
+/// state, built on first use and invisible to persistence digests.
 #[derive(Debug, Clone)]
 pub struct EtaForests {
     pub comp: Forest,
     pub comm: Forest,
+    flat_comp: OnceLock<FlatForest>,
+    flat_comm: OnceLock<FlatForest>,
 }
 
 impl EtaForests {
+    pub fn new(comp: Forest, comm: Forest) -> EtaForests {
+        EtaForests { comp, comm, flat_comp: OnceLock::new(), flat_comm: OnceLock::new() }
+    }
+
     /// Load `artifacts/forest.json` holding both ensembles.
     pub fn from_file(path: &std::path::Path) -> Result<EtaForests> {
         let v = crate::json::from_file(path)?;
@@ -147,7 +166,17 @@ impl EtaForests {
         let comm = Forest::from_json(
             v.get("comm").ok_or_else(|| AstraError::Json("missing 'comm' forest".into()))?,
         )?;
-        Ok(EtaForests { comp, comm })
+        Ok(EtaForests::new(comp, comm))
+    }
+
+    /// The flattened mirror of `comp`, built on first use.
+    pub fn flat_comp(&self) -> &FlatForest {
+        self.flat_comp.get_or_init(|| FlatForest::from_forest(&self.comp))
+    }
+
+    /// The flattened mirror of `comm`, built on first use.
+    pub fn flat_comm(&self) -> &FlatForest {
+        self.flat_comm.get_or_init(|| FlatForest::from_forest(&self.comm))
     }
 
     pub fn eta_comp(&self, features: &[f32]) -> f64 {
@@ -156,6 +185,38 @@ impl EtaForests {
 
     pub fn eta_comm(&self, features: &[f32]) -> f64 {
         (self.comm.predict(features) as f64).clamp(1e-4, 1.0)
+    }
+
+    /// Batched η_comp over row-major `xs` (`stride` floats per row, e.g.
+    /// `hw::COMP_FEATURES`) via the flat kernel; appends one clamped η per
+    /// row to `out`. Bit-identical to calling [`eta_comp`](Self::eta_comp)
+    /// per row (the flat kernel is bit-identical to `Forest::predict`, and
+    /// the clamp is applied identically).
+    pub fn eta_comp_batch(
+        &self,
+        xs: &[f32],
+        stride: usize,
+        scratch: &mut FlatScratch,
+        pred: &mut Vec<f32>,
+        out: &mut Vec<f64>,
+    ) {
+        pred.clear();
+        self.flat_comp().predict_batch_with(xs, stride, scratch, pred);
+        out.extend(pred.iter().map(|&p| (p as f64).clamp(1e-4, 1.0)));
+    }
+
+    /// Batched η_comm; see [`eta_comp_batch`](Self::eta_comp_batch).
+    pub fn eta_comm_batch(
+        &self,
+        xs: &[f32],
+        stride: usize,
+        scratch: &mut FlatScratch,
+        pred: &mut Vec<f32>,
+        out: &mut Vec<f64>,
+    ) {
+        pred.clear();
+        self.flat_comm().predict_batch_with(xs, stride, scratch, pred);
+        out.extend(pred.iter().map(|&p| (p as f64).clamp(1e-4, 1.0)));
     }
 }
 
@@ -226,11 +287,56 @@ mod tests {
 
     #[test]
     fn eta_clamped() {
-        let ef = EtaForests {
-            comp: Forest::constant(7.0, 1),
-            comm: Forest::constant(-3.0, 1),
-        };
+        let ef = EtaForests::new(Forest::constant(7.0, 1), Forest::constant(-3.0, 1));
         assert_eq!(ef.eta_comp(&[0.0]), 1.0);
         assert_eq!(ef.eta_comm(&[0.0]), 1e-4);
+    }
+
+    #[test]
+    fn eta_clamp_boundaries_are_exact() {
+        // Predictions landing exactly on the clamp rails pass through
+        // untouched; values just past the rails are pinned to them.
+        let lo = EtaForests::new(Forest::constant(1e-4, 1), Forest::constant(1.0, 1));
+        assert_eq!(lo.eta_comp(&[0.0]), (1e-4f32 as f64).clamp(1e-4, 1.0));
+        assert_eq!(lo.eta_comm(&[0.0]), 1.0);
+        let under = EtaForests::new(Forest::constant(9.9e-5, 1), Forest::constant(0.0, 1));
+        assert_eq!(under.eta_comp(&[0.0]), 1e-4);
+        assert_eq!(under.eta_comm(&[0.0]), 1e-4); // raw 0.0 floors to 1e-4
+        let over = EtaForests::new(Forest::constant(1.0 + f32::EPSILON, 1), Forest::constant(-0.5, 1));
+        assert_eq!(over.eta_comp(&[0.0]), 1.0);
+        assert_eq!(over.eta_comm(&[0.0]), 1e-4); // negatives floor to 1e-4
+    }
+
+    #[test]
+    fn eta_nan_input_routes_left_and_stays_finite() {
+        // A NaN *feature* never yields a NaN η: every split compares
+        // `NaN ≥ t` = false, so descent goes left and lands on a finite
+        // leaf, which then clamps normally.
+        let tree = Tree { depth: 1, feat: vec![0], thresh: vec![0.5], leaf: vec![0.25, 0.75] };
+        let forest = Forest { trees: vec![tree], base: 0.0, lr: 1.0, n_features: 1 };
+        let ef = EtaForests::new(forest.clone(), forest);
+        let eta = ef.eta_comp(&[f32::NAN]);
+        assert_eq!(eta, 0.25f32 as f64); // the left leaf, inside the clamp band
+        assert_eq!(ef.eta_comm(&[f32::NAN]), 0.25f32 as f64);
+    }
+
+    #[test]
+    fn flat_mirror_is_lazily_built_and_matches() {
+        let f = Forest { trees: vec![demo_tree()], base: 0.5, lr: 2.0, n_features: 2 };
+        let ef = EtaForests::new(f.clone(), f.clone());
+        let xs = [0.0f32, 0.0, 0.9, 0.9, 0.5, 0.25];
+        let mut out = Vec::new();
+        ef.flat_comp().predict_batch_into(&xs, &mut out);
+        for (r, row) in xs.chunks_exact(2).enumerate() {
+            assert_eq!(out[r].to_bits(), f.predict(row).to_bits());
+        }
+        // Batched η applies the same clamp as the scalar accessor.
+        let mut scratch = FlatScratch::default();
+        let mut pred = Vec::new();
+        let mut etas = Vec::new();
+        ef.eta_comp_batch(&xs, 2, &mut scratch, &mut pred, &mut etas);
+        for (r, row) in xs.chunks_exact(2).enumerate() {
+            assert_eq!(etas[r].to_bits(), ef.eta_comp(row).to_bits());
+        }
     }
 }

@@ -102,6 +102,34 @@ pub fn comm_features(spec: &GpuSpec, bytes: f64, bw_gbs: f64, participants: f64)
     ]
 }
 
+/// Append one η_comp feature row, as f32, to a caller-owned scratch
+/// buffer (the batched η path packs many rows before one kernel call).
+/// Routes through [`comp_features`] so the feature definition — which must
+/// stay in lockstep with `python/compile/effdata.py` — lives in exactly
+/// one place, and the f64→f32 cast matches the scalar η path's cast.
+pub fn comp_features_into(
+    spec: &GpuSpec,
+    flops: f64,
+    min_dim: f64,
+    intensity: f64,
+    out: &mut Vec<f32>,
+) {
+    let f = comp_features(spec, flops, min_dim, intensity);
+    out.extend(f.iter().map(|&v| v as f32));
+}
+
+/// Append one η_comm feature row, as f32; see [`comp_features_into`].
+pub fn comm_features_into(
+    spec: &GpuSpec,
+    bytes: f64,
+    bw_gbs: f64,
+    participants: f64,
+    out: &mut Vec<f32>,
+) {
+    let f = comm_features(spec, bytes, bw_gbs, participants);
+    out.extend(f.iter().map(|&v| v as f32));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

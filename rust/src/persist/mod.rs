@@ -1909,10 +1909,7 @@ mod tests {
         assert_ne!(book_digest(&book), book_digest(&spot));
 
         assert_eq!(eta_identity(&EtaProvider::Analytic), "analytic");
-        let f = crate::gbdt::EtaForests {
-            comp: Forest::constant(0.5, 4),
-            comm: Forest::constant(0.6, 4),
-        };
+        let f = crate::gbdt::EtaForests::new(Forest::constant(0.5, 4), Forest::constant(0.6, 4));
         let id = eta_identity(&EtaProvider::Forests(f));
         assert!(id.starts_with("forests:"), "{id}");
     }

@@ -285,10 +285,12 @@ fn hash_config_core(h: &mut Fnv64, cfg: &EngineConfig) {
     // retired the old reference pipeline.
     .field_bool("streaming", cfg.streaming)
     .field_usize("top_k", cfg.top_k);
-    // `workers`, `sweep_wave` and `sweep_wave_max` deliberately excluded:
-    // worker count never changes results, and the hetero-cost wave replay
-    // (adaptive or not) is byte-identical to the serial sweep at any wave
-    // schedule (differential-tested).
+    // `workers`, `sweep_wave`, `sweep_wave_max` and `batch_eta`
+    // deliberately excluded: worker count never changes results, the
+    // hetero-cost wave replay (adaptive or not) is byte-identical to the
+    // serial sweep at any wave schedule, and the flat-forest batch kernel
+    // is bit-identical to the scalar η walk (all differential-tested) —
+    // none of them can change result bytes, so none may split the cache.
 }
 
 fn hash_config(h: &mut Fnv64, cfg: &EngineConfig) {
@@ -462,6 +464,18 @@ mod tests {
         a.workers = 1;
         let mut b = EngineConfig::default();
         b.workers = 32;
+        assert_eq!(fp(&req, &a), fp(&req, &b));
+    }
+
+    #[test]
+    fn batch_eta_does_not_change_the_key() {
+        // Like workers/waves, the batch kernel can't change result bytes,
+        // so flipping it must hit the same cache entry.
+        let req = SearchRequest::homogeneous("a800", 64, model()).unwrap();
+        let mut a = EngineConfig::default();
+        a.batch_eta = true;
+        let mut b = EngineConfig::default();
+        b.batch_eta = false;
         assert_eq!(fp(&req, &a), fp(&req, &b));
     }
 

@@ -1,0 +1,332 @@
+//! Differential harness for the flattened GBDT η-kernel.
+//!
+//! Two layers of evidence that the level-synchronous batch kernel
+//! (`astra::gbdt::FlatForest`) can never change a pick:
+//!
+//! 1. **Kernel-level**: seeded randomized forests/inputs — including
+//!    exact threshold ties (`x[f] == t`), signed zeros and NaN rows —
+//!    where every batch prediction must be *bit*-identical to the scalar
+//!    `Forest::predict` walk, on both the quantized fast path (with its
+//!    exact-tie fallback) and the float-compare reference path.
+//! 2. **Engine-level**: full searches with `batch_eta` on vs off must
+//!    produce byte-identical canonical reports across every search mode
+//!    and worker count, under the Analytic provider *and* under a real
+//!    `Forests` provider injected via `$ASTRA_ARTIFACTS` (this test binary
+//!    owns its process, so the env override is safe to pin once).
+
+use astra::coordinator::{AstraEngine, EngineConfig, SearchReport, SearchRequest};
+use astra::cost::EtaProvider;
+use astra::gbdt::{EtaForests, FlatForest, FlatScratch, Forest, Tree};
+use astra::gpu::GpuCatalog;
+use astra::model::ModelRegistry;
+use astra::prng::Rng;
+use astra::report::report_json;
+use astra::strategy::SpaceConfig;
+
+// ---------------------------------------------------------------------------
+// Kernel-level differential
+// ---------------------------------------------------------------------------
+
+fn random_forest(rng: &mut Rng, n_features: usize) -> Forest {
+    let n_trees = 1 + rng.below(20) as usize;
+    let trees: Vec<Tree> = (0..n_trees)
+        .map(|_| {
+            let depth = 1 + rng.below(6) as usize;
+            let internal = (1usize << depth) - 1;
+            Tree {
+                depth,
+                feat: (0..internal).map(|_| rng.below(n_features as u64) as u32).collect(),
+                thresh: (0..internal).map(|_| rng.range_f64(-4.0, 4.0) as f32).collect(),
+                leaf: (0..1usize << depth).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+            }
+        })
+        .collect();
+    Forest {
+        trees,
+        base: rng.range_f64(-1.0, 1.0) as f32,
+        lr: rng.range_f64(0.01, 0.3) as f32,
+        n_features,
+    }
+}
+
+/// Random input rows with adversarial structure: a share of features are
+/// copied verbatim from the forest's own thresholds (exact ties for the
+/// quantized path's fallback), signed zeros appear on both sides, and some
+/// rows carry NaN.
+fn random_rows(rng: &mut Rng, forest: &Forest, rows: usize, with_nan: bool) -> Vec<f32> {
+    let nf = forest.n_features;
+    let thresholds: Vec<f32> =
+        forest.trees.iter().flat_map(|t| t.thresh.iter().copied()).collect();
+    let mut xs = Vec::with_capacity(rows * nf);
+    for r in 0..rows {
+        for _ in 0..nf {
+            let v = match rng.below(8) {
+                // Exact tie with a random split of this forest.
+                0 | 1 => *rng.choose(&thresholds),
+                2 => 0.0,
+                3 => -0.0,
+                4 if with_nan && r % 7 == 3 => f32::NAN,
+                _ => rng.range_f64(-4.0, 4.0) as f32,
+            };
+            xs.push(v);
+        }
+    }
+    xs
+}
+
+#[test]
+fn flat_batch_is_bit_identical_to_scalar_walk() {
+    let mut scratch = FlatScratch::default();
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(0xd1ff_f04e_5700 + seed);
+        let nf = 1 + rng.below(8) as usize;
+        let forest = random_forest(&mut rng, nf);
+        let flat = FlatForest::from_forest(&forest);
+        let rows = 1 + rng.below(96) as usize;
+        let xs = random_rows(&mut rng, &forest, rows, true);
+
+        let mut quantized = Vec::new();
+        flat.predict_batch_with(&xs, nf, &mut scratch, &mut quantized);
+        let mut float_ref = Vec::new();
+        flat.predict_batch_float_into(&xs, &mut float_ref);
+
+        for r in 0..rows {
+            let row = &xs[r * nf..(r + 1) * nf];
+            let want = forest.predict(row);
+            assert_eq!(
+                quantized[r].to_bits(),
+                want.to_bits(),
+                "seed {seed} row {r}: quantized path diverged (row {row:?})"
+            );
+            assert_eq!(
+                float_ref[r].to_bits(),
+                want.to_bits(),
+                "seed {seed} row {r}: float-reference path diverged (row {row:?})"
+            );
+            assert_eq!(
+                flat.predict_row_float(row).to_bits(),
+                want.to_bits(),
+                "seed {seed} row {r}: scalar flat walk diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_tie_fallback_routes_exactly_like_float_compare() {
+    // Every feature equals a threshold somewhere: descent hits the
+    // key-equality fallback at (nearly) every node, and `x == t` must go
+    // right — exactly like `x >= t` in the scalar walk.
+    let tree = Tree {
+        depth: 2,
+        feat: vec![0, 1, 1],
+        thresh: vec![0.5, 0.25, 0.5],
+        leaf: vec![10.0, 20.0, 30.0, 40.0],
+    };
+    let forest = Forest { trees: vec![tree], base: 0.0, lr: 1.0, n_features: 2 };
+    let flat = FlatForest::from_forest(&forest);
+    let cases: Vec<([f32; 2], f32)> = vec![
+        ([0.5, 0.5], 40.0),   // tie at root (→R), tie at level 1 (→R)
+        ([0.5, 0.25], 30.0),  // tie →R, then 0.25 < 0.5 →L
+        ([0.25, 0.25], 20.0), // 0.25 < 0.5 →L, tie on 0.25 →R
+        ([-0.0, 0.0], 10.0),  // -0.0 < 0.25: both zeros route identically
+        ([0.0, -0.0], 10.0),
+    ];
+    let xs: Vec<f32> = cases.iter().flat_map(|(row, _)| row.iter().copied()).collect();
+    let mut out = Vec::new();
+    flat.predict_batch_into(&xs, &mut out);
+    for (i, (row, want)) in cases.iter().enumerate() {
+        assert_eq!(out[i], *want, "case {i} {row:?}");
+        assert_eq!(out[i].to_bits(), forest.predict(row).to_bits(), "case {i} vs scalar");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level differential (batch_eta on vs off)
+// ---------------------------------------------------------------------------
+
+fn small_space() -> SpaceConfig {
+    SpaceConfig {
+        tp_candidates: vec![1, 2],
+        max_pp: 4,
+        mbs_candidates: vec![1, 2],
+        vpp_candidates: vec![1],
+        seq_parallel_options: vec![true],
+        dist_opt_options: vec![true],
+        offload_options: vec![false],
+        recompute_none: true,
+        recompute_selective: false,
+        recompute_full: false,
+        ..SpaceConfig::default()
+    }
+}
+
+fn engine(use_forests: bool, batch_eta: bool, workers: usize) -> AstraEngine {
+    AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig {
+            use_forests,
+            batch_eta,
+            workers,
+            space: small_space(),
+            ..Default::default()
+        },
+    )
+}
+
+fn canon(report: &SearchReport) -> String {
+    astra::json::to_string(&report_json(report, &GpuCatalog::builtin()))
+}
+
+fn requests() -> Vec<(&'static str, SearchRequest)> {
+    let model = ModelRegistry::builtin().get("llama2-7b").unwrap().clone();
+    vec![
+        ("homogeneous", SearchRequest::homogeneous("a800", 16, model.clone()).unwrap()),
+        (
+            "heterogeneous",
+            SearchRequest::heterogeneous(&[("a800", 8), ("h100", 8)], 8, model.clone()).unwrap(),
+        ),
+        ("cost", SearchRequest::cost("a800", 16, 1e7, model.clone()).unwrap()),
+        (
+            "hetero-cost",
+            SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8)], f64::INFINITY, model.clone())
+                .unwrap(),
+        ),
+        (
+            "hetero-cost-budgeted",
+            SearchRequest::hetero_cost(&[("a800", 8), ("h100", 8), ("v100", 8)], 5e4, model)
+                .unwrap(),
+        ),
+    ]
+}
+
+/// The acceptance differential: with the Analytic provider, the batched
+/// executor path must reproduce the scalar walk's bytes on every mode at
+/// workers 1/2/4/8.
+#[test]
+fn batch_eta_reports_are_byte_identical_analytic() {
+    for (name, req) in requests() {
+        let scalar = engine(false, false, 1).search(&req).unwrap();
+        let want = canon(&scalar);
+        for workers in [1usize, 2, 4, 8] {
+            let batched = engine(false, true, workers).search(&req).unwrap();
+            assert_eq!(
+                canon(&batched),
+                want,
+                "mode {name}, workers {workers}: batch_eta diverged from scalar walk"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level differential with a real Forests provider
+// ---------------------------------------------------------------------------
+
+/// Serialize a forest into the `artifacts/forest.json` interchange format.
+/// `{:?}` on f32 prints the shortest decimal that round-trips, so parsing
+/// it back (f64 → f32 cast, as `Forest::from_json` does) is lossless.
+fn forest_json(f: &Forest) -> String {
+    let mut trees = Vec::new();
+    for t in &f.trees {
+        let feat: Vec<String> = t.feat.iter().map(|v| v.to_string()).collect();
+        let thresh: Vec<String> = t.thresh.iter().map(|v| format!("{v:?}")).collect();
+        let leaf: Vec<String> = t.leaf.iter().map(|v| format!("{v:?}")).collect();
+        trees.push(format!(
+            "{{\"depth\":{},\"feat\":[{}],\"thresh\":[{}],\"leaf\":[{}]}}",
+            t.depth,
+            feat.join(","),
+            thresh.join(","),
+            leaf.join(",")
+        ));
+    }
+    format!(
+        "{{\"n_features\":{},\"base\":{:?},\"lr\":{:?},\"trees\":[{}]}}",
+        f.n_features,
+        f.base,
+        f.lr,
+        trees.join(",")
+    )
+}
+
+/// Pin `$ASTRA_ARTIFACTS` (once per process) to a temp dir holding a
+/// synthetic `forest.json` whose predictions stay inside the η clamp band.
+fn install_synthetic_forest() {
+    static INSTALL: std::sync::Once = std::sync::Once::new();
+    INSTALL.call_once(|| {
+        let mut rng = Rng::new(0xa57a_f04e_57);
+        let mut eta_forest = |n_features: usize| {
+            let trees: Vec<Tree> = (0..16)
+                .map(|_| {
+                    let depth = 1 + rng.below(4) as usize;
+                    let internal = (1usize << depth) - 1;
+                    Tree {
+                        depth,
+                        feat: (0..internal)
+                            .map(|_| rng.below(n_features as u64) as u32)
+                            .collect(),
+                        thresh: (0..internal).map(|_| rng.range_f64(-2.0, 12.0) as f32).collect(),
+                        leaf: (0..1usize << depth)
+                            .map(|_| rng.range_f64(0.01, 0.06) as f32)
+                            .collect(),
+                    }
+                })
+                .collect();
+            Forest { trees, base: 0.1, lr: 1.0, n_features }
+        };
+        let comp = eta_forest(astra::hw::COMP_FEATURES);
+        let comm = eta_forest(astra::hw::COMM_FEATURES);
+        let dir = std::env::temp_dir().join(format!("astra_diff_forest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("create artifacts dir");
+        std::fs::write(
+            dir.join("forest.json"),
+            format!("{{\"comp\":{},\"comm\":{}}}", forest_json(&comp), forest_json(&comm)),
+        )
+        .expect("write forest.json");
+        std::env::set_var("ASTRA_ARTIFACTS", &dir);
+    });
+}
+
+/// Same differential through the *forest* η provider: the flat kernel is
+/// live on memo misses, and the reports must not move by a byte.
+#[test]
+fn batch_eta_reports_are_byte_identical_forests() {
+    install_synthetic_forest();
+    let scalar = engine(true, false, 1);
+    assert!(
+        matches!(scalar.core().cost_model().eta, EtaProvider::Forests(_)),
+        "synthetic forest.json failed to load — test would be vacuous"
+    );
+    for (name, req) in requests() {
+        let want = canon(&scalar.search(&req).unwrap());
+        for workers in [1usize, 2, 4, 8] {
+            let batched = engine(true, true, workers);
+            assert!(matches!(batched.core().cost_model().eta, EtaProvider::Forests(_)));
+            assert_eq!(
+                canon(&batched.search(&req).unwrap()),
+                want,
+                "mode {name}, workers {workers}: forest batch_eta diverged from scalar walk"
+            );
+        }
+    }
+}
+
+/// The loaded forest provider must also agree between the engine-level
+/// scalar walk and a direct `EtaForests` round trip — guards the
+/// `from_file` → flat-kernel plumbing end to end.
+#[test]
+fn installed_forest_round_trips_through_flat_kernel() {
+    install_synthetic_forest();
+    let path = astra::runtime::artifacts_dir().join("forest.json");
+    let ef = EtaForests::from_file(&path).expect("forest.json parses");
+    let mut rng = Rng::new(7);
+    let nf = astra::hw::COMP_FEATURES;
+    let xs: Vec<f32> = (0..64 * nf).map(|_| rng.range_f64(-2.0, 12.0) as f32).collect();
+    let mut scratch = FlatScratch::default();
+    let mut pred = Vec::new();
+    let mut etas = Vec::new();
+    ef.eta_comp_batch(&xs, nf, &mut scratch, &mut pred, &mut etas);
+    for (r, row) in xs.chunks_exact(nf).enumerate() {
+        assert_eq!(etas[r].to_bits(), ef.eta_comp(row).to_bits(), "row {r}");
+    }
+}

@@ -126,6 +126,33 @@ fn no_streaming_flag_is_the_serial_oracle() {
     }
 }
 
+/// The η batch kernel is pure mechanism: the batched parallel executor
+/// must reproduce the scalar-η serial oracle's bytes with *both* knobs
+/// crossed — batching on + workers 4 vs batching off + the 1/1 wave.
+/// (Kernel-level bit-identity lives in `rust/tests/diff_forest.rs`; this
+/// pins the executor integration.)
+#[test]
+fn batched_eta_matches_scalar_eta_oracle() {
+    let fast = engine_with(true, 4, 2); // batch_eta: true via Default
+    let scalar_oracle = AstraEngine::new(
+        GpuCatalog::builtin(),
+        EngineConfig {
+            use_forests: false,
+            workers: 1,
+            sweep_wave: 1,
+            sweep_wave_max: 1,
+            batch_eta: false,
+            space: small_space(),
+            ..Default::default()
+        },
+    );
+    for (name, req) in requests() {
+        let a = fast.search(&req).unwrap();
+        let b = scalar_oracle.search(&req).unwrap();
+        assert_eq!(canon(&a), canon(&b), "mode {name}: batched η diverged from scalar-η oracle");
+    }
+}
+
 /// Memo warmth must never leak into results: repeating every request on
 /// the *same* engine (memo fully warm the second time) reproduces the
 /// exact same report, and the warm pass is measurably warmer.
